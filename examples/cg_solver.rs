@@ -1,0 +1,128 @@
+//! Conjugate-gradient solver driven through the Auto-SpMV service —
+//! the paper's motivating workload (§7.5: "iterative solvers such as the
+//! Preconditioned Conjugate Gradient method" amortize the run-time
+//! optimization overhead).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example cg_solver
+//! ```
+//!
+//! Builds an SPD banded system A x = b, registers A with the serving
+//! loop (router picks the format; conversion is amortized over the CG
+//! iterations), and solves with every SpMV product dispatched through
+//! the service — over PJRT AOT kernels when artifacts are present.
+
+use auto_spmv::coordinator::overhead::OverheadModel;
+use auto_spmv::coordinator::service::{BackendSpec, Service};
+use auto_spmv::coordinator::RunTimeOptimizer;
+use auto_spmv::dataset::{build, BuildOptions};
+use auto_spmv::gen::Rng;
+use auto_spmv::gpusim::Objective;
+use auto_spmv::runtime::default_artifacts_dir;
+use auto_spmv::sparse::convert::{coo_to_csr, csr_to_coo, ConvertParams};
+use auto_spmv::sparse::{Coo, SpMv};
+
+/// SPD, diagonally dominant banded matrix (a 1-D Poisson-like stencil
+/// with random off-diagonals) sized to fit the 256-row artifact bucket.
+fn spd_system(n: usize, seed: u64) -> Coo {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(n, n);
+    let band = 3usize;
+    // symmetric off-diagonals
+    let mut offs: Vec<(usize, usize, f32)> = Vec::new();
+    for i in 0..n {
+        for d in 1..=band {
+            if i + d < n && rng.f64() < 0.7 {
+                offs.push((i, i + d, -(rng.f64() as f32) * 0.4));
+            }
+        }
+    }
+    let mut diag = vec![1.0f32; n];
+    for &(i, j, v) in &offs {
+        coo.push(i, j, v);
+        coo.push(j, i, v);
+        diag[i] += v.abs() + 0.1;
+        diag[j] += v.abs() + 0.1;
+    }
+    for (i, d) in diag.into_iter().enumerate() {
+        coo.push(i, i, d);
+    }
+    coo
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = 250;
+    let coo = spd_system(n, 42);
+    let csr = coo_to_csr(&coo);
+    println!("SPD system: n = {n}, nnz = {}", csr.vals.len());
+
+    // router trained on a few corpus matrices
+    let ds = build(&BuildOptions {
+        only: Some(vec!["rim".into(), "bcsstk32".into(), "parabolic_fem".into()]),
+        both_archs: false,
+        ..Default::default()
+    });
+    let router = RunTimeOptimizer::train(
+        &ds,
+        Objective::Latency,
+        OverheadModel::train_on_corpus(1, None),
+    );
+
+    let artifacts = default_artifacts_dir();
+    let backend = if artifacts.join("manifest.tsv").exists() {
+        println!("backend: PJRT AOT kernels ({artifacts:?})");
+        BackendSpec::Pjrt(artifacts)
+    } else {
+        println!("backend: native (run `make artifacts` for the PJRT path)");
+        BackendSpec::Native
+    };
+    let svc = Service::start(router, backend, ConvertParams { bell_bh: 8, bell_bw: 8, sell_h: 8 });
+
+    // many CG iterations expected -> the router may convert
+    let fmt = svc.register(0, csr_to_coo(&csr), 10_000)?;
+    println!("router picked format: {fmt}");
+
+    // --- conjugate gradient, every A*p through the service -------------
+    let b: Vec<f32> = (0..n).map(|i| ((i % 11) as f32 - 5.0) * 0.3).collect();
+    let mut x = vec![0.0f32; n];
+    let mut r = b.clone();
+    let mut p = r.clone();
+    let mut rs_old: f32 = r.iter().map(|v| v * v).sum();
+    let mut products = 0u32;
+    let t0 = std::time::Instant::now();
+    for it in 0..400 {
+        let ap = svc.product(0, p.clone())?.y;
+        products += 1;
+        let pap: f32 = p.iter().zip(&ap).map(|(a, b)| a * b).sum();
+        let alpha = rs_old / pap;
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        let rs_new: f32 = r.iter().map(|v| v * v).sum();
+        if rs_new.sqrt() < 1e-5 {
+            println!("converged after {} iterations", it + 1);
+            break;
+        }
+        let beta = rs_new / rs_old;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rs_old = rs_new;
+    }
+    let dt = t0.elapsed();
+
+    // verify against a native residual
+    let ax = csr.spmv_alloc(&x);
+    let resid: f32 = ax.iter().zip(&b).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+    println!(
+        "CG done: {products} SpMV products in {:.3}s ({:.2} ms/product), final residual {resid:.2e}",
+        dt.as_secs_f64(),
+        1e3 * dt.as_secs_f64() / products as f64
+    );
+    assert!(resid < 1e-3, "CG must converge");
+    let stats = svc.stats()?;
+    println!("service: {} requests, conversions {}", stats.requests, stats.conversions);
+    println!("cg_solver OK");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Quickstart: the whole Auto-SpMV pipeline on a handful of matrices.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! 1. generate corpus matrices (the SuiteSparse stand-in);
+//! 2. sweep them through the GPU simulator to build a training dataset;
+//! 3. train the compile-time and run-time optimizers;
+//! 4. ask both modes for a plan on an unseen matrix.
+
+use auto_spmv::coordinator::{CompileTimeOptimizer, OverheadModel, RunTimeOptimizer};
+use auto_spmv::dataset::{build, BuildOptions};
+use auto_spmv::features::extract_csr;
+use auto_spmv::gen;
+use auto_spmv::gpusim::Objective;
+use auto_spmv::report::{fmt_g, Table};
+
+fn main() -> anyhow::Result<()> {
+    // --- 2. dataset: 10 training matrices, both GPU profiles -----------
+    let train_names: Vec<String> = [
+        "rim", "bcsstk32", "cant", "parabolic_fem", "consph",
+        "wiki-talk-temporal", "amazon0601", "crankseg_1", "pwtk", "human_gene2",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    println!("building dataset over {} matrices...", train_names.len());
+    let ds = build(&BuildOptions { only: Some(train_names), ..Default::default() });
+    println!("dataset: {} records", ds.len());
+
+    // --- 3. train both optimizers for two objectives -------------------
+    let overhead = OverheadModel::train_on_corpus(1, Some("eu-2005"));
+    for obj in [Objective::Latency, Objective::EnergyEff] {
+        let compile = CompileTimeOptimizer::train(&ds, obj);
+        let runtime = RunTimeOptimizer::train(&ds, obj, OverheadModel::train_on_corpus(1, Some("eu-2005")));
+
+        // --- 4. plan for an UNSEEN matrix (eu-2005, web graph) ---------
+        let entry = gen::by_name("eu-2005").unwrap();
+        let coo = entry.generate(1);
+        let csr = auto_spmv::sparse::convert::coo_to_csr(&coo);
+        let f = extract_csr(&csr);
+        let choice = compile.predict(&f, "GTX1650m-Turing");
+        let decision = runtime.decide(&coo, 10_000);
+
+        let mut t = Table::new(
+            &format!("Auto-SpMV plan for unseen eu-2005 ({})", obj.name()),
+            &["knob", "choice"],
+        );
+        t.row(vec!["TB size".into(), choice.tb_size.to_string()]);
+        t.row(vec!["maxrregcount".into(), choice.maxrregcount.to_string()]);
+        t.row(vec!["memory config".into(), choice.mem.name().into()]);
+        t.row(vec!["sparse format".into(), decision.predicted_format.to_string()]);
+        t.row(vec!["convert?".into(), decision.convert.to_string()]);
+        t.row(vec!["est. overhead (s)".into(), fmt_g(decision.overhead.total())]);
+        println!("{}", t.render());
+    }
+    let _ = overhead;
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,112 @@
+"""AOT driver: lower every compile variant to HLO text + write the manifest.
+
+Interchange format is HLO **text**, never ``HloModuleProto.serialize()``:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+
+Outputs under ``--out-dir`` (default ../artifacts):
+  * ``<variant>.hlo.txt``      — one HLO module per variant (spmv graph),
+  * ``power_<variant>.hlo.txt``— power-iteration-step artifacts,
+  * ``manifest.tsv``           — one row per artifact; parsed by
+                                 ``rust/src/runtime/artifacts.rs``.
+
+Manifest columns (tab-separated):
+  name kind fmt rows cols width block_rows chunk_width x_placement extra path inputs
+where ``extra``  = semicolon-joined k=v (or '-'),
+      ``inputs`` = comma-joined dtype:shape specs, e.g. f32:256x16,i32:256x16,f32:256
+"""
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.common import Variant
+
+_DTYPE = {"float32": "f32", "int32": "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def input_spec(example) -> str:
+    parts = []
+    for s in example:
+        dt = _DTYPE[str(s.dtype)]
+        shape = "x".join(str(d) for d in s.shape)
+        parts.append(f"{dt}:{shape}")
+    return ",".join(parts)
+
+
+def extra_str(v: Variant) -> str:
+    return ";".join(f"{k}={val}" for k, val in v.extra) if v.extra else "-"
+
+
+def lower_one(build, v: Variant, out_dir: str, kind: str) -> str:
+    fn, example = build(v)
+    lowered = jax.jit(fn).lower(*example)
+    text = to_hlo_text(lowered)
+    prefix = "" if kind == "spmv" else f"{kind}_"
+    fname = f"{prefix}{v.name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    return fname
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--quick", action="store_true",
+                    help="compile only the minimal CI subset")
+    # legacy flag kept so `python -m compile.aot --out X` still works
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    rows = []
+    t0 = time.time()
+    variants = model.default_variants(quick=args.quick)
+    for i, v in enumerate(variants):
+        fname = lower_one(model.build_spmv, v, out_dir, "spmv")
+        _, example = model.build_spmv(v)
+        rows.append((v, "spmv", fname, input_spec(example)))
+        print(f"[{i + 1}/{len(variants)}] {fname}", file=sys.stderr)
+
+    for v in model.power_step_variants(quick=args.quick):
+        fname = lower_one(model.build_power_step, v, out_dir, "power")
+        _, example = model.build_power_step(v)
+        rows.append((v, "power", fname, input_spec(example)))
+        print(f"[power] {fname}", file=sys.stderr)
+
+    manifest = os.path.join(out_dir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("name\tkind\tfmt\trows\tcols\twidth\tblock_rows\tchunk_width"
+                "\tx_placement\textra\tpath\tinputs\n")
+        for v, kind, fname, spec in rows:
+            f.write(
+                f"{v.name}\t{kind}\t{v.fmt}\t{v.rows}\t{v.cols}\t{v.width}"
+                f"\t{v.block_rows}\t{v.chunk_width}\t{v.x_placement}"
+                f"\t{extra_str(v)}\t{fname}\t{spec}\n"
+            )
+    # sentinel consumed by the Makefile dependency rule
+    with open(os.path.join(out_dir, "model.hlo.txt"), "w") as f:
+        f.write(f"# auto-spmv artifact sentinel; {len(rows)} artifacts\n")
+    print(f"wrote {len(rows)} artifacts + manifest to {out_dir} "
+          f"in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

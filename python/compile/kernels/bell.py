@@ -1,0 +1,110 @@
+"""Blocked-ELL (BELL) SpMV as a Pallas kernel.
+
+GPU original: one thread block per block-row, dense ``bh x bw`` blocks
+multiplied in registers. TPU rethink: blocks are exactly what the MXU
+wants — each grid step stages a (block_rows, chunk_width) tile of *blocks*
+in VMEM and contracts them with the gathered x blocks via an einsum the
+compiler maps onto the systolic array (bf16-able dense contractions, not
+scalar per-thread MACs).
+
+Layout: data f32[nb, kb, bh, bw], bcols i32[nb, kb]; padding blocks have
+``bcols == 0`` and all-zero data.
+
+x placements: ``resident`` (x whole in VMEM) and ``gather`` (x blocks
+pre-gathered at L2: models cache-backed access).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import Variant
+
+
+def _kernel_resident(d_ref, c_ref, x_ref, o_ref, *, bw):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    d = d_ref[...]        # (br, ck, bh, bw)
+    c = c_ref[...]        # (br, ck)
+    x = x_ref[...]        # (m,)
+    idx = c[..., None] * bw + jnp.arange(bw)[None, None, :]
+    xg = x[idx]           # (br, ck, bw)
+    y = jnp.einsum("rkij,rkj->ri", d, xg)  # (br, bh)
+    o_ref[...] += y.reshape(o_ref.shape)
+
+
+def _kernel_gather(d_ref, xg_ref, o_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    y = jnp.einsum("rkij,rkj->ri", d_ref[...], xg_ref[...])
+    o_ref[...] += y.reshape(o_ref.shape)
+
+
+def build(v: Variant):
+    """Return (fn, example_args) for this BELL variant.
+
+    Shapes: rows = nb*bh, width = kb (block-columns per block-row).
+    extra: bh (block height), bw (block width).
+    fn(data f32[nb,kb,bh,bw], bcols i32[nb,kb], x f32[cols]) -> (y f32[rows],)
+    """
+    bh = v.extra_map.get("bh", 8)
+    bw = v.extra_map.get("bw", 8)
+    n, m, kb = v.rows, v.cols, v.width
+    assert n % bh == 0 and m % bw == 0
+    nb = n // bh
+    br, ck = v.block_rows, v.chunk_width  # block-rows and block-cols per step
+    assert nb % br == 0 and kb % ck == 0, (v.name, "grid must divide shapes")
+
+    d_spec = pl.BlockSpec((br, ck, bh, bw), lambda i, k: (i, k, 0, 0))
+    o_spec = pl.BlockSpec((br * bh,), lambda i, k: (i,))
+    grid = (nb // br, kb // ck)
+
+    if v.x_placement == "resident":
+        c_spec = pl.BlockSpec((br, ck), lambda i, k: (i, k))
+        x_spec = pl.BlockSpec((m,), lambda i, k: (0,))
+        import functools
+
+        call = pl.pallas_call(
+            functools.partial(_kernel_resident, bw=bw),
+            grid=grid,
+            in_specs=[d_spec, c_spec, x_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+            interpret=True,
+        )
+
+        def fn(data, bcols, x):
+            return (call(data, bcols, x),)
+
+    elif v.x_placement == "gather":
+        xg_spec = pl.BlockSpec((br, ck, bw), lambda i, k: (i, k, 0))
+        call = pl.pallas_call(
+            _kernel_gather,
+            grid=grid,
+            in_specs=[d_spec, xg_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+            interpret=True,
+        )
+
+        def fn(data, bcols, x):
+            idx = bcols[..., None] * bw + jnp.arange(bw)[None, None, :]
+            return (call(data, x[idx]),)
+
+    else:
+        raise ValueError(f"BELL does not support x_placement={v.x_placement}")
+
+    example = (
+        jax.ShapeDtypeStruct((nb, kb, bh, bw), jnp.float32),
+        jax.ShapeDtypeStruct((nb, kb), jnp.int32),
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+    )
+    return fn, example

@@ -1,0 +1,70 @@
+"""Shared definitions for the Auto-SpMV Pallas kernels.
+
+A *variant* is one compile-time configuration of one sparse-format kernel.
+It is the TPU analogue of the paper's CUDA compile parameters (see
+DESIGN.md §Hardware-Adaptation):
+
+  * ``block_rows``  — rows (or block-rows / slices) per grid step
+                      (analogue of thread-block size),
+  * ``chunk_width`` — per-step working-set width in VMEM
+                      (analogue of ``maxrregcount``: wide = fewer passes
+                      but larger on-chip footprint),
+  * ``x_placement`` — how the dense vector is staged
+                      (analogue of the L1/shared carve-out):
+                      ``resident`` = whole x in VMEM each step,
+                      ``gather``   = x gathered outside the kernel (models
+                      relying on the cache hierarchy),
+                      ``streamed`` = x consumed in masked segments
+                      (ELL only; models a small-L1 configuration).
+
+Every variant lowers to its own HLO artifact; the Rust router picks among
+the compiled executables at run time.
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+FORMATS = ("csr", "ell", "bell", "sell")
+X_PLACEMENTS = ("resident", "gather", "streamed")
+
+
+@dataclass(frozen=True)
+class Variant:
+    """One compile-time configuration of one SpMV kernel."""
+
+    fmt: str                 # csr | ell | bell | sell
+    rows: int                # padded row count of the shape bucket
+    cols: int                # padded column count (x length)
+    width: int               # ELL/SELL width, BELL block-columns, CSR nnz_pad
+    block_rows: int          # rows (ELL/CSR), block-rows (BELL), slices (SELL) per grid step
+    chunk_width: int         # VMEM working-set width per grid step
+    x_placement: str         # resident | gather | streamed
+    extra: Tuple[Tuple[str, int], ...] = field(default=())  # format-specific
+
+    def __post_init__(self):
+        if self.fmt not in FORMATS:
+            raise ValueError(f"unknown format {self.fmt!r}")
+        if self.x_placement not in X_PLACEMENTS:
+            raise ValueError(f"unknown x placement {self.x_placement!r}")
+
+    @property
+    def name(self) -> str:
+        ex = "".join(f"_{k}{v}" for k, v in self.extra)
+        return (
+            f"{self.fmt}_r{self.rows}_c{self.cols}_w{self.width}"
+            f"_b{self.block_rows}_k{self.chunk_width}_{self.x_placement}{ex}"
+        )
+
+    @property
+    def extra_map(self) -> Dict[str, int]:
+        return dict(self.extra)
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def f32(shape) -> "jnp.ndarray":
+    return jnp.zeros(shape, jnp.float32)

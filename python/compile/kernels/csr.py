@@ -1,0 +1,111 @@
+"""CSR SpMV as a Pallas kernel.
+
+GPU original (paper §2.3): CSR-vector — one warp per row walking
+``row_ptr[i]..row_ptr[i+1]`` with an intra-warp reduction; load-imbalanced
+when row lengths vary. TPU rethink: dynamic per-row extents don't map to
+static BlockSpecs, so the host pre-expands CSR to COO triplets
+(``rust/src/sparse/csr.rs::to_kernel_coo``) and the kernel walks fixed-size
+nnz chunks along a single grid axis, scatter-accumulating each chunk's
+products into the full output vector kept resident in VMEM. The warp-level
+segmented reduction of the GPU becomes a chunk-level ``.at[].add`` segment
+sum — same algorithm, expressed for a vector unit instead of 32-lane warps.
+
+Layout: vals f32[nnz_pad], rows i32[nnz_pad], cols i32[nnz_pad]; padding
+entries are (0.0, row 0, col 0).
+
+x placements: ``resident`` (x whole in VMEM) and ``gather``
+(x pre-gathered per nnz entry at L2 — models cache-served random reads).
+
+Knobs: ``chunk_width`` = nnz per grid step; ``block_rows`` is accepted for
+interface parity but the output is one revisited block (the scatter needs
+the whole y in scope).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import Variant
+
+
+def _kernel_resident(v_ref, r_ref, c_ref, x_ref, o_ref, *, n):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    vals = v_ref[...]
+    rows = r_ref[...]
+    cols = c_ref[...]
+    x = x_ref[...]
+    contrib = jnp.zeros((n,), vals.dtype).at[rows].add(vals * x[cols])
+    o_ref[...] += contrib
+
+
+def _kernel_gather(v_ref, r_ref, xg_ref, o_ref, *, n):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    vals = v_ref[...]
+    rows = r_ref[...]
+    contrib = jnp.zeros((n,), vals.dtype).at[rows].add(vals * xg_ref[...])
+    o_ref[...] += contrib
+
+
+def build(v: Variant):
+    """Return (fn, example_args) for this CSR variant.
+
+    Shapes: width = nnz_pad (padded triplet count).
+    fn(vals f32[nnz], rows i32[nnz], cols i32[nnz], x f32[cols]) -> (y f32[rows],)
+    """
+    import functools
+
+    n, m, nnz = v.rows, v.cols, v.width
+    cw = v.chunk_width
+    assert nnz % cw == 0, (v.name, "chunk must divide nnz_pad")
+    grid = (nnz // cw,)
+
+    tri_spec = pl.BlockSpec((cw,), lambda k: (k,))
+    o_spec = pl.BlockSpec((n,), lambda k: (0,))
+
+    if v.x_placement == "resident":
+        x_spec = pl.BlockSpec((m,), lambda k: (0,))
+        call = pl.pallas_call(
+            functools.partial(_kernel_resident, n=n),
+            grid=grid,
+            in_specs=[tri_spec, tri_spec, tri_spec, x_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+            interpret=True,
+        )
+
+        def fn(vals, rows, cols, x):
+            return (call(vals, rows, cols, x),)
+
+    elif v.x_placement == "gather":
+        call = pl.pallas_call(
+            functools.partial(_kernel_gather, n=n),
+            grid=grid,
+            in_specs=[tri_spec, tri_spec, tri_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+            interpret=True,
+        )
+
+        def fn(vals, rows, cols, x):
+            return (call(vals, rows, x[cols]),)
+
+    else:
+        raise ValueError(f"CSR does not support x_placement={v.x_placement}")
+
+    example = (
+        jax.ShapeDtypeStruct((nnz,), jnp.float32),
+        jax.ShapeDtypeStruct((nnz,), jnp.int32),
+        jax.ShapeDtypeStruct((nnz,), jnp.int32),
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+    )
+    return fn, example

@@ -1,0 +1,141 @@
+"""ELL SpMV as a Pallas kernel.
+
+GPU original (paper §2.3): one thread per row, column-major ELL arrays for
+coalescing. TPU rethink (DESIGN.md §Hardware-Adaptation): a grid of
+(row-tiles x width-chunks); each step stages a (block_rows, chunk_width)
+tile of ``data``/``cols`` in VMEM and accumulates partial row sums into a
+revisited output block — the HBM<->VMEM schedule that CUDA expressed with
+thread blocks is expressed here with BlockSpecs.
+
+x placements:
+  * ``resident``  — x lives whole in VMEM every step (big "shared memory").
+  * ``gather``    — x is gathered outside the kernel at L2 level; the
+                    kernel consumes a dense pre-gathered tile (models
+                    leaning on the cache hierarchy).
+  * ``streamed``  — x is consumed in ``x_seg``-sized segments along a third
+                    grid axis with masking (models a small-L1 carve-out).
+
+All variants are numerically identical to ``ref.ell_spmv``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import Variant
+
+
+def _kernel_resident(d_ref, c_ref, x_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    d = d_ref[...]
+    c = c_ref[...]
+    o_ref[...] += jnp.sum(d * x[c], axis=1)
+
+
+def _kernel_gather(d_ref, xg_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(d_ref[...] * xg_ref[...], axis=1)
+
+
+def _kernel_streamed(d_ref, c_ref, xs_ref, o_ref, *, x_seg):
+    j = pl.program_id(1)
+    s = pl.program_id(2)
+
+    @pl.when(jnp.logical_and(j == 0, s == 0))
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    d = d_ref[...]
+    c = c_ref[...]
+    xs = xs_ref[...]  # (x_seg,) segment s of x
+    base = s * x_seg
+    local = c - base
+    in_seg = (local >= 0) & (local < x_seg)
+    xv = jnp.where(in_seg, xs[jnp.clip(local, 0, x_seg - 1)], 0.0)
+    o_ref[...] += jnp.sum(d * xv, axis=1)
+
+
+def build(v: Variant):
+    """Return (fn, example_args) for this ELL variant.
+
+    fn(data f32[rows, width], cols i32[rows, width], x f32[cols]) -> (y f32[rows],)
+    """
+    n, m, w = v.rows, v.cols, v.width
+    br, cw = v.block_rows, v.chunk_width
+    assert n % br == 0 and w % cw == 0, (v.name, "grid must divide shapes")
+    grid_w = w // cw
+
+    d_spec = pl.BlockSpec((br, cw), lambda i, j: (i, j))
+    c_spec = pl.BlockSpec((br, cw), lambda i, j: (i, j))
+    o_spec = pl.BlockSpec((br,), lambda i, j: (i,))
+
+    if v.x_placement == "resident":
+        x_spec = pl.BlockSpec((m,), lambda i, j: (0,))
+        call = pl.pallas_call(
+            _kernel_resident,
+            grid=(n // br, grid_w),
+            in_specs=[d_spec, c_spec, x_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+            interpret=True,
+        )
+
+        def fn(data, cols, x):
+            return (call(data, cols, x),)
+
+    elif v.x_placement == "gather":
+        xg_spec = pl.BlockSpec((br, cw), lambda i, j: (i, j))
+        call = pl.pallas_call(
+            _kernel_gather,
+            grid=(n // br, grid_w),
+            in_specs=[d_spec, xg_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+            interpret=True,
+        )
+
+        def fn(data, cols, x):
+            # L2-level gather: models relying on the cache for x accesses.
+            return (call(data, x[cols]),)
+
+    elif v.x_placement == "streamed":
+        x_seg = v.extra_map.get("xseg", max(m // 4, 1))
+        assert m % x_seg == 0, (v.name, "x_seg must divide cols")
+        d_spec3 = pl.BlockSpec((br, cw), lambda i, j, s: (i, j))
+        c_spec3 = pl.BlockSpec((br, cw), lambda i, j, s: (i, j))
+        xs_spec = pl.BlockSpec((x_seg,), lambda i, j, s: (s,))
+        o_spec3 = pl.BlockSpec((br,), lambda i, j, s: (i,))
+        call = pl.pallas_call(
+            functools.partial(_kernel_streamed, x_seg=x_seg),
+            grid=(n // br, grid_w, m // x_seg),
+            in_specs=[d_spec3, c_spec3, xs_spec],
+            out_specs=o_spec3,
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+            interpret=True,
+        )
+
+        def fn(data, cols, x):
+            return (call(data, cols, x),)
+
+    else:  # pragma: no cover
+        raise ValueError(v.x_placement)
+
+    example = (
+        jax.ShapeDtypeStruct((n, w), jnp.float32),
+        jax.ShapeDtypeStruct((n, w), jnp.int32),
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+    )
+    return fn, example

@@ -1,0 +1,51 @@
+"""Pure-jnp correctness oracles for every sparse format.
+
+These are deliberately naive: one expression per format, no tiling, no
+Pallas. Every Pallas kernel in this package is tested (pytest + hypothesis)
+against the matching oracle, and the oracles themselves are tested against
+a dense matmul in ``python/tests/test_ref.py``.
+
+Conventions shared with the Rust substrate (``rust/src/sparse``):
+  * padding entries carry ``value == 0`` and a *valid* index (0), so they
+    contribute nothing to the product;
+  * CSR is pre-expanded to COO triplets on the host (the kernel-side
+    representation); padding entries point at row 0 with value 0;
+  * BELL stores dense ``bh x bw`` blocks; ``bcols`` are block-column ids;
+  * SELL stores slices of height ``h`` padded to a per-bucket width.
+"""
+
+import jax.numpy as jnp
+
+
+def dense_spmv(a, x):
+    """y = A @ x for a dense matrix — the oracle's oracle."""
+    return a @ x
+
+
+def coo_spmv(vals, rows, cols, x, n):
+    """CSR/COO oracle: scatter-add of vals * x[cols] into rows."""
+    return jnp.zeros((n,), x.dtype).at[rows].add(vals * x[cols])
+
+
+def ell_spmv(data, cols, x):
+    """ELL oracle: data (n, w), cols (n, w) -> y (n,)."""
+    return jnp.sum(data * x[cols], axis=1)
+
+
+def bell_spmv(data, bcols, x):
+    """BELL oracle: data (nb, kb, bh, bw), bcols (nb, kb) -> y (nb*bh,).
+
+    y[ib*bh:(ib+1)*bh] = sum_k data[ib, k] @ x[bcols[ib, k]*bw : +bw]
+    """
+    nb, kb, bh, bw = data.shape
+    idx = bcols[..., None] * bw + jnp.arange(bw)[None, None, :]
+    xg = x[idx]  # (nb, kb, bw)
+    y = jnp.einsum("rkij,rkj->ri", data, xg)
+    return y.reshape(nb * bh)
+
+
+def sell_spmv(data, cols, x):
+    """SELL oracle: data (ns, h, w), cols (ns, h, w) -> y (ns*h,)."""
+    ns, h, w = data.shape
+    y = jnp.sum(data * x[cols], axis=2)
+    return y.reshape(ns * h)

@@ -1,0 +1,103 @@
+"""Sliced-ELL (SELL) SpMV as a Pallas kernel.
+
+GPU original: slices of ``h`` rows, each padded only to its own max row
+length, one warp per slice. TPU rethink: the grid walks (slice-tiles x
+width-chunks); each step stages a (block_rows slices, h, chunk_width) tile
+in VMEM. Because AOT artifacts need static shapes, slices are padded to the
+bucket width ``w`` — the *storage* advantage of SELL is modelled on the
+Rust side (``rust/src/sparse/sell.rs`` keeps ragged slices; padding happens
+only when marshalling into the bucket), while the *compute* schedule here
+preserves the slice-local access pattern.
+
+Layout: data f32[ns, h, w], cols i32[ns, h, w]; padding entries are
+(0, col 0).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import Variant
+
+
+def _kernel_resident(d_ref, c_ref, x_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    d = d_ref[...]  # (bs, h, cw)
+    c = c_ref[...]
+    x = x_ref[...]
+    y = jnp.sum(d * x[c], axis=2)  # (bs, h)
+    o_ref[...] += y.reshape(o_ref.shape)
+
+
+def _kernel_gather(d_ref, xg_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    y = jnp.sum(d_ref[...] * xg_ref[...], axis=2)
+    o_ref[...] += y.reshape(o_ref.shape)
+
+
+def build(v: Variant):
+    """Return (fn, example_args) for this SELL variant.
+
+    Shapes: rows = ns*h, width = w. extra: h (slice height).
+    block_rows counts *slices* per grid step.
+    fn(data f32[ns,h,w], cols i32[ns,h,w], x f32[cols]) -> (y f32[rows],)
+    """
+    h = v.extra_map.get("h", 8)
+    n, m, w = v.rows, v.cols, v.width
+    assert n % h == 0
+    ns = n // h
+    bs, cw = v.block_rows, v.chunk_width
+    assert ns % bs == 0 and w % cw == 0, (v.name, "grid must divide shapes")
+    grid = (ns // bs, w // cw)
+
+    d_spec = pl.BlockSpec((bs, h, cw), lambda i, j: (i, 0, j))
+    o_spec = pl.BlockSpec((bs * h,), lambda i, j: (i,))
+
+    if v.x_placement == "resident":
+        c_spec = pl.BlockSpec((bs, h, cw), lambda i, j: (i, 0, j))
+        x_spec = pl.BlockSpec((m,), lambda i, j: (0,))
+        call = pl.pallas_call(
+            _kernel_resident,
+            grid=grid,
+            in_specs=[d_spec, c_spec, x_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+            interpret=True,
+        )
+
+        def fn(data, cols, x):
+            return (call(data, cols, x),)
+
+    elif v.x_placement == "gather":
+        xg_spec = pl.BlockSpec((bs, h, cw), lambda i, j: (i, 0, j))
+        call = pl.pallas_call(
+            _kernel_gather,
+            grid=grid,
+            in_specs=[d_spec, xg_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+            interpret=True,
+        )
+
+        def fn(data, cols, x):
+            return (call(data, x[cols]),)
+
+    else:
+        raise ValueError(f"SELL does not support x_placement={v.x_placement}")
+
+    example = (
+        jax.ShapeDtypeStruct((ns, h, w), jnp.float32),
+        jax.ShapeDtypeStruct((ns, h, w), jnp.int32),
+        jax.ShapeDtypeStruct((m,), jnp.float32),
+    )
+    return fn, example

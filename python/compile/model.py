@@ -1,0 +1,106 @@
+"""Layer-2 JAX compute graphs for Auto-SpMV.
+
+Builds, per compile variant, the jittable function the Rust runtime will
+execute — the SpMV product itself, plus composed graphs (a power-iteration
+step) showing kernels embedding in a larger L2 computation. Everything here
+runs ONCE, at build time, inside ``aot.py``; Python never appears on the
+request path.
+
+The *default variant set* defined here is the artifact inventory: the TPU
+analogue of the paper's compile-parameter sweep (DESIGN.md §2 and §5). The
+Rust dataset builder sweeps the same knob names through the GPU simulator;
+the run-time router maps its predictions onto these artifact names.
+"""
+
+from typing import Callable, List, Tuple
+
+import jax.numpy as jnp
+
+from .kernels import bell, csr, ell, sell
+from .kernels.common import Variant
+
+_BUILDERS = {"ell": ell.build, "bell": bell.build, "sell": sell.build, "csr": csr.build}
+
+
+def build_spmv(v: Variant) -> Tuple[Callable, tuple]:
+    """(fn, example_args) computing y = A @ x for the variant's format."""
+    return _BUILDERS[v.fmt](v)
+
+
+def build_power_step(v: Variant) -> Tuple[Callable, tuple]:
+    """One normalized power-iteration step: x' = A x / ||A x||_2.
+
+    Demonstrates an L1 kernel composed into a larger L2 graph (the paper's
+    motivating iterative-solver use case, §7.5): the SpMV product, the
+    norm, and the scale all fuse into a single HLO module.
+    """
+    spmv, example = build_spmv(v)
+
+    def fn(*args):
+        (y,) = spmv(*args)
+        nrm = jnp.sqrt(jnp.sum(y * y) + 1e-30)
+        return (y / nrm,)
+
+    return fn, example
+
+
+# ---------------------------------------------------------------------------
+# Default artifact inventory
+# ---------------------------------------------------------------------------
+
+def default_variants(quick: bool = False) -> List[Variant]:
+    """The artifact set ``make artifacts`` compiles.
+
+    ``quick`` builds the minimal subset used by fast CI / integration tests.
+    """
+    vs: List[Variant] = []
+
+    def add(*a, **kw):
+        vs.append(Variant(*a, **kw))
+
+    # --- ELL: the richest knob space (all three x placements) -------------
+    ell_buckets = [(256, 256, 16)] if quick else [(256, 256, 16), (1024, 1024, 16)]
+    for (r, c, w) in ell_buckets:
+        brs = [64] if quick else [64, 256]
+        cws = [8] if quick else [8, 16]
+        places = ["resident"] if quick else ["resident", "gather", "streamed"]
+        for br in brs:
+            for cw in cws:
+                for p in places:
+                    extra = (("xseg", c // 4),) if p == "streamed" else ()
+                    add("ell", r, c, w, br, cw, p, extra=extra)
+
+    # --- SELL: slice heights 8 and 32 --------------------------------------
+    if not quick:
+        for h in (8, 32):
+            for cw in (8, 16):
+                for p in ("resident", "gather"):
+                    add("sell", 1024, 1024, 16, 8, cw, p, extra=(("h", h),))
+    else:
+        add("sell", 256, 256, 16, 8, 8, "resident", extra=(("h", 8),))
+
+    # --- BELL: 8x8 MXU-aligned blocks --------------------------------------
+    if not quick:
+        for br in (4, 16):
+            for p in ("resident", "gather"):
+                add("bell", 1024, 1024, 16, br, 4, p, extra=(("bh", 8), ("bw", 8)))
+    else:
+        add("bell", 256, 256, 8, 4, 4, "resident", extra=(("bh", 8), ("bw", 8)))
+
+    # --- CSR: nnz-chunked scatter kernel ------------------------------------
+    if not quick:
+        for nnz in (8192,):
+            for cw in (1024, 2048):
+                for p in ("resident", "gather"):
+                    add("csr", 1024, 1024, nnz, 0, cw, p)
+        add("csr", 256, 256, 2048, 0, 512, "resident")
+    else:
+        add("csr", 256, 256, 2048, 0, 512, "resident")
+
+    return vs
+
+
+def power_step_variants(quick: bool = False) -> List[Variant]:
+    """Variants additionally compiled as power-iteration-step artifacts."""
+    del quick
+    return [Variant("ell", 256, 256, 16, 64, 8, "resident")]

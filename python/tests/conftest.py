@@ -1,0 +1,56 @@
+"""Shared test fixtures: random sparse operands per format.
+
+All generators zero out a random subset of entries and reset their indices
+to 0 — the padding convention shared with the Rust substrate — so every
+test also exercises padding correctness.
+"""
+
+import numpy as np
+import pytest
+
+
+def make_ell(rng, n, m, w, pad_frac=0.3):
+    data = rng.standard_normal((n, w)).astype(np.float32)
+    cols = rng.integers(0, m, (n, w)).astype(np.int32)
+    mask = rng.random((n, w)) < pad_frac
+    data[mask] = 0.0
+    cols[mask] = 0
+    return data, cols
+
+
+def make_bell(rng, nb, kb, bh, bw, m, pad_frac=0.3):
+    data = rng.standard_normal((nb, kb, bh, bw)).astype(np.float32)
+    bcols = rng.integers(0, m // bw, (nb, kb)).astype(np.int32)
+    mask = rng.random((nb, kb)) < pad_frac
+    data[mask] = 0.0
+    bcols[mask] = 0
+    return data, bcols
+
+
+def make_sell(rng, ns, h, w, m, pad_frac=0.4):
+    data = rng.standard_normal((ns, h, w)).astype(np.float32)
+    cols = rng.integers(0, m, (ns, h, w)).astype(np.int32)
+    mask = rng.random((ns, h, w)) < pad_frac
+    data[mask] = 0.0
+    cols[mask] = 0
+    return data, cols
+
+
+def make_coo(rng, n, m, nnz, pad_frac=0.2):
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    rows = np.sort(rng.integers(0, n, nnz)).astype(np.int32)
+    cols = rng.integers(0, m, nnz).astype(np.int32)
+    mask = rng.random(nnz) < pad_frac
+    vals[mask] = 0.0
+    rows[mask] = 0
+    cols[mask] = 0
+    return vals, rows, cols
+
+
+def make_x(rng, m):
+    return rng.standard_normal(m).astype(np.float32)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xA5BD)

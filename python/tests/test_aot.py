@@ -1,0 +1,61 @@
+"""AOT pipeline tests: HLO text generation + manifest schema.
+
+These validate the L2->L3 interchange contract the Rust runtime depends on
+(HLO text parseable by xla_extension 0.5.1; manifest columns).
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+
+from compile import aot, model
+from compile.kernels.common import Variant
+
+
+def test_to_hlo_text_smoke():
+    v = Variant("ell", 64, 64, 8, 16, 4, "resident")
+    fn, example = model.build_spmv(v)
+    text = aot.to_hlo_text(jax.jit(fn).lower(*example))
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # must be plain text, not a serialized proto
+    assert text.isprintable() or "\n" in text
+
+
+def test_input_spec_format():
+    v = Variant("ell", 64, 64, 8, 16, 4, "resident")
+    _, example = model.build_spmv(v)
+    spec = aot.input_spec(example)
+    assert spec == "f32:64x8,i32:64x8,f32:64"
+
+
+def test_extra_str():
+    v = Variant("bell", 64, 64, 4, 4, 2, "resident", extra=(("bh", 8), ("bw", 8)))
+    assert aot.extra_str(v) == "bh=8;bw=8"
+    v2 = Variant("ell", 64, 64, 8, 16, 4, "resident")
+    assert aot.extra_str(v2) == "-"
+
+
+def test_quick_aot_end_to_end(tmp_path):
+    """Run the real module entry point with --quick into a temp dir."""
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--quick", "--out-dir", str(out)],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True, text=True, env=env, timeout=300,
+    )
+    assert r.returncode == 0, r.stderr
+    manifest = (out / "manifest.tsv").read_text().strip().splitlines()
+    header = manifest[0].split("\t")
+    assert header == ["name", "kind", "fmt", "rows", "cols", "width",
+                      "block_rows", "chunk_width", "x_placement", "extra",
+                      "path", "inputs"]
+    rows = [l.split("\t") for l in manifest[1:]]
+    assert len(rows) >= 5
+    for r_ in rows:
+        assert len(r_) == len(header)
+        assert (out / r_[10]).exists()
+        assert "HloModule" in (out / r_[10]).read_text()[:200]

@@ -1,0 +1,212 @@
+"""Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Fixed-seed smoke tests for every (format, x_placement) pair, plus
+hypothesis sweeps over shapes/grids/padding density (Deliverable (c):
+hypothesis sweeps the Pallas kernels' shapes and asserts allclose vs ref).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bell, csr, ell, ref, sell
+from compile.kernels.common import Variant
+from .conftest import make_bell, make_coo, make_ell, make_sell, make_x
+
+SET = settings(max_examples=15, deadline=None)
+
+
+def run_ell(v, data, cols, x):
+    fn, _ = ell.build(v)
+    return np.asarray(jax.jit(fn)(data, cols, x)[0])
+
+
+# ---------------------------------------------------------------- ELL ----
+
+@pytest.mark.parametrize("place", ["resident", "gather", "streamed"])
+def test_ell_placements(rng, place):
+    n, m, w = 64, 64, 8
+    data, cols = make_ell(rng, n, m, w)
+    x = make_x(rng, m)
+    want = np.asarray(ref.ell_spmv(jnp.array(data), jnp.array(cols), jnp.array(x)))
+    extra = (("xseg", m // 4),) if place == "streamed" else ()
+    v = Variant("ell", n, m, w, 16, 4, place, extra=extra)
+    got = run_ell(v, data, cols, x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@SET
+@given(
+    lg_n=st.integers(4, 7),          # n in 16..128
+    w_mul=st.integers(1, 4),         # w = 4*w_mul
+    br_div=st.sampled_from([1, 2, 4]),
+    cw_div=st.sampled_from([1, 2]),
+    pad=st.floats(0.0, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ell_hypothesis(lg_n, w_mul, br_div, cw_div, pad, seed):
+    n = 2 ** lg_n
+    m = n
+    w = 4 * w_mul
+    br = max(n // br_div // 4, 1)
+    # ensure divisibility
+    while n % br:
+        br -= 1
+    cw = w // cw_div if w % cw_div == 0 else w
+    rng = np.random.default_rng(seed)
+    data, cols = make_ell(rng, n, m, w, pad_frac=pad)
+    x = make_x(rng, m)
+    want = np.asarray(ref.ell_spmv(jnp.array(data), jnp.array(cols), jnp.array(x)))
+    v = Variant("ell", n, m, w, br, cw, "resident")
+    got = run_ell(v, data, cols, x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_ell_all_padding(rng):
+    """A fully padded (empty) matrix must produce exactly zero."""
+    n = m = 32
+    w = 4
+    data = np.zeros((n, w), np.float32)
+    cols = np.zeros((n, w), np.int32)
+    x = make_x(rng, m)
+    v = Variant("ell", n, m, w, 8, 4, "resident")
+    got = run_ell(v, data, cols, x)
+    np.testing.assert_array_equal(got, np.zeros(n, np.float32))
+
+
+def test_ell_grid_indivisible_rejected():
+    with pytest.raises(AssertionError):
+        ell.build(Variant("ell", 100, 100, 8, 33, 4, "resident"))
+
+
+# --------------------------------------------------------------- BELL ----
+
+@pytest.mark.parametrize("place", ["resident", "gather"])
+def test_bell_placements(rng, place):
+    nb, kb, bh, bw, m = 8, 4, 8, 8, 64
+    data, bcols = make_bell(rng, nb, kb, bh, bw, m)
+    x = make_x(rng, m)
+    want = np.asarray(ref.bell_spmv(jnp.array(data), jnp.array(bcols), jnp.array(x)))
+    v = Variant("bell", nb * bh, m, kb, 4, 2, place, extra=(("bh", bh), ("bw", bw)))
+    fn, _ = bell.build(v)
+    got = np.asarray(jax.jit(fn)(data, bcols, x)[0])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@SET
+@given(
+    nb=st.sampled_from([4, 8, 16]),
+    kb=st.sampled_from([2, 4]),
+    blk=st.sampled_from([(4, 4), (8, 8)]),
+    pad=st.floats(0.0, 0.8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bell_hypothesis(nb, kb, blk, pad, seed):
+    bh, bw = blk
+    m = max(nb * bh, kb * bw * 2)
+    m = ((m + bw - 1) // bw) * bw
+    rng = np.random.default_rng(seed)
+    data, bcols = make_bell(rng, nb, kb, bh, bw, m, pad_frac=pad)
+    x = make_x(rng, m)
+    want = np.asarray(ref.bell_spmv(jnp.array(data), jnp.array(bcols), jnp.array(x)))
+    v = Variant("bell", nb * bh, m, kb, nb // 2 or 1, kb // 2 or 1, "resident",
+                extra=(("bh", bh), ("bw", bw)))
+    fn, _ = bell.build(v)
+    got = np.asarray(jax.jit(fn)(data, bcols, x)[0])
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_bell_unsupported_placement():
+    with pytest.raises(ValueError):
+        bell.build(Variant("bell", 64, 64, 4, 4, 2, "streamed",
+                           extra=(("bh", 8), ("bw", 8))))
+
+
+# --------------------------------------------------------------- SELL ----
+
+@pytest.mark.parametrize("place", ["resident", "gather"])
+def test_sell_placements(rng, place):
+    ns, h, w, m = 8, 8, 8, 64
+    data, cols = make_sell(rng, ns, h, w, m)
+    x = make_x(rng, m)
+    want = np.asarray(ref.sell_spmv(jnp.array(data), jnp.array(cols), jnp.array(x)))
+    v = Variant("sell", ns * h, m, w, 2, 4, place, extra=(("h", h),))
+    fn, _ = sell.build(v)
+    got = np.asarray(jax.jit(fn)(data, cols, x)[0])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@SET
+@given(
+    ns=st.sampled_from([2, 4, 8]),
+    h=st.sampled_from([4, 8]),
+    w=st.sampled_from([4, 8]),
+    pad=st.floats(0.0, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sell_hypothesis(ns, h, w, pad, seed):
+    m = ns * h
+    rng = np.random.default_rng(seed)
+    data, cols = make_sell(rng, ns, h, w, m, pad_frac=pad)
+    x = make_x(rng, m)
+    want = np.asarray(ref.sell_spmv(jnp.array(data), jnp.array(cols), jnp.array(x)))
+    v = Variant("sell", ns * h, m, w, ns // 2 or 1, w // 2 or 1, "resident",
+                extra=(("h", h),))
+    fn, _ = sell.build(v)
+    got = np.asarray(jax.jit(fn)(data, cols, x)[0])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- CSR ----
+
+@pytest.mark.parametrize("place", ["resident", "gather"])
+def test_csr_placements(rng, place):
+    n, m, nnz = 64, 64, 256
+    vals, rows, cols = make_coo(rng, n, m, nnz)
+    x = make_x(rng, m)
+    want = np.asarray(ref.coo_spmv(jnp.array(vals), jnp.array(rows),
+                                   jnp.array(cols), jnp.array(x), n))
+    v = Variant("csr", n, m, nnz, 0, 64, place)
+    fn, _ = csr.build(v)
+    got = np.asarray(jax.jit(fn)(vals, rows, cols, x)[0])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@SET
+@given(
+    n=st.sampled_from([16, 64, 128]),
+    nnz_mul=st.integers(1, 8),
+    chunk_div=st.sampled_from([1, 2, 4]),
+    pad=st.floats(0.0, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_csr_hypothesis(n, nnz_mul, chunk_div, pad, seed):
+    m = n
+    nnz = 32 * nnz_mul
+    chunk = nnz // chunk_div
+    rng = np.random.default_rng(seed)
+    vals, rows, cols = make_coo(rng, n, m, nnz, pad_frac=pad)
+    x = make_x(rng, m)
+    want = np.asarray(ref.coo_spmv(jnp.array(vals), jnp.array(rows),
+                                   jnp.array(cols), jnp.array(x), n))
+    v = Variant("csr", n, m, nnz, 0, chunk, "resident")
+    fn, _ = csr.build(v)
+    got = np.asarray(jax.jit(fn)(vals, rows, cols, x)[0])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_csr_duplicate_row_entries_accumulate(rng):
+    """Multiple nnz in the same (row, col) must sum, not overwrite."""
+    n = m = 8
+    vals = np.array([1.0, 2.0, 3.0, 0.0], np.float32)
+    rows = np.array([3, 3, 3, 0], np.int32)
+    cols = np.array([1, 1, 2, 0], np.int32)
+    x = np.arange(1, m + 1, dtype=np.float32)
+    v = Variant("csr", n, m, 4, 0, 2, "resident")
+    fn, _ = csr.build(v)
+    got = np.asarray(jax.jit(fn)(vals, rows, cols, x)[0])
+    want = np.zeros(n, np.float32)
+    want[3] = 1.0 * x[1] + 2.0 * x[1] + 3.0 * x[2]
+    np.testing.assert_allclose(got, want, rtol=1e-6)

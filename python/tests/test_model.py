@@ -1,0 +1,62 @@
+"""L2 graph tests: variant inventory sanity + composed graphs."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.common import Variant
+from .conftest import make_ell, make_x
+
+
+def test_default_variants_unique_names():
+    vs = model.default_variants()
+    names = [v.name for v in vs]
+    assert len(names) == len(set(names))
+    assert len(vs) >= 30  # a real sweep, not a stub
+
+
+def test_default_variants_cover_all_formats():
+    fmts = {v.fmt for v in model.default_variants()}
+    assert fmts == {"csr", "ell", "bell", "sell"}
+
+
+def test_quick_subset_is_subsetlike():
+    quick = model.default_variants(quick=True)
+    assert 0 < len(quick) <= 8
+    assert {v.fmt for v in quick} == {"csr", "ell", "bell", "sell"}
+
+
+def test_all_default_variants_build():
+    """Every advertised variant must construct (shapes divide grids)."""
+    for v in model.default_variants():
+        fn, example = model.build_spmv(v)
+        assert callable(fn)
+        assert example[-1].shape == (v.cols,)
+
+
+def test_power_step_normalizes(rng):
+    v = model.power_step_variants()[0]
+    fn, _ = model.build_power_step(v)
+    data, cols = make_ell(rng, v.rows, v.cols, v.width)
+    x = make_x(rng, v.cols)
+    (y,) = jax.jit(fn)(data, cols, x)
+    y = np.asarray(y)
+    np.testing.assert_allclose(np.linalg.norm(y), 1.0, rtol=1e-4)
+    # direction matches the raw spmv
+    raw = np.asarray(ref.ell_spmv(jnp.array(data), jnp.array(cols), jnp.array(x)))
+    np.testing.assert_allclose(y, raw / np.linalg.norm(raw), rtol=1e-4, atol=1e-5)
+
+
+def test_variant_name_roundtrips_knobs():
+    v = Variant("ell", 256, 256, 16, 64, 8, "streamed", extra=(("xseg", 64),))
+    assert v.name == "ell_r256_c256_w16_b64_k8_streamed_xseg64"
+
+
+def test_variant_rejects_bad_format():
+    import pytest
+    with pytest.raises(ValueError):
+        Variant("hyb", 256, 256, 16, 64, 8, "resident")
+    with pytest.raises(ValueError):
+        Variant("ell", 256, 256, 16, 64, 8, "shared")

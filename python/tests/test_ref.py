@@ -1,0 +1,99 @@
+"""The oracles' oracle: every ref.py format oracle vs a dense matmul.
+
+Each test densifies a randomly generated sparse operand and checks the
+format-specific oracle against ``A_dense @ x``.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from .conftest import make_bell, make_coo, make_ell, make_sell, make_x
+
+
+def ell_to_dense(data, cols, m):
+    n, w = data.shape
+    a = np.zeros((n, m), np.float32)
+    for i in range(n):
+        for j in range(w):
+            a[i, cols[i, j]] += data[i, j]
+    return a
+
+
+def bell_to_dense(data, bcols, m):
+    nb, kb, bh, bw = data.shape
+    a = np.zeros((nb * bh, m), np.float32)
+    for ib in range(nb):
+        for k in range(kb):
+            c0 = bcols[ib, k] * bw
+            a[ib * bh:(ib + 1) * bh, c0:c0 + bw] += data[ib, k]
+    return a
+
+
+def sell_to_dense(data, cols, m):
+    ns, h, w = data.shape
+    a = np.zeros((ns * h, m), np.float32)
+    for s in range(ns):
+        for i in range(h):
+            for j in range(w):
+                a[s * h + i, cols[s, i, j]] += data[s, i, j]
+    return a
+
+
+def coo_to_dense(vals, rows, cols, n, m):
+    a = np.zeros((n, m), np.float32)
+    for v, r, c in zip(vals, rows, cols):
+        a[r, c] += v
+    return a
+
+
+def test_ell_ref_matches_dense(rng):
+    n, m, w = 32, 48, 6
+    data, cols = make_ell(rng, n, m, w)
+    x = make_x(rng, m)
+    want = ell_to_dense(data, cols, m) @ x
+    got = np.asarray(ref.ell_spmv(jnp.array(data), jnp.array(cols), jnp.array(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_bell_ref_matches_dense(rng):
+    nb, kb, bh, bw, m = 6, 3, 4, 4, 32
+    data, bcols = make_bell(rng, nb, kb, bh, bw, m)
+    x = make_x(rng, m)
+    want = bell_to_dense(data, bcols, m) @ x
+    got = np.asarray(ref.bell_spmv(jnp.array(data), jnp.array(bcols), jnp.array(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_sell_ref_matches_dense(rng):
+    ns, h, w, m = 5, 4, 7, 40
+    data, cols = make_sell(rng, ns, h, w, m)
+    x = make_x(rng, m)
+    want = sell_to_dense(data, cols, m) @ x
+    got = np.asarray(ref.sell_spmv(jnp.array(data), jnp.array(cols), jnp.array(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_coo_ref_matches_dense(rng):
+    n, m, nnz = 24, 36, 120
+    vals, rows, cols = make_coo(rng, n, m, nnz)
+    x = make_x(rng, m)
+    want = coo_to_dense(vals, rows, cols, n, m) @ x
+    got = np.asarray(ref.coo_spmv(jnp.array(vals), jnp.array(rows),
+                                  jnp.array(cols), jnp.array(x), n))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_dense_ref_identity(rng):
+    a = rng.standard_normal((8, 8)).astype(np.float32)
+    x = make_x(rng, 8)
+    np.testing.assert_allclose(
+        np.asarray(ref.dense_spmv(jnp.array(a), jnp.array(x))), a @ x, rtol=1e-5)
+
+
+def test_ell_ref_zero_matrix():
+    data = np.zeros((4, 3), np.float32)
+    cols = np.zeros((4, 3), np.int32)
+    x = np.ones(4, np.float32)
+    got = np.asarray(ref.ell_spmv(jnp.array(data), jnp.array(cols), jnp.array(x)))
+    np.testing.assert_array_equal(got, np.zeros(4, np.float32))

@@ -1,0 +1,48 @@
+//! End-to-end serving benchmark over the PJRT runtime: request
+//! throughput/latency through the full stack (router -> conversion ->
+//! AOT Pallas kernels), per format. Falls back to the native backend
+//! when artifacts are missing.
+
+use auto_spmv::gen::{patterns, Rng};
+use auto_spmv::report::{bench, Table};
+use auto_spmv::runtime::{default_artifacts_dir, Engine};
+use auto_spmv::sparse::convert::{self, ConvertParams};
+use auto_spmv::sparse::{Format, SpMv};
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.tsv").exists() {
+        println!("SKIP: no artifacts at {dir:?} (run `make artifacts`)");
+        return;
+    }
+    let mut engine = Engine::new(&dir).expect("engine");
+    let mut rng = Rng::new(0xBE);
+    let coo = patterns::banded(&mut rng, 1000, 16, 6.0);
+    let csr = convert::coo_to_csr(&coo);
+    let x: Vec<f32> = (0..csr.n_cols).map(|i| (i % 7) as f32 * 0.3).collect();
+
+    let mut t = Table::new(
+        "E2E — per-format PJRT SpMV latency (1000-row banded, warm cache)",
+        &["format", "mean (us)", "min (us)", "native (us)"],
+    );
+    let params = ConvertParams { bell_bh: 8, bell_bw: 8, sell_h: 8 };
+    let native = bench(3, 50, || {
+        std::hint::black_box(csr.spmv_alloc(&x));
+    });
+    for fmt in Format::ALL {
+        let m = convert::convert(&csr, fmt, params);
+        // warm: compile + first run
+        engine.spmv(&m, &x, None).expect("spmv");
+        let timing = bench(2, 30, || {
+            std::hint::black_box(engine.spmv(&m, &x, None).unwrap());
+        });
+        t.row(vec![
+            fmt.to_string(),
+            format!("{:.1}", timing.mean_s * 1e6),
+            format!("{:.1}", timing.min_s * 1e6),
+            format!("{:.1}", native.mean_s * 1e6),
+        ]);
+    }
+    t.emit("e2e_serving_bench");
+    println!("executions {}, cached executables {}", engine.exec_count, engine.cached());
+}

@@ -1,0 +1,61 @@
+//! Fig. 12 — GPU sensitivity: configurations predicted by the
+//! Turing-trained classifier, evaluated against the measured optimum on
+//! the Pascal profile for the paper's six cross-check matrices
+//! (amazon0601, crankseg_2, bcsstk32, x104, il2010, Chevron3).
+
+#[path = "common.rs"]
+mod common;
+
+use auto_spmv::coordinator::CompileTimeOptimizer;
+use auto_spmv::dataset::Dataset;
+use auto_spmv::features::extract_csr;
+use auto_spmv::gen::{self, GPU_SENSITIVITY_SET};
+use auto_spmv::gpusim::Objective;
+use auto_spmv::report::Table;
+use auto_spmv::sparse::Format;
+
+fn main() {
+    let ds = common::full_dataset();
+    let turing = Dataset {
+        records: ds.records.iter().filter(|r| r.arch.contains("Turing")).cloned().collect(),
+    };
+    for obj in [Objective::Latency, Objective::EnergyEff] {
+        let opt = CompileTimeOptimizer::train(&turing, obj);
+        let mut t = Table::new(
+            &format!(
+                "Fig. 12 ({}) — Turing-trained predictions measured on Pascal (normalized to optimum)",
+                obj.name()
+            ),
+            &["matrix", "predicted cfg", "pred/optimal", "loss"],
+        );
+        let mut worst: f64 = 0.0;
+        for name in GPU_SENSITIVITY_SET {
+            let f = extract_csr(&gen::by_name(name).unwrap().generate_csr(1));
+            let choice = opt.predict(&f, "GTX1650m-Turing");
+            let slice = ds.slice(name, "GTX1080-Pascal");
+            let chosen = slice
+                .iter()
+                .find(|r| r.config == choice.to_config())
+                .expect("config in sweep");
+            let best = slice
+                .iter()
+                .filter(|r| r.config.format == Format::Csr)
+                .map(|r| obj.value(&r.m))
+                .reduce(|a, b| if obj.better(a, b) { a } else { b })
+                .unwrap();
+            let chosen_v = obj.value(&chosen.m);
+            let ratio = if obj.minimize() { best / chosen_v } else { chosen_v / best };
+            let loss = (1.0 - ratio) * 100.0;
+            worst = worst.max(loss);
+            t.row(vec![
+                name.into(),
+                choice.to_config().to_string(),
+                format!("{ratio:.3}"),
+                common::pct(loss),
+            ]);
+        }
+        t.emit(&format!("fig12_sensitivity_{}", obj.name()));
+        println!("{}: worst cross-GPU loss {:.1}% (paper: up to ~2% on real boards)\n",
+                 obj.name(), worst);
+    }
+}

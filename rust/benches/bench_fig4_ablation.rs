@@ -1,0 +1,66 @@
+//! Fig. 4 — per-knob ablation on `eu-2005`: improvement over the default
+//! configuration when optimizing each configuration parameter ALONE
+//! (TB size / maxrregcount / memory config with everything else at the
+//! default; sparse format with default compile params).
+
+#[path = "common.rs"]
+mod common;
+
+use auto_spmv::gpusim::{KernelConfig, MemConfig, Objective, MAXRREGCOUNT, TB_SIZES};
+use auto_spmv::report::Table;
+use auto_spmv::sparse::Format;
+
+fn main() {
+    let ds = common::full_dataset();
+    for arch in ["GTX1650m-Turing", "GTX1080-Pascal"] {
+        run_arch(&ds, arch);
+    }
+    println!("paper shape: every knob contributes; compile knobs matter, not just format");
+    println!("note: maxrregcount is inert on Turing by construction (64K regs / 1024");
+    println!("threads = 64 regs/thread at full occupancy) and binds on Pascal (2048 threads).");
+}
+
+fn run_arch(ds: &auto_spmv::dataset::Dataset, arch: &str) {
+    let slice = ds.slice("eu-2005", arch);
+    let value = |cfg: &KernelConfig, obj: Objective| -> f64 {
+        obj.value(&slice.iter().find(|r| r.config == *cfg).expect("cfg in sweep").m)
+    };
+    let default = KernelConfig::default_baseline();
+
+    let mut t = Table::new(
+        &format!("Fig. 4 — eu-2005 on {arch}: improvement from each knob alone (%)"),
+        &["knob", "latency", "energy", "avg_power", "energy_eff"],
+    );
+
+    type Sweep = Box<dyn Fn(&mut KernelConfig, usize)>;
+    let knobs: Vec<(&str, usize, Sweep)> = vec![
+        ("TB size", TB_SIZES.len(), Box::new(|c, i| c.tb_size = TB_SIZES[i])),
+        ("maxrregcount", MAXRREGCOUNT.len(), Box::new(|c, i| c.maxrregcount = MAXRREGCOUNT[i])),
+        ("memory config", MemConfig::ALL.len(), Box::new(|c, i| c.mem = MemConfig::ALL[i])),
+        ("sparse format", Format::ALL.len(), Box::new(|c, i| c.format = Format::ALL[i])),
+    ];
+
+    for (name, n, set) in &knobs {
+        let mut cells = vec![name.to_string()];
+        for obj in Objective::ALL {
+            let base = value(&default, obj);
+            let mut best = base;
+            for i in 0..*n {
+                let mut cfg = default;
+                set(&mut cfg, i);
+                let v = value(&cfg, obj);
+                if obj.better(v, best) {
+                    best = v;
+                }
+            }
+            let imp = if obj.minimize() {
+                (base - best) / base * 100.0
+            } else {
+                (best - base) / base * 100.0
+            };
+            cells.push(common::pct(imp));
+        }
+        t.row(cells);
+    }
+    t.emit(&format!("fig4_ablation_{arch}"));
+}

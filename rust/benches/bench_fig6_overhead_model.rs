@@ -1,0 +1,51 @@
+//! Fig. 6 — accuracy of the run-time overhead estimators: predicted vs
+//! measured f_latency (feature extraction) and c_latency (conversion),
+//! leave-one-out over the corpus.
+
+#[path = "common.rs"]
+mod common;
+
+use auto_spmv::coordinator::overhead::{measure_overhead, OverheadModel, OverheadSample};
+use auto_spmv::gen;
+use auto_spmv::report::{fmt_g, Table};
+use auto_spmv::sparse::Format;
+
+fn main() {
+    // measure every corpus matrix once (the ground truth of Fig. 6)
+    let entries = gen::corpus();
+    let samples: Vec<(String, OverheadSample)> = entries
+        .iter()
+        .map(|e| (e.name.to_string(), measure_overhead(e, 1, Format::Ell)))
+        .collect();
+
+    let mut t = Table::new(
+        "Fig. 6 — overhead estimation (leave-one-out): predicted vs measured (ms)",
+        &["matrix", "f_meas", "f_pred", "c_meas", "c_pred"],
+    );
+    let mut err_f = 0.0;
+    let mut err_c = 0.0;
+    for (name, s) in &samples {
+        let train: Vec<OverheadSample> = samples
+            .iter()
+            .filter(|(n, _)| n != name)
+            .map(|(_, s)| *s)
+            .collect();
+        let model = OverheadModel::train(&train);
+        let est = model.predict(s.n, s.nnz);
+        err_f += (est.f_latency_s - s.f_latency_s).abs() / s.f_latency_s.max(1e-9);
+        err_c += (est.c_latency_s - s.c_latency_s).abs() / s.c_latency_s.max(1e-9);
+        t.row(vec![
+            name.clone(),
+            fmt_g(s.f_latency_s * 1e3),
+            fmt_g(est.f_latency_s * 1e3),
+            fmt_g(s.c_latency_s * 1e3),
+            fmt_g(est.c_latency_s * 1e3),
+        ]);
+    }
+    t.emit("fig6_overhead_model");
+    println!(
+        "mean relative error: f_latency {:.1}%, c_latency {:.1}% (paper shape: accurate tracking)",
+        100.0 * err_f / samples.len() as f64,
+        100.0 * err_c / samples.len() as f64
+    );
+}

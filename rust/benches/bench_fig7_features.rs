@@ -1,0 +1,37 @@
+//! Fig. 7 — distribution of the eight sparsity features over the corpus,
+//! sorted by ascending nnz (the matched-coverage check for the
+//! SuiteSparse stand-in).
+
+use auto_spmv::features::{extract_csr, FEATURE_NAMES};
+use auto_spmv::gen;
+use auto_spmv::report::{fmt_g, Table};
+
+fn main() {
+    let mut rows: Vec<(String, Vec<f64>)> = gen::corpus()
+        .iter()
+        .map(|e| {
+            let f = extract_csr(&e.generate_csr(1));
+            (e.name.to_string(), f.to_vec())
+        })
+        .collect();
+    rows.sort_by(|a, b| a.1[1].partial_cmp(&b.1[1]).unwrap()); // by nnz
+
+    let header: Vec<&str> =
+        std::iter::once("matrix").chain(FEATURE_NAMES.iter().copied()).collect();
+    let mut t = Table::new("Fig. 7 — sparsity features (ascending nnz)", &header);
+    for (name, f) in &rows {
+        let mut cells = vec![name.clone()];
+        cells.extend(f.iter().map(|v| fmt_g(*v)));
+        t.row(cells);
+    }
+    t.emit("fig7_features");
+
+    // coverage summary (paper: "wide range of sparsity features")
+    for (j, name) in FEATURE_NAMES.iter().enumerate() {
+        let vals: Vec<f64> = rows.iter().map(|r| r.1[j]).collect();
+        let min = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        println!("{name:>10}: {} .. {} (x{:.0} range)", fmt_g(min), fmt_g(max),
+                 if min > 0.0 { max / min } else { f64::NAN });
+    }
+}

@@ -1,0 +1,55 @@
+//! Fig. 8 — Pearson correlation (%) between the eight sparsity features
+//! over the corpus (paper shape: low mutual correlation, except the
+//! definitionally-linked dispersion features).
+
+use auto_spmv::features::{extract_csr, FEATURE_NAMES};
+use auto_spmv::gen;
+use auto_spmv::report::Table;
+
+fn pearson(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len() as f64;
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        cov += (x - ma) * (y - mb);
+        va += (x - ma) * (x - ma);
+        vb += (y - mb) * (y - mb);
+    }
+    if va == 0.0 || vb == 0.0 {
+        0.0
+    } else {
+        cov / (va.sqrt() * vb.sqrt())
+    }
+}
+
+fn main() {
+    let feats: Vec<Vec<f64>> = gen::corpus()
+        .iter()
+        .map(|e| extract_csr(&e.generate_csr(1)).to_vec())
+        .collect();
+    let cols: Vec<Vec<f64>> = (0..8)
+        .map(|j| feats.iter().map(|f| f[j]).collect())
+        .collect();
+
+    let header: Vec<&str> = std::iter::once("feature").chain(FEATURE_NAMES).collect();
+    let mut t = Table::new("Fig. 8 — Pearson correlation (%) of sparsity features", &header);
+    let mut offdiag = Vec::new();
+    for i in 0..8 {
+        let mut cells = vec![FEATURE_NAMES[i].to_string()];
+        for j in 0..8 {
+            let r = pearson(&cols[i], &cols[j]) * 100.0;
+            if i != j && !((i, j) == (3, 7) || (i, j) == (7, 3)) {
+                offdiag.push(r.abs());
+            }
+            cells.push(format!("{r:.0}"));
+        }
+        t.row(cells);
+    }
+    t.emit("fig8_correlation");
+    let mean = offdiag.iter().sum::<f64>() / offdiag.len() as f64;
+    println!("mean |off-diagonal| correlation (excl. Var/Std pair): {mean:.1}%");
+    println!("paper shape: low correlation -> features carry independent signal");
+}

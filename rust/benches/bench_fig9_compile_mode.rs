@@ -1,0 +1,69 @@
+//! Fig. 9 — compile-time optimization mode: per-matrix improvement over
+//! the default parameters (CSR format), all four objectives, with the
+//! best/worst-TB whiskers the paper draws (the programmer-controlled
+//! parameter band).
+
+#[path = "common.rs"]
+mod common;
+
+use auto_spmv::dataset::labels;
+use auto_spmv::gpusim::{KernelConfig, Objective, TB_SIZES};
+use auto_spmv::report::Table;
+use auto_spmv::sparse::Format;
+
+fn main() {
+    let ds = common::full_dataset();
+    for obj in Objective::ALL {
+        let ex = labels::examples(&ds, obj);
+        let mut t = Table::new(
+            &format!("Fig. 9 ({}) — compile-time mode improvement over default CSR", obj.name()),
+            &["matrix", "improvement", "best-TB band", "worst-TB band"],
+        );
+        let mut sum = 0.0;
+        let mut max: f64 = 0.0;
+        let mut count = 0usize;
+        for e in ex.iter().filter(|e| e.arch.contains("Turing")) {
+            let imp = if obj.minimize() {
+                (e.default_value - e.best_compile) / e.default_value * 100.0
+            } else {
+                (e.best_compile - e.default_value) / e.default_value * 100.0
+            };
+            // whiskers: optimize regs+mem per TB size, report band over TB
+            let slice = ds.slice(&e.matrix, &e.arch);
+            let mut band: Vec<f64> = Vec::new();
+            for &tb in &TB_SIZES {
+                let best_at_tb = slice
+                    .iter()
+                    .filter(|r| r.config.format == Format::Csr && r.config.tb_size == tb)
+                    .map(|r| obj.value(&r.m))
+                    .reduce(|a, b| if obj.better(a, b) { a } else { b })
+                    .unwrap();
+                let rel = if obj.minimize() {
+                    (e.default_value - best_at_tb) / e.default_value * 100.0
+                } else {
+                    (best_at_tb - e.default_value) / e.default_value * 100.0
+                };
+                band.push(rel);
+            }
+            let hi = band.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let lo = band.iter().cloned().fold(f64::INFINITY, f64::min);
+            sum += imp;
+            max = max.max(imp);
+            count += 1;
+            t.row(vec![
+                e.matrix.clone(),
+                common::pct(imp),
+                common::pct(hi),
+                common::pct(lo),
+            ]);
+        }
+        t.emit(&format!("fig9_compile_{}", obj.name()));
+        println!(
+            "{}: mean {:.1}%, max {:.1}%  (paper: up to 51.9/52/33.2/53% for lat/en/pow/eff)\n",
+            obj.name(),
+            sum / count as f64,
+            max
+        );
+        let _ = KernelConfig::default_baseline();
+    }
+}

@@ -1,0 +1,64 @@
+//! Table 6 — Auto-SpMV (AutoML-tuned decision tree) vs state-of-the-art
+//! baselines: BestSF's single SVM [78], the bagged-trees classifier of
+//! [74], and a CNN-proxy for [32] — all on the format-selection task for
+//! the execution-time and energy objectives.
+
+#[path = "common.rs"]
+mod common;
+
+use auto_spmv::automl::tuner::tune_all;
+use auto_spmv::dataset::labels::{self, Target};
+use auto_spmv::gpusim::Objective;
+use auto_spmv::ml::baselines;
+use auto_spmv::ml::metrics::accuracy;
+use auto_spmv::ml::scaler::StandardScaler;
+use auto_spmv::ml::split::{take, take_x, train_test_indices};
+use auto_spmv::ml::Classifier;
+use auto_spmv::report::Table;
+
+fn main() {
+    let ds = common::full_dataset();
+    let mut t = Table::new(
+        "Table 6 — classification accuracy vs state-of-the-art (format selection)",
+        &["model", "acc (latency)", "acc (energy)"],
+    );
+    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+    for obj in [Objective::Latency, Objective::Energy] {
+        let ex = labels::examples(&ds, obj);
+        let (x, y) = labels::to_xy(&ex, Target::Format);
+        let (tr, te) = train_test_indices(x.len(), 0.2, 0x7AB6);
+        let (sc, xt) = StandardScaler::fit_transform(&take_x(&x, &tr));
+        let xv = sc.transform(&take_x(&x, &te));
+        let (yt, yv) = (take(&y, &tr), take(&y, &te));
+
+        // baselines (fixed hyperparameters, no AutoML — the comparison point)
+        for (name, mut model) in baselines::all(&xt) {
+            model.fit(&xt, &yt);
+            let acc = accuracy(&yv, &model.predict(&xv));
+            match rows.iter_mut().find(|(n, _)| n == name) {
+                Some((_, v)) => v.push(acc),
+                None => rows.push((name.to_string(), vec![acc])),
+            }
+        }
+        // Auto-SpMV: tune all six families with TPE, deploy the best
+        // (§5.4: "fine-tunes six different learning models ... then we
+        // report the best classification results")
+        let tuned = tune_all(&xt, &yt, 10, 6);
+        let best = &tuned[0];
+        eprintln!("  [{}] Auto-SpMV winner: {}", obj.name(), best.family.name());
+        let acc = accuracy(&yv, &best.model.predict(&xv));
+        match rows.iter_mut().find(|(n, _)| n == "Auto-SpMV (best tuned)") {
+            Some((_, v)) => v.push(acc),
+            None => rows.push(("Auto-SpMV (best tuned)".into(), vec![acc])),
+        }
+    }
+    for (name, accs) in &rows {
+        t.row(vec![
+            name.clone(),
+            format!("{:.0}%", 100.0 * accs[0]),
+            format!("{:.0}%", 100.0 * accs.get(1).copied().unwrap_or(f64::NAN)),
+        ]);
+    }
+    t.emit("table6_sota");
+    println!("paper shape: Auto-SpMV's tuned model >= every fixed-hyperparameter baseline");
+}

@@ -1,0 +1,62 @@
+//! Table 7 — optimization overhead of the run-time mode per corpus
+//! matrix (ascending nnz): measured f_latency (feature extraction) and
+//! c_latency (conversion to the predicted format), plus the ~constant
+//! o+p latency of model inference (§7.5).
+//!
+//! Absolute numbers are CPU- and scale-dependent (the paper measures
+//! paper-scale matrices on their Python/NumPy pipeline; we measure the
+//! Rust pipeline at corpus scale — pass --full-scale via
+//! AUTO_SPMV_SCALE=8 to approach paper sizes); the SHAPE to match is
+//! overhead growing ~linearly with nnz and dominated by f+c.
+
+#[path = "common.rs"]
+mod common;
+
+use auto_spmv::coordinator::overhead::{measure_overhead, OverheadModel};
+use auto_spmv::gen;
+use auto_spmv::report::{fmt_g, Table};
+use auto_spmv::sparse::Format;
+
+fn main() {
+    let scale: usize = std::env::var("AUTO_SPMV_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+    let mut rows: Vec<(String, f64, f64, f64)> = gen::corpus()
+        .iter()
+        .map(|e| {
+            let s = measure_overhead(e, scale, Format::Ell);
+            (e.name.to_string(), s.nnz, s.f_latency_s, s.c_latency_s)
+        })
+        .collect();
+    rows.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+
+    let mut t = Table::new(
+        &format!("Table 7 — run-time optimization overhead (scale {scale}, seconds)"),
+        &["matrix", "nnz", "f_latency", "c_latency", "f+c"],
+    );
+    for (name, nnz, f, c) in &rows {
+        t.row(vec![
+            name.clone(),
+            format!("{}", *nnz as u64),
+            fmt_g(*f),
+            fmt_g(*c),
+            fmt_g(f + c),
+        ]);
+    }
+    t.emit("table7_overhead");
+
+    // o_latency + p_latency: constant, model-inference scale
+    let model = OverheadModel::train_on_corpus(scale, None);
+    let (_, o_lat) = model.predict_timed(1e4, 1e6);
+    println!("o+p latency (model inference): {:.3} ms — constant, as in §7.5", o_lat * 1e3);
+
+    // linearity check (the paper's key claim: overhead ~ nnz)
+    let first = &rows[0];
+    let last = &rows[rows.len() - 1];
+    println!(
+        "overhead growth: nnz x{:.0} -> f+c x{:.1} (paper shape: ~linear in nnz)",
+        last.1 / first.1,
+        (last.2 + last.3) / (first.2 + first.3).max(1e-12)
+    );
+}

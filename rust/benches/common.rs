@@ -1,0 +1,32 @@
+//! Shared support for the paper-reproduction benches: builds the full
+//! 30-matrix x 2-GPU dataset once and caches it as TSV under reports/
+//! so each bench binary (a separate process) reuses it.
+
+use auto_spmv::dataset::{self, store, BuildOptions, Dataset};
+use std::path::Path;
+
+pub const DATASET_CACHE: &str = "reports/dataset_full.tsv";
+
+/// Full-corpus dataset, cached across bench processes.
+pub fn full_dataset() -> Dataset {
+    let path = Path::new(DATASET_CACHE);
+    if path.exists() {
+        if let Ok(ds) = store::load(path) {
+            if !ds.is_empty() {
+                return ds;
+            }
+        }
+    }
+    let ds = dataset::build(&BuildOptions::default());
+    std::fs::create_dir_all("reports").ok();
+    store::save(&ds, path).ok();
+    ds
+}
+
+/// Pretty percentage.
+pub fn pct(v: f64) -> String {
+    format!("{v:.1}%")
+}
+
+#[allow(dead_code)]
+fn main() {} // never used; this file is included via #[path]

@@ -1,0 +1,221 @@
+//! Model fine-tuning — wires the Table 1 hyperparameter ranges to the
+//! TPE optimizer and returns the best fitted model per family (§5.4
+//! step 3: "fine-tuning machine learning algorithms to provide the most
+//! accurate predictions").
+
+use super::{Space, Tpe};
+use crate::ml::boosting::GradientBoostingClassifier;
+use crate::ml::centroid::{Metric, NearestCentroid};
+use crate::ml::forest::RandomForestClassifier;
+use crate::ml::metrics::accuracy;
+use crate::ml::mlp::{Activation, MlpClassifier};
+use crate::ml::split::{take, take_x, train_test_indices};
+use crate::ml::svm::{Kernel, SvmClassifier};
+use crate::ml::tree::{Criterion, DecisionTreeClassifier, Splitter};
+use crate::ml::Classifier;
+
+/// The six model families of Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    NearestCentroid,
+    DecisionTree,
+    Svm,
+    GradientBoosting,
+    RandomForest,
+    Mlp,
+}
+
+impl Family {
+    pub const ALL: [Family; 6] = [
+        Family::NearestCentroid,
+        Family::DecisionTree,
+        Family::Svm,
+        Family::GradientBoosting,
+        Family::RandomForest,
+        Family::Mlp,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::NearestCentroid => "nearest_centroid",
+            Family::DecisionTree => "decision_tree",
+            Family::Svm => "svm",
+            Family::GradientBoosting => "gradient_boosting",
+            Family::RandomForest => "random_forest",
+            Family::Mlp => "mlp",
+        }
+    }
+
+    /// Table 1 search space of this family.
+    pub fn space(self) -> Space {
+        match self {
+            // metric: manhattan, euclidean, minkowski
+            Family::NearestCentroid => Space::new(vec![("metric", 3)]),
+            // criterion x splitter (+ depth, an sklearn default we expose)
+            Family::DecisionTree => {
+                Space::new(vec![("criterion", 3), ("splitter", 2), ("depth", 4)])
+            }
+            // kernel: linear poly rbf sigmoid ("precomputed" is an sklearn
+            // calling convention, not a model — excluded)
+            Family::Svm => Space::new(vec![("kernel", 4)]),
+            // estimators {50,100,150,200} x lr {0.1, 0.01, 0.001}
+            Family::GradientBoosting => Space::new(vec![("estimators", 4), ("lr", 3)]),
+            // criterion {gini, entropy, log_loss}
+            Family::RandomForest => Space::new(vec![("criterion", 3)]),
+            // hidden {20,50,100,150,200} x layers {1,2,3,4,5,10} x act {4}
+            Family::Mlp => Space::new(vec![("hidden", 5), ("layers", 6), ("act", 4)]),
+        }
+    }
+
+    /// Materialize a model from a trial's choices.
+    pub fn build(self, choices: &[usize], x_train: &[Vec<f64>], seed: u64) -> Box<dyn Classifier> {
+        match self {
+            Family::NearestCentroid => {
+                let metric = [Metric::Manhattan, Metric::Euclidean, Metric::Minkowski(3.0)]
+                    [choices[0]];
+                Box::new(NearestCentroid { metric, ..Default::default() })
+            }
+            Family::DecisionTree => {
+                let criterion = Criterion::ALL[choices[0]];
+                let splitter = [Splitter::Best, Splitter::Random][choices[1]];
+                let max_depth = [5, 9, 13, 20][choices[2]];
+                Box::new(DecisionTreeClassifier {
+                    criterion,
+                    splitter,
+                    max_depth,
+                    seed,
+                    ..Default::default()
+                })
+            }
+            Family::Svm => {
+                let g = SvmClassifier::gamma_scale(x_train);
+                let kernel = [
+                    Kernel::Linear,
+                    Kernel::Poly { degree: 3, gamma: g, coef0: 1.0 },
+                    Kernel::Rbf { gamma: g },
+                    Kernel::Sigmoid { gamma: g, coef0: 0.0 },
+                ][choices[0]];
+                Box::new(SvmClassifier { kernel, seed, ..Default::default() })
+            }
+            Family::GradientBoosting => {
+                let n_estimators = [50, 100, 150, 200][choices[0]];
+                let learning_rate = [0.1, 0.01, 0.001][choices[1]];
+                Box::new(GradientBoostingClassifier {
+                    n_estimators,
+                    learning_rate,
+                    seed,
+                    ..Default::default()
+                })
+            }
+            Family::RandomForest => {
+                let criterion = Criterion::ALL[choices[0]];
+                Box::new(RandomForestClassifier {
+                    criterion,
+                    n_estimators: 100,
+                    max_depth: 15,
+                    seed,
+                    ..Default::default()
+                })
+            }
+            Family::Mlp => {
+                let hidden = [20, 50, 100, 150, 200][choices[0]];
+                let layers = [1, 2, 3, 4, 5, 10][choices[1]];
+                let activation = Activation::ALL[choices[2]];
+                Box::new(MlpClassifier {
+                    hidden: vec![hidden; layers],
+                    activation,
+                    epochs: 60,
+                    seed,
+                    ..Default::default()
+                })
+            }
+        }
+    }
+}
+
+/// Result of tuning one family.
+pub struct Tuned {
+    pub family: Family,
+    pub choices: Vec<usize>,
+    pub valid_accuracy: f64,
+    pub model: Box<dyn Classifier>,
+}
+
+/// Tune one family with TPE on an internal holdout of the training data,
+/// then refit the winner on all of it.
+pub fn tune_family(
+    family: Family,
+    x: &[Vec<f64>],
+    y: &[usize],
+    n_trials: usize,
+    seed: u64,
+) -> Tuned {
+    let (tr, va) = train_test_indices(x.len(), 0.25, seed ^ 0x7u64);
+    let (xt, yt) = (take_x(x, &tr), take(y, &tr));
+    let (xv, yv) = (take_x(x, &va), take(y, &va));
+
+    let space = family.space();
+    let budget = n_trials.min(space.cardinality());
+    let mut tpe = Tpe::new(space, seed);
+    let best = tpe.optimize(budget, |choices| {
+        let mut m = family.build(choices, &xt, seed);
+        m.fit(&xt, &yt);
+        accuracy(&yv, &m.predict(&xv))
+    });
+
+    let mut model = family.build(&best.choices, x, seed);
+    model.fit(x, y);
+    Tuned { family, choices: best.choices, valid_accuracy: best.score, model }
+}
+
+/// Tune every family and return them sorted by validation accuracy
+/// (best first) — the "report the best classification results" step.
+pub fn tune_all(x: &[Vec<f64>], y: &[usize], n_trials: usize, seed: u64) -> Vec<Tuned> {
+    let mut out: Vec<Tuned> = Family::ALL
+        .iter()
+        .map(|&f| tune_family(f, x, y, n_trials, seed))
+        .collect();
+    out.sort_by(|a, b| b.valid_accuracy.partial_cmp(&a.valid_accuracy).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::testdata;
+
+    #[test]
+    fn family_spaces_match_table1() {
+        assert_eq!(Family::Mlp.space().cardinality(), 5 * 6 * 4);
+        assert_eq!(Family::GradientBoosting.space().cardinality(), 12);
+        assert_eq!(Family::Svm.space().cardinality(), 4);
+        assert_eq!(Family::ALL.len(), 6);
+    }
+
+    #[test]
+    fn tuned_tree_solves_xor() {
+        let (x, y) = testdata::xor(40, 51);
+        let t = tune_family(Family::DecisionTree, &x, &y, 8, 1);
+        assert!(t.valid_accuracy > 0.9, "{}", t.valid_accuracy);
+        let preds = t.model.predict(&x);
+        assert!(crate::ml::metrics::accuracy(&y, &preds) > 0.9);
+    }
+
+    #[test]
+    fn all_families_build_from_any_choice() {
+        let (x, _) = testdata::blobs(5, 52);
+        for f in Family::ALL {
+            for c in f.space().enumerate().iter().take(6) {
+                let _ = f.build(c, &x, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn centroid_tuning_cheap_and_valid() {
+        let (x, y) = testdata::blobs(25, 53);
+        let t = tune_family(Family::NearestCentroid, &x, &y, 3, 2);
+        assert!(t.valid_accuracy > 0.9);
+        assert_eq!(t.family.name(), "nearest_centroid");
+    }
+}

@@ -1,0 +1,298 @@
+//! CLI: argument parsing (clap is not in the offline mirror) and the
+//! subcommand implementations behind the `auto-spmv` binary.
+//!
+//! Subcommands:
+//!   corpus                      list the 30 corpus matrices + features
+//!   gen-dataset                 run the full sweep, save TSV
+//!   train [--objective O]       train + report per-target accuracy
+//!   optimize --matrix M [...]   run both optimization modes on a matrix
+//!   serve [--requests N]        end-to-end serving demo over PJRT
+//!
+//! Global flags: --config FILE, --set key=value (repeatable), and the
+//! shorthand --scale/--seed/--objective overrides.
+
+use crate::config::AppConfig;
+use crate::coordinator::{CompileTimeOptimizer, OverheadModel, RunTimeOptimizer};
+use crate::dataset::{self, labels, store, BuildOptions};
+use crate::features;
+use crate::gen;
+use crate::gpusim::Objective;
+use crate::ml::metrics::{accuracy, f1_macro};
+use crate::ml::split::{take, take_x, train_test_indices};
+use crate::report::{fmt_g, pct_gain, pct_improvement, Table};
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+/// Parsed command line.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    pub command: String,
+    pub flags: Vec<(String, String)>,
+    pub config: AppConfig,
+}
+
+/// Parse `args` (without argv[0]).
+pub fn parse(args: &[String]) -> Result<Cli> {
+    if args.is_empty() {
+        bail!("usage: auto-spmv <corpus|gen-dataset|train|optimize|serve> [flags]");
+    }
+    let command = args[0].clone();
+    let mut flags: Vec<(String, String)> = Vec::new();
+    let mut overrides: Vec<(String, String)> = Vec::new();
+    let mut config_file: Option<PathBuf> = None;
+    let mut i = 1;
+    while i < args.len() {
+        let a = &args[i];
+        let Some(key) = a.strip_prefix("--") else {
+            bail!("unexpected argument {a}");
+        };
+        let value = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            i += 1;
+            args[i].clone()
+        } else {
+            "true".to_string()
+        };
+        match key {
+            "config" => config_file = Some(PathBuf::from(&value)),
+            "set" => {
+                let (k, v) = value
+                    .split_once('=')
+                    .context("--set expects key=value")?;
+                overrides.push((k.to_string(), v.to_string()));
+            }
+            "scale" | "seed" | "both_archs" | "automl_trials" | "artifacts_dir"
+            | "dataset_path" => overrides.push((key.to_string(), value)),
+            _ => flags.push((key.to_string(), value)),
+        }
+        i += 1;
+    }
+    let config = AppConfig::resolve(config_file.as_deref(), &overrides)?;
+    Ok(Cli { command, flags, config })
+}
+
+impl Cli {
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    fn objective(&self) -> Result<Objective> {
+        let name = self.flag("objective").unwrap_or("latency");
+        Objective::parse(name).with_context(|| format!("unknown objective {name}"))
+    }
+}
+
+/// Dispatch a parsed CLI.
+pub fn run(cli: &Cli) -> Result<()> {
+    match cli.command.as_str() {
+        "corpus" => cmd_corpus(cli),
+        "gen-dataset" => cmd_gen_dataset(cli),
+        "train" => cmd_train(cli),
+        "optimize" => cmd_optimize(cli),
+        "serve" => cmd_serve(cli),
+        other => bail!("unknown command {other}"),
+    }
+}
+
+fn cmd_corpus(cli: &Cli) -> Result<()> {
+    let mut t = Table::new(
+        "Corpus (SuiteSparse stand-in, Table 7 order)",
+        &["matrix", "n", "nnz", "Avg_nnz", "Std_nnz", "ELL_ratio"],
+    );
+    for e in gen::corpus() {
+        let csr = e.generate_csr(cli.config.scale);
+        let f = features::extract_csr(&csr);
+        t.row(vec![
+            e.name.into(),
+            format!("{}", f.n as u64),
+            format!("{}", f.nnz as u64),
+            fmt_g(f.avg_nnz),
+            fmt_g(f.std_nnz),
+            fmt_g(f.ell_ratio),
+        ]);
+    }
+    t.emit("corpus");
+    Ok(())
+}
+
+fn cmd_gen_dataset(cli: &Cli) -> Result<()> {
+    let ds = dataset::build(&BuildOptions {
+        scale: cli.config.scale,
+        both_archs: cli.config.both_archs,
+        ..Default::default()
+    });
+    if let Some(dir) = cli.config.dataset_path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    store::save(&ds, &cli.config.dataset_path)?;
+    println!(
+        "dataset: {} records ({} matrices x {} archs) -> {:?}",
+        ds.len(),
+        ds.matrices().len(),
+        ds.archs().len(),
+        cli.config.dataset_path
+    );
+    Ok(())
+}
+
+fn load_or_build(cli: &Cli) -> Result<dataset::Dataset> {
+    if cli.config.dataset_path.exists() {
+        store::load(&cli.config.dataset_path)
+    } else {
+        Ok(dataset::build(&BuildOptions {
+            scale: cli.config.scale,
+            both_archs: cli.config.both_archs,
+            ..Default::default()
+        }))
+    }
+}
+
+fn cmd_train(cli: &Cli) -> Result<()> {
+    let ds = load_or_build(cli)?;
+    let obj = cli.objective()?;
+    let ex = labels::examples(&ds, obj);
+    let mut t = Table::new(
+        &format!("Classification ({}, tuned decision tree, 80/20)", obj.name()),
+        &["target", "accuracy", "F1"],
+    );
+    for target in labels::Target::ALL {
+        let (x, y) = labels::to_xy(&ex, target);
+        let (tr, te) = train_test_indices(x.len(), 0.2, cli.config.seed);
+        let tuned = crate::automl::tuner::tune_family(
+            crate::automl::tuner::Family::DecisionTree,
+            &take_x(&x, &tr),
+            &take(&y, &tr),
+            cli.config.automl_trials,
+            cli.config.seed,
+        );
+        let pred = tuned.model.predict(&take_x(&x, &te));
+        let truth = take(&y, &te);
+        t.row(vec![
+            target.name().into(),
+            format!("{:.1}%", 100.0 * accuracy(&truth, &pred)),
+            format!("{:.1}%", 100.0 * f1_macro(&truth, &pred, target.n_classes())),
+        ]);
+    }
+    t.emit("train");
+    Ok(())
+}
+
+fn cmd_optimize(cli: &Cli) -> Result<()> {
+    let name = cli.flag("matrix").context("--matrix NAME required")?;
+    let entry = gen::by_name(name).with_context(|| format!("unknown matrix {name}"))?;
+    let obj = cli.objective()?;
+    let ds = load_or_build(cli)?;
+
+    let compile = CompileTimeOptimizer::train(&ds, obj);
+    let overhead = OverheadModel::train_on_corpus(cli.config.scale, Some(name));
+    let runtime = RunTimeOptimizer::train(&ds, obj, overhead);
+
+    let coo = entry.generate(cli.config.scale);
+    let csr = crate::sparse::convert::coo_to_csr(&coo);
+    let f = features::extract_csr(&csr);
+
+    let choice = compile.predict(&f, "GTX1650m-Turing");
+    let decision = runtime.decide(&coo, cli.flag("iterations").map_or(1000, |v| v.parse().unwrap_or(1000)));
+
+    let mut t = Table::new(&format!("Auto-SpMV plan for {name} ({})", obj.name()), &["key", "value"]);
+    t.row(vec!["compile: TB size".into(), choice.tb_size.to_string()]);
+    t.row(vec!["compile: maxrregcount".into(), choice.maxrregcount.to_string()]);
+    t.row(vec!["compile: memory".into(), choice.mem.name().into()]);
+    t.row(vec!["runtime: format".into(), decision.predicted_format.to_string()]);
+    t.row(vec!["runtime: convert?".into(), decision.convert.to_string()]);
+    t.row(vec!["est overhead (s)".into(), fmt_g(decision.overhead.total())]);
+    t.row(vec!["est default obj".into(), fmt_g(decision.est_default)]);
+    t.row(vec!["est best obj".into(), fmt_g(decision.est_best)]);
+    let gain = if obj.minimize() {
+        pct_improvement(decision.est_default, decision.est_best)
+    } else {
+        pct_gain(decision.est_default, decision.est_best)
+    };
+    t.row(vec!["est improvement %".into(), format!("{gain:.1}")]);
+    t.emit(&format!("optimize_{name}"));
+    Ok(())
+}
+
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    use crate::coordinator::service::{BackendSpec, Service};
+    use crate::sparse::convert::ConvertParams;
+
+    let n_requests: usize = cli.flag("requests").map_or(24, |v| v.parse().unwrap_or(24));
+    let ds = load_or_build(cli)?;
+    let obj = cli.objective()?;
+    let overhead = OverheadModel::train_on_corpus(cli.config.scale, None);
+    let router = RunTimeOptimizer::train(&ds, obj, overhead);
+
+    let backend = if cli.config.artifacts_dir.join("manifest.tsv").exists() {
+        println!("backend: PJRT over {:?}", cli.config.artifacts_dir);
+        BackendSpec::Pjrt(cli.config.artifacts_dir.clone())
+    } else {
+        println!("backend: native (no artifacts at {:?})", cli.config.artifacts_dir);
+        BackendSpec::Native
+    };
+    let svc = Service::start(router, backend, ConvertParams { bell_bh: 8, bell_bw: 8, sell_h: 8 });
+
+    // serve products over a few small corpus matrices
+    let names = ["shar_te2-b3", "rim", "bcsstk32"];
+    let mut sizes = Vec::new();
+    for (id, name) in names.iter().enumerate() {
+        let coo = gen::by_name(name).unwrap().generate(1);
+        sizes.push(coo.n_cols);
+        let fmt = svc.register(id as u64, coo, 10_000)?;
+        println!("registered {name} -> {fmt}");
+    }
+    let t0 = std::time::Instant::now();
+    for r in 0..n_requests {
+        let id = r % names.len();
+        let x = vec![1.0f32; sizes[id]];
+        svc.product(id as u64, x)?;
+    }
+    let dt = t0.elapsed();
+    let stats = svc.stats()?;
+    println!(
+        "{} requests in {:.3}s ({:.1} req/s), mean {:.3} ms, max {:.3} ms, conversions {}",
+        stats.requests,
+        dt.as_secs_f64(),
+        stats.requests as f64 / dt.as_secs_f64(),
+        1e3 * stats.total_service.as_secs_f64() / stats.requests.max(1) as f64,
+        1e3 * stats.max_service.as_secs_f64(),
+        stats.conversions
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let cli = parse(&args(&["optimize", "--matrix", "rim", "--objective", "energy"])).unwrap();
+        assert_eq!(cli.command, "optimize");
+        assert_eq!(cli.flag("matrix"), Some("rim"));
+        assert_eq!(cli.flag("objective"), Some("energy"));
+    }
+
+    #[test]
+    fn config_overrides_via_flags() {
+        let cli = parse(&args(&["corpus", "--scale", "2", "--set", "seed=9"])).unwrap();
+        assert_eq!(cli.config.scale, 2);
+        assert_eq!(cli.config.seed, 9);
+    }
+
+    #[test]
+    fn rejects_empty_and_garbage() {
+        assert!(parse(&[]).is_err());
+        assert!(parse(&args(&["corpus", "positional"])).is_err());
+        assert!(run(&parse(&args(&["bogus"])).unwrap()).is_err());
+    }
+
+    #[test]
+    fn boolean_flags_default_true() {
+        let cli = parse(&args(&["serve", "--verbose"])).unwrap();
+        assert_eq!(cli.flag("verbose"), Some("true"));
+    }
+}

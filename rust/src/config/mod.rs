@@ -1,0 +1,175 @@
+//! Configuration system: a small `key = value` file format (TOML subset;
+//! the toml crate is not in the offline mirror) with CLI `--key value`
+//! overrides, resolved into the typed [`AppConfig`] that every CLI
+//! subcommand and example consumes.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Raw parsed key/value pairs.
+#[derive(Debug, Clone, Default)]
+pub struct RawConfig {
+    pub values: BTreeMap<String, String>,
+}
+
+impl RawConfig {
+    /// Parse `key = value` lines; `#` comments and blank lines ignored.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with('[') {
+                continue; // section headers tolerated for TOML compatibility
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", ln + 1))?;
+            let v = v.trim().trim_matches('"');
+            values.insert(k.trim().to_string(), v.to_string());
+        }
+        Ok(RawConfig { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?)
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}: bad integer {v}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.values.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("{key}: bad integer {v}")),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.values.get(key).map(String::as_str) {
+            None => Ok(default),
+            Some("true") | Some("1") => Ok(true),
+            Some("false") | Some("0") => Ok(false),
+            Some(v) => bail!("{key}: bad bool {v}"),
+        }
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.values.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+/// Typed application configuration.
+#[derive(Debug, Clone)]
+pub struct AppConfig {
+    /// Corpus scale multiplier.
+    pub scale: usize,
+    /// Sweep both GPU profiles.
+    pub both_archs: bool,
+    /// Global RNG seed.
+    pub seed: u64,
+    /// AutoML trials per model family.
+    pub automl_trials: usize,
+    /// Artifact directory for the PJRT runtime.
+    pub artifacts_dir: PathBuf,
+    /// Dataset TSV path.
+    pub dataset_path: PathBuf,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        AppConfig {
+            scale: 1,
+            both_archs: true,
+            seed: 0xA5BD,
+            automl_trials: 12,
+            artifacts_dir: crate::runtime::default_artifacts_dir(),
+            dataset_path: PathBuf::from("reports/dataset.tsv"),
+        }
+    }
+}
+
+impl AppConfig {
+    pub fn from_raw(raw: &RawConfig) -> Result<Self> {
+        let d = AppConfig::default();
+        Ok(AppConfig {
+            scale: raw.get_usize("scale", d.scale)?,
+            both_archs: raw.get_bool("both_archs", d.both_archs)?,
+            seed: raw.get_u64("seed", d.seed)?,
+            automl_trials: raw.get_usize("automl_trials", d.automl_trials)?,
+            artifacts_dir: PathBuf::from(
+                raw.get_str("artifacts_dir", d.artifacts_dir.to_str().unwrap()),
+            ),
+            dataset_path: PathBuf::from(
+                raw.get_str("dataset_path", d.dataset_path.to_str().unwrap()),
+            ),
+        })
+    }
+
+    /// Load `auto-spmv.toml` if present, then apply `--key value` pairs.
+    pub fn resolve(file: Option<&Path>, overrides: &[(String, String)]) -> Result<Self> {
+        let mut raw = match file {
+            Some(p) => RawConfig::load(p)?,
+            None => {
+                let default = Path::new("auto-spmv.toml");
+                if default.exists() {
+                    RawConfig::load(default)?
+                } else {
+                    RawConfig::default()
+                }
+            }
+        };
+        for (k, v) in overrides {
+            raw.set(k, v);
+        }
+        Self::from_raw(&raw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_kv_with_comments() {
+        let raw = RawConfig::parse("# c\nscale = 2\n[section]\nseed = \"7\"\n").unwrap();
+        assert_eq!(raw.get_usize("scale", 1).unwrap(), 2);
+        assert_eq!(raw.get_u64("seed", 0).unwrap(), 7);
+        assert_eq!(raw.get_usize("missing", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(RawConfig::parse("no equals sign").is_err());
+        let raw = RawConfig::parse("x = abc").unwrap();
+        assert!(raw.get_usize("x", 0).is_err());
+        assert!(raw.get_bool("x", false).is_err());
+    }
+
+    #[test]
+    fn typed_config_with_overrides() {
+        let cfg = AppConfig::resolve(
+            None,
+            &[("scale".into(), "3".into()), ("both_archs".into(), "false".into())],
+        )
+        .unwrap();
+        assert_eq!(cfg.scale, 3);
+        assert!(!cfg.both_archs);
+        assert_eq!(cfg.automl_trials, AppConfig::default().automl_trials);
+    }
+
+    #[test]
+    fn bool_forms() {
+        let raw = RawConfig::parse("a = 1\nb = false\n").unwrap();
+        assert!(raw.get_bool("a", false).unwrap());
+        assert!(!raw.get_bool("b", true).unwrap());
+    }
+}

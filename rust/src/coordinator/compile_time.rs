@@ -1,0 +1,138 @@
+//! Compile-time optimization mode (paper §5.2, Fig. 5a):
+//! 1. compute sparsity features;
+//! 2. predict optimal compile parameters (TB size, maxrregcount, memory
+//!    hierarchy config) with per-objective classifiers;
+//! 3. compile the CSR kernel with those parameters (here: select the
+//!    matching simulator configuration and/or AOT artifact variant).
+
+use crate::dataset::labels::{self, Example, Target};
+use crate::dataset::Dataset;
+use crate::features::Features;
+use crate::gpusim::{KernelConfig, MemConfig, Objective, MAXRREGCOUNT, TB_SIZES};
+use crate::ml::tree::DecisionTreeClassifier;
+use crate::ml::Classifier;
+use crate::sparse::Format;
+
+/// Predicted compile parameters for one objective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompileChoice {
+    pub tb_size: u32,
+    pub maxrregcount: u32,
+    pub mem: MemConfig,
+}
+
+impl CompileChoice {
+    /// Into a full kernel config with the compile-mode's fixed CSR format.
+    pub fn to_config(self) -> KernelConfig {
+        KernelConfig {
+            format: Format::Csr,
+            tb_size: self.tb_size,
+            maxrregcount: self.maxrregcount,
+            mem: self.mem,
+        }
+    }
+}
+
+/// Per-objective compile-parameter predictor (three decision trees, the
+/// paper's winning model family — Table 5).
+pub struct CompileTimeOptimizer {
+    pub objective: Objective,
+    tb_model: DecisionTreeClassifier,
+    reg_model: DecisionTreeClassifier,
+    mem_model: DecisionTreeClassifier,
+}
+
+impl CompileTimeOptimizer {
+    /// Train on a dataset (one example per matrix x arch).
+    pub fn train(ds: &Dataset, objective: Objective) -> Self {
+        let ex = labels::examples(ds, objective);
+        Self::train_on_examples(&ex, objective)
+    }
+
+    /// Train from pre-derived examples (lets callers share label work).
+    pub fn train_on_examples(ex: &[Example], objective: Objective) -> Self {
+        let fit = |target: Target| {
+            let (x, y) = labels::to_xy(ex, target);
+            let mut m = DecisionTreeClassifier::default();
+            m.fit(&x, &y);
+            m
+        };
+        CompileTimeOptimizer {
+            objective,
+            tb_model: fit(Target::TbSize),
+            reg_model: fit(Target::MaxRegCount),
+            mem_model: fit(Target::MemConfig),
+        }
+    }
+
+    /// Predict the compile parameters for an unseen matrix on a device.
+    pub fn predict(&self, f: &Features, arch: &str) -> CompileChoice {
+        let mut x = f.to_scaled_vec();
+        x.push(crate::dataset::labels::arch_feature(arch));
+        let tb = TB_SIZES[self.tb_model.predict_one(&x).min(TB_SIZES.len() - 1)];
+        let regs =
+            MAXRREGCOUNT[self.reg_model.predict_one(&x).min(MAXRREGCOUNT.len() - 1)];
+        let mem = MemConfig::from_class_id(self.mem_model.predict_one(&x))
+            .unwrap_or(MemConfig::Default);
+        CompileChoice { tb_size: tb, maxrregcount: regs, mem }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{build, BuildOptions};
+    use crate::features::extract_csr;
+    use crate::gen;
+
+    #[test]
+    fn trained_optimizer_beats_default_on_seen_matrices() {
+        let names = ["rim", "eu-2005", "consph", "crankseg_1", "amazon0601"];
+        let ds = build(&BuildOptions {
+            only: Some(names.iter().map(|s| s.to_string()).collect()),
+            both_archs: false,
+            ..Default::default()
+        });
+        let obj = Objective::Latency;
+        let opt = CompileTimeOptimizer::train(&ds, obj);
+
+        for name in names {
+            let entry = gen::by_name(name).unwrap();
+            let csr = entry.generate_csr(1);
+            let f = extract_csr(&csr);
+            let choice = opt.predict(&f, "GTX1650m-Turing");
+            // find the chosen and default configs in the sweep
+            let slice = ds.slice(name, "GTX1650m-Turing");
+            let chosen = slice
+                .iter()
+                .find(|r| r.config == choice.to_config())
+                .expect("choice in sweep");
+            let default = slice
+                .iter()
+                .find(|r| r.config == KernelConfig::default_baseline())
+                .unwrap();
+            assert!(
+                chosen.m.latency_s <= default.m.latency_s * 1.0001,
+                "{name}: chosen {} > default {}",
+                chosen.m.latency_s,
+                default.m.latency_s
+            );
+        }
+    }
+
+    #[test]
+    fn predicts_valid_choices() {
+        let ds = build(&BuildOptions {
+            only: Some(vec!["rim".into(), "cant".into()]),
+            both_archs: false,
+            ..Default::default()
+        });
+        for obj in Objective::ALL {
+            let opt = CompileTimeOptimizer::train(&ds, obj);
+            let f = ds.records[0].features;
+            let c = opt.predict(&f, "GTX1650m-Turing");
+            assert!(TB_SIZES.contains(&c.tb_size));
+            assert!(MAXRREGCOUNT.contains(&c.maxrregcount));
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Layer-3 coordinator — the Auto-SpMV framework proper (paper §5).
+//!
+//! * [`compile_time`] — §5.2: predict optimal compile parameters
+//!   (TB size, maxrregcount, memory config) from sparsity features.
+//! * [`run_time`] — §5.3: predict the optimal sparse format, estimate the
+//!   conversion overhead, and convert only when the predicted gain
+//!   exceeds it.
+//! * [`overhead`] — §7.5: regression models for f_latency / c_latency.
+//! * [`service`] — the serving loop: a threaded request router that
+//!   dispatches AOT-compiled SpMV executables via the PJRT runtime.
+
+pub mod compile_time;
+pub mod overhead;
+pub mod run_time;
+pub mod service;
+
+pub use compile_time::CompileTimeOptimizer;
+pub use overhead::OverheadModel;
+pub use run_time::{Decision, RunTimeOptimizer};

@@ -1,0 +1,315 @@
+//! SpMV serving loop — the deployable face of the run-time mode.
+//!
+//! A dedicated worker thread owns the PJRT [`Engine`] (executables are
+//! not shared across threads); clients submit requests over an mpsc
+//! channel and receive results on per-request reply channels. The worker
+//! routes each request through the trained [`RunTimeOptimizer`], converts
+//! the matrix when the overhead model approves (caching the converted
+//! form for subsequent products), and dispatches the matching AOT
+//! executable.
+//!
+//! (tokio is not available in the offline build environment — see
+//! Cargo.toml; std threads + channels implement the same request loop.)
+
+use super::run_time::RunTimeOptimizer;
+use crate::runtime::Engine;
+use crate::sparse::convert::{self, AnyFormat, ConvertParams};
+use crate::sparse::{Coo, Format, SpMv};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How products are executed. The PJRT client is not `Send`, so the
+/// worker thread constructs its own [`Engine`] from this spec.
+#[derive(Debug, Clone)]
+pub enum BackendSpec {
+    /// AOT-compiled kernels through PJRT (the production path).
+    Pjrt(std::path::PathBuf),
+    /// Native Rust SpMV (testing / environments without artifacts).
+    Native,
+}
+
+enum Backend {
+    Pjrt(Box<Engine>),
+    Native,
+}
+
+impl BackendSpec {
+    fn build(&self) -> Result<Backend> {
+        match self {
+            BackendSpec::Pjrt(dir) => Ok(Backend::Pjrt(Box::new(Engine::new(dir)?))),
+            BackendSpec::Native => Ok(Backend::Native),
+        }
+    }
+}
+
+/// One serving request: a matrix (by registered id) and an input vector.
+pub struct Request {
+    pub matrix_id: u64,
+    pub x: Vec<f32>,
+    pub reply: Sender<Result<Response>>,
+}
+
+/// Result of one product.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub y: Vec<f32>,
+    pub format_used: Format,
+    pub converted: bool,
+    pub service_time: Duration,
+}
+
+/// Registration message: provide a matrix once, serve many products.
+enum Msg {
+    Register { id: u64, coo: Coo, iterations_hint: u64, ack: Sender<Result<Format>> },
+    Product(Request),
+    Stats(Sender<ServiceStats>),
+    Shutdown,
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceStats {
+    pub requests: u64,
+    pub conversions: u64,
+    pub total_service: Duration,
+    pub max_service: Duration,
+}
+
+struct Served {
+    matrix: AnyFormat,
+    format: Format,
+    converted: bool,
+    /// Matrix-side kernel literals, marshalled once at registration
+    /// (EXPERIMENTS.md §Perf iteration 2).
+    prepared: Option<crate::runtime::pjrt::PreparedSpmv>,
+}
+
+/// Handle to a running service.
+pub struct Service {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Service {
+    /// Start the worker thread. `router` decides formats; `backend`
+    /// executes products (constructed inside the worker — PJRT handles
+    /// are not `Send`).
+    pub fn start(router: RunTimeOptimizer, backend: BackendSpec, convert: ConvertParams) -> Service {
+        let (tx, rx) = channel::<Msg>();
+        let worker = std::thread::spawn(move || {
+            let backend = match backend.build() {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("service backend init failed, falling back to native: {e:#}");
+                    Backend::Native
+                }
+            };
+            worker_loop(rx, router, backend, convert)
+        });
+        Service { tx, worker: Some(worker) }
+    }
+
+    /// Register a matrix; returns the format the router chose for it.
+    pub fn register(&self, id: u64, coo: Coo, iterations_hint: u64) -> Result<Format> {
+        let (ack, rx) = channel();
+        self.tx
+            .send(Msg::Register { id, coo, iterations_hint, ack })
+            .map_err(|_| anyhow!("service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("service dropped request"))?
+    }
+
+    /// Submit a product request; blocks for the response.
+    pub fn product(&self, matrix_id: u64, x: Vec<f32>) -> Result<Response> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Product(Request { matrix_id, x, reply }))
+            .map_err(|_| anyhow!("service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("service dropped request"))?
+    }
+
+    /// Submit without waiting; the receiver yields the response later
+    /// (lets callers pipeline many requests).
+    pub fn product_async(&self, matrix_id: u64, x: Vec<f32>) -> Result<Receiver<Result<Response>>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Product(Request { matrix_id, x, reply }))
+            .map_err(|_| anyhow!("service stopped"))?;
+        Ok(rx)
+    }
+
+    pub fn stats(&self) -> Result<ServiceStats> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Stats(tx)).map_err(|_| anyhow!("service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("service dropped request"))
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Receiver<Msg>,
+    router: RunTimeOptimizer,
+    mut backend: Backend,
+    params: ConvertParams,
+) {
+    let mut served: HashMap<u64, Served> = HashMap::new();
+    let mut stats = ServiceStats::default();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Register { id, coo, iterations_hint, ack } => {
+                let result = (|| -> Result<Format> {
+                    let decision = router.decide(&coo, iterations_hint);
+                    let csr = convert::coo_to_csr(&coo);
+                    let (fmt, converted) = if decision.convert {
+                        (decision.predicted_format, true)
+                    } else {
+                        (Format::Csr, false)
+                    };
+                    let matrix = convert::convert(&csr, fmt, params);
+                    if converted {
+                        stats.conversions += 1;
+                    }
+                    let prepared = match &mut backend {
+                        Backend::Pjrt(engine) => Some(engine.prepare(&matrix, None)?),
+                        Backend::Native => None,
+                    };
+                    served.insert(id, Served { matrix, format: fmt, converted, prepared });
+                    Ok(fmt)
+                })();
+                let _ = ack.send(result);
+            }
+            Msg::Product(req) => {
+                let t0 = Instant::now();
+                let result = (|| -> Result<Response> {
+                    let s = served
+                        .get(&req.matrix_id)
+                        .ok_or_else(|| anyhow!("unknown matrix id {}", req.matrix_id))?;
+                    let y = match &mut backend {
+                        Backend::Pjrt(engine) => match &s.prepared {
+                            Some(prep) => engine.run_prepared(prep, &req.x)?,
+                            None => engine.spmv(&s.matrix, &req.x, None)?,
+                        },
+                        Backend::Native => {
+                            let m = s.matrix.as_spmv();
+                            if req.x.len() != m.n_cols() {
+                                return Err(anyhow!(
+                                    "x length {} != n_cols {}",
+                                    req.x.len(),
+                                    m.n_cols()
+                                ));
+                            }
+                            m.spmv_alloc(&req.x)
+                        }
+                    };
+                    let service_time = t0.elapsed();
+                    Ok(Response { y, format_used: s.format, converted: s.converted, service_time })
+                })();
+                if let Ok(r) = &result {
+                    stats.requests += 1;
+                    stats.total_service += r.service_time;
+                    stats.max_service = stats.max_service.max(r.service_time);
+                }
+                let _ = req.reply.send(result);
+            }
+            Msg::Stats(tx) => {
+                let _ = tx.send(stats.clone());
+            }
+            Msg::Shutdown => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::overhead::{OverheadModel, OverheadSample};
+    use crate::dataset::{build, BuildOptions};
+    use crate::gen;
+    use crate::gpusim::Objective;
+
+    fn test_service() -> Service {
+        let ds = build(&BuildOptions {
+            only: Some(vec!["rim".into(), "eu-2005".into()]),
+            both_archs: false,
+            ..Default::default()
+        });
+        let samples: Vec<OverheadSample> = (1..10)
+            .map(|k| OverheadSample {
+                n: k as f64 * 1000.0,
+                nnz: k as f64 * 10_000.0,
+                f_latency_s: k as f64 * 1e-3,
+                c_latency_s: k as f64 * 1e-3,
+            })
+            .collect();
+        let router = RunTimeOptimizer::train(&ds, Objective::Latency, OverheadModel::train(&samples));
+        Service::start(router, BackendSpec::Native, ConvertParams::default())
+    }
+
+    #[test]
+    fn serves_correct_products() {
+        let svc = test_service();
+        let entry = gen::by_name("rim").unwrap();
+        let coo = entry.generate(1);
+        let csr = convert::coo_to_csr(&coo);
+        svc.register(1, coo, 1).unwrap();
+        let x: Vec<f32> = (0..csr.n_cols).map(|i| ((i % 7) as f32) - 3.0).collect();
+        let want = csr.spmv_alloc(&x);
+        let resp = svc.product(1, x).unwrap();
+        assert_eq!(resp.y.len(), want.len());
+        for (a, b) in resp.y.iter().zip(&want) {
+            assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn unknown_matrix_is_error() {
+        let svc = test_service();
+        let err = svc.product(99, vec![1.0]).unwrap_err();
+        assert!(format!("{err}").contains("unknown matrix"));
+    }
+
+    #[test]
+    fn wrong_x_length_is_error_not_panic() {
+        let svc = test_service();
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        svc.register(7, coo, 1).unwrap();
+        assert!(svc.product(7, vec![1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let svc = test_service();
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        let n = coo.n_cols;
+        svc.register(1, coo, 1).unwrap();
+        for _ in 0..5 {
+            svc.product(1, vec![1.0; n]).unwrap();
+        }
+        let s = svc.stats().unwrap();
+        assert_eq!(s.requests, 5);
+        assert!(s.total_service >= s.max_service);
+    }
+
+    #[test]
+    fn pipelined_async_requests() {
+        let svc = test_service();
+        let coo = gen::by_name("eu-2005").unwrap().generate(1);
+        let n = coo.n_cols;
+        svc.register(2, coo, 100).unwrap();
+        let rxs: Vec<_> =
+            (0..8).map(|_| svc.product_async(2, vec![0.5; n]).unwrap()).collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Dataset construction — the paper's §6 protocol: sweep every corpus
+//! matrix over the full configuration space on both GPU profiles, record
+//! the four objectives per run, and derive the classification labels
+//! (best TB size / maxrregcount / memory config / format per objective).
+
+pub mod labels;
+pub mod store;
+
+use crate::features::{extract_csr, Features};
+use crate::gen::{corpus, CorpusEntry};
+use crate::gpusim::{
+    measure, pascal_gtx1080, profile_all, turing_gtx1650m, GpuArch, KernelConfig, Measurement,
+};
+use crate::sparse::convert::ConvertParams;
+
+/// One dataset record: a (matrix, architecture, configuration) run.
+#[derive(Debug, Clone)]
+pub struct Record {
+    pub matrix: String,
+    pub arch: String,
+    pub config: KernelConfig,
+    pub features: Features,
+    pub m: Measurement,
+}
+
+/// The full training dataset.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub records: Vec<Record>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Records of one matrix on one architecture.
+    pub fn slice<'a>(&'a self, matrix: &str, arch: &str) -> Vec<&'a Record> {
+        self.records
+            .iter()
+            .filter(|r| r.matrix == matrix && r.arch == arch)
+            .collect()
+    }
+
+    pub fn matrices(&self) -> Vec<String> {
+        let mut v: Vec<String> = Vec::new();
+        for r in &self.records {
+            if !v.contains(&r.matrix) {
+                v.push(r.matrix.clone());
+            }
+        }
+        v
+    }
+
+    pub fn archs(&self) -> Vec<String> {
+        let mut v: Vec<String> = Vec::new();
+        for r in &self.records {
+            if !v.contains(&r.arch) {
+                v.push(r.arch.clone());
+            }
+        }
+        v
+    }
+}
+
+/// Dataset build options.
+#[derive(Debug, Clone)]
+pub struct BuildOptions {
+    /// Corpus scale multiplier (1 = CI scale, see gen::corpus).
+    pub scale: usize,
+    /// Architectures to sweep (paper: Turing + Pascal).
+    pub both_archs: bool,
+    /// Optional subset of matrix names (None = all 30).
+    pub only: Option<Vec<String>>,
+    pub convert: ConvertParams,
+}
+
+impl Default for BuildOptions {
+    fn default() -> Self {
+        BuildOptions { scale: 1, both_archs: true, only: None, convert: ConvertParams::default() }
+    }
+}
+
+/// Build the dataset: every (matrix x arch x config) run (§6.1: 30
+/// matrices, >15k records over two GPUs).
+pub fn build(opts: &BuildOptions) -> Dataset {
+    let archs: Vec<GpuArch> = if opts.both_archs {
+        vec![turing_gtx1650m(), pascal_gtx1080()]
+    } else {
+        vec![turing_gtx1650m()]
+    };
+    let entries: Vec<CorpusEntry> = corpus()
+        .into_iter()
+        .filter(|e| {
+            opts.only
+                .as_ref()
+                .is_none_or(|names| names.iter().any(|n| n == e.name))
+        })
+        .collect();
+
+    let mut records = Vec::new();
+    for entry in &entries {
+        let csr = entry.generate_csr(opts.scale);
+        let features = extract_csr(&csr);
+        // one profile per format; the reuse curve is computed once
+        let profiles = profile_all(&csr, opts.convert);
+        for arch in &archs {
+            for cfg in KernelConfig::sweep_all() {
+                let prof = &profiles[cfg.format.class_id()];
+                let m = measure(arch, prof, &cfg);
+                records.push(Record {
+                    matrix: entry.name.to_string(),
+                    arch: arch.name.to_string(),
+                    config: cfg,
+                    features,
+                    m,
+                });
+            }
+        }
+    }
+    Dataset { records }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        build(&BuildOptions {
+            only: Some(vec!["rim".into(), "consph".into()]),
+            both_archs: true,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn record_counts_match_sweep() {
+        let d = tiny();
+        // 2 matrices x 2 archs x 240 configs
+        assert_eq!(d.len(), 2 * 2 * 240);
+        assert_eq!(d.matrices().len(), 2);
+        assert_eq!(d.archs().len(), 2);
+    }
+
+    #[test]
+    fn slice_selects_matrix_arch() {
+        let d = tiny();
+        let s = d.slice("rim", "GTX1650m-Turing");
+        assert_eq!(s.len(), 240);
+        assert!(s.iter().all(|r| r.matrix == "rim"));
+    }
+
+    #[test]
+    fn objectives_vary_across_configs() {
+        // the learning problem must be non-trivial: different configs give
+        // different objective values
+        let d = tiny();
+        let s = d.slice("consph", "GTX1650m-Turing");
+        let lats: Vec<f64> = s.iter().map(|r| r.m.latency_s).collect();
+        let min = lats.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = lats.iter().cloned().fold(0.0f64, f64::max);
+        assert!(max > 1.2 * min, "config choice must matter: {min} .. {max}");
+    }
+
+    #[test]
+    fn full_dataset_size_matches_paper_scale() {
+        // 30 x 2 x 240 = 14400 records (paper: 15520; see DESIGN.md §1)
+        let opts = BuildOptions::default();
+        let n_configs = KernelConfig::sweep_all().len();
+        assert_eq!(30 * 2 * n_configs, 14400);
+        let _ = opts;
+    }
+}

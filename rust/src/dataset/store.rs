@@ -1,0 +1,136 @@
+//! TSV persistence for the dataset ("Dataset, code, and configuration
+//! parameters will be available" — the paper's release artifact).
+
+use super::{Dataset, Record};
+use crate::features::Features;
+use crate::gpusim::{KernelConfig, Measurement, MemConfig};
+use crate::sparse::Format;
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+const HEADER: &str = "matrix\tarch\tformat\ttb\tregs\tmem\tn\tnnz\tavg_nnz\tvar_nnz\tell_ratio\tmedian\tmode\tstd_nnz\tlatency_s\tenergy_j\tavg_power_w\tmflops_per_watt";
+
+/// Write a dataset as TSV.
+pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {path:?}"))?,
+    );
+    writeln!(f, "{HEADER}")?;
+    for r in &ds.records {
+        writeln!(
+            f,
+            "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{:e}\t{:e}\t{:e}\t{:e}",
+            r.matrix,
+            r.arch,
+            r.config.format,
+            r.config.tb_size,
+            r.config.maxrregcount,
+            r.config.mem.name(),
+            r.features.n,
+            r.features.nnz,
+            r.features.avg_nnz,
+            r.features.var_nnz,
+            r.features.ell_ratio,
+            r.features.median,
+            r.features.mode,
+            r.features.std_nnz,
+            r.m.latency_s,
+            r.m.energy_j,
+            r.m.avg_power_w,
+            r.m.mflops_per_watt,
+        )?;
+    }
+    Ok(())
+}
+
+/// Load a dataset from TSV.
+pub fn load(path: &Path) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+    let mut lines = text.lines();
+    let header = lines.next().context("empty dataset file")?;
+    if header != HEADER {
+        bail!("unexpected dataset header: {header}");
+    }
+    let mut records = Vec::new();
+    for (ln, line) in lines.enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        let c: Vec<&str> = line.split('\t').collect();
+        if c.len() != 18 {
+            bail!("line {}: expected 18 columns, got {}", ln + 2, c.len());
+        }
+        let fmt = Format::parse(c[2]).with_context(|| format!("bad format {}", c[2]))?;
+        let mem = MemConfig::parse(c[5]).with_context(|| format!("bad mem {}", c[5]))?;
+        let p = |s: &str| -> Result<f64> { s.parse().with_context(|| format!("bad float {s}")) };
+        records.push(Record {
+            matrix: c[0].to_string(),
+            arch: c[1].to_string(),
+            config: KernelConfig {
+                format: fmt,
+                tb_size: c[3].parse()?,
+                maxrregcount: c[4].parse()?,
+                mem,
+            },
+            features: Features {
+                n: p(c[6])?,
+                nnz: p(c[7])?,
+                avg_nnz: p(c[8])?,
+                var_nnz: p(c[9])?,
+                ell_ratio: p(c[10])?,
+                median: p(c[11])?,
+                mode: p(c[12])?,
+                std_nnz: p(c[13])?,
+            },
+            m: Measurement {
+                latency_s: p(c[14])?,
+                energy_j: p(c[15])?,
+                avg_power_w: p(c[16])?,
+                mflops_per_watt: p(c[17])?,
+            },
+        });
+    }
+    Ok(Dataset { records })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{build, BuildOptions};
+
+    #[test]
+    fn roundtrip_preserves_records() {
+        let ds = build(&BuildOptions {
+            only: Some(vec!["rim".into()]),
+            both_archs: false,
+            ..Default::default()
+        });
+        let tmp = std::env::temp_dir().join("autospmv_ds_test.tsv");
+        save(&ds, &tmp).unwrap();
+        let back = load(&tmp).unwrap();
+        assert_eq!(back.len(), ds.len());
+        for (a, b) in ds.records.iter().zip(&back.records) {
+            assert_eq!(a.matrix, b.matrix);
+            assert_eq!(a.config, b.config);
+            assert!((a.m.latency_s - b.m.latency_s).abs() < 1e-12 * a.m.latency_s.abs());
+        }
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_header() {
+        let tmp = std::env::temp_dir().join("autospmv_bad_header.tsv");
+        std::fs::write(&tmp, "nope\n").unwrap();
+        assert!(load(&tmp).is_err());
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn load_rejects_short_rows() {
+        let tmp = std::env::temp_dir().join("autospmv_bad_row.tsv");
+        std::fs::write(&tmp, format!("{HEADER}\na\tb\tc\n")).unwrap();
+        assert!(load(&tmp).is_err());
+        std::fs::remove_file(tmp).ok();
+    }
+}

@@ -1,0 +1,232 @@
+//! Sparsity-feature extraction — the paper's Table 2, all eight features.
+//!
+//! Features are extracted on the CPU at run time (paper §5.3 step 1); the
+//! extraction wall time is `f_latency` in Table 7, so [`extract_timed`]
+//! returns it alongside the features. The implementation is a single pass
+//! over the row-length histogram (see EXPERIMENTS.md §Perf for the
+//! optimization log).
+
+use crate::sparse::{Coo, Csr};
+use std::time::{Duration, Instant};
+
+/// The eight sparsity features of Table 2, in the paper's order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Features {
+    /// n — number of rows.
+    pub n: f64,
+    /// nnz — number of non-zero elements.
+    pub nnz: f64,
+    /// Avg_nnz — mean non-zeros per row.
+    pub avg_nnz: f64,
+    /// Var_nnz — variance of non-zeros per row.
+    pub var_nnz: f64,
+    /// ELL_ratio — nnz / (n * max_row_len): padding efficiency in ELL.
+    pub ell_ratio: f64,
+    /// Median of non-zeros per row.
+    pub median: f64,
+    /// Mode of non-zeros per row.
+    pub mode: f64,
+    /// Std_nnz — standard deviation of non-zeros per row.
+    pub std_nnz: f64,
+}
+
+pub const FEATURE_NAMES: [&str; 8] =
+    ["n", "nnz", "Avg_nnz", "Var_nnz", "ELL_ratio", "Median", "Mode", "Std_nnz"];
+
+impl Features {
+    /// Feature vector in Table 2 order (the ML input layout).
+    pub fn to_vec(&self) -> Vec<f64> {
+        vec![
+            self.n, self.nnz, self.avg_nnz, self.var_nnz,
+            self.ell_ratio, self.median, self.mode, self.std_nnz,
+        ]
+    }
+
+    /// Log-scaled variant used by the learners: n/nnz/var span orders of
+    /// magnitude, so models train on log1p of the unbounded features.
+    pub fn to_scaled_vec(&self) -> Vec<f64> {
+        vec![
+            self.n.ln_1p(),
+            self.nnz.ln_1p(),
+            self.avg_nnz.ln_1p(),
+            self.var_nnz.ln_1p(),
+            self.ell_ratio,
+            self.median.ln_1p(),
+            self.mode.ln_1p(),
+            self.std_nnz.ln_1p(),
+        ]
+    }
+}
+
+/// Compute all eight features from per-row non-zero counts.
+fn from_row_counts(n: usize, counts: &[u32]) -> Features {
+    debug_assert_eq!(counts.len(), n);
+    if n == 0 {
+        return Features {
+            n: 0.0, nnz: 0.0, avg_nnz: 0.0, var_nnz: 0.0,
+            ell_ratio: 0.0, median: 0.0, mode: 0.0, std_nnz: 0.0,
+        };
+    }
+    let nnz: u64 = counts.iter().map(|&c| c as u64).sum();
+    let avg = nnz as f64 / n as f64;
+
+    // single pass: variance accumulator + max + histogram for mode
+    let mut sum_sq = 0.0f64;
+    let mut max_len = 0u32;
+    for &c in counts {
+        let d = c as f64 - avg;
+        sum_sq += d * d;
+        max_len = max_len.max(c);
+    }
+    let var = sum_sq / n as f64;
+
+    // histogram over 0..=max_len (row lengths are small integers)
+    let mut hist = vec![0u32; max_len as usize + 1];
+    for &c in counts {
+        hist[c as usize] += 1;
+    }
+    // mode: most frequent row length (smallest on ties, matching
+    // scipy.stats.mode semantics the paper's pipeline used)
+    let mode = hist
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+        .map(|(len, _)| len as f64)
+        .unwrap_or(0.0);
+    // median via histogram walk
+    let median = {
+        let half = (n as u64).div_ceil(2);
+        let mut acc = 0u64;
+        let mut med = 0f64;
+        for (len, &cnt) in hist.iter().enumerate() {
+            acc += cnt as u64;
+            if acc >= half {
+                med = len as f64;
+                // even n and boundary exactly at half: average with next occupied bin
+                if n % 2 == 0 && acc == half {
+                    let next = hist[len + 1..].iter().position(|&c| c > 0);
+                    if let Some(off) = next {
+                        med = (len as f64 + (len + 1 + off) as f64) / 2.0;
+                    }
+                }
+                break;
+            }
+        }
+        med
+    };
+
+    let ell_ratio = if max_len == 0 { 0.0 } else { nnz as f64 / (n as f64 * max_len as f64) };
+
+    Features {
+        n: n as f64,
+        nnz: nnz as f64,
+        avg_nnz: avg,
+        var_nnz: var,
+        ell_ratio,
+        median,
+        mode,
+        std_nnz: var.sqrt(),
+    }
+}
+
+/// Extract features from a CSR matrix.
+pub fn extract_csr(a: &Csr) -> Features {
+    let counts: Vec<u32> = (0..a.n_rows).map(|i| a.row_len(i) as u32).collect();
+    from_row_counts(a.n_rows, &counts)
+}
+
+/// Extract features from a COO matrix (the run-time mode's input format).
+pub fn extract_coo(a: &Coo) -> Features {
+    from_row_counts(a.n_rows, &a.row_counts())
+}
+
+/// Extract features and report wall time (`f_latency` of Table 7).
+pub fn extract_timed(a: &Coo) -> (Features, Duration) {
+    let t0 = Instant::now();
+    let f = extract_coo(a);
+    (f, t0.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coo_with_rows(rows: &[usize]) -> Coo {
+        // build a matrix whose row i has rows[i] entries
+        let n = rows.len();
+        let m = rows.iter().copied().max().unwrap_or(1).max(1);
+        let mut a = Coo::new(n, m);
+        for (r, &k) in rows.iter().enumerate() {
+            for c in 0..k {
+                a.push(r, c, 1.0);
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn features_hand_computed() {
+        // rows: 2, 0, 4 -> n=3 nnz=6 avg=2 var=((0)+(4)+(4))/3=8/3
+        let f = extract_coo(&coo_with_rows(&[2, 0, 4]));
+        assert_eq!(f.n, 3.0);
+        assert_eq!(f.nnz, 6.0);
+        assert_eq!(f.avg_nnz, 2.0);
+        assert!((f.var_nnz - 8.0 / 3.0).abs() < 1e-12);
+        assert!((f.std_nnz - (8.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(f.ell_ratio, 6.0 / 12.0);
+        assert_eq!(f.median, 2.0);
+    }
+
+    #[test]
+    fn median_odd_and_even() {
+        assert_eq!(extract_coo(&coo_with_rows(&[1, 2, 3])).median, 2.0);
+        assert_eq!(extract_coo(&coo_with_rows(&[1, 1, 3, 3])).median, 2.0);
+        assert_eq!(extract_coo(&coo_with_rows(&[1, 1, 1, 3])).median, 1.0);
+    }
+
+    #[test]
+    fn mode_most_frequent_smallest_tie() {
+        assert_eq!(extract_coo(&coo_with_rows(&[2, 2, 5, 5, 5])).mode, 5.0);
+        // tie between 2 and 5 -> smallest
+        assert_eq!(extract_coo(&coo_with_rows(&[2, 2, 5, 5])).mode, 2.0);
+    }
+
+    #[test]
+    fn csr_and_coo_agree() {
+        let coo = coo_with_rows(&[3, 1, 4, 1, 5]);
+        let csr = crate::sparse::convert::coo_to_csr(&coo);
+        assert_eq!(extract_coo(&coo), extract_csr(&csr));
+    }
+
+    #[test]
+    fn empty_matrix_is_all_zero() {
+        let f = extract_coo(&Coo::new(0, 0));
+        assert_eq!(f.to_vec(), vec![0.0; 8]);
+    }
+
+    #[test]
+    fn uniform_rows_have_zero_variance_and_ratio_one() {
+        let f = extract_coo(&coo_with_rows(&[4, 4, 4, 4]));
+        assert_eq!(f.var_nnz, 0.0);
+        assert_eq!(f.ell_ratio, 1.0);
+        assert_eq!(f.mode, 4.0);
+    }
+
+    #[test]
+    fn vec_layouts() {
+        let f = extract_coo(&coo_with_rows(&[2, 4]));
+        assert_eq!(f.to_vec().len(), 8);
+        assert_eq!(f.to_scaled_vec().len(), 8);
+        assert_eq!(FEATURE_NAMES.len(), 8);
+        // scaled: ell_ratio passes through unscaled
+        assert_eq!(f.to_scaled_vec()[4], f.ell_ratio);
+    }
+
+    #[test]
+    fn timed_extraction_returns_features() {
+        let coo = coo_with_rows(&[1, 2, 3, 4, 5]);
+        let (f, d) = extract_timed(&coo);
+        assert_eq!(f, extract_coo(&coo));
+        assert!(d.as_nanos() > 0);
+    }
+}

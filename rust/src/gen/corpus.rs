@@ -1,0 +1,180 @@
+//! The 30-matrix benchmark corpus — the SuiteSparse stand-in.
+//!
+//! One synthetic matrix per matrix in the paper's Table 7, same names,
+//! same ascending-nnz order, matched structure class (DESIGN.md §1), with
+//! sizes scaled down ~64x so the full 15k-record sweep runs in CI. The
+//! `scale` parameter (1 = default CI scale) lets `--full-scale` runs
+//! regenerate paper-sized matrices for the Table 7 overhead experiment.
+
+use super::patterns;
+use super::rng::Rng;
+use crate::sparse::{convert::coo_to_csr, Coo, Csr};
+
+/// Structure class of a corpus matrix (drives generator choice).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Class {
+    Banded { half_band: usize, avg: f64 },
+    Diagonals { k: usize, spread: usize, density: f64 },
+    Uniform { avg: f64 },
+    PowerLaw { alpha: f64, avg: f64, max_frac: f64 },
+    Blocks { bh: usize, bw: usize, per_brow: f64, band: usize, fill: f64 },
+    Bimodal { light: f64, heavy: f64, frac: f64 },
+    Clustered { avg: f64, cluster: usize },
+}
+
+/// A named corpus entry.
+#[derive(Debug, Clone)]
+pub struct CorpusEntry {
+    /// SuiteSparse name this entry mirrors (Table 7).
+    pub name: &'static str,
+    /// Base dimension at scale 1.
+    pub n: usize,
+    pub class: Class,
+    pub seed: u64,
+}
+
+impl CorpusEntry {
+    /// Generate the COO matrix at the given scale multiplier.
+    pub fn generate(&self, scale: usize) -> Coo {
+        let n = self.n * scale.max(1);
+        let mut rng = Rng::new(self.seed);
+        match self.class {
+            Class::Banded { half_band, avg } => {
+                patterns::banded(&mut rng, n, half_band * scale.max(1), avg)
+            }
+            Class::Diagonals { k, spread, density } => {
+                let mut offsets: Vec<i64> = vec![0];
+                for i in 1..=(k / 2) {
+                    let o = (i * spread * scale.max(1)) as i64;
+                    offsets.push(o);
+                    offsets.push(-o);
+                }
+                patterns::diagonals(&mut rng, n, &offsets, density)
+            }
+            Class::Uniform { avg } => patterns::uniform(&mut rng, n, n, avg),
+            Class::PowerLaw { alpha, avg, max_frac } => {
+                let max_row = ((n as f64 * max_frac) as usize).max(8);
+                patterns::powerlaw(&mut rng, n, n, alpha, avg, max_row)
+            }
+            Class::Blocks { bh, bw, per_brow, band, fill } => {
+                patterns::blocks(&mut rng, n, bh, bw, per_brow, band, fill)
+            }
+            Class::Bimodal { light, heavy, frac } => {
+                patterns::bimodal(&mut rng, n, n, light, heavy, frac)
+            }
+            Class::Clustered { avg, cluster } => {
+                patterns::clustered(&mut rng, n, n, avg, cluster)
+            }
+        }
+    }
+
+    /// Generate directly as CSR (the framework's working format).
+    pub fn generate_csr(&self, scale: usize) -> Csr {
+        coo_to_csr(&self.generate(scale))
+    }
+}
+
+/// The 30 corpus matrices, ascending target nnz (paper Table 7 order).
+pub fn corpus() -> Vec<CorpusEntry> {
+    use Class::*;
+    let e = |name, n, class, seed| CorpusEntry { name, n, class, seed };
+    vec![
+        e("shar_te2-b3", 3200, Uniform { avg: 4.0 }, 101),
+        e("rim", 1400, Banded { half_band: 24, avg: 11.0 }, 102),
+        e("bcsstk32", 1200, Blocks { bh: 4, bw: 4, per_brow: 3.0, band: 10, fill: 0.9 }, 103),
+        e("il2010", 3600, PowerLaw { alpha: 1.6, avg: 5.0, max_frac: 0.02 }, 104),
+        e("viscorocks", 1300, Blocks { bh: 4, bw: 4, per_brow: 3.5, band: 8, fill: 0.85 }, 105),
+        e("cant", 1600, Banded { half_band: 32, avg: 20.0 }, 106),
+        e("parabolic_fem", 5200, Diagonals { k: 7, spread: 18, density: 0.98 }, 107),
+        e("pkustk04", 1500, Blocks { bh: 8, bw: 8, per_brow: 2.8, band: 6, fill: 0.92 }, 108),
+        e("apache2", 5600, Diagonals { k: 7, spread: 30, density: 0.99 }, 109),
+        e("consph", 1700, Blocks { bh: 3, bw: 3, per_brow: 6.0, band: 14, fill: 0.88 }, 110),
+        e("wiki-talk-temporal", 8000, PowerLaw { alpha: 2.1, avg: 6.0, max_frac: 0.08 }, 111),
+        e("amazon0601", 6400, PowerLaw { alpha: 1.5, avg: 8.0, max_frac: 0.01 }, 112),
+        e("Chevron3", 4200, Banded { half_band: 40, avg: 12.5 }, 113),
+        e("xenon2", 2500, Banded { half_band: 48, avg: 24.0 }, 114),
+        e("x104", 1800, Blocks { bh: 8, bw: 8, per_brow: 5.5, band: 8, fill: 0.95 }, 115),
+        e("crankseg_1", 1400, Blocks { bh: 8, bw: 8, per_brow: 9.0, band: 12, fill: 0.93 }, 116),
+        e("Si87H76", 1500, Clustered { avg: 57.0, cluster: 48 }, 117),
+        e("Hamrle3", 7200, Bimodal { light: 3.0, heavy: 30.0, frac: 0.12 }, 118),
+        e("pwtk", 2600, Banded { half_band: 40, avg: 36.0 }, 119),
+        e("Chevron4", 6000, Banded { half_band: 44, avg: 16.5 }, 120),
+        e("Hardesty1", 5400, Bimodal { light: 8.0, heavy: 44.0, frac: 0.15 }, 121),
+        e("rgg_n_2_20_s0", 7000, Uniform { avg: 15.0 }, 122),
+        e("crankseg_2", 1600, Blocks { bh: 8, bw: 8, per_brow: 10.5, band: 12, fill: 0.94 }, 123),
+        e("CurlCurl_3", 3800, Banded { half_band: 56, avg: 30.0 }, 124),
+        e("human_gene2", 1200, Clustered { avg: 118.0, cluster: 64 }, 125),
+        e("af_shell6", 3200, Blocks { bh: 5, bw: 5, per_brow: 7.0, band: 10, fill: 0.9 }, 126),
+        e("atmosmodm", 9000, Diagonals { k: 7, spread: 42, density: 1.0 }, 127),
+        e("kim2", 4400, Banded { half_band: 64, avg: 40.0 }, 128),
+        e("test1", 5000, Uniform { avg: 41.0 }, 129),
+        e("eu-2005", 6800, PowerLaw { alpha: 1.9, avg: 44.0, max_frac: 0.1 }, 130),
+    ]
+}
+
+/// Look up a corpus entry by name.
+pub fn by_name(name: &str) -> Option<CorpusEntry> {
+    corpus().into_iter().find(|e| e.name == name)
+}
+
+/// The six matrices re-measured on the Pascal GPU in §7.6 / Fig. 12.
+pub const GPU_SENSITIVITY_SET: [&str; 6] =
+    ["amazon0601", "crankseg_2", "bcsstk32", "x104", "il2010", "Chevron3"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Storage;
+
+    #[test]
+    fn corpus_has_30_unique_names() {
+        let c = corpus();
+        assert_eq!(c.len(), 30);
+        let names: std::collections::HashSet<_> = c.iter().map(|e| e.name).collect();
+        assert_eq!(names.len(), 30);
+    }
+
+    #[test]
+    fn nnz_roughly_ascending() {
+        // Table 7 is sorted by nnz; allow local jitter but require a
+        // strong global trend (rank correlation > 0.8).
+        let c = corpus();
+        let nnz: Vec<usize> = c.iter().map(|e| e.generate(1).nnz()).collect();
+        let n = nnz.len();
+        let mut concordant = 0i64;
+        let mut total = 0i64;
+        for i in 0..n {
+            for j in i + 1..n {
+                total += 1;
+                if nnz[j] >= nnz[i] {
+                    concordant += 1;
+                }
+            }
+        }
+        let tau = concordant as f64 / total as f64;
+        assert!(tau > 0.8, "corpus should be roughly nnz-ascending, tau {tau}");
+    }
+
+    #[test]
+    fn sensitivity_set_exists() {
+        for name in GPU_SENSITIVITY_SET {
+            assert!(by_name(name).is_some(), "{name} missing");
+        }
+        assert!(by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let e = by_name("consph").unwrap();
+        assert_eq!(e.generate(1), e.generate(1));
+    }
+
+    #[test]
+    fn scale_grows_matrix() {
+        let e = by_name("rim").unwrap();
+        let s1 = e.generate(1);
+        let s2 = e.generate(2);
+        assert_eq!(s2.n_rows, 2 * s1.n_rows);
+        assert!(s2.nnz() > s1.nnz());
+    }
+}

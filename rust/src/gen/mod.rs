@@ -1,0 +1,10 @@
+//! Synthetic sparse-matrix generation: RNG, pattern generators, and the
+//! 30-matrix corpus standing in for the paper's SuiteSparse selection
+//! (§6.1; substitution rationale in DESIGN.md §1).
+
+pub mod corpus;
+pub mod patterns;
+pub mod rng;
+
+pub use corpus::{by_name, corpus, CorpusEntry, Class, GPU_SENSITIVITY_SET};
+pub use rng::Rng;

@@ -1,0 +1,268 @@
+//! Synthetic sparsity-pattern generators.
+//!
+//! Each generator reproduces the row-length distribution and spatial
+//! structure of one *class* of SuiteSparse matrix (DESIGN.md §1): which
+//! sparse format wins on a matrix is governed by exactly these properties
+//! (paper §5.5), so matched structure classes preserve the learning
+//! problem. All generators emit sorted, duplicate-free COO.
+
+use super::rng::Rng;
+use crate::sparse::Coo;
+
+/// Dedup + sort helper: generators may propose duplicates; SpMV semantics
+/// would accumulate them, but SuiteSparse matrices are duplicate-free, so
+/// we keep the last value per (row, col).
+fn finalize(mut coo: Coo) -> Coo {
+    coo.sort();
+    let mut out = Coo::with_capacity(coo.n_rows, coo.n_cols, coo.len());
+    let mut last: Option<(u32, u32)> = None;
+    for i in 0..coo.len() {
+        let key = (coo.rows[i], coo.cols[i]);
+        if last == Some(key) {
+            let n = out.len();
+            out.vals[n - 1] = coo.vals[i];
+        } else {
+            out.push(coo.rows[i] as usize, coo.cols[i] as usize, coo.vals[i]);
+            last = Some(key);
+        }
+    }
+    out
+}
+
+/// Banded matrix: every row has ~`avg_nnz` entries within `half_band` of
+/// the diagonal (FEM / finite-difference stencils: cant, pwtk, xenon2...).
+pub fn banded(rng: &mut Rng, n: usize, half_band: usize, avg_nnz: f64) -> Coo {
+    let mut coo = Coo::with_capacity(n, n, (n as f64 * avg_nnz) as usize);
+    for r in 0..n {
+        let k = rng.poisson(avg_nnz).max(1);
+        let lo = r.saturating_sub(half_band);
+        let hi = (r + half_band).min(n - 1);
+        for _ in 0..k {
+            let c = rng.range(lo, hi);
+            coo.push(r, c, rng.val());
+        }
+        coo.push(r, r, rng.val()); // diagonal always present
+    }
+    finalize(coo)
+}
+
+/// Fixed diagonals (apache2 / atmosmodm-style stencils): entries exactly
+/// on the given offsets, present with probability `density`.
+pub fn diagonals(rng: &mut Rng, n: usize, offsets: &[i64], density: f64) -> Coo {
+    let mut coo = Coo::with_capacity(n, n, n * offsets.len());
+    for r in 0..n {
+        for &o in offsets {
+            let c = r as i64 + o;
+            if c >= 0 && (c as usize) < n && rng.f64() < density {
+                coo.push(r, c as usize, rng.val());
+            }
+        }
+    }
+    finalize(coo)
+}
+
+/// Uniform-random rows with Poisson row lengths (rgg / shar_te-style:
+/// regular degree distribution, scattered columns).
+pub fn uniform(rng: &mut Rng, n: usize, m: usize, avg_nnz: f64) -> Coo {
+    let mut coo = Coo::with_capacity(n, m, (n as f64 * avg_nnz) as usize);
+    for r in 0..n {
+        let k = rng.poisson(avg_nnz);
+        for _ in 0..k {
+            coo.push(r, rng.below(m), rng.val());
+        }
+    }
+    finalize(coo)
+}
+
+/// Power-law (Zipf) row lengths with preferential column attachment
+/// (web/social graphs: eu-2005, wiki-talk, amazon0601). `alpha` controls
+/// skew (larger = more skewed); `max_row` caps hub rows.
+pub fn powerlaw(rng: &mut Rng, n: usize, m: usize, alpha: f64, avg_nnz: f64, max_row: usize) -> Coo {
+    let mut coo = Coo::with_capacity(n, m, (n as f64 * avg_nnz) as usize);
+    // calibrate: zipf(z, alpha) has some mean; scale draws to hit avg_nnz
+    let probe: f64 = {
+        let mut r2 = rng.clone();
+        let s: usize = (0..512).map(|_| r2.zipf(max_row, alpha)).sum();
+        s as f64 / 512.0
+    };
+    let scale = (avg_nnz / probe.max(1e-9)).max(0.05);
+    for r in 0..n {
+        let k = ((rng.zipf(max_row, alpha) as f64 * scale).round() as usize).clamp(1, max_row);
+        for _ in 0..k {
+            // preferential attachment: columns also zipf-distributed
+            let c = (rng.zipf(m, 1.3) - 1).min(m - 1);
+            coo.push(r, c, rng.val());
+        }
+    }
+    finalize(coo)
+}
+
+/// Block-structured matrix (multi-DOF FEM: crankseg, pkustk, x104):
+/// dense `bh x bw` blocks scattered near the diagonal.
+pub fn blocks(
+    rng: &mut Rng,
+    n: usize,
+    bh: usize,
+    bw: usize,
+    blocks_per_brow: f64,
+    half_band_blocks: usize,
+    block_fill: f64,
+) -> Coo {
+    let nb = n / bh;
+    let nbc = n / bw;
+    let mut coo = Coo::with_capacity(n, n, (nb as f64 * blocks_per_brow) as usize * bh * bw);
+    for ib in 0..nb {
+        let k = rng.poisson(blocks_per_brow).max(1);
+        let lo = ib.saturating_sub(half_band_blocks).min(nbc - 1);
+        let hi = (ib + half_band_blocks).min(nbc - 1);
+        for _ in 0..k {
+            let bc = rng.range(lo, hi);
+            for i in 0..bh {
+                for j in 0..bw {
+                    if rng.f64() < block_fill {
+                        let (r, c) = (ib * bh + i, bc * bw + j);
+                        if r < n && c < n {
+                            coo.push(r, c, rng.val());
+                        }
+                    }
+                }
+            }
+        }
+    }
+    finalize(coo)
+}
+
+/// Bimodal rows (temporal / bipartite-ish: wiki-talk-temporal, Hamrle3):
+/// a fraction `heavy_frac` of rows are `heavy_nnz` long, the rest short.
+pub fn bimodal(
+    rng: &mut Rng,
+    n: usize,
+    m: usize,
+    light_nnz: f64,
+    heavy_nnz: f64,
+    heavy_frac: f64,
+) -> Coo {
+    let mut coo = Coo::with_capacity(n, m, (n as f64 * light_nnz) as usize);
+    for r in 0..n {
+        let lam = if rng.f64() < heavy_frac { heavy_nnz } else { light_nnz };
+        let k = rng.poisson(lam);
+        for _ in 0..k {
+            coo.push(r, rng.below(m), rng.val());
+        }
+    }
+    finalize(coo)
+}
+
+/// Dense-ish clustered rows (human_gene2 / Si87H76: high average degree,
+/// column locality within clusters).
+pub fn clustered(rng: &mut Rng, n: usize, m: usize, avg_nnz: f64, cluster: usize) -> Coo {
+    let mut coo = Coo::with_capacity(n, m, (n as f64 * avg_nnz) as usize);
+    for r in 0..n {
+        let k = rng.poisson(avg_nnz).max(1);
+        let center = (r / cluster) * cluster;
+        for _ in 0..k {
+            let c = if rng.f64() < 0.8 {
+                (center + rng.below(cluster.min(m))).min(m - 1)
+            } else {
+                rng.below(m)
+            };
+            coo.push(r, c, rng.val());
+        }
+    }
+    finalize(coo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Storage;
+
+    #[test]
+    fn banded_stays_in_band() {
+        let mut rng = Rng::new(1);
+        let a = banded(&mut rng, 200, 10, 5.0);
+        for i in 0..a.len() {
+            let (r, c) = (a.rows[i] as i64, a.cols[i] as i64);
+            assert!((r - c).abs() <= 10, "entry ({r},{c}) outside band");
+        }
+        assert!(a.nnz() > 200); // at least diagonal
+    }
+
+    #[test]
+    fn diagonals_exact_offsets() {
+        let mut rng = Rng::new(2);
+        let a = diagonals(&mut rng, 100, &[-10, 0, 10], 1.0);
+        for i in 0..a.len() {
+            let d = a.cols[i] as i64 - a.rows[i] as i64;
+            assert!(d == -10 || d == 0 || d == 10);
+        }
+        // full density: every in-range offset present
+        assert_eq!(a.len(), 100 + 90 + 90);
+    }
+
+    #[test]
+    fn uniform_hits_avg() {
+        let mut rng = Rng::new(3);
+        let a = uniform(&mut rng, 2000, 2000, 8.0);
+        let avg = a.len() as f64 / 2000.0;
+        assert!((avg - 8.0).abs() < 1.0, "avg {avg}");
+    }
+
+    #[test]
+    fn powerlaw_is_skewed() {
+        let mut rng = Rng::new(4);
+        let a = powerlaw(&mut rng, 2000, 2000, 2.0, 8.0, 400);
+        let counts = a.row_counts();
+        let max = *counts.iter().max().unwrap() as f64;
+        let avg = a.len() as f64 / 2000.0;
+        assert!(max > 6.0 * avg, "power-law should have hub rows: max {max} avg {avg}");
+    }
+
+    #[test]
+    fn blocks_are_blocky() {
+        let mut rng = Rng::new(5);
+        let a = blocks(&mut rng, 256, 8, 8, 3.0, 4, 0.95);
+        // high fill within occupied 8x8 blocks => BELL-friendly
+        let csr = crate::sparse::convert::coo_to_csr(&a);
+        let bell = crate::sparse::convert::csr_to_bell(&csr, 8, 8);
+        // occupied blocks are dense, but Poisson slot counts mean ragged
+        // kb padding; require clearly better fill than a scattered matrix
+        let scattered = uniform(&mut Rng::new(5), 256, 256, a.len() as f64 / 256.0);
+        let bell_u = crate::sparse::convert::csr_to_bell(
+            &crate::sparse::convert::coo_to_csr(&scattered), 8, 8);
+        assert!(
+            bell.block_fill_ratio() > 3.0 * bell_u.block_fill_ratio(),
+            "blocky fill {} should beat scattered fill {}",
+            bell.block_fill_ratio(),
+            bell_u.block_fill_ratio()
+        );
+    }
+
+    #[test]
+    fn bimodal_has_two_modes() {
+        let mut rng = Rng::new(6);
+        let a = bimodal(&mut rng, 3000, 3000, 2.0, 60.0, 0.1);
+        let counts = a.row_counts();
+        let heavy = counts.iter().filter(|&&c| c > 30).count();
+        let light = counts.iter().filter(|&&c| c <= 8).count();
+        assert!(heavy > 100, "heavy {heavy}");
+        assert!(light > 1500, "light {light}");
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = uniform(&mut Rng::new(9), 100, 100, 4.0);
+        let b = uniform(&mut Rng::new(9), 100, 100, 4.0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn no_duplicates_after_finalize() {
+        let mut rng = Rng::new(10);
+        let a = clustered(&mut rng, 300, 300, 20.0, 16);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..a.len() {
+            assert!(seen.insert((a.rows[i], a.cols[i])), "duplicate entry");
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! GPU architecture profiles — the paper's two testbeds (Table 3):
+//! NVIDIA GTX 1650-mobile (Turing) and GTX 1080 (Pascal).
+//!
+//! Parameters come from the paper's Table 3 where given (core counts,
+//! clocks, memory sizes) and from NVIDIA's published architecture specs
+//! for the rest (SM resources, bandwidths, power envelopes).
+
+/// Static description of a GPU architecture + board.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuArch {
+    pub name: &'static str,
+    /// Streaming multiprocessor count.
+    pub sm_count: u32,
+    pub cores_per_sm: u32,
+    /// Boost/base clock used for peak-rate math (GHz). Table 3: 1.6 GHz.
+    pub clock_ghz: f64,
+    /// DRAM bandwidth (GB/s).
+    pub dram_bw_gbs: f64,
+    /// L2 cache size (bytes, device-wide).
+    pub l2_bytes: usize,
+    /// Unified L1/shared capacity per SM (bytes).
+    pub l1_shared_bytes: usize,
+    /// Whether the L1/shared split is configurable (Turing carve-out) or
+    /// fixed (Pascal's dedicated 24 KiB L1).
+    pub configurable_carveout: bool,
+    /// Register file per SM (32-bit registers).
+    pub regs_per_sm: u32,
+    pub max_threads_per_sm: u32,
+    pub max_blocks_per_sm: u32,
+    pub max_warps_per_sm: u32,
+    pub warp_size: u32,
+    /// Register allocation granularity (regs rounded up per warp).
+    pub reg_alloc_unit: u32,
+    /// Board power envelope (W).
+    pub tdp_w: f64,
+    /// Idle draw excluded from energy per §6.3 (W).
+    pub idle_w: f64,
+    /// Occupancy at which memory latency is fully hidden for streaming
+    /// kernels (fraction of max warps) — lower on Turing (improved
+    /// scheduling) than Pascal.
+    pub occ_saturation: f64,
+}
+
+impl GpuArch {
+    /// Peak single-precision FLOP/s (FMA = 2 flops/cycle/core).
+    pub fn peak_flops(&self) -> f64 {
+        self.sm_count as f64 * self.cores_per_sm as f64 * 2.0 * self.clock_ghz * 1e9
+    }
+
+    /// Peak DRAM bytes/s.
+    pub fn peak_bw(&self) -> f64 {
+        self.dram_bw_gbs * 1e9
+    }
+
+    pub fn total_cores(&self) -> u32 {
+        self.sm_count * self.cores_per_sm
+    }
+}
+
+/// NVIDIA GTX 1650-mobile — Turing TU117, the paper's primary device.
+/// Table 3: 896 CUDA cores, 4 GB GDDR5, 1.6 GHz.
+pub fn turing_gtx1650m() -> GpuArch {
+    GpuArch {
+        name: "GTX1650m-Turing",
+        sm_count: 14,
+        cores_per_sm: 64,
+        clock_ghz: 1.6,
+        dram_bw_gbs: 128.0,
+        l2_bytes: 1024 * 1024,
+        l1_shared_bytes: 96 * 1024,
+        configurable_carveout: true,
+        regs_per_sm: 65536,
+        max_threads_per_sm: 1024,
+        max_blocks_per_sm: 16,
+        max_warps_per_sm: 32,
+        warp_size: 32,
+        reg_alloc_unit: 256,
+        tdp_w: 50.0,
+        idle_w: 7.0,
+        occ_saturation: 0.70,
+    }
+}
+
+/// NVIDIA GTX 1080 — Pascal GP104, the paper's cross-check device (§7.6).
+/// Table 3: 2560 CUDA cores, 8 GB GDDR5X, 1.6 GHz.
+pub fn pascal_gtx1080() -> GpuArch {
+    GpuArch {
+        name: "GTX1080-Pascal",
+        sm_count: 20,
+        cores_per_sm: 128,
+        clock_ghz: 1.6,
+        dram_bw_gbs: 320.0,
+        l2_bytes: 2 * 1024 * 1024,
+        l1_shared_bytes: 96 * 1024, // 96 KiB shared + dedicated L1; modelled unified
+        configurable_carveout: false,
+        regs_per_sm: 65536,
+        max_threads_per_sm: 2048,
+        max_blocks_per_sm: 32,
+        max_warps_per_sm: 64,
+        warp_size: 32,
+        reg_alloc_unit: 256,
+        tdp_w: 180.0,
+        idle_w: 10.0,
+        occ_saturation: 0.80,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn core_counts_match_table3() {
+        assert_eq!(turing_gtx1650m().total_cores(), 896);
+        assert_eq!(pascal_gtx1080().total_cores(), 2560);
+    }
+
+    #[test]
+    fn peak_rates_sane() {
+        let t = turing_gtx1650m();
+        // 896 cores * 2 * 1.6 GHz = 2.87 TFLOP/s
+        assert!((t.peak_flops() / 1e12 - 2.8672).abs() < 1e-3);
+        assert_eq!(t.peak_bw(), 128e9);
+        let p = pascal_gtx1080();
+        assert!(p.peak_flops() > 2.0 * t.peak_flops());
+    }
+
+    #[test]
+    fn pascal_has_more_warp_slots() {
+        assert!(pascal_gtx1080().max_warps_per_sm > turing_gtx1650m().max_warps_per_sm);
+    }
+}

@@ -1,0 +1,153 @@
+//! Kernel configuration — the optimization variables of the paper (§4):
+//! thread-block size, `maxrregcount`, memory-hierarchy configuration
+//! (compile-time), and sparse format (run-time).
+
+use crate::sparse::Format;
+
+/// L1/shared carve-out choice (§4 observation 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MemConfig {
+    /// Compiler default split.
+    Default,
+    /// Maximize L1 cache (helps irregular x gathers, e.g. CSR).
+    PreferL1,
+    /// Maximize shared memory (helps staged/tiled kernels, e.g. BELL).
+    PreferShared,
+}
+
+impl MemConfig {
+    pub const ALL: [MemConfig; 3] = [MemConfig::Default, MemConfig::PreferL1, MemConfig::PreferShared];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MemConfig::Default => "default",
+            MemConfig::PreferL1 => "prefer_l1",
+            MemConfig::PreferShared => "prefer_shared",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "default" => Some(MemConfig::Default),
+            "prefer_l1" => Some(MemConfig::PreferL1),
+            "prefer_shared" => Some(MemConfig::PreferShared),
+            _ => None,
+        }
+    }
+
+    /// Stable class id (ML label).
+    pub fn class_id(self) -> usize {
+        match self {
+            MemConfig::Default => 0,
+            MemConfig::PreferL1 => 1,
+            MemConfig::PreferShared => 2,
+        }
+    }
+
+    pub fn from_class_id(id: usize) -> Option<Self> {
+        Self::ALL.get(id).copied()
+    }
+}
+
+/// The paper's sweep values (§6: >15k configuration records).
+pub const TB_SIZES: [u32; 5] = [64, 128, 256, 512, 1024];
+pub const MAXRREGCOUNT: [u32; 4] = [16, 32, 64, 128];
+
+/// One point in the configuration space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct KernelConfig {
+    pub format: Format,
+    /// Threads per block.
+    pub tb_size: u32,
+    /// Register cap per thread (nvcc --maxrregcount).
+    pub maxrregcount: u32,
+    pub mem: MemConfig,
+}
+
+impl KernelConfig {
+    /// The paper's default baseline: CSR + compiler defaults (§3.1/§7.1).
+    /// TB size 1024 is the naive maximize-occupancy choice programmers
+    /// default to; registers are uncapped; carve-out untouched.
+    pub fn default_baseline() -> Self {
+        KernelConfig {
+            format: Format::Csr,
+            tb_size: 1024,
+            maxrregcount: 128, // "no cap" within sweep range
+            mem: MemConfig::Default,
+        }
+    }
+
+    /// Full compile-parameter sweep for one format.
+    pub fn sweep_compile(format: Format) -> Vec<KernelConfig> {
+        let mut out = Vec::with_capacity(TB_SIZES.len() * MAXRREGCOUNT.len() * MemConfig::ALL.len());
+        for &tb_size in &TB_SIZES {
+            for &maxrregcount in &MAXRREGCOUNT {
+                for &mem in &MemConfig::ALL {
+                    out.push(KernelConfig { format, tb_size, maxrregcount, mem });
+                }
+            }
+        }
+        out
+    }
+
+    /// Full sweep over all formats — one matrix's share of the dataset.
+    pub fn sweep_all() -> Vec<KernelConfig> {
+        Format::ALL.iter().flat_map(|&f| Self::sweep_compile(f)).collect()
+    }
+
+    /// Class ids for the three compile-parameter classification targets
+    /// (Table 5 columns): TB size, maxrregcount, memory config.
+    pub fn tb_class(&self) -> usize {
+        TB_SIZES.iter().position(|&t| t == self.tb_size).expect("tb in sweep")
+    }
+
+    pub fn reg_class(&self) -> usize {
+        MAXRREGCOUNT.iter().position(|&r| r == self.maxrregcount).expect("regs in sweep")
+    }
+}
+
+impl std::fmt::Display for KernelConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}/tb{}/r{}/{}",
+            self.format, self.tb_size, self.maxrregcount, self.mem.name()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_sizes() {
+        assert_eq!(KernelConfig::sweep_compile(Format::Csr).len(), 5 * 4 * 3);
+        assert_eq!(KernelConfig::sweep_all().len(), 4 * 5 * 4 * 3);
+    }
+
+    #[test]
+    fn class_ids_roundtrip() {
+        for (i, &m) in MemConfig::ALL.iter().enumerate() {
+            assert_eq!(m.class_id(), i);
+            assert_eq!(MemConfig::from_class_id(i), Some(m));
+            assert_eq!(MemConfig::parse(m.name()), Some(m));
+        }
+        let c = KernelConfig { format: Format::Ell, tb_size: 512, maxrregcount: 32, mem: MemConfig::PreferL1 };
+        assert_eq!(c.tb_class(), 3);
+        assert_eq!(c.reg_class(), 1);
+    }
+
+    #[test]
+    fn default_baseline_is_csr() {
+        let d = KernelConfig::default_baseline();
+        assert_eq!(d.format, Format::Csr);
+        assert_eq!(d.mem, MemConfig::Default);
+    }
+
+    #[test]
+    fn display_format() {
+        let c = KernelConfig::default_baseline();
+        assert_eq!(c.to_string(), "csr/tb1024/r128/default");
+    }
+}

@@ -1,0 +1,382 @@
+//! Execution model: (architecture, kernel profile, configuration) ->
+//! latency / energy / average power / energy efficiency.
+//!
+//! The model is an analytic SM/warp/memory roofline reproducing the
+//! mechanisms behind the paper's §4 observations:
+//!   * occupancy rises with TB size and falls with register usage
+//!     (occupancy calculator);
+//!   * capping `maxrregcount` below the kernel's demand spills registers
+//!     to local memory — extra DRAM traffic;
+//!   * the L1/shared carve-out moves the x-gather hit rate (reuse curve)
+//!     and the staging kernels' shared-memory occupancy limit;
+//!   * formats differ in streamed bytes, executed FLOPs, warp imbalance
+//!     and divergence (kernel profile);
+//!   * partial waves (grid quantization) waste SMs at large TB sizes.
+
+use super::arch::GpuArch;
+use super::config::{KernelConfig, MemConfig};
+use super::kernelmodel::KernelProfile;
+use super::occupancy::{l1_capacity, occupancy, LaunchResources, Occupancy};
+
+/// Fixed kernel-launch overhead (seconds).
+const LAUNCH_OVERHEAD_S: f64 = 5e-6;
+/// DRAM sector fetched per x-gather miss (bytes).
+const MISS_SECTOR_BYTES: f64 = 32.0;
+/// Local-memory round trips per spilled register per inner iteration.
+const SPILL_BYTES_PER_REG_PER_ENTRY: f64 = 0.3;
+/// Fraction of spill traffic absorbed by L2 (never reaches DRAM).
+const SPILL_L2_ABSORB: f64 = 0.5;
+
+/// The four optimization objectives (paper §6.3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Measurement {
+    /// Kernel latency (seconds).
+    pub latency_s: f64,
+    /// Energy per product (joules), idle excluded.
+    pub energy_j: f64,
+    /// Average power draw (watts), idle excluded.
+    pub avg_power_w: f64,
+    /// Energy efficiency (MFLOPS/W) over *useful* flops.
+    pub mflops_per_watt: f64,
+}
+
+/// The four objectives as an enum (classification target selector).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Objective {
+    Latency,
+    Energy,
+    AvgPower,
+    EnergyEff,
+}
+
+impl Objective {
+    pub const ALL: [Objective; 4] =
+        [Objective::Latency, Objective::Energy, Objective::AvgPower, Objective::EnergyEff];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Latency => "latency",
+            Objective::Energy => "energy",
+            Objective::AvgPower => "avg_power",
+            Objective::EnergyEff => "energy_eff",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Objective::ALL.iter().copied().find(|o| o.name() == s)
+    }
+
+    /// Extract this objective's value from a measurement.
+    pub fn value(self, m: &Measurement) -> f64 {
+        match self {
+            Objective::Latency => m.latency_s,
+            Objective::Energy => m.energy_j,
+            Objective::AvgPower => m.avg_power_w,
+            Objective::EnergyEff => m.mflops_per_watt,
+        }
+    }
+
+    /// True when *smaller* values are better (all but MFLOPS/W).
+    pub fn minimize(self) -> bool {
+        !matches!(self, Objective::EnergyEff)
+    }
+
+    /// True if `a` is better than `b` under this objective.
+    pub fn better(self, a: f64, b: f64) -> bool {
+        if self.minimize() {
+            a < b
+        } else {
+            a > b
+        }
+    }
+}
+
+/// Diagnostic breakdown (exposed for ablation benches / tests).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Breakdown {
+    pub occ: Occupancy,
+    pub t_mem_s: f64,
+    pub t_comp_s: f64,
+    pub dram_bytes: f64,
+    pub x_hit_rate: f64,
+    pub spill_regs: u32,
+    pub tail_utilization: f64,
+    pub bw_utilization: f64,
+    pub flop_utilization: f64,
+}
+
+/// Run the analytic model. Returns the objectives + breakdown.
+pub fn simulate(arch: &GpuArch, prof: &KernelProfile, cfg: &KernelConfig) -> (Measurement, Breakdown) {
+    debug_assert_eq!(prof.format, cfg.format);
+
+    // ---- register allocation & spill --------------------------------
+    // nvcc guarantees the kernel launches: if a block's registers cannot
+    // fit the SM's register file, allocation is clamped and the excess
+    // demand spills (a tb1024 BELL kernel cannot keep 72 regs/thread).
+    let warps_per_block = cfg.tb_size.div_ceil(arch.warp_size);
+    let max_fit = (arch.regs_per_sm / (warps_per_block * arch.warp_size)).max(16);
+    let regs_alloc = prof.regs_needed.min(cfg.maxrregcount).min(max_fit);
+    let spill_regs = prof.regs_needed.saturating_sub(regs_alloc);
+
+    // ---- shared usage: staging kernels use shared iff the carve-out
+    // gives them room (PreferShared), mirroring nvcc's launch bounds ----
+    let use_shared_staging =
+        prof.shared_per_thread > 0 && cfg.mem == MemConfig::PreferShared;
+    let shared_per_block = if use_shared_staging {
+        prof.shared_per_thread * cfg.tb_size
+    } else {
+        0
+    };
+
+    // ---- occupancy ----------------------------------------------------
+    let occ = occupancy(
+        arch,
+        LaunchResources {
+            tb_size: cfg.tb_size,
+            regs_per_thread: regs_alloc.max(16),
+            shared_per_block,
+        },
+        cfg.mem,
+    );
+
+    // ---- grid fill & tail quantization -----------------------------------
+    // How full the machine's block slots are across all waves. Small
+    // grids (or oversized TBs) leave SMs idle; the derating below is
+    // sub-linear for bandwidth (a few SMs still drive much of DRAM) and
+    // linear for the ALUs.
+    let blocks_total = prof.threads_of_work.div_ceil(cfg.tb_size as u64).max(1);
+    let concurrent = (arch.sm_count as u64 * occ.blocks_per_sm.max(1) as u64).max(1);
+    let waves = blocks_total.div_ceil(concurrent);
+    let tail_utilization = blocks_total as f64 / (waves * concurrent) as f64;
+    // SMs covered by the grid: with fewer blocks than SMs, part of the
+    // chip idles (big TBs on small matrices). Intra-SM slot fill is
+    // already captured by occupancy; multi-wave tails are second-order.
+    let sm_fill = (blocks_total as f64 / arch.sm_count as f64).min(1.0);
+
+    // ---- x-gather hit rate (capacities at model scale, see
+    // memory::CACHE_MODEL_SCALE) -------------------------------------------
+    let scale = super::memory::CACHE_MODEL_SCALE;
+    let l1 = l1_capacity(arch, cfg.mem) as usize / scale;
+    // staging through shared effectively enlarges the on-chip pool
+    let effective_cache =
+        l1 + if use_shared_staging { shared_per_block as usize / scale } else { 0 };
+    let mut hit = prof.reuse.hit_rate(effective_cache);
+    // L2 catches a share of L1 misses (device-wide, format-independent)
+    let l2_catch = 0.5 * prof.reuse.hit_rate(arch.l2_bytes / arch.sm_count as usize * 4 / scale);
+    hit += (1.0 - hit) * l2_catch;
+    // block formats gather contiguous x segments
+    hit += (1.0 - hit) * prof.gather_bonus;
+    let hit = hit.clamp(0.0, 1.0);
+
+    // ---- DRAM traffic ---------------------------------------------------
+    let x_miss_bytes = prof.x_accesses as f64 * (1.0 - hit) * MISS_SECTOR_BYTES;
+    let spill_bytes = spill_regs as f64
+        * SPILL_BYTES_PER_REG_PER_ENTRY
+        * (prof.flops_executed as f64 / 2.0)
+        * (1.0 - SPILL_L2_ABSORB);
+    let dram_bytes = prof.matrix_bytes as f64 + prof.y_bytes as f64 + x_miss_bytes + spill_bytes;
+
+    // ---- memory time: bandwidth derated by occupancy-driven latency
+    // hiding (memory-bound kernels need enough warps in flight) ----------
+    let lat_hide = (occ.fraction / arch.occ_saturation).min(1.0);
+    // per-format streaming coalescing efficiency. CSR-scalar threads walk
+    // their rows sequentially, so adjacent lanes read strided addresses —
+    // the classic Bell & Garland result that ELL's column-major layout
+    // exists to fix. ELL/BELL stream fully coalesced; SELL nearly so.
+    let coalesce = match cfg.format {
+        crate::sparse::Format::Csr => 0.65,
+        crate::sparse::Format::Ell => 1.0,
+        crate::sparse::Format::Bell => 1.0,
+        crate::sparse::Format::Sell => 0.92,
+    };
+    let bw_eff = arch.peak_bw() * lat_hide * coalesce * sm_fill.powf(0.35);
+    let t_mem = dram_bytes / bw_eff.max(1.0);
+
+    // ---- compute time ----------------------------------------------------
+    let issue_eff = (occ.fraction / 0.25).min(1.0); // ALUs saturate early
+    let flops_eff = arch.peak_flops() * issue_eff * sm_fill;
+    let t_comp = prof.flops_executed as f64 * prof.imbalance * prof.divergence
+        / flops_eff.max(1.0);
+
+    // ---- latency ----------------------------------------------------------
+    let t_work = t_mem.max(t_comp);
+    let latency = t_work + LAUNCH_OVERHEAD_S;
+
+    // ---- power (idle excluded per §6.3) ------------------------------------
+    // Dynamic power is SUB-LINEAR in delivered bandwidth/FLOPs (DVFS floor,
+    // scheduler and cache overheads are paid as soon as the part is busy):
+    // sqrt saturation makes faster kernels more energy-efficient, which is
+    // what the paper's MFLOPS/W orderings show (Fig. 10, discussion pt. 5).
+    let bw_utilization = (dram_bytes / latency / arch.peak_bw()).min(1.0);
+    let flop_utilization =
+        (prof.flops_executed as f64 / latency / arch.peak_flops()).min(1.0);
+    let dyn_range = arch.tdp_w - arch.idle_w;
+    // Stall power: divergent / imbalanced warps keep their schedulers and
+    // register banks active while waiting on the longest lane, burning
+    // power without retiring work — CSR's load imbalance costs watts, not
+    // just time (the mechanism behind the paper's Fig. 10 average-power
+    // wins for regular formats on skewed matrices).
+    let stall = (prof.imbalance.min(3.0) - 1.0) / 2.0 * prof.divergence;
+    let avg_power = dyn_range
+        * (0.50 * bw_utilization.sqrt() + 0.25 * flop_utilization.sqrt()
+            + 0.12 * occ.fraction
+            + 0.13 * (stall * occ.fraction).min(1.0))
+        + 0.08 * arch.idle_w; // sensor floor above true idle
+    let energy = avg_power * latency;
+    let mflops = prof.flops_useful as f64 / latency / 1e6;
+    let eff = mflops / avg_power.max(1e-9);
+
+    (
+        Measurement {
+            latency_s: latency,
+            energy_j: energy,
+            avg_power_w: avg_power,
+            mflops_per_watt: eff,
+        },
+        Breakdown {
+            occ,
+            t_mem_s: t_mem,
+            t_comp_s: t_comp,
+            dram_bytes,
+            x_hit_rate: hit,
+            spill_regs,
+            tail_utilization,
+            bw_utilization,
+            flop_utilization,
+        },
+    )
+}
+
+/// §6.3 measurement harness emulation: the paper runs each kernel
+/// 500-200000 times so the (slow) power sensor returns stable readings,
+/// then reports the mean. With a deterministic analytic model the mean of
+/// k identical runs is the run itself; this wrapper reproduces the
+/// *protocol* (repetition count chosen from kernel latency, as the paper
+/// does) and is what the dataset builder calls.
+pub fn measure(arch: &GpuArch, prof: &KernelProfile, cfg: &KernelConfig) -> Measurement {
+    let (m, _) = simulate(arch, prof, cfg);
+    // repetitions: enough to cover >= 50 ms of sensor window, clamped to
+    // the paper's 500..200000 range. (Recorded for protocol fidelity;
+    // the averaged objectives are unchanged under a deterministic model.)
+    let _reps = ((0.05 / m.latency_s.max(1e-9)) as u64).clamp(500, 200_000);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{patterns, Rng};
+    use crate::gpusim::arch::{pascal_gtx1080, turing_gtx1650m};
+    use crate::gpusim::config::MemConfig;
+    use crate::gpusim::kernelmodel::profile;
+    use crate::sparse::convert::{coo_to_csr, ConvertParams};
+    use crate::sparse::Format;
+
+    fn cfg(format: Format, tb: u32, regs: u32, mem: MemConfig) -> KernelConfig {
+        KernelConfig { format, tb_size: tb, maxrregcount: regs, mem }
+    }
+
+    fn test_matrix() -> crate::sparse::Csr {
+        let mut rng = Rng::new(21);
+        coo_to_csr(&patterns::banded(&mut rng, 4096, 32, 16.0))
+    }
+
+    #[test]
+    fn objectives_positive_and_consistent() {
+        let a = test_matrix();
+        let p = profile(&a, Format::Csr, ConvertParams::default());
+        let arch = turing_gtx1650m();
+        let (m, _) = simulate(&arch, &p, &cfg(Format::Csr, 256, 64, MemConfig::Default));
+        assert!(m.latency_s > 0.0 && m.energy_j > 0.0 && m.avg_power_w > 0.0);
+        assert!((m.energy_j - m.avg_power_w * m.latency_s).abs() < 1e-9);
+        assert!(m.mflops_per_watt > 0.0);
+    }
+
+    #[test]
+    fn spill_hurts_latency() {
+        let a = test_matrix();
+        let p = profile(&a, Format::Csr, ConvertParams::default());
+        let arch = turing_gtx1650m();
+        // 16 regs forces a 32-register spill for the CSR kernel (needs 48)
+        let (m_spill, b_spill) =
+            simulate(&arch, &p, &cfg(Format::Csr, 256, 16, MemConfig::Default));
+        let (m_ok, b_ok) = simulate(&arch, &p, &cfg(Format::Csr, 256, 64, MemConfig::Default));
+        assert!(b_spill.spill_regs == 32 && b_ok.spill_regs == 0);
+        assert!(m_spill.latency_s > m_ok.latency_s, "spilling must cost time");
+    }
+
+    #[test]
+    fn excessive_registers_reduce_occupancy() {
+        let a = test_matrix();
+        let p = profile(&a, Format::Bell, ConvertParams::default());
+        let arch = turing_gtx1650m();
+        let (_, b128) = simulate(&arch, &p, &cfg(Format::Bell, 1024, 128, MemConfig::Default));
+        let (_, b64) = simulate(&arch, &p, &cfg(Format::Bell, 1024, 64, MemConfig::Default));
+        assert!(b128.occ.fraction <= b64.occ.fraction);
+    }
+
+    #[test]
+    fn pascal_faster_than_turing_mobile() {
+        let a = test_matrix();
+        let p = profile(&a, Format::Csr, ConvertParams::default());
+        let c = cfg(Format::Csr, 256, 64, MemConfig::Default);
+        let (mt, _) = simulate(&turing_gtx1650m(), &p, &c);
+        let (mp, _) = simulate(&pascal_gtx1080(), &p, &c);
+        assert!(mp.latency_s < mt.latency_s, "GTX1080 should beat 1650m");
+        assert!(mp.avg_power_w > mt.avg_power_w, "and draw more power");
+    }
+
+    #[test]
+    fn prefer_l1_helps_csr_gathers() {
+        // scattered matrix: x gathers miss; more L1 -> higher hit rate
+        let mut rng = Rng::new(22);
+        let a = coo_to_csr(&patterns::uniform(&mut rng, 8192, 8192, 12.0));
+        let p = profile(&a, Format::Csr, ConvertParams::default());
+        let arch = turing_gtx1650m();
+        let (_, b_l1) = simulate(&arch, &p, &cfg(Format::Csr, 256, 64, MemConfig::PreferL1));
+        let (_, b_sh) = simulate(&arch, &p, &cfg(Format::Csr, 256, 64, MemConfig::PreferShared));
+        assert!(b_l1.x_hit_rate > b_sh.x_hit_rate);
+        assert!(b_l1.dram_bytes < b_sh.dram_bytes);
+    }
+
+    #[test]
+    fn oversized_tb_starves_sms_on_small_grids() {
+        // n = 4096 rows: tb1024 yields only 4 blocks over 14/20 SMs -> most
+        // of the chip idles; tb128 fills it.
+        let a = test_matrix();
+        let p = profile(&a, Format::Ell, ConvertParams::default());
+        for arch in [turing_gtx1650m(), pascal_gtx1080()] {
+            let (big, bb) = simulate(&arch, &p, &cfg(Format::Ell, 1024, 64, MemConfig::Default));
+            let (small, bs) = simulate(&arch, &p, &cfg(Format::Ell, 128, 64, MemConfig::Default));
+            assert!(
+                big.latency_s > small.latency_s,
+                "{}: tb1024 {} should lose to tb128 {}",
+                arch.name,
+                big.latency_s,
+                small.latency_s
+            );
+            assert!(bb.tail_utilization <= 1.0 && bs.tail_utilization <= 1.0);
+        }
+    }
+
+    #[test]
+    fn objective_enum_helpers() {
+        let m = Measurement { latency_s: 2.0, energy_j: 6.0, avg_power_w: 3.0, mflops_per_watt: 9.0 };
+        assert_eq!(Objective::Latency.value(&m), 2.0);
+        assert_eq!(Objective::EnergyEff.value(&m), 9.0);
+        assert!(Objective::Latency.better(1.0, 2.0));
+        assert!(Objective::EnergyEff.better(2.0, 1.0));
+        for o in Objective::ALL {
+            assert_eq!(Objective::parse(o.name()), Some(o));
+        }
+    }
+
+    #[test]
+    fn measure_matches_simulate() {
+        let a = test_matrix();
+        let p = profile(&a, Format::Sell, ConvertParams::default());
+        let arch = turing_gtx1650m();
+        let c = cfg(Format::Sell, 128, 32, MemConfig::Default);
+        assert_eq!(measure(&arch, &p, &c), simulate(&arch, &p, &c).0);
+    }
+}

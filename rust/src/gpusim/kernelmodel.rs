@@ -1,0 +1,291 @@
+//! Per-format kernel workload characterization.
+//!
+//! For a given matrix this derives, per sparse format, the quantities the
+//! execution model needs: executed FLOPs (padding included — ELL's waste,
+//! §5.5 observation 4), streamed matrix bytes, gather counts, warp-level
+//! load imbalance (CSR's weakness, §2.3), SIMT divergence, the kernel's
+//! natural register demand, and its shared-memory staging footprint.
+
+use super::memory::{reuse_curve, ReuseCurve};
+use crate::sparse::convert::{self, ConvertParams};
+use crate::sparse::{Csr, Format, Storage};
+
+/// Workload profile of one (matrix, format) pair — architecture- and
+/// configuration-independent; the config is applied by `exec`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelProfile {
+    pub format: Format,
+    /// Useful FLOPs: 2 * nnz (the MFLOPS numerator, §6.3).
+    pub flops_useful: u64,
+    /// FLOPs actually executed, incl. zero padding.
+    pub flops_executed: u64,
+    /// Format arrays streamed once per product (bytes).
+    pub matrix_bytes: u64,
+    /// Output writes (bytes).
+    pub y_bytes: u64,
+    /// x gather count (== stored entries walked).
+    pub x_accesses: u64,
+    /// Reuse curve of the x-access stream.
+    pub reuse: ReuseCurve,
+    /// Warp-granularity load imbalance factor (>= 1); 1 for fixed-width
+    /// formats whose padding is already counted in `flops_executed`.
+    pub imbalance: f64,
+    /// SIMT divergence factor (>= 1) on the compute pipe.
+    pub divergence: f64,
+    /// Natural register demand of the kernel (regs/thread before capping).
+    pub regs_needed: u32,
+    /// Shared-memory staging per thread (bytes) when the kernel tiles x
+    /// through shared memory (0 = kernel relies on L1 only).
+    pub shared_per_thread: u32,
+    /// Rows processed per thread-launch (grid sizing basis).
+    pub threads_of_work: u64,
+    /// Structural locality bonus for x gathers (block formats touch
+    /// contiguous x segments): fraction of misses converted to hits.
+    pub gather_bonus: f64,
+}
+
+/// Natural per-thread register demand of each kernel implementation.
+/// Values follow nvcc's typical allocation for scalar CSR / ELL kernels
+/// and the heavier blocked kernels (accumulator tiles).
+pub fn regs_needed(format: Format) -> u32 {
+    match format {
+        Format::Csr => 48,
+        Format::Ell => 36,
+        Format::Bell => 72,
+        Format::Sell => 44,
+    }
+}
+
+/// Shared staging bytes per thread (used when the carve-out prefers
+/// shared memory and the kernel tiles x).
+pub fn shared_per_thread(format: Format) -> u32 {
+    match format {
+        Format::Csr => 0,  // pure L1 gathers
+        Format::Ell => 4,  // stages one x word per lane
+        Format::Sell => 4,
+        Format::Bell => 16, // stages x blocks + accumulators
+    }
+}
+
+/// Warp-level imbalance of scalar CSR: each warp's runtime is its longest
+/// row; efficiency = total work / (32 * sum of per-warp maxima).
+fn csr_imbalance(a: &Csr, warp: usize) -> f64 {
+    if a.n_rows == 0 {
+        return 1.0;
+    }
+    let mut padded: u64 = 0;
+    let mut total: u64 = 0;
+    let mut r = 0;
+    while r < a.n_rows {
+        let end = (r + warp).min(a.n_rows);
+        let mut mx = 0u64;
+        for i in r..end {
+            let l = a.row_len(i) as u64;
+            mx = mx.max(l);
+            total += l;
+        }
+        padded += mx * warp as u64;
+        r = end;
+    }
+    if total == 0 {
+        1.0
+    } else {
+        padded as f64 / total as f64
+    }
+}
+
+/// Build the profile of one (matrix, format) pair.
+pub fn profile(a: &Csr, format: Format, p: ConvertParams) -> KernelProfile {
+    profile_with_reuse(a, format, p, reuse_curve(a))
+}
+
+/// [`profile`] with a precomputed reuse curve — the curve is a property
+/// of the matrix, not the format, so sweeping all four formats should
+/// measure it once (EXPERIMENTS.md §Perf iteration 1).
+pub fn profile_with_reuse(
+    a: &Csr,
+    format: Format,
+    p: ConvertParams,
+    reuse: ReuseCurve,
+) -> KernelProfile {
+    let nnz = a.vals.len() as u64;
+    let y_bytes = (a.n_rows * 4) as u64;
+
+    let (flops_executed, matrix_bytes, x_accesses, imbalance, divergence, gather_bonus, threads) =
+        match format {
+            Format::Csr => {
+                let imb = csr_imbalance(a, 32);
+                // row_ptr + cols + vals; gathers = nnz; divergence from
+                // per-row loop trip-count variance folded into imbalance.
+                (
+                    2 * nnz,
+                    a.storage_bytes() as u64,
+                    nnz,
+                    imb,
+                    1.15, // loop/branch overhead of the scalar kernel
+                    0.0,
+                    a.n_rows as u64,
+                )
+            }
+            Format::Ell => {
+                let ell = convert::csr_to_ell(a);
+                let stored = ell.stored_entries() as u64;
+                (
+                    2 * stored,
+                    ell.storage_bytes() as u64,
+                    stored,
+                    1.0, // width-uniform: no warp imbalance
+                    1.0,
+                    0.0,
+                    a.n_rows as u64,
+                )
+            }
+            Format::Bell => {
+                let bell = convert::csr_to_bell(a, p.bell_bh, p.bell_bw);
+                let stored = bell.stored_entries() as u64;
+                // One gather per block column serves bh*bw MACs; the
+                // contiguous x block converts most misses to streaming.
+                (
+                    2 * stored,
+                    bell.storage_bytes() as u64,
+                    (bell.bcols.len() as u64) * p.bell_bw as u64,
+                    1.0,
+                    1.0,
+                    0.55,
+                    a.n_rows as u64,
+                )
+            }
+            Format::Sell => {
+                let sell = convert::csr_to_sell(a, p.sell_h);
+                let stored = sell.stored_entries() as u64;
+                // imbalance confined to slice granularity; approximate
+                // with CSR imbalance at slice-height warps, bounded by
+                // the padding already counted in `stored`.
+                let imb = csr_imbalance(a, p.sell_h).min(
+                    stored as f64 / nnz.max(1) as f64,
+                );
+                (
+                    2 * stored,
+                    sell.storage_bytes() as u64,
+                    stored,
+                    imb.max(1.0),
+                    1.05,
+                    0.0,
+                    a.n_rows as u64,
+                )
+            }
+        };
+
+    KernelProfile {
+        format,
+        flops_useful: 2 * nnz,
+        flops_executed,
+        matrix_bytes,
+        y_bytes,
+        x_accesses,
+        reuse,
+        imbalance,
+        divergence,
+        regs_needed: regs_needed(format),
+        shared_per_thread: shared_per_thread(format),
+        threads_of_work: threads,
+        gather_bonus,
+    }
+}
+
+/// Profiles for all four formats of one matrix (shares the reuse curve).
+pub fn profile_all(a: &Csr, p: ConvertParams) -> Vec<KernelProfile> {
+    let reuse = reuse_curve(a);
+    Format::ALL.iter().map(|&f| profile_with_reuse(a, f, p, reuse)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{patterns, Rng};
+    use crate::sparse::convert::coo_to_csr;
+
+    fn skewed() -> Csr {
+        let mut rng = Rng::new(11);
+        coo_to_csr(&patterns::powerlaw(&mut rng, 1024, 1024, 2.0, 8.0, 256))
+    }
+
+    fn regular() -> Csr {
+        let mut rng = Rng::new(12);
+        coo_to_csr(&patterns::diagonals(&mut rng, 1024, &[-8, 0, 8], 1.0))
+    }
+
+    #[test]
+    fn csr_imbalance_high_on_powerlaw_low_on_regular() {
+        let p = ConvertParams::default();
+        let imb_skew = profile(&skewed(), Format::Csr, p).imbalance;
+        let imb_reg = profile(&regular(), Format::Csr, p).imbalance;
+        assert!(imb_skew > 2.0, "powerlaw imbalance {imb_skew}");
+        assert!(imb_reg < 1.2, "regular imbalance {imb_reg}");
+    }
+
+    #[test]
+    fn ell_explodes_on_powerlaw() {
+        let p = ConvertParams::default();
+        let a = skewed();
+        let ell = profile(&a, Format::Ell, p);
+        let csr = profile(&a, Format::Csr, p);
+        assert!(ell.flops_executed > 5 * csr.flops_executed,
+            "ELL padding waste should explode on powerlaw: {} vs {}",
+            ell.flops_executed, csr.flops_executed);
+    }
+
+    #[test]
+    fn ell_tight_on_regular() {
+        let p = ConvertParams::default();
+        let a = regular();
+        let ell = profile(&a, Format::Ell, p);
+        assert!(ell.flops_executed as f64 <= 1.5 * ell.flops_useful as f64);
+    }
+
+    #[test]
+    fn sell_pads_less_than_ell_on_skewed() {
+        let p = ConvertParams { sell_h: 8, ..Default::default() };
+        let a = skewed();
+        let sell = profile(&a, Format::Sell, p);
+        let ell = profile(&a, Format::Ell, p);
+        assert!(sell.flops_executed < ell.flops_executed);
+        assert!(sell.matrix_bytes < ell.matrix_bytes);
+    }
+
+    #[test]
+    fn useful_flops_format_invariant() {
+        let p = ConvertParams::default();
+        let a = skewed();
+        let profs = profile_all(&a, p);
+        assert!(profs.windows(2).all(|w| w[0].flops_useful == w[1].flops_useful));
+        assert_eq!(profs.len(), 4);
+    }
+
+    #[test]
+    fn bell_fewer_gathers_with_bonus() {
+        let mut rng = Rng::new(13);
+        let a = coo_to_csr(&patterns::blocks(&mut rng, 512, 8, 8, 3.0, 6, 0.95));
+        let p = ConvertParams::default();
+        let bell = profile(&a, Format::Bell, p);
+        let csr = profile(&a, Format::Csr, p);
+        assert!(bell.gather_bonus > 0.0);
+        assert!(bell.x_accesses < csr.x_accesses,
+            "BELL gathers whole blocks: {} < {}", bell.x_accesses, csr.x_accesses);
+    }
+
+    #[test]
+    fn imbalance_exactly_one_on_uniform_rows() {
+        let mut csr_rows = vec![0u32];
+        let mut cols = Vec::new();
+        for r in 0..64u32 {
+            for k in 0..4u32 {
+                cols.push((r + k) % 64);
+            }
+            csr_rows.push(cols.len() as u32);
+        }
+        let vals = vec![1.0; cols.len()];
+        let a = Csr::new(64, 64, csr_rows, cols, vals);
+        assert_eq!(profile(&a, Format::Csr, ConvertParams::default()).imbalance, 1.0);
+    }
+}

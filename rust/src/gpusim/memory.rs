@@ -1,0 +1,182 @@
+//! Cache-behaviour model for the dense-vector gathers of SpMV.
+//!
+//! SpMV's irregular traffic is the `x[col]` gather; how much of it the L1
+//! can serve decides whether the kernel is DRAM-bound (paper §4
+//! observation 3). We measure the *actual* reuse behaviour of each matrix
+//! by streaming its access trace through a set of fixed-capacity
+//! pseudo-LRU caches, yielding a hit-rate curve that the execution model
+//! interpolates at the effective L1 capacity implied by the carve-out.
+
+use crate::sparse::Csr;
+
+/// Cache line size for x accesses (bytes) — 128B lines, 32 f32 each.
+pub const LINE_BYTES: usize = 128;
+const LINE_FLOATS: usize = LINE_BYTES / 4;
+
+/// Corpus matrices are scaled ~64x down from the paper's SuiteSparse
+/// sizes (DESIGN.md §1); cache capacities in the model scale down by the
+/// same factor so the x-vector-vs-L1 regime matches the paper's (x does
+/// NOT fit in L1 for mid/large matrices).
+pub const CACHE_MODEL_SCALE: usize = 64;
+
+/// Capacities (bytes, already at model scale) at which the reuse curve is
+/// sampled: 16/32/64/128 KiB of hardware cache divided by
+/// [`CACHE_MODEL_SCALE`].
+pub const CURVE_SIZES: [usize; 4] = [
+    16 * 1024 / CACHE_MODEL_SCALE,
+    32 * 1024 / CACHE_MODEL_SCALE,
+    64 * 1024 / CACHE_MODEL_SCALE,
+    128 * 1024 / CACHE_MODEL_SCALE,
+];
+
+/// Hit-rate curve of one matrix's x-access trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReuseCurve {
+    /// Hit rate at each of [`CURVE_SIZES`].
+    pub hit: [f64; 4],
+    /// Total gather count (== stored entries walked).
+    pub accesses: u64,
+}
+
+/// FIFO set-approximation of an LRU cache over line ids.
+struct FifoCache {
+    slots: Vec<u32>,
+    pos: Vec<i32>, // line -> slot index or -1
+    head: usize,
+}
+
+impl FifoCache {
+    fn new(capacity_lines: usize, n_lines: usize) -> Self {
+        FifoCache {
+            slots: vec![u32::MAX; capacity_lines.max(1)],
+            pos: vec![-1; n_lines],
+            head: 0,
+        }
+    }
+
+    #[inline]
+    fn access(&mut self, line: u32) -> bool {
+        if self.pos[line as usize] >= 0 {
+            return true;
+        }
+        let evict = self.slots[self.head];
+        if evict != u32::MAX {
+            self.pos[evict as usize] = -1;
+        }
+        self.slots[self.head] = line;
+        self.pos[line as usize] = self.head as i32;
+        self.head = (self.head + 1) % self.slots.len();
+        false
+    }
+}
+
+/// Measure the x-gather reuse curve of a matrix: walk the access trace in
+/// kernel execution order (row-major over stored entries) through four
+/// caches at once.
+pub fn reuse_curve(a: &Csr) -> ReuseCurve {
+    let n_lines = a.n_cols.div_ceil(LINE_FLOATS).max(1);
+    let mut caches: Vec<FifoCache> = CURVE_SIZES
+        .iter()
+        .map(|&b| FifoCache::new(b / LINE_BYTES, n_lines))
+        .collect();
+    let mut hits = [0u64; 4];
+    let mut accesses = 0u64;
+    for &c in &a.cols {
+        let line = c / LINE_FLOATS as u32;
+        accesses += 1;
+        for (k, cache) in caches.iter_mut().enumerate() {
+            if cache.access(line) {
+                hits[k] += 1;
+            }
+        }
+    }
+    let mut hit = [0.0f64; 4];
+    if accesses > 0 {
+        for k in 0..4 {
+            hit[k] = hits[k] as f64 / accesses as f64;
+        }
+    }
+    ReuseCurve { hit, accesses }
+}
+
+impl ReuseCurve {
+    /// Interpolate the hit rate at an arbitrary cache capacity.
+    /// Below the smallest sampled size the rate scales toward zero;
+    /// above the largest it saturates.
+    pub fn hit_rate(&self, capacity_bytes: usize) -> f64 {
+        let c = capacity_bytes as f64;
+        if c <= CURVE_SIZES[0] as f64 {
+            return self.hit[0] * (c / CURVE_SIZES[0] as f64).max(0.0);
+        }
+        for k in 1..CURVE_SIZES.len() {
+            if c <= CURVE_SIZES[k] as f64 {
+                let (c0, c1) = (CURVE_SIZES[k - 1] as f64, CURVE_SIZES[k] as f64);
+                let t = (c - c0) / (c1 - c0);
+                return self.hit[k - 1] + t * (self.hit[k] - self.hit[k - 1]);
+            }
+        }
+        self.hit[3]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{patterns, Rng};
+    use crate::sparse::convert::coo_to_csr;
+
+    #[test]
+    fn curve_monotone_in_capacity() {
+        let mut rng = Rng::new(3);
+        let a = coo_to_csr(&patterns::uniform(&mut rng, 2000, 2000, 12.0));
+        let c = reuse_curve(&a);
+        for k in 1..4 {
+            assert!(c.hit[k] >= c.hit[k - 1] - 1e-12, "curve must be monotone: {:?}", c.hit);
+        }
+    }
+
+    #[test]
+    fn banded_has_high_locality() {
+        let mut rng = Rng::new(4);
+        let banded = coo_to_csr(&patterns::banded(&mut rng, 4000, 16, 10.0));
+        let scattered = coo_to_csr(&patterns::uniform(&mut rng, 4000, 4000, 10.0));
+        let cb = reuse_curve(&banded);
+        let cs = reuse_curve(&scattered);
+        assert!(
+            cb.hit[0] > cs.hit[0] + 0.2,
+            "banded {:.3} should beat uniform {:.3} at 16 KiB",
+            cb.hit[0],
+            cs.hit[0]
+        );
+    }
+
+    #[test]
+    fn small_x_fits_entirely_at_large_capacity() {
+        let mut rng = Rng::new(5);
+        // 512 cols = 2 KiB of x == the largest modelled capacity
+        let a = coo_to_csr(&patterns::uniform(&mut rng, 512, 512, 8.0));
+        let c = reuse_curve(&a);
+        assert!(c.hit[3] > 0.9, "{:?}", c.hit);
+        // ...but not in the smallest cache
+        assert!(c.hit[0] < 0.6, "{:?}", c.hit);
+    }
+
+    #[test]
+    fn interpolation_between_samples() {
+        let c = ReuseCurve { hit: [0.2, 0.4, 0.6, 0.8], accesses: 100 };
+        // midpoint between the first two sampled capacities
+        let mid = (CURVE_SIZES[0] + CURVE_SIZES[1]) / 2;
+        assert!((c.hit_rate(mid) - 0.3).abs() < 1e-9);
+        assert_eq!(c.hit_rate(CURVE_SIZES[3] * 8), 0.8);
+        assert!(c.hit_rate(CURVE_SIZES[0] / 2) <= 0.2);
+        assert_eq!(c.hit_rate(0), 0.0);
+    }
+
+    #[test]
+    fn empty_matrix_zero_curve() {
+        let a = coo_to_csr(&crate::sparse::Coo::new(4, 4));
+        let c = reuse_curve(&a);
+        assert_eq!(c.accesses, 0);
+        assert_eq!(c.hit, [0.0; 4]);
+    }
+}

@@ -1,0 +1,22 @@
+//! GPU performance/energy simulator — the stand-in for the paper's two
+//! NVIDIA testbeds (substitution rationale: DESIGN.md §1).
+//!
+//! Pipeline: [`arch`] describes the device; [`occupancy`] reproduces the
+//! CUDA occupancy calculator; [`memory`] measures each matrix's x-gather
+//! reuse curve; [`kernelmodel`] characterizes each (matrix, format) pair;
+//! [`exec`] combines them with a [`config::KernelConfig`] into the four
+//! objectives of §6.3 (latency, energy, average power, MFLOPS/W).
+
+pub mod arch;
+pub mod config;
+pub mod exec;
+pub mod kernelmodel;
+pub mod memory;
+pub mod occupancy;
+
+pub use arch::{pascal_gtx1080, turing_gtx1650m, GpuArch};
+pub use config::{KernelConfig, MemConfig, MAXRREGCOUNT, TB_SIZES};
+pub use exec::{measure, simulate, Measurement, Objective};
+pub use kernelmodel::{profile, profile_all, profile_with_reuse, KernelProfile};
+pub use memory::{reuse_curve, ReuseCurve};
+pub use occupancy::{occupancy, LaunchResources, Occupancy};

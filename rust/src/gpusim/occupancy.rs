@@ -1,0 +1,198 @@
+//! CUDA occupancy calculator — reproduces the resource-limit arithmetic
+//! of NVIDIA's occupancy calculator for the modelled architectures.
+//!
+//! Occupancy (active warps / max warps per SM) is the pivot of the
+//! paper's compile-parameter trade-offs (§4 observations 1-2): raising
+//! `tb_size` or lowering `maxrregcount` raises occupancy, until register
+//! spilling or scheduling-slot waste pushes back.
+
+use super::arch::GpuArch;
+use super::config::MemConfig;
+
+/// Resource usage of one kernel launch configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LaunchResources {
+    /// Threads per block.
+    pub tb_size: u32,
+    /// Registers actually allocated per thread (post maxrregcount cap).
+    pub regs_per_thread: u32,
+    /// Static shared memory per block (bytes).
+    pub shared_per_block: u32,
+}
+
+/// Occupancy analysis result.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Occupancy {
+    /// Blocks concurrently resident per SM.
+    pub blocks_per_sm: u32,
+    /// Active warps per SM.
+    pub active_warps: u32,
+    /// active_warps / max_warps_per_sm in [0, 1].
+    pub fraction: f64,
+    /// Which resource capped residency (for diagnostics/ablation).
+    pub limiter: Limiter,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Limiter {
+    Blocks,
+    Threads,
+    Registers,
+    SharedMemory,
+}
+
+/// Shared-memory capacity per SM under a carve-out choice.
+///
+/// On configurable (Turing) parts PreferL1 shrinks shared to 1/3 and
+/// PreferShared grows it to 2/3 of the unified capacity; the default is
+/// an even split. On fixed (Pascal) parts the choice only affects the
+/// cache model, not shared capacity.
+pub fn shared_capacity(arch: &GpuArch, mem: MemConfig) -> u32 {
+    let total = arch.l1_shared_bytes as u32;
+    if !arch.configurable_carveout {
+        return (total * 2) / 3; // Pascal: 96 KiB shared of the modelled pool
+    }
+    match mem {
+        MemConfig::Default => total / 2,
+        MemConfig::PreferL1 => total / 3,
+        MemConfig::PreferShared => (total * 2) / 3,
+    }
+}
+
+/// Effective L1 cache per SM under a carve-out choice (the complement of
+/// [`shared_capacity`] on configurable parts; fixed otherwise).
+pub fn l1_capacity(arch: &GpuArch, mem: MemConfig) -> u32 {
+    let total = arch.l1_shared_bytes as u32;
+    if !arch.configurable_carveout {
+        return total / 3;
+    }
+    total - shared_capacity(arch, mem)
+}
+
+/// Compute occupancy for a launch configuration on an architecture.
+pub fn occupancy(arch: &GpuArch, res: LaunchResources, mem: MemConfig) -> Occupancy {
+    let warps_per_block = res.tb_size.div_ceil(arch.warp_size);
+
+    // Limit 1: hardware block slots.
+    let by_blocks = arch.max_blocks_per_sm;
+
+    // Limit 2: thread slots.
+    let by_threads = (arch.max_threads_per_sm / res.tb_size).max(0);
+
+    // Limit 3: register file. Registers allocate per warp in units of
+    // reg_alloc_unit.
+    let regs_per_warp = (res.regs_per_thread * arch.warp_size).div_ceil(arch.reg_alloc_unit)
+        * arch.reg_alloc_unit;
+    let regs_per_block = regs_per_warp * warps_per_block;
+    let by_regs = if regs_per_block == 0 { u32::MAX } else { arch.regs_per_sm / regs_per_block };
+
+    // Limit 4: shared memory.
+    let shared_cap = shared_capacity(arch, mem);
+    let by_shared = if res.shared_per_block == 0 {
+        u32::MAX
+    } else {
+        shared_cap / res.shared_per_block
+    };
+
+    let (blocks, limiter) = [
+        (by_blocks, Limiter::Blocks),
+        (by_threads, Limiter::Threads),
+        (by_regs, Limiter::Registers),
+        (by_shared, Limiter::SharedMemory),
+    ]
+    .into_iter()
+    .min_by_key(|&(b, _)| b)
+    .unwrap();
+
+    let blocks = blocks.max(0);
+    let active_warps = (blocks * warps_per_block).min(arch.max_warps_per_sm);
+    Occupancy {
+        blocks_per_sm: blocks,
+        active_warps,
+        fraction: active_warps as f64 / arch.max_warps_per_sm as f64,
+        limiter,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::arch::{pascal_gtx1080, turing_gtx1650m};
+
+    fn res(tb: u32, regs: u32, shared: u32) -> LaunchResources {
+        LaunchResources { tb_size: tb, regs_per_thread: regs, shared_per_block: shared }
+    }
+
+    #[test]
+    fn small_regs_full_occupancy_turing() {
+        let a = turing_gtx1650m();
+        // 256 threads, 32 regs: 4 blocks x 8 warps = 32 warps = max
+        let o = occupancy(&a, res(256, 32, 0), MemConfig::Default);
+        assert_eq!(o.active_warps, a.max_warps_per_sm);
+        assert!((o.fraction - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn heavy_registers_limit_occupancy() {
+        let a = turing_gtx1650m();
+        // 128 regs/thread: per warp 4096 regs; 65536/4096 = 16 warps
+        let o = occupancy(&a, res(256, 128, 0), MemConfig::Default);
+        assert_eq!(o.limiter, Limiter::Registers);
+        assert_eq!(o.active_warps, 16);
+        assert!((o.fraction - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tiny_blocks_hit_block_slot_limit() {
+        let a = turing_gtx1650m();
+        // 64-thread blocks, cheap: block-slot limited at 16 -> 32 warps max anyway
+        let o = occupancy(&a, res(64, 16, 0), MemConfig::Default);
+        assert_eq!(o.limiter, Limiter::Blocks);
+        assert_eq!(o.blocks_per_sm, 16);
+        assert_eq!(o.active_warps, 32);
+    }
+
+    #[test]
+    fn shared_memory_limits_under_prefer_l1() {
+        let a = turing_gtx1650m();
+        // 16 KiB/block static shared: PreferL1 gives 32 KiB -> 2 blocks
+        let o = occupancy(&a, res(256, 32, 16 * 1024), MemConfig::PreferL1);
+        assert_eq!(o.limiter, Limiter::SharedMemory);
+        assert_eq!(o.blocks_per_sm, 2);
+        // PreferShared gives 64 KiB -> 4 blocks
+        let o2 = occupancy(&a, res(256, 32, 16 * 1024), MemConfig::PreferShared);
+        assert_eq!(o2.blocks_per_sm, 4);
+    }
+
+    #[test]
+    fn pascal_carveout_fixed() {
+        let a = pascal_gtx1080();
+        assert_eq!(
+            shared_capacity(&a, MemConfig::PreferL1),
+            shared_capacity(&a, MemConfig::PreferShared)
+        );
+        assert_eq!(l1_capacity(&a, MemConfig::Default), a.l1_shared_bytes as u32 / 3);
+    }
+
+    #[test]
+    fn occupancy_monotone_decreasing_in_registers() {
+        let a = turing_gtx1650m();
+        let mut last = f64::INFINITY;
+        for regs in [16, 32, 64, 128, 255] {
+            let o = occupancy(&a, res(512, regs, 0), MemConfig::Default);
+            assert!(o.fraction <= last + 1e-12);
+            last = o.fraction;
+        }
+    }
+
+    #[test]
+    fn l1_plus_shared_conserved_on_turing() {
+        let a = turing_gtx1650m();
+        for m in MemConfig::ALL {
+            assert_eq!(
+                l1_capacity(&a, m) + shared_capacity(&a, m),
+                a.l1_shared_bytes as u32
+            );
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! # Auto-SpMV
+//!
+//! A from-scratch reproduction of *Auto-SpMV: Automated Optimizing SpMV
+//! Kernels on GPU* (Ashoury et al., 2023) as a three-layer Rust + JAX +
+//! Pallas system. This crate is Layer 3: the framework that extracts
+//! sparsity features, builds the training dataset, trains the paper's
+//! classifier/regressor zoo, and drives the compile-time and run-time
+//! optimization modes — dispatching real AOT-compiled SpMV executables
+//! through PJRT on the hot path (`runtime`), with the paper's GPU testbed
+//! replaced by an analytical simulator (`gpusim`, see DESIGN.md §1).
+//!
+//! Module map (DESIGN.md §3 has the full inventory):
+//! * [`sparse`]      — COO/CSR/ELL/BELL/SELL types, conversions, CPU SpMV.
+//! * [`gen`]         — synthetic matrix generators + the 30-matrix corpus.
+//! * [`features`]    — the paper's eight sparsity features (Table 2).
+//! * [`gpusim`]      — occupancy / memory / latency / power models for the
+//!                     Pascal and Turing profiles (Table 3).
+//! * [`ml`]          — decision tree, random forest, nearest centroid,
+//!                     SVM, gradient boosting, MLP (+ regressors, metrics).
+//! * [`automl`]      — TPE hyperparameter search (the Optuna stand-in).
+//! * [`dataset`]     — configuration sweep, record store, labelling.
+//! * [`coordinator`] — compile-time optimizer, run-time format router,
+//!                     overhead estimator, threaded serving loop.
+//! * [`runtime`]     — PJRT client wrapper + artifact manifest/executable
+//!                     cache (the only module touching the `xla` crate).
+//! * [`report`]      — table/figure printers and the bench kit.
+
+pub mod automl;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod dataset;
+pub mod features;
+pub mod gen;
+pub mod gpusim;
+pub mod ml;
+pub mod report;
+pub mod runtime;
+pub mod sparse;
+pub mod testutil;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,16 @@
+//! `auto-spmv` — the Auto-SpMV coordinator binary (see cli module docs).
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = match auto_spmv::cli::parse(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = auto_spmv::cli::run(&cli) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

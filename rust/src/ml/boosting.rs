@@ -1,0 +1,194 @@
+//! Gradient boosting — Table 1: {50..200} estimators, lr {0.1, 0.01,
+//! 0.001}. One-vs-rest GBDT on the logistic loss (classification) and
+//! least-squares GBDT (regression), with shallow CART regressors as the
+//! weak learners.
+
+use super::tree::DecisionTreeRegressor;
+use super::{Classifier, Regressor};
+
+/// Gradient-boosted trees, one-vs-rest logistic.
+#[derive(Debug, Clone)]
+pub struct GradientBoostingClassifier {
+    pub n_estimators: usize,
+    pub learning_rate: f64,
+    pub max_depth: usize,
+    pub seed: u64,
+    /// ensembles[class] = (prior, trees)
+    pub ensembles: Vec<(f64, Vec<DecisionTreeRegressor>)>,
+    pub n_classes: usize,
+}
+
+impl Default for GradientBoostingClassifier {
+    fn default() -> Self {
+        GradientBoostingClassifier {
+            n_estimators: 100,
+            learning_rate: 0.1,
+            max_depth: 3,
+            seed: 0,
+            ensembles: Vec::new(),
+            n_classes: 0,
+        }
+    }
+}
+
+fn sigmoid(z: f64) -> f64 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+impl GradientBoostingClassifier {
+    fn raw_score(&self, cls: usize, x: &[f64]) -> f64 {
+        let (prior, trees) = &self.ensembles[cls];
+        let mut s = *prior;
+        for t in trees {
+            s += self.learning_rate * t.predict_one(x);
+        }
+        s
+    }
+}
+
+impl Classifier for GradientBoostingClassifier {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[usize]) {
+        assert!(!x.is_empty());
+        self.n_classes = super::n_classes(y);
+        self.ensembles.clear();
+        let n = x.len();
+        for cls in 0..self.n_classes {
+            let t: Vec<f64> = y.iter().map(|&c| if c == cls { 1.0 } else { 0.0 }).collect();
+            let p0 = (t.iter().sum::<f64>() / n as f64).clamp(1e-6, 1.0 - 1e-6);
+            let prior = (p0 / (1.0 - p0)).ln();
+            let mut raw = vec![prior; n];
+            let mut trees = Vec::with_capacity(self.n_estimators);
+            for e in 0..self.n_estimators {
+                // negative gradient of logistic loss: t - sigmoid(raw)
+                let resid: Vec<f64> =
+                    raw.iter().zip(&t).map(|(&r, &ti)| ti - sigmoid(r)).collect();
+                let mut tree = DecisionTreeRegressor {
+                    max_depth: self.max_depth,
+                    seed: self.seed.wrapping_add((cls * 1000 + e) as u64),
+                    ..Default::default()
+                };
+                tree.fit(x, &resid);
+                for (r, row) in raw.iter_mut().zip(x) {
+                    *r += self.learning_rate * tree.predict_one(row);
+                }
+                trees.push(tree);
+            }
+            self.ensembles.push((prior, trees));
+        }
+    }
+
+    fn predict_one(&self, x: &[f64]) -> usize {
+        (0..self.n_classes)
+            .max_by(|&a, &b| {
+                self.raw_score(a, x).partial_cmp(&self.raw_score(b, x)).unwrap()
+            })
+            .unwrap_or(0)
+    }
+}
+
+/// Least-squares gradient boosting (regression).
+#[derive(Debug, Clone)]
+pub struct GradientBoostingRegressor {
+    pub n_estimators: usize,
+    pub learning_rate: f64,
+    pub max_depth: usize,
+    pub seed: u64,
+    pub base: f64,
+    pub trees: Vec<DecisionTreeRegressor>,
+}
+
+impl Default for GradientBoostingRegressor {
+    fn default() -> Self {
+        GradientBoostingRegressor {
+            n_estimators: 100,
+            learning_rate: 0.1,
+            max_depth: 3,
+            seed: 0,
+            base: 0.0,
+            trees: Vec::new(),
+        }
+    }
+}
+
+impl Regressor for GradientBoostingRegressor {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert!(!x.is_empty());
+        self.base = y.iter().sum::<f64>() / y.len() as f64;
+        let mut pred = vec![self.base; y.len()];
+        self.trees.clear();
+        for e in 0..self.n_estimators {
+            let resid: Vec<f64> = y.iter().zip(&pred).map(|(t, p)| t - p).collect();
+            let mut tree = DecisionTreeRegressor {
+                max_depth: self.max_depth,
+                seed: self.seed.wrapping_add(e as u64),
+                ..Default::default()
+            };
+            tree.fit(x, &resid);
+            for (p, row) in pred.iter_mut().zip(x) {
+                *p += self.learning_rate * tree.predict_one(row);
+            }
+            self.trees.push(tree);
+        }
+    }
+
+    fn predict_one(&self, x: &[f64]) -> f64 {
+        self.base
+            + self.learning_rate
+                * self.trees.iter().map(|t| t.predict_one(x)).sum::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics::{accuracy, r2};
+    use crate::ml::testdata;
+
+    #[test]
+    fn gbdt_solves_xor() {
+        let (x, y) = testdata::xor(40, 19);
+        let mut g = GradientBoostingClassifier { n_estimators: 40, ..Default::default() };
+        g.fit(&x, &y);
+        assert!(accuracy(&y, &g.predict(&x)) > 0.95);
+    }
+
+    #[test]
+    fn gbdt_classifies_blobs() {
+        let (x, y) = testdata::blobs(30, 20);
+        let mut g = GradientBoostingClassifier { n_estimators: 30, ..Default::default() };
+        g.fit(&x, &y);
+        assert!(accuracy(&y, &g.predict(&x)) > 0.95);
+    }
+
+    #[test]
+    fn gbdt_regresses() {
+        let (x, y) = testdata::friedman(300, 21);
+        let mut g = GradientBoostingRegressor { n_estimators: 80, ..Default::default() };
+        g.fit(&x, &y);
+        let score = r2(&y, &g.predict(&x));
+        assert!(score > 0.9, "r2 {score}");
+    }
+
+    #[test]
+    fn more_estimators_fit_tighter() {
+        let (x, y) = testdata::friedman(200, 22);
+        let fit_r2 = |n_est: usize| {
+            let mut g = GradientBoostingRegressor { n_estimators: n_est, ..Default::default() };
+            g.fit(&x, &y);
+            r2(&y, &g.predict(&x))
+        };
+        assert!(fit_r2(60) > fit_r2(5));
+    }
+
+    #[test]
+    fn tiny_learning_rate_underfits() {
+        let (x, y) = testdata::friedman(200, 23);
+        let mut g = GradientBoostingRegressor {
+            n_estimators: 10,
+            learning_rate: 0.001,
+            ..Default::default()
+        };
+        g.fit(&x, &y);
+        assert!(r2(&y, &g.predict(&x)) < 0.5);
+    }
+}

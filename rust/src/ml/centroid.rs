@@ -1,0 +1,141 @@
+//! Nearest-centroid classifier — Table 1/4 (metric: manhattan /
+//! euclidean / minkowski).
+
+use super::Classifier;
+
+/// Distance metric for centroid matching.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Metric {
+    Manhattan,
+    Euclidean,
+    /// Minkowski with exponent p.
+    Minkowski(f64),
+}
+
+impl Metric {
+    pub fn name(self) -> &'static str {
+        match self {
+            Metric::Manhattan => "manhattan",
+            Metric::Euclidean => "euclidean",
+            Metric::Minkowski(_) => "minkowski",
+        }
+    }
+
+    fn dist(self, a: &[f64], b: &[f64]) -> f64 {
+        match self {
+            Metric::Manhattan => a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum(),
+            Metric::Euclidean => a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum::<f64>()
+                .sqrt(),
+            Metric::Minkowski(p) => a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs().powf(p))
+                .sum::<f64>()
+                .powf(1.0 / p),
+        }
+    }
+}
+
+/// Nearest-centroid classifier.
+#[derive(Debug, Clone)]
+pub struct NearestCentroid {
+    pub metric: Metric,
+    pub centroids: Vec<(usize, Vec<f64>)>,
+}
+
+impl Default for NearestCentroid {
+    fn default() -> Self {
+        // paper Table 4: metric = manhattan
+        NearestCentroid { metric: Metric::Manhattan, centroids: Vec::new() }
+    }
+}
+
+impl Classifier for NearestCentroid {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[usize]) {
+        assert!(!x.is_empty());
+        let k = super::n_classes(y);
+        let d = x[0].len();
+        let mut sums = vec![vec![0.0f64; d]; k];
+        let mut counts = vec![0usize; k];
+        for (row, &cls) in x.iter().zip(y) {
+            counts[cls] += 1;
+            for (s, v) in sums[cls].iter_mut().zip(row) {
+                *s += v;
+            }
+        }
+        self.centroids = sums
+            .into_iter()
+            .zip(counts)
+            .enumerate()
+            .filter(|(_, (_, c))| *c > 0)
+            .map(|(cls, (mut s, c))| {
+                for v in &mut s {
+                    *v /= c as f64;
+                }
+                (cls, s)
+            })
+            .collect();
+    }
+
+    fn predict_one(&self, x: &[f64]) -> usize {
+        self.centroids
+            .iter()
+            .min_by(|a, b| {
+                self.metric
+                    .dist(&a.1, x)
+                    .partial_cmp(&self.metric.dist(&b.1, x))
+                    .unwrap()
+            })
+            .map(|(cls, _)| *cls)
+            .expect("fit first")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics::accuracy;
+    use crate::ml::testdata;
+
+    #[test]
+    fn separable_blobs_all_metrics() {
+        let (x, y) = testdata::blobs(40, 11);
+        for m in [Metric::Manhattan, Metric::Euclidean, Metric::Minkowski(3.0)] {
+            let mut c = NearestCentroid { metric: m, ..Default::default() };
+            c.fit(&x, &y);
+            assert!(accuracy(&y, &c.predict(&x)) > 0.95, "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn fails_on_xor_as_expected() {
+        // centroids of XOR classes coincide at the origin: near-chance.
+        let (x, y) = testdata::xor(50, 12);
+        let mut c = NearestCentroid::default();
+        c.fit(&x, &y);
+        let acc = accuracy(&y, &c.predict(&x));
+        assert!(acc < 0.8, "nearest centroid cannot solve XOR, acc {acc}");
+    }
+
+    #[test]
+    fn skips_empty_classes() {
+        let x = vec![vec![0.0], vec![10.0]];
+        let y = vec![0usize, 3]; // classes 1, 2 absent
+        let mut c = NearestCentroid::default();
+        c.fit(&x, &y);
+        assert_eq!(c.predict_one(&[9.0]), 3);
+        assert_eq!(c.predict_one(&[1.0]), 0);
+    }
+
+    #[test]
+    fn metric_math() {
+        assert_eq!(Metric::Manhattan.dist(&[0.0, 0.0], &[3.0, 4.0]), 7.0);
+        assert_eq!(Metric::Euclidean.dist(&[0.0, 0.0], &[3.0, 4.0]), 5.0);
+        let m = Metric::Minkowski(2.0).dist(&[0.0, 0.0], &[3.0, 4.0]);
+        assert!((m - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,183 @@
+//! Random forests — bagged CART trees with feature subsampling.
+//! Paper Table 4: 100 estimators, max depth 15 (classifier) / None
+//! (regressor).
+
+use super::tree::{Criterion, DecisionTreeClassifier, DecisionTreeRegressor, Splitter};
+use super::{Classifier, Regressor};
+use crate::gen::Rng;
+
+fn bootstrap(n: usize, rng: &mut Rng) -> Vec<usize> {
+    (0..n).map(|_| rng.below(n)).collect()
+}
+
+/// Random-forest classifier (majority vote).
+#[derive(Debug, Clone)]
+pub struct RandomForestClassifier {
+    pub n_estimators: usize,
+    pub criterion: Criterion,
+    pub max_depth: usize,
+    /// Features per split; None = sqrt(d).
+    pub max_features: Option<usize>,
+    /// Bootstrap resampling on/off (off = bagged-trees baseline uses all rows).
+    pub bootstrap: bool,
+    pub seed: u64,
+    pub trees: Vec<DecisionTreeClassifier>,
+    pub n_classes: usize,
+}
+
+impl Default for RandomForestClassifier {
+    fn default() -> Self {
+        RandomForestClassifier {
+            n_estimators: 100,
+            criterion: Criterion::Gini,
+            max_depth: 15, // paper Table 4
+            max_features: None,
+            bootstrap: true,
+            seed: 0,
+            trees: Vec::new(),
+            n_classes: 0,
+        }
+    }
+}
+
+impl Classifier for RandomForestClassifier {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[usize]) {
+        assert!(!x.is_empty());
+        self.n_classes = super::n_classes(y);
+        let d = x[0].len();
+        let mf = self.max_features.unwrap_or_else(|| (d as f64).sqrt().ceil() as usize);
+        let mut rng = Rng::new(self.seed ^ 0xF0FE57);
+        self.trees = (0..self.n_estimators)
+            .map(|t| {
+                let idx: Vec<usize> = if self.bootstrap {
+                    bootstrap(x.len(), &mut rng)
+                } else {
+                    (0..x.len()).collect()
+                };
+                let bx: Vec<Vec<f64>> = idx.iter().map(|&i| x[i].clone()).collect();
+                let by: Vec<usize> = idx.iter().map(|&i| y[i]).collect();
+                let mut tree = DecisionTreeClassifier {
+                    criterion: self.criterion,
+                    splitter: Splitter::Best,
+                    max_depth: self.max_depth,
+                    max_features: Some(mf),
+                    seed: self.seed.wrapping_add(t as u64 * 7919 + 1),
+                    ..Default::default()
+                };
+                tree.fit(&bx, &by);
+                tree
+            })
+            .collect();
+    }
+
+    fn predict_one(&self, x: &[f64]) -> usize {
+        let mut votes = vec![0usize; self.n_classes.max(1)];
+        for t in &self.trees {
+            votes[t.predict_one(x)] += 1;
+        }
+        votes.iter().enumerate().max_by_key(|(_, &v)| v).map(|(c, _)| c).unwrap_or(0)
+    }
+}
+
+/// Random-forest regressor (mean of trees).
+#[derive(Debug, Clone)]
+pub struct RandomForestRegressor {
+    pub n_estimators: usize,
+    pub max_depth: usize,
+    pub max_features: Option<usize>,
+    pub seed: u64,
+    pub trees: Vec<DecisionTreeRegressor>,
+}
+
+impl Default for RandomForestRegressor {
+    fn default() -> Self {
+        RandomForestRegressor {
+            n_estimators: 100,
+            max_depth: usize::MAX, // paper Table 4: Depth = None
+            max_features: None,
+            seed: 0,
+            trees: Vec::new(),
+        }
+    }
+}
+
+impl Regressor for RandomForestRegressor {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert!(!x.is_empty());
+        let d = x[0].len();
+        let mf = self.max_features.unwrap_or_else(|| ((d as f64) / 3.0).ceil() as usize);
+        let mut rng = Rng::new(self.seed ^ 0xF02E6);
+        self.trees = (0..self.n_estimators)
+            .map(|t| {
+                let idx = bootstrap(x.len(), &mut rng);
+                let bx: Vec<Vec<f64>> = idx.iter().map(|&i| x[i].clone()).collect();
+                let by: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
+                let mut tree = DecisionTreeRegressor {
+                    max_depth: self.max_depth,
+                    max_features: Some(mf.max(1)),
+                    seed: self.seed.wrapping_add(t as u64 * 6367 + 1),
+                    ..Default::default()
+                };
+                tree.fit(&bx, &by);
+                tree
+            })
+            .collect();
+    }
+
+    fn predict_one(&self, x: &[f64]) -> f64 {
+        if self.trees.is_empty() {
+            return 0.0;
+        }
+        self.trees.iter().map(|t| t.predict_one(x)).sum::<f64>() / self.trees.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics::{accuracy, r2};
+    use crate::ml::split::{take, take_x, train_test_indices};
+    use crate::ml::testdata;
+
+    #[test]
+    fn forest_classifies_blobs_held_out() {
+        let (x, y) = testdata::blobs(60, 7);
+        let (tr, te) = train_test_indices(x.len(), 0.25, 1);
+        let mut f = RandomForestClassifier { n_estimators: 25, ..Default::default() };
+        f.fit(&take_x(&x, &tr), &take(&y, &tr));
+        let acc = accuracy(&take(&y, &te), &f.predict(&take_x(&x, &te)));
+        assert!(acc > 0.95, "acc {acc}");
+    }
+
+    #[test]
+    fn forest_regresses_friedman_held_out() {
+        let (x, y) = testdata::friedman(500, 8);
+        let (tr, te) = train_test_indices(x.len(), 0.25, 2);
+        let mut f = RandomForestRegressor { n_estimators: 30, ..Default::default() };
+        f.fit(&take_x(&x, &tr), &take(&y, &tr));
+        let score = r2(&take(&y, &te), &f.predict(&take_x(&x, &te)));
+        assert!(score > 0.85, "r2 {score}");
+    }
+
+    #[test]
+    fn no_bootstrap_mode_works() {
+        let (x, y) = testdata::xor(40, 9);
+        let mut f = RandomForestClassifier {
+            n_estimators: 15,
+            bootstrap: false,
+            ..Default::default()
+        };
+        f.fit(&x, &y);
+        assert!(accuracy(&y, &f.predict(&x)) > 0.95);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (x, y) = testdata::blobs(30, 10);
+        let mut a = RandomForestClassifier { n_estimators: 5, seed: 3, ..Default::default() };
+        let mut b = RandomForestClassifier { n_estimators: 5, seed: 3, ..Default::default() };
+        a.fit(&x, &y);
+        b.fit(&x, &y);
+        assert_eq!(a.predict(&x), b.predict(&x));
+    }
+}

@@ -1,0 +1,132 @@
+//! Minimal dense linear algebra for the linear models: symmetric solves
+//! via Cholesky with ridge jitter. Matrices are small (d <= a few hundred).
+
+/// Row-major square matrix wrapper for solves.
+pub fn cholesky_solve(a: &[Vec<f64>], b: &[f64]) -> Option<Vec<f64>> {
+    let n = b.len();
+    debug_assert_eq!(a.len(), n);
+    // decompose a = L L^T
+    let mut l = vec![vec![0.0f64; n]; n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i][j];
+            for k in 0..j {
+                s -= l[i][k] * l[j][k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None; // not positive definite
+                }
+                l[i][j] = s.sqrt();
+            } else {
+                l[i][j] = s / l[j][j];
+            }
+        }
+    }
+    // forward: L z = b
+    let mut z = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i][k] * z[k];
+        }
+        z[i] = s / l[i][i];
+    }
+    // back: L^T x = z
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = z[i];
+        for k in i + 1..n {
+            s -= l[k][i] * x[k];
+        }
+        x[i] = s / l[i][i];
+    }
+    Some(x)
+}
+
+/// Solve the ridge normal equations (X^T X + lambda I) w = X^T y with a
+/// bias column appended. Returns (weights, bias).
+pub fn ridge_solve(x: &[Vec<f64>], y: &[f64], lambda: f64) -> (Vec<f64>, f64) {
+    let n = x.len();
+    let d = if n == 0 { 0 } else { x[0].len() };
+    let dd = d + 1; // + bias
+    let mut xtx = vec![vec![0.0f64; dd]; dd];
+    let mut xty = vec![0.0f64; dd];
+    for (row, &t) in x.iter().zip(y) {
+        for i in 0..d {
+            for j in 0..=i {
+                xtx[i][j] += row[i] * row[j];
+            }
+            xtx[d][i] += row[i]; // bias x feature
+            xty[i] += row[i] * t;
+        }
+        xtx[d][d] += 1.0;
+        xty[d] += t;
+    }
+    // symmetrize + regularize (bias unregularized)
+    for i in 0..dd {
+        for j in i + 1..dd {
+            xtx[i][j] = xtx[j][i];
+        }
+    }
+    for (i, row) in xtx.iter_mut().enumerate().take(d) {
+        row[i] += lambda;
+    }
+    // jitter until PD
+    let mut jitter = 1e-10;
+    loop {
+        if let Some(sol) = cholesky_solve(&xtx, &xty) {
+            let (w, b) = sol.split_at(d);
+            return (w.to_vec(), b[0]);
+        }
+        for i in 0..dd {
+            xtx[i][i] += jitter;
+        }
+        jitter *= 10.0;
+        if jitter > 1.0 {
+            return (vec![0.0; d], y.iter().sum::<f64>() / n.max(1) as f64);
+        }
+    }
+}
+
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cholesky_solves_spd() {
+        // A = [[4,2],[2,3]], b = [10, 9] -> x = [1.5, 2]
+        let a = vec![vec![4.0, 2.0], vec![2.0, 3.0]];
+        let x = cholesky_solve(&a, &[10.0, 9.0]).unwrap();
+        assert!((x[0] - 1.5).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = vec![vec![0.0, 1.0], vec![1.0, 0.0]];
+        assert!(cholesky_solve(&a, &[1.0, 1.0]).is_none());
+    }
+
+    #[test]
+    fn ridge_recovers_linear_function() {
+        // y = 3 x0 - 2 x1 + 1
+        let x: Vec<Vec<f64>> = (0..50)
+            .map(|i| vec![(i % 7) as f64, (i % 5) as f64])
+            .collect();
+        let y: Vec<f64> = x.iter().map(|r| 3.0 * r[0] - 2.0 * r[1] + 1.0).collect();
+        let (w, b) = ridge_solve(&x, &y, 1e-8);
+        assert!((w[0] - 3.0).abs() < 1e-5, "{w:?}");
+        assert!((w[1] + 2.0).abs() < 1e-5);
+        assert!((b - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn dot_product() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+}

@@ -1,0 +1,269 @@
+//! Linear regressors of Table 4: Bayesian ridge, Lasso (coordinate
+//! descent), and LARS (forward stepwise with least-squares refits).
+
+use super::linalg::{dot, ridge_solve};
+use super::Regressor;
+
+/// Bayesian ridge regression: ridge with evidence-style iterative
+/// re-estimation of the precision ratio (alpha/lambda), per sklearn's
+/// BayesianRidge (n_iter=300, tol=1e-3 in Table 4).
+#[derive(Debug, Clone)]
+pub struct BayesianRidge {
+    pub n_iter: usize,
+    pub tol: f64,
+    pub w: Vec<f64>,
+    pub b: f64,
+}
+
+impl Default for BayesianRidge {
+    fn default() -> Self {
+        BayesianRidge { n_iter: 300, tol: 1e-3, w: Vec::new(), b: 0.0 }
+    }
+}
+
+impl Regressor for BayesianRidge {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert!(!x.is_empty());
+        let n = x.len() as f64;
+        let mut lambda = 1.0; // effective ridge strength
+        let (mut w, mut b) = ridge_solve(x, y, lambda);
+        for _ in 0..self.n_iter {
+            // residual variance and weight norm drive the update
+            let sse: f64 = x
+                .iter()
+                .zip(y)
+                .map(|(r, &t)| {
+                    let p = dot(&w, r) + b;
+                    (p - t) * (p - t)
+                })
+                .sum();
+            let wnorm: f64 = w.iter().map(|v| v * v).sum();
+            let noise_var = (sse / n).max(1e-12);
+            let weight_var = (wnorm / w.len().max(1) as f64).max(1e-12);
+            let new_lambda = (noise_var / weight_var).clamp(1e-8, 1e8);
+            if (new_lambda - lambda).abs() / lambda.max(1e-12) < self.tol {
+                lambda = new_lambda;
+                break;
+            }
+            lambda = new_lambda;
+            let sol = ridge_solve(x, y, lambda);
+            w = sol.0;
+            b = sol.1;
+        }
+        let sol = ridge_solve(x, y, lambda);
+        self.w = sol.0;
+        self.b = sol.1;
+    }
+
+    fn predict_one(&self, x: &[f64]) -> f64 {
+        dot(&self.w, x) + self.b
+    }
+}
+
+/// Lasso via cyclic coordinate descent (Table 4: alpha=1.0, 1000 epochs).
+#[derive(Debug, Clone)]
+pub struct Lasso {
+    pub alpha: f64,
+    pub epochs: usize,
+    pub w: Vec<f64>,
+    pub b: f64,
+}
+
+impl Default for Lasso {
+    fn default() -> Self {
+        Lasso { alpha: 1.0, epochs: 1000, w: Vec::new(), b: 0.0 }
+    }
+}
+
+fn soft_threshold(z: f64, g: f64) -> f64 {
+    if z > g {
+        z - g
+    } else if z < -g {
+        z + g
+    } else {
+        0.0
+    }
+}
+
+impl Regressor for Lasso {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert!(!x.is_empty());
+        let n = x.len();
+        let d = x[0].len();
+        self.w = vec![0.0; d];
+        self.b = y.iter().sum::<f64>() / n as f64;
+        // column norms
+        let col_sq: Vec<f64> = (0..d)
+            .map(|j| x.iter().map(|r| r[j] * r[j]).sum::<f64>())
+            .collect();
+        let mut resid: Vec<f64> = x
+            .iter()
+            .zip(y)
+            .map(|(r, &t)| t - self.b - dot(&self.w, r))
+            .collect();
+        for _ in 0..self.epochs {
+            let mut max_change = 0.0f64;
+            for j in 0..d {
+                if col_sq[j] < 1e-12 {
+                    continue;
+                }
+                let wj = self.w[j];
+                // rho = x_j . (resid + wj * x_j)
+                let rho: f64 =
+                    x.iter().zip(&resid).map(|(r, &e)| r[j] * (e + wj * r[j])).sum();
+                let new_wj = soft_threshold(rho, self.alpha * n as f64) / col_sq[j];
+                if new_wj != wj {
+                    let delta = new_wj - wj;
+                    for (e, r) in resid.iter_mut().zip(x) {
+                        *e -= delta * r[j];
+                    }
+                    self.w[j] = new_wj;
+                    max_change = max_change.max(delta.abs());
+                }
+            }
+            // refit intercept
+            let mean_resid = resid.iter().sum::<f64>() / n as f64;
+            if mean_resid.abs() > 1e-12 {
+                self.b += mean_resid;
+                for e in &mut resid {
+                    *e -= mean_resid;
+                }
+            }
+            if max_change < 1e-9 {
+                break;
+            }
+        }
+    }
+
+    fn predict_one(&self, x: &[f64]) -> f64 {
+        dot(&self.w, x) + self.b
+    }
+}
+
+/// LARS approximated as forward stepwise selection with exact
+/// least-squares refits on the active set (Table 4: up to 500 non-zero
+/// coefficients — here bounded by the feature count).
+#[derive(Debug, Clone)]
+pub struct Lars {
+    pub max_nonzero: usize,
+    pub w: Vec<f64>,
+    pub b: f64,
+}
+
+impl Default for Lars {
+    fn default() -> Self {
+        Lars { max_nonzero: 500, w: Vec::new(), b: 0.0 }
+    }
+}
+
+impl Regressor for Lars {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert!(!x.is_empty());
+        let n = x.len();
+        let d = x[0].len();
+        self.w = vec![0.0; d];
+        self.b = y.iter().sum::<f64>() / n as f64;
+        let mut active: Vec<usize> = Vec::new();
+        let mut resid: Vec<f64> = y.iter().map(|&t| t - self.b).collect();
+        for _ in 0..self.max_nonzero.min(d) {
+            // most correlated inactive feature
+            let mut best: Option<(f64, usize)> = None;
+            for j in 0..d {
+                if active.contains(&j) {
+                    continue;
+                }
+                let c: f64 = x.iter().zip(&resid).map(|(r, &e)| r[j] * e).sum();
+                if best.map_or(true, |(bc, _)| c.abs() > bc) {
+                    best = Some((c.abs(), j));
+                }
+            }
+            let Some((corr, j)) = best else { break };
+            if corr < 1e-9 {
+                break;
+            }
+            active.push(j);
+            // least-squares refit on active set
+            let xa: Vec<Vec<f64>> =
+                x.iter().map(|r| active.iter().map(|&a| r[a]).collect()).collect();
+            let (wa, ba) = ridge_solve(&xa, y, 1e-10);
+            self.w = vec![0.0; d];
+            for (k, &a) in active.iter().enumerate() {
+                self.w[a] = wa[k];
+            }
+            self.b = ba;
+            for (e, (r, &t)) in resid.iter_mut().zip(x.iter().zip(y)) {
+                *e = t - self.b - dot(&self.w, r);
+            }
+        }
+    }
+
+    fn predict_one(&self, x: &[f64]) -> f64 {
+        dot(&self.w, x) + self.b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::Rng;
+    use crate::ml::metrics::r2;
+    use crate::ml::Regressor;
+
+    fn linear_data(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let a = rng.normal();
+            let b = rng.normal();
+            let c = rng.normal(); // irrelevant feature
+            x.push(vec![a, b, c]);
+            y.push(2.0 * a - 1.0 * b + 3.0 + 0.01 * rng.normal());
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn bayesian_ridge_recovers_weights() {
+        let (x, y) = linear_data(200, 31);
+        let mut m = BayesianRidge::default();
+        m.fit(&x, &y);
+        assert!((m.w[0] - 2.0).abs() < 0.05, "{:?}", m.w);
+        assert!((m.w[1] + 1.0).abs() < 0.05);
+        assert!(r2(&y, &m.predict(&x)) > 0.99);
+    }
+
+    #[test]
+    fn lasso_sparsifies_irrelevant_feature() {
+        let (x, y) = linear_data(200, 32);
+        let mut m = Lasso { alpha: 0.05, ..Default::default() };
+        m.fit(&x, &y);
+        assert!(m.w[2].abs() < 0.05, "irrelevant weight should shrink: {:?}", m.w);
+        assert!(r2(&y, &m.predict(&x)) > 0.95);
+    }
+
+    #[test]
+    fn strong_lasso_kills_everything() {
+        let (x, y) = linear_data(100, 33);
+        let mut m = Lasso { alpha: 1e3, ..Default::default() };
+        m.fit(&x, &y);
+        assert!(m.w.iter().all(|w| w.abs() < 1e-9));
+    }
+
+    #[test]
+    fn lars_selects_in_correlation_order() {
+        let (x, y) = linear_data(200, 34);
+        let mut m = Lars { max_nonzero: 2, ..Default::default() };
+        m.fit(&x, &y);
+        // with 2 slots it should pick features 0 and 1, not 2
+        assert!(m.w[2].abs() < 1e-9, "{:?}", m.w);
+        assert!(r2(&y, &m.predict(&x)) > 0.99);
+    }
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Evaluation metrics: accuracy and macro-F1 for classification (Table 5),
+//! R² and MSE for regression (Fig. 11).
+
+/// Fraction of exact label matches.
+pub fn accuracy(y_true: &[usize], y_pred: &[usize]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    if y_true.is_empty() {
+        return 0.0;
+    }
+    let hits = y_true.iter().zip(y_pred).filter(|(a, b)| a == b).count();
+    hits as f64 / y_true.len() as f64
+}
+
+/// Confusion matrix `c[true][pred]` over `k` classes.
+pub fn confusion(y_true: &[usize], y_pred: &[usize], k: usize) -> Vec<Vec<usize>> {
+    let mut c = vec![vec![0usize; k]; k];
+    for (&t, &p) in y_true.iter().zip(y_pred) {
+        c[t][p] += 1;
+    }
+    c
+}
+
+/// Macro-averaged F1 over the classes *present in y_true* (scikit-learn's
+/// behaviour with `labels=present`): classes never seen contribute no term.
+pub fn f1_macro(y_true: &[usize], y_pred: &[usize], k: usize) -> f64 {
+    let c = confusion(y_true, y_pred, k);
+    let mut f1_sum = 0.0;
+    let mut present = 0usize;
+    for cls in 0..k {
+        let tp = c[cls][cls] as f64;
+        let fn_: f64 = (0..k).filter(|&j| j != cls).map(|j| c[cls][j] as f64).sum();
+        let fp: f64 = (0..k).filter(|&j| j != cls).map(|j| c[j][cls] as f64).sum();
+        if tp + fn_ == 0.0 {
+            continue; // class absent from y_true
+        }
+        present += 1;
+        let denom = 2.0 * tp + fp + fn_;
+        if denom > 0.0 {
+            f1_sum += 2.0 * tp / denom;
+        }
+    }
+    if present == 0 {
+        0.0
+    } else {
+        f1_sum / present as f64
+    }
+}
+
+/// Mean squared error.
+pub fn mse(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    if y_true.is_empty() {
+        return 0.0;
+    }
+    y_true
+        .iter()
+        .zip(y_pred)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        / y_true.len() as f64
+}
+
+/// Coefficient of determination R².
+pub fn r2(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    if y_true.is_empty() {
+        return 0.0;
+    }
+    let mean = y_true.iter().sum::<f64>() / y_true.len() as f64;
+    let ss_tot: f64 = y_true.iter().map(|v| (v - mean) * (v - mean)).sum();
+    let ss_res: f64 = y_true.iter().zip(y_pred).map(|(a, b)| (a - b) * (a - b)).sum();
+    if ss_tot == 0.0 {
+        if ss_res == 0.0 { 1.0 } else { 0.0 }
+    } else {
+        1.0 - ss_res / ss_tot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[0, 1, 2, 1], &[0, 1, 1, 1]), 0.75);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn perfect_f1_is_one() {
+        let y = [0usize, 1, 2, 0, 1, 2];
+        assert!((f1_macro(&y, &y, 3) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_hand_computed_binary() {
+        // true: [1,1,0,0], pred: [1,0,0,1]
+        // class 1: tp=1 fp=1 fn=1 -> f1 = 2/4 = .5 ; class 0 symmetric
+        let f = f1_macro(&[1, 1, 0, 0], &[1, 0, 0, 1], 2);
+        assert!((f - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_ignores_absent_classes() {
+        // only class 0 present in truth; predicting all 0 is perfect
+        let f = f1_macro(&[0, 0, 0], &[0, 0, 0], 4);
+        assert!((f - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn confusion_layout() {
+        let c = confusion(&[0, 1, 1], &[1, 1, 0], 2);
+        assert_eq!(c, vec![vec![0, 1], vec![1, 1]]);
+    }
+
+    #[test]
+    fn mse_and_r2() {
+        let t = [1.0, 2.0, 3.0];
+        assert_eq!(mse(&t, &t), 0.0);
+        assert_eq!(r2(&t, &t), 1.0);
+        let mean_pred = [2.0, 2.0, 2.0];
+        assert!(r2(&t, &mean_pred).abs() < 1e-12); // predicting mean -> 0
+        assert!((mse(&t, &mean_pred) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r2_constant_truth() {
+        assert_eq!(r2(&[5.0, 5.0], &[5.0, 5.0]), 1.0);
+        assert_eq!(r2(&[5.0, 5.0], &[4.0, 5.0]), 0.0);
+    }
+}

@@ -1,0 +1,377 @@
+//! Multi-layer perceptron — Table 1 hyperparameters: hidden size
+//! {20..200}, depth {1..10}, activation {identity, logistic, tanh, relu};
+//! Table 4: ReLU, 5 layers x 100/200 nodes, Adam, lr 1e-3/1e-4.
+//!
+//! One implementation serves both tasks: softmax + cross-entropy head for
+//! classification, linear + MSE head for regression.
+
+use super::{Classifier, Regressor};
+use crate::gen::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    Identity,
+    Logistic,
+    Tanh,
+    Relu,
+}
+
+impl Activation {
+    pub const ALL: [Activation; 4] =
+        [Activation::Identity, Activation::Logistic, Activation::Tanh, Activation::Relu];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Activation::Identity => "identity",
+            Activation::Logistic => "logistic",
+            Activation::Tanh => "tanh",
+            Activation::Relu => "relu",
+        }
+    }
+
+    fn f(self, x: f64) -> f64 {
+        match self {
+            Activation::Identity => x,
+            Activation::Logistic => 1.0 / (1.0 + (-x).exp()),
+            Activation::Tanh => x.tanh(),
+            Activation::Relu => x.max(0.0),
+        }
+    }
+
+    /// Derivative expressed in terms of the activation output `a`.
+    fn df(self, a: f64) -> f64 {
+        match self {
+            Activation::Identity => 1.0,
+            Activation::Logistic => a * (1.0 - a),
+            Activation::Tanh => 1.0 - a * a,
+            Activation::Relu => {
+                if a > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+}
+
+/// Dense layer with Adam state.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    w: Vec<f64>, // (out, in) row-major
+    b: Vec<f64>,
+    n_in: usize,
+    n_out: usize,
+    // Adam moments
+    mw: Vec<f64>,
+    vw: Vec<f64>,
+    mb: Vec<f64>,
+    vb: Vec<f64>,
+}
+
+impl Layer {
+    fn new(n_in: usize, n_out: usize, rng: &mut Rng) -> Self {
+        let scale = (2.0 / (n_in + n_out) as f64).sqrt();
+        let w = (0..n_in * n_out).map(|_| rng.normal() * scale).collect();
+        Layer {
+            w,
+            b: vec![0.0; n_out],
+            n_in,
+            n_out,
+            mw: vec![0.0; n_in * n_out],
+            vw: vec![0.0; n_in * n_out],
+            mb: vec![0.0; n_out],
+            vb: vec![0.0; n_out],
+        }
+    }
+
+    fn forward(&self, x: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        for o in 0..self.n_out {
+            let row = &self.w[o * self.n_in..(o + 1) * self.n_in];
+            out.push(self.b[o] + row.iter().zip(x).map(|(a, b)| a * b).sum::<f64>());
+        }
+    }
+}
+
+const BETA1: f64 = 0.9;
+const BETA2: f64 = 0.999;
+const EPS: f64 = 1e-8;
+
+/// Core network shared by both heads.
+#[derive(Debug, Clone)]
+pub struct Net {
+    layers: Vec<Layer>,
+    act: Activation,
+    t: u64,
+}
+
+impl Net {
+    fn new(dims: &[usize], act: Activation, rng: &mut Rng) -> Self {
+        let layers = dims.windows(2).map(|w| Layer::new(w[0], w[1], rng)).collect();
+        Net { layers, act, t: 0 }
+    }
+
+    /// Forward pass keeping activations; hidden layers use `act`, the
+    /// final layer is linear (head applied by caller).
+    fn forward(&self, x: &[f64]) -> Vec<Vec<f64>> {
+        let mut acts = vec![x.to_vec()];
+        let mut buf = Vec::new();
+        for (li, layer) in self.layers.iter().enumerate() {
+            layer.forward(acts.last().unwrap(), &mut buf);
+            let mut a = std::mem::take(&mut buf);
+            if li + 1 < self.layers.len() {
+                for v in &mut a {
+                    *v = self.act.f(*v);
+                }
+            }
+            acts.push(a);
+        }
+        acts
+    }
+
+    /// Backprop one sample given output-layer delta; Adam update.
+    fn backward(&mut self, acts: &[Vec<f64>], mut delta: Vec<f64>, lr: f64) {
+        self.t += 1;
+        let bc1 = 1.0 - BETA1.powi(self.t as i32);
+        let bc2 = 1.0 - BETA2.powi(self.t as i32);
+        for li in (0..self.layers.len()).rev() {
+            let input = &acts[li];
+            // next delta (before this layer's update)
+            let prev_delta: Option<Vec<f64>> = if li > 0 {
+                let layer = &self.layers[li];
+                let mut pd = vec![0.0; layer.n_in];
+                for o in 0..layer.n_out {
+                    let row = &layer.w[o * layer.n_in..(o + 1) * layer.n_in];
+                    for (p, wv) in pd.iter_mut().zip(row) {
+                        *p += wv * delta[o];
+                    }
+                }
+                for (p, a) in pd.iter_mut().zip(&acts[li]) {
+                    *p *= self.act.df(*a);
+                }
+                Some(pd)
+            } else {
+                None
+            };
+            let layer = &mut self.layers[li];
+            for o in 0..layer.n_out {
+                let g_b = delta[o];
+                layer.mb[o] = BETA1 * layer.mb[o] + (1.0 - BETA1) * g_b;
+                layer.vb[o] = BETA2 * layer.vb[o] + (1.0 - BETA2) * g_b * g_b;
+                layer.b[o] -= lr * (layer.mb[o] / bc1) / ((layer.vb[o] / bc2).sqrt() + EPS);
+                let base = o * layer.n_in;
+                for i in 0..layer.n_in {
+                    let g = g_b * input[i];
+                    let idx = base + i;
+                    layer.mw[idx] = BETA1 * layer.mw[idx] + (1.0 - BETA1) * g;
+                    layer.vw[idx] = BETA2 * layer.vw[idx] + (1.0 - BETA2) * g * g;
+                    layer.w[idx] -=
+                        lr * (layer.mw[idx] / bc1) / ((layer.vw[idx] / bc2).sqrt() + EPS);
+                }
+            }
+            if let Some(pd) = prev_delta {
+                delta = pd;
+            }
+        }
+    }
+}
+
+fn softmax(z: &[f64]) -> Vec<f64> {
+    let m = z.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let e: Vec<f64> = z.iter().map(|v| (v - m).exp()).collect();
+    let s: f64 = e.iter().sum();
+    e.into_iter().map(|v| v / s).collect()
+}
+
+/// MLP classifier (softmax head, cross-entropy loss, Adam).
+#[derive(Debug, Clone)]
+pub struct MlpClassifier {
+    pub hidden: Vec<usize>,
+    pub activation: Activation,
+    pub epochs: usize,
+    pub lr: f64,
+    pub seed: u64,
+    pub net: Option<Net>,
+    pub n_classes: usize,
+}
+
+impl Default for MlpClassifier {
+    fn default() -> Self {
+        // paper Table 4: 5 layers x 100 nodes, ReLU, Adam, lr=1e-3, 200 epochs
+        MlpClassifier {
+            hidden: vec![100; 5],
+            activation: Activation::Relu,
+            epochs: 200,
+            lr: 1e-3,
+            seed: 0,
+            net: None,
+            n_classes: 0,
+        }
+    }
+}
+
+impl Classifier for MlpClassifier {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[usize]) {
+        assert!(!x.is_empty());
+        self.n_classes = super::n_classes(y).max(2);
+        let mut dims = vec![x[0].len()];
+        dims.extend_from_slice(&self.hidden);
+        dims.push(self.n_classes);
+        let mut rng = Rng::new(self.seed ^ 0x313A55);
+        let mut net = Net::new(&dims, self.activation, &mut rng);
+        let n = x.len();
+        for _ in 0..self.epochs {
+            for _ in 0..n {
+                let i = rng.below(n);
+                let acts = net.forward(&x[i]);
+                let probs = softmax(acts.last().unwrap());
+                let mut delta = probs;
+                delta[y[i]] -= 1.0; // dCE/dz
+                net.backward(&acts, delta, self.lr);
+            }
+        }
+        self.net = Some(net);
+    }
+
+    fn predict_one(&self, x: &[f64]) -> usize {
+        let net = self.net.as_ref().expect("fit first");
+        let acts = net.forward(x);
+        let z = acts.last().unwrap();
+        z.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// MLP regressor (linear head, MSE loss, Adam).
+#[derive(Debug, Clone)]
+pub struct MlpRegressor {
+    pub hidden: Vec<usize>,
+    pub activation: Activation,
+    pub epochs: usize,
+    pub lr: f64,
+    pub seed: u64,
+    pub net: Option<Net>,
+}
+
+impl Default for MlpRegressor {
+    fn default() -> Self {
+        // paper Table 4: 5 layers x 200 nodes, ReLU, Adam, lr=1e-4
+        MlpRegressor {
+            hidden: vec![200; 5],
+            activation: Activation::Relu,
+            epochs: 200,
+            lr: 1e-4,
+            seed: 0,
+            net: None,
+        }
+    }
+}
+
+impl Regressor for MlpRegressor {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert!(!x.is_empty());
+        let mut dims = vec![x[0].len()];
+        dims.extend_from_slice(&self.hidden);
+        dims.push(1);
+        let mut rng = Rng::new(self.seed ^ 0x313A66);
+        let mut net = Net::new(&dims, self.activation, &mut rng);
+        let n = x.len();
+        for _ in 0..self.epochs {
+            for _ in 0..n {
+                let i = rng.below(n);
+                let acts = net.forward(&x[i]);
+                let pred = acts.last().unwrap()[0];
+                let delta = vec![pred - y[i]]; // dMSE/2 dz
+                net.backward(&acts, delta, self.lr);
+            }
+        }
+        self.net = Some(net);
+    }
+
+    fn predict_one(&self, x: &[f64]) -> f64 {
+        let net = self.net.as_ref().expect("fit first");
+        net.forward(x).last().unwrap()[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics::{accuracy, r2};
+    use crate::ml::testdata;
+
+    #[test]
+    fn mlp_solves_xor() {
+        let (x, y) = testdata::xor(40, 15);
+        let mut m = MlpClassifier {
+            hidden: vec![16, 16],
+            epochs: 120,
+            lr: 5e-3,
+            ..Default::default()
+        };
+        m.fit(&x, &y);
+        let acc = accuracy(&y, &m.predict(&x));
+        assert!(acc > 0.95, "xor acc {acc}");
+    }
+
+    #[test]
+    fn mlp_classifies_blobs() {
+        let (x, y) = testdata::blobs(30, 16);
+        let mut m = MlpClassifier { hidden: vec![20], epochs: 80, lr: 5e-3, ..Default::default() };
+        m.fit(&x, &y);
+        assert!(accuracy(&y, &m.predict(&x)) > 0.95);
+    }
+
+    #[test]
+    fn mlp_regresses() {
+        let (x, y) = testdata::friedman(300, 17);
+        let mut m = MlpRegressor {
+            hidden: vec![32, 32],
+            epochs: 150,
+            lr: 3e-3,
+            ..Default::default()
+        };
+        m.fit(&x, &y);
+        let score = r2(&y, &m.predict(&x));
+        assert!(score > 0.9, "r2 {score}");
+    }
+
+    #[test]
+    fn activations_all_run() {
+        let (x, y) = testdata::blobs(15, 18);
+        for a in Activation::ALL {
+            let mut m = MlpClassifier {
+                hidden: vec![12],
+                activation: a,
+                epochs: 60,
+                lr: 5e-3,
+                ..Default::default()
+            };
+            m.fit(&x, &y);
+            // identity can only do linear boundaries but blobs are separable
+            assert!(accuracy(&y, &m.predict(&x)) > 0.8, "{}", a.name());
+        }
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn activation_derivatives_match_definition() {
+        for a in Activation::ALL {
+            let x = 0.3;
+            let fx = a.f(x);
+            let eps = 1e-6;
+            let num = (a.f(x + eps) - a.f(x - eps)) / (2.0 * eps);
+            assert!((a.df(fx) - num).abs() < 1e-5, "{}", a.name());
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! From-scratch ML library — the scikit-learn stand-in (DESIGN.md §1).
+//!
+//! Implements the paper's model zoo (Tables 1 & 4): nearest centroid,
+//! decision tree, non-linear (kernel) SVM, gradient boosting, random
+//! forest and MLP classifiers; Bayesian ridge, lasso, LARS, decision
+//! tree, random forest and MLP regressors — plus metrics, splitting,
+//! scaling, and the Table 6 baselines.
+
+pub mod baselines;
+pub mod boosting;
+pub mod centroid;
+pub mod forest;
+pub mod linalg;
+pub mod linear;
+pub mod metrics;
+pub mod mlp;
+pub mod scaler;
+pub mod split;
+pub mod svm;
+pub mod tree;
+
+/// Multi-class classifier interface (labels are dense 0..k).
+pub trait Classifier {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[usize]);
+    fn predict_one(&self, x: &[f64]) -> usize;
+
+    fn predict(&self, x: &[Vec<f64>]) -> Vec<usize> {
+        x.iter().map(|r| self.predict_one(r)).collect()
+    }
+}
+
+/// Scalar regressor interface.
+pub trait Regressor {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]);
+    fn predict_one(&self, x: &[f64]) -> f64;
+
+    fn predict(&self, x: &[Vec<f64>]) -> Vec<f64> {
+        x.iter().map(|r| self.predict_one(r)).collect()
+    }
+}
+
+/// Number of classes implied by a label vector.
+pub fn n_classes(y: &[usize]) -> usize {
+    y.iter().copied().max().map_or(0, |m| m + 1)
+}
+
+#[cfg(test)]
+pub(crate) mod testdata {
+    use crate::gen::Rng;
+
+    /// Three Gaussian blobs in 2-D — linearly separable-ish.
+    pub fn blobs(n_per: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let centers = [(0.0, 0.0), (4.0, 4.0), (0.0, 5.0)];
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for (c, &(cx, cy)) in centers.iter().enumerate() {
+            for _ in 0..n_per {
+                x.push(vec![cx + 0.6 * rng.normal(), cy + 0.6 * rng.normal()]);
+                y.push(c);
+            }
+        }
+        (x, y)
+    }
+
+    /// XOR — requires a non-linear decision boundary.
+    pub fn xor(n_per: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for q in 0..4usize {
+            let (sx, sy) = (if q & 1 == 0 { -1.0 } else { 1.0f64 }, if q & 2 == 0 { -1.0 } else { 1.0f64 });
+            for _ in 0..n_per {
+                x.push(vec![sx * (1.0 + 0.3 * rng.normal().abs()), sy * (1.0 + 0.3 * rng.normal().abs())]);
+                y.push(((q & 1) ^ ((q >> 1) & 1)) as usize);
+            }
+        }
+        (x, y)
+    }
+
+    /// y = smooth nonlinear function of 2 features + small noise.
+    pub fn friedman(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let a = rng.f64() * 4.0 - 2.0;
+            let b = rng.f64() * 4.0 - 2.0;
+            x.push(vec![a, b]);
+            y.push((a * 2.0).sin() + 0.5 * b * b + 0.05 * rng.normal());
+        }
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn n_classes_from_labels() {
+        assert_eq!(super::n_classes(&[0, 2, 1, 2]), 3);
+        assert_eq!(super::n_classes(&[]), 0);
+    }
+}

@@ -1,0 +1,91 @@
+//! Feature standardization (zero mean, unit variance) — fitted on the
+//! training split only, applied everywhere (the usual sklearn pipeline).
+
+/// Per-feature standard scaler.
+#[derive(Debug, Clone, Default)]
+pub struct StandardScaler {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+}
+
+impl StandardScaler {
+    pub fn fit(x: &[Vec<f64>]) -> Self {
+        let n = x.len();
+        if n == 0 {
+            return Self::default();
+        }
+        let d = x[0].len();
+        let mut mean = vec![0.0; d];
+        for row in x {
+            for (m, v) in mean.iter_mut().zip(row) {
+                *m += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= n as f64;
+        }
+        let mut var = vec![0.0; d];
+        for row in x {
+            for j in 0..d {
+                let dlt = row[j] - mean[j];
+                var[j] += dlt * dlt;
+            }
+        }
+        let std = var
+            .into_iter()
+            .map(|v| {
+                let s = (v / n as f64).sqrt();
+                if s < 1e-12 { 1.0 } else { s }
+            })
+            .collect();
+        StandardScaler { mean, std }
+    }
+
+    pub fn transform_row(&self, row: &[f64]) -> Vec<f64> {
+        row.iter()
+            .enumerate()
+            .map(|(j, v)| (v - self.mean[j]) / self.std[j])
+            .collect()
+    }
+
+    pub fn transform(&self, x: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        x.iter().map(|r| self.transform_row(r)).collect()
+    }
+
+    pub fn fit_transform(x: &[Vec<f64>]) -> (Self, Vec<Vec<f64>>) {
+        let s = Self::fit(x);
+        let t = s.transform(x);
+        (s, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standardizes_to_zero_mean_unit_var() {
+        let x = vec![vec![1.0, 10.0], vec![2.0, 20.0], vec![3.0, 30.0]];
+        let (_, t) = StandardScaler::fit_transform(&x);
+        for j in 0..2 {
+            let mean: f64 = t.iter().map(|r| r[j]).sum::<f64>() / 3.0;
+            let var: f64 = t.iter().map(|r| r[j] * r[j]).sum::<f64>() / 3.0;
+            assert!(mean.abs() < 1e-12);
+            assert!((var - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn constant_feature_untouched() {
+        let x = vec![vec![5.0], vec![5.0]];
+        let (s, t) = StandardScaler::fit_transform(&x);
+        assert_eq!(s.std[0], 1.0);
+        assert_eq!(t[0][0], 0.0);
+    }
+
+    #[test]
+    fn transform_uses_train_stats() {
+        let s = StandardScaler { mean: vec![10.0], std: vec![2.0] };
+        assert_eq!(s.transform_row(&[14.0]), vec![2.0]);
+    }
+}

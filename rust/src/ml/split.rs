@@ -1,0 +1,90 @@
+//! Train/test splitting (the paper's 80/20 protocol, §6.4) and K-fold
+//! cross-validation indices — seeded and deterministic.
+
+use crate::gen::Rng;
+
+/// Fisher-Yates shuffled index vector.
+pub fn shuffled_indices(n: usize, seed: u64) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Rng::new(seed);
+    for i in (1..n).rev() {
+        idx.swap(i, rng.below(i + 1));
+    }
+    idx
+}
+
+/// Split indices into (train, test) with `test_frac` in the test side.
+pub fn train_test_indices(n: usize, test_frac: f64, seed: u64) -> (Vec<usize>, Vec<usize>) {
+    let idx = shuffled_indices(n, seed);
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    let n_test = n_test.min(n);
+    (idx[n_test..].to_vec(), idx[..n_test].to_vec())
+}
+
+/// Gather rows of a feature matrix by index.
+pub fn take_x(x: &[Vec<f64>], idx: &[usize]) -> Vec<Vec<f64>> {
+    idx.iter().map(|&i| x[i].clone()).collect()
+}
+
+/// Gather elements of a label/target vector by index.
+pub fn take<T: Copy>(y: &[T], idx: &[usize]) -> Vec<T> {
+    idx.iter().map(|&i| y[i]).collect()
+}
+
+/// K-fold index sets: returns `k` (train, valid) pairs.
+pub fn kfold(n: usize, k: usize, seed: u64) -> Vec<(Vec<usize>, Vec<usize>)> {
+    assert!(k >= 2 && n >= k);
+    let idx = shuffled_indices(n, seed);
+    let mut out = Vec::with_capacity(k);
+    for f in 0..k {
+        let lo = f * n / k;
+        let hi = (f + 1) * n / k;
+        let valid: Vec<usize> = idx[lo..hi].to_vec();
+        let train: Vec<usize> = idx[..lo].iter().chain(&idx[hi..]).copied().collect();
+        out.push((train, valid));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_is_partition() {
+        let (tr, te) = train_test_indices(100, 0.2, 7);
+        assert_eq!(te.len(), 20);
+        assert_eq!(tr.len(), 80);
+        let mut all: Vec<usize> = tr.iter().chain(&te).copied().collect();
+        all.sort();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        assert_eq!(train_test_indices(50, 0.2, 1), train_test_indices(50, 0.2, 1));
+        assert_ne!(train_test_indices(50, 0.2, 1).1, train_test_indices(50, 0.2, 2).1);
+    }
+
+    #[test]
+    fn kfold_covers_everything_once() {
+        let folds = kfold(23, 5, 3);
+        assert_eq!(folds.len(), 5);
+        let mut seen = vec![0usize; 23];
+        for (tr, va) in &folds {
+            assert_eq!(tr.len() + va.len(), 23);
+            for &i in va {
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn take_helpers() {
+        let x = vec![vec![1.0], vec![2.0], vec![3.0]];
+        let y = [10usize, 20, 30];
+        assert_eq!(take_x(&x, &[2, 0]), vec![vec![3.0], vec![1.0]]);
+        assert_eq!(take(&y, &[1]), vec![20]);
+    }
+}

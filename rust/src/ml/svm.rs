@@ -1,0 +1,226 @@
+//! Non-linear (kernel) SVM — Table 1 kernels: linear, poly, rbf, sigmoid.
+//!
+//! Trained as one-vs-rest kernel machines with Pegasos-style subgradient
+//! descent on the hinge loss in the kernel expansion (each training point
+//! carries a dual-ish coefficient). Equivalent decision family to SMO-
+//! trained SVC; chosen for implementation economy and deterministic
+//! behaviour. This is also the BestSF baseline model (Table 6).
+
+use super::Classifier;
+use crate::gen::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Kernel {
+    Linear,
+    /// Polynomial (gamma x.y + coef0)^degree.
+    Poly { degree: u32, gamma: f64, coef0: f64 },
+    /// RBF exp(-gamma ||x-y||^2).
+    Rbf { gamma: f64 },
+    /// tanh(gamma x.y + coef0).
+    Sigmoid { gamma: f64, coef0: f64 },
+}
+
+impl Kernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Linear => "linear",
+            Kernel::Poly { .. } => "poly",
+            Kernel::Rbf { .. } => "rbf",
+            Kernel::Sigmoid { .. } => "sigmoid",
+        }
+    }
+
+    fn eval(self, a: &[f64], b: &[f64]) -> f64 {
+        let dot: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+        match self {
+            Kernel::Linear => dot,
+            Kernel::Poly { degree, gamma, coef0 } => (gamma * dot + coef0).powi(degree as i32),
+            Kernel::Rbf { gamma } => {
+                let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+                (-gamma * d2).exp()
+            }
+            Kernel::Sigmoid { gamma, coef0 } => (gamma * dot + coef0).tanh(),
+        }
+    }
+}
+
+/// One-vs-rest kernel SVM.
+#[derive(Debug, Clone)]
+pub struct SvmClassifier {
+    pub kernel: Kernel,
+    /// Regularization strength (sklearn's C; lambda = 1/(C n)).
+    pub c: f64,
+    pub epochs: usize,
+    pub seed: u64,
+    pub support: Vec<Vec<f64>>,
+    /// alpha[class][support index].
+    pub alpha: Vec<Vec<f64>>,
+    pub bias: Vec<f64>,
+    pub n_classes: usize,
+}
+
+impl Default for SvmClassifier {
+    fn default() -> Self {
+        // paper Table 4: kernel=rbf, C=1.0, gamma=scale
+        SvmClassifier {
+            kernel: Kernel::Rbf { gamma: 0.5 },
+            c: 1.0,
+            epochs: 40,
+            seed: 0,
+            support: Vec::new(),
+            alpha: Vec::new(),
+            bias: Vec::new(),
+            n_classes: 0,
+        }
+    }
+}
+
+impl SvmClassifier {
+    /// sklearn's gamma="scale": 1 / (d * Var(X)).
+    pub fn gamma_scale(x: &[Vec<f64>]) -> f64 {
+        let n = x.len();
+        if n == 0 {
+            return 1.0;
+        }
+        let d = x[0].len();
+        let mut mean = vec![0.0; d];
+        for r in x {
+            for (m, v) in mean.iter_mut().zip(r) {
+                *m += v;
+            }
+        }
+        for m in &mut mean {
+            *m /= n as f64;
+        }
+        let mut var = 0.0;
+        for r in x {
+            for j in 0..d {
+                var += (r[j] - mean[j]) * (r[j] - mean[j]);
+            }
+        }
+        var /= (n * d) as f64;
+        if var < 1e-12 {
+            1.0
+        } else {
+            1.0 / (d as f64 * var)
+        }
+    }
+
+    fn decision(&self, cls: usize, x: &[f64]) -> f64 {
+        let mut s = self.bias[cls];
+        for (sv, &a) in self.support.iter().zip(&self.alpha[cls]) {
+            if a != 0.0 {
+                s += a * self.kernel.eval(sv, x);
+            }
+        }
+        s
+    }
+}
+
+impl Classifier for SvmClassifier {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[usize]) {
+        assert!(!x.is_empty());
+        let n = x.len();
+        self.n_classes = super::n_classes(y);
+        self.support = x.to_vec();
+        self.alpha = vec![vec![0.0; n]; self.n_classes];
+        self.bias = vec![0.0; self.n_classes];
+
+        // precompute kernel matrix (datasets here are small: n <= ~2k)
+        let mut k = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let v = self.kernel.eval(&x[i], &x[j]);
+                k[i * n + j] = v;
+                k[j * n + i] = v;
+            }
+        }
+
+        let lambda = 1.0 / (self.c * n as f64);
+        let mut rng = Rng::new(self.seed ^ 0x5F11);
+        for cls in 0..self.n_classes {
+            let targets: Vec<f64> =
+                y.iter().map(|&c| if c == cls { 1.0 } else { -1.0 }).collect();
+            let alpha = &mut self.alpha[cls];
+            let bias = &mut self.bias[cls];
+            let mut t = 0usize;
+            for _ in 0..self.epochs {
+                for _ in 0..n {
+                    t += 1;
+                    let i = rng.below(n);
+                    let eta = 1.0 / (lambda * t as f64);
+                    // margin of sample i under current expansion
+                    let mut m = *bias;
+                    for j in 0..n {
+                        if alpha[j] != 0.0 {
+                            m += alpha[j] * k[j * n + i];
+                        }
+                    }
+                    // decay (regularization applies to all coefficients)
+                    let decay = 1.0 - eta * lambda;
+                    for a in alpha.iter_mut() {
+                        *a *= decay;
+                    }
+                    if targets[i] * m < 1.0 {
+                        alpha[i] += eta * targets[i] / n as f64;
+                        *bias += eta * targets[i] * 0.01;
+                    }
+                }
+            }
+        }
+    }
+
+    fn predict_one(&self, x: &[f64]) -> usize {
+        (0..self.n_classes)
+            .max_by(|&a, &b| self.decision(a, x).partial_cmp(&self.decision(b, x)).unwrap())
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics::accuracy;
+    use crate::ml::testdata;
+
+    #[test]
+    fn rbf_solves_xor() {
+        let (x, y) = testdata::xor(30, 13);
+        let mut s = SvmClassifier {
+            kernel: Kernel::Rbf { gamma: 1.0 },
+            epochs: 60,
+            ..Default::default()
+        };
+        s.fit(&x, &y);
+        let acc = accuracy(&y, &s.predict(&x));
+        assert!(acc > 0.9, "rbf xor acc {acc}");
+    }
+
+    #[test]
+    fn linear_separates_blobs() {
+        let (x, y) = testdata::blobs(30, 14);
+        let mut s = SvmClassifier { kernel: Kernel::Linear, epochs: 60, ..Default::default() };
+        s.fit(&x, &y);
+        assert!(accuracy(&y, &s.predict(&x)) > 0.9);
+    }
+
+    #[test]
+    fn kernel_evals() {
+        assert_eq!(Kernel::Linear.eval(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        let p = Kernel::Poly { degree: 2, gamma: 1.0, coef0: 1.0 }.eval(&[1.0], &[2.0]);
+        assert_eq!(p, 9.0);
+        let r = Kernel::Rbf { gamma: 1.0 }.eval(&[0.0], &[0.0]);
+        assert_eq!(r, 1.0);
+        let s = Kernel::Sigmoid { gamma: 1.0, coef0: 0.0 }.eval(&[1.0], &[0.0]);
+        assert_eq!(s, 0.0);
+    }
+
+    #[test]
+    fn gamma_scale_sane() {
+        let x = vec![vec![0.0, 0.0], vec![2.0, 2.0]];
+        let g = SvmClassifier::gamma_scale(&x);
+        assert!(g > 0.0 && g.is_finite());
+        // variance per spec: mean=1, var=1 over all entries -> 1/(2*1)
+        assert!((g - 0.5).abs() < 1e-9, "{g}");
+    }
+}

@@ -1,0 +1,512 @@
+//! CART decision trees — the paper's winning classifier (Table 5) and a
+//! Fig. 11 regressor. Supports the Table 1 hyperparameters: criterion
+//! (gini / entropy / log_loss) and splitter (best / random), plus
+//! max_depth and min_samples_split.
+
+use super::{Classifier, Regressor};
+use crate::gen::Rng;
+
+/// Split-quality criterion (log_loss == entropy, as in sklearn).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Criterion {
+    Gini,
+    Entropy,
+    LogLoss,
+}
+
+impl Criterion {
+    pub const ALL: [Criterion; 3] = [Criterion::Gini, Criterion::Entropy, Criterion::LogLoss];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Criterion::Gini => "gini",
+            Criterion::Entropy => "entropy",
+            Criterion::LogLoss => "log_loss",
+        }
+    }
+
+    fn impurity(self, counts: &[usize], total: usize) -> f64 {
+        if total == 0 {
+            return 0.0;
+        }
+        match self {
+            Criterion::Gini => {
+                let mut g = 1.0;
+                for &c in counts {
+                    let p = c as f64 / total as f64;
+                    g -= p * p;
+                }
+                g
+            }
+            Criterion::Entropy | Criterion::LogLoss => {
+                let mut h = 0.0;
+                for &c in counts {
+                    if c > 0 {
+                        let p = c as f64 / total as f64;
+                        h -= p * p.log2();
+                    }
+                }
+                h
+            }
+        }
+    }
+}
+
+/// Split-point selection strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Splitter {
+    /// Scan all thresholds for the impurity-optimal split.
+    Best,
+    /// sklearn's "random": one uniform threshold per feature, pick the
+    /// best feature (extra-trees style).
+    Random,
+}
+
+#[derive(Debug, Clone)]
+pub enum Node {
+    Leaf { value: f64, class: usize },
+    Split { feature: usize, threshold: f64, left: usize, right: usize },
+}
+
+/// Shared tree-growing machinery for both tasks.
+#[derive(Debug, Clone)]
+pub struct Tree {
+    nodes: Vec<Node>,
+}
+
+impl Tree {
+    fn predict_leaf(&self, x: &[f64]) -> (&f64, &usize) {
+        let mut cur = 0usize;
+        loop {
+            match &self.nodes[cur] {
+                Node::Leaf { value, class } => return (value, class),
+                Node::Split { feature, threshold, left, right } => {
+                    cur = if x[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    fn depth_from(&self, i: usize) -> usize {
+        match &self.nodes[i] {
+            Node::Leaf { .. } => 1,
+            Node::Split { left, right, .. } => {
+                1 + self.depth_from(*left).max(self.depth_from(*right))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Classifier
+// ---------------------------------------------------------------------
+
+/// CART classifier.
+#[derive(Debug, Clone)]
+pub struct DecisionTreeClassifier {
+    pub criterion: Criterion,
+    pub splitter: Splitter,
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    /// Features considered per split (None = all) — used by forests.
+    pub max_features: Option<usize>,
+    pub seed: u64,
+    pub tree: Option<Tree>,
+    pub n_classes: usize,
+}
+
+impl Default for DecisionTreeClassifier {
+    fn default() -> Self {
+        DecisionTreeClassifier {
+            criterion: Criterion::Gini,
+            splitter: Splitter::Best,
+            max_depth: 13, // paper Table 4: Depth = 13
+            min_samples_split: 2,
+            max_features: None,
+            seed: 0,
+            tree: None,
+            n_classes: 0,
+        }
+    }
+}
+
+struct ClsContext<'a> {
+    x: &'a [Vec<f64>],
+    y: &'a [usize],
+    k: usize,
+    criterion: Criterion,
+    splitter: Splitter,
+    max_depth: usize,
+    min_split: usize,
+    max_features: usize,
+    rng: Rng,
+}
+
+impl DecisionTreeClassifier {
+    fn grow(ctx: &mut ClsContext, nodes: &mut Vec<Node>, idx: &mut [usize], depth: usize) -> usize {
+        let mut counts = vec![0usize; ctx.k];
+        for &i in idx.iter() {
+            counts[ctx.y[i]] += 1;
+        }
+        let majority = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .map(|(c, _)| c)
+            .unwrap_or(0);
+        let node_impurity = ctx.criterion.impurity(&counts, idx.len());
+        let pure = counts.iter().filter(|&&c| c > 0).count() <= 1;
+
+        if pure || depth >= ctx.max_depth || idx.len() < ctx.min_split {
+            nodes.push(Node::Leaf { value: majority as f64, class: majority });
+            return nodes.len() - 1;
+        }
+
+        // candidate features
+        let d = ctx.x[0].len();
+        let mut feats: Vec<usize> = (0..d).collect();
+        if ctx.max_features < d {
+            for i in 0..ctx.max_features {
+                let j = i + ctx.rng.below(d - i);
+                feats.swap(i, j);
+            }
+            feats.truncate(ctx.max_features);
+        }
+
+        let mut best: Option<(f64, usize, f64)> = None; // (score, feat, thr)
+        let mut vals: Vec<(f64, usize)> = Vec::with_capacity(idx.len());
+        for &f in &feats {
+            vals.clear();
+            vals.extend(idx.iter().map(|&i| (ctx.x[i][f], ctx.y[i])));
+            vals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            if vals[0].0 == vals[vals.len() - 1].0 {
+                continue; // constant feature
+            }
+            match ctx.splitter {
+                Splitter::Best => {
+                    let mut left = vec![0usize; ctx.k];
+                    let mut right = counts.clone();
+                    let total = idx.len();
+                    for w in 0..vals.len() - 1 {
+                        left[vals[w].1] += 1;
+                        right[vals[w].1] -= 1;
+                        if vals[w].0 == vals[w + 1].0 {
+                            continue;
+                        }
+                        let nl = w + 1;
+                        let nr = total - nl;
+                        let score = (nl as f64 * ctx.criterion.impurity(&left, nl)
+                            + nr as f64 * ctx.criterion.impurity(&right, nr))
+                            / total as f64;
+                        let thr = 0.5 * (vals[w].0 + vals[w + 1].0);
+                        if best.map_or(true, |(s, _, _)| score < s) {
+                            best = Some((score, f, thr));
+                        }
+                    }
+                }
+                Splitter::Random => {
+                    let (lo, hi) = (vals[0].0, vals[vals.len() - 1].0);
+                    let thr = lo + ctx.rng.f64() * (hi - lo);
+                    let mut left = vec![0usize; ctx.k];
+                    let mut right = vec![0usize; ctx.k];
+                    for &(v, c) in &vals {
+                        if v <= thr {
+                            left[c] += 1;
+                        } else {
+                            right[c] += 1;
+                        }
+                    }
+                    let (nl, nr) = (left.iter().sum::<usize>(), right.iter().sum::<usize>());
+                    if nl == 0 || nr == 0 {
+                        continue;
+                    }
+                    let score = (nl as f64 * ctx.criterion.impurity(&left, nl)
+                        + nr as f64 * ctx.criterion.impurity(&right, nr))
+                        / idx.len() as f64;
+                    if best.map_or(true, |(s, _, _)| score < s) {
+                        best = Some((score, f, thr));
+                    }
+                }
+            }
+        }
+
+        match best {
+            Some((score, f, thr)) if score < node_impurity - 1e-12 => {
+                // partition idx in place
+                let mut mid = 0usize;
+                for i in 0..idx.len() {
+                    if ctx.x[idx[i]][f] <= thr {
+                        idx.swap(i, mid);
+                        mid += 1;
+                    }
+                }
+                if mid == 0 || mid == idx.len() {
+                    nodes.push(Node::Leaf { value: majority as f64, class: majority });
+                    return nodes.len() - 1;
+                }
+                let slot = nodes.len();
+                nodes.push(Node::Leaf { value: 0.0, class: 0 }); // placeholder
+                let (l_idx, r_idx) = idx.split_at_mut(mid);
+                let left = Self::grow(ctx, nodes, l_idx, depth + 1);
+                let right = Self::grow(ctx, nodes, r_idx, depth + 1);
+                nodes[slot] = Node::Split { feature: f, threshold: thr, left, right };
+                slot
+            }
+            _ => {
+                nodes.push(Node::Leaf { value: majority as f64, class: majority });
+                nodes.len() - 1
+            }
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.tree.as_ref().map_or(0, |t| t.depth_from(0))
+    }
+}
+
+impl Classifier for DecisionTreeClassifier {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[usize]) {
+        assert!(!x.is_empty());
+        self.n_classes = super::n_classes(y);
+        let d = x[0].len();
+        let mut ctx = ClsContext {
+            x,
+            y,
+            k: self.n_classes,
+            criterion: self.criterion,
+            splitter: self.splitter,
+            max_depth: self.max_depth.max(1),
+            min_split: self.min_samples_split.max(2),
+            max_features: self.max_features.unwrap_or(d).clamp(1, d),
+            rng: Rng::new(self.seed ^ 0xDEC1510),
+        };
+        let mut nodes = Vec::new();
+        let mut idx: Vec<usize> = (0..x.len()).collect();
+        Self::grow(&mut ctx, &mut nodes, &mut idx, 0);
+        self.tree = Some(Tree { nodes });
+    }
+
+    fn predict_one(&self, x: &[f64]) -> usize {
+        *self.tree.as_ref().expect("fit first").predict_leaf(x).1
+    }
+}
+
+// ---------------------------------------------------------------------
+// Regressor
+// ---------------------------------------------------------------------
+
+/// CART regressor (MSE criterion), used standalone (Fig. 11) and inside
+/// random forests / gradient boosting.
+#[derive(Debug, Clone)]
+pub struct DecisionTreeRegressor {
+    pub max_depth: usize,
+    pub min_samples_split: usize,
+    pub max_features: Option<usize>,
+    pub seed: u64,
+    pub tree: Option<Tree>,
+}
+
+impl Default for DecisionTreeRegressor {
+    fn default() -> Self {
+        DecisionTreeRegressor {
+            max_depth: usize::MAX, // paper Table 4: Depth = None
+            min_samples_split: 2,
+            max_features: None,
+            seed: 0,
+            tree: None,
+        }
+    }
+}
+
+struct RegContext<'a> {
+    x: &'a [Vec<f64>],
+    y: &'a [f64],
+    max_depth: usize,
+    min_split: usize,
+    max_features: usize,
+    rng: Rng,
+}
+
+impl DecisionTreeRegressor {
+    fn grow(ctx: &mut RegContext, nodes: &mut Vec<Node>, idx: &mut [usize], depth: usize) -> usize {
+        let n = idx.len() as f64;
+        let mean = idx.iter().map(|&i| ctx.y[i]).sum::<f64>() / n;
+        let sse: f64 = idx.iter().map(|&i| (ctx.y[i] - mean) * (ctx.y[i] - mean)).sum();
+
+        if sse < 1e-12 || depth >= ctx.max_depth || idx.len() < ctx.min_split {
+            nodes.push(Node::Leaf { value: mean, class: 0 });
+            return nodes.len() - 1;
+        }
+
+        let d = ctx.x[0].len();
+        let mut feats: Vec<usize> = (0..d).collect();
+        if ctx.max_features < d {
+            for i in 0..ctx.max_features {
+                let j = i + ctx.rng.below(d - i);
+                feats.swap(i, j);
+            }
+            feats.truncate(ctx.max_features);
+        }
+
+        // best split by SSE reduction (prefix-sum scan)
+        let mut best: Option<(f64, usize, f64)> = None;
+        let mut vals: Vec<(f64, f64)> = Vec::with_capacity(idx.len());
+        for &f in &feats {
+            vals.clear();
+            vals.extend(idx.iter().map(|&i| (ctx.x[i][f], ctx.y[i])));
+            vals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            if vals[0].0 == vals[vals.len() - 1].0 {
+                continue;
+            }
+            let total_sum: f64 = vals.iter().map(|v| v.1).sum();
+            let total_sq: f64 = vals.iter().map(|v| v.1 * v.1).sum();
+            let mut lsum = 0.0;
+            let mut lsq = 0.0;
+            for w in 0..vals.len() - 1 {
+                lsum += vals[w].1;
+                lsq += vals[w].1 * vals[w].1;
+                if vals[w].0 == vals[w + 1].0 {
+                    continue;
+                }
+                let nl = (w + 1) as f64;
+                let nr = n - nl;
+                let sse_l = lsq - lsum * lsum / nl;
+                let sse_r = (total_sq - lsq) - (total_sum - lsum) * (total_sum - lsum) / nr;
+                let score = sse_l + sse_r;
+                if best.map_or(true, |(s, _, _)| score < s) {
+                    best = Some((score, f, 0.5 * (vals[w].0 + vals[w + 1].0)));
+                }
+            }
+        }
+
+        match best {
+            Some((score, f, thr)) if score < sse - 1e-12 => {
+                let mut mid = 0usize;
+                for i in 0..idx.len() {
+                    if ctx.x[idx[i]][f] <= thr {
+                        idx.swap(i, mid);
+                        mid += 1;
+                    }
+                }
+                if mid == 0 || mid == idx.len() {
+                    nodes.push(Node::Leaf { value: mean, class: 0 });
+                    return nodes.len() - 1;
+                }
+                let slot = nodes.len();
+                nodes.push(Node::Leaf { value: 0.0, class: 0 });
+                let (l_idx, r_idx) = idx.split_at_mut(mid);
+                let left = Self::grow(ctx, nodes, l_idx, depth + 1);
+                let right = Self::grow(ctx, nodes, r_idx, depth + 1);
+                nodes[slot] = Node::Split { feature: f, threshold: thr, left, right };
+                slot
+            }
+            _ => {
+                nodes.push(Node::Leaf { value: mean, class: 0 });
+                nodes.len() - 1
+            }
+        }
+    }
+}
+
+impl Regressor for DecisionTreeRegressor {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert!(!x.is_empty());
+        let d = x[0].len();
+        let mut ctx = RegContext {
+            x,
+            y,
+            max_depth: self.max_depth.max(1),
+            min_split: self.min_samples_split.max(2),
+            max_features: self.max_features.unwrap_or(d).clamp(1, d),
+            rng: Rng::new(self.seed ^ 0x7259),
+        };
+        let mut nodes = Vec::new();
+        let mut idx: Vec<usize> = (0..x.len()).collect();
+        Self::grow(&mut ctx, &mut nodes, &mut idx, 0);
+        self.tree = Some(Tree { nodes });
+    }
+
+    fn predict_one(&self, x: &[f64]) -> f64 {
+        *self.tree.as_ref().expect("fit first").predict_leaf(x).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::metrics::{accuracy, r2};
+    use crate::ml::testdata;
+
+    #[test]
+    fn classifier_fits_blobs_perfectly() {
+        let (x, y) = testdata::blobs(40, 1);
+        let mut t = DecisionTreeClassifier::default();
+        t.fit(&x, &y);
+        assert!(accuracy(&y, &t.predict(&x)) > 0.98);
+    }
+
+    #[test]
+    fn classifier_solves_xor() {
+        let (x, y) = testdata::xor(50, 2);
+        let mut t = DecisionTreeClassifier::default();
+        t.fit(&x, &y);
+        assert_eq!(accuracy(&y, &t.predict(&x)), 1.0);
+    }
+
+    #[test]
+    fn depth_limit_respected() {
+        let (x, y) = testdata::xor(50, 3);
+        let mut t = DecisionTreeClassifier { max_depth: 2, ..Default::default() };
+        t.fit(&x, &y);
+        assert!(t.depth() <= 3); // root + 2 levels
+    }
+
+    #[test]
+    fn all_criteria_work() {
+        let (x, y) = testdata::blobs(30, 4);
+        for c in Criterion::ALL {
+            let mut t = DecisionTreeClassifier { criterion: c, ..Default::default() };
+            t.fit(&x, &y);
+            assert!(accuracy(&y, &t.predict(&x)) > 0.95, "{}", c.name());
+        }
+    }
+
+    #[test]
+    fn random_splitter_still_learns() {
+        let (x, y) = testdata::blobs(40, 5);
+        let mut t = DecisionTreeClassifier {
+            splitter: Splitter::Random,
+            max_depth: 12,
+            seed: 3,
+            ..Default::default()
+        };
+        t.fit(&x, &y);
+        assert!(accuracy(&y, &t.predict(&x)) > 0.9);
+    }
+
+    #[test]
+    fn regressor_fits_nonlinear() {
+        let (x, y) = testdata::friedman(400, 6);
+        let mut t = DecisionTreeRegressor::default();
+        t.fit(&x, &y);
+        assert!(r2(&y, &t.predict(&x)) > 0.95);
+    }
+
+    #[test]
+    fn regressor_constant_target() {
+        let x = vec![vec![1.0], vec![2.0], vec![3.0]];
+        let y = vec![5.0, 5.0, 5.0];
+        let mut t = DecisionTreeRegressor::default();
+        t.fit(&x, &y);
+        assert_eq!(t.predict_one(&[9.0]), 5.0);
+    }
+
+    #[test]
+    fn single_class_predicts_it() {
+        let x = vec![vec![0.0], vec![1.0]];
+        let y = vec![2usize, 2];
+        let mut t = DecisionTreeClassifier::default();
+        t.fit(&x, &y);
+        assert_eq!(t.predict_one(&[0.5]), 2);
+    }
+}

@@ -1,0 +1,178 @@
+//! Reporting kit: aligned-text tables (the benches print the paper's
+//! tables/figures as rows), TSV dumps under `reports/`, and a tiny
+//! timing harness used by the `harness = false` bench binaries
+//! (criterion is unavailable in the offline environment — Cargo.toml).
+
+use std::fmt::Write as _;
+use std::path::Path;
+use std::time::Instant;
+
+/// Column-aligned text table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (w, c) in widths.iter_mut().zip(r) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.header, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (widths.len().saturating_sub(1));
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", line(r, &widths));
+        }
+        out
+    }
+
+    /// Print to stdout and save as TSV under `reports/<name>.tsv`.
+    pub fn emit(&self, name: &str) {
+        println!("{}", self.render());
+        let dir = Path::new("reports");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let mut tsv = self.header.join("\t");
+            for r in &self.rows {
+                tsv.push('\n');
+                tsv.push_str(&r.join("\t"));
+            }
+            tsv.push('\n');
+            let _ = std::fs::write(dir.join(format!("{name}.tsv")), tsv);
+        }
+    }
+}
+
+/// Format a float with engineering-friendly precision.
+pub fn fmt_g(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1000.0 || v.abs() < 0.01 {
+        format!("{v:.3e}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// Percent improvement of `new` over `base` for a minimized metric.
+pub fn pct_improvement(base: f64, new: f64) -> f64 {
+    if base == 0.0 {
+        0.0
+    } else {
+        (base - new) / base * 100.0
+    }
+}
+
+/// Percent gain of `new` over `base` for a maximized metric.
+pub fn pct_gain(base: f64, new: f64) -> f64 {
+    if base == 0.0 {
+        0.0
+    } else {
+        (new - base) / base * 100.0
+    }
+}
+
+/// Timing result of one benchmark case.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub iters: u64,
+    pub total_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+/// Measure `f` `iters` times (after `warmup` runs).
+pub fn bench<F: FnMut()>(warmup: u64, iters: u64, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut min_s = f64::INFINITY;
+    let mut max_s = 0.0f64;
+    let t0 = Instant::now();
+    let mut last = t0;
+    for _ in 0..iters {
+        f();
+        let now = Instant::now();
+        let d = (now - last).as_secs_f64();
+        min_s = min_s.min(d);
+        max_s = max_s.max(d);
+        last = now;
+    }
+    let total_s = t0.elapsed().as_secs_f64();
+    Timing { iters, total_s, mean_s: total_s / iters as f64, min_s, max_s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["name", "v"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["bbbb".into(), "22".into()]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        assert!(r.contains("bbbb"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn improvement_math() {
+        assert_eq!(pct_improvement(2.0, 1.0), 50.0);
+        assert_eq!(pct_gain(2.0, 3.0), 50.0);
+        assert_eq!(pct_improvement(0.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0u64;
+        let t = bench(1, 10, || n += 1);
+        assert_eq!(n, 11);
+        assert_eq!(t.iters, 10);
+        assert!(t.mean_s >= 0.0 && t.min_s <= t.max_s);
+    }
+
+    #[test]
+    fn fmt_g_ranges() {
+        assert_eq!(fmt_g(0.0), "0");
+        assert!(fmt_g(12345.0).contains('e'));
+        assert!(fmt_g(0.5).starts_with("0.5"));
+    }
+}

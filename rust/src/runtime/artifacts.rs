@@ -1,0 +1,301 @@
+//! Artifact manifest — the L2 -> L3 interchange contract (DESIGN.md §5).
+//!
+//! `make artifacts` writes `artifacts/manifest.tsv`, one row per
+//! AOT-compiled HLO module; this module parses it and selects the right
+//! variant (shape bucket + compile-knob analogues) for a request.
+
+use crate::gpusim::MemConfig;
+use crate::sparse::Format;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Kind of compiled graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Spmv,
+    Power,
+}
+
+/// One compiled variant (a parsed manifest row).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: Kind,
+    pub fmt: Format,
+    /// Shape-bucket rows/cols.
+    pub rows: usize,
+    pub cols: usize,
+    /// ELL/SELL width, BELL block-cols, CSR padded nnz.
+    pub width: usize,
+    pub block_rows: usize,
+    pub chunk_width: usize,
+    pub x_placement: String,
+    pub extra: HashMap<String, usize>,
+    pub path: PathBuf,
+}
+
+impl ArtifactSpec {
+    /// BELL block height / SELL slice height helpers.
+    pub fn bh(&self) -> usize {
+        self.extra.get("bh").copied().unwrap_or(8)
+    }
+    pub fn bw(&self) -> usize {
+        self.extra.get("bw").copied().unwrap_or(8)
+    }
+    pub fn slice_h(&self) -> usize {
+        self.extra.get("h").copied().unwrap_or(8)
+    }
+}
+
+/// Parsed manifest with variant lookup.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactIndex {
+    pub specs: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactIndex {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("read {manifest:?} — run `make artifacts` first"))?;
+        let mut lines = text.lines();
+        let header = lines.next().context("empty manifest")?;
+        let want = "name\tkind\tfmt\trows\tcols\twidth\tblock_rows\tchunk_width\tx_placement\textra\tpath\tinputs";
+        if header != want {
+            bail!("manifest header mismatch:\n got {header}\nwant {want}");
+        }
+        let mut specs = Vec::new();
+        for (ln, line) in lines.enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            let c: Vec<&str> = line.split('\t').collect();
+            if c.len() != 12 {
+                bail!("manifest line {}: expected 12 cols, got {}", ln + 2, c.len());
+            }
+            let kind = match c[1] {
+                "spmv" => Kind::Spmv,
+                "power" => Kind::Power,
+                other => bail!("unknown artifact kind {other}"),
+            };
+            let fmt = Format::parse(c[2]).with_context(|| format!("bad format {}", c[2]))?;
+            let mut extra = HashMap::new();
+            if c[9] != "-" {
+                for kv in c[9].split(';') {
+                    let (k, v) = kv.split_once('=').context("bad extra")?;
+                    extra.insert(k.to_string(), v.parse()?);
+                }
+            }
+            specs.push(ArtifactSpec {
+                name: c[0].to_string(),
+                kind,
+                fmt,
+                rows: c[3].parse()?,
+                cols: c[4].parse()?,
+                width: c[5].parse()?,
+                block_rows: c[6].parse()?,
+                chunk_width: c[7].parse()?,
+                x_placement: c[8].to_string(),
+                extra,
+                path: dir.join(c[10]),
+            });
+        }
+        Ok(ArtifactIndex { specs, dir: dir.to_path_buf() })
+    }
+
+    /// Required storage width of a matrix in a format (what the bucket's
+    /// `width` must cover).
+    pub fn required_width(fmt: Format, spec_like: &MatrixDims) -> usize {
+        match fmt {
+            Format::Csr => spec_like.nnz,
+            Format::Ell => spec_like.max_row_len,
+            Format::Bell => spec_like.bell_kb,
+            Format::Sell => spec_like.max_row_len,
+        }
+    }
+
+    /// Select the smallest enclosing spmv variant for a matrix in `fmt`,
+    /// preferring the knob mapping of `choice` (see [`knob_map`]).
+    pub fn select(
+        &self,
+        fmt: Format,
+        dims: &MatrixDims,
+        choice: Option<(u32, u32, MemConfig)>,
+    ) -> Option<&ArtifactSpec> {
+        let fits = |s: &&ArtifactSpec| {
+            s.kind == Kind::Spmv
+                && s.fmt == fmt
+                && s.rows >= dims.n_rows
+                && s.cols >= dims.n_cols
+                && s.width >= Self::required_width(fmt, dims)
+        };
+        let candidates: Vec<&ArtifactSpec> = self.specs.iter().filter(fits).collect();
+        if candidates.is_empty() {
+            return None;
+        }
+        // smallest bucket first; among equals prefer the knob match
+        let min_key = candidates
+            .iter()
+            .map(|s| (s.rows, s.cols, s.width))
+            .min()
+            .unwrap();
+        let in_bucket: Vec<&ArtifactSpec> = candidates
+            .into_iter()
+            .filter(|s| (s.rows, s.cols, s.width) == min_key)
+            .collect();
+        match choice {
+            None => in_bucket.first().copied(),
+            Some((tb, regs, mem)) => {
+                let (want_br, want_cw, want_place) = knob_map(tb, regs, mem);
+                in_bucket
+                    .iter()
+                    .min_by_key(|s| {
+                        let mut cost = 0usize;
+                        if s.x_placement != want_place {
+                            cost += 4;
+                        }
+                        cost += s.block_rows.abs_diff(want_br) / 64;
+                        cost += s.chunk_width.abs_diff(want_cw);
+                        cost
+                    })
+                    .copied()
+            }
+        }
+    }
+
+    /// The power-step variant list (examples use these).
+    pub fn power_specs(&self) -> Vec<&ArtifactSpec> {
+        self.specs.iter().filter(|s| s.kind == Kind::Power).collect()
+    }
+}
+
+/// What the selector needs to know about a concrete matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MatrixDims {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub nnz: usize,
+    pub max_row_len: usize,
+    /// Block-columns per block-row if converted to BELL (8x8).
+    pub bell_kb: usize,
+}
+
+/// Map the paper's CUDA compile knobs onto the Pallas variant knobs
+/// (DESIGN.md §2): TB size -> block_rows, maxrregcount -> chunk_width,
+/// memory config -> x placement.
+pub fn knob_map(tb_size: u32, maxrregcount: u32, mem: MemConfig) -> (usize, usize, &'static str) {
+    let block_rows = if tb_size <= 128 { 64 } else { 256 };
+    let chunk_width = if maxrregcount <= 32 { 8 } else { 16 };
+    let place = match mem {
+        MemConfig::Default => "resident",
+        MemConfig::PreferL1 => "gather",
+        MemConfig::PreferShared => "streamed",
+    };
+    (block_rows, chunk_width, place)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, rows: &[&str]) {
+        let header = "name\tkind\tfmt\trows\tcols\twidth\tblock_rows\tchunk_width\tx_placement\textra\tpath\tinputs";
+        let mut text = String::from(header);
+        for r in rows {
+            text.push('\n');
+            text.push_str(r);
+        }
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), text).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("autospmv_art_{tag}"));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    #[test]
+    fn parses_and_selects_smallest_bucket() {
+        let d = tmpdir("select");
+        write_manifest(
+            &d,
+            &[
+                "e1\tspmv\tell\t256\t256\t16\t64\t8\tresident\t-\te1.hlo.txt\tf32:256x16,i32:256x16,f32:256",
+                "e2\tspmv\tell\t1024\t1024\t16\t64\t8\tresident\t-\te2.hlo.txt\tf32:1024x16,i32:1024x16,f32:1024",
+            ],
+        );
+        let idx = ArtifactIndex::load(&d).unwrap();
+        assert_eq!(idx.specs.len(), 2);
+        let dims = MatrixDims { n_rows: 200, n_cols: 200, nnz: 900, max_row_len: 9, bell_kb: 4 };
+        let s = idx.select(Format::Ell, &dims, None).unwrap();
+        assert_eq!(s.name, "e1");
+        let big = MatrixDims { n_rows: 700, n_cols: 700, nnz: 900, max_row_len: 9, bell_kb: 4 };
+        assert_eq!(idx.select(Format::Ell, &big, None).unwrap().name, "e2");
+        let too_big =
+            MatrixDims { n_rows: 5000, n_cols: 700, nnz: 900, max_row_len: 9, bell_kb: 4 };
+        assert!(idx.select(Format::Ell, &too_big, None).is_none());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn knob_preference_breaks_ties() {
+        let d = tmpdir("knobs");
+        write_manifest(
+            &d,
+            &[
+                "a\tspmv\tell\t256\t256\t16\t64\t8\tresident\t-\ta.hlo\tf32:1",
+                "b\tspmv\tell\t256\t256\t16\t64\t8\tgather\t-\tb.hlo\tf32:1",
+                "c\tspmv\tell\t256\t256\t16\t64\t16\tresident\t-\tc.hlo\tf32:1",
+            ],
+        );
+        let idx = ArtifactIndex::load(&d).unwrap();
+        let dims = MatrixDims { n_rows: 100, n_cols: 100, nnz: 100, max_row_len: 4, bell_kb: 2 };
+        let s = idx
+            .select(Format::Ell, &dims, Some((64, 16, MemConfig::PreferL1)))
+            .unwrap();
+        assert_eq!(s.name, "b"); // gather + cw 8
+        let s2 = idx
+            .select(Format::Ell, &dims, Some((512, 128, MemConfig::Default)))
+            .unwrap();
+        assert_eq!(s2.name, "c"); // resident + cw 16
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn extra_fields_parse() {
+        let d = tmpdir("extra");
+        write_manifest(
+            &d,
+            &["s\tspmv\tsell\t256\t256\t16\t8\t8\tresident\th=32\ts.hlo\tf32:1"],
+        );
+        let idx = ArtifactIndex::load(&d).unwrap();
+        assert_eq!(idx.specs[0].slice_h(), 32);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn rejects_bad_manifest() {
+        let d = tmpdir("bad");
+        std::fs::create_dir_all(&d).unwrap();
+        std::fs::write(d.join("manifest.tsv"), "wrong").unwrap();
+        assert!(ArtifactIndex::load(&d).is_err());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn knob_map_covers_space() {
+        assert_eq!(knob_map(64, 16, MemConfig::Default), (64, 8, "resident"));
+        assert_eq!(knob_map(1024, 128, MemConfig::PreferShared), (256, 16, "streamed"));
+        assert_eq!(knob_map(256, 32, MemConfig::PreferL1), (256, 8, "gather"));
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful_error() {
+        let err = ArtifactIndex::load(Path::new("/nonexistent_dir_xyz")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,21 @@
+//! Runtime: PJRT client wrapper + artifact manifest (the hot path's
+//! executor). Pattern adapted from /opt/xla-example/load_hlo.
+//!
+//! Python runs once (`make artifacts`); this module makes the Rust binary
+//! self-contained afterwards: HLO text -> XlaComputation -> PJRT compile
+//! (cached) -> execute.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{knob_map, ArtifactIndex, ArtifactSpec, Kind, MatrixDims};
+pub use pjrt::Engine;
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `$AUTO_SPMV_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("AUTO_SPMV_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,337 @@
+//! PJRT execution engine — the only module touching the `xla` crate.
+//!
+//! Loads HLO **text** artifacts (see /opt/xla-example/README: serialized
+//! protos from jax >= 0.5 are rejected by xla_extension 0.5.1; the text
+//! parser reassigns instruction ids), compiles them on the CPU PJRT
+//! client once, caches the executables, and marshals sparse matrices into
+//! the kernels' padded bucket layouts.
+
+use super::artifacts::{ArtifactIndex, ArtifactSpec, MatrixDims};
+use crate::gpusim::MemConfig;
+use crate::sparse::convert::AnyFormat;
+use crate::sparse::{Csr, Format};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// PJRT engine: client + compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub index: ArtifactIndex,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions performed (metrics).
+    pub exec_count: u64,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let index = ArtifactIndex::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Engine { client, index, cache: HashMap::new(), exec_count: 0 })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) executable for a spec.
+    fn executable(&mut self, spec: &ArtifactSpec) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(&spec.name) {
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.path.to_str().context("artifact path utf8")?,
+            )
+            .map_err(|e| anyhow!("parse {:?}: {e:?}", spec.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", spec.name))?;
+            self.cache.insert(spec.name.clone(), exe);
+        }
+        Ok(self.cache.get(&spec.name).unwrap())
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+
+    fn run(&mut self, spec: &ArtifactSpec, inputs: &[xla::Literal]) -> Result<Vec<f32>> {
+        let name = spec.name.clone();
+        let exe = self.executable(spec)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True -> 1-tuple
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        let v = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec {name}: {e:?}"))?;
+        self.exec_count += 1;
+        Ok(v)
+    }
+
+    /// Measure a matrix's bucket-selection dimensions.
+    pub fn dims_of(csr: &Csr) -> MatrixDims {
+        MatrixDims {
+            n_rows: csr.n_rows,
+            n_cols: csr.n_cols,
+            nnz: csr.vals.len(),
+            max_row_len: csr.max_row_len(),
+            bell_kb: {
+                // worst-case occupied 8x8 block columns per block row
+                let b = crate::sparse::convert::csr_to_bell(csr, 8, 8);
+                b.kb
+            },
+        }
+    }
+
+    /// Execute y = A x through the AOT kernel for `matrix`'s format.
+    ///
+    /// `choice` optionally biases variant selection toward the
+    /// compile-knob mapping (DESIGN.md §2). Returns y truncated to the
+    /// true row count. One-shot path: for repeated products with the same
+    /// matrix use [`Engine::prepare`] + [`Engine::run_prepared`], which
+    /// marshal the matrix-side literals once (EXPERIMENTS.md §Perf
+    /// iteration 2).
+    pub fn spmv(
+        &mut self,
+        matrix: &AnyFormat,
+        x: &[f32],
+        choice: Option<(u32, u32, MemConfig)>,
+    ) -> Result<Vec<f32>> {
+        let prep = self.prepare(matrix, choice)?;
+        self.run_prepared(&prep, x)
+    }
+
+    /// Marshal a matrix into its artifact bucket once, for repeated
+    /// products. The x vector is every kernel's LAST input, so the
+    /// matrix-side literals can be cached and reused.
+    pub fn prepare(
+        &mut self,
+        matrix: &AnyFormat,
+        choice: Option<(u32, u32, MemConfig)>,
+    ) -> Result<PreparedSpmv> {
+        let (dims, n_rows, n_cols) = match matrix {
+            AnyFormat::Csr(m) => (Self::dims_of(m), m.n_rows, m.n_cols),
+            AnyFormat::Ell(m) => (
+                MatrixDims {
+                    n_rows: m.n_rows,
+                    n_cols: m.n_cols,
+                    nnz: { use crate::sparse::Storage; m.stored_entries() },
+                    max_row_len: m.width,
+                    bell_kb: 0,
+                },
+                m.n_rows,
+                m.n_cols,
+            ),
+            AnyFormat::Bell(m) => (
+                MatrixDims {
+                    n_rows: m.n_rows,
+                    n_cols: m.n_cols,
+                    nnz: 0,
+                    max_row_len: 0,
+                    bell_kb: m.kb,
+                },
+                m.n_rows,
+                m.n_cols,
+            ),
+            AnyFormat::Sell(m) => (
+                MatrixDims {
+                    n_rows: m.n_rows,
+                    n_cols: m.n_cols,
+                    nnz: 0,
+                    max_row_len: m.max_slice_width(),
+                    bell_kb: 0,
+                },
+                m.n_rows,
+                m.n_cols,
+            ),
+        };
+        let fmt = matrix.format();
+        let spec = self
+            .index
+            .select(fmt, &dims, choice)
+            .with_context(|| format!("no artifact bucket fits {fmt} {dims:?}"))?
+            .clone();
+
+        let matrix_literals: Vec<xla::Literal> = match matrix {
+            AnyFormat::Ell(m) => {
+                let (vals, cols) = m.to_kernel(spec.rows, spec.width);
+                vec![
+                    lit2(&vals, spec.rows, spec.width)?,
+                    lit2i(&cols, spec.rows, spec.width)?,
+                ]
+            }
+            AnyFormat::Sell(m) => {
+                // re-slice to the artifact's slice height if needed
+                let h = spec.slice_h();
+                let resliced;
+                let mm = if m.h == h {
+                    m
+                } else {
+                    resliced = crate::sparse::convert::csr_to_sell(
+                        &crate::sparse::convert::sell_to_csr(m),
+                        h,
+                    );
+                    &resliced
+                };
+                let ns_pad = spec.rows / h;
+                let (vals, cols) = mm.to_kernel(ns_pad, spec.width);
+                vec![
+                    lit3(&vals, ns_pad, h, spec.width)?,
+                    lit3i(&cols, ns_pad, h, spec.width)?,
+                ]
+            }
+            AnyFormat::Bell(m) => {
+                if m.bh != spec.bh() || m.bw != spec.bw() {
+                    bail!("BELL block {}x{} != artifact {}x{}", m.bh, m.bw, spec.bh(), spec.bw());
+                }
+                let nb_pad = spec.rows / spec.bh();
+                let (data, bcols) = m.to_kernel(nb_pad, spec.width);
+                vec![
+                    lit4(&data, nb_pad, spec.width, spec.bh(), spec.bw())?,
+                    lit2i(&bcols, nb_pad, spec.width)?,
+                ]
+            }
+            AnyFormat::Csr(m) => {
+                let (vals, rows, cols) = m.to_kernel_coo(spec.width);
+                vec![
+                    xla::Literal::vec1(&vals),
+                    xla::Literal::vec1(&rows),
+                    xla::Literal::vec1(&cols),
+                ]
+            }
+        };
+        Ok(PreparedSpmv {
+            spec,
+            matrix_literals,
+            n_rows,
+            x_len: n_cols,
+        })
+    }
+
+    /// Execute a prepared product: only the x literal is built per call.
+    pub fn run_prepared(&mut self, prep: &PreparedSpmv, x: &[f32]) -> Result<Vec<f32>> {
+        if x.len() != prep.x_len {
+            bail!("x length {} != n_cols {}", x.len(), prep.x_len);
+        }
+        let mut xp = x.to_vec();
+        xp.resize(prep.spec.cols, 0.0);
+        let x_lit = xla::Literal::vec1(&xp);
+        let mut inputs: Vec<&xla::Literal> = prep.matrix_literals.iter().collect();
+        inputs.push(&x_lit);
+        let name = prep.spec.name.clone();
+        let exe = self.executable(&prep.spec)?;
+        let result = exe
+            .execute::<&xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        let mut y = out.to_vec::<f32>().map_err(|e| anyhow!("to_vec {name}: {e:?}"))?;
+        self.exec_count += 1;
+        y.truncate(prep.n_rows);
+        Ok(y)
+    }
+
+    /// Execute one power-iteration step x' = A x / ||A x|| using a
+    /// `power` artifact (ELL resident variant).
+    pub fn power_step(&mut self, ell: &crate::sparse::Ell, x: &[f32]) -> Result<Vec<f32>> {
+        let spec = self
+            .index
+            .power_specs()
+            .into_iter()
+            .find(|s| {
+                s.fmt == Format::Ell
+                    && s.rows >= ell.n_rows
+                    && s.cols >= ell.n_cols
+                    && s.width >= ell.width
+            })
+            .context("no power artifact fits")?
+            .clone();
+        let (vals, cols) = ell.to_kernel(spec.rows, spec.width);
+        let mut xp = x.to_vec();
+        xp.resize(spec.cols, 0.0);
+        let inputs = vec![
+            lit2(&vals, spec.rows, spec.width)?,
+            lit2i(&cols, spec.rows, spec.width)?,
+            xla::Literal::vec1(&xp),
+        ];
+        let mut y = self.run(&spec, &inputs)?;
+        y.truncate(ell.n_rows);
+        Ok(y)
+    }
+}
+
+/// A matrix marshalled into its artifact bucket: cached literals + the
+/// selected variant. Create with [`Engine::prepare`].
+pub struct PreparedSpmv {
+    spec: ArtifactSpec,
+    matrix_literals: Vec<xla::Literal>,
+    n_rows: usize,
+    x_len: usize,
+}
+
+impl PreparedSpmv {
+    pub fn variant_name(&self) -> &str {
+        &self.spec.name
+    }
+}
+
+fn lit2(v: &[f32], a: usize, b: usize) -> Result<xla::Literal> {
+    xla::Literal::vec1(v)
+        .reshape(&[a as i64, b as i64])
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+fn lit2i(v: &[i32], a: usize, b: usize) -> Result<xla::Literal> {
+    xla::Literal::vec1(v)
+        .reshape(&[a as i64, b as i64])
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+fn lit3(v: &[f32], a: usize, b: usize, c: usize) -> Result<xla::Literal> {
+    xla::Literal::vec1(v)
+        .reshape(&[a as i64, b as i64, c as i64])
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+fn lit3i(v: &[i32], a: usize, b: usize, c: usize) -> Result<xla::Literal> {
+    xla::Literal::vec1(v)
+        .reshape(&[a as i64, b as i64, c as i64])
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+fn lit4(v: &[f32], a: usize, b: usize, c: usize, d: usize) -> Result<xla::Literal> {
+    xla::Literal::vec1(v)
+        .reshape(&[a as i64, b as i64, c as i64, d as i64])
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+// Integration coverage lives in rust/tests/runtime_integration.rs (needs
+// `make artifacts`); unit tests here cover the pure helpers.
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+
+    #[test]
+    fn dims_of_reports_structure() {
+        let csr = gen::by_name("rim").unwrap().generate_csr(1);
+        let d = Engine::dims_of(&csr);
+        assert_eq!(d.n_rows, csr.n_rows);
+        assert_eq!(d.nnz, csr.vals.len());
+        assert!(d.max_row_len >= 1);
+        assert!(d.bell_kb >= 1);
+    }
+
+    #[test]
+    fn literal_helpers_shape_checks() {
+        assert!(lit2(&[1.0, 2.0, 3.0, 4.0], 2, 2).is_ok());
+        assert!(lit2(&[1.0, 2.0, 3.0], 2, 2).is_err());
+        assert!(lit3i(&[0; 8], 2, 2, 2).is_ok());
+        assert!(lit4(&[0.0; 16], 2, 2, 2, 2).is_ok());
+    }
+}

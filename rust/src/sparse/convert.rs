@@ -1,0 +1,407 @@
+//! Conversions between sparse formats.
+//!
+//! The run-time optimization mode (paper §5.3) converts the COO input to
+//! the predicted best format, so these conversions are on the measured
+//! path: `c_latency` in Table 7 is the wall time of the functions below.
+//! Every conversion is exact (no reordering of accumulation within a row
+//! beyond column sort) and is property-tested for SpMV equivalence in
+//! `rust/tests/sparse_props.rs`.
+
+use super::{Bell, Coo, Csr, Dense, Ell, Format, Sell};
+
+/// COO -> CSR. Entries are counted/placed in one pass each (no sort
+/// needed); duplicates are preserved as separate entries (they accumulate
+/// identically under SpMV).
+pub fn coo_to_csr(a: &Coo) -> Csr {
+    let nnz = a.len();
+    let mut row_ptr = vec![0u32; a.n_rows + 1];
+    for &r in &a.rows {
+        row_ptr[r as usize + 1] += 1;
+    }
+    for i in 0..a.n_rows {
+        row_ptr[i + 1] += row_ptr[i];
+    }
+    let mut cols = vec![0u32; nnz];
+    let mut vals = vec![0.0f32; nnz];
+    let mut next = row_ptr.clone();
+    for i in 0..nnz {
+        let r = a.rows[i] as usize;
+        let dst = next[r] as usize;
+        cols[dst] = a.cols[i];
+        vals[dst] = a.vals[i];
+        next[r] += 1;
+    }
+    Csr::new(a.n_rows, a.n_cols, row_ptr, cols, vals)
+}
+
+/// CSR -> COO (row-major order).
+pub fn csr_to_coo(a: &Csr) -> Coo {
+    let mut out = Coo::with_capacity(a.n_rows, a.n_cols, a.vals.len());
+    for i in 0..a.n_rows {
+        let (cs, vs) = a.row(i);
+        for (c, v) in cs.iter().zip(vs) {
+            out.push(i, *c as usize, *v);
+        }
+    }
+    out
+}
+
+/// CSR -> ELL. Width = max row length; shorter rows padded with (0, col 0).
+pub fn csr_to_ell(a: &Csr) -> Ell {
+    let width = a.max_row_len();
+    let mut out = Ell::zero(a.n_rows, a.n_cols, width);
+    for i in 0..a.n_rows {
+        let (cs, vs) = a.row(i);
+        let base = i * width;
+        out.cols[base..base + cs.len()].copy_from_slice(cs);
+        out.vals[base..base + vs.len()].copy_from_slice(vs);
+    }
+    out
+}
+
+/// ELL -> CSR, dropping padding (zero-valued) entries.
+pub fn ell_to_csr(a: &Ell) -> Csr {
+    let mut row_ptr = vec![0u32; a.n_rows + 1];
+    let mut cols = Vec::new();
+    let mut vals = Vec::new();
+    for i in 0..a.n_rows {
+        for s in 0..a.width {
+            let v = a.vals[a.idx(i, s)];
+            if v != 0.0 {
+                cols.push(a.cols[a.idx(i, s)]);
+                vals.push(v);
+            }
+        }
+        row_ptr[i + 1] = vals.len() as u32;
+    }
+    Csr::new(a.n_rows, a.n_cols, row_ptr, cols, vals)
+}
+
+/// CSR -> BELL with `bh x bw` blocks.
+///
+/// Scans each block-row for occupied block columns, then fills dense
+/// payloads. `kb` = max occupied block-columns over block rows.
+pub fn csr_to_bell(a: &Csr, bh: usize, bw: usize) -> Bell {
+    assert!(bh > 0 && bw > 0);
+    let nb = a.n_rows.div_ceil(bh);
+    let nbc = a.n_cols.div_ceil(bw);
+
+    // Pass 1: per block-row, the set of occupied block columns.
+    let mut occupied: Vec<Vec<u32>> = vec![Vec::new(); nb];
+    let mut seen = vec![u32::MAX; nbc]; // epoch marker per block column
+    for ib in 0..nb {
+        let r0 = ib * bh;
+        let r1 = (r0 + bh).min(a.n_rows);
+        for r in r0..r1 {
+            let (cs, _) = a.row(r);
+            for &c in cs {
+                let bc = c as usize / bw;
+                if seen[bc] != ib as u32 {
+                    seen[bc] = ib as u32;
+                    occupied[ib].push(bc as u32);
+                }
+            }
+        }
+        occupied[ib].sort_unstable();
+    }
+    let kb = occupied.iter().map(Vec::len).max().unwrap_or(0).max(1);
+
+    // Pass 2: fill payloads.
+    let mut out = Bell::zero(a.n_rows, a.n_cols, bh, bw, kb);
+    // block column -> slot index within this block row
+    let mut slot_of = vec![usize::MAX; nbc];
+    for ib in 0..nb {
+        for (slot, &bc) in occupied[ib].iter().enumerate() {
+            slot_of[bc as usize] = slot;
+            out.bcols[ib * kb + slot] = bc;
+        }
+        let r0 = ib * bh;
+        let r1 = (r0 + bh).min(a.n_rows);
+        for r in r0..r1 {
+            let (cs, vs) = a.row(r);
+            for (&c, &v) in cs.iter().zip(vs) {
+                let bc = c as usize / bw;
+                let slot = slot_of[bc];
+                let base = (ib * kb + slot) * bh * bw;
+                out.blocks[base + (r - r0) * bw + (c as usize % bw)] += v;
+            }
+        }
+        for &bc in &occupied[ib] {
+            slot_of[bc as usize] = usize::MAX;
+        }
+    }
+    out
+}
+
+/// BELL -> CSR, dropping zero payload entries.
+pub fn bell_to_csr(a: &Bell) -> Csr {
+    let mut row_ptr = vec![0u32; a.n_rows + 1];
+    let mut entries: Vec<(u32, f32)> = Vec::new();
+    let mut cols = Vec::new();
+    let mut vals = Vec::new();
+    for r in 0..a.n_rows {
+        let ib = r / a.bh;
+        let i = r % a.bh;
+        entries.clear();
+        for k in 0..a.kb {
+            let col0 = a.bcols[ib * a.kb + k] as usize * a.bw;
+            let blk = a.block_at(ib, k);
+            for j in 0..a.bw {
+                let v = blk[i * a.bw + j];
+                if v != 0.0 && col0 + j < a.n_cols {
+                    entries.push(((col0 + j) as u32, v));
+                }
+            }
+        }
+        entries.sort_unstable_by_key(|e| e.0);
+        for &(c, v) in entries.iter() {
+            cols.push(c);
+            vals.push(v);
+        }
+        row_ptr[r + 1] = vals.len() as u32;
+    }
+    Csr::new(a.n_rows, a.n_cols, row_ptr, cols, vals)
+}
+
+/// CSR -> SELL with slice height `h`. Each slice padded to its own max
+/// row length (never below 1 so empty slices keep addressable storage).
+pub fn csr_to_sell(a: &Csr, h: usize) -> Sell {
+    assert!(h > 0);
+    let ns = a.n_rows.div_ceil(h);
+    let mut slice_width = Vec::with_capacity(ns);
+    let mut slice_ptr = vec![0u32; ns + 1];
+    for s in 0..ns {
+        let r0 = s * h;
+        let r1 = (r0 + h).min(a.n_rows);
+        let w = (r0..r1).map(|r| a.row_len(r)).max().unwrap_or(0).max(1);
+        slice_width.push(w as u32);
+        slice_ptr[s + 1] = slice_ptr[s] + (h * w) as u32;
+    }
+    let total = slice_ptr[ns] as usize;
+    let mut cols = vec![0u32; total];
+    let mut vals = vec![0.0f32; total];
+    for s in 0..ns {
+        let w = slice_width[s] as usize;
+        let base = slice_ptr[s] as usize;
+        let r0 = s * h;
+        for i in 0..h {
+            let r = r0 + i;
+            if r >= a.n_rows {
+                break;
+            }
+            let (cs, vs) = a.row(r);
+            let dst = base + i * w;
+            cols[dst..dst + cs.len()].copy_from_slice(cs);
+            vals[dst..dst + vs.len()].copy_from_slice(vs);
+        }
+    }
+    Sell { n_rows: a.n_rows, n_cols: a.n_cols, h, slice_width, slice_ptr, cols, vals }
+}
+
+/// SELL -> CSR, dropping padding entries.
+pub fn sell_to_csr(a: &Sell) -> Csr {
+    let mut row_ptr = vec![0u32; a.n_rows + 1];
+    let mut cols = Vec::new();
+    let mut vals = Vec::new();
+    for r in 0..a.n_rows {
+        let s = r / a.h;
+        let i = r % a.h;
+        let (cs, vs) = a.slice_row(s, i);
+        for (&c, &v) in cs.iter().zip(vs) {
+            if v != 0.0 {
+                cols.push(c);
+                vals.push(v);
+            }
+        }
+        row_ptr[r + 1] = vals.len() as u32;
+    }
+    Csr::new(a.n_rows, a.n_cols, row_ptr, cols, vals)
+}
+
+/// CSR -> dense (test/debug aid; O(n*m) memory).
+pub fn csr_to_dense(a: &Csr) -> Dense {
+    let mut d = Dense::zero(a.n_rows, a.n_cols);
+    for r in 0..a.n_rows {
+        let (cs, vs) = a.row(r);
+        for (&c, &v) in cs.iter().zip(vs) {
+            *d.at_mut(r, c as usize) += v;
+        }
+    }
+    d
+}
+
+/// Convert CSR into any of the four kernel formats, with the paper's
+/// default structural parameters (BELL 8x8 blocks, SELL slice height 32 —
+/// overridable through [`ConvertParams`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvertParams {
+    pub bell_bh: usize,
+    pub bell_bw: usize,
+    pub sell_h: usize,
+}
+
+impl Default for ConvertParams {
+    fn default() -> Self {
+        ConvertParams { bell_bh: 8, bell_bw: 8, sell_h: 32 }
+    }
+}
+
+/// A matrix held in one of the four kernel formats.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AnyFormat {
+    Csr(Csr),
+    Ell(Ell),
+    Bell(Bell),
+    Sell(Sell),
+}
+
+impl AnyFormat {
+    pub fn format(&self) -> Format {
+        match self {
+            AnyFormat::Csr(_) => Format::Csr,
+            AnyFormat::Ell(_) => Format::Ell,
+            AnyFormat::Bell(_) => Format::Bell,
+            AnyFormat::Sell(_) => Format::Sell,
+        }
+    }
+
+    pub fn as_spmv(&self) -> &dyn super::SpMv {
+        match self {
+            AnyFormat::Csr(m) => m,
+            AnyFormat::Ell(m) => m,
+            AnyFormat::Bell(m) => m,
+            AnyFormat::Sell(m) => m,
+        }
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        use super::Storage;
+        match self {
+            AnyFormat::Csr(m) => m.storage_bytes(),
+            AnyFormat::Ell(m) => m.storage_bytes(),
+            AnyFormat::Bell(m) => m.storage_bytes(),
+            AnyFormat::Sell(m) => m.storage_bytes(),
+        }
+    }
+}
+
+/// Convert a CSR matrix into `target` format.
+pub fn convert(a: &Csr, target: Format, p: ConvertParams) -> AnyFormat {
+    match target {
+        Format::Csr => AnyFormat::Csr(a.clone()),
+        Format::Ell => AnyFormat::Ell(csr_to_ell(a)),
+        Format::Bell => AnyFormat::Bell(csr_to_bell(a, p.bell_bh, p.bell_bw)),
+        Format::Sell => AnyFormat::Sell(csr_to_sell(a, p.sell_h)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::SpMv;
+
+    fn sample_coo() -> Coo {
+        // 5x6 with skewed rows
+        let mut a = Coo::new(5, 6);
+        for (r, c, v) in [
+            (0, 0, 1.0),
+            (0, 5, 2.0),
+            (1, 2, 3.0),
+            (3, 0, 4.0),
+            (3, 1, 5.0),
+            (3, 2, 6.0),
+            (3, 5, 7.0),
+            (4, 4, 8.0),
+        ] {
+            a.push(r, c, v);
+        }
+        a
+    }
+
+    fn spmv_equal(a: &dyn SpMv, b: &dyn SpMv, x: &[f32]) {
+        let (mut ya, mut yb) = (vec![0.0; a.n_rows()], vec![0.0; b.n_rows()]);
+        a.spmv(x, &mut ya);
+        b.spmv(x, &mut yb);
+        for (p, q) in ya.iter().zip(&yb) {
+            assert!((p - q).abs() < 1e-4, "{p} != {q}");
+        }
+    }
+
+    #[test]
+    fn coo_csr_roundtrip() {
+        let coo = sample_coo();
+        let csr = coo_to_csr(&coo);
+        assert_eq!(csr.row_ptr, vec![0, 2, 3, 3, 7, 8]);
+        let back = csr_to_coo(&csr);
+        let csr2 = coo_to_csr(&back);
+        assert_eq!(csr, csr2);
+    }
+
+    #[test]
+    fn all_formats_spmv_equivalent() {
+        let csr = coo_to_csr(&sample_coo());
+        let x: Vec<f32> = (0..6).map(|i| (i as f32 + 1.0) * 0.5).collect();
+        let p = ConvertParams { bell_bh: 2, bell_bw: 2, sell_h: 2 };
+        for f in Format::ALL {
+            let m = convert(&csr, f, p);
+            spmv_equal(&csr, m.as_spmv(), &x);
+        }
+    }
+
+    #[test]
+    fn ell_round_trip_preserves_csr() {
+        let csr = coo_to_csr(&sample_coo());
+        assert_eq!(ell_to_csr(&csr_to_ell(&csr)), csr);
+    }
+
+    #[test]
+    fn sell_round_trip_preserves_csr() {
+        let csr = coo_to_csr(&sample_coo());
+        assert_eq!(sell_to_csr(&csr_to_sell(&csr, 2)), csr);
+    }
+
+    #[test]
+    fn bell_round_trip_preserves_values() {
+        let csr = coo_to_csr(&sample_coo());
+        let back = bell_to_csr(&csr_to_bell(&csr, 2, 2));
+        // same dense realization
+        assert_eq!(csr_to_dense(&back).data, csr_to_dense(&csr).data);
+    }
+
+    #[test]
+    fn sell_pads_less_than_ell_on_skewed_matrix() {
+        use crate::sparse::Storage;
+        let csr = coo_to_csr(&sample_coo());
+        let ell = csr_to_ell(&csr);
+        let sell = csr_to_sell(&csr, 2);
+        assert!(sell.stored_entries() < ell.stored_entries());
+    }
+
+    #[test]
+    fn bell_merges_duplicates_into_payload() {
+        let mut coo = Coo::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 0, 2.0);
+        let bell = csr_to_bell(&coo_to_csr(&coo), 2, 2);
+        assert_eq!(bell.block_at(0, 0)[0], 3.0);
+    }
+
+    #[test]
+    fn dense_matches_csr() {
+        let csr = coo_to_csr(&sample_coo());
+        let d = csr_to_dense(&csr);
+        let x = vec![1.0; 6];
+        spmv_equal(&csr, &d, &x);
+    }
+
+    #[test]
+    fn empty_matrix_converts_everywhere() {
+        let coo = Coo::new(3, 3);
+        let csr = coo_to_csr(&coo);
+        for f in Format::ALL {
+            let m = convert(&csr, f, ConvertParams::default());
+            let y = m.as_spmv().spmv_alloc(&[1.0, 1.0, 1.0]);
+            assert_eq!(y, vec![0.0; 3]);
+        }
+    }
+}

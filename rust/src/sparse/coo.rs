@@ -1,0 +1,152 @@
+//! COO (coordinate) format — SuiteSparse's on-disk default (paper §7.5)
+//! and the input format of the run-time optimization mode.
+
+use super::{Storage, SpMv};
+
+/// Coordinate-format sparse matrix (structure-of-arrays).
+///
+/// Entries need not be sorted; duplicates are allowed and accumulate
+/// (matching SuiteSparse Matrix Market semantics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Coo {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Coo {
+    pub fn new(n_rows: usize, n_cols: usize) -> Self {
+        Coo { n_rows, n_cols, rows: Vec::new(), cols: Vec::new(), vals: Vec::new() }
+    }
+
+    pub fn with_capacity(n_rows: usize, n_cols: usize, cap: usize) -> Self {
+        Coo {
+            n_rows,
+            n_cols,
+            rows: Vec::with_capacity(cap),
+            cols: Vec::with_capacity(cap),
+            vals: Vec::with_capacity(cap),
+        }
+    }
+
+    /// Push one entry. Debug-asserts bounds; zero values are kept (they
+    /// are structurally significant for some generators).
+    pub fn push(&mut self, row: usize, col: usize, val: f32) {
+        debug_assert!(row < self.n_rows && col < self.n_cols, "entry out of bounds");
+        self.rows.push(row as u32);
+        self.cols.push(col as u32);
+        self.vals.push(val);
+    }
+
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+
+    /// Sort entries by (row, col). Required before CSR conversion when the
+    /// source was unsorted; stable so duplicate ordering is deterministic.
+    pub fn sort(&mut self) {
+        let mut idx: Vec<u32> = (0..self.len() as u32).collect();
+        idx.sort_by_key(|&i| (self.rows[i as usize], self.cols[i as usize]));
+        self.rows = idx.iter().map(|&i| self.rows[i as usize]).collect();
+        self.cols = idx.iter().map(|&i| self.cols[i as usize]).collect();
+        self.vals = idx.iter().map(|&i| self.vals[i as usize]).collect();
+    }
+
+    /// Per-row non-zero counts — the basis of every sparsity feature.
+    pub fn row_counts(&self) -> Vec<u32> {
+        let mut c = vec![0u32; self.n_rows];
+        for &r in &self.rows {
+            c[r as usize] += 1;
+        }
+        c
+    }
+}
+
+impl Storage for Coo {
+    fn storage_bytes(&self) -> usize {
+        self.len() * (4 + 4 + 4)
+    }
+    fn stored_entries(&self) -> usize {
+        self.len()
+    }
+    fn nnz(&self) -> usize {
+        self.vals.iter().filter(|v| **v != 0.0).count()
+    }
+}
+
+impl SpMv for Coo {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn spmv(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.n_cols);
+        assert_eq!(y.len(), self.n_rows);
+        y.fill(0.0);
+        for i in 0..self.len() {
+            y[self.rows[i] as usize] += self.vals[i] * x[self.cols[i] as usize];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Coo {
+        // [[1, 0, 2], [0, 0, 0], [3, 4, 0]]
+        let mut a = Coo::new(3, 3);
+        a.push(0, 0, 1.0);
+        a.push(2, 1, 4.0);
+        a.push(0, 2, 2.0);
+        a.push(2, 0, 3.0);
+        a
+    }
+
+    #[test]
+    fn spmv_matches_hand_computed() {
+        let a = sample();
+        let x = [1.0, 10.0, 100.0];
+        let mut y = [0.0; 3];
+        a.spmv(&x, &mut y);
+        assert_eq!(y, [201.0, 0.0, 43.0]);
+    }
+
+    #[test]
+    fn duplicates_accumulate() {
+        let mut a = Coo::new(2, 2);
+        a.push(0, 0, 1.5);
+        a.push(0, 0, 2.5);
+        let mut y = [0.0; 2];
+        a.spmv(&[2.0, 0.0], &mut y);
+        assert_eq!(y[0], 8.0);
+    }
+
+    #[test]
+    fn sort_orders_rows_then_cols() {
+        let mut a = sample();
+        a.sort();
+        let pairs: Vec<(u32, u32)> = a.rows.iter().copied().zip(a.cols.iter().copied()).collect();
+        let mut sorted = pairs.clone();
+        sorted.sort();
+        assert_eq!(pairs, sorted);
+    }
+
+    #[test]
+    fn row_counts_and_nnz() {
+        let a = sample();
+        assert_eq!(a.row_counts(), vec![2, 0, 2]);
+        assert_eq!(a.nnz(), 4);
+        assert_eq!(a.stored_entries(), 4);
+        assert_eq!(a.storage_bytes(), 4 * 12);
+    }
+}

@@ -1,0 +1,150 @@
+//! CSR (compressed sparse row) — the paper's default format (§5.2) and
+//! the baseline every optimization mode is compared against.
+
+use super::{Storage, SpMv};
+
+/// CSR sparse matrix: `row_ptr[i]..row_ptr[i+1]` spans row `i`'s entries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub row_ptr: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    /// Build directly from parts; validates the row_ptr invariants.
+    pub fn new(
+        n_rows: usize,
+        n_cols: usize,
+        row_ptr: Vec<u32>,
+        cols: Vec<u32>,
+        vals: Vec<f32>,
+    ) -> Self {
+        assert_eq!(row_ptr.len(), n_rows + 1, "row_ptr must have n_rows+1 entries");
+        assert_eq!(*row_ptr.last().unwrap() as usize, vals.len());
+        assert_eq!(cols.len(), vals.len());
+        debug_assert!(row_ptr.windows(2).all(|w| w[0] <= w[1]), "row_ptr must be monotone");
+        Csr { n_rows, n_cols, row_ptr, cols, vals }
+    }
+
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+        (&self.cols[a..b], &self.vals[a..b])
+    }
+
+    pub fn row_len(&self, i: usize) -> usize {
+        (self.row_ptr[i + 1] - self.row_ptr[i]) as usize
+    }
+
+    /// Expand into the kernel-side COO triplets (vals, rows, cols), padded
+    /// with (0.0, 0, 0) to `nnz_pad` — the exact input layout of the CSR
+    /// Pallas kernel (`python/compile/kernels/csr.py`).
+    pub fn to_kernel_coo(&self, nnz_pad: usize) -> (Vec<f32>, Vec<i32>, Vec<i32>) {
+        let nnz = self.vals.len();
+        assert!(nnz_pad >= nnz, "nnz_pad {nnz_pad} < nnz {nnz}");
+        let mut vals = Vec::with_capacity(nnz_pad);
+        let mut rows = Vec::with_capacity(nnz_pad);
+        let mut cols = Vec::with_capacity(nnz_pad);
+        for i in 0..self.n_rows {
+            let (a, b) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+            for k in a..b {
+                vals.push(self.vals[k]);
+                rows.push(i as i32);
+                cols.push(self.cols[k] as i32);
+            }
+        }
+        vals.resize(nnz_pad, 0.0);
+        rows.resize(nnz_pad, 0);
+        cols.resize(nnz_pad, 0);
+        (vals, rows, cols)
+    }
+
+    /// Maximum row length (ELL width of this matrix).
+    pub fn max_row_len(&self) -> usize {
+        (0..self.n_rows).map(|i| self.row_len(i)).max().unwrap_or(0)
+    }
+}
+
+impl Storage for Csr {
+    fn storage_bytes(&self) -> usize {
+        (self.n_rows + 1) * 4 + self.vals.len() * (4 + 4)
+    }
+    fn stored_entries(&self) -> usize {
+        self.vals.len()
+    }
+    fn nnz(&self) -> usize {
+        self.vals.iter().filter(|v| **v != 0.0).count()
+    }
+}
+
+impl SpMv for Csr {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn spmv(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.n_cols);
+        assert_eq!(y.len(), self.n_rows);
+        for i in 0..self.n_rows {
+            let (a, b) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+            let mut acc = 0.0f32;
+            for k in a..b {
+                acc += self.vals[k] * x[self.cols[k] as usize];
+            }
+            y[i] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // [[1, 0, 2], [0, 0, 0], [3, 4, 0]]
+        Csr::new(3, 3, vec![0, 2, 2, 4], vec![0, 2, 0, 1], vec![1.0, 2.0, 3.0, 4.0])
+    }
+
+    #[test]
+    fn spmv_matches_hand_computed() {
+        let a = sample();
+        let x = [1.0, 10.0, 100.0];
+        let mut y = [0.0; 3];
+        a.spmv(&x, &mut y);
+        assert_eq!(y, [201.0, 0.0, 43.0]);
+    }
+
+    #[test]
+    fn row_access() {
+        let a = sample();
+        assert_eq!(a.row(0), (&[0u32, 2][..], &[1.0f32, 2.0][..]));
+        assert_eq!(a.row_len(1), 0);
+        assert_eq!(a.max_row_len(), 2);
+    }
+
+    #[test]
+    fn kernel_coo_expansion_padded() {
+        let a = sample();
+        let (v, r, c) = a.to_kernel_coo(6);
+        assert_eq!(v, vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0]);
+        assert_eq!(r, vec![0, 0, 2, 2, 0, 0]);
+        assert_eq!(c, vec![0, 2, 0, 1, 0, 0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn kernel_coo_pad_too_small_panics() {
+        sample().to_kernel_coo(3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_row_ptr_rejected() {
+        Csr::new(2, 2, vec![0, 1], vec![0], vec![1.0]);
+    }
+}

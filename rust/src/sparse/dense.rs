@@ -1,0 +1,95 @@
+//! Dense matrix — the correctness anchor every sparse format is tested
+//! against (paper Fig. 2a shows why it is *not* a serving format: zeros
+//! are stored and multiplied).
+
+use super::{Storage, SpMv};
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dense {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Dense {
+    pub fn zero(n_rows: usize, n_cols: usize) -> Self {
+        Dense { n_rows, n_cols, data: vec![0.0; n_rows * n_cols] }
+    }
+
+    pub fn from_rows(rows: &[&[f32]]) -> Self {
+        let n_rows = rows.len();
+        let n_cols = rows.first().map_or(0, |r| r.len());
+        let mut data = Vec::with_capacity(n_rows * n_cols);
+        for r in rows {
+            assert_eq!(r.len(), n_cols);
+            data.extend_from_slice(r);
+        }
+        Dense { n_rows, n_cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.n_cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.n_cols + c]
+    }
+}
+
+impl Storage for Dense {
+    fn storage_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+    fn stored_entries(&self) -> usize {
+        self.data.len()
+    }
+    fn nnz(&self) -> usize {
+        self.data.iter().filter(|v| **v != 0.0).count()
+    }
+}
+
+impl SpMv for Dense {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn spmv(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.n_cols);
+        assert_eq!(y.len(), self.n_rows);
+        for r in 0..self.n_rows {
+            let row = &self.data[r * self.n_cols..(r + 1) * self.n_cols];
+            y[r] = row.iter().zip(x).map(|(a, b)| a * b).sum();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spmv_identity() {
+        let mut a = Dense::zero(3, 3);
+        for i in 0..3 {
+            *a.at_mut(i, i) = 1.0;
+        }
+        let x = [7.0, -2.0, 0.5];
+        let mut y = [0.0; 3];
+        a.spmv(&x, &mut y);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn from_rows_layout() {
+        let a = Dense::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(a.at(1, 0), 3.0);
+        assert_eq!(a.nnz(), 4);
+        assert_eq!(a.storage_bytes(), 16);
+    }
+}

@@ -1,0 +1,111 @@
+//! Sparse matrix substrate: the four formats the paper evaluates
+//! (CSR, ELL, BELL, SELL — §2.3), plus COO (SuiteSparse's on-disk default,
+//! §7.5) and dense, with all conversions and per-format CPU SpMV kernels.
+//!
+//! Conventions (shared with `python/compile/kernels/ref.py`):
+//! * values are `f32`, indices `u32`;
+//! * padding entries carry value `0.0` and column index `0`, so SpMV over
+//!   padded storage is exact without masking;
+//! * all formats implement [`SpMv`] and report their storage footprint via
+//!   [`Storage`] (used by the simulator's memory-traffic model and by the
+//!   conversion-overhead model of §7.5).
+
+pub mod bell;
+pub mod convert;
+pub mod coo;
+pub mod csr;
+pub mod dense;
+pub mod ell;
+pub mod sell;
+pub mod spmv;
+
+pub use bell::Bell;
+pub use coo::Coo;
+pub use csr::Csr;
+pub use dense::Dense;
+pub use ell::Ell;
+pub use sell::Sell;
+pub use spmv::SpMv;
+
+/// The four kernel formats of the paper, in its order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Format {
+    Csr,
+    Ell,
+    Bell,
+    Sell,
+}
+
+impl Format {
+    pub const ALL: [Format; 4] = [Format::Csr, Format::Ell, Format::Bell, Format::Sell];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Format::Csr => "csr",
+            Format::Ell => "ell",
+            Format::Bell => "bell",
+            Format::Sell => "sell",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Format> {
+        match s {
+            "csr" | "CSR" => Some(Format::Csr),
+            "ell" | "ELL" => Some(Format::Ell),
+            "bell" | "BELL" => Some(Format::Bell),
+            "sell" | "SELL" => Some(Format::Sell),
+            _ => None,
+        }
+    }
+
+    /// Stable class id used as the ML label for format selection.
+    pub fn class_id(self) -> usize {
+        match self {
+            Format::Csr => 0,
+            Format::Ell => 1,
+            Format::Bell => 2,
+            Format::Sell => 3,
+        }
+    }
+
+    pub fn from_class_id(id: usize) -> Option<Format> {
+        Format::ALL.get(id).copied()
+    }
+}
+
+impl std::fmt::Display for Format {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Storage accounting: bytes moved from DRAM when a kernel streams the
+/// matrix once (the simulator's traffic model) and bytes resident.
+pub trait Storage {
+    /// Total bytes of the format's arrays (values + indices + pointers).
+    fn storage_bytes(&self) -> usize;
+    /// Number of *stored* entries including padding (>= nnz).
+    fn stored_entries(&self) -> usize;
+    /// Number of meaningful non-zeros represented.
+    fn nnz(&self) -> usize;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn format_roundtrip_ids() {
+        for f in Format::ALL {
+            assert_eq!(Format::from_class_id(f.class_id()), Some(f));
+            assert_eq!(Format::parse(f.name()), Some(f));
+        }
+        assert_eq!(Format::parse("hyb"), None);
+        assert_eq!(Format::from_class_id(9), None);
+    }
+
+    #[test]
+    fn format_display_matches_name() {
+        assert_eq!(Format::Bell.to_string(), "bell");
+    }
+}

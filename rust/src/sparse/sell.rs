@@ -1,0 +1,167 @@
+//! SELL (sliced ELLPACK) format — ELL applied per slice of `h` rows, each
+//! slice padded only to its own max row length (paper §2.3, Fig. 2e).
+//! Suits matrices with strongly varying row lengths (power-law graphs):
+//! zero-padding is confined to the slice, not the whole matrix.
+
+use super::{Storage, SpMv};
+
+/// Sliced-ELL sparse matrix with ragged per-slice storage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sell {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Slice height (rows per slice).
+    pub h: usize,
+    /// Per-slice padded width (max row length inside the slice).
+    pub slice_width: Vec<u32>,
+    /// Start offset of each slice in `vals`/`cols` (len = n_slices + 1).
+    /// Slice s spans `slice_ptr[s] .. slice_ptr[s+1]` = `h * slice_width[s]`
+    /// entries, stored row-major within the slice.
+    pub slice_ptr: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Sell {
+    pub fn n_slices(&self) -> usize {
+        self.slice_width.len()
+    }
+
+    /// Entries of (slice s, local row i): returns (cols, vals) slices.
+    pub fn slice_row(&self, s: usize, i: usize) -> (&[u32], &[f32]) {
+        let w = self.slice_width[s] as usize;
+        let base = self.slice_ptr[s] as usize + i * w;
+        (&self.cols[base..base + w], &self.vals[base..base + w])
+    }
+
+    /// Maximum slice width — the bucket width the AOT kernel needs.
+    pub fn max_slice_width(&self) -> usize {
+        self.slice_width.iter().map(|&w| w as usize).max().unwrap_or(0)
+    }
+
+    /// Marshal into the Pallas SELL kernel layout: data/cols `(ns_pad, h,
+    /// w_pad)` with every slice padded to the common bucket width.
+    pub fn to_kernel(&self, ns_pad: usize, w_pad: usize) -> (Vec<f32>, Vec<i32>) {
+        let ns = self.n_slices();
+        assert!(ns_pad >= ns && w_pad >= self.max_slice_width());
+        let mut data = vec![0.0f32; ns_pad * self.h * w_pad];
+        let mut cols = vec![0i32; ns_pad * self.h * w_pad];
+        for s in 0..ns {
+            let w = self.slice_width[s] as usize;
+            for i in 0..self.h {
+                let (rc, rv) = self.slice_row(s, i);
+                let dst = (s * self.h + i) * w_pad;
+                for j in 0..w {
+                    data[dst + j] = rv[j];
+                    cols[dst + j] = rc[j] as i32;
+                }
+            }
+        }
+        (data, cols)
+    }
+
+    /// Padding efficiency: nnz / stored entries (1.0 = no padding waste).
+    pub fn fill_ratio(&self) -> f64 {
+        if self.vals.is_empty() {
+            return 0.0;
+        }
+        self.nnz() as f64 / self.vals.len() as f64
+    }
+}
+
+impl Storage for Sell {
+    fn storage_bytes(&self) -> usize {
+        self.slice_width.len() * 4 + self.slice_ptr.len() * 4 + self.vals.len() * (4 + 4)
+    }
+    fn stored_entries(&self) -> usize {
+        self.vals.len()
+    }
+    fn nnz(&self) -> usize {
+        self.vals.iter().filter(|v| **v != 0.0).count()
+    }
+}
+
+impl SpMv for Sell {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn spmv(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.n_cols);
+        assert_eq!(y.len(), self.n_rows);
+        for s in 0..self.n_slices() {
+            let w = self.slice_width[s] as usize;
+            let base = self.slice_ptr[s] as usize;
+            for i in 0..self.h {
+                let r = s * self.h + i;
+                if r >= self.n_rows {
+                    break;
+                }
+                let rb = base + i * w;
+                let mut acc = 0.0f32;
+                for j in 0..w {
+                    acc += self.vals[rb + j] * x[self.cols[rb + j] as usize];
+                }
+                y[r] = acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 4x4, h = 2. Slice 0 rows {0:[.(0)=1], 1:[]} width 1;
+    /// slice 1 rows {2:[(1)=2,(3)=3], 3:[(0)=4]} width 2.
+    fn sample() -> Sell {
+        Sell {
+            n_rows: 4,
+            n_cols: 4,
+            h: 2,
+            slice_width: vec![1, 2],
+            slice_ptr: vec![0, 2, 6],
+            cols: vec![0, 0, 1, 3, 0, 0],
+            vals: vec![1.0, 0.0, 2.0, 3.0, 4.0, 0.0],
+        }
+    }
+
+    #[test]
+    fn spmv_matches_hand_computed() {
+        let a = sample();
+        let x = [1.0, 10.0, 100.0, 1000.0];
+        let mut y = [0.0; 4];
+        a.spmv(&x, &mut y);
+        assert_eq!(y, [1.0, 0.0, 3020.0, 4.0]);
+    }
+
+    #[test]
+    fn slice_access() {
+        let a = sample();
+        assert_eq!(a.n_slices(), 2);
+        assert_eq!(a.slice_row(1, 0), (&[1u32, 3][..], &[2.0f32, 3.0][..]));
+        assert_eq!(a.max_slice_width(), 2);
+    }
+
+    #[test]
+    fn kernel_marshalling_pads_slices_to_common_width() {
+        let a = sample();
+        let (data, cols) = a.to_kernel(2, 3);
+        // slice 0 row 0: [1, 0, 0]
+        assert_eq!(&data[0..3], &[1.0, 0.0, 0.0]);
+        // slice 1 row 0: [2, 3, 0] with cols [1, 3, 0]
+        assert_eq!(&data[6..9], &[2.0, 3.0, 0.0]);
+        assert_eq!(&cols[6..9], &[1, 3, 0]);
+    }
+
+    #[test]
+    fn storage_less_than_global_ell_for_skewed_rows() {
+        // SELL's whole point: stored entries < n_rows * global max width.
+        let a = sample();
+        assert!(a.stored_entries() < 4 * 2);
+        assert!((a.fill_ratio() - 4.0 / 6.0).abs() < 1e-12);
+    }
+}

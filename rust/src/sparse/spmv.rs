@@ -1,0 +1,44 @@
+//! The SpMV operation trait: `y = A x` for every storage format.
+
+/// Sparse (or dense) matrix-vector product.
+pub trait SpMv {
+    fn n_rows(&self) -> usize;
+    fn n_cols(&self) -> usize;
+
+    /// Compute `y = A x`. `y` is fully overwritten.
+    fn spmv(&self, x: &[f32], y: &mut [f32]);
+
+    /// Allocate-and-return convenience wrapper.
+    fn spmv_alloc(&self, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![0.0; self.n_rows()];
+        self.spmv(x, &mut y);
+        y
+    }
+
+    /// FLOPs of one product (2 per stored multiply-add on real non-zeros) —
+    /// the numerator of the paper's MFLOPS/Watt objective (§6.3).
+    fn flops(&self, nnz: usize) -> u64 {
+        2 * nnz as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::sparse::{Coo, SpMv};
+
+    #[test]
+    fn spmv_alloc_matches_spmv() {
+        let mut a = Coo::new(2, 2);
+        a.push(0, 1, 3.0);
+        let x = [2.0, 5.0];
+        let mut y = [0.0; 2];
+        a.spmv(&x, &mut y);
+        assert_eq!(a.spmv_alloc(&x), y.to_vec());
+    }
+
+    #[test]
+    fn flops_counts_two_per_nnz() {
+        let a = Coo::new(1, 1);
+        assert_eq!(a.flops(10), 20);
+    }
+}

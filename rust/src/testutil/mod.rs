@@ -1,0 +1,125 @@
+//! Property-testing helper — the proptest stand-in (proptest is not in
+//! the offline crate mirror; see Cargo.toml). Runs a property over many
+//! seeded random cases and, on failure, retries smaller sizes derived
+//! from the failing case (a lightweight shrink) before reporting the
+//! minimal reproducing seed.
+
+use crate::gen::Rng;
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum PropResult {
+    Ok { cases: usize },
+    Failed { seed: u64, size: usize, message: String },
+}
+
+/// Run `prop(rng, size)` over `cases` random (seed, size) pairs.
+///
+/// `prop` returns Err(description) on a violated property. On failure we
+/// re-run the same seed at smaller sizes to find a smaller witness.
+pub fn forall<F>(base_seed: u64, cases: usize, max_size: usize, mut prop: F) -> PropResult
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case as u64);
+        let size = 1 + (seed as usize % max_size);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // shrink: halve the size while it still fails
+            let mut fail_size = size;
+            let mut fail_msg = msg;
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng2 = Rng::new(seed);
+                match prop(&mut rng2, s) {
+                    Err(m) => {
+                        fail_size = s;
+                        fail_msg = m;
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            return PropResult::Failed { seed, size: fail_size, message: fail_msg };
+        }
+    }
+    PropResult::Ok { cases }
+}
+
+/// Assert a property holds; panics with the minimal witness otherwise.
+#[track_caller]
+pub fn assert_prop<F>(name: &str, base_seed: u64, cases: usize, max_size: usize, prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    match forall(base_seed, cases, max_size, prop) {
+        PropResult::Ok { .. } => {}
+        PropResult::Failed { seed, size, message } => {
+            panic!("property '{name}' failed (seed={seed}, size={size}): {message}");
+        }
+    }
+}
+
+/// Random COO matrix for property tests.
+pub fn arb_coo(rng: &mut Rng, size: usize) -> crate::sparse::Coo {
+    let n = (size % 64) + 1;
+    let m = ((size / 2) % 64) + 1;
+    let nnz = rng.below(4 * n * m / 3 + 1);
+    let mut coo = crate::sparse::Coo::with_capacity(n, m, nnz);
+    for _ in 0..nnz {
+        coo.push(rng.below(n), rng.below(m), rng.val());
+    }
+    coo
+}
+
+/// Random dense vector.
+pub fn arb_x(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.val()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_reports_cases() {
+        match forall(1, 50, 100, |_, _| Ok(())) {
+            PropResult::Ok { cases } => assert_eq!(cases, 50),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        // fails whenever size >= 4; the shrinker should reach size < 8
+        match forall(2, 50, 100, |_, size| {
+            if size >= 4 {
+                Err("too big".into())
+            } else {
+                Ok(())
+            }
+        }) {
+            PropResult::Failed { size, .. } => assert!(size < 8, "shrunk to {size}"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'demo' failed")]
+    fn assert_prop_panics_with_witness() {
+        assert_prop("demo", 3, 10, 50, |_, _| Err("always".into()));
+    }
+
+    #[test]
+    fn arb_coo_in_bounds() {
+        let mut rng = Rng::new(5);
+        for s in [1, 10, 100] {
+            let c = arb_coo(&mut rng, s);
+            for i in 0..c.len() {
+                assert!((c.rows[i] as usize) < c.n_rows);
+                assert!((c.cols[i] as usize) < c.n_cols);
+            }
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! End-to-end pipeline integration: corpus -> dataset -> labels -> tuned
+//! models -> both optimization modes, without the PJRT layer (covered in
+//! runtime_integration.rs). This is the §5 pipeline exercised as a whole.
+
+use auto_spmv::automl::tuner::{tune_family, Family};
+use auto_spmv::coordinator::overhead::{OverheadModel, OverheadSample};
+use auto_spmv::coordinator::{CompileTimeOptimizer, RunTimeOptimizer};
+use auto_spmv::dataset::labels::{self, Target};
+use auto_spmv::dataset::{build, store, BuildOptions};
+use auto_spmv::gen;
+use auto_spmv::gpusim::{KernelConfig, Objective};
+use auto_spmv::ml::metrics::accuracy;
+use auto_spmv::ml::Classifier;
+
+fn subset() -> Vec<String> {
+    ["rim", "eu-2005", "crankseg_1", "parabolic_fem", "wiki-talk-temporal",
+     "consph", "amazon0601", "pkustk04"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+}
+
+fn toy_overhead() -> OverheadModel {
+    let samples: Vec<OverheadSample> = (1..12)
+        .map(|k| OverheadSample {
+            n: k as f64 * 800.0,
+            nnz: k as f64 * 16_000.0,
+            f_latency_s: k as f64 * 8e-4,
+            c_latency_s: k as f64 * 1.6e-3,
+        })
+        .collect();
+    OverheadModel::train(&samples)
+}
+
+#[test]
+fn full_pipeline_compile_and_runtime_modes() {
+    let ds = build(&BuildOptions { only: Some(subset()), ..Default::default() });
+    assert_eq!(ds.len(), 8 * 2 * KernelConfig::sweep_all().len());
+
+    for obj in Objective::ALL {
+        let ex = labels::examples(&ds, obj);
+        assert_eq!(ex.len(), 16);
+
+        // compile-time mode improves (or matches) the default on every
+        // training matrix
+        let opt = CompileTimeOptimizer::train_on_examples(&ex, obj);
+        for e in &ex {
+            let entry = gen::by_name(&e.matrix).unwrap();
+            let f = auto_spmv::features::extract_csr(&entry.generate_csr(1));
+            let choice = opt.predict(&f, &e.arch);
+            let slice = ds.slice(&e.matrix, &e.arch);
+            let chosen = slice.iter().find(|r| r.config == choice.to_config()).unwrap();
+            let chosen_v = obj.value(&chosen.m);
+            // labels canonicalize near-ties within 0.5% (dataset::labels);
+            // the predicted config may sit inside that band
+            let tol_ok = if obj.minimize() {
+                chosen_v <= e.default_value * 1.006
+            } else {
+                chosen_v >= e.default_value * 0.994
+            };
+            assert!(
+                tol_ok,
+                "{} {} {}: predicted config {} loses to default ({} vs {})",
+                e.matrix,
+                e.arch,
+                obj.name(),
+                choice.to_config(),
+                chosen_v,
+                e.default_value,
+            );
+        }
+
+        // run-time mode: decisions are sane on training matrices
+        let rt = RunTimeOptimizer::train(&ds, obj, toy_overhead());
+        for name in subset() {
+            let coo = gen::by_name(&name).unwrap().generate(1);
+            let d = rt.decide(&coo, 1000);
+            assert!(d.overhead.total() >= 0.0);
+            assert!(d.est_best > 0.0);
+        }
+    }
+}
+
+#[test]
+fn tuned_decision_tree_reaches_table5_accuracy_on_train() {
+    // the paper reports 100% accuracy (Table 5); on the training split a
+    // tuned decision tree must memorize the compile-parameter labels
+    let ds = build(&BuildOptions { only: Some(subset()), ..Default::default() });
+    let ex = labels::examples(&ds, Objective::Latency);
+    for target in [Target::TbSize, Target::MaxRegCount, Target::MemConfig] {
+        let (x, y) = labels::to_xy(&ex, target);
+        let tuned = tune_family(Family::DecisionTree, &x, &y, 8, 3);
+        let acc = accuracy(&y, &tuned.model.predict(&x));
+        assert!(acc >= 0.9, "{}: train accuracy {acc}", target.name());
+    }
+}
+
+#[test]
+fn dataset_roundtrip_preserves_trained_behavior() {
+    let ds = build(&BuildOptions {
+        only: Some(vec!["rim".into(), "consph".into()]),
+        both_archs: false,
+        ..Default::default()
+    });
+    let tmp = std::env::temp_dir().join("autospmv_pipeline_ds.tsv");
+    store::save(&ds, &tmp).unwrap();
+    let back = store::load(&tmp).unwrap();
+    std::fs::remove_file(&tmp).ok();
+
+    let a = CompileTimeOptimizer::train(&ds, Objective::Energy);
+    let b = CompileTimeOptimizer::train(&back, Objective::Energy);
+    let f = auto_spmv::features::extract_csr(&gen::by_name("rim").unwrap().generate_csr(1));
+    assert_eq!(a.predict(&f, "GTX1650m-Turing"), b.predict(&f, "GTX1650m-Turing"));
+}
+
+#[test]
+fn cross_arch_prediction_transfers() {
+    // Fig. 12's premise: Turing-trained models predict well for Pascal
+    let ds = build(&BuildOptions { only: Some(subset()), ..Default::default() });
+    let obj = Objective::Latency;
+    // train on Turing records only
+    let turing_only = auto_spmv::dataset::Dataset {
+        records: ds.records.iter().filter(|r| r.arch.contains("Turing")).cloned().collect(),
+    };
+    let opt = CompileTimeOptimizer::train(&turing_only, obj);
+    // evaluate predicted configs on the Pascal half
+    for name in subset() {
+        let f = auto_spmv::features::extract_csr(&gen::by_name(&name).unwrap().generate_csr(1));
+        // trained on Turing only: the model has never seen the Pascal flag
+        let choice = opt.predict(&f, "GTX1650m-Turing");
+        let slice = ds.slice(&name, "GTX1080-Pascal");
+        let chosen = slice.iter().find(|r| r.config == choice.to_config()).unwrap();
+        let best = slice
+            .iter()
+            .filter(|r| r.config.format == auto_spmv::sparse::Format::Csr)
+            .map(|r| r.m.latency_s)
+            .fold(f64::INFINITY, f64::min);
+        // within 25% of the per-device optimum (paper: ~2% on real GPUs;
+        // our two profiles differ more than their two boards did)
+        assert!(
+            chosen.m.latency_s <= 1.25 * best,
+            "{name}: transferred config {} vs best {best}",
+            chosen.m.latency_s
+        );
+    }
+}

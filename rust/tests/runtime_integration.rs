@@ -1,0 +1,207 @@
+//! Integration tests over the PJRT runtime: load real AOT artifacts,
+//! execute every format's kernel, and check numerics against the native
+//! Rust SpMV. Requires `make artifacts` (skipped with a notice if the
+//! manifest is absent).
+
+use auto_spmv::coordinator::overhead::{OverheadModel, OverheadSample};
+use auto_spmv::coordinator::service::{BackendSpec, Service};
+use auto_spmv::coordinator::RunTimeOptimizer;
+use auto_spmv::dataset::{build, BuildOptions};
+use auto_spmv::gen;
+use auto_spmv::gpusim::Objective;
+use auto_spmv::runtime::{default_artifacts_dir, Engine};
+use auto_spmv::sparse::convert::{self, AnyFormat, ConvertParams};
+use auto_spmv::sparse::{Format, SpMv};
+use std::path::PathBuf;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} (run `make artifacts`)");
+        None
+    }
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32) {
+    assert_eq!(got.len(), want.len());
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        let scale = b.abs().max(1.0);
+        assert!(
+            (a - b).abs() <= tol * scale,
+            "row {i}: got {a}, want {b} (tol {tol})"
+        );
+    }
+}
+
+/// A small matrix that fits the 256-row buckets.
+fn small_csr() -> auto_spmv::sparse::Csr {
+    let mut rng = auto_spmv::gen::Rng::new(77);
+    let coo = auto_spmv::gen::patterns::banded(&mut rng, 200, 12, 6.0);
+    convert::coo_to_csr(&coo)
+}
+
+#[test]
+fn all_formats_match_native_numerics() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(&dir).expect("engine");
+    let csr = small_csr();
+    let x: Vec<f32> = (0..csr.n_cols).map(|i| ((i % 13) as f32 - 6.0) * 0.25).collect();
+    let want = csr.spmv_alloc(&x);
+
+    let params = ConvertParams { bell_bh: 8, bell_bw: 8, sell_h: 8 };
+    for fmt in Format::ALL {
+        let m = convert::convert(&csr, fmt, params);
+        let got = engine
+            .spmv(&m, &x, None)
+            .unwrap_or_else(|e| panic!("{fmt}: {e:#}"));
+        assert_close(&got, &want, 1e-4);
+    }
+    assert!(engine.exec_count >= 4);
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(&dir).expect("engine");
+    let csr = small_csr();
+    let x = vec![1.0f32; csr.n_cols];
+    let m = convert::convert(&csr, Format::Ell, ConvertParams::default());
+    engine.spmv(&m, &x, None).unwrap();
+    let cached_after_one = engine.cached();
+    for _ in 0..5 {
+        engine.spmv(&m, &x, None).unwrap();
+    }
+    assert_eq!(engine.cached(), cached_after_one, "same variant must reuse the cache");
+    assert_eq!(engine.exec_count, 6);
+}
+
+#[test]
+fn knob_choice_selects_different_variants() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(&dir).expect("engine");
+    let csr = small_csr();
+    let x = vec![0.5f32; csr.n_cols];
+    let m = convert::convert(&csr, Format::Ell, ConvertParams::default());
+    let want = csr.spmv_alloc(&x);
+    use auto_spmv::gpusim::MemConfig;
+    // different knob mappings still compute the same product
+    for choice in [
+        (64u32, 16u32, MemConfig::Default),
+        (1024, 128, MemConfig::PreferL1),
+        (512, 64, MemConfig::PreferShared),
+    ] {
+        let got = engine.spmv(&m, &x, Some(choice)).unwrap();
+        assert_close(&got, &want, 1e-4);
+    }
+    // at least two distinct executables were compiled for the choices
+    assert!(engine.cached() >= 2, "cached {}", engine.cached());
+}
+
+#[test]
+fn bigger_bucket_used_for_bigger_matrix() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(&dir).expect("engine");
+    let mut rng = auto_spmv::gen::Rng::new(78);
+    let coo = auto_spmv::gen::patterns::banded(&mut rng, 900, 10, 5.0);
+    let csr = convert::coo_to_csr(&coo);
+    let x: Vec<f32> = (0..csr.n_cols).map(|i| (i % 5) as f32).collect();
+    let want = csr.spmv_alloc(&x);
+    let m = convert::convert(&csr, Format::Ell, ConvertParams::default());
+    let got = engine.spmv(&m, &x, None).expect("900-row matrix fits the 1024 bucket");
+    assert_close(&got, &want, 1e-4);
+}
+
+#[test]
+fn oversized_matrix_is_clean_error() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(&dir).expect("engine");
+    let mut rng = auto_spmv::gen::Rng::new(79);
+    let coo = auto_spmv::gen::patterns::uniform(&mut rng, 2000, 2000, 4.0);
+    let csr = convert::coo_to_csr(&coo);
+    let x = vec![1.0f32; 2000];
+    let m = convert::convert(&csr, Format::Ell, ConvertParams::default());
+    let err = engine.spmv(&m, &x, None).unwrap_err();
+    assert!(format!("{err:#}").contains("no artifact bucket"));
+}
+
+#[test]
+fn power_step_normalizes_through_pjrt() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(&dir).expect("engine");
+    let csr = small_csr();
+    let ell = convert::csr_to_ell(&csr);
+    let x = vec![1.0f32; csr.n_cols];
+    let y = engine.power_step(&ell, &x).expect("power step");
+    let norm: f32 = y.iter().map(|v| v * v).sum::<f32>().sqrt();
+    // normalized over the padded 256-vector; the truncated part carries
+    // the whole mass because padded rows are zero
+    assert!((norm - 1.0).abs() < 1e-3, "norm {norm}");
+}
+
+#[test]
+fn service_end_to_end_over_pjrt() {
+    let Some(dir) = artifacts() else { return };
+    // tiny router trained on two matrices
+    let ds = build(&BuildOptions {
+        only: Some(vec!["rim".into(), "bcsstk32".into()]),
+        both_archs: false,
+        ..Default::default()
+    });
+    let samples: Vec<OverheadSample> = (1..8)
+        .map(|k| OverheadSample {
+            n: k as f64 * 500.0,
+            nnz: k as f64 * 5_000.0,
+            f_latency_s: k as f64 * 1e-3,
+            c_latency_s: k as f64 * 1e-3,
+        })
+        .collect();
+    let router = RunTimeOptimizer::train(&ds, Objective::Latency, OverheadModel::train(&samples));
+    let svc = Service::start(
+        router,
+        BackendSpec::Pjrt(dir),
+        ConvertParams { bell_bh: 8, bell_bw: 8, sell_h: 8 },
+    );
+
+    // serve a small banded matrix (fits the 256 bucket)
+    let csr = small_csr();
+    let coo = convert::csr_to_coo(&csr);
+    svc.register(1, coo, 100).unwrap();
+    let x: Vec<f32> = (0..csr.n_cols).map(|i| (i % 3) as f32).collect();
+    let want = csr.spmv_alloc(&x);
+    let resp = svc.product(1, x).unwrap();
+    assert_close(&resp.y, &want, 1e-4);
+    let stats = svc.stats().unwrap();
+    assert_eq!(stats.requests, 1);
+}
+
+#[test]
+fn pjrt_matches_native_on_corpus_sample() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(&dir).expect("engine");
+    // bcsstk32 at scale 1 is 1200 rows -> outside 1024 bucket; use a
+    // truncated banded matrix instead from the generator directly
+    let mut rng = auto_spmv::gen::Rng::new(80);
+    for (i, gen_fn) in [
+        // CSR buckets cap padded nnz at 8192; keep densities below that
+        auto_spmv::gen::patterns::banded(&mut rng, 1000, 24, 6.0),
+        auto_spmv::gen::patterns::uniform(&mut rng, 512, 512, 6.0),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let csr = convert::coo_to_csr(&gen_fn);
+        let x: Vec<f32> = (0..csr.n_cols).map(|k| ((k * (i + 2)) % 7) as f32 * 0.5).collect();
+        let want = csr.spmv_alloc(&x);
+        let got = engine.spmv(&AnyFormat::Csr(csr.clone()), &x, None);
+        match got {
+            Ok(y) => assert_close(&y, &want, 1e-3),
+            Err(e) => {
+                // CSR buckets cap nnz at 8192; banded(1000, 24, 8) fits
+                panic!("case {i}: {e:#} (nnz {})", csr.vals.len());
+            }
+        }
+    }
+    let _ = gen::corpus();
+}

@@ -1,0 +1,183 @@
+//! Property tests over the sparse substrate (testutil::proputil is the
+//! offline proptest stand-in — see Cargo.toml).
+//!
+//! Invariants:
+//!  * every format conversion preserves the SpMV product;
+//!  * conversion round trips preserve CSR exactly;
+//!  * kernel marshalling (padded bucket arrays) preserves the product;
+//!  * feature extraction is format-independent;
+//!  * routing/labeling invariants (best <= default under each objective).
+
+use auto_spmv::features;
+use auto_spmv::sparse::convert::{self, AnyFormat, ConvertParams};
+use auto_spmv::sparse::{Format, SpMv};
+use auto_spmv::testutil::{arb_coo, arb_x, assert_prop};
+
+fn close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length {} != {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > tol * y.abs().max(1.0) {
+            return Err(format!("row {i}: {x} != {y}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_all_conversions_preserve_spmv() {
+    assert_prop("conversions preserve spmv", 0xC0, 60, 256, |rng, size| {
+        let coo = arb_coo(rng, size);
+        let x = arb_x(rng, coo.n_cols);
+        let csr = convert::coo_to_csr(&coo);
+        let want = csr.spmv_alloc(&x);
+        for fmt in Format::ALL {
+            for params in [
+                ConvertParams { bell_bh: 2, bell_bw: 2, sell_h: 2 },
+                ConvertParams { bell_bh: 4, bell_bw: 8, sell_h: 8 },
+                ConvertParams::default(),
+            ] {
+                let m = convert::convert(&csr, fmt, params);
+                let got = m.as_spmv().spmv_alloc(&x);
+                close(&got, &want, 1e-4).map_err(|e| format!("{fmt} {params:?}: {e}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_roundtrips_preserve_csr() {
+    assert_prop("round trips preserve csr", 0xC1, 60, 256, |rng, size| {
+        let coo = arb_coo(rng, size);
+        let csr = convert::coo_to_csr(&coo);
+        // note: generators may produce duplicates; densified comparison
+        let dense = convert::csr_to_dense(&csr);
+        let back_ell = convert::csr_to_dense(&convert::ell_to_csr(&convert::csr_to_ell(&csr)));
+        if back_ell.data != dense.data {
+            return Err("ELL round trip changed the dense realization".into());
+        }
+        let back_sell =
+            convert::csr_to_dense(&convert::sell_to_csr(&convert::csr_to_sell(&csr, 3)));
+        if back_sell.data != dense.data {
+            return Err("SELL round trip changed the dense realization".into());
+        }
+        let back_bell =
+            convert::csr_to_dense(&convert::bell_to_csr(&convert::csr_to_bell(&csr, 3, 5)));
+        if back_bell.data != dense.data {
+            return Err("BELL round trip changed the dense realization".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kernel_marshalling_preserves_product() {
+    assert_prop("kernel marshalling preserves product", 0xC2, 40, 128, |rng, size| {
+        let coo = arb_coo(rng, size);
+        let x = arb_x(rng, coo.n_cols);
+        let csr = convert::coo_to_csr(&coo);
+        let want = csr.spmv_alloc(&x);
+
+        // ELL bucket marshalling: compute from the padded arrays directly
+        let ell = convert::csr_to_ell(&csr);
+        let rows_pad = (csr.n_rows + 7).div_ceil(8) * 8;
+        let width_pad = ell.width + 3;
+        let (vals, cols) = ell.to_kernel(rows_pad, width_pad);
+        let mut got = vec![0.0f32; csr.n_rows];
+        for (r, g) in got.iter_mut().enumerate() {
+            for s in 0..width_pad {
+                *g += vals[r * width_pad + s] * x[cols[r * width_pad + s] as usize];
+            }
+        }
+        close(&got, &want, 1e-4).map_err(|e| format!("ELL marshalling: {e}"))?;
+
+        // CSR COO-expansion marshalling
+        let nnz_pad = csr.vals.len() + 5;
+        let (v, r, c) = csr.to_kernel_coo(nnz_pad);
+        let mut got2 = vec![0.0f32; csr.n_rows];
+        for k in 0..nnz_pad {
+            got2[r[k] as usize] += v[k] * x[c[k] as usize];
+        }
+        close(&got2, &want, 1e-4).map_err(|e| format!("CSR marshalling: {e}"))
+    });
+}
+
+#[test]
+fn prop_features_format_independent() {
+    assert_prop("features are format independent", 0xC3, 60, 256, |rng, size| {
+        let coo = arb_coo(rng, size);
+        let csr = convert::coo_to_csr(&coo);
+        let f_coo = features::extract_coo(&coo);
+        let f_csr = features::extract_csr(&csr);
+        if f_coo != f_csr {
+            return Err(format!("{f_coo:?} != {f_csr:?}"));
+        }
+        // consistency identities
+        if (f_coo.std_nnz * f_coo.std_nnz - f_coo.var_nnz).abs() > 1e-9 {
+            return Err("std^2 != var".into());
+        }
+        if f_coo.ell_ratio > 1.0 + 1e-12 {
+            return Err("ELL ratio > 1".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_storage_accounting_consistent() {
+    use auto_spmv::sparse::Storage;
+    assert_prop("storage accounting", 0xC4, 60, 256, |rng, size| {
+        let coo = arb_coo(rng, size);
+        let csr = convert::coo_to_csr(&coo);
+        for fmt in Format::ALL {
+            let m = convert::convert(&csr, fmt, ConvertParams { bell_bh: 2, bell_bw: 2, sell_h: 2 });
+            let (stored, nnz) = match &m {
+                AnyFormat::Csr(a) => (a.stored_entries(), a.nnz()),
+                AnyFormat::Ell(a) => (a.stored_entries(), a.nnz()),
+                AnyFormat::Bell(a) => (a.stored_entries(), a.nnz()),
+                AnyFormat::Sell(a) => (a.stored_entries(), a.nnz()),
+            };
+            if stored < nnz {
+                return Err(format!("{fmt}: stored {stored} < nnz {nnz}"));
+            }
+            if m.storage_bytes() == 0 && nnz > 0 {
+                return Err(format!("{fmt}: zero storage with nnz {nnz}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulator_objectives_positive_and_consistent() {
+    use auto_spmv::gpusim::{
+        measure, profile, turing_gtx1650m, KernelConfig, MemConfig,
+    };
+    assert_prop("simulator objectives", 0xC5, 25, 200, |rng, size| {
+        let coo = arb_coo(rng, size + 8);
+        if coo.is_empty() {
+            return Ok(());
+        }
+        let csr = convert::coo_to_csr(&coo);
+        let arch = turing_gtx1650m();
+        for fmt in Format::ALL {
+            let prof = profile(&csr, fmt, ConvertParams { bell_bh: 2, bell_bw: 2, sell_h: 2 });
+            let cfg = KernelConfig {
+                format: fmt,
+                tb_size: [64u32, 256, 1024][size % 3],
+                maxrregcount: [16u32, 64][size % 2],
+                mem: MemConfig::ALL[size % 3],
+            };
+            let m = measure(&arch, &prof, &cfg);
+            if !(m.latency_s > 0.0 && m.energy_j > 0.0 && m.avg_power_w > 0.0) {
+                return Err(format!("{fmt}: non-positive objectives {m:?}"));
+            }
+            if ((m.energy_j / m.latency_s) - m.avg_power_w).abs() > 1e-6 * m.avg_power_w {
+                return Err(format!("{fmt}: E != P*t"));
+            }
+        }
+        Ok(())
+    });
+}
