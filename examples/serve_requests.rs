@@ -3,8 +3,9 @@
 //!
 //!   corpus generators (L3) -> feature extraction (L3) -> GPU-simulator
 //!   dataset + trained router (L3) -> run-time format decisions (L3) ->
-//!   AOT-compiled Pallas SpMV kernels (L1/L2) through PJRT -> batched
-//!   request stream with latency/throughput report.
+//!   sharded serving pool with request coalescing (L3) -> AOT-compiled
+//!   Pallas SpMV kernels (L1/L2) through PJRT (native fallback) ->
+//!   batched request stream with latency/energy/throughput report.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_requests
@@ -13,15 +14,17 @@
 //! The measured run is recorded in EXPERIMENTS.md §End-to-end.
 
 use auto_spmv::coordinator::overhead::OverheadModel;
-use auto_spmv::coordinator::service::{BackendSpec, Service};
 use auto_spmv::coordinator::RunTimeOptimizer;
 use auto_spmv::dataset::{build, BuildOptions};
 use auto_spmv::gen::{patterns, Rng};
 use auto_spmv::gpusim::Objective;
 use auto_spmv::report::Table;
 use auto_spmv::runtime::default_artifacts_dir;
+use auto_spmv::serve::{BackendSpec, Pool, PoolConfig};
 use auto_spmv::sparse::convert::{coo_to_csr, ConvertParams};
 use auto_spmv::sparse::{Coo, SpMv};
+use std::sync::Arc;
+use std::time::Duration;
 
 /// Workload: a mixed fleet of small matrices (each fits an AOT bucket)
 /// with distinct structures, so the router exercises several formats.
@@ -40,17 +43,17 @@ fn fleet() -> Vec<(&'static str, Coo)> {
 }
 
 fn main() -> anyhow::Result<()> {
-    // --- train the router over a corpus slice ---------------------------
+    // --- train the router over the corpus sweep -------------------------
     println!("training router (dataset sweep over the full 30-matrix corpus)...");
     let ds = build(&BuildOptions::default());
     // energy efficiency: the objective where format choice matters most
     // (paper §7.2: CSR is already latency-optimal, but loses up to 99.7%
     // energy efficiency on skewed/banded matrices)
-    let router = RunTimeOptimizer::train(
+    let router = Arc::new(RunTimeOptimizer::train(
         &ds,
         Objective::EnergyEff,
         OverheadModel::train_on_corpus(1, None),
-    );
+    ));
 
     // --- backend: PJRT over the AOT artifacts ---------------------------
     let artifacts = default_artifacts_dir();
@@ -61,7 +64,16 @@ fn main() -> anyhow::Result<()> {
         eprintln!("WARNING: no artifacts at {artifacts:?}; falling back to native");
         BackendSpec::Native
     };
-    let svc = Service::start(router, backend, ConvertParams { bell_bh: 8, bell_bw: 8, sell_h: 8 });
+    let pool = Pool::start(
+        router,
+        backend,
+        PoolConfig {
+            workers: 2,
+            batch_window: Duration::from_micros(150),
+            convert: ConvertParams { bell_bh: 8, bell_bw: 8, sell_h: 8 },
+            ..PoolConfig::default()
+        },
+    );
 
     // --- register the fleet ---------------------------------------------
     let fleet = fleet();
@@ -69,30 +81,42 @@ fn main() -> anyhow::Result<()> {
     let mut formats = Vec::new();
     for (id, (name, coo)) in fleet.iter().enumerate() {
         dims.push((coo.n_cols, coo_to_csr(coo)));
-        let fmt = svc.register(id as u64, coo.clone(), 500_000)?;
+        let fmt = pool.register(id as u64, coo.clone(), 500_000)?;
         formats.push(fmt);
         println!("  registered {name:>10} ({} rows) -> {fmt}", coo.n_rows);
     }
 
     // --- request stream ---------------------------------------------------
-    let n_requests = 500usize;
+    // Pipelined in bursts of 8: concurrent requests for the same matrix
+    // coalesce into one spmv_batch dispatch on its shard.
+    let n_requests = 504usize;
+    let burst = 8usize;
     let mut lat_us: Vec<f64> = Vec::with_capacity(n_requests);
     let mut rng = Rng::new(7);
     let t0 = std::time::Instant::now();
     let mut checked = 0usize;
-    for r in 0..n_requests {
-        let id = rng.below(fleet.len());
-        let (n_cols, csr) = &dims[id];
-        let x: Vec<f32> = (0..*n_cols).map(|i| ((i + r) % 9) as f32 * 0.25 - 1.0).collect();
-        let resp = svc.product(id as u64, x.clone())?;
-        lat_us.push(resp.service_time.as_secs_f64() * 1e6);
-        // spot-check numerics against native on a sample of requests
-        if r % 97 == 0 {
-            let want = csr.spmv_alloc(&x);
-            for (a, b) in resp.y.iter().zip(&want) {
-                assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0), "numeric mismatch");
+    let mut r = 0usize;
+    while r < n_requests {
+        let mut pending = Vec::with_capacity(burst);
+        for _ in 0..burst.min(n_requests - r) {
+            let id = rng.below(fleet.len());
+            let (n_cols, _) = &dims[id];
+            let x: Vec<f32> =
+                (0..*n_cols).map(|i| ((i + r) % 9) as f32 * 0.25 - 1.0).collect();
+            pending.push((id, x.clone(), pool.product_async(id as u64, x)?));
+            r += 1;
+        }
+        for (id, x, rx) in pending {
+            let resp = rx.recv().map_err(|_| anyhow::anyhow!("pool dropped request"))??;
+            lat_us.push(resp.service_time.as_secs_f64() * 1e6);
+            // spot-check numerics against native on a sample of requests
+            if lat_us.len() % 97 == 0 {
+                let want = dims[id].1.spmv_alloc(&x);
+                for (a, b) in resp.y.iter().zip(&want) {
+                    assert!((a - b).abs() <= 1e-3 * b.abs().max(1.0), "numeric mismatch");
+                }
+                checked += 1;
             }
-            checked += 1;
         }
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -100,11 +124,14 @@ fn main() -> anyhow::Result<()> {
     // --- report -------------------------------------------------------------
     lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pct = |p: f64| lat_us[(p / 100.0 * (lat_us.len() - 1) as f64).round() as usize];
-    let stats = svc.stats()?;
+    let stats = pool.stats()?;
+    // `backend_summary` is what the shards ACTUALLY built — a pool that
+    // requested PJRT but failed engine init reports native here.
     let mut t = Table::new(
         &format!(
-            "End-to-end serving ({} backend, {} requests, {} matrices)",
-            if pjrt { "PJRT" } else { "native" },
+            "End-to-end serving ({} backend, {} workers, {} requests, {} matrices)",
+            stats.backend_summary(),
+            stats.workers,
             n_requests,
             fleet.len()
         ),
@@ -115,13 +142,37 @@ fn main() -> anyhow::Result<()> {
     t.row(vec!["latency p90 (us)".into(), format!("{:.1}", pct(90.0))]);
     t.row(vec!["latency p99 (us)".into(), format!("{:.1}", pct(99.0))]);
     t.row(vec!["max (us)".into(), format!("{:.1}", lat_us[lat_us.len() - 1])]);
+    t.row(vec!["dispatches".into(), stats.dispatches.to_string()]);
+    t.row(vec![
+        "coalesced batches (max size)".into(),
+        format!("{} ({})", stats.coalesced_batches, stats.max_batch),
+    ]);
     t.row(vec!["conversions".into(), stats.conversions.to_string()]);
+    t.row(vec!["modeled energy (J)".into(), format!("{:.3e}", stats.total_energy_j)]);
     t.row(vec!["numeric spot-checks".into(), checked.to_string()]);
     t.row(vec![
         "formats in play".into(),
         formats.iter().map(|f| f.to_string()).collect::<Vec<_>>().join(","),
     ]);
     t.emit("e2e_serving");
+
+    // per-matrix telemetry: the §6.3 energy objective at serve time
+    let mut pm = Table::new(
+        "Per-matrix telemetry (energy modeled on the Turing profile)",
+        &["matrix", "format", "requests", "p50 (us)", "p99 (us)", "energy (J)"],
+    );
+    for m in &stats.per_matrix {
+        let name = fleet.get(m.id as usize).map_or("?", |(n, _)| *n);
+        pm.row(vec![
+            name.into(),
+            m.format.map_or("?".to_string(), |f| f.to_string()),
+            m.requests.to_string(),
+            format!("{:.1}", m.p50_us),
+            format!("{:.1}", m.p99_us),
+            format!("{:.3e}", m.energy_j),
+        ]);
+    }
+    pm.emit("e2e_serving_telemetry");
     println!("serve_requests OK");
     Ok(())
 }

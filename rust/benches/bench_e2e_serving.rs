@@ -1,21 +1,31 @@
-//! End-to-end serving benchmark over the PJRT runtime: request
-//! throughput/latency through the full stack (router -> conversion ->
-//! AOT Pallas kernels), per format. Falls back to the native backend
-//! when artifacts are missing.
+//! End-to-end serving benchmark.
+//!
+//! Part 1 (artifacts only): per-format PJRT SpMV latency through the
+//! full stack (router -> conversion -> AOT Pallas kernels).
+//!
+//! Part 2 (always runs — the native backend needs no artifacts):
+//! serving throughput of the sharded pool at 1/2/4 workers with request
+//! coalescing on vs off, plus the coalescing evidence: dispatches vs
+//! requests and the largest spmv_batch executed.
 
 use auto_spmv::gen::{patterns, Rng};
+use auto_spmv::gpusim::Objective;
 use auto_spmv::report::{bench, Table};
 use auto_spmv::runtime::{default_artifacts_dir, Engine};
+use auto_spmv::serve::{BackendSpec, Pool, PoolConfig};
 use auto_spmv::sparse::convert::{self, ConvertParams};
-use auto_spmv::sparse::{Format, SpMv};
+use auto_spmv::sparse::{Coo, Format, SpMv};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-fn main() {
-    let dir = default_artifacts_dir();
-    if !dir.join("manifest.tsv").exists() {
-        println!("SKIP: no artifacts at {dir:?} (run `make artifacts`)");
-        return;
-    }
-    let mut engine = Engine::new(&dir).expect("engine");
+fn pjrt_format_latency(dir: &std::path::Path) {
+    let mut engine = match Engine::new(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            println!("SKIP per-format PJRT table: engine init failed: {e:#}");
+            return;
+        }
+    };
     let mut rng = Rng::new(0xBE);
     let coo = patterns::banded(&mut rng, 1000, 16, 6.0);
     let csr = convert::coo_to_csr(&coo);
@@ -45,4 +55,119 @@ fn main() {
     }
     t.emit("e2e_serving_bench");
     println!("executions {}, cached executables {}", engine.exec_count, engine.cached());
+}
+
+/// Fire `n_requests` pipelined requests at a pool; returns req/s and
+/// the pool's final stats (which also record the backend each shard
+/// ACTUALLY built, so rows are never mislabeled after a PJRT->native
+/// fallback).
+fn drive(pool: &Pool, mats: &[(u64, usize)], n_requests: usize) -> (f64, auto_spmv::serve::PoolStats) {
+    let burst = 16usize;
+    let mut rng = Rng::new(0xD1);
+    let t0 = Instant::now();
+    let mut sent = 0usize;
+    while sent < n_requests {
+        let mut pending = Vec::with_capacity(burst);
+        for _ in 0..burst.min(n_requests - sent) {
+            let (id, n_cols) = mats[rng.below(mats.len())];
+            let x = vec![0.5f32; n_cols];
+            pending.push(pool.product_async(id, x).expect("submit"));
+            sent += 1;
+        }
+        for rx in pending {
+            rx.recv().expect("pool alive").expect("product ok");
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = pool.stats().expect("stats");
+    (n_requests as f64 / wall, stats)
+}
+
+fn main() {
+    let dir = default_artifacts_dir();
+    let have_artifacts = dir.join("manifest.tsv").exists();
+    if have_artifacts {
+        pjrt_format_latency(&dir);
+    } else {
+        println!("no artifacts at {dir:?}: skipping the PJRT table, benching the native backend");
+    }
+
+    // --- throughput of the sharded pool (native or PJRT backend) --------
+    let router = Arc::new(auto_spmv::testutil::toy_router(
+        &["rim", "eu-2005", "shar_te2-b3"],
+        Objective::EnergyEff,
+    ));
+    let backend = if have_artifacts {
+        BackendSpec::Pjrt(dir.clone())
+    } else {
+        BackendSpec::Native
+    };
+
+    let mut rng = Rng::new(0xE2);
+    let fleet: Vec<Coo> = vec![
+        patterns::banded(&mut rng, 1000, 16, 6.0),
+        patterns::uniform(&mut rng, 500, 500, 5.0),
+        patterns::diagonals(&mut rng, 800, &[-8, 0, 8], 0.95),
+    ];
+    let n_requests = 480usize;
+
+    let mut t = Table::new(
+        &format!(
+            "E2E — pool throughput ({} backend requested, {} requests, {} matrices)",
+            backend.name(),
+            n_requests,
+            fleet.len()
+        ),
+        &["workers", "batching", "backend", "req/s", "dispatches", "max batch", "coalesced req %"],
+    );
+    for workers in [1usize, 2, 4] {
+        for batching in [false, true] {
+            let pool = Pool::start(
+                router.clone(),
+                backend.clone(),
+                PoolConfig {
+                    workers,
+                    // off: every request is its own dispatch; on: drain
+                    // the queue + a short admission window
+                    max_batch: if batching { 32 } else { 1 },
+                    batch_window: if batching {
+                        Duration::from_micros(200)
+                    } else {
+                        Duration::ZERO
+                    },
+                    ..PoolConfig::default()
+                },
+            );
+            let mut mats = Vec::new();
+            for (id, coo) in fleet.iter().enumerate() {
+                pool.register(id as u64, coo.clone(), 100_000).expect("register");
+                mats.push((id as u64, coo.n_cols));
+            }
+            let (rps, stats) = drive(&pool, &mats, n_requests);
+            let share = if stats.requests == 0 {
+                0.0
+            } else {
+                stats.batched_requests as f64 / stats.requests as f64
+            };
+            t.row(vec![
+                workers.to_string(),
+                if batching { "on".into() } else { "off".to_string() },
+                stats.backend_summary(),
+                format!("{rps:.0}"),
+                stats.dispatches.to_string(),
+                stats.max_batch.to_string(),
+                format!("{:.0}", 100.0 * share),
+            ]);
+            if batching {
+                assert!(
+                    stats.dispatches < n_requests as u64,
+                    "coalescing must serve multiple requests per spmv_batch dispatch \
+                     ({} dispatches for {n_requests} requests)",
+                    stats.dispatches
+                );
+            }
+        }
+    }
+    t.emit("e2e_serving_throughput");
+    println!("bench_e2e_serving OK");
 }

@@ -6,7 +6,9 @@
 //!   gen-dataset                 run the full sweep, save TSV
 //!   train [--objective O]       train + report per-target accuracy
 //!   optimize --matrix M [...]   run both optimization modes on a matrix
-//!   serve [--requests N]        end-to-end serving demo over PJRT
+//!   serve [--requests N] [--workers W] [--batch-window-us U]
+//!         [--cache-cap C]       serving demo over the sharded pool
+//!                               (PJRT when artifacts exist, else native)
 //!
 //! Global flags: --config FILE, --set key=value (repeatable), and the
 //! shorthand --scale/--seed/--objective overrides.
@@ -213,10 +215,15 @@ fn cmd_optimize(cli: &Cli) -> Result<()> {
 }
 
 fn cmd_serve(cli: &Cli) -> Result<()> {
-    use crate::coordinator::service::{BackendSpec, Service};
+    use crate::serve::{BackendSpec, Pool, PoolConfig};
     use crate::sparse::convert::ConvertParams;
+    use std::sync::Arc;
+    use std::time::Duration;
 
     let n_requests: usize = cli.flag("requests").map_or(24, |v| v.parse().unwrap_or(24));
+    let workers: usize = cli.flag("workers").map_or(2, |v| v.parse().unwrap_or(2));
+    let window_us: u64 = cli.flag("batch-window-us").map_or(0, |v| v.parse().unwrap_or(0));
+    let cache_cap: usize = cli.flag("cache-cap").map_or(64, |v| v.parse().unwrap_or(64));
     let ds = load_or_build(cli)?;
     let obj = cli.objective()?;
     let overhead = OverheadModel::train_on_corpus(cli.config.scale, None);
@@ -229,7 +236,18 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         println!("backend: native (no artifacts at {:?})", cli.config.artifacts_dir);
         BackendSpec::Native
     };
-    let svc = Service::start(router, backend, ConvertParams { bell_bh: 8, bell_bw: 8, sell_h: 8 });
+    println!("pool: {workers} workers, batch window {window_us} us, cache capacity {cache_cap}");
+    let pool = Pool::start(
+        Arc::new(router),
+        backend,
+        PoolConfig {
+            workers,
+            batch_window: Duration::from_micros(window_us),
+            cache_capacity: cache_cap,
+            convert: ConvertParams { bell_bh: 8, bell_bw: 8, sell_h: 8 },
+            ..PoolConfig::default()
+        },
+    );
 
     // serve products over a few small corpus matrices
     let names = ["shar_te2-b3", "rim", "bcsstk32"];
@@ -237,26 +255,56 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     for (id, name) in names.iter().enumerate() {
         let coo = gen::by_name(name).unwrap().generate(1);
         sizes.push(coo.n_cols);
-        let fmt = svc.register(id as u64, coo, 10_000)?;
+        let fmt = pool.register(id as u64, coo, 10_000)?;
         println!("registered {name} -> {fmt}");
     }
+    // pipeline the request stream so concurrent requests for one matrix
+    // can coalesce into batched dispatches
     let t0 = std::time::Instant::now();
+    let mut receivers = Vec::with_capacity(n_requests);
     for r in 0..n_requests {
         let id = r % names.len();
         let x = vec![1.0f32; sizes[id]];
-        svc.product(id as u64, x)?;
+        receivers.push(pool.product_async(id as u64, x)?);
+    }
+    for rx in receivers {
+        rx.recv().map_err(|_| anyhow::anyhow!("pool dropped request"))??;
     }
     let dt = t0.elapsed();
-    let stats = svc.stats()?;
+
+    let stats = pool.stats()?;
     println!(
-        "{} requests in {:.3}s ({:.1} req/s), mean {:.3} ms, max {:.3} ms, conversions {}",
+        "backend in use: {} (degrades to native if PJRT init fails)",
+        stats.backend_summary()
+    );
+    println!(
+        "{} requests in {:.3}s ({:.1} req/s), {} dispatches (max batch {}), conversions {}, \
+         reconversions {}, evictions {}",
         stats.requests,
         dt.as_secs_f64(),
         stats.requests as f64 / dt.as_secs_f64(),
-        1e3 * stats.total_service.as_secs_f64() / stats.requests.max(1) as f64,
-        1e3 * stats.max_service.as_secs_f64(),
-        stats.conversions
+        stats.dispatches,
+        stats.max_batch,
+        stats.conversions,
+        stats.reconversions,
+        stats.evictions
     );
+    let mut t = Table::new(
+        "Per-matrix serving telemetry (latency end-to-end; energy modeled, §6.3)",
+        &["matrix", "format", "requests", "p50 (us)", "p99 (us)", "energy (J)", "power (W)"],
+    );
+    for m in &stats.per_matrix {
+        t.row(vec![
+            names.get(m.id as usize).copied().unwrap_or("?").into(),
+            m.format.map_or("?".into(), |f| f.to_string()),
+            m.requests.to_string(),
+            format!("{:.1}", m.p50_us),
+            format!("{:.1}", m.p99_us),
+            fmt_g(m.energy_j),
+            fmt_g(m.model_power_w),
+        ]);
+    }
+    t.emit("serve");
     Ok(())
 }
 

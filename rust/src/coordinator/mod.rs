@@ -6,8 +6,8 @@
 //!   conversion overhead, and convert only when the predicted gain
 //!   exceeds it.
 //! * [`overhead`] — §7.5: regression models for f_latency / c_latency.
-//! * [`service`] — the serving loop: a threaded request router that
-//!   dispatches AOT-compiled SpMV executables via the PJRT runtime.
+//! * [`service`] — legacy single-worker serving API, now a thin shim
+//!   over the sharded batching engine in [`crate::serve`].
 
 pub mod compile_time;
 pub mod overhead;

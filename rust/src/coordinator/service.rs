@@ -1,75 +1,30 @@
-//! SpMV serving loop — the deployable face of the run-time mode.
+//! SpMV serving loop — compatibility shim over [`crate::serve::Pool`].
 //!
-//! A dedicated worker thread owns the PJRT [`Engine`] (executables are
-//! not shared across threads); clients submit requests over an mpsc
-//! channel and receive results on per-request reply channels. The worker
-//! routes each request through the trained [`RunTimeOptimizer`], converts
-//! the matrix when the overhead model approves (caching the converted
-//! form for subsequent products), and dispatches the matching AOT
-//! executable.
-//!
-//! (tokio is not available in the offline build environment — see
-//! Cargo.toml; std threads + channels implement the same request loop.)
+//! The original implementation here was a single worker thread behind
+//! one mpsc channel. The serving engine now lives in [`crate::serve`]
+//! (sharded workers, request coalescing into `spmv_batch` dispatches, a
+//! bounded conversion cache, and latency/energy telemetry); this module
+//! keeps the old single-worker `Service` API as a thin wrapper — one
+//! shard, no admission window, `max_batch = 1`, so requests execute
+//! serially exactly as before and results are unchanged. One semantic
+//! difference from the legacy loop: `service_time` (and the stats built
+//! from it) now measures end-to-end from submission — queue wait
+//! included — where the old worker timed execution only, so pipelined
+//! callers will see larger, more honest latencies.
 
 use super::run_time::RunTimeOptimizer;
-use crate::runtime::Engine;
-use crate::sparse::convert::{self, AnyFormat, ConvertParams};
-use crate::sparse::{Coo, Format, SpMv};
-use anyhow::{anyhow, Result};
-use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use crate::serve::{Pool, PoolConfig};
+use crate::sparse::convert::ConvertParams;
+use crate::sparse::{Coo, Format};
+use anyhow::Result;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Duration;
 
-/// How products are executed. The PJRT client is not `Send`, so the
-/// worker thread constructs its own [`Engine`] from this spec.
-#[derive(Debug, Clone)]
-pub enum BackendSpec {
-    /// AOT-compiled kernels through PJRT (the production path).
-    Pjrt(std::path::PathBuf),
-    /// Native Rust SpMV (testing / environments without artifacts).
-    Native,
-}
+pub use crate::serve::{BackendSpec, Response};
 
-enum Backend {
-    Pjrt(Box<Engine>),
-    Native,
-}
-
-impl BackendSpec {
-    fn build(&self) -> Result<Backend> {
-        match self {
-            BackendSpec::Pjrt(dir) => Ok(Backend::Pjrt(Box::new(Engine::new(dir)?))),
-            BackendSpec::Native => Ok(Backend::Native),
-        }
-    }
-}
-
-/// One serving request: a matrix (by registered id) and an input vector.
-pub struct Request {
-    pub matrix_id: u64,
-    pub x: Vec<f32>,
-    pub reply: Sender<Result<Response>>,
-}
-
-/// Result of one product.
-#[derive(Debug, Clone)]
-pub struct Response {
-    pub y: Vec<f32>,
-    pub format_used: Format,
-    pub converted: bool,
-    pub service_time: Duration,
-}
-
-/// Registration message: provide a matrix once, serve many products.
-enum Msg {
-    Register { id: u64, coo: Coo, iterations_hint: u64, ack: Sender<Result<Format>> },
-    Product(Request),
-    Stats(Sender<ServiceStats>),
-    Shutdown,
-}
-
-/// Aggregate serving metrics.
+/// Aggregate serving metrics (legacy shape; [`crate::serve::PoolStats`]
+/// is the richer replacement).
 #[derive(Debug, Clone, Default)]
 pub struct ServiceStats {
     pub requests: u64,
@@ -78,180 +33,70 @@ pub struct ServiceStats {
     pub max_service: Duration,
 }
 
-struct Served {
-    matrix: AnyFormat,
-    format: Format,
-    converted: bool,
-    /// Matrix-side kernel literals, marshalled once at registration
-    /// (EXPERIMENTS.md §Perf iteration 2).
-    prepared: Option<crate::runtime::pjrt::PreparedSpmv>,
-}
-
-/// Handle to a running service.
+/// Handle to a running single-worker service.
 pub struct Service {
-    tx: Sender<Msg>,
-    worker: Option<JoinHandle<()>>,
+    pool: Pool,
 }
 
 impl Service {
-    /// Start the worker thread. `router` decides formats; `backend`
+    /// Start a single-shard pool. `router` decides formats; `backend`
     /// executes products (constructed inside the worker — PJRT handles
     /// are not `Send`).
     pub fn start(router: RunTimeOptimizer, backend: BackendSpec, convert: ConvertParams) -> Service {
-        let (tx, rx) = channel::<Msg>();
-        let worker = std::thread::spawn(move || {
-            let backend = match backend.build() {
-                Ok(b) => b,
-                Err(e) => {
-                    eprintln!("service backend init failed, falling back to native: {e:#}");
-                    Backend::Native
-                }
-            };
-            worker_loop(rx, router, backend, convert)
-        });
-        Service { tx, worker: Some(worker) }
+        let cfg = PoolConfig {
+            workers: 1,
+            batch_window: Duration::ZERO,
+            // legacy behavior: strictly serial dispatch, no coalescing,
+            // and an effectively unbounded conversion cache (the old
+            // loop never evicted) — large working sets opt into the
+            // bounded LRU by using serve::Pool directly.
+            max_batch: 1,
+            cache_capacity: usize::MAX,
+            convert,
+            ..PoolConfig::default()
+        };
+        Service { pool: Pool::start(Arc::new(router), backend, cfg) }
     }
 
     /// Register a matrix; returns the format the router chose for it.
     pub fn register(&self, id: u64, coo: Coo, iterations_hint: u64) -> Result<Format> {
-        let (ack, rx) = channel();
-        self.tx
-            .send(Msg::Register { id, coo, iterations_hint, ack })
-            .map_err(|_| anyhow!("service stopped"))?;
-        rx.recv().map_err(|_| anyhow!("service dropped request"))?
+        self.pool.register(id, coo, iterations_hint)
     }
 
     /// Submit a product request; blocks for the response.
     pub fn product(&self, matrix_id: u64, x: Vec<f32>) -> Result<Response> {
-        let (reply, rx) = channel();
-        self.tx
-            .send(Msg::Product(Request { matrix_id, x, reply }))
-            .map_err(|_| anyhow!("service stopped"))?;
-        rx.recv().map_err(|_| anyhow!("service dropped request"))?
+        self.pool.product(matrix_id, x)
     }
 
     /// Submit without waiting; the receiver yields the response later
-    /// (lets callers pipeline many requests).
+    /// (lets callers pipeline many requests — which is also what lets
+    /// the worker coalesce them into one batched dispatch).
     pub fn product_async(&self, matrix_id: u64, x: Vec<f32>) -> Result<Receiver<Result<Response>>> {
-        let (reply, rx) = channel();
-        self.tx
-            .send(Msg::Product(Request { matrix_id, x, reply }))
-            .map_err(|_| anyhow!("service stopped"))?;
-        Ok(rx)
+        self.pool.product_async(matrix_id, x)
     }
 
     pub fn stats(&self) -> Result<ServiceStats> {
-        let (tx, rx) = channel();
-        self.tx.send(Msg::Stats(tx)).map_err(|_| anyhow!("service stopped"))?;
-        rx.recv().map_err(|_| anyhow!("service dropped request"))
-    }
-}
-
-impl Drop for Service {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
-    }
-}
-
-fn worker_loop(
-    rx: Receiver<Msg>,
-    router: RunTimeOptimizer,
-    mut backend: Backend,
-    params: ConvertParams,
-) {
-    let mut served: HashMap<u64, Served> = HashMap::new();
-    let mut stats = ServiceStats::default();
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            Msg::Register { id, coo, iterations_hint, ack } => {
-                let result = (|| -> Result<Format> {
-                    let decision = router.decide(&coo, iterations_hint);
-                    let csr = convert::coo_to_csr(&coo);
-                    let (fmt, converted) = if decision.convert {
-                        (decision.predicted_format, true)
-                    } else {
-                        (Format::Csr, false)
-                    };
-                    let matrix = convert::convert(&csr, fmt, params);
-                    if converted {
-                        stats.conversions += 1;
-                    }
-                    let prepared = match &mut backend {
-                        Backend::Pjrt(engine) => Some(engine.prepare(&matrix, None)?),
-                        Backend::Native => None,
-                    };
-                    served.insert(id, Served { matrix, format: fmt, converted, prepared });
-                    Ok(fmt)
-                })();
-                let _ = ack.send(result);
-            }
-            Msg::Product(req) => {
-                let t0 = Instant::now();
-                let result = (|| -> Result<Response> {
-                    let s = served
-                        .get(&req.matrix_id)
-                        .ok_or_else(|| anyhow!("unknown matrix id {}", req.matrix_id))?;
-                    let y = match &mut backend {
-                        Backend::Pjrt(engine) => match &s.prepared {
-                            Some(prep) => engine.run_prepared(prep, &req.x)?,
-                            None => engine.spmv(&s.matrix, &req.x, None)?,
-                        },
-                        Backend::Native => {
-                            let m = s.matrix.as_spmv();
-                            if req.x.len() != m.n_cols() {
-                                return Err(anyhow!(
-                                    "x length {} != n_cols {}",
-                                    req.x.len(),
-                                    m.n_cols()
-                                ));
-                            }
-                            m.spmv_alloc(&req.x)
-                        }
-                    };
-                    let service_time = t0.elapsed();
-                    Ok(Response { y, format_used: s.format, converted: s.converted, service_time })
-                })();
-                if let Ok(r) = &result {
-                    stats.requests += 1;
-                    stats.total_service += r.service_time;
-                    stats.max_service = stats.max_service.max(r.service_time);
-                }
-                let _ = req.reply.send(result);
-            }
-            Msg::Stats(tx) => {
-                let _ = tx.send(stats.clone());
-            }
-            Msg::Shutdown => break,
-        }
+        let s = self.pool.stats()?;
+        Ok(ServiceStats {
+            requests: s.requests,
+            conversions: s.conversions,
+            total_service: s.total_service(),
+            max_service: s.max_service(),
+        })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::overhead::{OverheadModel, OverheadSample};
-    use crate::dataset::{build, BuildOptions};
     use crate::gen;
     use crate::gpusim::Objective;
+    use crate::sparse::convert;
+    use crate::sparse::SpMv;
+    use crate::testutil::toy_router;
 
     fn test_service() -> Service {
-        let ds = build(&BuildOptions {
-            only: Some(vec!["rim".into(), "eu-2005".into()]),
-            both_archs: false,
-            ..Default::default()
-        });
-        let samples: Vec<OverheadSample> = (1..10)
-            .map(|k| OverheadSample {
-                n: k as f64 * 1000.0,
-                nnz: k as f64 * 10_000.0,
-                f_latency_s: k as f64 * 1e-3,
-                c_latency_s: k as f64 * 1e-3,
-            })
-            .collect();
-        let router = RunTimeOptimizer::train(&ds, Objective::Latency, OverheadModel::train(&samples));
+        let router = toy_router(&["rim", "eu-2005"], Objective::Latency);
         Service::start(router, BackendSpec::Native, ConvertParams::default())
     }
 

@@ -20,10 +20,21 @@
 //! * [`automl`]      — TPE hyperparameter search (the Optuna stand-in).
 //! * [`dataset`]     — configuration sweep, record store, labelling.
 //! * [`coordinator`] — compile-time optimizer, run-time format router,
-//!                     overhead estimator, threaded serving loop.
+//!                     overhead estimator, legacy serving shim.
+//! * [`serve`]       — the sharded serving engine: N worker shards
+//!                     (matrices partitioned by id hash), request
+//!                     coalescing into multi-vector `spmv_batch`
+//!                     dispatches, a bounded converted-matrix LRU, and
+//!                     per-matrix latency/energy telemetry (DESIGN.md
+//!                     §serve).
 //! * [`runtime`]     — PJRT client wrapper + artifact manifest/executable
-//!                     cache (the only module touching the `xla` crate).
+//!                     cache (the only module touching the xla API; the
+//!                     offline build aliases it to `runtime::xla_shim`).
 //! * [`report`]      — table/figure printers and the bench kit.
+
+// Index-based loops in the sparse kernels intentionally mirror the
+// CUDA/Pallas pseudocode they reproduce.
+#![allow(clippy::needless_range_loop)]
 
 pub mod automl;
 pub mod cli;
@@ -36,6 +47,7 @@ pub mod gpusim;
 pub mod ml;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sparse;
 pub mod testutil;
 

@@ -7,6 +7,7 @@
 
 pub mod artifacts;
 pub mod pjrt;
+pub mod xla_shim;
 
 pub use artifacts::{knob_map, ArtifactIndex, ArtifactSpec, Kind, MatrixDims};
 pub use pjrt::Engine;

@@ -7,6 +7,10 @@
 //! the kernels' padded bucket layouts.
 
 use super::artifacts::{ArtifactIndex, ArtifactSpec, MatrixDims};
+// The offline environment has no `xla` crate; the shim mirrors its API
+// and fails at client construction (serving then falls back to native).
+// Swapping in the real bindings is a one-line change here.
+use super::xla_shim as xla;
 use crate::gpusim::MemConfig;
 use crate::sparse::convert::AnyFormat;
 use crate::sparse::{Csr, Format};
@@ -234,6 +238,20 @@ impl Engine {
         self.exec_count += 1;
         y.truncate(prep.n_rows);
         Ok(y)
+    }
+
+    /// Execute a prepared matrix against a whole batch of input vectors —
+    /// the PJRT side of [`crate::sparse::SpMv::spmv_batch`]. The matrix
+    /// literals are marshalled once and the executable is resolved once;
+    /// only the x literal varies per vector. (A true multi-column SpMM
+    /// artifact is a compile-layer change tracked in ROADMAP.md; this is
+    /// the dispatch-side coalescing the serving pool relies on.)
+    pub fn spmv_batch_prepared(
+        &mut self,
+        prep: &PreparedSpmv,
+        xs: &[Vec<f32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        xs.iter().map(|x| self.run_prepared(prep, x)).collect()
     }
 
     /// Execute one power-iteration step x' = A x / ||A x|| using a

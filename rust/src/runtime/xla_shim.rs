@@ -1,0 +1,147 @@
+//! Offline stand-in for the `xla` PJRT bindings.
+//!
+//! The offline build environment does not ship the `xla` crate, so this
+//! module mirrors the exact API surface `runtime::pjrt` consumes:
+//! [`PjRtClient`], [`PjRtLoadedExecutable`], [`HloModuleProto`],
+//! [`XlaComputation`], [`PjRtBuffer`], and [`Literal`]. Client
+//! construction fails (there is no PJRT plugin to talk to), which the
+//! serving layer already treats as "fall back to the native backend";
+//! [`Literal`] shape bookkeeping is real, so marshalling helpers and
+//! their unit tests behave identically to the real crate. A future PR
+//! that restores the genuine dependency only needs to swap the
+//! `use super::xla_shim as xla;` alias in `pjrt.rs`.
+
+use std::borrow::Borrow;
+
+/// Error type mirroring `xla::Error` far enough for `{e:?}` formatting.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+fn unavailable() -> XlaError {
+    XlaError("PJRT unavailable: built against the offline xla shim (see runtime::xla_shim)".into())
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] always fails in the shim.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-shim".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module (never constructible in the shim).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer returned by an execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Compiled executable handle (never constructible in the shim).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// Element types a [`Literal`] can be built from.
+pub trait NativeElement: Copy {}
+impl NativeElement for f32 {}
+impl NativeElement for i32 {}
+
+/// Host literal. The shim tracks element counts so reshape validation
+/// (and the marshalling unit tests built on it) behave like the real
+/// crate; payload data is not retained because nothing can execute.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    elems: usize,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeElement>(v: &[T]) -> Literal {
+        Literal { elems: v.len() }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.elems
+    }
+
+    /// Reshape; fails unless the dimension product matches the element
+    /// count, exactly as the real bindings do.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, XlaError> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.elems {
+            return Err(XlaError(format!(
+                "reshape: {} elements cannot fill shape {dims:?}",
+                self.elems
+            )));
+        }
+        Ok(Literal { elems: self.elems })
+    }
+
+    /// Unwrap a 1-tuple result (unreachable in the shim: nothing executes).
+    pub fn to_tuple1(self) -> Result<Literal, XlaError> {
+        Err(unavailable())
+    }
+
+    /// Copy out as a host vector (unreachable in the shim).
+    pub fn to_vec<T: NativeElement>(&self) -> Result<Vec<T>, XlaError> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_reports_shim() {
+        let e = PjRtClient::cpu().err().expect("shim client must fail");
+        assert!(format!("{e:?}").contains("shim"));
+    }
+
+    #[test]
+    fn reshape_validates_element_count() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.element_count(), 6);
+        assert!(l.reshape(&[2, 3]).is_ok());
+        assert!(l.reshape(&[1, 2, 3]).is_ok());
+        assert!(l.reshape(&[4, 2]).is_err());
+        let i = Literal::vec1(&[0i32; 8]);
+        assert!(i.reshape(&[2, 2, 2]).is_ok());
+    }
+}

@@ -1,0 +1,73 @@
+//! Execution backends for the serving shards.
+//!
+//! The PJRT client (and its compiled executables) are not `Send`, so a
+//! [`BackendSpec`] — which is `Send + Clone` — crosses the thread
+//! boundary and each shard builds its own [`Backend`] on startup.
+
+use crate::runtime::Engine;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// How products are executed. Each shard constructs its own backend
+/// from this spec.
+#[derive(Debug, Clone)]
+pub enum BackendSpec {
+    /// AOT-compiled kernels through PJRT (the production path); the
+    /// payload is the artifact directory.
+    Pjrt(PathBuf),
+    /// Native Rust SpMV (testing / environments without artifacts).
+    Native,
+}
+
+impl BackendSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendSpec::Pjrt(_) => "pjrt",
+            BackendSpec::Native => "native",
+        }
+    }
+
+    pub(crate) fn build(&self) -> Result<Backend> {
+        match self {
+            BackendSpec::Pjrt(dir) => Ok(Backend::Pjrt(Box::new(Engine::new(dir)?))),
+            BackendSpec::Native => Ok(Backend::Native),
+        }
+    }
+}
+
+/// A shard-owned executor (intentionally not `Send`: it may hold PJRT
+/// handles).
+pub(crate) enum Backend {
+    Pjrt(Box<Engine>),
+    Native,
+}
+
+impl Backend {
+    /// The backend actually built — can differ from the requested
+    /// [`BackendSpec`] when PJRT init fails and the shard degrades to
+    /// native; pool stats report this so output is never mislabeled.
+    pub(crate) fn name(&self) -> &'static str {
+        match self {
+            Backend::Pjrt(_) => "pjrt",
+            Backend::Native => "native",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_spec_builds() {
+        assert!(matches!(BackendSpec::Native.build(), Ok(Backend::Native)));
+        assert_eq!(BackendSpec::Native.name(), "native");
+    }
+
+    #[test]
+    fn pjrt_spec_without_artifacts_is_an_error() {
+        let spec = BackendSpec::Pjrt(PathBuf::from("/nonexistent/artifacts"));
+        assert_eq!(spec.name(), "pjrt");
+        assert!(spec.build().is_err());
+    }
+}

@@ -1,0 +1,152 @@
+//! Admission queue: request coalescing for the serving shards.
+//!
+//! When a shard picks up a product request it first drains everything
+//! already sitting in its queue (free coalescing — pipelined clients
+//! pay zero added latency), then optionally holds the batch open for a
+//! short admission window so concurrent clients hitting an idle shard
+//! can still coalesce. The collected batch is grouped by matrix id and
+//! each group executes as ONE `spmv_batch` dispatch.
+//!
+//! Non-product messages observed while draining are pushed onto the
+//! shard's backlog and handled right after the batch, so a registration
+//! is delayed by at most one window.
+
+use super::shard::ShardMsg;
+use super::Response;
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::{Duration, Instant};
+
+/// One queued product request.
+pub struct Job {
+    pub matrix_id: u64,
+    pub x: Vec<f32>,
+    /// Submission time — service latency is measured end-to-end from
+    /// here, so queue wait and admission-window wait are included.
+    pub enqueued: Instant,
+    pub reply: Sender<Result<Response>>,
+}
+
+/// Collect a batch starting from `first`: drain the queue, then wait up
+/// to `window` for more, capping at `max_batch` jobs. Non-product
+/// messages are deferred to `backlog`.
+pub(crate) fn collect_batch(
+    first: Job,
+    rx: &Receiver<ShardMsg>,
+    backlog: &mut VecDeque<ShardMsg>,
+    window: Duration,
+    max_batch: usize,
+) -> Vec<Job> {
+    let max_batch = max_batch.max(1);
+    let mut batch = vec![first];
+    // Opportunistic pass: whatever is already queued coalesces for free.
+    while batch.len() < max_batch {
+        match rx.try_recv() {
+            Ok(ShardMsg::Product(job)) => batch.push(job),
+            Ok(other) => backlog.push_back(other),
+            Err(_) => break,
+        }
+    }
+    // Admission window: hold the batch open briefly for concurrent
+    // clients. `window == 0` (the default) skips this entirely, so
+    // strictly sequential callers never pay added latency.
+    if !window.is_zero() {
+        let deadline = Instant::now() + window;
+        while batch.len() < max_batch {
+            let Some(remaining) = deadline.checked_duration_since(Instant::now()) else {
+                break;
+            };
+            match rx.recv_timeout(remaining) {
+                Ok(ShardMsg::Product(job)) => batch.push(job),
+                Ok(other) => backlog.push_back(other),
+                Err(_) => break,
+            }
+        }
+    }
+    batch
+}
+
+/// Group a batch by matrix id, preserving first-seen order (and arrival
+/// order within each group).
+pub(crate) fn group_by_matrix(jobs: Vec<Job>) -> Vec<(u64, Vec<Job>)> {
+    let mut groups: Vec<(u64, Vec<Job>)> = Vec::new();
+    for job in jobs {
+        match groups.iter_mut().find(|(id, _)| *id == job.matrix_id) {
+            Some((_, members)) => members.push(job),
+            None => groups.push((job.matrix_id, vec![job])),
+        }
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn job(matrix_id: u64) -> Job {
+        let (reply, _rx) = channel();
+        Job { matrix_id, x: vec![1.0], enqueued: Instant::now(), reply }
+    }
+
+    #[test]
+    fn drains_queued_products_without_waiting() {
+        let (tx, rx) = channel::<ShardMsg>();
+        tx.send(ShardMsg::Product(job(1))).unwrap();
+        tx.send(ShardMsg::Product(job(2))).unwrap();
+        let mut backlog = VecDeque::new();
+        let t0 = Instant::now();
+        let batch = collect_batch(job(1), &rx, &mut backlog, Duration::ZERO, 32);
+        assert_eq!(batch.len(), 3);
+        assert!(backlog.is_empty());
+        assert!(t0.elapsed() < Duration::from_millis(100), "window 0 must not wait");
+    }
+
+    #[test]
+    fn defers_non_product_messages_to_backlog() {
+        let (tx, rx) = channel::<ShardMsg>();
+        let (status_tx, _status_rx) = channel();
+        tx.send(ShardMsg::Status(status_tx)).unwrap();
+        tx.send(ShardMsg::Product(job(4))).unwrap();
+        let mut backlog = VecDeque::new();
+        let batch = collect_batch(job(3), &rx, &mut backlog, Duration::ZERO, 32);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(backlog.len(), 1);
+        assert!(matches!(backlog[0], ShardMsg::Status(_)));
+    }
+
+    #[test]
+    fn max_batch_caps_collection() {
+        let (tx, rx) = channel::<ShardMsg>();
+        for i in 0..10 {
+            tx.send(ShardMsg::Product(job(i))).unwrap();
+        }
+        let mut backlog = VecDeque::new();
+        let batch = collect_batch(job(99), &rx, &mut backlog, Duration::from_millis(50), 4);
+        assert_eq!(batch.len(), 4);
+    }
+
+    #[test]
+    fn window_collects_late_arrivals() {
+        let (tx, rx) = channel::<ShardMsg>();
+        let sender = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            let _ = tx.send(ShardMsg::Product(job(2)));
+        });
+        let mut backlog = VecDeque::new();
+        let batch = collect_batch(job(1), &rx, &mut backlog, Duration::from_millis(500), 32);
+        sender.join().unwrap();
+        assert_eq!(batch.len(), 2, "request arriving inside the window must coalesce");
+    }
+
+    #[test]
+    fn groups_preserve_first_seen_and_arrival_order() {
+        let jobs = vec![job(5), job(9), job(5), job(2), job(9), job(5)];
+        let groups = group_by_matrix(jobs);
+        let ids: Vec<u64> = groups.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![5, 9, 2]);
+        let sizes: Vec<usize> = groups.iter().map(|(_, m)| m.len()).collect();
+        assert_eq!(sizes, vec![3, 2, 1]);
+    }
+}

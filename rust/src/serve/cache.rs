@@ -1,0 +1,158 @@
+//! Bounded LRU cache for converted matrices.
+//!
+//! Conversion targets (padded ELL/SELL/BELL forms) can be far larger
+//! than the CSR source, and the original serving loop kept every one of
+//! them forever in a per-worker `HashMap`. Each shard instead holds the
+//! converted forms in this LRU: capacity is a hard bound, eviction
+//! returns the victim so the shard can account for it, and a
+//! post-eviction miss re-converts from the retained CSR source.
+//!
+//! Implementation note: a recency-ordered `Vec` (most recent last) —
+//! O(capacity) per touch, which is exact and cache-friendly at serving
+//! cache sizes (tens of entries), and has no dependency footprint.
+
+/// A tiny exact LRU keyed by matrix id.
+pub struct Lru<V> {
+    cap: usize,
+    /// Recency order: least-recently-used first, most-recent last.
+    entries: Vec<(u64, V)>,
+}
+
+impl<V> Lru<V> {
+    /// Create with `cap` slots (at least 1).
+    pub fn new(cap: usize) -> Self {
+        Lru { cap: cap.max(1), entries: Vec::new() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.entries.iter().any(|(k, _)| *k == key)
+    }
+
+    /// Look up and mark as most-recently used.
+    pub fn get(&mut self, key: u64) -> Option<&V> {
+        if self.touch(key) {
+            self.mru().map(|(_, v)| v)
+        } else {
+            None
+        }
+    }
+
+    /// Mark a key most-recently used without returning it; `true` on a
+    /// hit. Paired with [`Lru::mru`], this lets a caller do a single
+    /// scan for the get-or-insert pattern (a plain `get` can't span an
+    /// insert under the borrow checker).
+    pub fn touch(&mut self, key: u64) -> bool {
+        match self.entries.iter().position(|(k, _)| *k == key) {
+            Some(idx) => {
+                self.entries[idx..].rotate_left(1);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// The most-recently-used entry (what [`Lru::touch`] or
+    /// [`Lru::insert`] just placed).
+    pub fn mru(&self) -> Option<&(u64, V)> {
+        self.entries.last()
+    }
+
+    /// Insert (or replace) a value, marking it most-recently used.
+    /// Returns the evicted least-recently-used entry, if the insert
+    /// pushed the cache past capacity.
+    pub fn insert(&mut self, key: u64, value: V) -> Option<(u64, V)> {
+        if let Some(idx) = self.entries.iter().position(|(k, _)| *k == key) {
+            self.entries.remove(idx);
+            self.entries.push((key, value));
+            return None;
+        }
+        let evicted = if self.entries.len() == self.cap {
+            Some(self.entries.remove(0))
+        } else {
+            None
+        };
+        self.entries.push((key, value));
+        evicted
+    }
+
+    /// Keys in recency order (least-recently-used first); test aid.
+    pub fn keys(&self) -> Vec<u64> {
+        self.entries.iter().map(|(k, _)| *k).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_is_honored_and_lru_entry_evicted() {
+        let mut lru = Lru::new(2);
+        assert!(lru.insert(1, "a").is_none());
+        assert!(lru.insert(2, "b").is_none());
+        assert_eq!(lru.len(), 2);
+        // 3 evicts 1 (the least recently used)
+        let evicted = lru.insert(3, "c").expect("must evict");
+        assert_eq!(evicted.0, 1);
+        assert_eq!(lru.len(), 2);
+        assert!(!lru.contains(1));
+        assert!(lru.contains(2) && lru.contains(3));
+    }
+
+    #[test]
+    fn get_refreshes_recency() {
+        let mut lru = Lru::new(2);
+        lru.insert(1, 10);
+        lru.insert(2, 20);
+        assert_eq!(lru.get(1), Some(&10)); // 1 becomes most-recent
+        let evicted = lru.insert(3, 30).expect("must evict");
+        assert_eq!(evicted.0, 2, "2 is now the LRU entry");
+        assert_eq!(lru.keys(), vec![1, 3]);
+    }
+
+    #[test]
+    fn reinsert_replaces_without_eviction() {
+        let mut lru = Lru::new(2);
+        lru.insert(1, 10);
+        lru.insert(2, 20);
+        assert!(lru.insert(1, 11).is_none());
+        assert_eq!(lru.len(), 2);
+        assert_eq!(lru.get(1), Some(&11));
+    }
+
+    #[test]
+    fn touch_and_mru_implement_single_scan_get_or_insert() {
+        let mut lru = Lru::new(2);
+        assert!(!lru.touch(1), "miss on empty");
+        lru.insert(1, 10);
+        lru.insert(2, 20);
+        assert_eq!(lru.mru(), Some(&(2, 20)));
+        assert!(lru.touch(1), "hit refreshes recency");
+        assert_eq!(lru.mru(), Some(&(1, 10)));
+        assert_eq!(lru.keys(), vec![2, 1]);
+        assert!(!lru.touch(9));
+    }
+
+    #[test]
+    fn missing_key_is_none_and_zero_capacity_clamps_to_one() {
+        let mut lru = Lru::new(0);
+        assert_eq!(lru.capacity(), 1);
+        assert!(lru.is_empty());
+        assert_eq!(lru.get(9), None);
+        lru.insert(1, 1);
+        let evicted = lru.insert(2, 2).expect("single slot");
+        assert_eq!(evicted, (1, 1));
+    }
+}

@@ -1,0 +1,69 @@
+//! `serve` — the sharded, batching SpMV serving engine.
+//!
+//! This subsystem is the deployable face of the paper's run-time mode at
+//! scale, replacing the original single-worker loop behind one mpsc
+//! channel (`coordinator::service`, now a thin shim over [`Pool`]):
+//!
+//! * **Sharding** ([`pool`]): N worker threads, matrices partitioned by
+//!   id hash. Each worker owns its own backend because the PJRT client
+//!   is not `Send`; requests for one matrix always land on the same
+//!   shard, so converted forms and prepared literals stay hot.
+//! * **Admission + coalescing** ([`batch`]): each shard drains its queue
+//!   before executing, groups concurrent requests for the same matrix,
+//!   and dispatches one multi-vector [`crate::sparse::SpMv::spmv_batch`]
+//!   per group (native SpMM-style streaming, or the prepared-literal
+//!   PJRT path). An optional admission window holds the first request
+//!   briefly so concurrent clients coalesce even on an idle shard.
+//! * **Bounded conversion cache** ([`cache`]): converted matrices (the
+//!   padded ELL/SELL/BELL forms that can dwarf the CSR source) live in a
+//!   per-shard LRU with capacity eviction; the registered CSR source is
+//!   retained, so a post-eviction request re-converts instead of
+//!   failing. The old per-worker `HashMap` grew without bound.
+//! * **Telemetry** ([`telemetry`]): a registry of per-matrix atomics —
+//!   request counts, log-scale latency histograms (p50/p90/p99), and
+//!   modeled energy/power per request from the `gpusim` analytic model —
+//!   snapshotted lock-free-ish through [`Pool::stats`].
+//!
+//! ```no_run
+//! # use auto_spmv::serve::{BackendSpec, Pool, PoolConfig};
+//! # use auto_spmv::coordinator::{OverheadModel, RunTimeOptimizer};
+//! # use auto_spmv::dataset::{build, BuildOptions};
+//! # use auto_spmv::gpusim::Objective;
+//! # use std::sync::Arc;
+//! let ds = build(&BuildOptions::default());
+//! let router = RunTimeOptimizer::train(
+//!     &ds, Objective::EnergyEff, OverheadModel::train_on_corpus(1, None));
+//! let pool = Pool::start(Arc::new(router), BackendSpec::Native, PoolConfig::default());
+//! ```
+
+pub mod backend;
+pub mod batch;
+pub mod cache;
+pub mod pool;
+pub mod shard;
+pub mod telemetry;
+
+pub use backend::BackendSpec;
+pub use pool::{Pool, PoolConfig, PoolStats};
+pub use telemetry::{MatrixStats, Telemetry};
+
+use crate::sparse::Format;
+use std::time::Duration;
+
+/// Result of one served product.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub y: Vec<f32>,
+    /// Format the product was executed in.
+    pub format_used: Format,
+    /// Whether the router converted away from the CSR default.
+    pub converted: bool,
+    /// End-to-end service time (queue wait + batch execution).
+    pub service_time: Duration,
+    /// Number of requests coalesced into the dispatch that served this
+    /// one (1 = unbatched).
+    pub batch_size: usize,
+    /// Modeled energy of this product on the configured GPU profile
+    /// (joules, `gpusim` analytic model; idle excluded per paper §6.3).
+    pub energy_j: f64,
+}

@@ -1,0 +1,397 @@
+//! The sharded serving pool: the public face of `serve`.
+//!
+//! [`Pool::start`] spawns N shard workers, each owning a private
+//! backend (PJRT clients are not `Send`). Matrix ids are partitioned
+//! across shards by a splitmix hash, so one matrix's requests always
+//! meet on the same worker — that is what lets the admission queue
+//! coalesce them into multi-vector `spmv_batch` dispatches and keeps
+//! conversion/prepared-literal state shard-local with no cross-thread
+//! synchronization on the execute path.
+
+use super::backend::BackendSpec;
+use super::batch::Job;
+use super::shard::{Shard, ShardCfg, ShardMsg};
+use super::telemetry::{MatrixStats, Telemetry};
+use super::Response;
+use crate::coordinator::RunTimeOptimizer;
+use crate::gpusim::{turing_gtx1650m, GpuArch};
+use crate::sparse::convert::ConvertParams;
+use crate::sparse::{Coo, Format};
+use anyhow::{anyhow, Result};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Pool tuning knobs.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Worker shards (>= 1). Each owns a backend instance.
+    pub workers: usize,
+    /// Admission window: how long a shard holds the first request of a
+    /// batch open for concurrent clients. Zero (the default) coalesces
+    /// only what is already queued, adding no latency for sequential
+    /// callers.
+    pub batch_window: Duration,
+    /// Hard cap on requests per dispatch.
+    pub max_batch: usize,
+    /// Converted-matrix LRU capacity per shard.
+    pub cache_capacity: usize,
+    /// Structural conversion parameters (BELL block, SELL slice).
+    pub convert: ConvertParams,
+    /// GPU profile used for the telemetry energy/power model.
+    pub arch: GpuArch,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            workers: 2,
+            batch_window: Duration::ZERO,
+            max_batch: 32,
+            cache_capacity: 64,
+            convert: ConvertParams::default(),
+            arch: turing_gtx1650m(),
+        }
+    }
+}
+
+/// Aggregate pool statistics (see also the per-matrix rows).
+#[derive(Debug, Clone)]
+pub struct PoolStats {
+    pub requests: u64,
+    /// Kernel dispatches; `requests - dispatches` products were served
+    /// "for free" by coalescing.
+    pub dispatches: u64,
+    pub coalesced_batches: u64,
+    pub batched_requests: u64,
+    pub max_batch: u64,
+    pub conversions: u64,
+    pub reconversions: u64,
+    pub evictions: u64,
+    pub registered_matrices: usize,
+    pub cached_matrices: usize,
+    pub workers: usize,
+    /// Backend each shard ACTUALLY built, in shard order — differs from
+    /// the requested spec when PJRT init failed and a shard degraded to
+    /// native.
+    pub backends: Vec<&'static str>,
+    /// Total modeled energy across all matrices (joules).
+    pub total_energy_j: f64,
+    pub per_matrix: Vec<MatrixStats>,
+}
+
+impl PoolStats {
+    /// Deduplicated backend label for report headers ("native",
+    /// "pjrt", or e.g. "native+pjrt" for a mixed degraded pool).
+    pub fn backend_summary(&self) -> String {
+        let mut names = self.backends.clone();
+        names.sort_unstable();
+        names.dedup();
+        if names.is_empty() {
+            "unknown".to_string()
+        } else {
+            names.join("+")
+        }
+    }
+
+    /// Summed service time across all served requests.
+    pub fn total_service(&self) -> Duration {
+        self.per_matrix.iter().map(|m| m.total_latency).sum()
+    }
+
+    /// Worst single-request service time.
+    pub fn max_service(&self) -> Duration {
+        self.per_matrix.iter().map(|m| m.max_latency).max().unwrap_or(Duration::ZERO)
+    }
+}
+
+/// Handle to a running sharded serving pool.
+pub struct Pool {
+    shards: Vec<Shard>,
+    telemetry: Arc<Telemetry>,
+}
+
+impl Pool {
+    /// Start the worker shards. `router` decides formats (shared
+    /// read-only); each shard builds its own backend from `backend`.
+    pub fn start(router: Arc<RunTimeOptimizer>, backend: BackendSpec, cfg: PoolConfig) -> Pool {
+        let telemetry = Arc::new(Telemetry::new());
+        let shard_cfg = ShardCfg {
+            convert: cfg.convert,
+            batch_window: cfg.batch_window,
+            max_batch: cfg.max_batch.max(1),
+            cache_capacity: cfg.cache_capacity.max(1),
+            arch: cfg.arch.clone(),
+        };
+        let shards = (0..cfg.workers.max(1))
+            .map(|i| {
+                Shard::spawn(i, router.clone(), backend.clone(), shard_cfg.clone(), telemetry.clone())
+            })
+            .collect();
+        Pool { shards, telemetry }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard owning a matrix id (splitmix64-style spread so
+    /// sequential ids don't pile onto one worker).
+    fn shard_of(&self, matrix_id: u64) -> &Shard {
+        let h = matrix_id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        &self.shards[((h >> 32) as usize) % self.shards.len()]
+    }
+
+    /// Register a matrix; returns the format the router chose for it.
+    pub fn register(&self, id: u64, coo: Coo, iterations_hint: u64) -> Result<Format> {
+        let (ack, rx) = channel();
+        self.shard_of(id)
+            .tx
+            .send(ShardMsg::Register { id, coo, iterations_hint, ack })
+            .map_err(|_| anyhow!("serving pool stopped"))?;
+        rx.recv().map_err(|_| anyhow!("serving pool dropped registration"))?
+    }
+
+    /// Submit a product request and block for the response.
+    pub fn product(&self, matrix_id: u64, x: Vec<f32>) -> Result<Response> {
+        self.product_async(matrix_id, x)?
+            .recv()
+            .map_err(|_| anyhow!("serving pool dropped request"))?
+    }
+
+    /// Submit without waiting; the receiver yields the response later.
+    /// Pipelining requests this way is also what fills the admission
+    /// queue enough for coalescing to kick in.
+    pub fn product_async(&self, matrix_id: u64, x: Vec<f32>) -> Result<Receiver<Result<Response>>> {
+        let (reply, rx) = channel();
+        self.shard_of(matrix_id)
+            .tx
+            .send(ShardMsg::Product(Job { matrix_id, x, enqueued: Instant::now(), reply }))
+            .map_err(|_| anyhow!("serving pool stopped"))?;
+        Ok(rx)
+    }
+
+    /// Snapshot pool-wide counters, per-matrix latency quantiles and the
+    /// modeled energy ledger.
+    pub fn stats(&self) -> Result<PoolStats> {
+        let mut registered = 0;
+        let mut cached = 0;
+        let mut backends = Vec::with_capacity(self.shards.len());
+        for shard in &self.shards {
+            let (tx, rx) = channel();
+            shard.tx.send(ShardMsg::Status(tx)).map_err(|_| anyhow!("serving pool stopped"))?;
+            let status = rx.recv().map_err(|_| anyhow!("serving pool dropped status"))?;
+            registered += status.registered;
+            cached += status.cached;
+            backends.push(status.backend);
+        }
+        let per_matrix = self.telemetry.snapshot();
+        let t = &self.telemetry.totals;
+        Ok(PoolStats {
+            requests: t.requests.load(Ordering::Relaxed),
+            dispatches: t.dispatches.load(Ordering::Relaxed),
+            coalesced_batches: t.coalesced_batches.load(Ordering::Relaxed),
+            batched_requests: t.batched_requests.load(Ordering::Relaxed),
+            max_batch: t.max_batch.load(Ordering::Relaxed),
+            conversions: t.conversions.load(Ordering::Relaxed),
+            reconversions: t.reconversions.load(Ordering::Relaxed),
+            evictions: t.evictions.load(Ordering::Relaxed),
+            registered_matrices: registered,
+            cached_matrices: cached,
+            workers: self.shards.len(),
+            backends,
+            total_energy_j: per_matrix.iter().map(|m| m.energy_j).sum(),
+            per_matrix,
+        })
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        for shard in &mut self.shards {
+            shard.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::gpusim::Objective;
+    use crate::sparse::convert::coo_to_csr;
+    use crate::sparse::SpMv;
+    use crate::testutil::toy_router;
+
+    fn test_router() -> Arc<RunTimeOptimizer> {
+        Arc::new(toy_router(&["rim", "eu-2005", "shar_te2-b3"], Objective::EnergyEff))
+    }
+
+    fn pool_with(router: Arc<RunTimeOptimizer>, workers: usize, window_us: u64) -> Pool {
+        Pool::start(
+            router,
+            BackendSpec::Native,
+            PoolConfig {
+                workers,
+                batch_window: Duration::from_micros(window_us),
+                ..Default::default()
+            },
+        )
+    }
+
+    /// Deterministic input vector for (matrix, request) pairs.
+    fn input(n: usize, salt: usize) -> Vec<f32> {
+        (0..n).map(|i| ((i * 7 + salt * 13) % 11) as f32 * 0.25 - 1.0).collect()
+    }
+
+    #[test]
+    fn concurrent_sharded_pool_matches_single_worker_bit_for_bit() {
+        let router = test_router();
+        let names = ["rim", "eu-2005", "shar_te2-b3"];
+        let mats: Vec<Coo> = names.iter().map(|n| gen::by_name(n).unwrap().generate(1)).collect();
+
+        let single = pool_with(router.clone(), 1, 0);
+        let sharded = pool_with(router.clone(), 2, 200);
+        assert_eq!(sharded.workers(), 2);
+        for (id, coo) in mats.iter().enumerate() {
+            let f1 = single.register(id as u64, coo.clone(), 10_000).unwrap();
+            let f2 = sharded.register(id as u64, coo.clone(), 10_000).unwrap();
+            assert_eq!(f1, f2, "both pools must route {} identically", names[id]);
+        }
+
+        // Reference answers from the single-worker pool, serially.
+        let mut want: Vec<Vec<Vec<f32>>> = Vec::new();
+        for (id, coo) in mats.iter().enumerate() {
+            want.push(
+                (0..8)
+                    .map(|r| single.product(id as u64, input(coo.n_cols, r)).unwrap().y)
+                    .collect(),
+            );
+        }
+
+        // Many concurrent clients against the sharded pool.
+        std::thread::scope(|scope| {
+            for (id, coo) in mats.iter().enumerate() {
+                let pool = &sharded;
+                let expect = &want[id];
+                scope.spawn(move || {
+                    for r in 0..8 {
+                        let resp = pool.product(id as u64, input(coo.n_cols, r)).unwrap();
+                        assert_eq!(
+                            resp.y, expect[r],
+                            "matrix {id} request {r}: sharded pool must be bit-identical"
+                        );
+                    }
+                });
+            }
+        });
+
+        let stats = sharded.stats().unwrap();
+        assert_eq!(stats.requests, (8 * mats.len()) as u64);
+        assert_eq!(stats.registered_matrices, mats.len());
+        assert!(stats.dispatches > 0);
+    }
+
+    #[test]
+    fn stats_report_counts_quantiles_and_energy() {
+        let router = test_router();
+        let pool = pool_with(router, 2, 0);
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        let n = coo.n_cols;
+        pool.register(1, coo, 1000).unwrap();
+        for r in 0..6 {
+            pool.product(1, input(n, r)).unwrap();
+        }
+        let stats = pool.stats().unwrap();
+        assert_eq!(stats.requests, 6);
+        assert_eq!(stats.per_matrix.len(), 1);
+        let m = &stats.per_matrix[0];
+        assert_eq!(m.id, 1);
+        assert_eq!(m.requests, 6);
+        assert!(m.format.is_some());
+        assert!(m.p50_us > 0.0 && m.p50_us <= m.p90_us && m.p90_us <= m.p99_us);
+        assert!(m.energy_j > 0.0, "modeled energy must be non-zero: {m:?}");
+        assert!(m.model_power_w > 0.0);
+        assert!(stats.total_energy_j >= m.energy_j);
+        assert!(stats.total_service() >= stats.max_service());
+        assert_eq!(stats.backends, vec!["native", "native"]);
+        assert_eq!(stats.backend_summary(), "native");
+    }
+
+    #[test]
+    fn pipelined_requests_coalesce_into_batched_dispatches() {
+        let router = test_router();
+        // One worker + a generous window: the first request holds the
+        // batch open while the rest of the burst lands in the queue.
+        let pool = pool_with(router, 1, 100_000);
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        let n = coo.n_cols;
+        pool.register(1, coo, 1000).unwrap();
+        let receivers: Vec<_> =
+            (0..8).map(|r| pool.product_async(1, input(n, r)).unwrap()).collect();
+        let responses: Vec<Response> =
+            receivers.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+        let stats = pool.stats().unwrap();
+        assert_eq!(stats.requests, 8);
+        assert!(
+            stats.max_batch >= 2,
+            "burst of 8 must coalesce (max_batch {}, dispatches {})",
+            stats.max_batch,
+            stats.dispatches
+        );
+        assert!(stats.dispatches < 8, "coalescing must save dispatches");
+        assert!(stats.coalesced_batches >= 1);
+        assert!(responses.iter().any(|r| r.batch_size > 1));
+        // batched results still correct
+        let csr = coo_to_csr(&gen::by_name("rim").unwrap().generate(1));
+        for (r, resp) in responses.iter().enumerate() {
+            assert_eq!(resp.y, csr.spmv_alloc(&input(n, r)));
+        }
+    }
+
+    #[test]
+    fn eviction_and_reconversion_keep_serving_correctly() {
+        let router = test_router();
+        let pool = Pool::start(
+            router,
+            BackendSpec::Native,
+            PoolConfig { workers: 1, cache_capacity: 2, ..Default::default() },
+        );
+        let names = ["rim", "eu-2005", "shar_te2-b3"];
+        let mats: Vec<Coo> = names.iter().map(|n| gen::by_name(n).unwrap().generate(1)).collect();
+        let csrs: Vec<_> = mats.iter().map(coo_to_csr).collect();
+        for (id, coo) in mats.iter().enumerate() {
+            pool.register(id as u64, coo.clone(), 10_000).unwrap();
+        }
+        // 3 registered matrices share a 2-entry cache: round-robin
+        // products keep knocking the third one out.
+        for round in 0..3 {
+            for (id, csr) in csrs.iter().enumerate() {
+                let x = input(csr.n_cols, round);
+                let resp = pool.product(id as u64, x.clone()).unwrap();
+                assert_eq!(resp.y, csr.spmv_alloc(&x), "round {round} matrix {id}");
+            }
+        }
+        let stats = pool.stats().unwrap();
+        assert_eq!(stats.requests, 9);
+        assert!(stats.evictions > 0, "3 matrices in 2 slots must evict: {stats:?}");
+        assert!(stats.reconversions > 0, "post-eviction products must re-convert: {stats:?}");
+        assert_eq!(stats.cached_matrices, 2, "cache must stay at capacity");
+        assert_eq!(stats.registered_matrices, 3);
+    }
+
+    #[test]
+    fn unknown_matrix_and_bad_length_are_errors_not_poison() {
+        let router = test_router();
+        let pool = pool_with(router, 2, 0);
+        let err = pool.product(99, vec![1.0]).unwrap_err();
+        assert!(format!("{err}").contains("unknown matrix"));
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        let n = coo.n_cols;
+        pool.register(7, coo, 1).unwrap();
+        assert!(pool.product(7, vec![1.0, 2.0]).is_err());
+        // pool still serves after the errors
+        assert!(pool.product(7, vec![0.5; n]).is_ok());
+    }
+}

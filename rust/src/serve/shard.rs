@@ -1,0 +1,344 @@
+//! A serving shard: one worker thread owning its own backend.
+//!
+//! The PJRT client is not `Send`, so every shard builds a private
+//! [`Backend`] from the shared [`BackendSpec`]. A shard owns the
+//! matrices hashed to it: the registry keeps the CSR source plus the
+//! router's decision, while the (potentially much larger) converted
+//! forms live in a capacity-bounded LRU — a post-eviction request
+//! re-converts from the retained source. Product requests are coalesced
+//! by [`super::batch`] and dispatched through `spmv_batch`.
+
+use super::backend::{Backend, BackendSpec};
+use super::batch::{collect_batch, group_by_matrix, Job};
+use super::cache::Lru;
+use super::telemetry::{MatrixTelemetry, Telemetry};
+use super::Response;
+use crate::coordinator::RunTimeOptimizer;
+use crate::gpusim::{simulate, GpuArch, KernelConfig, MemConfig};
+use crate::runtime::pjrt::PreparedSpmv;
+use crate::sparse::convert::{self, AnyFormat, ConvertParams};
+use crate::sparse::{Coo, Csr, Format, SpMv};
+use anyhow::{anyhow, Result};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Compile knobs assumed by the telemetry energy model (the artifact
+/// default: mid TB size, no register cap pressure, default carve-out).
+const MODEL_TB_SIZE: u32 = 256;
+const MODEL_MAXRREGCOUNT: u32 = 64;
+
+/// Messages a shard understands.
+pub(crate) enum ShardMsg {
+    Register { id: u64, coo: Coo, iterations_hint: u64, ack: Sender<Result<Format>> },
+    Product(Job),
+    Status(Sender<ShardStatus>),
+    Shutdown,
+}
+
+/// Occupancy summary a shard reports to [`super::Pool::stats`].
+#[derive(Debug, Clone, Copy)]
+pub struct ShardStatus {
+    pub registered: usize,
+    pub cached: usize,
+    /// Backend actually built ("pjrt" or "native") — a shard degrades
+    /// to native when PJRT init fails, and reports say so.
+    pub backend: &'static str,
+}
+
+/// Per-shard immutable configuration (built by the pool).
+#[derive(Clone)]
+pub(crate) struct ShardCfg {
+    pub convert: ConvertParams,
+    pub batch_window: Duration,
+    pub max_batch: usize,
+    pub cache_capacity: usize,
+    pub arch: GpuArch,
+}
+
+/// Handle to a running shard.
+pub(crate) struct Shard {
+    pub tx: Sender<ShardMsg>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Shard {
+    pub(crate) fn spawn(
+        index: usize,
+        router: Arc<RunTimeOptimizer>,
+        backend: BackendSpec,
+        cfg: ShardCfg,
+        telemetry: Arc<Telemetry>,
+    ) -> Shard {
+        let (tx, rx) = channel::<ShardMsg>();
+        let join = std::thread::Builder::new()
+            .name(format!("serve-shard-{index}"))
+            .spawn(move || {
+                let backend = match backend.build() {
+                    Ok(b) => b,
+                    Err(e) => {
+                        eprintln!(
+                            "serve-shard-{index}: backend init failed, falling back to native: {e:#}"
+                        );
+                        Backend::Native
+                    }
+                };
+                worker_loop(rx, router, backend, cfg, telemetry)
+            })
+            .expect("spawn serving shard");
+        Shard { tx, join: Some(join) }
+    }
+
+    /// Ask the worker to exit and join it (used by the pool's Drop).
+    pub(crate) fn shutdown(&mut self) {
+        let _ = self.tx.send(ShardMsg::Shutdown);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+/// A registered matrix: retained CSR source + routing decision + the
+/// telemetry handle resolved once so the hot path is lock-free.
+struct Registered {
+    csr: Csr,
+    format: Format,
+    converted: bool,
+    tele: Arc<MatrixTelemetry>,
+    energy_per_req_j: f64,
+}
+
+/// A cache entry: the converted form, plus PJRT-marshalled literals
+/// when the backend compiles artifacts.
+struct CachedMatrix {
+    matrix: AnyFormat,
+    prepared: Option<PreparedSpmv>,
+}
+
+fn worker_loop(
+    rx: Receiver<ShardMsg>,
+    router: Arc<RunTimeOptimizer>,
+    mut backend: Backend,
+    cfg: ShardCfg,
+    telemetry: Arc<Telemetry>,
+) {
+    let mut registry: HashMap<u64, Registered> = HashMap::new();
+    let mut cache: Lru<CachedMatrix> = Lru::new(cfg.cache_capacity);
+    let mut backlog: VecDeque<ShardMsg> = VecDeque::new();
+    loop {
+        let msg = match backlog.pop_front() {
+            Some(m) => m,
+            None => match rx.recv() {
+                Ok(m) => m,
+                Err(_) => break, // pool dropped
+            },
+        };
+        match msg {
+            ShardMsg::Shutdown => break,
+            ShardMsg::Status(reply) => {
+                let _ = reply.send(ShardStatus {
+                    registered: registry.len(),
+                    cached: cache.len(),
+                    backend: backend.name(),
+                });
+            }
+            ShardMsg::Register { id, coo, iterations_hint, ack } => {
+                let result = do_register(
+                    &router,
+                    &mut backend,
+                    &cfg,
+                    &telemetry,
+                    &mut registry,
+                    &mut cache,
+                    id,
+                    coo,
+                    iterations_hint,
+                );
+                let _ = ack.send(result);
+            }
+            ShardMsg::Product(job) => {
+                let batch = collect_batch(job, &rx, &mut backlog, cfg.batch_window, cfg.max_batch);
+                for (id, jobs) in group_by_matrix(batch) {
+                    execute_group(&mut backend, &cfg, &telemetry, &registry, &mut cache, id, jobs);
+                }
+            }
+        }
+    }
+}
+
+/// Convert (and, on PJRT, marshal) a registered matrix for execution.
+fn build_cached(
+    backend: &mut Backend,
+    csr: &Csr,
+    format: Format,
+    params: ConvertParams,
+) -> Result<CachedMatrix> {
+    let matrix = convert::convert(csr, format, params);
+    let prepared = match backend {
+        Backend::Pjrt(engine) => Some(engine.prepare(&matrix, None)?),
+        Backend::Native => None,
+    };
+    Ok(CachedMatrix { matrix, prepared })
+}
+
+#[allow(clippy::too_many_arguments)] // worker-local state is deliberately split for borrow granularity
+fn do_register(
+    router: &RunTimeOptimizer,
+    backend: &mut Backend,
+    cfg: &ShardCfg,
+    telemetry: &Telemetry,
+    registry: &mut HashMap<u64, Registered>,
+    cache: &mut Lru<CachedMatrix>,
+    id: u64,
+    coo: Coo,
+    iterations_hint: u64,
+) -> Result<Format> {
+    let decision = router.decide(&coo, iterations_hint);
+    let csr = convert::coo_to_csr(&coo);
+    let (format, converted) = if decision.convert {
+        (decision.predicted_format, true)
+    } else {
+        (Format::Csr, false)
+    };
+
+    // Model the per-product power/energy once, at registration — the
+    // gpusim stand-in for the paper's power sensor (§6.3), threaded
+    // through the request path via telemetry.
+    let (model_power_w, model_energy_j) = if csr.vals.is_empty() {
+        (0.0, 0.0)
+    } else {
+        let prof = crate::gpusim::profile(&csr, format, cfg.convert);
+        let knobs = KernelConfig {
+            format,
+            tb_size: MODEL_TB_SIZE,
+            maxrregcount: MODEL_MAXRREGCOUNT,
+            mem: MemConfig::Default,
+        };
+        let (m, _) = simulate(&cfg.arch, &prof, &knobs);
+        (m.avg_power_w, m.energy_j)
+    };
+    // Build (convert + marshal) BEFORE any telemetry side effects, so a
+    // failed registration leaves no phantom stats row or counter bump.
+    let entry = build_cached(backend, &csr, format, cfg.convert)?;
+
+    let tele = telemetry.handle(id);
+    tele.configure(format, model_power_w, model_energy_j);
+    if converted {
+        telemetry.totals.conversions.fetch_add(1, Ordering::Relaxed);
+    }
+    if cache.insert(id, entry).is_some() {
+        telemetry.totals.evictions.fetch_add(1, Ordering::Relaxed);
+    }
+    registry.insert(
+        id,
+        Registered { csr, format, converted, tele, energy_per_req_j: model_energy_j },
+    );
+    Ok(format)
+}
+
+/// Execute one coalesced group of requests for a single matrix as ONE
+/// `spmv_batch` dispatch.
+fn execute_group(
+    backend: &mut Backend,
+    cfg: &ShardCfg,
+    telemetry: &Telemetry,
+    registry: &HashMap<u64, Registered>,
+    cache: &mut Lru<CachedMatrix>,
+    id: u64,
+    jobs: Vec<Job>,
+) {
+    let Some(reg) = registry.get(&id) else {
+        for job in jobs {
+            let _ = job.reply.send(Err(anyhow!("unknown matrix id {id}")));
+        }
+        return;
+    };
+
+    // Validate lengths up front: malformed requests error individually
+    // and never poison the batch.
+    let n_cols = reg.csr.n_cols;
+    let mut xs: Vec<Vec<f32>> = Vec::with_capacity(jobs.len());
+    let mut clients = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        if job.x.len() != n_cols {
+            let _ = job
+                .reply
+                .send(Err(anyhow!("x length {} != n_cols {}", job.x.len(), n_cols)));
+        } else {
+            xs.push(job.x);
+            clients.push((job.enqueued, job.reply));
+        }
+    }
+    if xs.is_empty() {
+        return;
+    }
+
+    // Conversion cache: a miss here means the entry was evicted since
+    // registration — re-convert from the retained CSR source. touch +
+    // mru (instead of two `get`s) keeps the hit path at one scan.
+    if !cache.touch(id) {
+        telemetry.totals.reconversions.fetch_add(1, Ordering::Relaxed);
+        match build_cached(backend, &reg.csr, reg.format, cfg.convert) {
+            Ok(entry) => {
+                if cache.insert(id, entry).is_some() {
+                    telemetry.totals.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Err(e) => {
+                let msg = format!("re-convert matrix {id}: {e:#}");
+                for (_, reply) in clients {
+                    let _ = reply.send(Err(anyhow!("{msg}")));
+                }
+                return;
+            }
+        }
+    }
+    let cached = match cache.mru() {
+        Some((key, entry)) if *key == id => entry,
+        _ => unreachable!("touch/insert just made matrix {id} the MRU entry"),
+    };
+
+    // One dispatch for the whole group.
+    let result: Result<Vec<Vec<f32>>> = match backend {
+        Backend::Native => Ok(cached.matrix.as_spmv().spmv_batch(&xs)),
+        Backend::Pjrt(engine) => match &cached.prepared {
+            Some(prep) => engine.spmv_batch_prepared(prep, &xs),
+            None => xs.iter().map(|x| engine.spmv(&cached.matrix, x, None)).collect(),
+        },
+    };
+
+    let batch_size = xs.len();
+    match result {
+        Ok(ys) => {
+            let totals = &telemetry.totals;
+            totals.dispatches.fetch_add(1, Ordering::Relaxed);
+            totals.requests.fetch_add(batch_size as u64, Ordering::Relaxed);
+            totals.max_batch.fetch_max(batch_size as u64, Ordering::Relaxed);
+            if batch_size > 1 {
+                totals.coalesced_batches.fetch_add(1, Ordering::Relaxed);
+                totals.batched_requests.fetch_add(batch_size as u64, Ordering::Relaxed);
+            }
+            for ((enqueued, reply), y) in clients.into_iter().zip(ys) {
+                let service_time = enqueued.elapsed();
+                reg.tele.record(service_time);
+                let _ = reply.send(Ok(Response {
+                    y,
+                    format_used: reg.format,
+                    converted: reg.converted,
+                    service_time,
+                    batch_size,
+                    energy_j: reg.energy_per_req_j,
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("execute batch for matrix {id}: {e:#}");
+            for (_, reply) in clients {
+                let _ = reply.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+}

@@ -1,0 +1,299 @@
+//! Serving telemetry: per-matrix latency histograms + modeled energy.
+//!
+//! The hot path must not serialize shards, so everything a worker
+//! touches per request is an atomic on an `Arc<MatrixTelemetry>` handle
+//! the shard resolves once at registration ("lock-free-ish": the only
+//! lock is the registry `RwLock`, taken on handle lookup, never per
+//! request). Latencies land in a log2-bucketed histogram, so quantiles
+//! come out of 48 counters instead of an unbounded sample buffer; the
+//! energy ledger accumulates the `gpusim`-modeled joules per product
+//! (paper §6.3's objective, finally visible at serve time).
+
+use crate::sparse::Format;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+/// Log2 nanosecond buckets: bucket `b >= 1` counts latencies in
+/// `[2^(b-1), 2^b)` ns; bucket 47 tops out above ~39 hours.
+const HIST_BUCKETS: usize = 48;
+
+const FORMAT_UNSET: u64 = u64::MAX;
+
+fn bucket_of(ns: u64) -> usize {
+    ((64 - ns.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Geometric representative of a bucket, in nanoseconds.
+fn bucket_rep_ns(b: usize) -> f64 {
+    if b == 0 {
+        0.0
+    } else {
+        0.75 * (1u64 << b.min(63)) as f64
+    }
+}
+
+/// Per-matrix counters; every field is an atomic so shards record
+/// without locking.
+pub struct MatrixTelemetry {
+    /// `Format::class_id` of the serving format, or FORMAT_UNSET.
+    format_class: AtomicU64,
+    requests: AtomicU64,
+    lat_sum_ns: AtomicU64,
+    lat_max_ns: AtomicU64,
+    hist: [AtomicU64; HIST_BUCKETS],
+    /// Accumulated modeled energy (nanojoules).
+    energy_nj: AtomicU64,
+    /// Modeled per-product energy (nanojoules), set at registration.
+    model_energy_per_req_nj: AtomicU64,
+    /// Modeled average power draw (f64 bits), set at registration.
+    model_power_w_bits: AtomicU64,
+}
+
+impl MatrixTelemetry {
+    fn new() -> Self {
+        MatrixTelemetry {
+            format_class: AtomicU64::new(FORMAT_UNSET),
+            requests: AtomicU64::new(0),
+            lat_sum_ns: AtomicU64::new(0),
+            lat_max_ns: AtomicU64::new(0),
+            hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            energy_nj: AtomicU64::new(0),
+            model_energy_per_req_nj: AtomicU64::new(0),
+            model_power_w_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    /// Install the registration-time model: serving format plus the
+    /// simulated per-product power/energy on the deployment profile.
+    pub fn configure(&self, format: Format, model_power_w: f64, model_energy_per_req_j: f64) {
+        self.format_class.store(format.class_id() as u64, Ordering::Relaxed);
+        self.model_power_w_bits.store(model_power_w.to_bits(), Ordering::Relaxed);
+        self.model_energy_per_req_nj
+            .store((model_energy_per_req_j * 1e9).round() as u64, Ordering::Relaxed);
+    }
+
+    /// Record one served product.
+    pub fn record(&self, latency: Duration) {
+        let ns = latency.as_nanos().min(u64::MAX as u128) as u64;
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.lat_sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.lat_max_ns.fetch_max(ns, Ordering::Relaxed);
+        self.hist[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        let per_req = self.model_energy_per_req_nj.load(Ordering::Relaxed);
+        self.energy_nj.fetch_add(per_req, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self, id: u64) -> MatrixStats {
+        let counts: Vec<u64> = self.hist.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let requests = self.requests.load(Ordering::Relaxed);
+        let sum_ns = self.lat_sum_ns.load(Ordering::Relaxed);
+        let class = self.format_class.load(Ordering::Relaxed);
+        let max_us = self.lat_max_ns.load(Ordering::Relaxed) as f64 / 1e3;
+        // Bucket representatives can overshoot the true extremum;
+        // clamping keeps `p99 <= max` in every report.
+        let q = |p: f64| quantile_us(&counts, p).min(max_us);
+        MatrixStats {
+            id,
+            format: if class == FORMAT_UNSET {
+                None
+            } else {
+                Format::from_class_id(class as usize)
+            },
+            requests,
+            mean_us: if requests == 0 { 0.0 } else { sum_ns as f64 / requests as f64 / 1e3 },
+            p50_us: q(0.50),
+            p90_us: q(0.90),
+            p99_us: q(0.99),
+            max_us,
+            total_latency: Duration::from_nanos(sum_ns),
+            max_latency: Duration::from_nanos(self.lat_max_ns.load(Ordering::Relaxed)),
+            energy_j: self.energy_nj.load(Ordering::Relaxed) as f64 * 1e-9,
+            model_power_w: f64::from_bits(self.model_power_w_bits.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+impl Default for MatrixTelemetry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Histogram quantile: the representative value of the bucket holding
+/// the `q`-th ranked sample.
+fn quantile_us(counts: &[u64], q: f64) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut cum = 0u64;
+    for (b, c) in counts.iter().enumerate() {
+        cum += c;
+        if cum >= rank {
+            return bucket_rep_ns(b) / 1e3;
+        }
+    }
+    bucket_rep_ns(counts.len() - 1) / 1e3
+}
+
+/// One matrix's serving statistics (a [`Pool::stats`] row).
+///
+/// [`Pool::stats`]: crate::serve::Pool::stats
+#[derive(Debug, Clone)]
+pub struct MatrixStats {
+    pub id: u64,
+    /// Serving format (None if telemetry was created but never
+    /// configured by a registration).
+    pub format: Option<Format>,
+    pub requests: u64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p90_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    pub total_latency: Duration,
+    pub max_latency: Duration,
+    /// Total modeled energy spent serving this matrix (joules).
+    pub energy_j: f64,
+    /// Modeled average power of one product (watts).
+    pub model_power_w: f64,
+}
+
+/// Pool-wide counters (all relaxed atomics; exact under quiescence,
+/// monotone always).
+#[derive(Default)]
+pub struct Counters {
+    pub requests: AtomicU64,
+    /// Kernel dispatches (one per executed batch, coalesced or not).
+    pub dispatches: AtomicU64,
+    /// Dispatches that served more than one request.
+    pub coalesced_batches: AtomicU64,
+    /// Requests served by coalesced dispatches.
+    pub batched_requests: AtomicU64,
+    /// Largest batch executed so far.
+    pub max_batch: AtomicU64,
+    /// Registrations where the router converted away from CSR.
+    pub conversions: AtomicU64,
+    /// Conversion-cache misses on the product path (post-eviction).
+    pub reconversions: AtomicU64,
+    /// Conversion-cache evictions.
+    pub evictions: AtomicU64,
+}
+
+/// The shared registry: matrix id -> telemetry handle.
+pub struct Telemetry {
+    matrices: RwLock<HashMap<u64, Arc<MatrixTelemetry>>>,
+    pub totals: Counters,
+}
+
+impl Telemetry {
+    pub fn new() -> Self {
+        Telemetry { matrices: RwLock::new(HashMap::new()), totals: Counters::default() }
+    }
+
+    /// Get-or-create the handle for a matrix. Shards call this once per
+    /// registration and cache the `Arc`; the per-request path is pure
+    /// atomics on the handle.
+    pub fn handle(&self, id: u64) -> Arc<MatrixTelemetry> {
+        if let Some(t) = self.matrices.read().expect("telemetry lock").get(&id) {
+            return t.clone();
+        }
+        self.matrices
+            .write()
+            .expect("telemetry lock")
+            .entry(id)
+            .or_insert_with(|| Arc::new(MatrixTelemetry::new()))
+            .clone()
+    }
+
+    /// Consistent-enough snapshot of every matrix's stats, by id.
+    pub fn snapshot(&self) -> Vec<MatrixStats> {
+        let map = self.matrices.read().expect("telemetry lock");
+        let mut rows: Vec<MatrixStats> = map.iter().map(|(id, t)| t.snapshot(*id)).collect();
+        rows.sort_by_key(|r| r.id);
+        rows
+    }
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_log2_and_monotone() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        for ns in [1u64, 10, 1000, 1_000_000] {
+            let b = bucket_of(ns);
+            assert!(ns >= 1u64 << (b - 1) && ns < 1u64 << b, "ns {ns} bucket {b}");
+        }
+    }
+
+    #[test]
+    fn record_accumulates_and_quantiles_are_ordered() {
+        let t = MatrixTelemetry::new();
+        t.configure(Format::Ell, 12.5, 3e-6);
+        for us in [5u64, 10, 20, 40, 80, 160, 320, 640, 1280, 2560] {
+            t.record(Duration::from_micros(us));
+        }
+        let s = t.snapshot(7);
+        assert_eq!(s.id, 7);
+        assert_eq!(s.format, Some(Format::Ell));
+        assert_eq!(s.requests, 10);
+        assert!(s.mean_us > 0.0);
+        assert!(s.p50_us <= s.p90_us && s.p90_us <= s.p99_us, "{s:?}");
+        assert!(s.p99_us <= s.max_us, "quantiles are clamped to the observed max: {s:?}");
+        assert!((s.energy_j - 10.0 * 3e-6).abs() < 1e-9);
+        assert!((s.model_power_w - 12.5).abs() < 1e-12);
+        assert!(s.total_latency >= s.max_latency);
+    }
+
+    #[test]
+    fn empty_telemetry_snapshot_is_zeroed() {
+        let t = MatrixTelemetry::new();
+        let s = t.snapshot(0);
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.format, None);
+        assert_eq!(s.p50_us, 0.0);
+        assert_eq!(s.energy_j, 0.0);
+    }
+
+    #[test]
+    fn registry_hands_out_shared_handles() {
+        let reg = Telemetry::new();
+        let a = reg.handle(1);
+        let b = reg.handle(1);
+        assert!(Arc::ptr_eq(&a, &b));
+        a.record(Duration::from_micros(3));
+        let rows = reg.snapshot();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].requests, 1);
+        reg.handle(2);
+        let rows = reg.snapshot();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].id, 1);
+        assert_eq!(rows[1].id, 2);
+    }
+
+    #[test]
+    fn quantile_of_uniform_histogram() {
+        let mut counts = vec![0u64; HIST_BUCKETS];
+        counts[10] = 50; // all samples in one bucket
+        let v = quantile_us(&counts, 0.5);
+        assert!((v - bucket_rep_ns(10) / 1e3).abs() < 1e-12);
+        assert_eq!(quantile_us(&[0u64; HIST_BUCKETS], 0.99), 0.0);
+    }
+}

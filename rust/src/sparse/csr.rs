@@ -99,6 +99,28 @@ impl SpMv for Csr {
             y[i] = acc;
         }
     }
+
+    /// Batched override: streams the row arrays once for the whole batch
+    /// (the SpMM access pattern), keeping the per-(row, vector)
+    /// accumulation order identical to [`Csr::spmv`] so results stay
+    /// bit-identical to independent products.
+    fn spmv_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        for x in xs {
+            assert_eq!(x.len(), self.n_cols);
+        }
+        let mut ys: Vec<Vec<f32>> = xs.iter().map(|_| vec![0.0f32; self.n_rows]).collect();
+        for i in 0..self.n_rows {
+            let (a, b) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+            for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                let mut acc = 0.0f32;
+                for k in a..b {
+                    acc += self.vals[k] * x[self.cols[k] as usize];
+                }
+                y[i] = acc;
+            }
+        }
+        ys
+    }
 }
 
 #[cfg(test)]

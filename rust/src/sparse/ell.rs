@@ -97,6 +97,27 @@ impl SpMv for Ell {
             y[r] = acc;
         }
     }
+
+    /// Batched override: streams each padded row once for the whole
+    /// batch, with the same per-(row, vector) accumulation order as
+    /// [`SpMv::spmv`] — bit-identical to independent products.
+    fn spmv_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        for x in xs {
+            assert_eq!(x.len(), self.n_cols);
+        }
+        let mut ys: Vec<Vec<f32>> = xs.iter().map(|_| vec![0.0f32; self.n_rows]).collect();
+        for r in 0..self.n_rows {
+            let base = r * self.width;
+            for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                let mut acc = 0.0f32;
+                for s in 0..self.width {
+                    acc += self.vals[base + s] * x[self.cols[base + s] as usize];
+                }
+                y[r] = acc;
+            }
+        }
+        ys
+    }
 }
 
 #[cfg(test)]

@@ -15,6 +15,18 @@ pub trait SpMv {
         y
     }
 
+    /// Compute `y_j = A x_j` for a batch of input vectors against one
+    /// resident matrix — the SpMV -> SpMM throughput lever the serving
+    /// pool's request coalescing dispatches through. The contract is
+    /// bit-identical results to `spmv_alloc` on each vector (same
+    /// accumulation order per output element), so batched and unbatched
+    /// serving paths are interchangeable; formats with a streaming
+    /// advantage (CSR, ELL) override this to walk the matrix once for
+    /// the whole batch.
+    fn spmv_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        xs.iter().map(|x| self.spmv_alloc(x)).collect()
+    }
+
     /// FLOPs of one product (2 per stored multiply-add on real non-zeros) —
     /// the numerator of the paper's MFLOPS/Watt objective (§6.3).
     fn flops(&self, nnz: usize) -> u64 {
@@ -40,5 +52,24 @@ mod tests {
     fn flops_counts_two_per_nnz() {
         let a = Coo::new(1, 1);
         assert_eq!(a.flops(10), 20);
+    }
+
+    #[test]
+    fn default_spmv_batch_matches_individual_products() {
+        let mut a = Coo::new(3, 2);
+        a.push(0, 0, 2.0);
+        a.push(2, 1, -1.5);
+        let xs = vec![vec![1.0, 2.0], vec![-3.0, 0.5]];
+        let ys = a.spmv_batch(&xs);
+        assert_eq!(ys.len(), 2);
+        for (x, y) in xs.iter().zip(&ys) {
+            assert_eq!(*y, a.spmv_alloc(x));
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let a = Coo::new(2, 2);
+        assert!(a.spmv_batch(&[]).is_empty());
     }
 }

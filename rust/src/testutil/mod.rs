@@ -78,6 +78,31 @@ pub fn arb_x(rng: &mut Rng, len: usize) -> Vec<f32> {
     (0..len).map(|_| rng.val()).collect()
 }
 
+/// A run-time router trained on a small corpus slice with a synthetic
+/// overhead model — the shared fixture for serving tests and the e2e
+/// serving bench (one definition, so the training setup cannot drift
+/// between them).
+pub fn toy_router(
+    matrix_names: &[&str],
+    objective: crate::gpusim::Objective,
+) -> crate::coordinator::RunTimeOptimizer {
+    use crate::coordinator::overhead::{OverheadModel, OverheadSample};
+    let ds = crate::dataset::build(&crate::dataset::BuildOptions {
+        only: Some(matrix_names.iter().map(|s| s.to_string()).collect()),
+        both_archs: false,
+        ..Default::default()
+    });
+    let samples: Vec<OverheadSample> = (1..10)
+        .map(|k| OverheadSample {
+            n: k as f64 * 1000.0,
+            nnz: k as f64 * 10_000.0,
+            f_latency_s: k as f64 * 1e-3,
+            c_latency_s: k as f64 * 1e-3,
+        })
+        .collect();
+    crate::coordinator::RunTimeOptimizer::train(&ds, objective, OverheadModel::train(&samples))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -4,6 +4,9 @@
 //! Invariants:
 //!  * every format conversion preserves the SpMV product;
 //!  * conversion round trips preserve CSR exactly;
+//!  * batched products (`spmv_batch`) are bit-identical to independent
+//!    `spmv_alloc` calls, for every format (the serving pool's
+//!    coalescing correctness contract);
 //!  * kernel marshalling (padded bucket arrays) preserves the product;
 //!  * feature extraction is format-independent;
 //!  * routing/labeling invariants (best <= default under each objective).
@@ -67,6 +70,38 @@ fn prop_roundtrips_preserve_csr() {
             convert::csr_to_dense(&convert::bell_to_csr(&convert::csr_to_bell(&csr, 3, 5)));
         if back_bell.data != dense.data {
             return Err("BELL round trip changed the dense realization".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spmv_batch_matches_independent_products_bit_for_bit() {
+    assert_prop("spmv_batch == k x spmv_alloc", 0xC6, 50, 200, |rng, size| {
+        let coo = arb_coo(rng, size);
+        let csr = convert::coo_to_csr(&coo);
+        let k = 1 + size % 5;
+        let xs: Vec<Vec<f32>> = (0..k).map(|_| arb_x(rng, coo.n_cols)).collect();
+        for fmt in Format::ALL {
+            for params in [
+                ConvertParams { bell_bh: 2, bell_bw: 2, sell_h: 2 },
+                ConvertParams::default(),
+            ] {
+                let m = convert::convert(&csr, fmt, params);
+                let batch = m.as_spmv().spmv_batch(&xs);
+                if batch.len() != k {
+                    return Err(format!("{fmt}: batch len {} != {k}", batch.len()));
+                }
+                for (j, x) in xs.iter().enumerate() {
+                    let want = m.as_spmv().spmv_alloc(x);
+                    // bit-identical, not merely close: the serving pool
+                    // relies on batched and unbatched dispatch being
+                    // interchangeable
+                    if batch[j] != want {
+                        return Err(format!("{fmt} {params:?}: vector {j} differs"));
+                    }
+                }
+            }
         }
         Ok(())
     });
