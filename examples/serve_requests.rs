@@ -17,7 +17,8 @@ use auto_spmv::coordinator::overhead::OverheadModel;
 use auto_spmv::coordinator::RunTimeOptimizer;
 use auto_spmv::dataset::{build, BuildOptions};
 use auto_spmv::gen::{patterns, Rng};
-use auto_spmv::gpusim::Objective;
+use auto_spmv::gpusim::{turing_gtx1650m, Objective};
+use auto_spmv::online::{Online, OnlineConfig, Trainer};
 use auto_spmv::report::Table;
 use auto_spmv::runtime::default_artifacts_dir;
 use auto_spmv::serve::{BackendSpec, Pool, PoolConfig};
@@ -49,11 +50,27 @@ fn main() -> anyhow::Result<()> {
     // energy efficiency: the objective where format choice matters most
     // (paper §7.2: CSR is already latency-optimal, but loses up to 99.7%
     // energy efficiency on skewed/banded matrices)
-    let router = Arc::new(RunTimeOptimizer::train(
-        &ds,
-        Objective::EnergyEff,
-        OverheadModel::train_on_corpus(1, None),
-    ));
+    let objective = Objective::EnergyEff;
+    let overhead = OverheadModel::train_on_corpus(1, None);
+    let router = Arc::new(RunTimeOptimizer::train(&ds, objective, overhead.clone()));
+
+    // --- closed loop: explore a sliver of traffic, retrain periodically --
+    // The fleet below is synthetic (not the training corpus), so the
+    // online loop can only improve on the offline router's guesses.
+    let online = Online::start(
+        OnlineConfig {
+            explore_rate: 0.08,
+            retrain_every: 192,
+            seed: 0xE2E,
+            // refits run off-thread so the latency table below measures
+            // serving, not retraining
+            background: true,
+            ..OnlineConfig::default()
+        },
+        router,
+        objective,
+        Some(Trainer::new(ds.clone(), objective, overhead, turing_gtx1650m().name)),
+    );
 
     // --- backend: PJRT over the AOT artifacts ---------------------------
     let artifacts = default_artifacts_dir();
@@ -64,8 +81,8 @@ fn main() -> anyhow::Result<()> {
         eprintln!("WARNING: no artifacts at {artifacts:?}; falling back to native");
         BackendSpec::Native
     };
-    let pool = Pool::start(
-        router,
+    let pool = Pool::start_adaptive(
+        online,
         backend,
         PoolConfig {
             workers: 2,
@@ -151,15 +168,29 @@ fn main() -> anyhow::Result<()> {
     t.row(vec!["modeled energy (J)".into(), format!("{:.3e}", stats.total_energy_j)]);
     t.row(vec!["numeric spot-checks".into(), checked.to_string()]);
     t.row(vec![
-        "formats in play".into(),
+        "formats at registration".into(),
         formats.iter().map(|f| f.to_string()).collect::<Vec<_>>().join(","),
+    ]);
+    t.row(vec![
+        "router version (retrains)".into(),
+        format!("v{} ({})", stats.router_version, stats.retrains),
+    ]);
+    t.row(vec![
+        "explored requests / migrations".into(),
+        format!("{} / {}", stats.explored_requests, stats.migrations),
+    ]);
+    t.row(vec![
+        "drift".into(),
+        stats.drift.map_or("off".to_string(), |d| d.to_string()),
     ]);
     t.emit("e2e_serving");
 
-    // per-matrix telemetry: the §6.3 energy objective at serve time
+    // per-matrix telemetry: the §6.3 energy objective at serve time,
+    // plus the routing-decision mix (explored arms starred)
+    let quant = |q: Option<f64>| q.map_or("-".to_string(), |v| format!("{v:.1}"));
     let mut pm = Table::new(
         "Per-matrix telemetry (energy modeled on the Turing profile)",
-        &["matrix", "format", "requests", "p50 (us)", "p99 (us)", "energy (J)"],
+        &["matrix", "format", "requests", "p50 (us)", "p99 (us)", "energy (J)", "decisions"],
     );
     for m in &stats.per_matrix {
         let name = fleet.get(m.id as usize).map_or("?", |(n, _)| *n);
@@ -167,9 +198,10 @@ fn main() -> anyhow::Result<()> {
             name.into(),
             m.format.map_or("?".to_string(), |f| f.to_string()),
             m.requests.to_string(),
-            format!("{:.1}", m.p50_us),
-            format!("{:.1}", m.p99_us),
+            quant(m.p50_us),
+            quant(m.p99_us),
             format!("{:.3e}", m.energy_j),
+            m.decisions(),
         ]);
     }
     pm.emit("e2e_serving_telemetry");

@@ -7,14 +7,21 @@
 //! serving throughput of the sharded pool at 1/2/4 workers with request
 //! coalescing on vs off, plus the coalescing evidence: dispatches vs
 //! requests and the largest spmv_batch executed.
+//!
+//! Part 3 (always runs): the closed loop under workload drift — a
+//! router trained on a biased corpus slice serves a drifted synthetic
+//! fleet, frozen vs adaptive (exploration + retraining + hot-swap);
+//! reports mean modeled energy per request and the router version.
 
 use auto_spmv::gen::{patterns, Rng};
-use auto_spmv::gpusim::Objective;
+use auto_spmv::gpusim::{turing_gtx1650m, Objective};
+use auto_spmv::online::{Online, OnlineConfig, Trainer};
 use auto_spmv::report::{bench, Table};
 use auto_spmv::runtime::{default_artifacts_dir, Engine};
 use auto_spmv::serve::{BackendSpec, Pool, PoolConfig};
 use auto_spmv::sparse::convert::{self, ConvertParams};
 use auto_spmv::sparse::{Coo, Format, SpMv};
+use auto_spmv::testutil::toy_setup;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -169,5 +176,69 @@ fn main() {
         }
     }
     t.emit("e2e_serving_throughput");
+
+    adaptation_under_drift();
     println!("bench_e2e_serving OK");
+}
+
+/// Part 3 — closed-loop adaptation: the same drifted fleet served by a
+/// frozen router vs the online loop (explore 20%, retrain every 64
+/// requests, deterministic seed, single worker so the schedule is
+/// reproducible).
+fn adaptation_under_drift() {
+    let objective = Objective::Energy;
+    // Bias the offline view: train on power-law web graphs only, then
+    // serve banded/stencil matrices (the drifted population).
+    let (router, ds, overhead) = toy_setup(&["eu-2005", "wiki-talk-temporal"], objective);
+    let router = Arc::new(router);
+    let mut rng = Rng::new(0xD21F7);
+    let fleet: Vec<Coo> = vec![
+        patterns::diagonals(&mut rng, 1000, &[-24, 0, 24, -48, 48], 0.98),
+        patterns::banded(&mut rng, 800, 12, 6.0),
+    ];
+    let n_requests = 512usize;
+
+    let mut t = Table::new(
+        "E2E — closed-loop adaptation under drift (modeled energy objective)",
+        &["pool", "router", "retrains", "migrations", "explored", "mean energy/req (J)"],
+    );
+    for adaptive in [false, true] {
+        let cfg = PoolConfig { workers: 1, ..PoolConfig::default() };
+        let pool = if adaptive {
+            let online = Online::start(
+                OnlineConfig {
+                    explore_rate: 0.2,
+                    retrain_every: 64,
+                    seed: 0xD21F7,
+                    ..OnlineConfig::default()
+                },
+                router.clone(),
+                objective,
+                Some(Trainer::new(ds.clone(), objective, overhead.clone(), turing_gtx1650m().name)),
+            );
+            Pool::start_adaptive(online, BackendSpec::Native, cfg)
+        } else {
+            Pool::start(router.clone(), BackendSpec::Native, cfg)
+        };
+        let mut mats = Vec::new();
+        for (id, coo) in fleet.iter().enumerate() {
+            pool.register(id as u64, coo.clone(), 1_000_000_000).expect("register");
+            mats.push((id as u64, coo.n_cols));
+        }
+        let (_, stats) = drive(&pool, &mats, n_requests);
+        assert_eq!(stats.requests, n_requests as u64, "no request may be dropped");
+        t.row(vec![
+            if adaptive { "adaptive".into() } else { "frozen".to_string() },
+            format!("v{}", stats.router_version),
+            stats.retrains.to_string(),
+            stats.migrations.to_string(),
+            stats.explored_requests.to_string(),
+            format!("{:.3e}", stats.total_energy_j / stats.requests as f64),
+        ]);
+        if adaptive {
+            assert!(stats.router_version > 1, "retraining must hot-swap at this cadence");
+            assert!(stats.explored_requests > 0, "exploration must route some traffic");
+        }
+    }
+    t.emit("e2e_adaptation");
 }

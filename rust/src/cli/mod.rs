@@ -7,8 +7,16 @@
 //!   train [--objective O]       train + report per-target accuracy
 //!   optimize --matrix M [...]   run both optimization modes on a matrix
 //!   serve [--requests N] [--workers W] [--batch-window-us U]
-//!         [--cache-cap C]       serving demo over the sharded pool
-//!                               (PJRT when artifacts exist, else native)
+//!         [--cache-cap C]
+//!         [--explore-rate F] [--retrain-every N]
+//!                               serving demo over the sharded pool
+//!                               (PJRT when artifacts exist, else
+//!                               native). A non-zero explore rate or
+//!                               retrain cadence attaches the closed
+//!                               loop (`online`): bandit exploration,
+//!                               drift detection, periodic retraining,
+//!                               hot-swapped router. --seed drives the
+//!                               exploration schedule.
 //!
 //! Global flags: --config FILE, --set key=value (repeatable), and the
 //! shorthand --scale/--seed/--objective overrides.
@@ -215,6 +223,8 @@ fn cmd_optimize(cli: &Cli) -> Result<()> {
 }
 
 fn cmd_serve(cli: &Cli) -> Result<()> {
+    use crate::gpusim::turing_gtx1650m;
+    use crate::online::{Online, OnlineConfig, Trainer};
     use crate::serve::{BackendSpec, Pool, PoolConfig};
     use crate::sparse::convert::ConvertParams;
     use std::sync::Arc;
@@ -224,10 +234,12 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let workers: usize = cli.flag("workers").map_or(2, |v| v.parse().unwrap_or(2));
     let window_us: u64 = cli.flag("batch-window-us").map_or(0, |v| v.parse().unwrap_or(0));
     let cache_cap: usize = cli.flag("cache-cap").map_or(64, |v| v.parse().unwrap_or(64));
+    let explore_rate: f64 = cli.flag("explore-rate").map_or(0.0, |v| v.parse().unwrap_or(0.0));
+    let retrain_every: u64 = cli.flag("retrain-every").map_or(0, |v| v.parse().unwrap_or(0));
     let ds = load_or_build(cli)?;
     let obj = cli.objective()?;
     let overhead = OverheadModel::train_on_corpus(cli.config.scale, None);
-    let router = RunTimeOptimizer::train(&ds, obj, overhead);
+    let router = RunTimeOptimizer::train(&ds, obj, overhead.clone());
 
     let backend = if cli.config.artifacts_dir.join("manifest.tsv").exists() {
         println!("backend: PJRT over {:?}", cli.config.artifacts_dir);
@@ -237,17 +249,40 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         BackendSpec::Native
     };
     println!("pool: {workers} workers, batch window {window_us} us, cache capacity {cache_cap}");
-    let pool = Pool::start(
-        Arc::new(router),
-        backend,
-        PoolConfig {
-            workers,
-            batch_window: Duration::from_micros(window_us),
-            cache_capacity: cache_cap,
-            convert: ConvertParams { bell_bh: 8, bell_bw: 8, sell_h: 8 },
-            ..PoolConfig::default()
-        },
-    );
+    let pool_cfg = PoolConfig {
+        workers,
+        batch_window: Duration::from_micros(window_us),
+        cache_capacity: cache_cap,
+        convert: ConvertParams { bell_bh: 8, bell_bw: 8, sell_h: 8 },
+        ..PoolConfig::default()
+    };
+    let adaptive = explore_rate > 0.0 || retrain_every > 0;
+    let pool = if adaptive {
+        println!(
+            "closed loop: explore rate {explore_rate}, retrain every {retrain_every} \
+             requests, seed {}",
+            cli.config.seed
+        );
+        let trainer = (retrain_every > 0)
+            .then(|| Trainer::new(ds.clone(), obj, overhead, turing_gtx1650m().name));
+        let online = Online::start(
+            OnlineConfig {
+                explore_rate,
+                retrain_every,
+                seed: cli.config.seed,
+                // keep serving latency flat: refits run on the trainer
+                // thread, never inline on a shard
+                background: true,
+                ..OnlineConfig::default()
+            },
+            Arc::new(router),
+            obj,
+            trainer,
+        );
+        Pool::start_adaptive(online, backend, pool_cfg)
+    } else {
+        Pool::start(Arc::new(router), backend, pool_cfg)
+    };
 
     // serve products over a few small corpus matrices
     let names = ["shar_te2-b3", "rim", "bcsstk32"];
@@ -289,19 +324,32 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         stats.reconversions,
         stats.evictions
     );
+    println!(
+        "router v{} ({} retrains, {} migrations), explored {} requests, drift: {}",
+        stats.router_version,
+        stats.retrains,
+        stats.migrations,
+        stats.explored_requests,
+        stats.drift.map_or("off (frozen router)".to_string(), |d| d.to_string())
+    );
+    let quant = |q: Option<f64>| q.map_or("-".to_string(), |v| format!("{v:.1}"));
     let mut t = Table::new(
         "Per-matrix serving telemetry (latency end-to-end; energy modeled, §6.3)",
-        &["matrix", "format", "requests", "p50 (us)", "p99 (us)", "energy (J)", "power (W)"],
+        &[
+            "matrix", "format", "requests", "p50 (us)", "p99 (us)", "energy (J)", "power (W)",
+            "decisions",
+        ],
     );
     for m in &stats.per_matrix {
         t.row(vec![
             names.get(m.id as usize).copied().unwrap_or("?").into(),
             m.format.map_or("?".into(), |f| f.to_string()),
             m.requests.to_string(),
-            format!("{:.1}", m.p50_us),
-            format!("{:.1}", m.p99_us),
+            quant(m.p50_us),
+            quant(m.p99_us),
             fmt_g(m.energy_j),
             fmt_g(m.model_power_w),
+            m.decisions(),
         ]);
     }
     t.emit("serve");
@@ -342,5 +390,22 @@ mod tests {
     fn boolean_flags_default_true() {
         let cli = parse(&args(&["serve", "--verbose"])).unwrap();
         assert_eq!(cli.flag("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn serve_online_flags_parse() {
+        let cli = parse(&args(&[
+            "serve",
+            "--explore-rate",
+            "0.2",
+            "--retrain-every",
+            "64",
+            "--seed",
+            "7",
+        ]))
+        .unwrap();
+        assert_eq!(cli.flag("explore-rate"), Some("0.2"));
+        assert_eq!(cli.flag("retrain-every"), Some("64"));
+        assert_eq!(cli.config.seed, 7, "--seed drives the exploration schedule");
     }
 }

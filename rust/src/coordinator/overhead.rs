@@ -63,6 +63,9 @@ impl OverheadEstimate {
 }
 
 /// Regression models for f/c latency (Bayesian ridge on [n, nnz, n+nnz]).
+/// `Clone` so long-lived holders (the online retraining loop re-fits a
+/// fresh `RunTimeOptimizer` per round) can hand out copies.
+#[derive(Clone)]
 pub struct OverheadModel {
     f_model: BayesianRidge,
     c_model: BayesianRidge,

@@ -129,6 +129,19 @@ impl RunTimeOptimizer {
     pub fn decide(&self, coo: &Coo, iterations: u64) -> Decision {
         // step 1: features (timed)
         let (feats, f_dur) = features::extract_timed(coo);
+        self.decide_with_features(feats, f_dur, iterations)
+    }
+
+    /// Steps 2–4 of §5.3 when the features are already at hand — the
+    /// serving pool's re-decision path on a router hot-swap: features
+    /// were measured once at registration, so step 1 costs nothing and
+    /// callers pass the original `f_latency` (or zero).
+    pub fn decide_with_features(
+        &self,
+        feats: Features,
+        f_latency: std::time::Duration,
+        iterations: u64,
+    ) -> Decision {
         let mut x = feats.to_scaled_vec();
         x.push(self.deploy_arch_feature);
 
@@ -167,7 +180,7 @@ impl RunTimeOptimizer {
             est_default,
             est_best,
             overhead,
-            f_latency_s: f_dur.as_secs_f64(),
+            f_latency_s: f_latency.as_secs_f64(),
             convert,
         }
     }

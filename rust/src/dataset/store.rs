@@ -119,6 +119,85 @@ mod tests {
     }
 
     #[test]
+    fn random_datasets_roundtrip_exactly() {
+        // Property: save -> load is lossless for arbitrary finite
+        // records — including the synthetic "online-<key>" records the
+        // online loop checkpoints through this store (tiny/huge
+        // magnitudes from measured latencies and modeled energies).
+        use crate::testutil::assert_prop;
+        let configs = KernelConfig::sweep_all();
+        assert_prop("store roundtrip", 0x57073, 12, 40, |rng, size| {
+            let n_records = 1 + size % 20;
+            let magnitude = |rng: &mut crate::gen::Rng| {
+                // span ~1e-12 .. 1e+12, the scales measurements live at
+                let exp = rng.f64() * 24.0 - 12.0;
+                rng.f64().max(1e-3) * 10f64.powf(exp)
+            };
+            let records: Vec<Record> = (0..n_records)
+                .map(|_| Record {
+                    matrix: format!("online-{:016x}", rng.next_u64()),
+                    arch: if rng.f64() < 0.5 { "GTX1650m-Turing" } else { "GTX1080-Pascal" }
+                        .to_string(),
+                    config: configs[rng.below(configs.len())],
+                    features: Features {
+                        n: (rng.below(1_000_000) + 1) as f64,
+                        nnz: (rng.below(10_000_000) + 1) as f64,
+                        avg_nnz: magnitude(rng),
+                        var_nnz: magnitude(rng),
+                        ell_ratio: rng.f64(),
+                        median: rng.below(1000) as f64,
+                        mode: rng.below(1000) as f64,
+                        std_nnz: magnitude(rng),
+                    },
+                    m: Measurement {
+                        latency_s: magnitude(rng),
+                        energy_j: magnitude(rng),
+                        avg_power_w: magnitude(rng),
+                        mflops_per_watt: magnitude(rng),
+                    },
+                })
+                .collect();
+            let ds = Dataset { records };
+            let tmp = std::env::temp_dir()
+                .join(format!("autospmv_roundtrip_{}.tsv", rng.next_u64()));
+            save(&ds, &tmp).map_err(|e| format!("save: {e}"))?;
+            let back = load(&tmp).map_err(|e| format!("load: {e}"))?;
+            std::fs::remove_file(&tmp).ok();
+            if back.len() != ds.len() {
+                return Err(format!("len {} != {}", back.len(), ds.len()));
+            }
+            for (a, b) in ds.records.iter().zip(&back.records) {
+                if a.matrix != b.matrix || a.arch != b.arch || a.config != b.config {
+                    return Err(format!("identity fields diverge: {} vs {}", a.matrix, b.matrix));
+                }
+                let pairs = [
+                    (a.features.n, b.features.n),
+                    (a.features.nnz, b.features.nnz),
+                    (a.features.avg_nnz, b.features.avg_nnz),
+                    (a.features.var_nnz, b.features.var_nnz),
+                    (a.features.ell_ratio, b.features.ell_ratio),
+                    (a.features.median, b.features.median),
+                    (a.features.mode, b.features.mode),
+                    (a.features.std_nnz, b.features.std_nnz),
+                    (a.m.latency_s, b.m.latency_s),
+                    (a.m.energy_j, b.m.energy_j),
+                    (a.m.avg_power_w, b.m.avg_power_w),
+                    (a.m.mflops_per_watt, b.m.mflops_per_watt),
+                ];
+                for (x, y) in pairs {
+                    // Rust float formatting prints the shortest string
+                    // that uniquely identifies the value, so the
+                    // roundtrip must be bit-exact.
+                    if x.to_bits() != y.to_bits() {
+                        return Err(format!("float not bit-exact: {x:?} vs {y:?}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn load_rejects_bad_header() {
         let tmp = std::env::temp_dir().join("autospmv_bad_header.tsv");
         std::fs::write(&tmp, "nope\n").unwrap();

@@ -27,6 +27,10 @@
 //!                     dispatches, a bounded converted-matrix LRU, and
 //!                     per-matrix latency/energy telemetry (DESIGN.md
 //!                     §serve).
+//! * [`online`]      — closed-loop adaptive routing for the pool:
+//!                     observation buffer, exploration bandit, drift
+//!                     detector, background retraining, and the
+//!                     hot-swappable versioned router (DESIGN.md §6).
 //! * [`runtime`]     — PJRT client wrapper + artifact manifest/executable
 //!                     cache (the only module touching the xla API; the
 //!                     offline build aliases it to `runtime::xla_shim`).
@@ -45,6 +49,7 @@ pub mod features;
 pub mod gen;
 pub mod gpusim;
 pub mod ml;
+pub mod online;
 pub mod report;
 pub mod runtime;
 pub mod serve;

@@ -1,0 +1,261 @@
+//! Per-feature-bucket exploration over `Format` arms.
+//!
+//! The offline router only ever sees labels for the corpus it was
+//! trained on; under workload drift the buffer of online observations
+//! would contain nothing but the predicted format's outcomes and the
+//! trainer could never learn that another format now wins. The bandit
+//! fixes that: with probability `explore_rate` a dispatch is routed to
+//! a *non-predicted* arm so the observation buffer holds counterfactual
+//! labels. Arm choice is count-balanced within the matrix's feature
+//! bucket (the UCB exploration bonus in the limit where unexplored arms
+//! dominate): the least-pulled alternative goes first, so all three
+//! alternatives get sampled instead of one lucky arm.
+//!
+//! Everything is deterministic given the seed and the dispatch order:
+//! the RNG is the crate's own xoshiro [`Rng`], consulted exactly once
+//! per routed dispatch (zero draws when `explore_rate == 0`, which is
+//! what makes the frozen-pool bit-identity property hold).
+
+use crate::features::Features;
+use crate::gen::Rng;
+use crate::sparse::Format;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Number of format arms (`Format::ALL`).
+pub const N_FORMATS: usize = Format::ALL.len();
+
+/// Routing outcome for one dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouteChoice {
+    /// Format this dispatch executes in.
+    pub format: Format,
+    /// True when the bandit overrode the router's decision.
+    pub explored: bool,
+}
+
+impl RouteChoice {
+    /// The trivial non-exploring choice.
+    pub fn chosen(format: Format) -> RouteChoice {
+        RouteChoice { format, explored: false }
+    }
+}
+
+/// Per-arm statistics inside one feature bucket.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ArmStats {
+    /// Dispatches routed to this arm (chosen + explored).
+    pub pulls: u64,
+    /// Observations credited to this arm.
+    pub observations: u64,
+    /// Running mean of the observed objective value.
+    pub mean_objective: f64,
+}
+
+struct BanditState {
+    rng: Rng,
+    buckets: HashMap<u64, [ArmStats; N_FORMATS]>,
+}
+
+/// Coarse feature bucket: matrices with similar scale, row-length
+/// profile and padding efficiency share exploration statistics. Buckets
+/// quantize the Table-2 features that drive format choice (paper §5.5).
+pub fn bucket_of(f: &Features) -> u64 {
+    let log2_or_zero = |v: f64| {
+        if v >= 1.0 {
+            (v.log2().floor() as u64).min(63)
+        } else {
+            0
+        }
+    };
+    let n = log2_or_zero(f.n);
+    let avg = log2_or_zero(f.avg_nnz);
+    let std = log2_or_zero(f.std_nnz + 1.0);
+    let ell = ((f.ell_ratio.clamp(0.0, 1.0) * 4.0) as u64).min(3);
+    (n << 18) | (avg << 12) | (std << 6) | ell
+}
+
+/// Epsilon-greedy explorer with count-balanced arm selection.
+pub struct Bandit {
+    /// f64 bits of the current exploration rate — atomic so operators
+    /// can anneal or pause exploration on a live pool.
+    explore_rate_bits: AtomicU64,
+    state: Mutex<BanditState>,
+}
+
+impl Bandit {
+    /// `explore_rate` is clamped to [0, 1]; `seed` makes the whole
+    /// exploration schedule reproducible.
+    pub fn new(explore_rate: f64, seed: u64) -> Bandit {
+        Bandit {
+            explore_rate_bits: AtomicU64::new(explore_rate.clamp(0.0, 1.0).to_bits()),
+            state: Mutex::new(BanditState { rng: Rng::new(seed), buckets: HashMap::new() }),
+        }
+    }
+
+    pub fn explore_rate(&self) -> f64 {
+        f64::from_bits(self.explore_rate_bits.load(Ordering::Acquire))
+    }
+
+    /// Change the exploration rate on a live bandit (annealing; 0
+    /// pauses exploration entirely).
+    pub fn set_explore_rate(&self, rate: f64) {
+        self.explore_rate_bits.store(rate.clamp(0.0, 1.0).to_bits(), Ordering::Release);
+    }
+
+    /// Route one dispatch: keep the router's `default` format, or —
+    /// with probability `explore_rate` — the least-pulled alternative
+    /// arm in this matrix's feature bucket.
+    ///
+    /// `explore_rate == 0` short-circuits before touching the lock or
+    /// the RNG, so a non-exploring pool is bit-identical to one with no
+    /// bandit at all.
+    pub fn route(&self, feats: &Features, default: Format) -> RouteChoice {
+        let rate = self.explore_rate();
+        if rate <= 0.0 {
+            return RouteChoice::chosen(default);
+        }
+        let mut st = self.state.lock().expect("bandit lock");
+        let draw = st.rng.f64();
+        let arms = st
+            .buckets
+            .entry(bucket_of(feats))
+            .or_insert_with(|| std::array::from_fn(|_| ArmStats::default()));
+        if draw >= rate {
+            arms[default.class_id()].pulls += 1;
+            return RouteChoice::chosen(default);
+        }
+        let alt = Format::ALL
+            .iter()
+            .copied()
+            .filter(|f| *f != default)
+            .min_by_key(|f| arms[f.class_id()].pulls)
+            .expect("more than one format");
+        arms[alt.class_id()].pulls += 1;
+        RouteChoice { format: alt, explored: true }
+    }
+
+    /// Credit an observed objective value to an arm (running mean).
+    pub fn observe(&self, feats: &Features, format: Format, objective_value: f64) {
+        let mut st = self.state.lock().expect("bandit lock");
+        let arms = st
+            .buckets
+            .entry(bucket_of(feats))
+            .or_insert_with(|| std::array::from_fn(|_| ArmStats::default()));
+        let arm = &mut arms[format.class_id()];
+        arm.observations += 1;
+        arm.mean_objective += (objective_value - arm.mean_objective) / arm.observations as f64;
+    }
+
+    /// Snapshot of one bucket's arms (stats/debug aid).
+    pub fn arms(&self, feats: &Features) -> [ArmStats; N_FORMATS] {
+        let st = self.state.lock().expect("bandit lock");
+        st.buckets.get(&bucket_of(feats)).copied().unwrap_or_default()
+    }
+
+    /// Number of feature buckets with any exploration state.
+    pub fn buckets(&self) -> usize {
+        self.state.lock().expect("bandit lock").buckets.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feats(n: f64, avg: f64) -> Features {
+        Features {
+            n,
+            nnz: n * avg,
+            avg_nnz: avg,
+            var_nnz: 1.0,
+            ell_ratio: 0.5,
+            median: avg,
+            mode: avg,
+            std_nnz: 1.0,
+        }
+    }
+
+    #[test]
+    fn zero_rate_never_explores_and_never_draws() {
+        let b = Bandit::new(0.0, 7);
+        let f = feats(1000.0, 8.0);
+        for _ in 0..100 {
+            let r = b.route(&f, Format::Csr);
+            assert_eq!(r, RouteChoice::chosen(Format::Csr));
+        }
+        assert_eq!(b.buckets(), 0, "no state may be created at rate 0");
+    }
+
+    #[test]
+    fn live_annealing_pauses_and_resumes_exploration() {
+        let b = Bandit::new(1.0, 5);
+        let f = feats(700.0, 5.0);
+        assert!(b.route(&f, Format::Csr).explored);
+        b.set_explore_rate(0.0);
+        assert_eq!(b.explore_rate(), 0.0);
+        for _ in 0..50 {
+            assert!(!b.route(&f, Format::Csr).explored, "paused bandit must not explore");
+        }
+        b.set_explore_rate(1.0);
+        assert!(b.route(&f, Format::Csr).explored);
+    }
+
+    #[test]
+    fn explores_at_roughly_the_configured_rate() {
+        let b = Bandit::new(0.25, 42);
+        let f = feats(5000.0, 12.0);
+        let explored = (0..4000).filter(|_| b.route(&f, Format::Csr).explored).count();
+        assert!(
+            (800..1200).contains(&explored),
+            "~25% of 4000 dispatches should explore, got {explored}"
+        );
+    }
+
+    #[test]
+    fn exploration_is_count_balanced_across_alternative_arms() {
+        let b = Bandit::new(1.0, 3);
+        let f = feats(2000.0, 6.0);
+        for _ in 0..99 {
+            let r = b.route(&f, Format::Csr);
+            assert!(r.explored);
+            assert_ne!(r.format, Format::Csr, "exploration must pick a non-default arm");
+        }
+        let arms = b.arms(&f);
+        assert_eq!(arms[Format::Csr.class_id()].pulls, 0);
+        for fmt in [Format::Ell, Format::Bell, Format::Sell] {
+            assert_eq!(arms[fmt.class_id()].pulls, 33, "99 pulls split evenly");
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let f = feats(300.0, 4.0);
+        let run = |seed| {
+            let b = Bandit::new(0.5, seed);
+            (0..64).map(|_| b.route(&f, Format::Ell)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(9), run(9));
+        assert_ne!(run(9), run(10), "different seeds give a different schedule");
+    }
+
+    #[test]
+    fn observe_tracks_running_mean() {
+        let b = Bandit::new(0.1, 1);
+        let f = feats(100.0, 2.0);
+        for v in [2.0, 4.0, 6.0] {
+            b.observe(&f, Format::Sell, v);
+        }
+        let arm = b.arms(&f)[Format::Sell.class_id()];
+        assert_eq!(arm.observations, 3);
+        assert!((arm.mean_objective - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn buckets_separate_scales_but_group_similar_matrices() {
+        assert_eq!(bucket_of(&feats(1000.0, 8.0)), bucket_of(&feats(1020.0, 8.5)));
+        assert_ne!(bucket_of(&feats(1000.0, 8.0)), bucket_of(&feats(1_000_000.0, 8.0)));
+        assert_ne!(bucket_of(&feats(1000.0, 2.0)), bucket_of(&feats(1000.0, 200.0)));
+    }
+}

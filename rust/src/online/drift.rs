@@ -1,0 +1,264 @@
+//! Feature-distribution drift detection over the serving traffic.
+//!
+//! The retrain cadence alone reacts to drift only after `retrain_every`
+//! more requests; this detector pulls the trigger early. It watches the
+//! eight Table-2 features (log-scaled, like the models see them) of
+//! every served dispatch: the first `window` observations after a
+//! (re)base become the reference distribution, and a sliding window of
+//! the most recent `window` observations is compared against it with a
+//! standardized mean-shift test per feature. Any feature drifting more
+//! than `threshold` reference standard deviations flags the whole
+//! detector, which the online loop converts into an immediate retrain
+//! and a `rebase` (the new traffic mix becomes the new normal).
+
+use crate::features::{Features, FEATURE_NAMES};
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+const DIMS: usize = FEATURE_NAMES.len();
+
+/// Detector tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftConfig {
+    /// Observations per window (reference and current).
+    pub window: usize,
+    /// Standardized mean-shift (in reference std-devs) that counts as
+    /// drift.
+    pub threshold: f64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig { window: 64, threshold: 4.0 }
+    }
+}
+
+/// Snapshot of the detector, surfaced through `PoolStats`.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftStatus {
+    /// True while the current window sits shifted away from reference.
+    pub drifted: bool,
+    /// Largest standardized per-feature shift seen in the last test.
+    pub max_shift: f64,
+    /// Name of the feature with the largest shift (Table-2 name).
+    pub feature: &'static str,
+    /// False until the reference window has filled; no tests run before
+    /// that.
+    pub reference_full: bool,
+}
+
+impl std::fmt::Display for DriftStatus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if !self.reference_full {
+            write!(f, "warming up")
+        } else if self.drifted {
+            write!(f, "DRIFTED ({} shifted {:.1} sigma)", self.feature, self.max_shift)
+        } else {
+            write!(f, "stable (max {:.1} sigma on {})", self.max_shift, self.feature)
+        }
+    }
+}
+
+struct DriftState {
+    reference: Vec<[f64; DIMS]>,
+    /// Per-feature (mean, sigma) of the reference window, computed once
+    /// when it fills (and at rebase) — the serving path must not redo
+    /// O(window x DIMS) passes per dispatch under this mutex.
+    ref_stats: Option<[(f64, f64); DIMS]>,
+    current: VecDeque<[f64; DIMS]>,
+    /// Incrementally maintained per-feature sums of `current`.
+    cur_sum: [f64; DIMS],
+    drifted: bool,
+    max_shift: f64,
+    max_feature: usize,
+}
+
+/// Per-feature (mean, effective sigma) of a filled window. Constant
+/// reference features (a single-matrix warmup) get a scale-relative
+/// floor instead of sigma ~ 0, so any real change still registers
+/// without dividing by zero.
+fn window_stats(window: &[[f64; DIMS]]) -> [(f64, f64); DIMS] {
+    let n = window.len() as f64;
+    std::array::from_fn(|d| {
+        let mean: f64 = window.iter().map(|v| v[d]).sum::<f64>() / n;
+        let var: f64 = window.iter().map(|v| (v[d] - mean) * (v[d] - mean)).sum::<f64>() / n;
+        let sigma = var.sqrt().max(0.05 * mean.abs()).max(1e-9);
+        (mean, sigma)
+    })
+}
+
+/// Windowed mean/variance shift detector.
+pub struct DriftDetector {
+    cfg: DriftConfig,
+    state: Mutex<DriftState>,
+}
+
+fn scaled(f: &Features) -> [f64; DIMS] {
+    let v = f.to_scaled_vec();
+    std::array::from_fn(|i| v[i])
+}
+
+impl DriftDetector {
+    pub fn new(cfg: DriftConfig) -> DriftDetector {
+        let cfg = DriftConfig { window: cfg.window.max(2), ..cfg };
+        DriftDetector {
+            cfg,
+            state: Mutex::new(DriftState {
+                reference: Vec::new(),
+                ref_stats: None,
+                current: VecDeque::new(),
+                cur_sum: [0.0; DIMS],
+                drifted: false,
+                max_shift: 0.0,
+                max_feature: 0,
+            }),
+        }
+    }
+
+    pub fn config(&self) -> DriftConfig {
+        self.cfg
+    }
+
+    /// Feed one served dispatch's features. Returns true exactly when
+    /// this observation newly tips the detector into the drifted state
+    /// (a rising edge — the early-retrain trigger).
+    pub fn add(&self, f: &Features) -> bool {
+        let x = scaled(f);
+        let mut st = self.state.lock().expect("drift lock");
+        if st.reference.len() < self.cfg.window {
+            st.reference.push(x);
+            if st.reference.len() == self.cfg.window {
+                st.ref_stats = Some(window_stats(&st.reference));
+            }
+            return false;
+        }
+        if st.current.len() == self.cfg.window {
+            let old = st.current.pop_front().expect("window full");
+            for d in 0..DIMS {
+                st.cur_sum[d] -= old[d];
+            }
+        }
+        st.current.push_back(x);
+        for d in 0..DIMS {
+            st.cur_sum[d] += x[d];
+        }
+        if st.current.len() < self.cfg.window {
+            return false;
+        }
+        // standardized mean shift per feature: O(DIMS), reference stats
+        // cached and current-window sums maintained incrementally
+        let n_cur = st.current.len() as f64;
+        let stats = st.ref_stats.expect("reference filled before current");
+        let mut max_shift = 0.0f64;
+        let mut max_feature = 0usize;
+        for (d, (mean_ref, sigma)) in stats.iter().enumerate() {
+            let mean_cur = st.cur_sum[d] / n_cur;
+            let shift = (mean_cur - mean_ref).abs() / sigma;
+            if shift > max_shift {
+                max_shift = shift;
+                max_feature = d;
+            }
+        }
+        st.max_shift = max_shift;
+        st.max_feature = max_feature;
+        let was = st.drifted;
+        st.drifted = max_shift > self.cfg.threshold;
+        st.drifted && !was
+    }
+
+    pub fn status(&self) -> DriftStatus {
+        let st = self.state.lock().expect("drift lock");
+        DriftStatus {
+            drifted: st.drifted,
+            max_shift: st.max_shift,
+            feature: FEATURE_NAMES[st.max_feature],
+            reference_full: st.reference.len() >= self.cfg.window,
+        }
+    }
+
+    /// Make the current traffic mix the new reference (called after a
+    /// retrain absorbed the shift). If the current window has not filled
+    /// yet, only the drifted flag resets.
+    pub fn rebase(&self) {
+        let mut st = self.state.lock().expect("drift lock");
+        if st.current.len() >= self.cfg.window {
+            st.reference = st.current.iter().copied().collect();
+            st.ref_stats = Some(window_stats(&st.reference));
+            st.current.clear();
+            st.cur_sum = [0.0; DIMS];
+        }
+        st.drifted = false;
+        st.max_shift = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feats(n: f64, avg: f64) -> Features {
+        Features {
+            n,
+            nnz: n * avg,
+            avg_nnz: avg,
+            var_nnz: avg,
+            ell_ratio: 0.5,
+            median: avg,
+            mode: avg,
+            std_nnz: avg.sqrt(),
+        }
+    }
+
+    #[test]
+    fn stable_traffic_never_drifts() {
+        let d = DriftDetector::new(DriftConfig { window: 8, threshold: 4.0 });
+        for i in 0..100 {
+            // mild jitter around one population
+            let newly = d.add(&feats(1000.0 + (i % 5) as f64 * 10.0, 8.0));
+            assert!(!newly);
+        }
+        let s = d.status();
+        assert!(s.reference_full);
+        assert!(!s.drifted, "{s}");
+    }
+
+    #[test]
+    fn population_shift_is_detected_once_then_rebases_clean() {
+        let d = DriftDetector::new(DriftConfig { window: 8, threshold: 4.0 });
+        for i in 0..24 {
+            assert!(!d.add(&feats(1000.0 + (i % 4) as f64, 8.0)));
+        }
+        // traffic shifts to a very different population
+        let mut edges = 0;
+        for i in 0..24 {
+            if d.add(&feats(64.0, 200.0 + (i % 3) as f64)) {
+                edges += 1;
+            }
+        }
+        assert_eq!(edges, 1, "rising edge fires exactly once");
+        assert!(d.status().drifted);
+        d.rebase();
+        let s = d.status();
+        assert!(!s.drifted, "rebase clears the flag: {s}");
+        // the shifted population is now the reference: no re-trigger
+        let mut re_edges = 0;
+        for i in 0..24 {
+            if d.add(&feats(64.0, 200.0 + (i % 3) as f64)) {
+                re_edges += 1;
+            }
+        }
+        assert_eq!(re_edges, 0, "new normal must not re-fire");
+    }
+
+    #[test]
+    fn no_test_before_reference_fills() {
+        let d = DriftDetector::new(DriftConfig { window: 16, threshold: 1.0 });
+        for _ in 0..10 {
+            assert!(!d.add(&feats(10.0, 2.0)));
+        }
+        let s = d.status();
+        assert!(!s.reference_full);
+        assert!(!s.drifted);
+        assert_eq!(format!("{s}"), "warming up");
+    }
+}

@@ -1,0 +1,370 @@
+//! `online` — closed-loop adaptive format routing for the serving pool.
+//!
+//! The run-time mode of the paper trains its format classifier once,
+//! offline, on the §5 sweep; under sustained traffic the matrix
+//! population drifts away from that corpus and a frozen router silently
+//! keeps routing to stale formats. This subsystem closes the loop
+//! (observe -> explore -> retrain -> hot-swap):
+//!
+//! * **Observe** ([`observer`]): every executed dispatch streams an
+//!   [`Observation`] — features, format actually run, measured
+//!   execution latency, gpusim-modeled energy — into a bounded
+//!   drop-oldest buffer.
+//! * **Explore** ([`bandit`]): a per-feature-bucket epsilon-greedy
+//!   explorer occasionally routes a dispatch to a *non-predicted*
+//!   format so the buffer holds counterfactual labels. Deterministic
+//!   given the seed; zero overhead (and zero RNG draws) at rate 0.
+//! * **Retrain** ([`trainer`]): a retraining task periodically fits a
+//!   fresh `RunTimeOptimizer` on offline + accumulated online evidence
+//!   through the existing `train_on_examples` path.
+//! * **Hot-swap** ([`router`]): a versioned `RwLock<Arc<_>>` handle the
+//!   shards poll with one atomic load; on an upgrade each shard
+//!   re-decides its registered matrices so they can migrate formats.
+//! * **Drift** ([`drift`]): a windowed mean/variance shift detector
+//!   over the Table-2 features triggers retraining early and is
+//!   surfaced in `PoolStats`.
+//!
+//! Exploration and retraining stay entirely off the prepared-literal
+//! hot path: the bandit is consulted once per *dispatch* (not per
+//! request), observations are one `Mutex` push per dispatch, and
+//! retrains run either on a background thread or inline on the shard
+//! *between* dispatches — never under a request's execution.
+
+pub mod bandit;
+pub mod drift;
+pub mod observer;
+pub mod router;
+pub mod trainer;
+
+pub use bandit::{Bandit, RouteChoice};
+pub use drift::{DriftConfig, DriftDetector, DriftStatus};
+pub use observer::{Observation, Observer};
+pub use router::SwapRouter;
+pub use trainer::Trainer;
+
+use crate::coordinator::RunTimeOptimizer;
+use crate::features::Features;
+use crate::gpusim::Objective;
+use crate::sparse::Format;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex, Weak};
+
+/// Tuning for the closed loop.
+#[derive(Debug, Clone)]
+pub struct OnlineConfig {
+    /// Fraction of dispatches routed to a non-predicted format arm
+    /// (0 disables exploration entirely — bit-identical to a frozen
+    /// pool).
+    pub explore_rate: f64,
+    /// Retrain after this many newly observed *requests* (a coalesced
+    /// dispatch counts its batch size). 0 disables retraining; drift
+    /// can still be *observed* but never triggers.
+    pub retrain_every: u64,
+    /// Seed for the exploration schedule.
+    pub seed: u64,
+    /// Observation ring capacity (the retraining window).
+    pub buffer_cap: usize,
+    /// Drift detector tuning.
+    pub drift: DriftConfig,
+    /// Run retrains on a dedicated background thread instead of inline
+    /// on the shard that crossed the threshold. Background mode keeps
+    /// serving latency flat during a retrain at the cost of a
+    /// nondeterministic swap point; tests use inline mode.
+    pub background: bool,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> Self {
+        OnlineConfig {
+            explore_rate: 0.05,
+            retrain_every: 0,
+            seed: 0xC10_5ED,
+            buffer_cap: 4096,
+            drift: DriftConfig::default(),
+            background: false,
+        }
+    }
+}
+
+/// The closed-loop state shared by the pool's shards and the trainer.
+pub struct Online {
+    cfg: OnlineConfig,
+    objective: Objective,
+    /// The hot-swappable router handle (shards poll its version).
+    pub router: Arc<SwapRouter>,
+    bandit: Bandit,
+    observer: Observer,
+    drift: DriftDetector,
+    trainer: Option<Trainer>,
+    /// Serializes retrains (threshold crossings race across shards).
+    retrain_lock: Mutex<()>,
+    /// Observation total at the last retrain (cadence bookkeeping).
+    last_retrain_total: AtomicU64,
+    retrains: AtomicU64,
+    /// Nudge channel to the background trainer thread (None inline).
+    nudge: Mutex<Option<Sender<()>>>,
+}
+
+impl Online {
+    /// Build the loop around an initial router. Pass a [`Trainer`] to
+    /// enable retraining; `None` gives an explore/observe-only loop
+    /// (the buffer still fills, e.g. for offline analysis).
+    pub fn start(
+        cfg: OnlineConfig,
+        initial: Arc<RunTimeOptimizer>,
+        objective: Objective,
+        trainer: Option<Trainer>,
+    ) -> Arc<Online> {
+        let online = Arc::new(Online {
+            bandit: Bandit::new(cfg.explore_rate, cfg.seed),
+            observer: Observer::new(cfg.buffer_cap),
+            drift: DriftDetector::new(cfg.drift),
+            router: Arc::new(SwapRouter::new(initial)),
+            objective,
+            trainer,
+            retrain_lock: Mutex::new(()),
+            last_retrain_total: AtomicU64::new(0),
+            retrains: AtomicU64::new(0),
+            nudge: Mutex::new(None),
+            cfg,
+        });
+        if online.cfg.background && online.retraining_enabled() {
+            let (tx, rx) = channel::<()>();
+            *online.nudge.lock().expect("nudge lock") = Some(tx);
+            let weak: Weak<Online> = Arc::downgrade(&online);
+            std::thread::Builder::new()
+                .name("online-trainer".into())
+                .spawn(move || {
+                    // Exits when every pool/user handle is gone: the
+                    // senders live inside `Online`, the thread holds
+                    // only a Weak, so `recv` errors out on drop.
+                    while rx.recv().is_ok() {
+                        while rx.try_recv().is_ok() {} // collapse queued nudges
+                        let Some(o) = weak.upgrade() else { break };
+                        o.retrain_if_due();
+                    }
+                })
+                .expect("spawn online trainer");
+        }
+        online
+    }
+
+    pub fn config(&self) -> &OnlineConfig {
+        &self.cfg
+    }
+
+    pub fn objective(&self) -> Objective {
+        self.objective
+    }
+
+    fn retraining_enabled(&self) -> bool {
+        self.trainer.is_some() && self.cfg.retrain_every > 0
+    }
+
+    /// Route one dispatch (shard hot path): the router's decision, or
+    /// an exploration arm at the configured rate.
+    pub fn route(&self, feats: &Features, decided: Format) -> RouteChoice {
+        self.bandit.route(feats, decided)
+    }
+
+    /// Current exploration rate (live value, not the configured one).
+    pub fn explore_rate(&self) -> f64 {
+        self.bandit.explore_rate()
+    }
+
+    /// Anneal (or pause, with 0) exploration on the live pool. The
+    /// observation/retrain loop keeps running either way.
+    pub fn set_explore_rate(&self, rate: f64) {
+        self.bandit.set_explore_rate(rate);
+    }
+
+    /// Feed back one executed dispatch. May trigger a retrain (inline
+    /// or via the background thread) when the cadence threshold is
+    /// crossed or the drift detector fires.
+    pub fn observe(&self, obs: Observation) {
+        let value = match self.objective {
+            Objective::Latency => obs.measured_latency_s,
+            _ => self.objective.value(&obs.modeled),
+        };
+        self.bandit.observe(&obs.features, obs.format, value);
+        let newly_drifted = self.drift.add(&obs.features);
+        self.observer.record(obs);
+        if !self.retraining_enabled() {
+            return;
+        }
+        if self.due(newly_drifted) {
+            if self.cfg.background {
+                if let Some(tx) = &*self.nudge.lock().expect("nudge lock") {
+                    let _ = tx.send(());
+                }
+            } else {
+                self.retrain_if_due();
+            }
+        }
+    }
+
+    /// Cadence check: enough new requests since the last retrain, or an
+    /// unabsorbed drift flag (the detector stays drifted until a
+    /// retrain rebases it, so this is safe to re-evaluate).
+    fn due(&self, newly_drifted: bool) -> bool {
+        let last = self.last_retrain_total.load(Ordering::Acquire);
+        let since = self.observer.total().saturating_sub(last);
+        since >= self.cfg.retrain_every || newly_drifted || self.drift.status().drifted
+    }
+
+    /// Retrain on the current buffer snapshot and hot-swap the router.
+    /// Returns the new router version, or `None` when there is no
+    /// trainer or nothing observed yet. Safe to call from tests/CLI at
+    /// any time; concurrent calls serialize.
+    pub fn retrain_now(&self) -> Option<u64> {
+        self.retrain_inner(true)
+    }
+
+    /// Like [`Self::retrain_now`], but for the cadence path: when
+    /// several shards cross the threshold together, the first one takes
+    /// the lock and retrains; the rest must NOT convoy behind it (an
+    /// inline retrain is a full model refit), so a contended try_lock
+    /// returns immediately — the in-flight retrain is already servicing
+    /// this threshold crossing. A shard that does win the lock re-checks
+    /// the cadence, catching the just-reset counter.
+    fn retrain_if_due(&self) -> Option<u64> {
+        self.retrain_inner(false)
+    }
+
+    fn retrain_inner(&self, force: bool) -> Option<u64> {
+        let trainer = self.trainer.as_ref()?;
+        let _guard = if force {
+            self.retrain_lock.lock().expect("retrain lock")
+        } else {
+            match self.retrain_lock.try_lock() {
+                Ok(guard) => guard,
+                Err(std::sync::TryLockError::WouldBlock) => return None,
+                Err(std::sync::TryLockError::Poisoned(_)) => panic!("retrain lock poisoned"),
+            }
+        };
+        if !force && !self.due(false) {
+            return None;
+        }
+        let total = self.observer.total();
+        let obs = self.observer.snapshot();
+        if obs.is_empty() {
+            return None;
+        }
+        let next = trainer.retrain(&obs);
+        self.last_retrain_total.store(total, Ordering::Release);
+        self.retrains.fetch_add(1, Ordering::Relaxed);
+        self.drift.rebase();
+        Some(self.router.install(Arc::new(next)))
+    }
+
+    /// Completed retrains.
+    pub fn retrains(&self) -> u64 {
+        self.retrains.load(Ordering::Relaxed)
+    }
+
+    /// Total requests observed (batch-weighted: a coalesced dispatch
+    /// counts its batch size — the same unit as `retrain_every`).
+    pub fn observed_requests(&self) -> u64 {
+        self.observer.total()
+    }
+
+    pub fn drift_status(&self) -> DriftStatus {
+        self.drift.status()
+    }
+
+    /// Exploration stats for a feature vector's bucket (debug aid).
+    pub fn arms(&self, feats: &Features) -> [bandit::ArmStats; bandit::N_FORMATS] {
+        self.bandit.arms(feats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::testutil::toy_setup;
+    use std::time::Duration;
+
+    fn obs_for(coo: &crate::sparse::Coo, format: Format, energy: f64) -> Observation {
+        let feats = crate::features::extract_coo(coo);
+        Observation {
+            matrix_id: 0,
+            features: feats,
+            format,
+            explored: false,
+            requests: 1,
+            measured_latency_s: 1e-6,
+            modeled: crate::gpusim::Measurement {
+                latency_s: 1e-6,
+                energy_j: energy,
+                avg_power_w: 1.0,
+                mflops_per_watt: 1.0 / energy,
+            },
+        }
+    }
+
+    #[test]
+    fn observe_only_loop_never_retrains() {
+        let (router, _, _) = toy_setup(&["rim"], Objective::Energy);
+        let online = Online::start(
+            OnlineConfig { retrain_every: 2, ..Default::default() },
+            Arc::new(router),
+            Objective::Energy,
+            None, // no trainer
+        );
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        for _ in 0..10 {
+            online.observe(obs_for(&coo, Format::Csr, 1e-4));
+        }
+        assert_eq!(online.retrains(), 0);
+        assert_eq!(online.router.version(), 1);
+        assert_eq!(online.observed_requests(), 10);
+        assert!(online.retrain_now().is_none());
+    }
+
+    #[test]
+    fn inline_cadence_retrains_and_bumps_version() {
+        let (router, ds, overhead) = toy_setup(&["rim", "eu-2005"], Objective::Energy);
+        let trainer = Trainer::new(ds, Objective::Energy, overhead, "GTX1650m-Turing");
+        let online = Online::start(
+            OnlineConfig { retrain_every: 4, background: false, ..Default::default() },
+            Arc::new(router),
+            Objective::Energy,
+            Some(trainer),
+        );
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        for _ in 0..4 {
+            online.observe(obs_for(&coo, Format::Csr, 1e-4));
+        }
+        assert_eq!(online.retrains(), 1, "4th observation crosses the cadence");
+        assert_eq!(online.router.version(), 2);
+        for _ in 0..3 {
+            online.observe(obs_for(&coo, Format::Csr, 1e-4));
+        }
+        assert_eq!(online.retrains(), 1, "cadence counts from the last retrain");
+        online.observe(obs_for(&coo, Format::Csr, 1e-4));
+        assert_eq!(online.retrains(), 2);
+    }
+
+    #[test]
+    fn background_mode_retrains_off_thread() {
+        let (router, ds, overhead) = toy_setup(&["rim"], Objective::Energy);
+        let trainer = Trainer::new(ds, Objective::Energy, overhead, "GTX1650m-Turing");
+        let online = Online::start(
+            OnlineConfig { retrain_every: 2, background: true, ..Default::default() },
+            Arc::new(router),
+            Objective::Energy,
+            Some(trainer),
+        );
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        for _ in 0..2 {
+            online.observe(obs_for(&coo, Format::Csr, 1e-4));
+        }
+        assert!(
+            online.router.wait_for_version(2, Duration::from_secs(30)),
+            "background retrain must land"
+        );
+        assert!(online.retrains() >= 1);
+    }
+}

@@ -1,0 +1,357 @@
+//! Streaming observation buffer: the feedback path of the closed loop.
+//!
+//! Every executed dispatch lands here as an [`Observation`]: the
+//! matrix's Table-2 features, the format the dispatch actually ran in
+//! (chosen or explored), the measured per-request execution latency,
+//! and the gpusim-modeled `Measurement` for that (matrix, format) at
+//! the serving knobs — the stand-in for the paper's §6.3 power sensor.
+//! The buffer is a bounded ring (drop-oldest), so a long-running pool
+//! retrains on a sliding window of recent traffic rather than its whole
+//! history — which is exactly what makes retraining track drift.
+//!
+//! [`to_training`] turns a buffer snapshot into the two artifacts the
+//! existing `train_on_examples` path consumes: per-feature-vector
+//! [`Example`]s (best observed format = the classification label) and
+//! synthetic [`Record`]s that teach the per-format value regressors the
+//! observed objective levels of the drifted population.
+
+use crate::dataset::labels::{arch_feature, Example};
+use crate::dataset::Record;
+use crate::features::Features;
+use crate::gpusim::{KernelConfig, Measurement, MemConfig, Objective};
+use crate::sparse::Format;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Compile knobs the serving path models (and therefore the knobs the
+/// synthetic online records claim): mid TB size, no register-cap
+/// pressure, default carve-out — the shard's telemetry assumption.
+pub const MODEL_TB_SIZE: u32 = 256;
+pub const MODEL_MAXRREGCOUNT: u32 = 64;
+
+const N_FORMATS: usize = Format::ALL.len();
+
+/// The kernel configuration the serving energy model assumes for
+/// `format` (one point of the offline sweep, so synthetic records mix
+/// cleanly into the training dataset).
+pub fn model_config(format: Format) -> KernelConfig {
+    KernelConfig {
+        format,
+        tb_size: MODEL_TB_SIZE,
+        maxrregcount: MODEL_MAXRREGCOUNT,
+        mem: MemConfig::Default,
+    }
+}
+
+/// One served dispatch, as the trainer sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct Observation {
+    pub matrix_id: u64,
+    pub features: Features,
+    /// Format the dispatch executed in.
+    pub format: Format,
+    /// True when the bandit routed this dispatch off the predicted path.
+    pub explored: bool,
+    /// Requests coalesced into the dispatch (>= 1). Weights the label
+    /// aggregation and the retrain cadence, which counts *requests*.
+    pub requests: u64,
+    /// Measured wall-clock execution time per request in the dispatch
+    /// (seconds; excludes queue wait, so it is a kernel-cost label).
+    pub measured_latency_s: f64,
+    /// gpusim-modeled objectives for this (matrix, format) at the
+    /// serving knobs ([`model_config`]).
+    pub modeled: Measurement,
+}
+
+/// Bounded drop-oldest observation ring shared by all shards.
+pub struct Observer {
+    cap: usize,
+    buf: Mutex<VecDeque<Observation>>,
+    /// Total *requests* ever observed (drops included; a coalesced
+    /// dispatch counts its batch size) — the retrain cadence counts
+    /// against this, not the ring occupancy.
+    total: AtomicU64,
+}
+
+impl Observer {
+    pub fn new(cap: usize) -> Observer {
+        let cap = cap.max(1);
+        Observer {
+            cap,
+            buf: Mutex::new(VecDeque::with_capacity(cap.min(1024))),
+            total: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn record(&self, obs: Observation) {
+        let weight = obs.requests.max(1);
+        let mut buf = self.buf.lock().expect("observer lock");
+        if buf.len() == self.cap {
+            buf.pop_front();
+        }
+        buf.push_back(obs);
+        self.total.fetch_add(weight, Ordering::Relaxed);
+    }
+
+    /// Requests ever observed (monotone).
+    pub fn total(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Observations currently buffered.
+    pub fn len(&self) -> usize {
+        self.buf.lock().expect("observer lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy out the current window (the trainer works on a snapshot so
+    /// shards never block on a retrain).
+    pub fn snapshot(&self) -> Vec<Observation> {
+        self.buf.lock().expect("observer lock").iter().copied().collect()
+    }
+}
+
+/// Stable key for "the same feature vector": grouping unit for label
+/// derivation (one serving matrix = one exact feature vector, so exact
+/// grouping compares formats on identical inputs).
+pub fn feature_key(f: &Features) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in f.to_vec() {
+        h ^= v.to_bits();
+        h = h.wrapping_mul(0x100_0000_01b3);
+        h ^= h >> 29;
+    }
+    h
+}
+
+/// What a buffer snapshot contributes to the next retrain.
+pub struct TrainingDelta {
+    /// One example per feature vector observed under >= 2 formats,
+    /// labeled with the best observed format for the objective.
+    pub examples: Vec<Example>,
+    /// One synthetic record per (feature vector, format) with the mean
+    /// observed/modeled measurement — value-regressor training data.
+    pub records: Vec<Record>,
+}
+
+struct FormatAgg {
+    count: u64,
+    latency_s: f64,
+    energy_j: f64,
+    avg_power_w: f64,
+    mflops_per_watt: f64,
+}
+
+/// Aggregate a snapshot into retraining artifacts.
+///
+/// The objective value per (feature vector, format) is taken from the
+/// mean measurement: measured wall latency for `Objective::Latency`
+/// (the serving truth), the gpusim model for the energy-family
+/// objectives (the paper's sensor stand-in).
+pub fn to_training(obs: &[Observation], objective: Objective, arch: &str) -> TrainingDelta {
+    // (feature_key) -> (features, per-format aggregates); insertion
+    // order kept so retraining is deterministic.
+    let mut groups: Vec<(u64, Features, [Option<FormatAgg>; N_FORMATS])> = Vec::new();
+    for o in obs {
+        let key = feature_key(&o.features);
+        let idx = match groups.iter().position(|(k, _, _)| *k == key) {
+            Some(i) => i,
+            None => {
+                groups.push((key, o.features, std::array::from_fn(|_| None)));
+                groups.len() - 1
+            }
+        };
+        let slot = &mut groups[idx].2;
+        let agg = slot[o.format.class_id()].get_or_insert(FormatAgg {
+            count: 0,
+            latency_s: 0.0,
+            energy_j: 0.0,
+            avg_power_w: 0.0,
+            mflops_per_watt: 0.0,
+        });
+        let w = o.requests.max(1);
+        agg.count += w;
+        let wf = w as f64;
+        agg.latency_s += o.measured_latency_s * wf;
+        agg.energy_j += o.modeled.energy_j * wf;
+        agg.avg_power_w += o.modeled.avg_power_w * wf;
+        agg.mflops_per_watt += o.modeled.mflops_per_watt * wf;
+    }
+
+    let mut examples = Vec::new();
+    let mut records = Vec::new();
+    for (key, feats, aggs) in &groups {
+        let name = format!("online-{key:016x}");
+        let mut best: Option<(Format, f64)> = None;
+        let mut csr_value: Option<f64> = None;
+        let mut n_formats = 0usize;
+        for fmt in Format::ALL {
+            let Some(agg) = &aggs[fmt.class_id()] else { continue };
+            n_formats += 1;
+            let k = agg.count as f64;
+            let mean = Measurement {
+                latency_s: agg.latency_s / k,
+                energy_j: agg.energy_j / k,
+                avg_power_w: agg.avg_power_w / k,
+                mflops_per_watt: agg.mflops_per_watt / k,
+            };
+            records.push(Record {
+                matrix: name.clone(),
+                arch: arch.to_string(),
+                config: model_config(fmt),
+                features: *feats,
+                m: mean,
+            });
+            let value = objective.value(&mean);
+            if fmt == Format::Csr {
+                csr_value = Some(value);
+            }
+            if best.is_none_or(|(_, bv)| objective.better(value, bv)) {
+                best = Some((fmt, value));
+            }
+        }
+        // A single-format group still feeds the value models (records
+        // above) but carries no comparative label: skip the example.
+        if n_formats < 2 {
+            continue;
+        }
+        let (best_fmt, best_value) = best.expect("n_formats >= 2");
+        let mut fv = feats.to_scaled_vec();
+        fv.push(arch_feature(arch));
+        let baseline = KernelConfig::default_baseline();
+        examples.push(Example {
+            matrix: name,
+            arch: arch.to_string(),
+            features: fv,
+            tb_class: baseline.tb_class(),
+            reg_class: baseline.reg_class(),
+            mem_class: baseline.mem.class_id(),
+            format_class: best_fmt.class_id(),
+            best_compile: csr_value.unwrap_or(best_value),
+            best_format_value: best_value,
+            default_value: csr_value.unwrap_or(best_value),
+        });
+    }
+    TrainingDelta { examples, records }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feats(n: f64) -> Features {
+        Features {
+            n,
+            nnz: n * 4.0,
+            avg_nnz: 4.0,
+            var_nnz: 1.0,
+            ell_ratio: 0.8,
+            median: 4.0,
+            mode: 4.0,
+            std_nnz: 1.0,
+        }
+    }
+
+    fn obs(n: f64, format: Format, energy: f64, lat: f64) -> Observation {
+        Observation {
+            matrix_id: n as u64,
+            features: feats(n),
+            format,
+            explored: format != Format::Csr,
+            requests: 1,
+            measured_latency_s: lat,
+            modeled: Measurement {
+                latency_s: lat,
+                energy_j: energy,
+                avg_power_w: 10.0,
+                mflops_per_watt: 1.0 / energy,
+            },
+        }
+    }
+
+    #[test]
+    fn coalesced_dispatches_weight_the_total_and_the_means() {
+        let o = Observer::new(16);
+        let mut batched = obs(1.0, Format::Csr, 2.0, 2e-6);
+        batched.requests = 7;
+        o.record(batched);
+        o.record(obs(1.0, Format::Csr, 9.0, 9e-6));
+        assert_eq!(o.total(), 8, "a 7-request dispatch counts 7 toward the cadence");
+        let delta = to_training(&o.snapshot(), Objective::Energy, "GTX1650m-Turing");
+        assert_eq!(delta.records.len(), 1);
+        // weighted mean: (7*2 + 1*9) / 8
+        assert!((delta.records[0].m.energy_j - 23.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_total_is_monotone() {
+        let o = Observer::new(4);
+        for i in 0..10 {
+            o.record(obs(i as f64 + 1.0, Format::Csr, 1.0, 1e-6));
+        }
+        assert_eq!(o.len(), 4);
+        assert_eq!(o.total(), 10);
+        let snap = o.snapshot();
+        assert_eq!(snap.len(), 4);
+        assert_eq!(snap[0].matrix_id, 7, "oldest entries dropped first");
+        assert!(!o.is_empty());
+        assert_eq!(o.capacity(), 4);
+    }
+
+    #[test]
+    fn feature_key_distinguishes_vectors() {
+        assert_eq!(feature_key(&feats(100.0)), feature_key(&feats(100.0)));
+        assert_ne!(feature_key(&feats(100.0)), feature_key(&feats(101.0)));
+    }
+
+    #[test]
+    fn training_delta_labels_best_format_and_skips_single_format_groups() {
+        // matrix A: CSR costly, ELL cheap (two observations each);
+        // matrix B: CSR only -> record but no example.
+        let buf = vec![
+            obs(100.0, Format::Csr, 4.0, 4e-6),
+            obs(100.0, Format::Ell, 1.0, 1e-6),
+            obs(100.0, Format::Csr, 6.0, 6e-6),
+            obs(100.0, Format::Ell, 3.0, 3e-6),
+            obs(200.0, Format::Csr, 2.0, 2e-6),
+        ];
+        let delta = to_training(&buf, Objective::Energy, "GTX1650m-Turing");
+        assert_eq!(delta.examples.len(), 1);
+        let e = &delta.examples[0];
+        assert_eq!(e.format_class, Format::Ell.class_id());
+        assert_eq!(e.features.len(), 9, "8 scaled features + arch indicator");
+        assert!((e.default_value - 5.0).abs() < 1e-12, "CSR mean energy");
+        assert!((e.best_format_value - 2.0).abs() < 1e-12, "ELL mean energy");
+        // records: A/csr, A/ell, B/csr
+        assert_eq!(delta.records.len(), 3);
+        assert!(delta.records.iter().all(|r| r.matrix.starts_with("online-")));
+        assert!(delta.records.iter().all(|r| r.config.tb_size == MODEL_TB_SIZE));
+        let a_csr = delta
+            .records
+            .iter()
+            .find(|r| r.config.format == Format::Csr && (r.features.n - 100.0).abs() < 1e-9)
+            .unwrap();
+        assert!((a_csr.m.energy_j - 5.0).abs() < 1e-12);
+        assert!((a_csr.m.latency_s - 5e-6).abs() < 1e-18, "latency label is the measured mean");
+    }
+
+    #[test]
+    fn latency_objective_uses_measured_latency_for_labels() {
+        // modeled energies favor CSR, measured latencies favor SELL: the
+        // latency objective must label SELL.
+        let mut a = obs(50.0, Format::Csr, 1.0, 9e-6);
+        a.modeled.latency_s = 1e-7; // modeled says CSR is fast; measurement disagrees
+        let b = obs(50.0, Format::Sell, 5.0, 2e-6);
+        let delta = to_training(&[a, b], Objective::Latency, "GTX1650m-Turing");
+        assert_eq!(delta.examples.len(), 1);
+        assert_eq!(delta.examples[0].format_class, Format::Sell.class_id());
+    }
+}

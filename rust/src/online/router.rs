@@ -1,0 +1,164 @@
+//! Versioned, atomically hot-swappable router handle.
+//!
+//! The serving shards must never block on (or even notice) a retrain:
+//! they keep a locally cached `Arc<RunTimeOptimizer>` plus the version
+//! it came from, poll [`SwapRouter::version`] (one relaxed-ish atomic
+//! load) at the top of their message loop, and reload through the
+//! `RwLock` only when the version moved. [`SwapRouter::install`] is the
+//! single writer path: swap the `Arc`, bump the version, wake waiters.
+//! In-flight dispatches keep executing against the old `Arc` they
+//! already cloned — a swap can never tear a decision in half.
+
+use crate::coordinator::RunTimeOptimizer;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+/// Shared handle to the current router, swappable at run time.
+pub struct SwapRouter {
+    inner: RwLock<Arc<RunTimeOptimizer>>,
+    /// Monotone version counter; starts at 1 for the initial router.
+    version: AtomicU64,
+    /// Mirror of `version` for blocking waiters ([`Self::wait_for_version`]).
+    waiters: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl SwapRouter {
+    pub fn new(initial: Arc<RunTimeOptimizer>) -> SwapRouter {
+        SwapRouter {
+            inner: RwLock::new(initial),
+            version: AtomicU64::new(1),
+            waiters: Mutex::new(1),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Current router version (1 = the initial, never-swapped router).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Snapshot the current router together with its version. The pair
+    /// is consistent: version reads happen under the same read lock the
+    /// `Arc` is cloned under, and installs bump the counter while
+    /// holding the write lock.
+    pub fn load(&self) -> (Arc<RunTimeOptimizer>, u64) {
+        let guard = self.inner.read().expect("router lock");
+        (guard.clone(), self.version.load(Ordering::Acquire))
+    }
+
+    /// Atomically replace the router; returns the new version. Shards
+    /// notice on their next message and re-decide registered matrices.
+    pub fn install(&self, next: Arc<RunTimeOptimizer>) -> u64 {
+        let new_version = {
+            let mut guard = self.inner.write().expect("router lock");
+            *guard = next;
+            self.version.fetch_add(1, Ordering::AcqRel) + 1
+        };
+        // Monotone max: concurrent installs release the write lock in
+        // version order but can reach this mutex out of order, and the
+        // mirror must never move backwards or waiters would miss an
+        // already-installed version.
+        let mut w = self.waiters.lock().expect("router waiters lock");
+        *w = (*w).max(new_version);
+        self.cv.notify_all();
+        new_version
+    }
+
+    /// Block until the router version reaches `at_least` (true) or the
+    /// timeout expires (false). Deterministic test aid for asserting a
+    /// background retrain landed.
+    pub fn wait_for_version(&self, at_least: u64, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut w = self.waiters.lock().expect("router waiters lock");
+        while *w < at_least {
+            let Some(remaining) = deadline.checked_duration_since(Instant::now()) else {
+                return false;
+            };
+            let (guard, res) = self.cv.wait_timeout(w, remaining).expect("router waiters lock");
+            w = guard;
+            if res.timed_out() && *w < at_least {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::Objective;
+    use crate::testutil::toy_router;
+
+    fn router() -> Arc<RunTimeOptimizer> {
+        Arc::new(toy_router(&["rim"], Objective::Latency))
+    }
+
+    #[test]
+    fn starts_at_version_one_and_install_bumps() {
+        let swap = SwapRouter::new(router());
+        assert_eq!(swap.version(), 1);
+        let (_, v) = swap.load();
+        assert_eq!(v, 1);
+        assert_eq!(swap.install(router()), 2);
+        assert_eq!(swap.version(), 2);
+        let (_, v) = swap.load();
+        assert_eq!(v, 2);
+    }
+
+    #[test]
+    fn load_returns_the_installed_router() {
+        let first = router();
+        let swap = SwapRouter::new(first.clone());
+        let (got, _) = swap.load();
+        assert!(Arc::ptr_eq(&got, &first));
+        let second = router();
+        swap.install(second.clone());
+        let (got, _) = swap.load();
+        assert!(Arc::ptr_eq(&got, &second));
+    }
+
+    #[test]
+    fn wait_for_version_sees_past_and_future_installs() {
+        let swap = Arc::new(SwapRouter::new(router()));
+        assert!(swap.wait_for_version(1, Duration::ZERO), "already satisfied");
+        assert!(!swap.wait_for_version(2, Duration::from_millis(10)), "times out");
+        let bg = swap.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            bg.install(router());
+        });
+        assert!(swap.wait_for_version(2, Duration::from_secs(5)));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn concurrent_loads_during_install_never_tear() {
+        let swap = Arc::new(SwapRouter::new(router()));
+        // train the replacement routers up front so the install loop is
+        // tight enough to actually race the readers
+        let replacements: Vec<_> = (0..3).map(|_| router()).collect();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let swap = &swap;
+                s.spawn(move || {
+                    for _ in 0..200 {
+                        let (r, v) = swap.load();
+                        // the pair must be usable: version monotone, Arc live
+                        assert!(v >= 1);
+                        let _ = r.objective;
+                    }
+                });
+            }
+            let swap = &swap;
+            s.spawn(move || {
+                for r in replacements {
+                    swap.install(r);
+                }
+            });
+        });
+        assert_eq!(swap.version(), 4);
+    }
+}

@@ -1,0 +1,133 @@
+//! Background retraining: offline sweep + online observations -> a
+//! fresh `RunTimeOptimizer` for the hot-swap router.
+//!
+//! A `Trainer` owns everything a retrain needs and nothing the serving
+//! hot path touches: the offline dataset, the offline examples (derived
+//! once), the objective, and a clone of the overhead model. Each
+//! [`Trainer::retrain`] call folds a snapshot of the observation buffer
+//! into that base — online [`Example`]s re-label the format classifier
+//! for the observed feature vectors, online [`Record`]s teach the
+//! per-format value regressors the observed objective levels — and fits
+//! a fresh optimizer through the exact same
+//! `RunTimeOptimizer::train_on_examples` path the offline mode uses.
+
+use super::observer::{self, Observation};
+use crate::coordinator::{OverheadModel, RunTimeOptimizer};
+use crate::dataset::labels::{self, Example};
+use crate::dataset::Dataset;
+use crate::gpusim::Objective;
+
+/// Retraining recipe: base corpus + objective + overhead estimate.
+pub struct Trainer {
+    base: Dataset,
+    offline_examples: Vec<Example>,
+    objective: Objective,
+    overhead: OverheadModel,
+    arch_name: String,
+}
+
+impl Trainer {
+    /// `arch_name` is the deployment profile's name (it tags synthetic
+    /// online records so they slot into the dataset's (matrix, arch)
+    /// slicing, and selects the arch indicator feature).
+    pub fn new(
+        base: Dataset,
+        objective: Objective,
+        overhead: OverheadModel,
+        arch_name: &str,
+    ) -> Trainer {
+        let offline_examples = labels::examples(&base, objective);
+        Trainer { base, offline_examples, objective, overhead, arch_name: arch_name.to_string() }
+    }
+
+    pub fn objective(&self) -> Objective {
+        self.objective
+    }
+
+    /// Offline examples the base dataset contributes to every retrain.
+    pub fn offline_examples(&self) -> usize {
+        self.offline_examples.len()
+    }
+
+    /// Fit a fresh router on offline + online evidence. Pure function
+    /// of its inputs: same buffer snapshot, same router. The deployment
+    /// arch indicator is reapplied, so a Pascal-deployed pool does not
+    /// hot-swap in a router that predicts for Turing.
+    pub fn retrain(&self, obs: &[Observation]) -> RunTimeOptimizer {
+        let delta = observer::to_training(obs, self.objective, &self.arch_name);
+        let mut ds = self.base.clone();
+        ds.records.extend(delta.records);
+        let mut examples = self.offline_examples.clone();
+        examples.extend(delta.examples);
+        RunTimeOptimizer::train_on_examples(&ds, &examples, self.objective, self.overhead.clone())
+            .for_arch(&self.arch_name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{build, BuildOptions};
+    use crate::features;
+    use crate::gen;
+    use crate::gpusim::Measurement;
+    use crate::sparse::convert::coo_to_csr;
+    use crate::sparse::Format;
+    use crate::testutil::toy_setup;
+
+    /// Observations claiming ELL beats CSR on energy for one matrix.
+    fn counterfactual_obs(coo: &crate::sparse::Coo) -> Vec<Observation> {
+        let feats = features::extract_csr(&coo_to_csr(coo));
+        let mk = |format: Format, energy: f64| Observation {
+            matrix_id: 1,
+            features: feats,
+            format,
+            explored: format != Format::Csr,
+            requests: 1,
+            measured_latency_s: 1e-6,
+            modeled: Measurement {
+                latency_s: 1e-6,
+                energy_j: energy,
+                avg_power_w: 10.0,
+                mflops_per_watt: 1.0 / energy,
+            },
+        };
+        vec![mk(Format::Csr, 8e-4), mk(Format::Ell, 1e-5), mk(Format::Csr, 8e-4)]
+    }
+
+    #[test]
+    fn retrain_learns_online_labels_and_values() {
+        let (_, ds, overhead) = toy_setup(&["eu-2005", "wiki-talk-temporal"], Objective::Energy);
+        let trainer = Trainer::new(ds, Objective::Energy, overhead, "GTX1650m-Turing");
+        assert!(trainer.offline_examples() > 0);
+        assert_eq!(trainer.objective(), Objective::Energy);
+
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        let obs = counterfactual_obs(&coo);
+        let next = trainer.retrain(&obs);
+        // the retrained tree memorizes the online feature vector's label
+        let d = next.decide(&coo, 1_000_000_000_000);
+        assert_eq!(d.predicted_format, Format::Ell, "online label must win: {d:?}");
+        // ...and the value models reproduce the observed objective gap,
+        // so the amortization gate opens for a long-lived matrix
+        assert!(
+            d.est_best < d.est_default,
+            "online records must teach the value gap: {d:?}"
+        );
+        assert!(d.convert, "huge iteration budget + real gap must convert: {d:?}");
+    }
+
+    #[test]
+    fn retrain_without_observations_reproduces_offline_decisions() {
+        let (offline, ds, overhead) = toy_setup(&["rim", "eu-2005"], Objective::EnergyEff);
+        let trainer = Trainer::new(ds, Objective::EnergyEff, overhead, "GTX1650m-Turing");
+        let retrained = trainer.retrain(&[]);
+        for name in ["rim", "eu-2005"] {
+            let coo = gen::by_name(name).unwrap().generate(1);
+            let a = offline.decide(&coo, 1000);
+            let b = retrained.decide(&coo, 1000);
+            assert_eq!(a.predicted_format, b.predicted_format, "{name}");
+            assert_eq!(a.convert, b.convert, "{name}");
+        }
+    }
+}

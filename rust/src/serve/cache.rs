@@ -11,14 +11,17 @@
 //! O(capacity) per touch, which is exact and cache-friendly at serving
 //! cache sizes (tens of entries), and has no dependency footprint.
 
-/// A tiny exact LRU keyed by matrix id.
-pub struct Lru<V> {
+/// A tiny exact LRU. The key is generic (`Copy + PartialEq`): the
+/// serving shards key by `(matrix id, format class)` so a bandit-
+/// explored conversion caches alongside the router-chosen one without
+/// displacing it under the same key.
+pub struct Lru<K: Copy + PartialEq, V> {
     cap: usize,
     /// Recency order: least-recently-used first, most-recent last.
-    entries: Vec<(u64, V)>,
+    entries: Vec<(K, V)>,
 }
 
-impl<V> Lru<V> {
+impl<K: Copy + PartialEq, V> Lru<K, V> {
     /// Create with `cap` slots (at least 1).
     pub fn new(cap: usize) -> Self {
         Lru { cap: cap.max(1), entries: Vec::new() }
@@ -36,12 +39,12 @@ impl<V> Lru<V> {
         self.entries.is_empty()
     }
 
-    pub fn contains(&self, key: u64) -> bool {
+    pub fn contains(&self, key: K) -> bool {
         self.entries.iter().any(|(k, _)| *k == key)
     }
 
     /// Look up and mark as most-recently used.
-    pub fn get(&mut self, key: u64) -> Option<&V> {
+    pub fn get(&mut self, key: K) -> Option<&V> {
         if self.touch(key) {
             self.mru().map(|(_, v)| v)
         } else {
@@ -53,7 +56,7 @@ impl<V> Lru<V> {
     /// hit. Paired with [`Lru::mru`], this lets a caller do a single
     /// scan for the get-or-insert pattern (a plain `get` can't span an
     /// insert under the borrow checker).
-    pub fn touch(&mut self, key: u64) -> bool {
+    pub fn touch(&mut self, key: K) -> bool {
         match self.entries.iter().position(|(k, _)| *k == key) {
             Some(idx) => {
                 self.entries[idx..].rotate_left(1);
@@ -65,14 +68,14 @@ impl<V> Lru<V> {
 
     /// The most-recently-used entry (what [`Lru::touch`] or
     /// [`Lru::insert`] just placed).
-    pub fn mru(&self) -> Option<&(u64, V)> {
+    pub fn mru(&self) -> Option<&(K, V)> {
         self.entries.last()
     }
 
     /// Insert (or replace) a value, marking it most-recently used.
     /// Returns the evicted least-recently-used entry, if the insert
     /// pushed the cache past capacity.
-    pub fn insert(&mut self, key: u64, value: V) -> Option<(u64, V)> {
+    pub fn insert(&mut self, key: K, value: V) -> Option<(K, V)> {
         if let Some(idx) = self.entries.iter().position(|(k, _)| *k == key) {
             self.entries.remove(idx);
             self.entries.push((key, value));
@@ -88,8 +91,15 @@ impl<V> Lru<V> {
     }
 
     /// Keys in recency order (least-recently-used first); test aid.
-    pub fn keys(&self) -> Vec<u64> {
+    pub fn keys(&self) -> Vec<K> {
         self.entries.iter().map(|(k, _)| *k).collect()
+    }
+
+    /// Drop every entry whose key fails the predicate, preserving
+    /// recency order of the survivors. Used on re-registration: all of
+    /// a matrix's per-format entries must go, not just the chosen one.
+    pub fn retain(&mut self, mut keep: impl FnMut(&K) -> bool) {
+        self.entries.retain(|(k, _)| keep(k));
     }
 }
 
@@ -143,6 +153,32 @@ mod tests {
         assert_eq!(lru.mru(), Some(&(1, 10)));
         assert_eq!(lru.keys(), vec![2, 1]);
         assert!(!lru.touch(9));
+    }
+
+    #[test]
+    fn retain_drops_matching_entries_and_keeps_order() {
+        let mut lru: Lru<(u64, u8), i32> = Lru::new(8);
+        lru.insert((1, 0), 10);
+        lru.insert((2, 0), 20);
+        lru.insert((1, 1), 11);
+        lru.insert((2, 3), 23);
+        lru.retain(|k| k.0 != 1);
+        assert_eq!(lru.keys(), vec![(2, 0), (2, 3)]);
+        assert!(!lru.contains((1, 0)) && !lru.contains((1, 1)));
+    }
+
+    #[test]
+    fn composite_keys_keep_per_format_entries_distinct() {
+        // the shard's keying: (matrix id, format class)
+        let mut lru: Lru<(u64, u8), &str> = Lru::new(3);
+        lru.insert((7, 0), "csr");
+        lru.insert((7, 1), "ell");
+        lru.insert((9, 0), "csr");
+        assert_eq!(lru.len(), 3);
+        assert_eq!(lru.get((7, 0)), Some(&"csr"));
+        assert_eq!(lru.get((7, 1)), Some(&"ell"));
+        let evicted = lru.insert((9, 3), "sell").expect("capacity 3");
+        assert_eq!(evicted.0, (9, 0), "LRU entry goes first");
     }
 
     #[test]

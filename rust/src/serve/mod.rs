@@ -20,9 +20,16 @@
 //!   retained, so a post-eviction request re-converts instead of
 //!   failing. The old per-worker `HashMap` grew without bound.
 //! * **Telemetry** ([`telemetry`]): a registry of per-matrix atomics —
-//!   request counts, log-scale latency histograms (p50/p90/p99), and
-//!   modeled energy/power per request from the `gpusim` analytic model —
+//!   request counts, log-scale latency histograms (p50/p90/p99), routing
+//!   decisions by format (chosen vs. explored), and modeled
+//!   energy/power per request from the `gpusim` analytic model —
 //!   snapshotted lock-free-ish through [`Pool::stats`].
+//! * **Closed loop** (optional, [`crate::online`]): a pool started with
+//!   [`Pool::start_adaptive`] consults an exploration bandit per
+//!   dispatch, streams observations to a retraining task, and migrates
+//!   registered matrices when the versioned router hot-swaps. A pool
+//!   started with [`Pool::start`] routes through the same handle but
+//!   never swaps it — and is bit-identical to the pre-loop engine.
 //!
 //! ```no_run
 //! # use auto_spmv::serve::{BackendSpec, Pool, PoolConfig};
@@ -54,9 +61,10 @@ use std::time::Duration;
 #[derive(Debug, Clone)]
 pub struct Response {
     pub y: Vec<f32>,
-    /// Format the product was executed in.
+    /// Format the product was executed in (an explored dispatch
+    /// reports the exploration arm, not the registered format).
     pub format_used: Format,
-    /// Whether the router converted away from the CSR default.
+    /// Whether the product executed in a converted (non-CSR) form.
     pub converted: bool,
     /// End-to-end service time (queue wait + batch execution).
     pub service_time: Duration,

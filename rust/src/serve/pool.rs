@@ -7,6 +7,13 @@
 //! coalesce them into multi-vector `spmv_batch` dispatches and keeps
 //! conversion/prepared-literal state shard-local with no cross-thread
 //! synchronization on the execute path.
+//!
+//! Every pool routes through a versioned [`SwapRouter`]; a pool started
+//! with [`Pool::start`] simply never swaps it (version stays 1).
+//! [`Pool::start_adaptive`] attaches a [`crate::online::Online`] loop:
+//! the shards then consult its exploration bandit per dispatch, feed
+//! observations back, and migrate registered matrices when a retrain
+//! hot-swaps the router.
 
 use super::backend::BackendSpec;
 use super::batch::Job;
@@ -15,6 +22,7 @@ use super::telemetry::{MatrixStats, Telemetry};
 use super::Response;
 use crate::coordinator::RunTimeOptimizer;
 use crate::gpusim::{turing_gtx1650m, GpuArch};
+use crate::online::{DriftStatus, Online, SwapRouter};
 use crate::sparse::convert::ConvertParams;
 use crate::sparse::{Coo, Format};
 use anyhow::{anyhow, Result};
@@ -78,6 +86,19 @@ pub struct PoolStats {
     pub backends: Vec<&'static str>,
     /// Total modeled energy across all matrices (joules).
     pub total_energy_j: f64,
+    /// Router version (1 until the first hot-swap).
+    pub router_version: u64,
+    /// Completed retrains of the online loop (0 when frozen).
+    pub retrains: u64,
+    /// Registered matrices migrated to a new format on a hot-swap.
+    pub migrations: u64,
+    /// Requests the exploration bandit routed off the predicted path.
+    pub explored_requests: u64,
+    /// Requests observed by the feedback loop (batch-weighted, the
+    /// retrain-cadence unit; None when frozen).
+    pub observed_requests: Option<u64>,
+    /// Drift detector status (None when frozen).
+    pub drift: Option<DriftStatus>,
     pub per_matrix: Vec<MatrixStats>,
 }
 
@@ -110,12 +131,31 @@ impl PoolStats {
 pub struct Pool {
     shards: Vec<Shard>,
     telemetry: Arc<Telemetry>,
+    router: Arc<SwapRouter>,
+    online: Option<Arc<Online>>,
 }
 
 impl Pool {
-    /// Start the worker shards. `router` decides formats (shared
-    /// read-only); each shard builds its own backend from `backend`.
+    /// Start the worker shards with a frozen router (never swapped);
+    /// each shard builds its own backend from `backend`.
     pub fn start(router: Arc<RunTimeOptimizer>, backend: BackendSpec, cfg: PoolConfig) -> Pool {
+        Pool::start_inner(Arc::new(SwapRouter::new(router)), None, backend, cfg)
+    }
+
+    /// Start the pool with the closed loop attached: decisions flow
+    /// through `online`'s hot-swappable router, dispatches may explore,
+    /// observations feed its trainer, and registered matrices re-decide
+    /// (migrate) on every router upgrade.
+    pub fn start_adaptive(online: Arc<Online>, backend: BackendSpec, cfg: PoolConfig) -> Pool {
+        Pool::start_inner(online.router.clone(), Some(online), backend, cfg)
+    }
+
+    fn start_inner(
+        router: Arc<SwapRouter>,
+        online: Option<Arc<Online>>,
+        backend: BackendSpec,
+        cfg: PoolConfig,
+    ) -> Pool {
         let telemetry = Arc::new(Telemetry::new());
         let shard_cfg = ShardCfg {
             convert: cfg.convert,
@@ -126,14 +166,32 @@ impl Pool {
         };
         let shards = (0..cfg.workers.max(1))
             .map(|i| {
-                Shard::spawn(i, router.clone(), backend.clone(), shard_cfg.clone(), telemetry.clone())
+                Shard::spawn(
+                    i,
+                    router.clone(),
+                    online.clone(),
+                    backend.clone(),
+                    shard_cfg.clone(),
+                    telemetry.clone(),
+                )
             })
             .collect();
-        Pool { shards, telemetry }
+        Pool { shards, telemetry, router, online }
     }
 
     pub fn workers(&self) -> usize {
         self.shards.len()
+    }
+
+    /// The versioned router handle (install a new optimizer through it
+    /// to hot-swap; shards migrate on their next message).
+    pub fn router(&self) -> &Arc<SwapRouter> {
+        &self.router
+    }
+
+    /// The attached online loop, if this pool is adaptive.
+    pub fn online(&self) -> Option<&Arc<Online>> {
+        self.online.as_ref()
     }
 
     /// The shard owning a matrix id (splitmix64-style spread so
@@ -172,8 +230,9 @@ impl Pool {
         Ok(rx)
     }
 
-    /// Snapshot pool-wide counters, per-matrix latency quantiles and the
-    /// modeled energy ledger.
+    /// Snapshot pool-wide counters, per-matrix latency quantiles, the
+    /// modeled energy ledger, and the online loop's state (router
+    /// version, retrains, exploration, drift).
     pub fn stats(&self) -> Result<PoolStats> {
         let mut registered = 0;
         let mut cached = 0;
@@ -202,6 +261,12 @@ impl Pool {
             workers: self.shards.len(),
             backends,
             total_energy_j: per_matrix.iter().map(|m| m.energy_j).sum(),
+            router_version: self.router.version(),
+            retrains: self.online.as_ref().map_or(0, |o| o.retrains()),
+            migrations: t.migrations.load(Ordering::Relaxed),
+            explored_requests: t.explored_requests.load(Ordering::Relaxed),
+            observed_requests: self.online.as_ref().map(|o| o.observed_requests()),
+            drift: self.online.as_ref().map(|o| o.drift_status()),
             per_matrix,
         })
     }
@@ -310,13 +375,35 @@ mod tests {
         assert_eq!(m.id, 1);
         assert_eq!(m.requests, 6);
         assert!(m.format.is_some());
-        assert!(m.p50_us > 0.0 && m.p50_us <= m.p90_us && m.p90_us <= m.p99_us);
+        let (p50, p90, p99) = (m.p50_us.unwrap(), m.p90_us.unwrap(), m.p99_us.unwrap());
+        assert!(p50 > 0.0 && p50 <= p90 && p90 <= p99);
         assert!(m.energy_j > 0.0, "modeled energy must be non-zero: {m:?}");
         assert!(m.model_power_w > 0.0);
         assert!(stats.total_energy_j >= m.energy_j);
         assert!(stats.total_service() >= stats.max_service());
         assert_eq!(stats.backends, vec!["native", "native"]);
         assert_eq!(stats.backend_summary(), "native");
+        // decision accounting: all 6 requests rode the chosen format
+        let fmt = m.format.unwrap();
+        assert_eq!(m.chosen_by_format[fmt.class_id()], 6);
+        assert_eq!(m.explored(), 0);
+    }
+
+    #[test]
+    fn frozen_pool_reports_no_online_state() {
+        let pool = pool_with(test_router(), 1, 0);
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        let n = coo.n_cols;
+        pool.register(1, coo, 10).unwrap();
+        pool.product(1, input(n, 0)).unwrap();
+        let stats = pool.stats().unwrap();
+        assert_eq!(stats.router_version, 1, "frozen pools never swap");
+        assert_eq!(stats.retrains, 0);
+        assert_eq!(stats.migrations, 0);
+        assert_eq!(stats.explored_requests, 0);
+        assert!(stats.observed_requests.is_none());
+        assert!(stats.drift.is_none());
+        assert!(pool.online().is_none());
     }
 
     #[test]
@@ -379,6 +466,47 @@ mod tests {
         assert!(stats.reconversions > 0, "post-eviction products must re-convert: {stats:?}");
         assert_eq!(stats.cached_matrices, 2, "cache must stay at capacity");
         assert_eq!(stats.registered_matrices, 3);
+    }
+
+    #[test]
+    fn manual_hot_swap_migrates_and_counts() {
+        // install a router trained for a different objective: the pool
+        // must keep serving bit-identically (formats may migrate).
+        let pool = pool_with(test_router(), 1, 0);
+        let names = ["rim", "eu-2005", "shar_te2-b3"];
+        let mats: Vec<Coo> = names.iter().map(|n| gen::by_name(n).unwrap().generate(1)).collect();
+        let csrs: Vec<_> = mats.iter().map(coo_to_csr).collect();
+        for (id, coo) in mats.iter().enumerate() {
+            pool.register(id as u64, coo.clone(), 10_000).unwrap();
+        }
+        let v = pool
+            .router()
+            .install(Arc::new(toy_router(&["rim", "eu-2005", "shar_te2-b3"], Objective::Latency)));
+        assert_eq!(v, 2);
+        for (id, csr) in csrs.iter().enumerate() {
+            let x = input(csr.n_cols, id);
+            let resp = pool.product(id as u64, x.clone()).unwrap();
+            // bit-identical to a single product in whatever format the
+            // (possibly migrated) matrix now serves in
+            let m = crate::sparse::convert::convert(
+                csr,
+                resp.format_used,
+                PoolConfig::default().convert,
+            );
+            assert_eq!(
+                resp.y,
+                m.as_spmv().spmv_alloc(&x),
+                "post-swap product must stay correct"
+            );
+        }
+        let stats = pool.stats().unwrap();
+        assert_eq!(stats.router_version, 2);
+        assert_eq!(stats.requests, 3);
+        // migrations is workload-dependent (0 if both routers agree),
+        // but per-matrix formats must match what responses reported.
+        for m in &stats.per_matrix {
+            assert!(m.format.is_some());
+        }
     }
 
     #[test]

@@ -4,17 +4,29 @@
 //! [`Backend`] from the shared [`BackendSpec`]. A shard owns the
 //! matrices hashed to it: the registry keeps the CSR source plus the
 //! router's decision, while the (potentially much larger) converted
-//! forms live in a capacity-bounded LRU — a post-eviction request
-//! re-converts from the retained source. Product requests are coalesced
-//! by [`super::batch`] and dispatched through `spmv_batch`.
+//! forms live in a capacity-bounded LRU keyed by `(matrix, format)` — a
+//! post-eviction request re-converts from the retained source. Product
+//! requests are coalesced by [`super::batch`] and dispatched through
+//! `spmv_batch`.
+//!
+//! When the pool runs with the closed loop attached
+//! ([`crate::online`]), three things happen here and nowhere else:
+//! the shard polls the hot-swap router's version at the top of its
+//! message loop and **re-decides** every registered matrix on an
+//! upgrade (format migration); each dispatch consults the exploration
+//! bandit, which may route it to a non-predicted format (converted on
+//! demand into the same LRU); and every executed dispatch feeds an
+//! [`Observation`] back to the trainer. All of it sits between
+//! dispatches — never under a request's execution.
 
 use super::backend::{Backend, BackendSpec};
 use super::batch::{collect_batch, group_by_matrix, Job};
 use super::cache::Lru;
 use super::telemetry::{MatrixTelemetry, Telemetry};
 use super::Response;
-use crate::coordinator::RunTimeOptimizer;
-use crate::gpusim::{simulate, GpuArch, KernelConfig, MemConfig};
+use crate::features::Features;
+use crate::gpusim::{simulate, GpuArch, Measurement};
+use crate::online::{Observation, Online, RouteChoice, SwapRouter};
 use crate::runtime::pjrt::PreparedSpmv;
 use crate::sparse::convert::{self, AnyFormat, ConvertParams};
 use crate::sparse::{Coo, Csr, Format, SpMv};
@@ -24,12 +36,7 @@ use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
-
-/// Compile knobs assumed by the telemetry energy model (the artifact
-/// default: mid TB size, no register cap pressure, default carve-out).
-const MODEL_TB_SIZE: u32 = 256;
-const MODEL_MAXRREGCOUNT: u32 = 64;
+use std::time::{Duration, Instant};
 
 /// Messages a shard understands.
 pub(crate) enum ShardMsg {
@@ -68,7 +75,8 @@ pub(crate) struct Shard {
 impl Shard {
     pub(crate) fn spawn(
         index: usize,
-        router: Arc<RunTimeOptimizer>,
+        router: Arc<SwapRouter>,
+        online: Option<Arc<Online>>,
         backend: BackendSpec,
         cfg: ShardCfg,
         telemetry: Arc<Telemetry>,
@@ -86,7 +94,7 @@ impl Shard {
                         Backend::Native
                     }
                 };
-                worker_loop(rx, router, backend, cfg, telemetry)
+                worker_loop(rx, router, online, backend, cfg, telemetry)
             })
             .expect("spawn serving shard");
         Shard { tx, join: Some(join) }
@@ -102,32 +110,48 @@ impl Shard {
 }
 
 /// A registered matrix: retained CSR source + routing decision + the
-/// telemetry handle resolved once so the hot path is lock-free.
+/// telemetry handle resolved once so the hot path is lock-free. The
+/// features and iteration hint stay around for re-decisions on router
+/// hot-swaps (step 1 of §5.3 is measured once, at registration).
 struct Registered {
     csr: Csr,
+    features: Features,
+    iterations_hint: u64,
     format: Format,
     converted: bool,
     tele: Arc<MatrixTelemetry>,
-    energy_per_req_j: f64,
 }
 
-/// A cache entry: the converted form, plus PJRT-marshalled literals
-/// when the backend compiles artifacts.
+/// Conversion-cache key: matrix id + format class, so an explored
+/// format's conversion caches alongside the chosen one.
+type CacheKey = (u64, u8);
+
+fn cache_key(id: u64, format: Format) -> CacheKey {
+    (id, format.class_id() as u8)
+}
+
+/// A cache entry: the converted form, PJRT-marshalled literals when the
+/// backend compiles artifacts, and the gpusim-modeled per-product
+/// measurement for THIS format (the telemetry/observation energy
+/// source).
 struct CachedMatrix {
     matrix: AnyFormat,
     prepared: Option<PreparedSpmv>,
+    model: Measurement,
 }
 
 fn worker_loop(
     rx: Receiver<ShardMsg>,
-    router: Arc<RunTimeOptimizer>,
+    router: Arc<SwapRouter>,
+    online: Option<Arc<Online>>,
     mut backend: Backend,
     cfg: ShardCfg,
     telemetry: Arc<Telemetry>,
 ) {
     let mut registry: HashMap<u64, Registered> = HashMap::new();
-    let mut cache: Lru<CachedMatrix> = Lru::new(cfg.cache_capacity);
+    let mut cache: Lru<CacheKey, CachedMatrix> = Lru::new(cfg.cache_capacity);
     let mut backlog: VecDeque<ShardMsg> = VecDeque::new();
+    let (mut cur_router, mut cur_version) = router.load();
     loop {
         let msg = match backlog.pop_front() {
             Some(m) => m,
@@ -136,6 +160,20 @@ fn worker_loop(
                 Err(_) => break, // pool dropped
             },
         };
+        // Hot-swap check: one atomic load per message. On an upgrade,
+        // reload the router and re-decide every registered matrix so it
+        // can migrate to the format the new model prefers.
+        if router.version() != cur_version {
+            (cur_router, cur_version) = router.load();
+            re_decide_all(
+                cur_router.as_ref(),
+                &mut backend,
+                &cfg,
+                &telemetry,
+                &mut registry,
+                &mut cache,
+            );
+        }
         match msg {
             ShardMsg::Shutdown => break,
             ShardMsg::Status(reply) => {
@@ -147,7 +185,7 @@ fn worker_loop(
             }
             ShardMsg::Register { id, coo, iterations_hint, ack } => {
                 let result = do_register(
-                    &router,
+                    cur_router.as_ref(),
                     &mut backend,
                     &cfg,
                     &telemetry,
@@ -162,36 +200,54 @@ fn worker_loop(
             ShardMsg::Product(job) => {
                 let batch = collect_batch(job, &rx, &mut backlog, cfg.batch_window, cfg.max_batch);
                 for (id, jobs) in group_by_matrix(batch) {
-                    execute_group(&mut backend, &cfg, &telemetry, &registry, &mut cache, id, jobs);
+                    execute_group(
+                        &mut backend,
+                        &online,
+                        &cfg,
+                        &telemetry,
+                        &registry,
+                        &mut cache,
+                        id,
+                        jobs,
+                    );
                 }
             }
         }
     }
 }
 
-/// Convert (and, on PJRT, marshal) a registered matrix for execution.
+/// Convert (and, on PJRT, marshal) a matrix for execution in `format`,
+/// and model one product's cost in that format — the §6.3 power-sensor
+/// stand-in the telemetry and the online observations both read.
 fn build_cached(
     backend: &mut Backend,
     csr: &Csr,
     format: Format,
-    params: ConvertParams,
+    cfg: &ShardCfg,
 ) -> Result<CachedMatrix> {
-    let matrix = convert::convert(csr, format, params);
+    let matrix = convert::convert(csr, format, cfg.convert);
     let prepared = match backend {
         Backend::Pjrt(engine) => Some(engine.prepare(&matrix, None)?),
         Backend::Native => None,
     };
-    Ok(CachedMatrix { matrix, prepared })
+    let model = if csr.vals.is_empty() {
+        Measurement { latency_s: 0.0, energy_j: 0.0, avg_power_w: 0.0, mflops_per_watt: 0.0 }
+    } else {
+        let prof = crate::gpusim::profile(csr, format, cfg.convert);
+        let knobs = crate::online::observer::model_config(format);
+        simulate(&cfg.arch, &prof, &knobs).0
+    };
+    Ok(CachedMatrix { matrix, prepared, model })
 }
 
 #[allow(clippy::too_many_arguments)] // worker-local state is deliberately split for borrow granularity
 fn do_register(
-    router: &RunTimeOptimizer,
+    router: &crate::coordinator::RunTimeOptimizer,
     backend: &mut Backend,
     cfg: &ShardCfg,
     telemetry: &Telemetry,
     registry: &mut HashMap<u64, Registered>,
-    cache: &mut Lru<CachedMatrix>,
+    cache: &mut Lru<CacheKey, CachedMatrix>,
     id: u64,
     coo: Coo,
     iterations_hint: u64,
@@ -204,49 +260,152 @@ fn do_register(
         (Format::Csr, false)
     };
 
-    // Model the per-product power/energy once, at registration — the
-    // gpusim stand-in for the paper's power sensor (§6.3), threaded
-    // through the request path via telemetry.
-    let (model_power_w, model_energy_j) = if csr.vals.is_empty() {
-        (0.0, 0.0)
-    } else {
-        let prof = crate::gpusim::profile(&csr, format, cfg.convert);
-        let knobs = KernelConfig {
-            format,
-            tb_size: MODEL_TB_SIZE,
-            maxrregcount: MODEL_MAXRREGCOUNT,
-            mem: MemConfig::Default,
-        };
-        let (m, _) = simulate(&cfg.arch, &prof, &knobs);
-        (m.avg_power_w, m.energy_j)
-    };
-    // Build (convert + marshal) BEFORE any telemetry side effects, so a
-    // failed registration leaves no phantom stats row or counter bump.
-    let entry = build_cached(backend, &csr, format, cfg.convert)?;
+    // Build (convert + model + marshal) BEFORE any telemetry side
+    // effects, so a failed registration leaves no phantom stats row or
+    // counter bump.
+    let entry = build_cached(backend, &csr, format, cfg)?;
+
+    // Re-registration replaces the matrix wholesale: every per-format
+    // entry of the old matrix must go, or a later explored/migrated
+    // dispatch could serve the OLD matrix's converted form.
+    cache.retain(|k| k.0 != id);
 
     let tele = telemetry.handle(id);
-    tele.configure(format, model_power_w, model_energy_j);
+    tele.configure(format, entry.model.avg_power_w);
     if converted {
         telemetry.totals.conversions.fetch_add(1, Ordering::Relaxed);
     }
-    if cache.insert(id, entry).is_some() {
+    if cache.insert(cache_key(id, format), entry).is_some() {
         telemetry.totals.evictions.fetch_add(1, Ordering::Relaxed);
     }
     registry.insert(
         id,
-        Registered { csr, format, converted, tele, energy_per_req_j: model_energy_j },
+        Registered {
+            csr,
+            features: decision.features,
+            iterations_hint,
+            format,
+            converted,
+            tele,
+        },
     );
     Ok(format)
 }
 
-/// Execute one coalesced group of requests for a single matrix as ONE
-/// `spmv_batch` dispatch.
-fn execute_group(
+/// Re-run the routing decision for every registered matrix against an
+/// upgraded router (features were measured at registration, so this is
+/// steps 2–4 only). A matrix whose best format changed migrates: new
+/// conversion into the cache, telemetry reconfigured, counters bumped.
+/// A failed conversion keeps the old format — migration must never take
+/// a serving matrix down.
+fn re_decide_all(
+    router: &crate::coordinator::RunTimeOptimizer,
     backend: &mut Backend,
     cfg: &ShardCfg,
     telemetry: &Telemetry,
+    registry: &mut HashMap<u64, Registered>,
+    cache: &mut Lru<CacheKey, CachedMatrix>,
+) {
+    for (id, reg) in registry.iter_mut() {
+        let decision =
+            router.decide_with_features(reg.features, Duration::ZERO, reg.iterations_hint);
+        let (format, converted) = if decision.convert {
+            (decision.predicted_format, true)
+        } else {
+            (Format::Csr, false)
+        };
+        if format == reg.format {
+            continue;
+        }
+        // The target form may already be cached (the common convergence
+        // path: exploration built it before the retrain picked it) —
+        // reuse it instead of re-converting and re-simulating.
+        let key = cache_key(*id, format);
+        let model = if cache.touch(key) {
+            match cache.mru() {
+                Some((k, entry)) if *k == key => Some(entry.model),
+                _ => unreachable!("touch just made {key:?} the MRU entry"),
+            }
+        } else {
+            match build_cached(backend, &reg.csr, format, cfg) {
+                Ok(entry) => {
+                    let model = entry.model;
+                    if cache.insert(key, entry).is_some() {
+                        telemetry.totals.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Some(model)
+                }
+                Err(e) => {
+                    eprintln!(
+                        "serve: keeping matrix {id} in {} (migration to {format} failed: {e:#})",
+                        reg.format
+                    );
+                    None
+                }
+            }
+        };
+        if let Some(model) = model {
+            reg.tele.configure(format, model.avg_power_w);
+            telemetry.totals.migrations.fetch_add(1, Ordering::Relaxed);
+            if converted && !reg.converted {
+                telemetry.totals.conversions.fetch_add(1, Ordering::Relaxed);
+            }
+            reg.format = format;
+            reg.converted = converted;
+        }
+    }
+}
+
+/// Make `(id, route.format)` the cache's MRU entry, converting from the
+/// retained CSR source on a miss. Chosen-path misses are evictions
+/// being repaired and count as reconversions; explored-path misses are
+/// counterfactual builds and a failure is logged here (the caller falls
+/// back to the chosen format instead of failing clients).
+fn ensure_cached(
+    backend: &mut Backend,
+    cfg: &ShardCfg,
+    telemetry: &Telemetry,
+    cache: &mut Lru<CacheKey, CachedMatrix>,
+    reg: &Registered,
+    id: u64,
+    route: RouteChoice,
+) -> Result<()> {
+    let key = cache_key(id, route.format);
+    if cache.touch(key) {
+        return Ok(());
+    }
+    if !route.explored {
+        telemetry.totals.reconversions.fetch_add(1, Ordering::Relaxed);
+    }
+    match build_cached(backend, &reg.csr, route.format, cfg) {
+        Ok(entry) => {
+            if cache.insert(key, entry).is_some() {
+                telemetry.totals.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(())
+        }
+        Err(e) => {
+            if route.explored {
+                eprintln!(
+                    "serve: exploring {} for matrix {id} failed, serving chosen {}: {e:#}",
+                    route.format, reg.format
+                );
+            }
+            Err(e)
+        }
+    }
+}
+
+/// Execute one coalesced group of requests for a single matrix as ONE
+/// `spmv_batch` dispatch.
+#[allow(clippy::too_many_arguments)] // worker-local state is deliberately split for borrow granularity
+fn execute_group(
+    backend: &mut Backend,
+    online: &Option<Arc<Online>>,
+    cfg: &ShardCfg,
+    telemetry: &Telemetry,
     registry: &HashMap<u64, Registered>,
-    cache: &mut Lru<CachedMatrix>,
+    cache: &mut Lru<CacheKey, CachedMatrix>,
     id: u64,
     jobs: Vec<Job>,
 ) {
@@ -276,32 +435,41 @@ fn execute_group(
         return;
     }
 
-    // Conversion cache: a miss here means the entry was evicted since
-    // registration — re-convert from the retained CSR source. touch +
-    // mru (instead of two `get`s) keeps the hit path at one scan.
-    if !cache.touch(id) {
-        telemetry.totals.reconversions.fetch_add(1, Ordering::Relaxed);
-        match build_cached(backend, &reg.csr, reg.format, cfg.convert) {
-            Ok(entry) => {
-                if cache.insert(id, entry).is_some() {
-                    telemetry.totals.evictions.fetch_add(1, Ordering::Relaxed);
-                }
-            }
-            Err(e) => {
-                let msg = format!("re-convert matrix {id}: {e:#}");
-                for (_, reply) in clients {
-                    let _ = reply.send(Err(anyhow!("{msg}")));
-                }
-                return;
-            }
-        }
-    }
-    let cached = match cache.mru() {
-        Some((key, entry)) if *key == id => entry,
-        _ => unreachable!("touch/insert just made matrix {id} the MRU entry"),
+    // Closed loop, step "explore": one bandit consult per DISPATCH (not
+    // per request). A frozen pool skips this entirely.
+    let mut route = match online {
+        Some(o) => o.route(&reg.features, reg.format),
+        None => RouteChoice::chosen(reg.format),
     };
 
-    // One dispatch for the whole group.
+    // Conversion cache: a miss on the chosen key means the entry was
+    // evicted since registration — re-convert from the retained CSR
+    // source. A miss on an explored key is the first (or re-) build of
+    // that counterfactual form; it shares the same LRU budget, and a
+    // FAILED counterfactual build falls back to the chosen format —
+    // exploration must never cost a client its answer. touch + mru
+    // (instead of two `get`s) keeps the hit path at one scan.
+    if route.explored && ensure_cached(backend, cfg, telemetry, cache, reg, id, route).is_err() {
+        route = RouteChoice::chosen(reg.format);
+    }
+    if !route.explored {
+        if let Err(e) = ensure_cached(backend, cfg, telemetry, cache, reg, id, route) {
+            let msg = format!("convert matrix {id} to {}: {e:#}", route.format);
+            for (_, reply) in clients {
+                let _ = reply.send(Err(anyhow!("{msg}")));
+            }
+            return;
+        }
+    }
+    let key = cache_key(id, route.format);
+    let cached = match cache.mru() {
+        Some((k, entry)) if *k == key => entry,
+        _ => unreachable!("ensure_cached just made {key:?} the MRU entry"),
+    };
+
+    // One dispatch for the whole group (timed: the execution seconds,
+    // queue wait excluded, are the online loop's latency label).
+    let exec_start = Instant::now();
     let result: Result<Vec<Vec<f32>>> = match backend {
         Backend::Native => Ok(cached.matrix.as_spmv().spmv_batch(&xs)),
         Backend::Pjrt(engine) => match &cached.prepared {
@@ -309,8 +477,10 @@ fn execute_group(
             None => xs.iter().map(|x| engine.spmv(&cached.matrix, x, None)).collect(),
         },
     };
+    let exec_s = exec_start.elapsed().as_secs_f64();
 
     let batch_size = xs.len();
+    let model = cached.model;
     match result {
         Ok(ys) => {
             let totals = &telemetry.totals;
@@ -321,17 +491,35 @@ fn execute_group(
                 totals.coalesced_batches.fetch_add(1, Ordering::Relaxed);
                 totals.batched_requests.fetch_add(batch_size as u64, Ordering::Relaxed);
             }
+            if route.explored {
+                totals.explored_requests.fetch_add(batch_size as u64, Ordering::Relaxed);
+            }
+            reg.tele.route(route.format, route.explored, batch_size as u64);
             for ((enqueued, reply), y) in clients.into_iter().zip(ys) {
                 let service_time = enqueued.elapsed();
-                reg.tele.record(service_time);
+                reg.tele.record(service_time, model.energy_j);
                 let _ = reply.send(Ok(Response {
                     y,
-                    format_used: reg.format,
-                    converted: reg.converted,
+                    format_used: route.format,
+                    converted: route.format != Format::Csr,
                     service_time,
                     batch_size,
-                    energy_j: reg.energy_per_req_j,
+                    energy_j: model.energy_j,
                 }));
+            }
+            // Closed loop, step "observe": feed the executed dispatch
+            // back. May trigger an inline retrain — which is why it
+            // runs AFTER every client got its reply.
+            if let Some(o) = online {
+                o.observe(Observation {
+                    matrix_id: id,
+                    features: reg.features,
+                    format: route.format,
+                    explored: route.explored,
+                    requests: batch_size as u64,
+                    measured_latency_s: exec_s / batch_size as f64,
+                    modeled: model,
+                });
             }
         }
         Err(e) => {

@@ -7,7 +7,9 @@
 //! request). Latencies land in a log2-bucketed histogram, so quantiles
 //! come out of 48 counters instead of an unbounded sample buffer; the
 //! energy ledger accumulates the `gpusim`-modeled joules per product
-//! (paper §6.3's objective, finally visible at serve time).
+//! (paper §6.3's objective, finally visible at serve time). Routing
+//! decisions are counted per format class, split chosen vs. explored,
+//! so the online loop's counterfactual traffic is observable.
 
 use crate::sparse::Format;
 use std::collections::HashMap;
@@ -18,6 +20,9 @@ use std::time::Duration;
 /// Log2 nanosecond buckets: bucket `b >= 1` counts latencies in
 /// `[2^(b-1), 2^b)` ns; bucket 47 tops out above ~39 hours.
 const HIST_BUCKETS: usize = 48;
+
+/// Number of format classes ([`Format::ALL`]).
+const N_FORMATS: usize = Format::ALL.len();
 
 const FORMAT_UNSET: u64 = u64::MAX;
 
@@ -45,10 +50,12 @@ pub struct MatrixTelemetry {
     hist: [AtomicU64; HIST_BUCKETS],
     /// Accumulated modeled energy (nanojoules).
     energy_nj: AtomicU64,
-    /// Modeled per-product energy (nanojoules), set at registration.
-    model_energy_per_req_nj: AtomicU64,
     /// Modeled average power draw (f64 bits), set at registration.
     model_power_w_bits: AtomicU64,
+    /// Requests dispatched per format class on the router's decision.
+    chosen: [AtomicU64; N_FORMATS],
+    /// Requests dispatched per format class by bandit exploration.
+    explored: [AtomicU64; N_FORMATS],
 }
 
 impl MatrixTelemetry {
@@ -60,29 +67,36 @@ impl MatrixTelemetry {
             lat_max_ns: AtomicU64::new(0),
             hist: std::array::from_fn(|_| AtomicU64::new(0)),
             energy_nj: AtomicU64::new(0),
-            model_energy_per_req_nj: AtomicU64::new(0),
             model_power_w_bits: AtomicU64::new(0f64.to_bits()),
+            chosen: std::array::from_fn(|_| AtomicU64::new(0)),
+            explored: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
 
-    /// Install the registration-time model: serving format plus the
-    /// simulated per-product power/energy on the deployment profile.
-    pub fn configure(&self, format: Format, model_power_w: f64, model_energy_per_req_j: f64) {
+    /// Install the registration-time (or post-migration) model: the
+    /// serving format plus the simulated power draw of one product on
+    /// the deployment profile.
+    pub fn configure(&self, format: Format, model_power_w: f64) {
         self.format_class.store(format.class_id() as u64, Ordering::Relaxed);
         self.model_power_w_bits.store(model_power_w.to_bits(), Ordering::Relaxed);
-        self.model_energy_per_req_nj
-            .store((model_energy_per_req_j * 1e9).round() as u64, Ordering::Relaxed);
     }
 
-    /// Record one served product.
-    pub fn record(&self, latency: Duration) {
+    /// Record one served product and its modeled energy. Energy is
+    /// per-request so explored dispatches charge their own format's
+    /// cost, not the registered one's.
+    pub fn record(&self, latency: Duration, energy_j: f64) {
         let ns = latency.as_nanos().min(u64::MAX as u128) as u64;
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.lat_sum_ns.fetch_add(ns, Ordering::Relaxed);
         self.lat_max_ns.fetch_max(ns, Ordering::Relaxed);
         self.hist[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
-        let per_req = self.model_energy_per_req_nj.load(Ordering::Relaxed);
-        self.energy_nj.fetch_add(per_req, Ordering::Relaxed);
+        self.energy_nj.fetch_add((energy_j * 1e9).round().max(0.0) as u64, Ordering::Relaxed);
+    }
+
+    /// Count a routing decision for `requests` coalesced products.
+    pub fn route(&self, format: Format, explored: bool, requests: u64) {
+        let side = if explored { &self.explored } else { &self.chosen };
+        side[format.class_id()].fetch_add(requests, Ordering::Relaxed);
     }
 
     fn snapshot(&self, id: u64) -> MatrixStats {
@@ -92,8 +106,10 @@ impl MatrixTelemetry {
         let class = self.format_class.load(Ordering::Relaxed);
         let max_us = self.lat_max_ns.load(Ordering::Relaxed) as f64 / 1e3;
         // Bucket representatives can overshoot the true extremum;
-        // clamping keeps `p99 <= max` in every report.
-        let q = |p: f64| quantile_us(&counts, p).min(max_us);
+        // clamping keeps `p99 <= max` in every report. Quantiles are
+        // None on an empty histogram, and tail quantiles are None on a
+        // single sample — one observation supports a median, not a p99.
+        let q = |p: f64| quantile_us(&counts, p).map(|v| v.min(max_us));
         MatrixStats {
             id,
             format: if class == FORMAT_UNSET {
@@ -104,13 +120,15 @@ impl MatrixTelemetry {
             requests,
             mean_us: if requests == 0 { 0.0 } else { sum_ns as f64 / requests as f64 / 1e3 },
             p50_us: q(0.50),
-            p90_us: q(0.90),
-            p99_us: q(0.99),
+            p90_us: if requests >= 2 { q(0.90) } else { None },
+            p99_us: if requests >= 2 { q(0.99) } else { None },
             max_us,
             total_latency: Duration::from_nanos(sum_ns),
             max_latency: Duration::from_nanos(self.lat_max_ns.load(Ordering::Relaxed)),
             energy_j: self.energy_nj.load(Ordering::Relaxed) as f64 * 1e-9,
             model_power_w: f64::from_bits(self.model_power_w_bits.load(Ordering::Relaxed)),
+            chosen_by_format: std::array::from_fn(|i| self.chosen[i].load(Ordering::Relaxed)),
+            explored_by_format: std::array::from_fn(|i| self.explored[i].load(Ordering::Relaxed)),
         }
     }
 }
@@ -122,21 +140,21 @@ impl Default for MatrixTelemetry {
 }
 
 /// Histogram quantile: the representative value of the bucket holding
-/// the `q`-th ranked sample.
-fn quantile_us(counts: &[u64], q: f64) -> f64 {
+/// the `q`-th ranked sample, or `None` on an empty histogram.
+fn quantile_us(counts: &[u64], q: f64) -> Option<f64> {
     let total: u64 = counts.iter().sum();
     if total == 0 {
-        return 0.0;
+        return None;
     }
     let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
     let mut cum = 0u64;
     for (b, c) in counts.iter().enumerate() {
         cum += c;
         if cum >= rank {
-            return bucket_rep_ns(b) / 1e3;
+            return Some(bucket_rep_ns(b) / 1e3);
         }
     }
-    bucket_rep_ns(counts.len() - 1) / 1e3
+    Some(bucket_rep_ns(counts.len() - 1) / 1e3)
 }
 
 /// One matrix's serving statistics (a [`Pool::stats`] row).
@@ -150,9 +168,11 @@ pub struct MatrixStats {
     pub format: Option<Format>,
     pub requests: u64,
     pub mean_us: f64,
-    pub p50_us: f64,
-    pub p90_us: f64,
-    pub p99_us: f64,
+    /// Latency quantiles; `None` when the histogram cannot support the
+    /// estimate (empty, or a single sample for the tail quantiles).
+    pub p50_us: Option<f64>,
+    pub p90_us: Option<f64>,
+    pub p99_us: Option<f64>,
     pub max_us: f64,
     pub total_latency: Duration,
     pub max_latency: Duration,
@@ -160,6 +180,41 @@ pub struct MatrixStats {
     pub energy_j: f64,
     /// Modeled average power of one product (watts).
     pub model_power_w: f64,
+    /// Requests dispatched per format class (`Format::ALL` order) on
+    /// the router's decision...
+    pub chosen_by_format: [u64; N_FORMATS],
+    /// ...vs. routed off-policy by the exploration bandit.
+    pub explored_by_format: [u64; N_FORMATS],
+}
+
+impl MatrixStats {
+    /// Requests served off the predicted path.
+    pub fn explored(&self) -> u64 {
+        self.explored_by_format.iter().sum()
+    }
+
+    /// Compact "fmt:count" rendering of the decision mix, explored arms
+    /// starred (report/CLI aid). Example: `ell:120 csr*:3 sell*:2`.
+    pub fn decisions(&self) -> String {
+        let mut parts = Vec::new();
+        for f in Format::ALL {
+            let c = self.chosen_by_format[f.class_id()];
+            if c > 0 {
+                parts.push(format!("{f}:{c}"));
+            }
+        }
+        for f in Format::ALL {
+            let e = self.explored_by_format[f.class_id()];
+            if e > 0 {
+                parts.push(format!("{f}*:{e}"));
+            }
+        }
+        if parts.is_empty() {
+            "-".to_string()
+        } else {
+            parts.join(" ")
+        }
+    }
 }
 
 /// Pool-wide counters (all relaxed atomics; exact under quiescence,
@@ -181,6 +236,10 @@ pub struct Counters {
     pub reconversions: AtomicU64,
     /// Conversion-cache evictions.
     pub evictions: AtomicU64,
+    /// Requests the bandit routed to a non-predicted format.
+    pub explored_requests: AtomicU64,
+    /// Registered matrices whose format changed on a router hot-swap.
+    pub migrations: AtomicU64,
 }
 
 /// The shared registry: matrix id -> telemetry handle.
@@ -245,30 +304,61 @@ mod tests {
     #[test]
     fn record_accumulates_and_quantiles_are_ordered() {
         let t = MatrixTelemetry::new();
-        t.configure(Format::Ell, 12.5, 3e-6);
+        t.configure(Format::Ell, 12.5);
         for us in [5u64, 10, 20, 40, 80, 160, 320, 640, 1280, 2560] {
-            t.record(Duration::from_micros(us));
+            t.record(Duration::from_micros(us), 3e-6);
         }
         let s = t.snapshot(7);
         assert_eq!(s.id, 7);
         assert_eq!(s.format, Some(Format::Ell));
         assert_eq!(s.requests, 10);
         assert!(s.mean_us > 0.0);
-        assert!(s.p50_us <= s.p90_us && s.p90_us <= s.p99_us, "{s:?}");
-        assert!(s.p99_us <= s.max_us, "quantiles are clamped to the observed max: {s:?}");
+        let (p50, p90, p99) = (s.p50_us.unwrap(), s.p90_us.unwrap(), s.p99_us.unwrap());
+        assert!(p50 <= p90 && p90 <= p99, "{s:?}");
+        assert!(p99 <= s.max_us, "quantiles are clamped to the observed max: {s:?}");
         assert!((s.energy_j - 10.0 * 3e-6).abs() < 1e-9);
         assert!((s.model_power_w - 12.5).abs() < 1e-12);
         assert!(s.total_latency >= s.max_latency);
     }
 
     #[test]
-    fn empty_telemetry_snapshot_is_zeroed() {
+    fn empty_telemetry_snapshot_is_zeroed_with_no_quantiles() {
         let t = MatrixTelemetry::new();
         let s = t.snapshot(0);
         assert_eq!(s.requests, 0);
         assert_eq!(s.format, None);
-        assert_eq!(s.p50_us, 0.0);
+        assert_eq!(s.p50_us, None);
+        assert_eq!(s.p90_us, None);
+        assert_eq!(s.p99_us, None);
         assert_eq!(s.energy_j, 0.0);
+        assert_eq!(s.explored(), 0);
+        assert_eq!(s.decisions(), "-");
+    }
+
+    #[test]
+    fn single_sample_supports_a_median_but_no_tail_quantiles() {
+        let t = MatrixTelemetry::new();
+        t.record(Duration::from_micros(100), 1e-6);
+        let s = t.snapshot(1);
+        assert_eq!(s.requests, 1);
+        let p50 = s.p50_us.expect("one sample is a median");
+        assert!(p50 > 0.0 && p50 <= s.max_us);
+        assert_eq!(s.p90_us, None, "a single sample cannot support p90");
+        assert_eq!(s.p99_us, None, "a single sample cannot support p99");
+    }
+
+    #[test]
+    fn route_counts_split_chosen_and_explored_per_format() {
+        let t = MatrixTelemetry::new();
+        t.route(Format::Ell, false, 10);
+        t.route(Format::Ell, false, 5);
+        t.route(Format::Csr, true, 2);
+        t.route(Format::Sell, true, 1);
+        let s = t.snapshot(3);
+        assert_eq!(s.chosen_by_format[Format::Ell.class_id()], 15);
+        assert_eq!(s.explored_by_format[Format::Csr.class_id()], 2);
+        assert_eq!(s.explored(), 3);
+        assert_eq!(s.decisions(), "ell:15 csr*:2 sell*:1");
     }
 
     #[test]
@@ -277,7 +367,7 @@ mod tests {
         let a = reg.handle(1);
         let b = reg.handle(1);
         assert!(Arc::ptr_eq(&a, &b));
-        a.record(Duration::from_micros(3));
+        a.record(Duration::from_micros(3), 0.0);
         let rows = reg.snapshot();
         assert_eq!(rows.len(), 1);
         assert_eq!(rows[0].requests, 1);
@@ -292,8 +382,8 @@ mod tests {
     fn quantile_of_uniform_histogram() {
         let mut counts = vec![0u64; HIST_BUCKETS];
         counts[10] = 50; // all samples in one bucket
-        let v = quantile_us(&counts, 0.5);
+        let v = quantile_us(&counts, 0.5).unwrap();
         assert!((v - bucket_rep_ns(10) / 1e3).abs() < 1e-12);
-        assert_eq!(quantile_us(&[0u64; HIST_BUCKETS], 0.99), 0.0);
+        assert_eq!(quantile_us(&[0u64; HIST_BUCKETS], 0.99), None);
     }
 }

@@ -86,6 +86,20 @@ pub fn toy_router(
     matrix_names: &[&str],
     objective: crate::gpusim::Objective,
 ) -> crate::coordinator::RunTimeOptimizer {
+    toy_setup(matrix_names, objective).0
+}
+
+/// [`toy_router`] plus the dataset and overhead model it was trained
+/// on — what the online-loop fixtures need (the `Trainer` retrains from
+/// the same base the initial router saw).
+pub fn toy_setup(
+    matrix_names: &[&str],
+    objective: crate::gpusim::Objective,
+) -> (
+    crate::coordinator::RunTimeOptimizer,
+    crate::dataset::Dataset,
+    crate::coordinator::OverheadModel,
+) {
     use crate::coordinator::overhead::{OverheadModel, OverheadSample};
     let ds = crate::dataset::build(&crate::dataset::BuildOptions {
         only: Some(matrix_names.iter().map(|s| s.to_string()).collect()),
@@ -100,7 +114,9 @@ pub fn toy_router(
             c_latency_s: k as f64 * 1e-3,
         })
         .collect();
-    crate::coordinator::RunTimeOptimizer::train(&ds, objective, OverheadModel::train(&samples))
+    let overhead = OverheadModel::train(&samples);
+    let router = crate::coordinator::RunTimeOptimizer::train(&ds, objective, overhead.clone());
+    (router, ds, overhead)
 }
 
 #[cfg(test)]
