@@ -161,6 +161,10 @@ fn main() -> anyhow::Result<()> {
     t.row(vec!["max (us)".into(), format!("{:.1}", lat_us[lat_us.len() - 1])]);
     t.row(vec!["dispatches".into(), stats.dispatches.to_string()]);
     t.row(vec![
+        "launches (per request)".into(),
+        format!("{} ({:.2})", stats.launches, stats.launches_per_request()),
+    ]);
+    t.row(vec![
         "coalesced batches (max size)".into(),
         format!("{} ({})", stats.coalesced_batches, stats.max_batch),
     ]);

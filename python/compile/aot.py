@@ -7,6 +7,7 @@ parser reassigns ids and round-trips cleanly (see /opt/xla-example/README).
 
 Outputs under ``--out-dir`` (default ../artifacts):
   * ``<variant>.hlo.txt``      — one HLO module per variant (spmv graph),
+  * ``spmm_<variant>.hlo.txt`` — multi-vector (batched) SpMM artifacts,
   * ``power_<variant>.hlo.txt``— power-iteration-step artifacts,
   * ``manifest.tsv``           — one row per artifact; parsed by
                                  ``rust/src/runtime/artifacts.rs``.
@@ -50,7 +51,12 @@ def input_spec(example) -> str:
 
 
 def extra_str(v: Variant) -> str:
-    return ";".join(f"{k}={val}" for k, val in v.extra) if v.extra else "-"
+    parts = [f"{k}={val}" for k, val in v.extra]
+    if v.ncols > 1:
+        # batch bucket of an SpMM artifact; parsed by artifacts.rs as
+        # ArtifactSpec::ncols()
+        parts.append(f"nc={v.ncols}")
+    return ";".join(parts) if parts else "-"
 
 
 def lower_one(build, v: Variant, out_dir: str, kind: str) -> str:
@@ -84,6 +90,12 @@ def main() -> None:
         _, example = model.build_spmv(v)
         rows.append((v, "spmv", fname, input_spec(example)))
         print(f"[{i + 1}/{len(variants)}] {fname}", file=sys.stderr)
+
+    for v in model.spmm_variants(quick=args.quick):
+        fname = lower_one(model.build_spmm, v, out_dir, "spmm")
+        _, example = model.build_spmm(v)
+        rows.append((v, "spmm", fname, input_spec(example)))
+        print(f"[spmm] {fname}", file=sys.stderr)
 
     for v in model.power_step_variants(quick=args.quick):
         fname = lower_one(model.build_power_step, v, out_dir, "power")

@@ -48,13 +48,108 @@ def _kernel_gather(d_ref, xg_ref, o_ref):
     o_ref[...] += y.reshape(o_ref.shape)
 
 
+def _kernel_spmm_resident(d_ref, c_ref, x_ref, o_ref, *, bw):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    d = d_ref[...]  # (br, ck, bh, bw)
+    c = c_ref[...]  # (br, ck)
+    x = x_ref[...]  # (nv, m): one input vector per row
+    idx = c[..., None] * bw + jnp.arange(bw)[None, None, :]
+    xg = x[:, idx]  # (nv, br, ck, bw)
+    y = jnp.einsum("rcij,nrcj->nri", d, xg)  # (nv, br, bh)
+    o_ref[...] += y.reshape(o_ref.shape)
+
+
+def _kernel_spmm_gather(d_ref, xg_ref, o_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    y = jnp.einsum("rcij,nrcj->nri", d_ref[...], xg_ref[...])
+    o_ref[...] += y.reshape(o_ref.shape)
+
+
+def _build_spmm(v: Variant):
+    """SpMM lowering: Y = A X for a batch bucket of ``v.ncols`` vectors.
+
+    fn(data f32[nb,kb,bh,bw], bcols i32[nb,kb], x f32[ncols, cols])
+      -> (y f32[ncols, rows],)
+
+    The block contractions become one einsum over all ``ncols`` vectors —
+    exactly the denser MXU workload batching exists to create.
+    """
+    import functools
+
+    bh = v.extra_map.get("bh", 8)
+    bw = v.extra_map.get("bw", 8)
+    n, m, kb, nv = v.rows, v.cols, v.width, v.ncols
+    assert n % bh == 0 and m % bw == 0
+    nb = n // bh
+    br, ck = v.block_rows, v.chunk_width
+    assert nb % br == 0 and kb % ck == 0, (v.name, "grid must divide shapes")
+
+    d_spec = pl.BlockSpec((br, ck, bh, bw), lambda i, k: (i, k, 0, 0))
+    o_spec = pl.BlockSpec((nv, br * bh), lambda i, k: (0, i))
+    out_shape = jax.ShapeDtypeStruct((nv, n), jnp.float32)
+    grid = (nb // br, kb // ck)
+
+    if v.x_placement == "resident":
+        c_spec = pl.BlockSpec((br, ck), lambda i, k: (i, k))
+        x_spec = pl.BlockSpec((nv, m), lambda i, k: (0, 0))
+        call = pl.pallas_call(
+            functools.partial(_kernel_spmm_resident, bw=bw),
+            grid=grid,
+            in_specs=[d_spec, c_spec, x_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )
+
+        def fn(data, bcols, x):
+            return (call(data, bcols, x),)
+
+    elif v.x_placement == "gather":
+        xg_spec = pl.BlockSpec((nv, br, ck, bw), lambda i, k: (0, i, k, 0))
+        call = pl.pallas_call(
+            _kernel_spmm_gather,
+            grid=grid,
+            in_specs=[d_spec, xg_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )
+
+        def fn(data, bcols, x):
+            idx = bcols[..., None] * bw + jnp.arange(bw)[None, None, :]
+            return (call(data, x[:, idx]),)
+
+    else:
+        raise ValueError(f"BELL SpMM does not support x_placement={v.x_placement}")
+
+    example = (
+        jax.ShapeDtypeStruct((nb, kb, bh, bw), jnp.float32),
+        jax.ShapeDtypeStruct((nb, kb), jnp.int32),
+        jax.ShapeDtypeStruct((nv, m), jnp.float32),
+    )
+    return fn, example
+
+
 def build(v: Variant):
     """Return (fn, example_args) for this BELL variant.
 
     Shapes: rows = nb*bh, width = kb (block-columns per block-row).
     extra: bh (block height), bw (block width).
     fn(data f32[nb,kb,bh,bw], bcols i32[nb,kb], x f32[cols]) -> (y f32[rows],)
+    (``ncols > 1`` lowers the SpMM form instead, see ``_build_spmm``.)
     """
+    if v.ncols > 1:
+        return _build_spmm(v)
     bh = v.extra_map.get("bh", 8)
     bw = v.extra_map.get("bw", 8)
     n, m, kb = v.rows, v.cols, v.width

@@ -32,7 +32,16 @@ X_PLACEMENTS = ("resident", "gather", "streamed")
 
 @dataclass(frozen=True)
 class Variant:
-    """One compile-time configuration of one SpMV kernel."""
+    """One compile-time configuration of one SpMV/SpMM kernel.
+
+    ``ncols`` is the batch bucket: the number of dense input vectors one
+    launch consumes. ``ncols == 1`` is the classic SpMV artifact;
+    ``ncols > 1`` lowers the SpMM form ``Y = A X`` where ``X`` is
+    ``(ncols, cols)`` — one row per input vector, so the serving runtime
+    can marshal a coalesced batch as a single contiguous literal and
+    execute it in ONE kernel launch (matrix stream amortized across the
+    whole batch).
+    """
 
     fmt: str                 # csr | ell | bell | sell
     rows: int                # padded row count of the shape bucket
@@ -41,6 +50,7 @@ class Variant:
     block_rows: int          # rows (ELL/CSR), block-rows (BELL), slices (SELL) per grid step
     chunk_width: int         # VMEM working-set width per grid step
     x_placement: str         # resident | gather | streamed
+    ncols: int = 1           # batch bucket: input vectors per launch (1 = SpMV)
     extra: Tuple[Tuple[str, int], ...] = field(default=())  # format-specific
 
     def __post_init__(self):
@@ -48,13 +58,16 @@ class Variant:
             raise ValueError(f"unknown format {self.fmt!r}")
         if self.x_placement not in X_PLACEMENTS:
             raise ValueError(f"unknown x placement {self.x_placement!r}")
+        if self.ncols < 1:
+            raise ValueError(f"ncols must be >= 1, got {self.ncols}")
 
     @property
     def name(self) -> str:
         ex = "".join(f"_{k}{v}" for k, v in self.extra)
+        nc = f"_x{self.ncols}" if self.ncols > 1 else ""
         return (
             f"{self.fmt}_r{self.rows}_c{self.cols}_w{self.width}"
-            f"_b{self.block_rows}_k{self.chunk_width}_{self.x_placement}{ex}"
+            f"_b{self.block_rows}_k{self.chunk_width}_{self.x_placement}{nc}{ex}"
         )
 
     @property

@@ -56,14 +56,106 @@ def _kernel_gather(v_ref, r_ref, xg_ref, o_ref, *, n):
     o_ref[...] += contrib
 
 
+def _kernel_spmm_resident(v_ref, r_ref, c_ref, x_ref, o_ref, *, n, nv):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    vals = v_ref[...]
+    rows = r_ref[...]
+    cols = c_ref[...]
+    x = x_ref[...]  # (nv, m): one input vector per row
+    # per-vector scatter of this chunk's products: (nv, cw) into (nv, n)
+    contrib = jnp.zeros((nv, n), vals.dtype).at[:, rows].add(vals[None, :] * x[:, cols])
+    o_ref[...] += contrib
+
+
+def _kernel_spmm_gather(v_ref, r_ref, xg_ref, o_ref, *, n, nv):
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    vals = v_ref[...]
+    rows = r_ref[...]
+    contrib = jnp.zeros((nv, n), vals.dtype).at[:, rows].add(vals[None, :] * xg_ref[...])
+    o_ref[...] += contrib
+
+
+def _build_spmm(v: Variant):
+    """SpMM lowering: Y = A X for a batch bucket of ``v.ncols`` vectors.
+
+    fn(vals f32[nnz], rows i32[nnz], cols i32[nnz], x f32[ncols, cols])
+      -> (y f32[ncols, rows],)
+
+    The COO triplet stream is walked once per launch; each chunk's
+    products scatter into all ``ncols`` output rows at once.
+    """
+    import functools
+
+    n, m, nnz, nv = v.rows, v.cols, v.width, v.ncols
+    cw = v.chunk_width
+    assert nnz % cw == 0, (v.name, "chunk must divide nnz_pad")
+    grid = (nnz // cw,)
+
+    tri_spec = pl.BlockSpec((cw,), lambda k: (k,))
+    o_spec = pl.BlockSpec((nv, n), lambda k: (0, 0))
+    out_shape = jax.ShapeDtypeStruct((nv, n), jnp.float32)
+
+    if v.x_placement == "resident":
+        x_spec = pl.BlockSpec((nv, m), lambda k: (0, 0))
+        call = pl.pallas_call(
+            functools.partial(_kernel_spmm_resident, n=n, nv=nv),
+            grid=grid,
+            in_specs=[tri_spec, tri_spec, tri_spec, x_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )
+
+        def fn(vals, rows, cols, x):
+            return (call(vals, rows, cols, x),)
+
+    elif v.x_placement == "gather":
+        xg_spec = pl.BlockSpec((nv, cw), lambda k: (0, k))
+        call = pl.pallas_call(
+            functools.partial(_kernel_spmm_gather, n=n, nv=nv),
+            grid=grid,
+            in_specs=[tri_spec, tri_spec, xg_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )
+
+        def fn(vals, rows, cols, x):
+            return (call(vals, rows, x[:, cols]),)
+
+    else:
+        raise ValueError(f"CSR SpMM does not support x_placement={v.x_placement}")
+
+    example = (
+        jax.ShapeDtypeStruct((nnz,), jnp.float32),
+        jax.ShapeDtypeStruct((nnz,), jnp.int32),
+        jax.ShapeDtypeStruct((nnz,), jnp.int32),
+        jax.ShapeDtypeStruct((nv, m), jnp.float32),
+    )
+    return fn, example
+
+
 def build(v: Variant):
     """Return (fn, example_args) for this CSR variant.
 
     Shapes: width = nnz_pad (padded triplet count).
     fn(vals f32[nnz], rows i32[nnz], cols i32[nnz], x f32[cols]) -> (y f32[rows],)
+    (``ncols > 1`` lowers the SpMM form instead, see ``_build_spmm``.)
     """
     import functools
 
+    if v.ncols > 1:
+        return _build_spmm(v)
     n, m, nnz = v.rows, v.cols, v.width
     cw = v.chunk_width
     assert nnz % cw == 0, (v.name, "chunk must divide nnz_pad")

@@ -68,11 +68,97 @@ def _kernel_streamed(d_ref, c_ref, xs_ref, o_ref, *, x_seg):
     o_ref[...] += jnp.sum(d * xv, axis=1)
 
 
+def _kernel_spmm_resident(d_ref, c_ref, x_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # (k, m): one input vector per row
+    d = d_ref[...]  # (br, cw)
+    c = c_ref[...]  # (br, cw)
+    # x[:, c] gathers per vector: (k, br, cw); row sums per vector.
+    o_ref[...] += jnp.sum(d[None, :, :] * x[:, c], axis=2)
+
+
+def _kernel_spmm_gather(d_ref, xg_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(d_ref[...][None, :, :] * xg_ref[...], axis=2)
+
+
+def _build_spmm(v: Variant):
+    """SpMM lowering: Y = A X for a batch bucket of ``v.ncols`` vectors.
+
+    fn(data f32[rows, width], cols i32[rows, width], x f32[ncols, cols])
+      -> (y f32[ncols, rows],)
+
+    The matrix tiles stream through VMEM exactly once per launch; every
+    input vector rides the same tile schedule (the SpMV -> SpMM
+    amortization the serving pool's coalescing exists for).
+    """
+    n, m, w, k = v.rows, v.cols, v.width, v.ncols
+    br, cw = v.block_rows, v.chunk_width
+    assert n % br == 0 and w % cw == 0, (v.name, "grid must divide shapes")
+    grid = (n // br, w // cw)
+
+    d_spec = pl.BlockSpec((br, cw), lambda i, j: (i, j))
+    c_spec = pl.BlockSpec((br, cw), lambda i, j: (i, j))
+    o_spec = pl.BlockSpec((k, br), lambda i, j: (0, i))
+    out_shape = jax.ShapeDtypeStruct((k, n), jnp.float32)
+
+    if v.x_placement == "resident":
+        x_spec = pl.BlockSpec((k, m), lambda i, j: (0, 0))
+        call = pl.pallas_call(
+            _kernel_spmm_resident,
+            grid=grid,
+            in_specs=[d_spec, c_spec, x_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )
+
+        def fn(data, cols, x):
+            return (call(data, cols, x),)
+
+    elif v.x_placement == "gather":
+        xg_spec = pl.BlockSpec((k, br, cw), lambda i, j: (0, i, j))
+        call = pl.pallas_call(
+            _kernel_spmm_gather,
+            grid=grid,
+            in_specs=[d_spec, xg_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )
+
+        def fn(data, cols, x):
+            return (call(data, x[:, cols]),)
+
+    else:
+        raise ValueError(f"ELL SpMM does not support x_placement={v.x_placement}")
+
+    example = (
+        jax.ShapeDtypeStruct((n, w), jnp.float32),
+        jax.ShapeDtypeStruct((n, w), jnp.int32),
+        jax.ShapeDtypeStruct((k, m), jnp.float32),
+    )
+    return fn, example
+
+
 def build(v: Variant):
     """Return (fn, example_args) for this ELL variant.
 
     fn(data f32[rows, width], cols i32[rows, width], x f32[cols]) -> (y f32[rows],)
+    (``ncols > 1`` lowers the SpMM form instead, see ``_build_spmm``.)
     """
+    if v.ncols > 1:
+        return _build_spmm(v)
     n, m, w = v.rows, v.cols, v.width
     br, cw = v.block_rows, v.chunk_width
     assert n % br == 0 and w % cw == 0, (v.name, "grid must divide shapes")

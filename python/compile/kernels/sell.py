@@ -45,13 +45,99 @@ def _kernel_gather(d_ref, xg_ref, o_ref):
     o_ref[...] += y.reshape(o_ref.shape)
 
 
+def _kernel_spmm_resident(d_ref, c_ref, x_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    d = d_ref[...]  # (bs, h, cw)
+    c = c_ref[...]
+    x = x_ref[...]  # (k, m): one input vector per row
+    y = jnp.sum(d[None, :, :, :] * x[:, c], axis=3)  # (k, bs, h)
+    o_ref[...] += y.reshape(o_ref.shape)
+
+
+def _kernel_spmm_gather(d_ref, xg_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    y = jnp.sum(d_ref[...][None, :, :, :] * xg_ref[...], axis=3)
+    o_ref[...] += y.reshape(o_ref.shape)
+
+
+def _build_spmm(v: Variant):
+    """SpMM lowering: Y = A X for a batch bucket of ``v.ncols`` vectors.
+
+    fn(data f32[ns,h,w], cols i32[ns,h,w], x f32[ncols, cols])
+      -> (y f32[ncols, rows],)
+    """
+    h = v.extra_map.get("h", 8)
+    n, m, w, k = v.rows, v.cols, v.width, v.ncols
+    assert n % h == 0
+    ns = n // h
+    bs, cw = v.block_rows, v.chunk_width
+    assert ns % bs == 0 and w % cw == 0, (v.name, "grid must divide shapes")
+    grid = (ns // bs, w // cw)
+
+    d_spec = pl.BlockSpec((bs, h, cw), lambda i, j: (i, 0, j))
+    o_spec = pl.BlockSpec((k, bs * h), lambda i, j: (0, i))
+    out_shape = jax.ShapeDtypeStruct((k, n), jnp.float32)
+
+    if v.x_placement == "resident":
+        c_spec = pl.BlockSpec((bs, h, cw), lambda i, j: (i, 0, j))
+        x_spec = pl.BlockSpec((k, m), lambda i, j: (0, 0))
+        call = pl.pallas_call(
+            _kernel_spmm_resident,
+            grid=grid,
+            in_specs=[d_spec, c_spec, x_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )
+
+        def fn(data, cols, x):
+            return (call(data, cols, x),)
+
+    elif v.x_placement == "gather":
+        xg_spec = pl.BlockSpec((k, bs, h, cw), lambda i, j: (0, i, 0, j))
+        call = pl.pallas_call(
+            _kernel_spmm_gather,
+            grid=grid,
+            in_specs=[d_spec, xg_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=True,
+        )
+
+        def fn(data, cols, x):
+            return (call(data, x[:, cols]),)
+
+    else:
+        raise ValueError(f"SELL SpMM does not support x_placement={v.x_placement}")
+
+    example = (
+        jax.ShapeDtypeStruct((ns, h, w), jnp.float32),
+        jax.ShapeDtypeStruct((ns, h, w), jnp.int32),
+        jax.ShapeDtypeStruct((k, m), jnp.float32),
+    )
+    return fn, example
+
+
 def build(v: Variant):
     """Return (fn, example_args) for this SELL variant.
 
     Shapes: rows = ns*h, width = w. extra: h (slice height).
     block_rows counts *slices* per grid step.
     fn(data f32[ns,h,w], cols i32[ns,h,w], x f32[cols]) -> (y f32[rows],)
+    (``ncols > 1`` lowers the SpMM form instead, see ``_build_spmm``.)
     """
+    if v.ncols > 1:
+        return _build_spmm(v)
     h = v.extra_map.get("h", 8)
     n, m, w = v.rows, v.cols, v.width
     assert n % h == 0

@@ -27,6 +27,17 @@ def build_spmv(v: Variant) -> Tuple[Callable, tuple]:
     return _BUILDERS[v.fmt](v)
 
 
+def build_spmm(v: Variant) -> Tuple[Callable, tuple]:
+    """(fn, example_args) computing Y = A @ X for an ``ncols > 1`` variant.
+
+    X is ``(ncols, cols)`` — one input vector per row, so a coalesced
+    serving batch marshals into a single contiguous literal and the whole
+    batch executes in ONE kernel launch.
+    """
+    assert v.ncols > 1, f"SpMM variant needs ncols > 1, got {v.ncols} ({v.name})"
+    return _BUILDERS[v.fmt](v)
+
+
 def build_power_step(v: Variant) -> Tuple[Callable, tuple]:
     """One normalized power-iteration step: x' = A x / ||A x||_2.
 
@@ -97,6 +108,37 @@ def default_variants(quick: bool = False) -> List[Variant]:
     else:
         add("csr", 256, 256, 2048, 0, 512, "resident")
 
+    return vs
+
+
+def spmm_variants(quick: bool = False) -> List[Variant]:
+    """The SpMM (multi-vector) artifact set ``make artifacts`` compiles.
+
+    Batch buckets are the run-time chunking grain: a coalesced batch of k
+    requests executes in ``ceil(k / ncols)`` launches against the largest
+    bucket, vectors padded with zero rows up to the bucket. Kept separate
+    from :func:`default_variants` so the SpMV inventory (and its tests)
+    are untouched; ``aot.py`` emits these as ``kind=spmm`` manifest rows.
+    """
+    vs: List[Variant] = []
+
+    def add(*a, **kw):
+        vs.append(Variant(*a, **kw))
+
+    if quick:
+        add("ell", 256, 256, 16, 64, 8, "resident", ncols=8)
+        add("csr", 256, 256, 2048, 0, 512, "resident", ncols=8)
+        return vs
+
+    for k in (4, 16):
+        add("ell", 1024, 1024, 16, 64, 8, "resident", ncols=k)
+        add("sell", 1024, 1024, 16, 8, 8, "resident", ncols=k, extra=(("h", 8),))
+        add("bell", 1024, 1024, 16, 4, 4, "resident", ncols=k,
+            extra=(("bh", 8), ("bw", 8)))
+        add("csr", 1024, 1024, 8192, 0, 1024, "resident", ncols=k)
+    # small-bucket pair so sub-256 matrices also batch
+    add("ell", 256, 256, 16, 64, 8, "resident", ncols=8)
+    add("csr", 256, 256, 2048, 0, 512, "resident", ncols=8)
     return vs
 
 

@@ -1,0 +1,152 @@
+"""SpMM (multi-vector) lowerings vs the per-vector oracles.
+
+The SpMM contract the Rust runtime relies on: for a batch bucket of k
+vectors, row i of the kernel's (k, rows) output equals the SpMV of input
+vector i — including zero-padded batch rows (a coalesced batch smaller
+than the bucket pads with zero vectors and must get exact zeros back).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.kernels import bell, csr, ell, ref, sell
+from compile.kernels.common import Variant
+from .conftest import make_bell, make_coo, make_ell, make_sell, make_x
+
+
+def make_xs(rng, k, m):
+    return rng.standard_normal((k, m)).astype(np.float32)
+
+
+# ---------------------------------------------------------------- ELL ----
+
+@pytest.mark.parametrize("place", ["resident", "gather"])
+@pytest.mark.parametrize("k", [2, 4, 8])
+def test_ell_spmm_matches_per_vector(rng, place, k):
+    n, m, w = 64, 64, 8
+    data, cols = make_ell(rng, n, m, w)
+    xs = make_xs(rng, k, m)
+    v = Variant("ell", n, m, w, 16, 4, place, ncols=k)
+    fn, _ = ell.build(v)
+    got = np.asarray(jax.jit(fn)(data, cols, xs)[0])
+    assert got.shape == (k, n)
+    for i in range(k):
+        want = np.asarray(ref.ell_spmv(jnp.array(data), jnp.array(cols),
+                                       jnp.array(xs[i])))
+        np.testing.assert_allclose(got[i], want, rtol=1e-4, atol=1e-5)
+
+
+def test_ell_spmm_zero_padded_batch_rows_give_exact_zero(rng):
+    n, m, w, k = 32, 32, 4, 4
+    data, cols = make_ell(rng, n, m, w)
+    xs = make_xs(rng, k, m)
+    xs[2:] = 0.0  # a 2-request batch padded up to the bucket of 4
+    v = Variant("ell", n, m, w, 8, 4, "resident", ncols=k)
+    fn, _ = ell.build(v)
+    got = np.asarray(jax.jit(fn)(data, cols, xs)[0])
+    np.testing.assert_array_equal(got[2:], np.zeros((2, n), np.float32))
+
+
+def test_ell_spmm_rejects_streamed():
+    with pytest.raises(ValueError):
+        ell.build(Variant("ell", 32, 32, 4, 8, 4, "streamed", ncols=4,
+                          extra=(("xseg", 8),)))
+
+
+# ---------------------------------------------------------------- CSR ----
+
+@pytest.mark.parametrize("place", ["resident", "gather"])
+@pytest.mark.parametrize("k", [2, 8])
+def test_csr_spmm_matches_per_vector(rng, place, k):
+    n = m = 48
+    vals, rows, cols = make_coo(rng, n, m, nnz=256)
+    xs = make_xs(rng, k, m)
+    v = Variant("csr", n, m, 256, 0, 64, place, ncols=k)
+    fn, _ = csr.build(v)
+    got = np.asarray(jax.jit(fn)(vals, rows, cols, xs)[0])
+    assert got.shape == (k, n)
+    for i in range(k):
+        want = np.asarray(ref.coo_spmv(jnp.array(vals), jnp.array(rows),
+                                       jnp.array(cols), jnp.array(xs[i]), n))
+        np.testing.assert_allclose(got[i], want, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------- SELL ----
+
+@pytest.mark.parametrize("place", ["resident", "gather"])
+def test_sell_spmm_matches_per_vector(rng, place):
+    ns, h, w, m, k = 8, 8, 4, 64, 4
+    data, cols = make_sell(rng, ns, h, w, m)
+    xs = make_xs(rng, k, m)
+    v = Variant("sell", ns * h, m, w, 4, 4, place, ncols=k, extra=(("h", h),))
+    fn, _ = sell.build(v)
+    got = np.asarray(jax.jit(fn)(data, cols, xs)[0])
+    assert got.shape == (k, ns * h)
+    for i in range(k):
+        want = np.asarray(ref.sell_spmv(jnp.array(data), jnp.array(cols),
+                                        jnp.array(xs[i])))
+        np.testing.assert_allclose(got[i], want, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------- BELL ----
+
+@pytest.mark.parametrize("place", ["resident", "gather"])
+def test_bell_spmm_matches_per_vector(rng, place):
+    nb, kb, bh, bw, m, k = 8, 4, 8, 8, 64, 4
+    data, bcols = make_bell(rng, nb, kb, bh, bw, m)
+    xs = make_xs(rng, k, m)
+    v = Variant("bell", nb * bh, m, kb, 4, 2, place, ncols=k,
+                extra=(("bh", bh), ("bw", bw)))
+    fn, _ = bell.build(v)
+    got = np.asarray(jax.jit(fn)(data, bcols, xs)[0])
+    assert got.shape == (k, nb * bh)
+    for i in range(k):
+        want = np.asarray(ref.bell_spmv(jnp.array(data), jnp.array(bcols),
+                                        jnp.array(xs[i])))
+        np.testing.assert_allclose(got[i], want, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------- inventory / aot ----
+
+def test_spmm_variant_names_are_unique_and_tagged():
+    vs = model.spmm_variants()
+    names = [v.name for v in vs]
+    assert len(names) == len(set(names))
+    assert all(v.ncols > 1 for v in vs)
+    assert all(f"_x{v.ncols}" in v.name for v in vs)
+    assert {v.fmt for v in vs} == {"csr", "ell", "bell", "sell"}
+
+
+def test_all_spmm_variants_build():
+    for v in model.spmm_variants():
+        fn, example = model.build_spmm(v)
+        assert callable(fn)
+        # X is the LAST input: (ncols, cols), one vector per row
+        assert example[-1].shape == (v.ncols, v.cols)
+
+
+def test_extra_str_carries_the_batch_bucket():
+    v = Variant("ell", 256, 256, 16, 64, 8, "resident", ncols=8)
+    assert aot.extra_str(v) == "nc=8"
+    v2 = Variant("sell", 256, 256, 16, 8, 8, "resident", ncols=4,
+                 extra=(("h", 8),))
+    assert aot.extra_str(v2) == "h=8;nc=4"
+    v3 = Variant("ell", 256, 256, 16, 64, 8, "resident")
+    assert aot.extra_str(v3) == "-"
+
+
+def test_spmm_hlo_text_lowers():
+    v = Variant("ell", 64, 64, 8, 16, 4, "resident", ncols=4)
+    fn, example = model.build_spmm(v)
+    text = aot.to_hlo_text(jax.jit(fn).lower(*example))
+    assert "HloModule" in text
+
+
+def test_spmv_variant_names_unchanged_at_ncols_1():
+    v = Variant("ell", 256, 256, 16, 64, 8, "resident")
+    assert v.name == "ell_r256_c256_w16_b64_k8_resident"
+    with pytest.raises(ValueError):
+        Variant("ell", 256, 256, 16, 64, 8, "resident", ncols=0)

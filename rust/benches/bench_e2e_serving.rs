@@ -168,7 +168,7 @@ fn main() {
             if batching {
                 assert!(
                     stats.dispatches < n_requests as u64,
-                    "coalescing must serve multiple requests per spmv_batch dispatch \
+                    "coalescing must serve multiple requests per SpMM dispatch \
                      ({} dispatches for {n_requests} requests)",
                     stats.dispatches
                 );
@@ -177,8 +177,92 @@ fn main() {
     }
     t.emit("e2e_serving_throughput");
 
+    batch_width_sweep(&backend);
     adaptation_under_drift();
     println!("bench_e2e_serving OK");
+}
+
+/// Part 2b — batch-width sweep: the same burst workload dispatched
+/// per-vector (max_batch 1: every request pays its own launch) vs
+/// through the SpMM batch path, at growing burst widths. The columns to
+/// watch are launches/request (1.00 per-vector; 1/k when coalescing
+/// captures the burst) and the throughput ratio.
+fn batch_width_sweep(backend: &BackendSpec) {
+    let router = Arc::new(auto_spmv::testutil::toy_router(&["rim"], Objective::EnergyEff));
+    let mut rng = Rng::new(0xBA7C4);
+    let coo = patterns::banded(&mut rng, 1000, 16, 6.0);
+    let n_cols = coo.n_cols;
+
+    let mut t = Table::new(
+        "E2E — batch-width sweep: per-vector vs SpMM dispatch (1 worker)",
+        &["burst k", "dispatch", "req/s", "dispatches", "launches", "launches/req"],
+    );
+    for k in [1usize, 2, 4, 8, 16] {
+        for spmm in [false, true] {
+            let pool = Pool::start(
+                router.clone(),
+                backend.clone(),
+                PoolConfig {
+                    workers: 1,
+                    max_batch: if spmm { k } else { 1 },
+                    // generous window: the whole burst is in flight, so
+                    // collection ends at max_batch, not the deadline
+                    batch_window: if spmm && k > 1 {
+                        Duration::from_millis(20)
+                    } else {
+                        Duration::ZERO
+                    },
+                    ..PoolConfig::default()
+                },
+            );
+            pool.register(1, coo.clone(), 100_000).expect("register");
+            let n_requests = 32 * k;
+            let t0 = Instant::now();
+            for _ in 0..32 {
+                // one burst of k pipelined requests
+                let pending: Vec<_> = (0..k)
+                    .map(|r| {
+                        let x: Vec<f32> =
+                            (0..n_cols).map(|i| ((i * 3 + r) % 7) as f32 * 0.5).collect();
+                        pool.product_async(1, x).expect("submit")
+                    })
+                    .collect();
+                for rx in pending {
+                    rx.recv().expect("pool alive").expect("product ok");
+                }
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let stats = pool.stats().expect("stats");
+            assert_eq!(stats.requests, n_requests as u64);
+            t.row(vec![
+                k.to_string(),
+                if spmm { "spmm".into() } else { "per-vector".to_string() },
+                format!("{:.0}", n_requests as f64 / wall),
+                stats.dispatches.to_string(),
+                stats.launches.to_string(),
+                format!("{:.2}", stats.launches_per_request()),
+            ]);
+            if !spmm {
+                assert_eq!(
+                    stats.launches, stats.requests,
+                    "per-vector dispatch pays one launch per request"
+                );
+            }
+            if spmm && k >= 4 {
+                // the acceptance criterion: coalescing + SpMM dispatch
+                // drives launches-per-request below 1
+                assert!(
+                    stats.launches < stats.requests,
+                    "k={k}: SpMM dispatch must amortize launches \
+                     ({} launches / {} requests)",
+                    stats.launches,
+                    stats.requests
+                );
+                assert!(stats.launches_per_request() < 1.0);
+            }
+        }
+    }
+    t.emit("e2e_batch_width_sweep");
 }
 
 /// Part 3 — closed-loop adaptation: the same drifted fleet served by a

@@ -8,7 +8,7 @@
 //!   optimize --matrix M [...]   run both optimization modes on a matrix
 //!   serve [--requests N] [--workers W] [--batch-window-us U]
 //!         [--cache-cap C]
-//!         [--explore-rate F] [--retrain-every N]
+//!         [--explore-rate F] [--retrain-every N] [--anneal-target K]
 //!                               serving demo over the sharded pool
 //!                               (PJRT when artifacts exist, else
 //!                               native). A non-zero explore rate or
@@ -236,6 +236,8 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let cache_cap: usize = cli.flag("cache-cap").map_or(64, |v| v.parse().unwrap_or(64));
     let explore_rate: f64 = cli.flag("explore-rate").map_or(0.0, |v| v.parse().unwrap_or(0.0));
     let retrain_every: u64 = cli.flag("retrain-every").map_or(0, |v| v.parse().unwrap_or(0));
+    let anneal_target: Option<u64> =
+        cli.flag("anneal-target").and_then(|v| v.parse().ok()).filter(|t| *t > 0);
     let ds = load_or_build(cli)?;
     let obj = cli.objective()?;
     let overhead = OverheadModel::train_on_corpus(cli.config.scale, None);
@@ -270,6 +272,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
                 explore_rate,
                 retrain_every,
                 seed: cli.config.seed,
+                anneal_target,
                 // keep serving latency flat: refits run on the trainer
                 // thread, never inline on a shard
                 background: true,
@@ -323,6 +326,13 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         stats.conversions,
         stats.reconversions,
         stats.evictions
+    );
+    println!(
+        "{} kernel launches ({:.2} launches/request, {} SpMM dispatches) — \
+         < 1 launch/request means batching amortized the matrix stream",
+        stats.launches,
+        stats.launches_per_request(),
+        stats.spmm_dispatches
     );
     println!(
         "router v{} ({} retrains, {} migrations), explored {} requests, drift: {}",

@@ -2,7 +2,7 @@
 //!
 //! The original implementation here was a single worker thread behind
 //! one mpsc channel. The serving engine now lives in [`crate::serve`]
-//! (sharded workers, request coalescing into `spmv_batch` dispatches, a
+//! (sharded workers, request coalescing into SpMM dispatches, a
 //! bounded conversion cache, and latency/energy telemetry); this module
 //! keeps the old single-worker `Service` API as a thin wrapper — one
 //! shard, no admission window, `max_batch = 1`, so requests execute

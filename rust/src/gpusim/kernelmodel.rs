@@ -44,6 +44,27 @@ pub struct KernelProfile {
     pub gather_bonus: f64,
 }
 
+impl KernelProfile {
+    /// The workload of the same kernel executing a `k`-vector batch
+    /// (SpMM): the matrix arrays stream ONCE for the whole batch —
+    /// that is the entire point of batched dispatch — while x gathers,
+    /// y writes, FLOPs and grid work scale with `k`. Feeding this
+    /// through [`super::simulate`] models one batched launch; dividing
+    /// its energy/latency by `k` gives the per-request share the
+    /// serving telemetry and the online observations charge.
+    pub fn batched(&self, k: u64) -> KernelProfile {
+        let k = k.max(1);
+        KernelProfile {
+            flops_useful: self.flops_useful * k,
+            flops_executed: self.flops_executed * k,
+            y_bytes: self.y_bytes * k,
+            x_accesses: self.x_accesses * k,
+            threads_of_work: self.threads_of_work * k,
+            ..self.clone()
+        }
+    }
+}
+
 /// Natural per-thread register demand of each kernel implementation.
 /// Values follow nvcc's typical allocation for scalar CSR / ELL kernels
 /// and the heavier blocked kernels (accumulator tiles).
@@ -272,6 +293,52 @@ mod tests {
         assert!(bell.gather_bonus > 0.0);
         assert!(bell.x_accesses < csr.x_accesses,
             "BELL gathers whole blocks: {} < {}", bell.x_accesses, csr.x_accesses);
+    }
+
+    #[test]
+    fn batched_profile_charges_matrix_stream_once() {
+        let p = ConvertParams::default();
+        let a = skewed();
+        let one = profile(&a, Format::Ell, p);
+        assert_eq!(one.batched(1), one, "k = 1 is the identity");
+        let k = 8u64;
+        let b = one.batched(k);
+        assert_eq!(b.matrix_bytes, one.matrix_bytes, "matrix streamed once per batch");
+        assert_eq!(b.flops_executed, k * one.flops_executed);
+        assert_eq!(b.x_accesses, k * one.x_accesses);
+        assert_eq!(b.y_bytes, k * one.y_bytes);
+        assert_eq!(b.threads_of_work, k * one.threads_of_work);
+    }
+
+    #[test]
+    fn batched_dispatch_is_cheaper_per_request_than_k_launches() {
+        use crate::gpusim::{simulate, turing_gtx1650m, KernelConfig, MemConfig};
+        let p = ConvertParams::default();
+        let a = regular();
+        let arch = turing_gtx1650m();
+        for fmt in Format::ALL {
+            let prof = profile(&a, fmt, p);
+            let cfg = KernelConfig {
+                format: fmt,
+                tb_size: 256,
+                maxrregcount: 64,
+                mem: MemConfig::Default,
+            };
+            let (single, _) = simulate(&arch, &prof, &cfg);
+            let k = 8u64;
+            let (batch, _) = simulate(&arch, &prof.batched(k), &cfg);
+            assert!(
+                batch.energy_j < k as f64 * single.energy_j,
+                "{fmt}: batched energy {} must beat {} x single {}",
+                batch.energy_j,
+                k,
+                single.energy_j
+            );
+            assert!(
+                batch.latency_s < k as f64 * single.latency_s,
+                "{fmt}: batched latency must amortize the matrix stream + launch"
+            );
+        }
     }
 
     #[test]

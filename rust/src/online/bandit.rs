@@ -81,6 +81,9 @@ pub struct Bandit {
     /// f64 bits of the current exploration rate — atomic so operators
     /// can anneal or pause exploration on a live pool.
     explore_rate_bits: AtomicU64,
+    /// Auto-anneal target: observations per alternative arm at which a
+    /// bucket's exploration reaches zero (None = flat rate forever).
+    anneal_target: Option<u64>,
     state: Mutex<BanditState>,
 }
 
@@ -88,8 +91,22 @@ impl Bandit {
     /// `explore_rate` is clamped to [0, 1]; `seed` makes the whole
     /// exploration schedule reproducible.
     pub fn new(explore_rate: f64, seed: u64) -> Bandit {
+        Bandit::with_anneal(explore_rate, seed, None)
+    }
+
+    /// Like [`Bandit::new`] but with per-bucket auto-annealing: a
+    /// bucket's effective rate decays linearly from `explore_rate` to 0
+    /// as its weakest alternative arm accumulates `target` credited
+    /// observations. Counterfactual labels stop being bought once every
+    /// alternative has enough evidence — per bucket, so a novel matrix
+    /// population resumes exploring at full rate while converged
+    /// buckets stay quiet. The rate-0 short-circuit (zero RNG draws,
+    /// zero state) is untouched, preserving the frozen-pool
+    /// bit-identity property.
+    pub fn with_anneal(explore_rate: f64, seed: u64, target: Option<u64>) -> Bandit {
         Bandit {
             explore_rate_bits: AtomicU64::new(explore_rate.clamp(0.0, 1.0).to_bits()),
+            anneal_target: target.filter(|t| *t > 0),
             state: Mutex::new(BanditState { rng: Rng::new(seed), buckets: HashMap::new() }),
         }
     }
@@ -105,12 +122,15 @@ impl Bandit {
     }
 
     /// Route one dispatch: keep the router's `default` format, or —
-    /// with probability `explore_rate` — the least-pulled alternative
-    /// arm in this matrix's feature bucket.
+    /// with probability of the bucket's effective rate (the configured
+    /// rate, annealed by arm confidence when a target is set) — the
+    /// least-pulled alternative arm in this matrix's feature bucket.
     ///
     /// `explore_rate == 0` short-circuits before touching the lock or
     /// the RNG, so a non-exploring pool is bit-identical to one with no
-    /// bandit at all.
+    /// bandit at all. With exploration on, exactly ONE draw is consumed
+    /// per dispatch regardless of annealing, so the schedule stays
+    /// deterministic per seed.
     pub fn route(&self, feats: &Features, default: Format) -> RouteChoice {
         let rate = self.explore_rate();
         if rate <= 0.0 {
@@ -122,7 +142,22 @@ impl Bandit {
             .buckets
             .entry(bucket_of(feats))
             .or_insert_with(|| std::array::from_fn(|_| ArmStats::default()));
-        if draw >= rate {
+        let effective = match self.anneal_target {
+            None => rate,
+            Some(target) => {
+                // confidence = the weakest alternative arm's evidence;
+                // exploration pays for labels until every alternative
+                // has `target` of them, then this bucket goes quiet
+                let min_alt = Format::ALL
+                    .iter()
+                    .filter(|f| **f != default)
+                    .map(|f| arms[f.class_id()].observations)
+                    .min()
+                    .unwrap_or(0);
+                rate * (1.0 - min_alt as f64 / target as f64).max(0.0)
+            }
+        };
+        if draw >= effective {
             arms[default.class_id()].pulls += 1;
             return RouteChoice::chosen(default);
         }
@@ -227,6 +262,56 @@ mod tests {
         for fmt in [Format::Ell, Format::Bell, Format::Sell] {
             assert_eq!(arms[fmt.class_id()].pulls, 33, "99 pulls split evenly");
         }
+    }
+
+    #[test]
+    fn annealing_stops_exploration_once_alternatives_have_evidence() {
+        let b = Bandit::with_anneal(1.0, 11, Some(4));
+        let f = feats(900.0, 6.0);
+        assert!(b.route(&f, Format::Csr).explored, "fresh bucket explores at full rate");
+        // credit the target evidence to every alternative arm
+        for fmt in [Format::Ell, Format::Bell, Format::Sell] {
+            for _ in 0..4 {
+                b.observe(&f, fmt, 1.0);
+            }
+        }
+        for _ in 0..200 {
+            assert!(
+                !b.route(&f, Format::Csr).explored,
+                "a fully-confident bucket must stop exploring"
+            );
+        }
+        // a DIFFERENT bucket still explores at full rate
+        let fresh = feats(1_000_000.0, 64.0);
+        assert_ne!(bucket_of(&f), bucket_of(&fresh));
+        assert!(b.route(&fresh, Format::Csr).explored);
+    }
+
+    #[test]
+    fn annealing_decays_the_rate_with_partial_evidence() {
+        let b = Bandit::with_anneal(1.0, 12, Some(8));
+        let f = feats(400.0, 3.0);
+        // half the target on every alternative -> effective rate 0.5
+        for fmt in [Format::Ell, Format::Bell, Format::Sell] {
+            for _ in 0..4 {
+                b.observe(&f, fmt, 1.0);
+            }
+        }
+        let explored = (0..2000).filter(|_| b.route(&f, Format::Csr).explored).count();
+        assert!(
+            (800..1200).contains(&explored),
+            "half-confident bucket should explore ~50%, got {explored}/2000"
+        );
+    }
+
+    #[test]
+    fn annealing_keeps_the_rate_zero_short_circuit() {
+        let b = Bandit::with_anneal(0.0, 13, Some(4));
+        let f = feats(1000.0, 8.0);
+        for _ in 0..50 {
+            assert_eq!(b.route(&f, Format::Csr), RouteChoice::chosen(Format::Csr));
+        }
+        assert_eq!(b.buckets(), 0, "rate 0 must stay stateless with annealing configured");
     }
 
     #[test]

@@ -63,6 +63,12 @@ pub struct OnlineConfig {
     pub retrain_every: u64,
     /// Seed for the exploration schedule.
     pub seed: u64,
+    /// Auto-anneal exploration: once every alternative format arm in a
+    /// feature bucket has this many credited observations, that
+    /// bucket's effective explore rate reaches 0 (linear decay with the
+    /// weakest arm's evidence). `None` keeps the rate flat. Per-bucket,
+    /// so drifted-in matrix populations still explore at full rate.
+    pub anneal_target: Option<u64>,
     /// Observation ring capacity (the retraining window).
     pub buffer_cap: usize,
     /// Drift detector tuning.
@@ -80,6 +86,7 @@ impl Default for OnlineConfig {
             explore_rate: 0.05,
             retrain_every: 0,
             seed: 0xC10_5ED,
+            anneal_target: None,
             buffer_cap: 4096,
             drift: DriftConfig::default(),
             background: false,
@@ -117,7 +124,7 @@ impl Online {
         trainer: Option<Trainer>,
     ) -> Arc<Online> {
         let online = Arc::new(Online {
-            bandit: Bandit::new(cfg.explore_rate, cfg.seed),
+            bandit: Bandit::with_anneal(cfg.explore_rate, cfg.seed, cfg.anneal_target),
             observer: Observer::new(cfg.buffer_cap),
             drift: DriftDetector::new(cfg.drift),
             router: Arc::new(SwapRouter::new(initial)),
@@ -263,6 +270,33 @@ impl Online {
         self.retrains.load(Ordering::Relaxed)
     }
 
+    /// Checkpoint the observation window as a `dataset::store` TSV so a
+    /// pool restart resumes retraining from recent traffic instead of
+    /// an empty buffer. Returns the number of observations saved.
+    pub fn save_observations(&self, path: &std::path::Path) -> anyhow::Result<usize> {
+        let obs = self.observer.snapshot();
+        let arch = self.trainer.as_ref().map_or("unknown", |t| t.arch());
+        let ds = crate::dataset::Dataset { records: observer::to_records(&obs, arch) };
+        crate::dataset::store::save(&ds, path)?;
+        Ok(obs.len())
+    }
+
+    /// Restore a window saved by [`Online::save_observations`] into the
+    /// buffer (oldest first; bounded by the ring capacity as usual).
+    /// The restored history seeds the next retrain's window but does
+    /// not count as fresh traffic: the retrain cadence rebases so only
+    /// post-restore requests trip it. Returns the observations loaded.
+    pub fn load_observations(&self, path: &std::path::Path) -> anyhow::Result<usize> {
+        let ds = crate::dataset::store::load(path)?;
+        let obs = observer::from_records(&ds.records)?;
+        let n = obs.len();
+        for o in &obs {
+            self.observer.record(*o);
+        }
+        self.last_retrain_total.store(self.observer.total(), Ordering::Release);
+        Ok(n)
+    }
+
     /// Total requests observed (batch-weighted: a coalesced dispatch
     /// counts its batch size — the same unit as `retrain_every`).
     pub fn observed_requests(&self) -> u64 {
@@ -345,6 +379,56 @@ mod tests {
         assert_eq!(online.retrains(), 1, "cadence counts from the last retrain");
         online.observe(obs_for(&coo, Format::Csr, 1e-4));
         assert_eq!(online.retrains(), 2);
+    }
+
+    #[test]
+    fn observation_checkpoint_survives_a_pool_restart() {
+        let (router, ds, overhead) = toy_setup(&["rim", "eu-2005"], Objective::Energy);
+        let router = Arc::new(router);
+        let mk_online = |retrain_every| {
+            let trainer =
+                Trainer::new(ds.clone(), Objective::Energy, overhead.clone(), "GTX1650m-Turing");
+            Online::start(
+                OnlineConfig { retrain_every, background: false, ..Default::default() },
+                router.clone(),
+                Objective::Energy,
+                Some(trainer),
+            )
+        };
+        let first = mk_online(0); // observe-only: buffer fills, no swaps
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        for i in 0..5 {
+            let mut o = obs_for(&coo, if i % 2 == 0 { Format::Csr } else { Format::Ell }, 1e-4);
+            o.requests = 1 + i as u64;
+            o.explored = i % 2 == 1;
+            first.observe(o);
+        }
+        let path = std::env::temp_dir().join("autospmv_obs_ckpt_test.tsv");
+        assert_eq!(first.save_observations(&path).unwrap(), 5);
+
+        // "restart": a fresh loop restores the window...
+        let second = mk_online(1000);
+        assert_eq!(second.load_observations(&path).unwrap(), 5);
+        assert_eq!(second.observed_requests(), first.observed_requests());
+        let (a, b) = (first.observer.snapshot(), second.observer.snapshot());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.matrix_id, y.matrix_id);
+            assert_eq!(x.format, y.format);
+            assert_eq!(x.explored, y.explored);
+            assert_eq!(x.requests, y.requests);
+            assert_eq!(x.measured_latency_s.to_bits(), y.measured_latency_s.to_bits());
+            assert_eq!(x.features, y.features);
+            assert_eq!(x.modeled, y.modeled);
+        }
+        // ...the restored history feeds the next retrain...
+        assert!(second.retrain_now().is_some(), "restored window must be trainable");
+        // ...but does not count as fresh traffic toward the cadence
+        let third = mk_online(1000);
+        third.load_observations(&path).unwrap();
+        third.observe(obs_for(&coo, Format::Csr, 1e-4));
+        assert_eq!(third.retrains(), 0, "5 restored + 1 fresh must not cross a cadence of 1000");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

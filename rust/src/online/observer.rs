@@ -20,6 +20,7 @@ use crate::dataset::Record;
 use crate::features::Features;
 use crate::gpusim::{KernelConfig, Measurement, MemConfig, Objective};
 use crate::sparse::Format;
+use anyhow::{bail, Context, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -117,6 +118,65 @@ impl Observer {
     pub fn snapshot(&self) -> Vec<Observation> {
         self.buf.lock().expect("observer lock").iter().copied().collect()
     }
+}
+
+/// Encode a buffer snapshot as dataset [`Record`]s so the observation
+/// window checkpoints through `dataset::store` across pool restarts.
+/// A `Record` has no slots for the per-dispatch bookkeeping, so the
+/// matrix-name field carries it:
+/// `ckpt-<matrix id>-<requests>-<explored>-<measured latency f64 bits>`
+/// (hex fields). Features and the modeled measurement round-trip
+/// bit-exactly through the store's shortest-unique float formatting;
+/// the config slot is [`model_config`] of the executed format, exactly
+/// as [`to_training`] would emit it.
+pub fn to_records(obs: &[Observation], arch: &str) -> Vec<Record> {
+    obs.iter()
+        .map(|o| Record {
+            matrix: format!(
+                "ckpt-{:016x}-{:016x}-{}-{:016x}",
+                o.matrix_id,
+                o.requests,
+                u8::from(o.explored),
+                o.measured_latency_s.to_bits()
+            ),
+            arch: arch.to_string(),
+            config: model_config(o.format),
+            features: o.features,
+            m: o.modeled,
+        })
+        .collect()
+}
+
+/// Decode a checkpoint written by [`to_records`]. Rejects records whose
+/// matrix name does not carry the checkpoint encoding — a checkpoint
+/// file holds nothing else, so a mismatch means the wrong file.
+pub fn from_records(records: &[Record]) -> Result<Vec<Observation>> {
+    records
+        .iter()
+        .map(|r| {
+            let fields: Vec<&str> = r.matrix.split('-').collect();
+            if fields.len() != 5 || fields[0] != "ckpt" {
+                bail!("not an observation checkpoint record: {}", r.matrix);
+            }
+            let matrix_id = u64::from_str_radix(fields[1], 16).context("ckpt matrix id")?;
+            let requests = u64::from_str_radix(fields[2], 16).context("ckpt requests")?;
+            let explored = match fields[3] {
+                "0" => false,
+                "1" => true,
+                other => bail!("ckpt explored flag {other}"),
+            };
+            let lat_bits = u64::from_str_radix(fields[4], 16).context("ckpt latency bits")?;
+            Ok(Observation {
+                matrix_id,
+                features: r.features,
+                format: r.config.format,
+                explored,
+                requests,
+                measured_latency_s: f64::from_bits(lat_bits),
+                modeled: r.m,
+            })
+        })
+        .collect()
 }
 
 /// Stable key for "the same feature vector": grouping unit for label
@@ -304,6 +364,44 @@ mod tests {
         assert_eq!(snap[0].matrix_id, 7, "oldest entries dropped first");
         assert!(!o.is_empty());
         assert_eq!(o.capacity(), 4);
+    }
+
+    #[test]
+    fn checkpoint_records_roundtrip_bit_exactly() {
+        let mut a = obs(123.0, Format::Ell, 3.25e-4, 7.5e-7);
+        a.matrix_id = 0xDEAD_BEEF;
+        a.requests = 17;
+        a.explored = true;
+        let b = obs(9.0, Format::Csr, 1e-12, 4.2e-3);
+        let records = to_records(&[a, b], "GTX1650m-Turing");
+        assert_eq!(records.len(), 2);
+        assert!(records[0].matrix.starts_with("ckpt-"));
+        assert_eq!(records[0].arch, "GTX1650m-Turing");
+        let back = from_records(&records).unwrap();
+        assert_eq!(back.len(), 2);
+        for (orig, got) in [a, b].iter().zip(&back) {
+            assert_eq!(got.matrix_id, orig.matrix_id);
+            assert_eq!(got.format, orig.format);
+            assert_eq!(got.explored, orig.explored);
+            assert_eq!(got.requests, orig.requests);
+            assert_eq!(
+                got.measured_latency_s.to_bits(),
+                orig.measured_latency_s.to_bits(),
+                "measured latency must survive bit-exactly"
+            );
+            assert_eq!(got.features, orig.features);
+            assert_eq!(got.modeled, orig.modeled);
+        }
+    }
+
+    #[test]
+    fn checkpoint_decode_rejects_foreign_records() {
+        let mut r = to_records(&[obs(1.0, Format::Csr, 1.0, 1e-6)], "a");
+        r[0].matrix = "online-0123456789abcdef".into(); // a to_training record
+        assert!(from_records(&r).is_err());
+        let mut r2 = to_records(&[obs(1.0, Format::Csr, 1.0, 1e-6)], "a");
+        r2[0].matrix = "ckpt-xyz-0-0-0".into();
+        assert!(from_records(&r2).is_err());
     }
 
     #[test]

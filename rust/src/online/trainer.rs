@@ -44,6 +44,11 @@ impl Trainer {
         self.objective
     }
 
+    /// Deployment profile name (tags observation checkpoints too).
+    pub fn arch(&self) -> &str {
+        &self.arch_name
+    }
+
     /// Offline examples the base dataset contributes to every retrain.
     pub fn offline_examples(&self) -> usize {
         self.offline_examples.len()

@@ -14,6 +14,9 @@ use std::path::{Path, PathBuf};
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Kind {
     Spmv,
+    /// Multi-vector batch kernel `Y = A X` (X is `(ncols, cols)`); one
+    /// launch serves a whole coalesced request group.
+    Spmm,
     Power,
 }
 
@@ -46,6 +49,19 @@ impl ArtifactSpec {
     pub fn slice_h(&self) -> usize {
         self.extra.get("h").copied().unwrap_or(8)
     }
+
+    /// Batch bucket of an SpMM artifact: input vectors per launch
+    /// (`nc` in the manifest extras; 1 for plain SpMV variants).
+    pub fn ncols(&self) -> usize {
+        self.extra.get("nc").copied().unwrap_or(1).max(1)
+    }
+}
+
+/// Launches needed to cover a `k`-vector batch with a `bucket`-wide SpMM
+/// artifact: one launch up to the bucket, chunking only beyond it. The
+/// final chunk pads with zero vectors up to the bucket width.
+pub fn spmm_launches(k: usize, bucket: usize) -> usize {
+    k.div_ceil(bucket.max(1))
 }
 
 /// Parsed manifest with variant lookup.
@@ -78,6 +94,7 @@ impl ArtifactIndex {
             }
             let kind = match c[1] {
                 "spmv" => Kind::Spmv,
+                "spmm" => Kind::Spmm,
                 "power" => Kind::Power,
                 other => bail!("unknown artifact kind {other}"),
             };
@@ -133,6 +150,58 @@ impl ArtifactIndex {
                 && s.width >= Self::required_width(fmt, dims)
         };
         let candidates: Vec<&ArtifactSpec> = self.specs.iter().filter(fits).collect();
+        Self::pick_in_smallest_bucket(candidates, choice)
+    }
+
+    /// Select an SpMM (multi-vector) variant for a `k`-vector batch of a
+    /// matrix in `fmt`, or `None` when no SpMM artifact fits the shape
+    /// (callers fall back to the per-vector prepared path). Within the
+    /// smallest enclosing shape bucket the batch bucket is the smallest
+    /// `ncols >= k`; when `k` exceeds every compiled bucket the widest
+    /// one wins and the caller chunks (see [`spmm_launches`]).
+    pub fn select_spmm(
+        &self,
+        fmt: Format,
+        dims: &MatrixDims,
+        k: usize,
+        choice: Option<(u32, u32, MemConfig)>,
+    ) -> Option<&ArtifactSpec> {
+        let fits = |s: &&ArtifactSpec| {
+            s.kind == Kind::Spmm
+                && s.fmt == fmt
+                && s.rows >= dims.n_rows
+                && s.cols >= dims.n_cols
+                && s.width >= Self::required_width(fmt, dims)
+        };
+        let candidates: Vec<&ArtifactSpec> = self.specs.iter().filter(fits).collect();
+        if candidates.is_empty() {
+            return None;
+        }
+        let min_key = candidates
+            .iter()
+            .map(|s| (s.rows, s.cols, s.width))
+            .min()
+            .unwrap();
+        let in_bucket: Vec<&ArtifactSpec> = candidates
+            .into_iter()
+            .filter(|s| (s.rows, s.cols, s.width) == min_key)
+            .collect();
+        // batch bucket: smallest covering ncols, else the widest (chunk)
+        let ncols = match in_bucket.iter().map(|s| s.ncols()).filter(|n| *n >= k).min() {
+            Some(n) => n,
+            None => in_bucket.iter().map(|s| s.ncols()).max().unwrap(),
+        };
+        let same_ncols: Vec<&ArtifactSpec> =
+            in_bucket.into_iter().filter(|s| s.ncols() == ncols).collect();
+        Self::knob_break(same_ncols, choice)
+    }
+
+    /// Shared tail of variant selection: keep the smallest enclosing
+    /// (rows, cols, width) bucket, then apply the knob preference.
+    fn pick_in_smallest_bucket<'a>(
+        candidates: Vec<&'a ArtifactSpec>,
+        choice: Option<(u32, u32, MemConfig)>,
+    ) -> Option<&'a ArtifactSpec> {
         if candidates.is_empty() {
             return None;
         }
@@ -146,6 +215,13 @@ impl ArtifactIndex {
             .into_iter()
             .filter(|s| (s.rows, s.cols, s.width) == min_key)
             .collect();
+        Self::knob_break(in_bucket, choice)
+    }
+
+    fn knob_break<'a>(
+        in_bucket: Vec<&'a ArtifactSpec>,
+        choice: Option<(u32, u32, MemConfig)>,
+    ) -> Option<&'a ArtifactSpec> {
         match choice {
             None => in_bucket.first().copied(),
             Some((tb, regs, mem)) => {
@@ -284,6 +360,45 @@ mod tests {
         std::fs::write(d.join("manifest.tsv"), "wrong").unwrap();
         assert!(ArtifactIndex::load(&d).is_err());
         std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn spmm_selection_picks_batch_bucket_and_falls_back() {
+        let d = tmpdir("spmm");
+        write_manifest(
+            &d,
+            &[
+                "s4\tspmm\tell\t256\t256\t16\t64\t8\tresident\tnc=4\ts4.hlo\tf32:1",
+                "s16\tspmm\tell\t256\t256\t16\t64\t8\tresident\tnc=16\ts16.hlo\tf32:1",
+                "e1\tspmv\tell\t256\t256\t16\t64\t8\tresident\t-\te1.hlo\tf32:1",
+            ],
+        );
+        let idx = ArtifactIndex::load(&d).unwrap();
+        let dims = MatrixDims { n_rows: 200, n_cols: 200, nnz: 900, max_row_len: 9, bell_kb: 4 };
+        // k = 1 rides the narrowest covering bucket
+        assert_eq!(idx.select_spmm(Format::Ell, &dims, 1, None).unwrap().name, "s4");
+        // k = bucket is still one launch of that bucket
+        assert_eq!(idx.select_spmm(Format::Ell, &dims, 4, None).unwrap().name, "s4");
+        // k = bucket + 1 escalates to the next bucket, not to chunking
+        assert_eq!(idx.select_spmm(Format::Ell, &dims, 5, None).unwrap().name, "s16");
+        // k beyond every bucket picks the widest and the caller chunks
+        let wide = idx.select_spmm(Format::Ell, &dims, 33, None).unwrap();
+        assert_eq!(wide.name, "s16");
+        assert_eq!(wide.ncols(), 16);
+        // no SpMM artifact for this format -> None (per-vector fallback);
+        // plain spmv selection never returns an SpMM row
+        assert!(idx.select_spmm(Format::Csr, &dims, 4, None).is_none());
+        assert_eq!(idx.select(Format::Ell, &dims, None).unwrap().name, "e1");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn spmm_launch_chunking_arithmetic() {
+        assert_eq!(spmm_launches(1, 16), 1);
+        assert_eq!(spmm_launches(16, 16), 1, "k = bucket is ONE launch");
+        assert_eq!(spmm_launches(17, 16), 2, "k = bucket + 1 chunks once");
+        assert_eq!(spmm_launches(48, 16), 3);
+        assert_eq!(spmm_launches(5, 0), 5, "degenerate bucket degrades to per-vector");
     }
 
     #[test]

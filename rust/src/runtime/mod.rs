@@ -9,8 +9,8 @@ pub mod artifacts;
 pub mod pjrt;
 pub mod xla_shim;
 
-pub use artifacts::{knob_map, ArtifactIndex, ArtifactSpec, Kind, MatrixDims};
-pub use pjrt::Engine;
+pub use artifacts::{knob_map, spmm_launches, ArtifactIndex, ArtifactSpec, Kind, MatrixDims};
+pub use pjrt::{Engine, PreparedSpmm, PreparedSpmv};
 
 use std::path::PathBuf;
 

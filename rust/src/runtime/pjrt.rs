@@ -17,6 +17,7 @@ use crate::sparse::{Csr, Format};
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
+use std::rc::Rc;
 
 /// PJRT engine: client + compiled-executable cache.
 pub struct Engine {
@@ -109,15 +110,9 @@ impl Engine {
         self.run_prepared(&prep, x)
     }
 
-    /// Marshal a matrix into its artifact bucket once, for repeated
-    /// products. The x vector is every kernel's LAST input, so the
-    /// matrix-side literals can be cached and reused.
-    pub fn prepare(
-        &mut self,
-        matrix: &AnyFormat,
-        choice: Option<(u32, u32, MemConfig)>,
-    ) -> Result<PreparedSpmv> {
-        let (dims, n_rows, n_cols) = match matrix {
+    /// Bucket-selection dims + true (rows, cols) of any concrete format.
+    fn shape_of(matrix: &AnyFormat) -> (MatrixDims, usize, usize) {
+        match matrix {
             AnyFormat::Csr(m) => (Self::dims_of(m), m.n_rows, m.n_cols),
             AnyFormat::Ell(m) => (
                 MatrixDims {
@@ -152,15 +147,38 @@ impl Engine {
                 m.n_rows,
                 m.n_cols,
             ),
-        };
+        }
+    }
+
+    /// Marshal a matrix into its artifact bucket once, for repeated
+    /// products. The x vector is every kernel's LAST input, so the
+    /// matrix-side literals can be cached and reused.
+    pub fn prepare(
+        &mut self,
+        matrix: &AnyFormat,
+        choice: Option<(u32, u32, MemConfig)>,
+    ) -> Result<PreparedSpmv> {
+        let (dims, n_rows, n_cols) = Self::shape_of(matrix);
         let fmt = matrix.format();
         let spec = self
             .index
             .select(fmt, &dims, choice)
             .with_context(|| format!("no artifact bucket fits {fmt} {dims:?}"))?
             .clone();
+        let matrix_literals = Rc::new(Self::marshal_matrix(matrix, &spec)?);
+        Ok(PreparedSpmv {
+            spec,
+            matrix_literals,
+            n_rows,
+            x_len: n_cols,
+        })
+    }
 
-        let matrix_literals: Vec<xla::Literal> = match matrix {
+    /// Marshal a matrix into a variant's bucket layout — shared by the
+    /// SpMV and SpMM prepare paths (the matrix-side inputs of an SpMM
+    /// artifact are identical to its SpMV sibling's; only X changes).
+    fn marshal_matrix(matrix: &AnyFormat, spec: &ArtifactSpec) -> Result<Vec<xla::Literal>> {
+        let literals = match matrix {
             AnyFormat::Ell(m) => {
                 let (vals, cols) = m.to_kernel(spec.rows, spec.width);
                 vec![
@@ -208,12 +226,105 @@ impl Engine {
                 ]
             }
         };
-        Ok(PreparedSpmv {
+        Ok(literals)
+    }
+
+    /// Marshal a matrix against its SpMM (multi-vector) artifact, if one
+    /// is compiled for the shape. `Ok(None)` means no SpMM variant fits
+    /// — callers keep the per-vector prepared path (the seed inventory
+    /// predates SpMM, and quick CI artifact sets only cover ELL/CSR).
+    pub fn prepare_spmm(
+        &mut self,
+        matrix: &AnyFormat,
+        choice: Option<(u32, u32, MemConfig)>,
+    ) -> Result<Option<PreparedSpmm>> {
+        self.prepare_spmm_sharing(matrix, choice, None)
+    }
+
+    /// Like [`Engine::prepare_spmm`], but when an already-marshalled
+    /// per-vector preparation of the SAME matrix lives in an identical
+    /// bucket layout, its matrix-side literals are shared instead of
+    /// marshalled (and held) a second time — the padded arrays can
+    /// dwarf the source matrix, and SpMV/SpMM siblings of one shape
+    /// bucket take byte-identical inputs.
+    pub fn prepare_spmm_sharing(
+        &mut self,
+        matrix: &AnyFormat,
+        choice: Option<(u32, u32, MemConfig)>,
+        share: Option<&PreparedSpmv>,
+    ) -> Result<Option<PreparedSpmm>> {
+        let (dims, n_rows, n_cols) = Self::shape_of(matrix);
+        let fmt = matrix.format();
+        // usize::MAX asks for the widest compiled batch bucket: the
+        // executable is compiled once, narrow batches zero-pad into it,
+        // and only k > bucket chunks (acceptance: one launch per
+        // coalesced batch unless k exceeds the largest bucket).
+        let Some(spec) = self.index.select_spmm(fmt, &dims, usize::MAX, choice) else {
+            return Ok(None);
+        };
+        let spec = spec.clone();
+        let matrix_literals = match share {
+            Some(p) if same_matrix_layout(&p.spec, &spec) => Rc::clone(&p.matrix_literals),
+            _ => Rc::new(Self::marshal_matrix(matrix, &spec)?),
+        };
+        Ok(Some(PreparedSpmm {
             spec,
             matrix_literals,
             n_rows,
             x_len: n_cols,
-        })
+        }))
+    }
+
+    /// Execute a prepared SpMM against a whole coalesced batch: ONE
+    /// launch per `ncols`-bucket chunk. Each chunk builds a single
+    /// `(ncols, cols)` X literal — the k vectors padded to the bucket's
+    /// column count, missing batch rows zero-padded — and splits the
+    /// `(ncols, rows)` result back into per-vector outputs truncated to
+    /// the true row count. Bit-wise the kernel computes each output row
+    /// independently, so results match `run_prepared` per vector.
+    pub fn spmm_prepared(
+        &mut self,
+        prep: &PreparedSpmm,
+        xs: &[Vec<f32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        let bucket = prep.ncols();
+        let cols = prep.spec.cols;
+        let mut out: Vec<Vec<f32>> = Vec::with_capacity(xs.len());
+        for chunk in xs.chunks(bucket.max(1)) {
+            let mut xp = vec![0.0f32; bucket * cols];
+            for (i, x) in chunk.iter().enumerate() {
+                if x.len() != prep.x_len {
+                    bail!("x length {} != n_cols {}", x.len(), prep.x_len);
+                }
+                xp[i * cols..i * cols + x.len()].copy_from_slice(x);
+            }
+            let x_lit = xla::Literal::vec1(&xp)
+                .reshape(&[bucket as i64, cols as i64])
+                .map_err(|e| anyhow!("reshape X: {e:?}"))?;
+            let mut inputs: Vec<&xla::Literal> = prep.matrix_literals.iter().collect();
+            inputs.push(&x_lit);
+            let name = prep.spec.name.clone();
+            let exe = self.executable(&prep.spec)?;
+            let result = exe
+                .execute::<&xla::Literal>(&inputs)
+                .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+            let y_all = result
+                .to_tuple1()
+                .map_err(|e| anyhow!("untuple {name}: {e:?}"))?
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("to_vec {name}: {e:?}"))?;
+            self.exec_count += 1;
+            // (ncols, rows) row-major -> one padded row vector per input
+            out.extend(
+                y_all
+                    .chunks(prep.spec.rows)
+                    .take(chunk.len())
+                    .map(|y| y[..prep.n_rows].to_vec()),
+            );
+        }
+        Ok(out)
     }
 
     /// Execute a prepared product: only the x literal is built per call.
@@ -240,12 +351,11 @@ impl Engine {
         Ok(y)
     }
 
-    /// Execute a prepared matrix against a whole batch of input vectors —
-    /// the PJRT side of [`crate::sparse::SpMv::spmv_batch`]. The matrix
-    /// literals are marshalled once and the executable is resolved once;
-    /// only the x literal varies per vector. (A true multi-column SpMM
-    /// artifact is a compile-layer change tracked in ROADMAP.md; this is
-    /// the dispatch-side coalescing the serving pool relies on.)
+    /// Execute a prepared matrix against a batch of input vectors, one
+    /// launch per vector. This is the FALLBACK batch path for shapes
+    /// without a compiled SpMM artifact ([`Engine::prepare_spmm`]
+    /// returned `None`); when one exists, [`Engine::spmm_prepared`]
+    /// serves the whole batch in a single launch per bucket chunk.
     pub fn spmv_batch_prepared(
         &mut self,
         prep: &PreparedSpmv,
@@ -283,11 +393,28 @@ impl Engine {
     }
 }
 
+/// Do two variants take byte-identical matrix-side inputs? True when
+/// the shape bucket AND every layout-affecting extra (SELL slice
+/// height, BELL block dims) agree — the precondition for sharing
+/// marshalled literals between an SpMV and an SpMM preparation.
+fn same_matrix_layout(a: &ArtifactSpec, b: &ArtifactSpec) -> bool {
+    a.fmt == b.fmt
+        && a.rows == b.rows
+        && a.cols == b.cols
+        && a.width == b.width
+        && a.slice_h() == b.slice_h()
+        && a.bh() == b.bh()
+        && a.bw() == b.bw()
+}
+
 /// A matrix marshalled into its artifact bucket: cached literals + the
-/// selected variant. Create with [`Engine::prepare`].
+/// selected variant. Create with [`Engine::prepare`]. The literals sit
+/// behind an `Rc` so an SpMM sibling preparation can share them
+/// ([`Engine::prepare_spmm_sharing`]); nothing here is `Send` anyway —
+/// the engine is pinned to its shard thread.
 pub struct PreparedSpmv {
     spec: ArtifactSpec,
-    matrix_literals: Vec<xla::Literal>,
+    matrix_literals: Rc<Vec<xla::Literal>>,
     n_rows: usize,
     x_len: usize,
 }
@@ -295,6 +422,34 @@ pub struct PreparedSpmv {
 impl PreparedSpmv {
     pub fn variant_name(&self) -> &str {
         &self.spec.name
+    }
+}
+
+/// A matrix marshalled against its SpMM (multi-vector) artifact: the
+/// cached matrix-side literals (possibly shared with the per-vector
+/// preparation) plus the batch-bucket variant. Create with
+/// [`Engine::prepare_spmm`]; execute with [`Engine::spmm_prepared`].
+pub struct PreparedSpmm {
+    spec: ArtifactSpec,
+    matrix_literals: Rc<Vec<xla::Literal>>,
+    n_rows: usize,
+    x_len: usize,
+}
+
+impl PreparedSpmm {
+    pub fn variant_name(&self) -> &str {
+        &self.spec.name
+    }
+
+    /// Batch bucket: vectors consumed per launch.
+    pub fn ncols(&self) -> usize {
+        self.spec.ncols()
+    }
+
+    /// Launches a `k`-vector batch costs on this artifact (1 unless `k`
+    /// exceeds the compiled bucket).
+    pub fn launches_for(&self, k: usize) -> usize {
+        super::artifacts::spmm_launches(k, self.ncols())
     }
 }
 
@@ -343,6 +498,56 @@ mod tests {
         assert_eq!(d.nnz, csr.vals.len());
         assert!(d.max_row_len >= 1);
         assert!(d.bell_kb >= 1);
+    }
+
+    #[test]
+    fn prepared_spmm_reports_bucket_and_chunking() {
+        let spec = ArtifactSpec {
+            name: "spmm_test".into(),
+            kind: super::super::artifacts::Kind::Spmm,
+            fmt: Format::Ell,
+            rows: 256,
+            cols: 256,
+            width: 16,
+            block_rows: 64,
+            chunk_width: 8,
+            x_placement: "resident".into(),
+            extra: HashMap::from([("nc".to_string(), 8usize)]),
+            path: std::path::PathBuf::from("spmm_test.hlo.txt"),
+        };
+        let prep =
+            PreparedSpmm { spec, matrix_literals: Rc::new(vec![]), n_rows: 200, x_len: 200 };
+        assert_eq!(prep.ncols(), 8);
+        assert_eq!(prep.variant_name(), "spmm_test");
+        assert_eq!(prep.launches_for(1), 1);
+        assert_eq!(prep.launches_for(8), 1, "k = bucket stays one launch");
+        assert_eq!(prep.launches_for(9), 2, "only k > bucket chunks");
+    }
+
+    #[test]
+    fn layout_sharing_requires_identical_buckets() {
+        let spec = |fmt, rows, extra: &[(&str, usize)]| ArtifactSpec {
+            name: "s".into(),
+            kind: super::super::artifacts::Kind::Spmm,
+            fmt,
+            rows,
+            cols: 256,
+            width: 16,
+            block_rows: 64,
+            chunk_width: 8,
+            x_placement: "resident".into(),
+            extra: extra.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+            path: std::path::PathBuf::from("s.hlo.txt"),
+        };
+        let a = spec(Format::Ell, 256, &[]);
+        assert!(same_matrix_layout(&a, &spec(Format::Ell, 256, &[("nc", 8)])),
+            "the batch bucket does not change the matrix-side layout");
+        assert!(!same_matrix_layout(&a, &spec(Format::Ell, 1024, &[])));
+        assert!(!same_matrix_layout(&a, &spec(Format::Sell, 256, &[])));
+        assert!(!same_matrix_layout(
+            &spec(Format::Sell, 256, &[("h", 8)]),
+            &spec(Format::Sell, 256, &[("h", 32)])
+        ));
     }
 
     #[test]

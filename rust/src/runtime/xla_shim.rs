@@ -7,7 +7,10 @@
 //! construction fails (there is no PJRT plugin to talk to), which the
 //! serving layer already treats as "fall back to the native backend";
 //! [`Literal`] shape bookkeeping is real, so marshalling helpers and
-//! their unit tests behave identically to the real crate. A future PR
+//! their unit tests behave identically to the real crate — including
+//! the SpMM batch path, whose `(ncols, cols)` X literal and
+//! `(ncols, rows)` result ride the same `vec1` + `reshape` surface. A
+//! future PR
 //! that restores the genuine dependency only needs to swap the
 //! `use super::xla_shim as xla;` alias in `pjrt.rs`.
 

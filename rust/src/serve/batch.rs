@@ -5,7 +5,7 @@
 //! pay zero added latency), then optionally holds the batch open for a
 //! short admission window so concurrent clients hitting an idle shard
 //! can still coalesce. The collected batch is grouped by matrix id and
-//! each group executes as ONE `spmv_batch` dispatch.
+//! each group executes as ONE SpMM dispatch.
 //!
 //! Non-product messages observed while draining are pushed onto the
 //! shard's backlog and handled right after the batch, so a registration

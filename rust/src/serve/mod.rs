@@ -10,10 +10,13 @@
 //!   shard, so converted forms and prepared literals stay hot.
 //! * **Admission + coalescing** ([`batch`]): each shard drains its queue
 //!   before executing, groups concurrent requests for the same matrix,
-//!   and dispatches one multi-vector [`crate::sparse::SpMv::spmv_batch`]
-//!   per group (native SpMM-style streaming, or the prepared-literal
-//!   PJRT path). An optional admission window holds the first request
-//!   briefly so concurrent clients coalesce even on an idle shard.
+//!   and dispatches one true SpMM per group — the native
+//!   [`crate::sparse::SpMv::spmm`] one-matrix-walk, or a multi-vector
+//!   SpMM artifact executing the whole batch in ONE kernel launch on
+//!   PJRT (per-vector prepared literals remain as the fallback when no
+//!   SpMM variant is compiled). An optional admission window holds the
+//!   first request briefly so concurrent clients coalesce even on an
+//!   idle shard; `PoolStats::launches_per_request` reports the win.
 //! * **Bounded conversion cache** ([`cache`]): converted matrices (the
 //!   padded ELL/SELL/BELL forms that can dwarf the CSR source) live in a
 //!   per-shard LRU with capacity eviction; the registered CSR source is

@@ -4,7 +4,7 @@
 //! backend (PJRT clients are not `Send`). Matrix ids are partitioned
 //! across shards by a splitmix hash, so one matrix's requests always
 //! meet on the same worker — that is what lets the admission queue
-//! coalesce them into multi-vector `spmv_batch` dispatches and keeps
+//! coalesce them into single-launch SpMM dispatches and keeps
 //! conversion/prepared-literal state shard-local with no cross-thread
 //! synchronization on the execute path.
 //!
@@ -71,6 +71,12 @@ pub struct PoolStats {
     /// Kernel dispatches; `requests - dispatches` products were served
     /// "for free" by coalescing.
     pub dispatches: u64,
+    /// Kernel launches. One per batch (per bucket chunk) on the SpMM
+    /// paths; one per request on the per-vector prepared fallback —
+    /// see [`PoolStats::launches_per_request`].
+    pub launches: u64,
+    /// Dispatches executed through a true SpMM path.
+    pub spmm_dispatches: u64,
     pub coalesced_batches: u64,
     pub batched_requests: u64,
     pub max_batch: u64,
@@ -113,6 +119,17 @@ impl PoolStats {
             "unknown".to_string()
         } else {
             names.join("+")
+        }
+    }
+
+    /// Kernel launches per served request — the batching win in one
+    /// number: 1.0 means every product paid its own launch; a coalesced
+    /// SpMM workload drives this below 1 (0 when nothing served yet).
+    pub fn launches_per_request(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.launches as f64 / self.requests as f64
         }
     }
 
@@ -250,6 +267,8 @@ impl Pool {
         Ok(PoolStats {
             requests: t.requests.load(Ordering::Relaxed),
             dispatches: t.dispatches.load(Ordering::Relaxed),
+            launches: t.launches.load(Ordering::Relaxed),
+            spmm_dispatches: t.spmm_dispatches.load(Ordering::Relaxed),
             coalesced_batches: t.coalesced_batches.load(Ordering::Relaxed),
             batched_requests: t.batched_requests.load(Ordering::Relaxed),
             max_batch: t.max_batch.load(Ordering::Relaxed),
@@ -370,6 +389,9 @@ mod tests {
         }
         let stats = pool.stats().unwrap();
         assert_eq!(stats.requests, 6);
+        // sequential callers never coalesce: one launch per request
+        assert_eq!(stats.launches, 6);
+        assert!((stats.launches_per_request() - 1.0).abs() < 1e-12);
         assert_eq!(stats.per_matrix.len(), 1);
         let m = &stats.per_matrix[0];
         assert_eq!(m.id, 1);
@@ -430,6 +452,17 @@ mod tests {
         assert!(stats.dispatches < 8, "coalescing must save dispatches");
         assert!(stats.coalesced_batches >= 1);
         assert!(responses.iter().any(|r| r.batch_size > 1));
+        // SpMM launch accounting: the native backend serves each
+        // coalesced group in ONE matrix walk, so launches == dispatches
+        // and the per-request launch cost drops below 1.
+        assert_eq!(stats.launches, stats.dispatches);
+        assert_eq!(stats.spmm_dispatches, stats.dispatches);
+        assert!(
+            stats.launches_per_request() < 1.0,
+            "coalesced batches must amortize launches: {} launches / {} requests",
+            stats.launches,
+            stats.requests
+        );
         // batched results still correct
         let csr = coo_to_csr(&gen::by_name("rim").unwrap().generate(1));
         for (r, resp) in responses.iter().enumerate() {

@@ -7,7 +7,10 @@
 //! forms live in a capacity-bounded LRU keyed by `(matrix, format)` — a
 //! post-eviction request re-converts from the retained source. Product
 //! requests are coalesced by [`super::batch`] and dispatched through
-//! `spmv_batch`.
+//! the SpMM entry points: `SpMv::spmm` on the native backend, a
+//! multi-vector SpMM artifact (one launch per batch) on PJRT, with the
+//! per-vector prepared path as the fallback when no SpMM variant is
+//! compiled for the shape.
 //!
 //! When the pool runs with the closed loop attached
 //! ([`crate::online`]), three things happen here and nowhere else:
@@ -25,9 +28,9 @@ use super::cache::Lru;
 use super::telemetry::{MatrixTelemetry, Telemetry};
 use super::Response;
 use crate::features::Features;
-use crate::gpusim::{simulate, GpuArch, Measurement};
+use crate::gpusim::{simulate, GpuArch, KernelProfile, Measurement};
 use crate::online::{Observation, Online, RouteChoice, SwapRouter};
-use crate::runtime::pjrt::PreparedSpmv;
+use crate::runtime::pjrt::{PreparedSpmm, PreparedSpmv};
 use crate::sparse::convert::{self, AnyFormat, ConvertParams};
 use crate::sparse::{Coo, Csr, Format, SpMv};
 use anyhow::{anyhow, Result};
@@ -131,12 +134,16 @@ fn cache_key(id: u64, format: Format) -> CacheKey {
 }
 
 /// A cache entry: the converted form, PJRT-marshalled literals when the
-/// backend compiles artifacts, and the gpusim-modeled per-product
-/// measurement for THIS format (the telemetry/observation energy
-/// source).
+/// backend compiles artifacts (per-vector AND, when the inventory has
+/// one, the multi-vector SpMM variant), the workload profile, and the
+/// gpusim-modeled per-product measurement for THIS format (the
+/// telemetry/observation energy source; batched dispatches re-model
+/// from `profile` so the matrix stream is charged once per batch).
 struct CachedMatrix {
     matrix: AnyFormat,
     prepared: Option<PreparedSpmv>,
+    prepared_spmm: Option<PreparedSpmm>,
+    profile: Option<KernelProfile>,
     model: Measurement,
 }
 
@@ -226,18 +233,50 @@ fn build_cached(
     cfg: &ShardCfg,
 ) -> Result<CachedMatrix> {
     let matrix = convert::convert(csr, format, cfg.convert);
-    let prepared = match backend {
-        Backend::Pjrt(engine) => Some(engine.prepare(&matrix, None)?),
-        Backend::Native => None,
+    let (prepared, prepared_spmm) = match backend {
+        Backend::Pjrt(engine) => {
+            let prepared = Some(engine.prepare(&matrix, None)?);
+            // a missing SpMM variant is a fallback, never an error; a
+            // same-bucket variant shares the marshalled literals
+            let prepared_spmm = engine.prepare_spmm_sharing(&matrix, None, prepared.as_ref())?;
+            (prepared, prepared_spmm)
+        }
+        Backend::Native => (None, None),
     };
-    let model = if csr.vals.is_empty() {
-        Measurement { latency_s: 0.0, energy_j: 0.0, avg_power_w: 0.0, mflops_per_watt: 0.0 }
+    let (profile, model) = if csr.vals.is_empty() {
+        (
+            None,
+            Measurement { latency_s: 0.0, energy_j: 0.0, avg_power_w: 0.0, mflops_per_watt: 0.0 },
+        )
     } else {
         let prof = crate::gpusim::profile(csr, format, cfg.convert);
         let knobs = crate::online::observer::model_config(format);
-        simulate(&cfg.arch, &prof, &knobs).0
+        let m = simulate(&cfg.arch, &prof, &knobs).0;
+        (Some(prof), m)
     };
-    Ok(CachedMatrix { matrix, prepared, model })
+    Ok(CachedMatrix { matrix, prepared, prepared_spmm, profile, model })
+}
+
+/// Per-request share of one batched dispatch's modeled cost: simulate
+/// the k-vector SpMM launch (matrix stream charged once) and split the
+/// extensive objectives across the batch. Falls back to the cached
+/// single-product model for k = 1 or an empty profile.
+fn batch_model(cached: &CachedMatrix, format: Format, k: usize, arch: &GpuArch) -> Measurement {
+    if k <= 1 {
+        return cached.model;
+    }
+    let Some(prof) = &cached.profile else {
+        return cached.model;
+    };
+    let knobs = crate::online::observer::model_config(format);
+    let (m, _) = simulate(arch, &prof.batched(k as u64), &knobs);
+    Measurement {
+        latency_s: m.latency_s / k as f64,
+        energy_j: m.energy_j / k as f64,
+        // power and MFLOPS/W are already rates over the whole launch
+        avg_power_w: m.avg_power_w,
+        mflops_per_watt: m.mflops_per_watt,
+    }
 }
 
 #[allow(clippy::too_many_arguments)] // worker-local state is deliberately split for borrow granularity
@@ -397,7 +436,7 @@ fn ensure_cached(
 }
 
 /// Execute one coalesced group of requests for a single matrix as ONE
-/// `spmv_batch` dispatch.
+/// SpMM dispatch.
 #[allow(clippy::too_many_arguments)] // worker-local state is deliberately split for borrow granularity
 fn execute_group(
     backend: &mut Backend,
@@ -468,23 +507,57 @@ fn execute_group(
     };
 
     // One dispatch for the whole group (timed: the execution seconds,
-    // queue wait excluded, are the online loop's latency label).
+    // queue wait excluded, are the online loop's latency label). The
+    // batch rides the cheapest launch schedule available: native spmm
+    // walks the matrix once (1 launch); a compiled SpMM artifact
+    // executes one launch per bucket chunk; the per-vector prepared
+    // path is the fallback at one launch per request.
+    let batch_size = xs.len();
     let exec_start = Instant::now();
-    let result: Result<Vec<Vec<f32>>> = match backend {
-        Backend::Native => Ok(cached.matrix.as_spmv().spmv_batch(&xs)),
-        Backend::Pjrt(engine) => match &cached.prepared {
-            Some(prep) => engine.spmv_batch_prepared(prep, &xs),
-            None => xs.iter().map(|x| engine.spmv(&cached.matrix, x, None)).collect(),
-        },
+    let (result, launches, spmm_path): (Result<Vec<Vec<f32>>>, u64, bool) = match backend {
+        Backend::Native => (Ok(cached.matrix.as_spmv().spmm(&xs)), 1, true),
+        Backend::Pjrt(engine) => {
+            // a lone request rides the leaner per-vector artifact; the
+            // bucket-padded SpMM launch only pays off with a batch
+            let use_spmm = cached
+                .prepared_spmm
+                .as_ref()
+                .filter(|_| batch_size > 1 || cached.prepared.is_none());
+            if let Some(spmm) = use_spmm {
+                (
+                    engine.spmm_prepared(spmm, &xs),
+                    spmm.launches_for(batch_size) as u64,
+                    true,
+                )
+            } else if let Some(prep) = &cached.prepared {
+                (engine.spmv_batch_prepared(prep, &xs), batch_size as u64, false)
+            } else {
+                (
+                    xs.iter().map(|x| engine.spmv(&cached.matrix, x, None)).collect(),
+                    batch_size as u64,
+                    false,
+                )
+            }
+        }
     };
     let exec_s = exec_start.elapsed().as_secs_f64();
 
-    let batch_size = xs.len();
-    let model = cached.model;
+    // Batched SpMM dispatches charge the matrix stream once across the
+    // whole group; the per-vector fallback really does stream it per
+    // request, so its labels stay at the single-product model.
+    let model = if spmm_path {
+        batch_model(cached, route.format, batch_size, &cfg.arch)
+    } else {
+        cached.model
+    };
     match result {
         Ok(ys) => {
             let totals = &telemetry.totals;
             totals.dispatches.fetch_add(1, Ordering::Relaxed);
+            totals.launches.fetch_add(launches, Ordering::Relaxed);
+            if spmm_path {
+                totals.spmm_dispatches.fetch_add(1, Ordering::Relaxed);
+            }
             totals.requests.fetch_add(batch_size as u64, Ordering::Relaxed);
             totals.max_batch.fetch_max(batch_size as u64, Ordering::Relaxed);
             if batch_size > 1 {

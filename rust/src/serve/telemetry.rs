@@ -224,6 +224,15 @@ pub struct Counters {
     pub requests: AtomicU64,
     /// Kernel dispatches (one per executed batch, coalesced or not).
     pub dispatches: AtomicU64,
+    /// Kernel LAUNCHES. A native or SpMM-artifact dispatch serves its
+    /// whole batch in one launch per bucket chunk; the per-vector
+    /// prepared fallback pays one launch per request. `launches /
+    /// requests < 1` is the direct evidence batching amortizes the
+    /// matrix stream.
+    pub launches: AtomicU64,
+    /// Dispatches that executed through a true SpMM path (native
+    /// one-matrix-walk or a multi-vector PJRT artifact).
+    pub spmm_dispatches: AtomicU64,
     /// Dispatches that served more than one request.
     pub coalesced_batches: AtomicU64,
     /// Requests served by coalesced dispatches.

@@ -129,6 +129,42 @@ impl SpMv for Bell {
             }
         }
     }
+
+    /// SpMM override: each dense block is loaded once and contracted
+    /// against every vector in the batch before moving on. Per vector
+    /// the (block-row, block, row) visit order — and therefore the
+    /// accumulation order into `y[r]` — matches [`Bell::spmv`] exactly,
+    /// so results are bit-identical to independent products.
+    fn spmm(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        for x in xs {
+            assert_eq!(x.len(), self.n_cols);
+        }
+        let mut ys: Vec<Vec<f32>> = xs.iter().map(|_| vec![0.0f32; self.n_rows]).collect();
+        for ib in 0..self.nb {
+            let row0 = ib * self.bh;
+            for k in 0..self.kb {
+                let col0 = self.bcols[ib * self.kb + k] as usize * self.bw;
+                let blk = self.block_at(ib, k);
+                for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                    for i in 0..self.bh {
+                        let r = row0 + i;
+                        if r >= self.n_rows {
+                            break;
+                        }
+                        let mut acc = 0.0f32;
+                        for j in 0..self.bw {
+                            let c = col0 + j;
+                            if c < self.n_cols {
+                                acc += blk[i * self.bw + j] * x[c];
+                            }
+                        }
+                        y[r] += acc;
+                    }
+                }
+            }
+        }
+        ys
+    }
 }
 
 #[cfg(test)]

@@ -100,11 +100,11 @@ impl SpMv for Csr {
         }
     }
 
-    /// Batched override: streams the row arrays once for the whole batch
-    /// (the SpMM access pattern), keeping the per-(row, vector)
-    /// accumulation order identical to [`Csr::spmv`] so results stay
-    /// bit-identical to independent products.
-    fn spmv_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    /// SpMM override: streams the row arrays once for the whole batch,
+    /// keeping the per-(row, vector) accumulation order identical to
+    /// [`Csr::spmv`] so results stay bit-identical to independent
+    /// products.
+    fn spmm(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
         for x in xs {
             assert_eq!(x.len(), self.n_cols);
         }

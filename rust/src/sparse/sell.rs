@@ -109,6 +109,36 @@ impl SpMv for Sell {
             }
         }
     }
+
+    /// SpMM override: each ragged slice row is walked once and reduced
+    /// against every vector in the batch. Per vector the in-row j order
+    /// matches [`Sell::spmv`] exactly, so results are bit-identical to
+    /// independent products.
+    fn spmm(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        for x in xs {
+            assert_eq!(x.len(), self.n_cols);
+        }
+        let mut ys: Vec<Vec<f32>> = xs.iter().map(|_| vec![0.0f32; self.n_rows]).collect();
+        for s in 0..self.n_slices() {
+            let w = self.slice_width[s] as usize;
+            let base = self.slice_ptr[s] as usize;
+            for i in 0..self.h {
+                let r = s * self.h + i;
+                if r >= self.n_rows {
+                    break;
+                }
+                let rb = base + i * w;
+                for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                    let mut acc = 0.0f32;
+                    for j in 0..w {
+                        acc += self.vals[rb + j] * x[self.cols[rb + j] as usize];
+                    }
+                    y[r] = acc;
+                }
+            }
+        }
+        ys
+    }
 }
 
 #[cfg(test)]

@@ -1,4 +1,6 @@
-//! The SpMV operation trait: `y = A x` for every storage format.
+//! The SpMV operation trait: `y = A x` for every storage format, plus
+//! the batched SpMM entry point `Y = A X` the serving pool dispatches
+//! coalesced request groups through.
 
 /// Sparse (or dense) matrix-vector product.
 pub trait SpMv {
@@ -16,15 +18,23 @@ pub trait SpMv {
     }
 
     /// Compute `y_j = A x_j` for a batch of input vectors against one
-    /// resident matrix — the SpMV -> SpMM throughput lever the serving
+    /// resident matrix — true SpMM, the throughput lever the serving
     /// pool's request coalescing dispatches through. The contract is
     /// bit-identical results to `spmv_alloc` on each vector (same
     /// accumulation order per output element), so batched and unbatched
-    /// serving paths are interchangeable; formats with a streaming
-    /// advantage (CSR, ELL) override this to walk the matrix once for
-    /// the whole batch.
-    fn spmv_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    /// serving paths are interchangeable. Every concrete format
+    /// (CSR/ELL/BELL/SELL) overrides this to walk its matrix arrays
+    /// ONCE for the whole batch; the default is the per-vector loop for
+    /// formats without a streaming advantage (COO, dense).
+    fn spmm(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
         xs.iter().map(|x| self.spmv_alloc(x)).collect()
+    }
+
+    /// Historical name of [`SpMv::spmm`] (pre-SpMM serving called the
+    /// batched dispatch `spmv_batch`); kept as a delegating alias so
+    /// existing callers keep working. Override `spmm`, not this.
+    fn spmv_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        self.spmm(xs)
     }
 
     /// FLOPs of one product (2 per stored multiply-add on real non-zeros) —
@@ -55,21 +65,23 @@ mod tests {
     }
 
     #[test]
-    fn default_spmv_batch_matches_individual_products() {
+    fn default_spmm_matches_individual_products() {
         let mut a = Coo::new(3, 2);
         a.push(0, 0, 2.0);
         a.push(2, 1, -1.5);
         let xs = vec![vec![1.0, 2.0], vec![-3.0, 0.5]];
-        let ys = a.spmv_batch(&xs);
+        let ys = a.spmm(&xs);
         assert_eq!(ys.len(), 2);
         for (x, y) in xs.iter().zip(&ys) {
             assert_eq!(*y, a.spmv_alloc(x));
         }
+        // the legacy alias routes through spmm
+        assert_eq!(a.spmv_batch(&xs), ys);
     }
 
     #[test]
     fn empty_batch_is_empty() {
         let a = Coo::new(2, 2);
-        assert!(a.spmv_batch(&[]).is_empty());
+        assert!(a.spmm(&[]).is_empty());
     }
 }

@@ -205,3 +205,44 @@ fn pjrt_matches_native_on_corpus_sample() {
     }
     let _ = gen::corpus();
 }
+
+#[test]
+fn spmm_prepared_matches_per_vector_at_ragged_batch_widths() {
+    let Some(dir) = artifacts() else { return };
+    let mut engine = Engine::new(&dir).expect("engine");
+    let csr = small_csr();
+    let m = convert::convert(&csr, Format::Ell, ConvertParams::default());
+    let Some(spmm) = engine.prepare_spmm(&m, None).expect("prepare_spmm") else {
+        eprintln!("SKIP: no SpMM artifact for ELL (re-run `make artifacts`)");
+        return;
+    };
+    let prep = engine.prepare(&m, None).expect("prepare");
+    let bucket = spmm.ncols();
+    assert!(bucket > 1, "SpMM artifacts carry a batch bucket > 1");
+    // ragged batch widths around the bucket: under, exactly, just over
+    for k in [1usize, bucket, bucket + 1] {
+        let xs: Vec<Vec<f32>> = (0..k)
+            .map(|r| {
+                (0..csr.n_cols)
+                    .map(|i| ((i * 3 + r * 7) % 11) as f32 * 0.25 - 1.0)
+                    .collect()
+            })
+            .collect();
+        let exec0 = engine.exec_count;
+        let batch = engine.spmm_prepared(&spmm, &xs).expect("spmm_prepared");
+        let launches = (engine.exec_count - exec0) as usize;
+        assert_eq!(
+            launches,
+            spmm.launches_for(k),
+            "k={k}: a coalesced batch executes in one launch per bucket chunk"
+        );
+        assert_eq!(batch.len(), k);
+        for (j, x) in xs.iter().enumerate() {
+            let want = engine.run_prepared(&prep, x).expect("run_prepared");
+            assert_eq!(
+                batch[j], want,
+                "k={k} vector {j}: SpMM output must be bit-identical to run_prepared"
+            );
+        }
+    }
+}

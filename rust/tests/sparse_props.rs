@@ -4,9 +4,10 @@
 //! Invariants:
 //!  * every format conversion preserves the SpMV product;
 //!  * conversion round trips preserve CSR exactly;
-//!  * batched products (`spmv_batch`) are bit-identical to independent
-//!    `spmv_alloc` calls, for every format (the serving pool's
-//!    coalescing correctness contract);
+//!  * batched products (`spmm`, plus its `spmv_batch` alias) are
+//!    bit-identical to independent `spmv_alloc` calls, for every format
+//!    and ragged batch widths (the serving pool's coalescing
+//!    correctness contract);
 //!  * kernel marshalling (padded bucket arrays) preserves the product;
 //!  * feature extraction is format-independent;
 //!  * routing/labeling invariants (best <= default under each objective).
@@ -76,11 +77,19 @@ fn prop_roundtrips_preserve_csr() {
 }
 
 #[test]
-fn prop_spmv_batch_matches_independent_products_bit_for_bit() {
-    assert_prop("spmv_batch == k x spmv_alloc", 0xC6, 50, 200, |rng, size| {
+fn prop_spmm_matches_independent_products_bit_for_bit() {
+    // Every format overrides `spmm` with a one-matrix-walk batch kernel;
+    // the contract is bit-identity per vector, for ragged batch widths
+    // (k = 1 up to past the serving pool's common bucket sizes).
+    assert_prop("spmm == k x spmv_alloc", 0xC6, 50, 200, |rng, size| {
         let coo = arb_coo(rng, size);
         let csr = convert::coo_to_csr(&coo);
-        let k = 1 + size % 5;
+        let k = match size % 4 {
+            0 => 1,             // degenerate batch
+            1 => 3,             // under any bucket
+            2 => 8,             // a common bucket width
+            _ => 9,             // bucket + 1 (the chunking edge)
+        };
         let xs: Vec<Vec<f32>> = (0..k).map(|_| arb_x(rng, coo.n_cols)).collect();
         for fmt in Format::ALL {
             for params in [
@@ -88,7 +97,7 @@ fn prop_spmv_batch_matches_independent_products_bit_for_bit() {
                 ConvertParams::default(),
             ] {
                 let m = convert::convert(&csr, fmt, params);
-                let batch = m.as_spmv().spmv_batch(&xs);
+                let batch = m.as_spmv().spmm(&xs);
                 if batch.len() != k {
                     return Err(format!("{fmt}: batch len {} != {k}", batch.len()));
                 }
@@ -100,6 +109,10 @@ fn prop_spmv_batch_matches_independent_products_bit_for_bit() {
                     if batch[j] != want {
                         return Err(format!("{fmt} {params:?}: vector {j} differs"));
                     }
+                }
+                // the legacy alias must keep routing through spmm
+                if m.as_spmv().spmv_batch(&xs) != batch {
+                    return Err(format!("{fmt}: spmv_batch alias diverged from spmm"));
                 }
             }
         }
