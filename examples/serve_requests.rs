@@ -184,6 +184,10 @@ fn main() -> anyhow::Result<()> {
         format!("{} / {}", stats.explored_requests, stats.migrations),
     ]);
     t.row(vec![
+        "knob migrations / UCB routes".into(),
+        format!("{} / {}", stats.knob_migrations, stats.ucb_routes),
+    ]);
+    t.row(vec![
         "drift".into(),
         stats.drift.map_or("off".to_string(), |d| d.to_string()),
     ]);
@@ -194,13 +198,17 @@ fn main() -> anyhow::Result<()> {
     let quant = |q: Option<f64>| q.map_or("-".to_string(), |v| format!("{v:.1}"));
     let mut pm = Table::new(
         "Per-matrix telemetry (energy modeled on the Turing profile)",
-        &["matrix", "format", "requests", "p50 (us)", "p99 (us)", "energy (J)", "decisions"],
+        &[
+            "matrix", "format", "knobs", "requests", "p50 (us)", "p99 (us)", "energy (J)",
+            "decisions",
+        ],
     );
     for m in &stats.per_matrix {
         let name = fleet.get(m.id as usize).map_or("?", |(n, _)| *n);
         pm.row(vec![
             name.into(),
             m.format.map_or("?".to_string(), |f| f.to_string()),
+            m.knobs.map_or("?".to_string(), |k| k.to_string()),
             m.requests.to_string(),
             quant(m.p50_us),
             quant(m.p99_us),

@@ -59,12 +59,16 @@ def extra_str(v: Variant) -> str:
     return ";".join(parts) if parts else "-"
 
 
+def artifact_name(v: Variant, kind: str) -> str:
+    prefix = "" if kind == "spmv" else f"{kind}_"
+    return f"{prefix}{v.name}.hlo.txt"
+
+
 def lower_one(build, v: Variant, out_dir: str, kind: str) -> str:
     fn, example = build(v)
     lowered = jax.jit(fn).lower(*example)
     text = to_hlo_text(lowered)
-    prefix = "" if kind == "spmv" else f"{kind}_"
-    fname = f"{prefix}{v.name}.hlo.txt"
+    fname = artifact_name(v, kind)
     with open(os.path.join(out_dir, fname), "w") as f:
         f.write(text)
     return fname
@@ -75,30 +79,45 @@ def main() -> None:
     ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
     ap.add_argument("--quick", action="store_true",
                     help="compile only the minimal CI subset")
+    ap.add_argument("--manifest-only", action="store_true",
+                    help="write manifest.tsv without lowering any HLO "
+                         "(CI schema-drift gate: the emitted rows are "
+                         "round-tripped through the Rust parser)")
     # legacy flag kept so `python -m compile.aot --out X` still works
     ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args()
 
     out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    if args.manifest_only and os.path.exists(os.path.join(out_dir, "model.hlo.txt")):
+        # the sentinel marks a LOWERED inventory: replacing its manifest
+        # with schema-only rows (and no HLO) would silently shrink or
+        # break the artifact set the runtime serves from
+        ap.error(f"--manifest-only refuses to clobber the lowered inventory "
+                 f"in {out_dir}; pick a fresh --out-dir")
     os.makedirs(out_dir, exist_ok=True)
+
+    def emit(build, v: Variant, kind: str) -> str:
+        if args.manifest_only:
+            return artifact_name(v, kind)
+        return lower_one(build, v, out_dir, kind)
 
     rows = []
     t0 = time.time()
     variants = model.default_variants(quick=args.quick)
     for i, v in enumerate(variants):
-        fname = lower_one(model.build_spmv, v, out_dir, "spmv")
+        fname = emit(model.build_spmv, v, "spmv")
         _, example = model.build_spmv(v)
         rows.append((v, "spmv", fname, input_spec(example)))
         print(f"[{i + 1}/{len(variants)}] {fname}", file=sys.stderr)
 
     for v in model.spmm_variants(quick=args.quick):
-        fname = lower_one(model.build_spmm, v, out_dir, "spmm")
+        fname = emit(model.build_spmm, v, "spmm")
         _, example = model.build_spmm(v)
         rows.append((v, "spmm", fname, input_spec(example)))
         print(f"[spmm] {fname}", file=sys.stderr)
 
     for v in model.power_step_variants(quick=args.quick):
-        fname = lower_one(model.build_power_step, v, out_dir, "power")
+        fname = emit(model.build_power_step, v, "power")
         _, example = model.build_power_step(v)
         rows.append((v, "power", fname, input_spec(example)))
         print(f"[power] {fname}", file=sys.stderr)
@@ -113,6 +132,12 @@ def main() -> None:
                 f"\t{v.block_rows}\t{v.chunk_width}\t{v.x_placement}"
                 f"\t{extra_str(v)}\t{fname}\t{spec}\n"
             )
+    if args.manifest_only:
+        # no sentinel: nothing was lowered, so the Makefile dependency
+        # rule must still consider this directory unbuilt
+        print(f"wrote manifest only ({len(rows)} rows, no HLO lowered) "
+              f"to {out_dir} in {time.time() - t0:.1f}s", file=sys.stderr)
+        return
     # sentinel consumed by the Makefile dependency rule
     with open(os.path.join(out_dir, "model.hlo.txt"), "w") as f:
         f.write(f"# auto-spmv artifact sentinel; {len(rows)} artifacts\n")

@@ -119,6 +119,14 @@ def spmm_variants(quick: bool = False) -> List[Variant]:
     bucket, vectors padded with zero rows up to the bucket. Kept separate
     from :func:`default_variants` so the SpMV inventory (and its tests)
     are untouched; ``aot.py`` emits these as ``kind=spmm`` manifest rows.
+
+    Like the SpMV inventory, the SpMM set is swept across the compile
+    knobs ``knob_map`` distinguishes (block_rows x chunk_width x
+    x placement), so the runtime's joint (format, knob) decisions can
+    re-select SpMM artifacts on a knob hot-swap, not just SpMV ones.
+    The ``streamed`` placement has no SpMM lowering (the kernels reject
+    it); ``knob_map``'s prefer-shared preference degrades to the nearest
+    compiled placement through the selector's knob-break cost.
     """
     vs: List[Variant] = []
 
@@ -126,18 +134,32 @@ def spmm_variants(quick: bool = False) -> List[Variant]:
         vs.append(Variant(*a, **kw))
 
     if quick:
+        # minimal CI subset, with one knob alternative so selection
+        # knob-breaks are exercised end to end
         add("ell", 256, 256, 16, 64, 8, "resident", ncols=8)
+        add("ell", 256, 256, 16, 64, 8, "gather", ncols=8)
         add("csr", 256, 256, 2048, 0, 512, "resident", ncols=8)
         return vs
 
+    places = ("resident", "gather")  # streamed: no SpMM lowering
     for k in (4, 16):
-        add("ell", 1024, 1024, 16, 64, 8, "resident", ncols=k)
-        add("sell", 1024, 1024, 16, 8, 8, "resident", ncols=k, extra=(("h", 8),))
-        add("bell", 1024, 1024, 16, 4, 4, "resident", ncols=k,
-            extra=(("bh", 8), ("bw", 8)))
-        add("csr", 1024, 1024, 8192, 0, 1024, "resident", ncols=k)
-    # small-bucket pair so sub-256 matrices also batch
+        for br in (64, 256):
+            for cw in (8, 16):
+                for p in places:
+                    add("ell", 1024, 1024, 16, br, cw, p, ncols=k)
+        for cw in (8, 16):
+            for p in places:
+                add("sell", 1024, 1024, 16, 8, cw, p, ncols=k, extra=(("h", 8),))
+        for br in (4, 16):
+            for p in places:
+                add("bell", 1024, 1024, 16, br, 4, p, ncols=k,
+                    extra=(("bh", 8), ("bw", 8)))
+        for p in places:
+            add("csr", 1024, 1024, 8192, 0, 1024, p, ncols=k)
+    # small-bucket knob pair so sub-256 matrices also batch (and still
+    # have a placement alternative to knob-break between)
     add("ell", 256, 256, 16, 64, 8, "resident", ncols=8)
+    add("ell", 256, 256, 16, 64, 8, "gather", ncols=8)
     add("csr", 256, 256, 2048, 0, 512, "resident", ncols=8)
     return vs
 

@@ -38,6 +38,51 @@ def test_extra_str():
     assert aot.extra_str(v2) == "-"
 
 
+def test_manifest_only_writes_schema_without_lowering(tmp_path):
+    """--manifest-only is the CI schema-gate fixture generator: full
+    manifest (spmv + knob-swept spmm + power rows), no HLO files."""
+    out = tmp_path / "fixture"
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--quick", "--manifest-only",
+         "--out-dir", str(out)],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True, text=True, timeout=300,
+    )
+    assert r.returncode == 0, r.stderr
+    lines = (out / "manifest.tsv").read_text().strip().splitlines()
+    rows = [l.split("\t") for l in lines[1:]]
+    spmm = [r_ for r_ in rows if r_[1] == "spmm"]
+    assert len(spmm) >= 2, "quick inventory must emit spmm rows"
+    assert {r_[8] for r_ in spmm} >= {"resident", "gather"}, \
+        "the spmm knob sweep must reach the manifest"
+    assert all("nc=" in r_[9] for r_ in spmm)
+    # no lowering happened: no HLO files AND no Makefile sentinel (the
+    # sentinel would mark this schema-only directory as a built
+    # inventory and suppress the real lowering)
+    names = {p.name for p in out.iterdir()}
+    assert names == {"manifest.tsv"}, names
+
+
+def test_manifest_only_refuses_to_clobber_a_lowered_inventory(tmp_path):
+    """A directory holding the sentinel of a real (lowered) inventory
+    must be protected: --manifest-only would replace its manifest with
+    rows whose HLO files were never generated."""
+    out = tmp_path / "artifacts"
+    out.mkdir()
+    (out / "model.hlo.txt").write_text("# auto-spmv artifact sentinel; 5 artifacts\n")
+    (out / "manifest.tsv").write_text("real inventory\n")
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--quick", "--manifest-only",
+         "--out-dir", str(out)],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True, text=True, timeout=300,
+    )
+    assert r.returncode != 0
+    assert "refuses to clobber" in r.stderr
+    assert (out / "manifest.tsv").read_text() == "real inventory\n", \
+        "the lowered inventory's manifest must be untouched"
+
+
 def test_quick_aot_end_to_end(tmp_path):
     """Run the real module entry point with --quick into a temp dir."""
     out = tmp_path / "artifacts"

@@ -120,6 +120,29 @@ def test_spmm_variant_names_are_unique_and_tagged():
     assert {v.fmt for v in vs} == {"csr", "ell", "bell", "sell"}
 
 
+def test_spmm_inventory_is_knob_swept():
+    """Every format's SpMM rows carry >= 2 distinct knob triples (the
+    joint runtime re-selects SpMM artifacts on knob hot-swaps), and no
+    variant uses the streamed placement (no SpMM lowering exists)."""
+    vs = model.spmm_variants()
+    assert all(v.x_placement in ("resident", "gather") for v in vs)
+    for fmt in ("csr", "ell", "bell", "sell"):
+        knobs = {(v.block_rows, v.chunk_width, v.x_placement)
+                 for v in vs if v.fmt == fmt}
+        assert len(knobs) >= 2, f"{fmt}: SpMM inventory not knob-swept: {knobs}"
+    # ELL sweeps the full block_rows x chunk_width x placement grid
+    ell = {(v.block_rows, v.chunk_width, v.x_placement)
+           for v in vs if v.fmt == "ell" and v.rows == 1024}
+    assert len(ell) == 8
+
+
+def test_quick_spmm_inventory_has_a_knob_alternative():
+    vs = model.spmm_variants(quick=True)
+    ell_places = {v.x_placement for v in vs if v.fmt == "ell"}
+    assert ell_places == {"resident", "gather"}, \
+        "quick CI set must exercise the knob-break path"
+
+
 def test_all_spmm_variants_build():
     for v in model.spmm_variants():
         fn, example = model.build_spmm(v)

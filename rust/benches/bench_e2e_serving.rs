@@ -10,8 +10,16 @@
 //!
 //! Part 3 (always runs): the closed loop under workload drift — a
 //! router trained on a biased corpus slice serves a drifted synthetic
-//! fleet, frozen vs adaptive (exploration + retraining + hot-swap);
-//! reports mean modeled energy per request and the router version.
+//! fleet, frozen vs adaptive (joint (format, knob) exploration +
+//! retraining + hot-swap); reports mean modeled energy per request and
+//! the router version, then ASSERTS the adaptation converged: with
+//! exploration annealed to zero, the adaptive pool's incremental
+//! energy per request must not exceed the frozen pool's.
+//!
+//! Modes: `--smoke` (or env `AUTOSPMV_BENCH_SMOKE=1`) runs a bounded
+//! quick configuration for CI — same assertions, smaller request
+//! counts. Every table is also emitted as `reports/BENCH_*.json` so
+//! the CI job can upload the perf trajectory per PR.
 
 use auto_spmv::gen::{patterns, Rng};
 use auto_spmv::gpusim::{turing_gtx1650m, Objective};
@@ -90,12 +98,22 @@ fn drive(pool: &Pool, mats: &[(u64, usize)], n_requests: usize) -> (f64, auto_sp
     (n_requests as f64 / wall, stats)
 }
 
+/// Bounded quick mode for CI (`--smoke` flag or AUTOSPMV_BENCH_SMOKE=1).
+fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+        || std::env::var("AUTOSPMV_BENCH_SMOKE").is_ok_and(|v| v == "1")
+}
+
 fn main() {
+    let smoke = smoke_mode();
+    if smoke {
+        println!("bench_e2e_serving: --smoke (bounded CI configuration)");
+    }
     let dir = default_artifacts_dir();
     let have_artifacts = dir.join("manifest.tsv").exists();
-    if have_artifacts {
+    if have_artifacts && !smoke {
         pjrt_format_latency(&dir);
-    } else {
+    } else if !have_artifacts {
         println!("no artifacts at {dir:?}: skipping the PJRT table, benching the native backend");
     }
 
@@ -116,7 +134,8 @@ fn main() {
         patterns::uniform(&mut rng, 500, 500, 5.0),
         patterns::diagonals(&mut rng, 800, &[-8, 0, 8], 0.95),
     ];
-    let n_requests = 480usize;
+    let n_requests = if smoke { 160usize } else { 480usize };
+    let worker_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
 
     let mut t = Table::new(
         &format!(
@@ -127,7 +146,7 @@ fn main() {
         ),
         &["workers", "batching", "backend", "req/s", "dispatches", "max batch", "coalesced req %"],
     );
-    for workers in [1usize, 2, 4] {
+    for &workers in worker_counts {
         for batching in [false, true] {
             let pool = Pool::start(
                 router.clone(),
@@ -176,9 +195,10 @@ fn main() {
         }
     }
     t.emit("e2e_serving_throughput");
+    t.emit_json("e2e_serving_throughput");
 
-    batch_width_sweep(&backend);
-    adaptation_under_drift();
+    batch_width_sweep(&backend, smoke);
+    adaptation_under_drift(smoke);
     println!("bench_e2e_serving OK");
 }
 
@@ -187,7 +207,7 @@ fn main() {
 /// through the SpMM batch path, at growing burst widths. The columns to
 /// watch are launches/request (1.00 per-vector; 1/k when coalescing
 /// captures the burst) and the throughput ratio.
-fn batch_width_sweep(backend: &BackendSpec) {
+fn batch_width_sweep(backend: &BackendSpec, smoke: bool) {
     let router = Arc::new(auto_spmv::testutil::toy_router(&["rim"], Objective::EnergyEff));
     let mut rng = Rng::new(0xBA7C4);
     let coo = patterns::banded(&mut rng, 1000, 16, 6.0);
@@ -197,7 +217,8 @@ fn batch_width_sweep(backend: &BackendSpec) {
         "E2E — batch-width sweep: per-vector vs SpMM dispatch (1 worker)",
         &["burst k", "dispatch", "req/s", "dispatches", "launches", "launches/req"],
     );
-    for k in [1usize, 2, 4, 8, 16] {
+    let widths: &[usize] = if smoke { &[1, 4, 8] } else { &[1, 2, 4, 8, 16] };
+    for &k in widths {
         for spmm in [false, true] {
             let pool = Pool::start(
                 router.clone(),
@@ -263,13 +284,34 @@ fn batch_width_sweep(backend: &BackendSpec) {
         }
     }
     t.emit("e2e_batch_width_sweep");
+    t.emit_json("e2e_batch_width_sweep");
+}
+
+/// Serve `n` requests strictly sequentially (one dispatch per request,
+/// round-robin over the fleet): unlike [`drive`], the dispatch
+/// structure — and therefore the bandit's one-draw-per-dispatch RNG
+/// schedule and every observation's weight — does not depend on
+/// wall-clock coalescing, so the adaptation trajectory is identical on
+/// a loaded CI runner. Returns total modeled energy delta per request.
+fn serve_sequential(pool: &Pool, mats: &[(u64, usize)], n: usize) -> f64 {
+    let before = pool.stats().expect("stats").total_energy_j;
+    for r in 0..n {
+        let (id, n_cols) = mats[r % mats.len()];
+        let x = vec![0.5f32; n_cols];
+        pool.product(id, x).expect("product ok");
+    }
+    (pool.stats().expect("stats").total_energy_j - before) / n as f64
 }
 
 /// Part 3 — closed-loop adaptation: the same drifted fleet served by a
-/// frozen router vs the online loop (explore 20%, retrain every 64
-/// requests, deterministic seed, single worker so the schedule is
-/// reproducible).
-fn adaptation_under_drift() {
+/// frozen router vs the joint (format, knob) online loop (explore 20%,
+/// retrain every 64 requests, deterministic seed, single worker, and
+/// strictly SEQUENTIAL requests so the whole trajectory is
+/// reproducible). After the adaptation run, exploration is annealed to
+/// zero and both pools serve an identical measurement workload:
+/// convergence is ASSERTED as the adaptive pool's incremental modeled
+/// energy per request not exceeding the frozen pool's.
+fn adaptation_under_drift(smoke: bool) {
     let objective = Objective::Energy;
     // Bias the offline view: train on power-law web graphs only, then
     // serve banded/stencil matrices (the drifted population).
@@ -280,49 +322,75 @@ fn adaptation_under_drift() {
         patterns::diagonals(&mut rng, 1000, &[-24, 0, 24, -48, 48], 0.98),
         patterns::banded(&mut rng, 800, 12, 6.0),
     ];
-    let n_requests = 512usize;
+    let n_requests = if smoke { 256usize } else { 512usize };
+    let measure = if smoke { 48usize } else { 96usize };
+    let cfg = PoolConfig { workers: 1, ..PoolConfig::default() };
+
+    let frozen = Pool::start(router.clone(), BackendSpec::Native, cfg.clone());
+    let online = Online::start(
+        OnlineConfig {
+            explore_rate: 0.2,
+            retrain_every: 64,
+            seed: 0xD21F7,
+            ..OnlineConfig::default() // joint_knobs defaults ON
+        },
+        router.clone(),
+        objective,
+        Some(Trainer::new(ds.clone(), objective, overhead.clone(), turing_gtx1650m().name)),
+    );
+    let adaptive = Pool::start_adaptive(online.clone(), BackendSpec::Native, cfg);
 
     let mut t = Table::new(
         "E2E — closed-loop adaptation under drift (modeled energy objective)",
-        &["pool", "router", "retrains", "migrations", "explored", "mean energy/req (J)"],
+        &[
+            "pool", "router", "retrains", "fmt migr", "knob migr", "explored",
+            "mean energy/req (J)",
+        ],
     );
-    for adaptive in [false, true] {
-        let cfg = PoolConfig { workers: 1, ..PoolConfig::default() };
-        let pool = if adaptive {
-            let online = Online::start(
-                OnlineConfig {
-                    explore_rate: 0.2,
-                    retrain_every: 64,
-                    seed: 0xD21F7,
-                    ..OnlineConfig::default()
-                },
-                router.clone(),
-                objective,
-                Some(Trainer::new(ds.clone(), objective, overhead.clone(), turing_gtx1650m().name)),
-            );
-            Pool::start_adaptive(online, BackendSpec::Native, cfg)
-        } else {
-            Pool::start(router.clone(), BackendSpec::Native, cfg)
-        };
-        let mut mats = Vec::new();
-        for (id, coo) in fleet.iter().enumerate() {
-            pool.register(id as u64, coo.clone(), 1_000_000_000).expect("register");
-            mats.push((id as u64, coo.n_cols));
-        }
-        let (_, stats) = drive(&pool, &mats, n_requests);
+    let mut mats = Vec::new();
+    for (id, coo) in fleet.iter().enumerate() {
+        frozen.register(id as u64, coo.clone(), 1_000_000_000).expect("register");
+        adaptive.register(id as u64, coo.clone(), 1_000_000_000).expect("register");
+        mats.push((id as u64, coo.n_cols));
+    }
+    for (label, pool) in [("frozen", &frozen), ("adaptive", &adaptive)] {
+        serve_sequential(pool, &mats, n_requests);
+        let stats = pool.stats().expect("stats");
         assert_eq!(stats.requests, n_requests as u64, "no request may be dropped");
         t.row(vec![
-            if adaptive { "adaptive".into() } else { "frozen".to_string() },
+            label.to_string(),
             format!("v{}", stats.router_version),
             stats.retrains.to_string(),
             stats.migrations.to_string(),
+            stats.knob_migrations.to_string(),
             stats.explored_requests.to_string(),
             format!("{:.3e}", stats.total_energy_j / stats.requests as f64),
         ]);
-        if adaptive {
+        if label == "adaptive" {
             assert!(stats.router_version > 1, "retraining must hot-swap at this cadence");
             assert!(stats.explored_requests > 0, "exploration must route some traffic");
         }
     }
+
+    // Convergence assertion: steady-state (explore 0) energy per
+    // request, identical sequential workload on both pools.
+    online.set_explore_rate(0.0);
+    let f_mean = serve_sequential(&frozen, &mats, measure);
+    let a_mean = serve_sequential(&adaptive, &mats, measure);
+    t.row(vec![
+        "steady-state".to_string(),
+        "-".to_string(),
+        "-".to_string(),
+        "-".to_string(),
+        "-".to_string(),
+        "0".to_string(),
+        format!("frozen {f_mean:.3e} / adaptive {a_mean:.3e}"),
+    ]);
+    assert!(
+        a_mean <= f_mean * 1.001,
+        "the drift-adaptation loop must converge: adaptive steady-state energy \
+         {a_mean:.3e} J/req exceeds frozen {f_mean:.3e} J/req"
+    );
     t.emit("e2e_adaptation");
+    t.emit_json("e2e_adaptation");
 }

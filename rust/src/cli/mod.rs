@@ -9,13 +9,19 @@
 //!   serve [--requests N] [--workers W] [--batch-window-us U]
 //!         [--cache-cap C]
 //!         [--explore-rate F] [--retrain-every N] [--anneal-target K]
+//!         [--joint-knobs true|false]
 //!                               serving demo over the sharded pool
 //!                               (PJRT when artifacts exist, else
 //!                               native). A non-zero explore rate or
 //!                               retrain cadence attaches the closed
 //!                               loop (`online`): bandit exploration,
 //!                               drift detection, periodic retraining,
-//!                               hot-swapped router. --seed drives the
+//!                               hot-swapped router. --joint-knobs
+//!                               (default on) makes the loop decide
+//!                               (format, compile-knob) pairs jointly —
+//!                               knob arms explored, per-format knob
+//!                               policy retrained, knobs re-decided on
+//!                               hot-swap. --seed drives the
 //!                               exploration schedule.
 //!
 //! Global flags: --config FILE, --set key=value (repeatable), and the
@@ -56,11 +62,16 @@ pub fn parse(args: &[String]) -> Result<Cli> {
         let Some(key) = a.strip_prefix("--") else {
             bail!("unexpected argument {a}");
         };
-        let value = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+        // both spellings: `--key value` and GNU-style `--key=value`
+        // (without the split, `--joint-knobs=false` would register an
+        // unknown flag and the lookup would fall back to the default)
+        let (key, value) = if let Some((k, v)) = key.split_once('=') {
+            (k, v.to_string())
+        } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
             i += 1;
-            args[i].clone()
+            (key, args[i].clone())
         } else {
-            "true".to_string()
+            (key, "true".to_string())
         };
         match key {
             "config" => config_file = Some(PathBuf::from(&value)),
@@ -222,6 +233,16 @@ fn cmd_optimize(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// `--joint-knobs` is a real tristate (absent = on): anything but
+/// true/false errors instead of silently enabling the joint loop.
+fn parse_joint_knobs(cli: &Cli) -> Result<bool> {
+    match cli.flag("joint-knobs") {
+        None | Some("true") => Ok(true),
+        Some("false") => Ok(false),
+        Some(other) => bail!("--joint-knobs expects true or false, got {other}"),
+    }
+}
+
 fn cmd_serve(cli: &Cli) -> Result<()> {
     use crate::gpusim::turing_gtx1650m;
     use crate::online::{Online, OnlineConfig, Trainer};
@@ -238,6 +259,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let retrain_every: u64 = cli.flag("retrain-every").map_or(0, |v| v.parse().unwrap_or(0));
     let anneal_target: Option<u64> =
         cli.flag("anneal-target").and_then(|v| v.parse().ok()).filter(|t| *t > 0);
+    let joint_knobs = parse_joint_knobs(cli)?;
     let ds = load_or_build(cli)?;
     let obj = cli.objective()?;
     let overhead = OverheadModel::train_on_corpus(cli.config.scale, None);
@@ -262,7 +284,8 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let pool = if adaptive {
         println!(
             "closed loop: explore rate {explore_rate}, retrain every {retrain_every} \
-             requests, seed {}",
+             requests, joint knobs {}, seed {}",
+            if joint_knobs { "on" } else { "off" },
             cli.config.seed
         );
         let trainer = (retrain_every > 0)
@@ -273,6 +296,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
                 retrain_every,
                 seed: cli.config.seed,
                 anneal_target,
+                joint_knobs,
                 // keep serving latency flat: refits run on the trainer
                 // thread, never inline on a shard
                 background: true,
@@ -335,25 +359,29 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         stats.spmm_dispatches
     );
     println!(
-        "router v{} ({} retrains, {} migrations), explored {} requests, drift: {}",
+        "router v{} ({} retrains, {} format migrations, {} knob migrations), \
+         explored {} requests ({} UCB-scored), drift: {}",
         stats.router_version,
         stats.retrains,
         stats.migrations,
+        stats.knob_migrations,
         stats.explored_requests,
+        stats.ucb_routes,
         stats.drift.map_or("off (frozen router)".to_string(), |d| d.to_string())
     );
     let quant = |q: Option<f64>| q.map_or("-".to_string(), |v| format!("{v:.1}"));
     let mut t = Table::new(
         "Per-matrix serving telemetry (latency end-to-end; energy modeled, §6.3)",
         &[
-            "matrix", "format", "requests", "p50 (us)", "p99 (us)", "energy (J)", "power (W)",
-            "decisions",
+            "matrix", "format", "knobs", "requests", "p50 (us)", "p99 (us)", "energy (J)",
+            "power (W)", "decisions",
         ],
     );
     for m in &stats.per_matrix {
         t.row(vec![
             names.get(m.id as usize).copied().unwrap_or("?").into(),
             m.format.map_or("?".into(), |f| f.to_string()),
+            m.knobs.map_or("?".into(), |k| k.to_string()),
             m.requests.to_string(),
             quant(m.p50_us),
             quant(m.p99_us),
@@ -417,5 +445,28 @@ mod tests {
         assert_eq!(cli.flag("explore-rate"), Some("0.2"));
         assert_eq!(cli.flag("retrain-every"), Some("64"));
         assert_eq!(cli.config.seed, 7, "--seed drives the exploration schedule");
+    }
+
+    #[test]
+    fn gnu_style_equals_flags_parse_like_space_separated() {
+        let cli = parse(&args(&["serve", "--joint-knobs=false", "--set=seed=9"])).unwrap();
+        assert_eq!(cli.flag("joint-knobs"), Some("false"));
+        assert_eq!(cli.config.seed, 9, "--set=key=value splits on the FIRST =");
+        assert!(
+            !parse_joint_knobs(&cli).unwrap(),
+            "--joint-knobs=false must disable the joint loop, not silently default on"
+        );
+    }
+
+    #[test]
+    fn joint_knobs_flag_defaults_on_and_rejects_garbage() {
+        let joint = |a: &[&str]| parse_joint_knobs(&parse(&args(a)).unwrap());
+        assert!(joint(&["serve"]).unwrap(), "default is on");
+        assert!(!joint(&["serve", "--joint-knobs", "false"]).unwrap());
+        assert!(joint(&["serve", "--joint-knobs", "true"]).unwrap());
+        assert!(
+            joint(&["serve", "--joint-knobs", "off"]).is_err(),
+            "anything but true/false must be rejected, not silently treated as on"
+        );
     }
 }

@@ -31,6 +31,41 @@ impl CompileChoice {
             mem: self.mem,
         }
     }
+
+    /// The serving default: what a pool runs before any knob policy is
+    /// installed (mid TB size, no register-cap pressure, default
+    /// carve-out — the PR 2/3 telemetry assumption).
+    pub fn serving_default() -> CompileChoice {
+        CompileChoice { tb_size: 256, maxrregcount: 64, mem: MemConfig::Default }
+    }
+
+    /// Tuple form the artifact selector takes (`ArtifactIndex::select*`).
+    pub fn knobs(self) -> (u32, u32, MemConfig) {
+        (self.tb_size, self.maxrregcount, self.mem)
+    }
+
+    /// Full kernel config at this choice for an arbitrary format (the
+    /// joint run-time decision; [`CompileChoice::to_config`] keeps the
+    /// compile-mode's fixed-CSR semantics).
+    pub fn config_for(self, format: Format) -> KernelConfig {
+        KernelConfig {
+            format,
+            tb_size: self.tb_size,
+            maxrregcount: self.maxrregcount,
+            mem: self.mem,
+        }
+    }
+
+    /// The knob slice of a full kernel config (format dropped).
+    pub fn from_config(c: &KernelConfig) -> CompileChoice {
+        CompileChoice { tb_size: c.tb_size, maxrregcount: c.maxrregcount, mem: c.mem }
+    }
+}
+
+impl std::fmt::Display for CompileChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "tb{}/r{}/{}", self.tb_size, self.maxrregcount, self.mem.name())
+    }
 }
 
 /// Per-objective compile-parameter predictor (three decision trees, the
@@ -75,6 +110,115 @@ impl CompileTimeOptimizer {
         let mem = MemConfig::from_class_id(self.mem_model.predict_one(&x))
             .unwrap_or(MemConfig::Default);
         CompileChoice { tb_size: tb, maxrregcount: regs, mem }
+    }
+}
+
+/// Per-format compile-knob policy: one [`CompileTimeOptimizer`] per
+/// sparse format, so the run-time router's format decision can be
+/// paired with the knobs that are best *for that format* (the joint
+/// (format, knob) decision of DESIGN.md §8). The §5.2 optimizer fixes
+/// CSR; this generalizes its label derivation to every format's own
+/// sweep slice, and the online trainer refits it from serving evidence.
+pub struct KnobPolicy {
+    pub objective: Objective,
+    /// `Format::ALL` order; `None` when a format had no examples (its
+    /// predictions fall back to the serving default).
+    by_format: Vec<Option<CompileTimeOptimizer>>,
+    /// Deployment profile name (selects the arch indicator feature).
+    arch: String,
+}
+
+impl KnobPolicy {
+    /// Offline per-format knob labels: for each (matrix, arch, format),
+    /// the best compile config among that format's sweep records.
+    pub fn offline_examples(ds: &Dataset, objective: Objective) -> Vec<(Format, Example)> {
+        let mut out = Vec::new();
+        for matrix in ds.matrices() {
+            for arch in ds.archs() {
+                let slice = ds.slice(&matrix, &arch);
+                if slice.is_empty() {
+                    continue;
+                }
+                let mut feats = slice[0].features.to_scaled_vec();
+                feats.push(labels::arch_feature(&arch));
+                for f in Format::ALL {
+                    let mut best: Option<(&crate::dataset::Record, f64)> = None;
+                    for r in slice.iter().copied().filter(|r| r.config.format == f) {
+                        let v = objective.value(&r.m);
+                        if best.is_none_or(|(_, bv)| objective.better(v, bv)) {
+                            best = Some((r, v));
+                        }
+                    }
+                    let Some((r, v)) = best else { continue };
+                    out.push((f, knob_example(&matrix, &arch, feats.clone(), &r.config, v)));
+                }
+            }
+        }
+        out
+    }
+
+    /// Fit the per-format predictors from `(format, example)` pairs —
+    /// offline labels, online labels, or both concatenated.
+    pub fn train(objective: Objective, arch: &str, ex: &[(Format, Example)]) -> KnobPolicy {
+        let by_format = Format::ALL
+            .iter()
+            .map(|f| {
+                let own: Vec<Example> = ex
+                    .iter()
+                    .filter(|(ff, _)| ff == f)
+                    .map(|(_, e)| e.clone())
+                    .collect();
+                (!own.is_empty())
+                    .then(|| CompileTimeOptimizer::train_on_examples(&own, objective))
+            })
+            .collect();
+        KnobPolicy { objective, by_format, arch: arch.to_string() }
+    }
+
+    /// Convenience: offline-only policy for a dataset.
+    pub fn train_on_dataset(ds: &Dataset, objective: Objective, arch: &str) -> KnobPolicy {
+        Self::train(objective, arch, &Self::offline_examples(ds, objective))
+    }
+
+    /// Knob decision for a matrix already routed to `format`.
+    pub fn predict(&self, f: &Features, format: Format) -> CompileChoice {
+        match &self.by_format[format.class_id()] {
+            Some(opt) => opt.predict(f, &self.arch),
+            None => CompileChoice::serving_default(),
+        }
+    }
+}
+
+/// Build a knob [`Example`] from an already-scaled feature vector and
+/// the winning config. Class lookups are tolerant: a config outside the
+/// sweep grid (possible for deserialized online evidence) snaps to the
+/// serving-default classes instead of panicking.
+pub fn knob_example(
+    matrix: &str,
+    arch: &str,
+    features: Vec<f64>,
+    config: &KernelConfig,
+    value: f64,
+) -> Example {
+    let tb_class = TB_SIZES
+        .iter()
+        .position(|&t| t == config.tb_size)
+        .unwrap_or_else(|| KernelConfig::default_baseline().tb_class());
+    let reg_class = MAXRREGCOUNT
+        .iter()
+        .position(|&r| r == config.maxrregcount)
+        .unwrap_or_else(|| KernelConfig::default_baseline().reg_class());
+    Example {
+        matrix: matrix.to_string(),
+        arch: arch.to_string(),
+        features,
+        tb_class,
+        reg_class,
+        mem_class: config.mem.class_id(),
+        format_class: config.format.class_id(),
+        best_compile: value,
+        best_format_value: value,
+        default_value: value,
     }
 }
 
@@ -133,6 +277,66 @@ mod tests {
             let c = opt.predict(&f, "GTX1650m-Turing");
             assert!(TB_SIZES.contains(&c.tb_size));
             assert!(MAXRREGCOUNT.contains(&c.maxrregcount));
+        }
+    }
+
+    #[test]
+    fn choice_helpers_roundtrip() {
+        let c = CompileChoice { tb_size: 128, maxrregcount: 32, mem: MemConfig::PreferShared };
+        let k = c.config_for(Format::Sell);
+        assert_eq!(k.format, Format::Sell);
+        assert_eq!(CompileChoice::from_config(&k), c);
+        assert_eq!(c.knobs(), (128, 32, MemConfig::PreferShared));
+        assert_eq!(c.to_string(), "tb128/r32/prefer_shared");
+        let d = CompileChoice::serving_default();
+        assert_eq!((d.tb_size, d.maxrregcount, d.mem), (256, 64, MemConfig::Default));
+    }
+
+    #[test]
+    fn knob_policy_labels_per_format_optima_from_the_sweep() {
+        let names = ["rim", "eu-2005", "consph"];
+        let ds = build(&BuildOptions {
+            only: Some(names.iter().map(|s| s.to_string()).collect()),
+            both_archs: false,
+            ..Default::default()
+        });
+        let obj = Objective::Energy;
+        let policy = KnobPolicy::train_on_dataset(&ds, obj, "GTX1650m-Turing");
+        for name in names {
+            let entry = gen::by_name(name).unwrap();
+            let f = extract_csr(&entry.generate_csr(1));
+            for fmt in Format::ALL {
+                let choice = policy.predict(&f, fmt);
+                // the predicted config must exist in that format's sweep
+                let slice = ds.slice(name, "GTX1650m-Turing");
+                let rec = slice
+                    .iter()
+                    .find(|r| r.config == choice.config_for(fmt))
+                    .unwrap_or_else(|| panic!("{name}/{fmt}: {choice} not in sweep"));
+                // and a seen matrix's prediction must not lose to the
+                // format's default-knob point (trees memorize training
+                // labels; ties allowed)
+                let default_cfg = CompileChoice::serving_default().config_for(fmt);
+                let default = slice.iter().find(|r| r.config == default_cfg).unwrap();
+                assert!(
+                    obj.value(&rec.m) <= obj.value(&default.m) * 1.0001,
+                    "{name}/{fmt}: predicted {choice} worse than the default knobs"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn knob_policy_without_examples_falls_back_to_default() {
+        let policy = KnobPolicy::train(Objective::Latency, "GTX1650m-Turing", &[]);
+        let ds = build(&BuildOptions {
+            only: Some(vec!["rim".into()]),
+            both_archs: false,
+            ..Default::default()
+        });
+        let f = ds.records[0].features;
+        for fmt in Format::ALL {
+            assert_eq!(policy.predict(&f, fmt), CompileChoice::serving_default());
         }
     }
 }

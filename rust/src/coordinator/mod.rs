@@ -14,6 +14,6 @@ pub mod overhead;
 pub mod run_time;
 pub mod service;
 
-pub use compile_time::CompileTimeOptimizer;
+pub use compile_time::{CompileChoice, CompileTimeOptimizer, KnobPolicy};
 pub use overhead::OverheadModel;
 pub use run_time::{Decision, RunTimeOptimizer};

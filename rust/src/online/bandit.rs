@@ -1,23 +1,38 @@
-//! Per-feature-bucket exploration over `Format` arms.
+//! Per-feature-bucket exploration over joint (format, compile-knob)
+//! arms.
 //!
 //! The offline router only ever sees labels for the corpus it was
 //! trained on; under workload drift the buffer of online observations
-//! would contain nothing but the predicted format's outcomes and the
-//! trainer could never learn that another format now wins. The bandit
-//! fixes that: with probability `explore_rate` a dispatch is routed to
-//! a *non-predicted* arm so the observation buffer holds counterfactual
-//! labels. Arm choice is count-balanced within the matrix's feature
-//! bucket (the UCB exploration bonus in the limit where unexplored arms
-//! dominate): the least-pulled alternative goes first, so all three
-//! alternatives get sampled instead of one lucky arm.
+//! would contain nothing but the predicted decision's outcomes and the
+//! trainer could never learn that another format — or another compile
+//! knob of the SAME format — now wins. The bandit fixes that: with
+//! probability `explore_rate` a dispatch is routed to a *non-predicted*
+//! arm so the observation buffer holds counterfactual labels.
+//!
+//! The arm space is the joint [`Decision`]: one of the four sparse
+//! formats crossed with a 12-point representative compile-knob grid
+//! ([`knob_arm`]) — the quantization classes of `knob_map` (TB size
+//! collapsed to {64, 256}, maxrregcount to {32, 64}, all three memory
+//! configs), so every arm maps to a DISTINCT Pallas variant family.
+//! Arm choice starts count-balanced within the matrix's feature bucket
+//! (the UCB exploration bonus in the limit where unexplored arms
+//! dominate) and switches to true per-arm UCB scoring once every
+//! alternative FORMAT has `ucb_floor` credited observations, knob arms
+//! summed — the same credit annealing uses, so UCB engages strictly
+//! before an annealing bucket goes quiet whenever the floor is below
+//! the anneal target. Exploration then concentrates on the arms whose
+//! observed objective is actually competitive instead of cycling the
+//! whole grid forever.
 //!
 //! Everything is deterministic given the seed and the dispatch order:
 //! the RNG is the crate's own xoshiro [`Rng`], consulted exactly once
 //! per routed dispatch (zero draws when `explore_rate == 0`, which is
 //! what makes the frozen-pool bit-identity property hold).
 
+use crate::coordinator::compile_time::CompileChoice;
 use crate::features::Features;
 use crate::gen::Rng;
+use crate::gpusim::MemConfig;
 use crate::sparse::Format;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -26,19 +41,90 @@ use std::sync::Mutex;
 /// Number of format arms (`Format::ALL`).
 pub const N_FORMATS: usize = Format::ALL.len();
 
+/// Representative compile-knob grid the bandit explores: the values
+/// `knob_map` distinguishes (TB {64, 256} x regs {32, 64} x the three
+/// memory configs). Finer CUDA knob points alias to the same Pallas
+/// variant, so exploring them would buy duplicate labels.
+pub const KNOB_TBS: [u32; 2] = [64, 256];
+pub const KNOB_REGS: [u32; 2] = [32, 64];
+
+/// Knob arms per format (12) and total joint arms (48).
+pub const N_KNOBS: usize = KNOB_TBS.len() * KNOB_REGS.len() * MemConfig::ALL.len();
+pub const N_ARMS: usize = N_FORMATS * N_KNOBS;
+
+/// Default evidence floor at which exploration switches from
+/// count-balancing to per-arm UCB scoring.
+pub const DEFAULT_UCB_FLOOR: u64 = 8;
+
+/// The `i`-th knob arm (`0 <= i < N_KNOBS`).
+pub fn knob_arm(i: usize) -> CompileChoice {
+    let per_tb = KNOB_REGS.len() * MemConfig::ALL.len();
+    CompileChoice {
+        tb_size: KNOB_TBS[(i / per_tb) % KNOB_TBS.len()],
+        maxrregcount: KNOB_REGS[(i % per_tb) / MemConfig::ALL.len()],
+        mem: MemConfig::ALL[i % MemConfig::ALL.len()],
+    }
+}
+
+/// Quantize an arbitrary choice onto the arm grid — the same collapsing
+/// `knob_map` applies (TB <= 128 -> small block_rows, regs <= 32 ->
+/// narrow chunks), so two choices share an arm iff they select the same
+/// Pallas variant family.
+pub fn knob_index(c: CompileChoice) -> usize {
+    let per_tb = KNOB_REGS.len() * MemConfig::ALL.len();
+    let ti = usize::from(c.tb_size > 128);
+    let ri = usize::from(c.maxrregcount > 32);
+    ti * per_tb + ri * MemConfig::ALL.len() + c.mem.class_id()
+}
+
+/// One joint (format, compile-knob) run-time decision — the bandit's
+/// arm space, and what the serving shards execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Decision {
+    pub format: Format,
+    pub choice: CompileChoice,
+}
+
+impl Decision {
+    /// A format decision at the serving-default knobs (the PR 2/3
+    /// format-only behavior).
+    pub fn format_only(format: Format) -> Decision {
+        Decision { format, choice: CompileChoice::serving_default() }
+    }
+
+    /// Flat arm index in `[0, N_ARMS)`.
+    pub fn arm_index(&self) -> usize {
+        self.format.class_id() * N_KNOBS + knob_index(self.choice)
+    }
+
+    /// The canonical decision of an arm index.
+    pub fn from_arm(i: usize) -> Decision {
+        Decision {
+            format: Format::from_class_id(i / N_KNOBS).expect("arm index in range"),
+            choice: knob_arm(i % N_KNOBS),
+        }
+    }
+}
+
+impl std::fmt::Display for Decision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}@{}", self.format, self.choice)
+    }
+}
+
 /// Routing outcome for one dispatch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RouteChoice {
-    /// Format this dispatch executes in.
-    pub format: Format,
+    /// Joint decision this dispatch executes.
+    pub decision: Decision,
     /// True when the bandit overrode the router's decision.
     pub explored: bool,
 }
 
 impl RouteChoice {
     /// The trivial non-exploring choice.
-    pub fn chosen(format: Format) -> RouteChoice {
-        RouteChoice { format, explored: false }
+    pub fn chosen(decision: Decision) -> RouteChoice {
+        RouteChoice { decision, explored: false }
     }
 }
 
@@ -55,7 +141,7 @@ pub struct ArmStats {
 
 struct BanditState {
     rng: Rng,
-    buckets: HashMap<u64, [ArmStats; N_FORMATS]>,
+    buckets: HashMap<u64, Box<[ArmStats; N_ARMS]>>,
 }
 
 /// Coarse feature bucket: matrices with similar scale, row-length
@@ -76,14 +162,25 @@ pub fn bucket_of(f: &Features) -> u64 {
     (n << 18) | (avg << 12) | (std << 6) | ell
 }
 
-/// Epsilon-greedy explorer with count-balanced arm selection.
+/// Epsilon-greedy explorer over joint arms, count-balanced until the
+/// evidence floor, per-arm UCB after.
 pub struct Bandit {
     /// f64 bits of the current exploration rate — atomic so operators
     /// can anneal or pause exploration on a live pool.
     explore_rate_bits: AtomicU64,
-    /// Auto-anneal target: observations per alternative arm at which a
-    /// bucket's exploration reaches zero (None = flat rate forever).
+    /// Auto-anneal target: observations per alternative format at which
+    /// a bucket's exploration reaches zero (None = flat rate forever).
     anneal_target: Option<u64>,
+    /// Evidence floor switching arm selection to UCB (0 = never).
+    ucb_floor: u64,
+    /// Whether lower objective values are better (the objective's
+    /// `minimize()`); flips the UCB value term.
+    minimize: bool,
+    /// Explore knob arms too (false = format arms only, the PR 2/3
+    /// behavior).
+    joint: bool,
+    /// Exploration picks made through the UCB scorer (telemetry).
+    ucb_routes: AtomicU64,
     state: Mutex<BanditState>,
 }
 
@@ -96,17 +193,31 @@ impl Bandit {
 
     /// Like [`Bandit::new`] but with per-bucket auto-annealing: a
     /// bucket's effective rate decays linearly from `explore_rate` to 0
-    /// as its weakest alternative arm accumulates `target` credited
-    /// observations. Counterfactual labels stop being bought once every
-    /// alternative has enough evidence — per bucket, so a novel matrix
-    /// population resumes exploring at full rate while converged
-    /// buckets stay quiet. The rate-0 short-circuit (zero RNG draws,
-    /// zero state) is untouched, preserving the frozen-pool
-    /// bit-identity property.
+    /// as its weakest alternative format accumulates `target` credited
+    /// observations (summed across that format's knob arms).
     pub fn with_anneal(explore_rate: f64, seed: u64, target: Option<u64>) -> Bandit {
+        Bandit::with_params(explore_rate, seed, target, DEFAULT_UCB_FLOOR, true, true)
+    }
+
+    /// Full-control constructor: annealing, the UCB evidence floor,
+    /// the objective direction, and whether knob arms are explored at
+    /// all (`joint = false` restricts exploration to the four format
+    /// arms at the default knob — the PR 2/3 arm space).
+    pub fn with_params(
+        explore_rate: f64,
+        seed: u64,
+        anneal_target: Option<u64>,
+        ucb_floor: u64,
+        minimize: bool,
+        joint: bool,
+    ) -> Bandit {
         Bandit {
             explore_rate_bits: AtomicU64::new(explore_rate.clamp(0.0, 1.0).to_bits()),
-            anneal_target: target.filter(|t| *t > 0),
+            anneal_target: anneal_target.filter(|t| *t > 0),
+            ucb_floor,
+            minimize,
+            joint,
+            ucb_routes: AtomicU64::new(0),
             state: Mutex::new(BanditState { rng: Rng::new(seed), buckets: HashMap::new() }),
         }
     }
@@ -121,17 +232,35 @@ impl Bandit {
         self.explore_rate_bits.store(rate.clamp(0.0, 1.0).to_bits(), Ordering::Release);
     }
 
-    /// Route one dispatch: keep the router's `default` format, or —
+    /// Exploration picks that went through the per-arm UCB scorer
+    /// (0 until every alternative arm crosses the evidence floor).
+    pub fn ucb_routes(&self) -> u64 {
+        self.ucb_routes.load(Ordering::Relaxed)
+    }
+
+    /// Alternative arm indices for a default arm: every other joint arm
+    /// when knob exploration is on, the other formats at the default's
+    /// knob otherwise.
+    fn alternatives(&self, default_arm: usize) -> Vec<usize> {
+        if self.joint {
+            (0..N_ARMS).filter(|a| *a != default_arm).collect()
+        } else {
+            let k = default_arm % N_KNOBS;
+            (0..N_FORMATS).map(|f| f * N_KNOBS + k).filter(|a| *a != default_arm).collect()
+        }
+    }
+
+    /// Route one dispatch: keep the router's `default` decision, or —
     /// with probability of the bucket's effective rate (the configured
-    /// rate, annealed by arm confidence when a target is set) — the
-    /// least-pulled alternative arm in this matrix's feature bucket.
+    /// rate, annealed by format-arm confidence when a target is set) —
+    /// an alternative arm in this matrix's feature bucket.
     ///
     /// `explore_rate == 0` short-circuits before touching the lock or
     /// the RNG, so a non-exploring pool is bit-identical to one with no
     /// bandit at all. With exploration on, exactly ONE draw is consumed
-    /// per dispatch regardless of annealing, so the schedule stays
-    /// deterministic per seed.
-    pub fn route(&self, feats: &Features, default: Format) -> RouteChoice {
+    /// per dispatch regardless of annealing or the UCB floor, so the
+    /// schedule stays deterministic per seed.
+    pub fn route(&self, feats: &Features, default: Decision) -> RouteChoice {
         let rate = self.explore_rate();
         if rate <= 0.0 {
             return RouteChoice::chosen(default);
@@ -141,58 +270,134 @@ impl Bandit {
         let arms = st
             .buckets
             .entry(bucket_of(feats))
-            .or_insert_with(|| std::array::from_fn(|_| ArmStats::default()));
+            .or_insert_with(|| Box::new([ArmStats::default(); N_ARMS]));
+        let default_arm = default.arm_index();
+        // The weakest alternative FORMAT's evidence (knob arms summed);
+        // both confidence gates read it. Annealing: exploration pays
+        // for labels until every alternative format has `target` of
+        // them, then the bucket goes quiet. UCB floor: credited the
+        // same way — NOT per individual arm, where the 47-alternative
+        // joint space would need ~6x the anneal target of explored
+        // labels and an annealing bucket would go quiet before UCB
+        // ever engaged. With ucb_floor below anneal_target UCB gets a
+        // live window; under-sampled knob arms are then prioritized by
+        // the UCB bonus itself.
+        let min_alt_evidence = {
+            let view: &[ArmStats; N_ARMS] = arms;
+            Format::ALL
+                .iter()
+                .filter(|f| **f != default.format)
+                .map(|f| format_observations(view, **f))
+                .min()
+                .unwrap_or(0)
+        };
         let effective = match self.anneal_target {
             None => rate,
-            Some(target) => {
-                // confidence = the weakest alternative arm's evidence;
-                // exploration pays for labels until every alternative
-                // has `target` of them, then this bucket goes quiet
-                let min_alt = Format::ALL
-                    .iter()
-                    .filter(|f| **f != default)
-                    .map(|f| arms[f.class_id()].observations)
-                    .min()
-                    .unwrap_or(0);
-                rate * (1.0 - min_alt as f64 / target as f64).max(0.0)
-            }
+            Some(target) => rate * (1.0 - min_alt_evidence as f64 / target as f64).max(0.0),
         };
         if draw >= effective {
-            arms[default.class_id()].pulls += 1;
+            arms[default_arm].pulls += 1;
             return RouteChoice::chosen(default);
         }
-        let alt = Format::ALL
-            .iter()
-            .copied()
-            .filter(|f| *f != default)
-            .min_by_key(|f| arms[f.class_id()].pulls)
-            .expect("more than one format");
-        arms[alt.class_id()].pulls += 1;
-        RouteChoice { format: alt, explored: true }
+        let alts = self.alternatives(default_arm);
+        let alt = if self.ucb_floor > 0 && min_alt_evidence >= self.ucb_floor {
+            self.ucb_routes.fetch_add(1, Ordering::Relaxed);
+            let view: &[ArmStats; N_ARMS] = arms;
+            ucb_pick(view, &alts, self.minimize)
+        } else {
+            // count-balancing: the least-pulled alternative goes first,
+            // so every arm gets sampled instead of one lucky arm
+            alts.iter().copied().min_by_key(|a| arms[*a].pulls).expect("more than one arm")
+        };
+        arms[alt].pulls += 1;
+        RouteChoice { decision: Decision::from_arm(alt), explored: true }
     }
 
     /// Credit an observed objective value to an arm (running mean).
-    pub fn observe(&self, feats: &Features, format: Format, objective_value: f64) {
+    pub fn observe(&self, feats: &Features, decision: Decision, objective_value: f64) {
         let mut st = self.state.lock().expect("bandit lock");
         let arms = st
             .buckets
             .entry(bucket_of(feats))
-            .or_insert_with(|| std::array::from_fn(|_| ArmStats::default()));
-        let arm = &mut arms[format.class_id()];
+            .or_insert_with(|| Box::new([ArmStats::default(); N_ARMS]));
+        let arm = &mut arms[decision.arm_index()];
         arm.observations += 1;
         arm.mean_objective += (objective_value - arm.mean_objective) / arm.observations as f64;
     }
 
-    /// Snapshot of one bucket's arms (stats/debug aid).
-    pub fn arms(&self, feats: &Features) -> [ArmStats; N_FORMATS] {
+    /// Snapshot of one bucket's arms, `Decision::from_arm` order
+    /// (stats/debug aid).
+    pub fn arms(&self, feats: &Features) -> Vec<ArmStats> {
         let st = self.state.lock().expect("bandit lock");
-        st.buckets.get(&bucket_of(feats)).copied().unwrap_or_default()
+        match st.buckets.get(&bucket_of(feats)) {
+            Some(a) => a.to_vec(),
+            None => vec![ArmStats::default(); N_ARMS],
+        }
     }
 
     /// Number of feature buckets with any exploration state.
     pub fn buckets(&self) -> usize {
         self.state.lock().expect("bandit lock").buckets.len()
     }
+}
+
+/// Total credited observations of a format across its knob arms.
+fn format_observations(arms: &[ArmStats; N_ARMS], format: Format) -> u64 {
+    let base = format.class_id() * N_KNOBS;
+    arms[base..base + N_KNOBS].iter().map(|a| a.observations).sum()
+}
+
+/// Scale-invariant UCB over the alternative arms: the value term is the
+/// arm's mean objective normalized against the best alternative mean
+/// (in (0, 1], direction-corrected for minimize/maximize objectives),
+/// plus the standard `sqrt(2 ln T / n)` bonus. Never-observed arms get
+/// the optimistic maximum value (`ratio` returns 1.0 on a zero mean)
+/// and are excluded from the baseline — a 0.0 placeholder mean would
+/// otherwise BE the best minimize mean, flatten every value term to
+/// 1.0, and degrade UCB to the count-balancing it replaces until all
+/// 47 joint alternatives had evidence. Deterministic: ties go to the
+/// lowest arm index.
+fn ucb_pick(arms: &[ArmStats; N_ARMS], alts: &[usize], minimize: bool) -> usize {
+    let total: u64 = alts.iter().map(|a| arms[*a].observations).sum();
+    let total = total.max(1) as f64;
+    let best_mean = alts
+        .iter()
+        .filter(|a| arms[**a].observations > 0)
+        .map(|a| arms[*a].mean_objective)
+        .fold(None::<f64>, |acc, v| {
+            Some(match acc {
+                None => v,
+                Some(b) => {
+                    if (minimize && v < b) || (!minimize && v > b) {
+                        v
+                    } else {
+                        b
+                    }
+                }
+            })
+        })
+        .unwrap_or(0.0);
+    let ratio = |num: f64, den: f64| {
+        if num > 0.0 && den > 0.0 {
+            (num / den).min(1.0)
+        } else {
+            1.0
+        }
+    };
+    let mut best: Option<(f64, usize)> = None;
+    for &a in alts {
+        let n = arms[a].observations.max(1) as f64;
+        let value = if minimize {
+            ratio(best_mean, arms[a].mean_objective)
+        } else {
+            ratio(arms[a].mean_objective, best_mean)
+        };
+        let score = value + (2.0 * total.ln() / n).sqrt();
+        if best.is_none_or(|(bs, _)| score > bs) {
+            best = Some((score, a));
+        }
+    }
+    best.expect("non-empty alternatives").1
 }
 
 #[cfg(test)]
@@ -212,13 +417,54 @@ mod tests {
         }
     }
 
+    fn fmt_default(format: Format) -> Decision {
+        Decision::format_only(format)
+    }
+
+    /// Format-only bandit (the PR 2/3 arm space) with no UCB.
+    fn format_bandit(rate: f64, seed: u64, target: Option<u64>) -> Bandit {
+        Bandit::with_params(rate, seed, target, 0, true, false)
+    }
+
+    #[test]
+    fn arm_indexing_roundtrips_the_whole_grid() {
+        for i in 0..N_ARMS {
+            let d = Decision::from_arm(i);
+            assert_eq!(d.arm_index(), i, "arm {i} must roundtrip ({d})");
+        }
+        // the serving default quantizes onto its own canonical arm
+        let d = fmt_default(Format::Ell);
+        assert_eq!(Decision::from_arm(d.arm_index()), d);
+        // finer CUDA knob points alias exactly as knob_map collapses
+        let fine = Decision {
+            format: Format::Ell,
+            choice: CompileChoice {
+                tb_size: 512,
+                maxrregcount: 128,
+                mem: MemConfig::Default,
+            },
+        };
+        assert_eq!(
+            fine.arm_index(),
+            Decision {
+                format: Format::Ell,
+                choice: CompileChoice {
+                    tb_size: 256,
+                    maxrregcount: 64,
+                    mem: MemConfig::Default
+                },
+            }
+            .arm_index()
+        );
+    }
+
     #[test]
     fn zero_rate_never_explores_and_never_draws() {
         let b = Bandit::new(0.0, 7);
         let f = feats(1000.0, 8.0);
         for _ in 0..100 {
-            let r = b.route(&f, Format::Csr);
-            assert_eq!(r, RouteChoice::chosen(Format::Csr));
+            let r = b.route(&f, fmt_default(Format::Csr));
+            assert_eq!(r, RouteChoice::chosen(fmt_default(Format::Csr)));
         }
         assert_eq!(b.buckets(), 0, "no state may be created at rate 0");
     }
@@ -227,21 +473,25 @@ mod tests {
     fn live_annealing_pauses_and_resumes_exploration() {
         let b = Bandit::new(1.0, 5);
         let f = feats(700.0, 5.0);
-        assert!(b.route(&f, Format::Csr).explored);
+        assert!(b.route(&f, fmt_default(Format::Csr)).explored);
         b.set_explore_rate(0.0);
         assert_eq!(b.explore_rate(), 0.0);
         for _ in 0..50 {
-            assert!(!b.route(&f, Format::Csr).explored, "paused bandit must not explore");
+            assert!(
+                !b.route(&f, fmt_default(Format::Csr)).explored,
+                "paused bandit must not explore"
+            );
         }
         b.set_explore_rate(1.0);
-        assert!(b.route(&f, Format::Csr).explored);
+        assert!(b.route(&f, fmt_default(Format::Csr)).explored);
     }
 
     #[test]
     fn explores_at_roughly_the_configured_rate() {
         let b = Bandit::new(0.25, 42);
         let f = feats(5000.0, 12.0);
-        let explored = (0..4000).filter(|_| b.route(&f, Format::Csr).explored).count();
+        let explored =
+            (0..4000).filter(|_| b.route(&f, fmt_default(Format::Csr)).explored).count();
         assert!(
             (800..1200).contains(&explored),
             "~25% of 4000 dispatches should explore, got {explored}"
@@ -249,55 +499,195 @@ mod tests {
     }
 
     #[test]
-    fn exploration_is_count_balanced_across_alternative_arms() {
-        let b = Bandit::new(1.0, 3);
+    fn joint_exploration_is_count_balanced_across_all_arms() {
+        let b = Bandit::with_params(1.0, 3, None, 0, true, true);
         let f = feats(2000.0, 6.0);
-        for _ in 0..99 {
-            let r = b.route(&f, Format::Csr);
+        let default = fmt_default(Format::Csr);
+        for _ in 0..(2 * (N_ARMS - 1)) {
+            let r = b.route(&f, default);
             assert!(r.explored);
-            assert_ne!(r.format, Format::Csr, "exploration must pick a non-default arm");
+            assert_ne!(r.decision, default, "exploration must pick a non-default arm");
         }
         let arms = b.arms(&f);
-        assert_eq!(arms[Format::Csr.class_id()].pulls, 0);
-        for fmt in [Format::Ell, Format::Bell, Format::Sell] {
-            assert_eq!(arms[fmt.class_id()].pulls, 33, "99 pulls split evenly");
+        assert_eq!(arms[default.arm_index()].pulls, 0);
+        for (i, a) in arms.iter().enumerate() {
+            if i != default.arm_index() {
+                assert_eq!(a.pulls, 2, "arm {i}: {} pulls split evenly", 2 * (N_ARMS - 1));
+            }
         }
     }
 
     #[test]
-    fn annealing_stops_exploration_once_alternatives_have_evidence() {
-        let b = Bandit::with_anneal(1.0, 11, Some(4));
+    fn format_only_mode_restricts_exploration_to_format_arms() {
+        let b = format_bandit(1.0, 3, None);
+        let f = feats(2000.0, 6.0);
+        let default = fmt_default(Format::Csr);
+        for _ in 0..99 {
+            let r = b.route(&f, default);
+            assert!(r.explored);
+            assert_ne!(r.decision.format, Format::Csr);
+            assert_eq!(
+                r.decision.choice,
+                CompileChoice::serving_default(),
+                "format-only exploration must keep the default knob"
+            );
+        }
+        let arms = b.arms(&f);
+        for fmt in [Format::Ell, Format::Bell, Format::Sell] {
+            assert_eq!(arms[fmt_default(fmt).arm_index()].pulls, 33, "99 pulls split evenly");
+        }
+    }
+
+    #[test]
+    fn ucb_takes_over_once_every_alternative_has_evidence() {
+        // format-only space (3 alternatives) with a floor of 2
+        let b = Bandit::with_params(1.0, 17, None, 2, true, false);
         let f = feats(900.0, 6.0);
-        assert!(b.route(&f, Format::Csr).explored, "fresh bucket explores at full rate");
-        // credit the target evidence to every alternative arm
+        let default = fmt_default(Format::Csr);
+        // credit evidence: ELL clearly best, BELL/SELL poor
+        for (fmt, cost) in [(Format::Ell, 1.0), (Format::Bell, 9.0), (Format::Sell, 9.0)] {
+            for _ in 0..2 {
+                b.observe(&f, fmt_default(fmt), cost);
+            }
+        }
+        assert_eq!(b.ucb_routes(), 0);
+        let picks: Vec<Format> = (0..60).map(|_| b.route(&f, default).decision.format).collect();
+        assert!(b.ucb_routes() > 0, "the floor is met, UCB must engage");
+        let ell = picks.iter().filter(|f| **f == Format::Ell).count();
+        assert!(
+            ell > picks.len() / 2,
+            "UCB must concentrate on the best-observed arm (ELL got {ell}/{})",
+            picks.len()
+        );
+    }
+
+    #[test]
+    fn joint_ucb_engages_before_an_annealing_bucket_goes_quiet() {
+        // floor 2 < anneal target 8: once each alternative format has 2
+        // credited observations (summed across knob arms), exploration
+        // is still live (effective rate 0.75) and must route via UCB —
+        // a per-arm floor would need 47x2 labels here and never engage
+        let b = Bandit::with_params(1.0, 23, Some(8), 2, true, true);
+        let f = feats(600.0, 7.0);
+        let default = fmt_default(Format::Csr);
+        for fmt in [Format::Ell, Format::Bell, Format::Sell] {
+            for k in 0..2 {
+                b.observe(&f, Decision { format: fmt, choice: knob_arm(k) }, 1.0 + k as f64);
+            }
+        }
+        let explored = (0..400).filter(|_| b.route(&f, default).explored).count();
+        assert!(explored > 0, "the bucket must still be exploring");
+        assert!(b.ucb_routes() > 0, "UCB must engage while exploration is live");
+    }
+
+    #[test]
+    fn joint_ucb_concentrates_despite_unobserved_arms() {
+        // minimize; only ONE knob arm per alternative format has
+        // evidence when the floor is crossed. The baseline must come
+        // from OBSERVED arms only: with never-observed 0.0 means
+        // included, best_mean would be 0.0, every value term would
+        // flatten to 1.0, and UCB would cycle the grid exactly like
+        // the count-balancer it replaces.
+        let best = Decision { format: Format::Ell, choice: knob_arm(0) };
+        let cost = |d: Decision| if d == best { 1.0 } else { 40.0 };
+        let b = Bandit::with_params(1.0, 29, None, 2, true, true);
+        let f = feats(800.0, 9.0);
+        let default = fmt_default(Format::Csr);
+        for fmt in [Format::Ell, Format::Bell, Format::Sell] {
+            let d = Decision { format: fmt, choice: knob_arm(0) };
+            for _ in 0..2 {
+                b.observe(&f, d, cost(d));
+            }
+        }
+        // realistic loop: every routed dispatch is observed back
+        let mut picks = [0usize; N_ARMS];
+        for _ in 0..300 {
+            let r = b.route(&f, default);
+            b.observe(&f, r.decision, cost(r.decision));
+            picks[r.decision.arm_index()] += 1;
+        }
+        assert!(b.ucb_routes() > 0, "floor 2 is crossed from the start");
+        let best_picks = picks[best.arm_index()];
+        let runner_up =
+            picks.iter().enumerate().filter(|(i, _)| *i != best.arm_index()).map(|(_, c)| *c);
+        assert!(
+            best_picks > runner_up.max().unwrap(),
+            "the best-observed arm must be the modal pick, got {picks:?}"
+        );
+        assert!(
+            best_picks > 2 * 300 / N_ARMS,
+            "concentration must beat the uniform share ({best_picks}/300)"
+        );
+    }
+
+    #[test]
+    fn ucb_respects_maximize_objectives() {
+        let b = Bandit::with_params(1.0, 18, None, 1, false, false);
+        let f = feats(900.0, 6.0);
+        // higher is better now: SELL wins
+        for (fmt, v) in [(Format::Ell, 1.0), (Format::Bell, 2.0), (Format::Sell, 50.0)] {
+            b.observe(&f, fmt_default(fmt), v);
+        }
+        let picks: Vec<Format> =
+            (0..60).map(|_| b.route(&f, fmt_default(Format::Csr)).decision.format).collect();
+        let sell = picks.iter().filter(|f| **f == Format::Sell).count();
+        assert!(sell > picks.len() / 2, "maximize objective must favor SELL ({sell})");
+    }
+
+    #[test]
+    fn annealing_stops_exploration_once_alternatives_have_evidence() {
+        let b = format_bandit(1.0, 11, Some(4));
+        let f = feats(900.0, 6.0);
+        assert!(
+            b.route(&f, fmt_default(Format::Csr)).explored,
+            "fresh bucket explores at full rate"
+        );
+        // credit the target evidence to every alternative format
         for fmt in [Format::Ell, Format::Bell, Format::Sell] {
             for _ in 0..4 {
-                b.observe(&f, fmt, 1.0);
+                b.observe(&f, fmt_default(fmt), 1.0);
             }
         }
         for _ in 0..200 {
             assert!(
-                !b.route(&f, Format::Csr).explored,
+                !b.route(&f, fmt_default(Format::Csr)).explored,
                 "a fully-confident bucket must stop exploring"
             );
         }
         // a DIFFERENT bucket still explores at full rate
         let fresh = feats(1_000_000.0, 64.0);
         assert_ne!(bucket_of(&f), bucket_of(&fresh));
-        assert!(b.route(&fresh, Format::Csr).explored);
+        assert!(b.route(&fresh, fmt_default(Format::Csr)).explored);
+    }
+
+    #[test]
+    fn annealing_counts_evidence_across_a_formats_knob_arms() {
+        // joint bandit: evidence spread over DIFFERENT knob arms of the
+        // alternative formats still anneals the bucket
+        let b = Bandit::with_params(1.0, 19, Some(4), 0, true, true);
+        let f = feats(450.0, 5.0);
+        for fmt in [Format::Ell, Format::Bell, Format::Sell] {
+            for k in 0..4 {
+                b.observe(&f, Decision { format: fmt, choice: knob_arm(k) }, 1.0);
+            }
+        }
+        for _ in 0..100 {
+            assert!(!b.route(&f, fmt_default(Format::Csr)).explored);
+        }
     }
 
     #[test]
     fn annealing_decays_the_rate_with_partial_evidence() {
-        let b = Bandit::with_anneal(1.0, 12, Some(8));
+        let b = format_bandit(1.0, 12, Some(8));
         let f = feats(400.0, 3.0);
         // half the target on every alternative -> effective rate 0.5
         for fmt in [Format::Ell, Format::Bell, Format::Sell] {
             for _ in 0..4 {
-                b.observe(&f, fmt, 1.0);
+                b.observe(&f, fmt_default(fmt), 1.0);
             }
         }
-        let explored = (0..2000).filter(|_| b.route(&f, Format::Csr).explored).count();
+        let explored =
+            (0..2000).filter(|_| b.route(&f, fmt_default(Format::Csr)).explored).count();
         assert!(
             (800..1200).contains(&explored),
             "half-confident bucket should explore ~50%, got {explored}/2000"
@@ -309,7 +699,10 @@ mod tests {
         let b = Bandit::with_anneal(0.0, 13, Some(4));
         let f = feats(1000.0, 8.0);
         for _ in 0..50 {
-            assert_eq!(b.route(&f, Format::Csr), RouteChoice::chosen(Format::Csr));
+            assert_eq!(
+                b.route(&f, fmt_default(Format::Csr)),
+                RouteChoice::chosen(fmt_default(Format::Csr))
+            );
         }
         assert_eq!(b.buckets(), 0, "rate 0 must stay stateless with annealing configured");
     }
@@ -319,7 +712,7 @@ mod tests {
         let f = feats(300.0, 4.0);
         let run = |seed| {
             let b = Bandit::new(0.5, seed);
-            (0..64).map(|_| b.route(&f, Format::Ell)).collect::<Vec<_>>()
+            (0..64).map(|_| b.route(&f, fmt_default(Format::Ell))).collect::<Vec<_>>()
         };
         assert_eq!(run(9), run(9));
         assert_ne!(run(9), run(10), "different seeds give a different schedule");
@@ -330,9 +723,9 @@ mod tests {
         let b = Bandit::new(0.1, 1);
         let f = feats(100.0, 2.0);
         for v in [2.0, 4.0, 6.0] {
-            b.observe(&f, Format::Sell, v);
+            b.observe(&f, fmt_default(Format::Sell), v);
         }
-        let arm = b.arms(&f)[Format::Sell.class_id()];
+        let arm = b.arms(&f)[fmt_default(Format::Sell).arm_index()];
         assert_eq!(arm.observations, 3);
         assert!((arm.mean_objective - 4.0).abs() < 1e-12);
     }

@@ -7,19 +7,23 @@
 //! (observe -> explore -> retrain -> hot-swap):
 //!
 //! * **Observe** ([`observer`]): every executed dispatch streams an
-//!   [`Observation`] — features, format actually run, measured
-//!   execution latency, gpusim-modeled energy — into a bounded
-//!   drop-oldest buffer.
+//!   [`Observation`] — features, the (format, compile-knob) decision
+//!   actually run, measured execution latency, gpusim-modeled energy —
+//!   into a bounded drop-oldest buffer.
 //! * **Explore** ([`bandit`]): a per-feature-bucket epsilon-greedy
 //!   explorer occasionally routes a dispatch to a *non-predicted*
-//!   format so the buffer holds counterfactual labels. Deterministic
-//!   given the seed; zero overhead (and zero RNG draws) at rate 0.
+//!   joint arm (another format, or another compile knob of the same
+//!   format) so the buffer holds counterfactual labels; arm choice is
+//!   count-balanced until the per-arm UCB floor. Deterministic given
+//!   the seed; zero overhead (and zero RNG draws) at rate 0.
 //! * **Retrain** ([`trainer`]): a retraining task periodically fits a
-//!   fresh `RunTimeOptimizer` on offline + accumulated online evidence
-//!   through the existing `train_on_examples` path.
-//! * **Hot-swap** ([`router`]): a versioned `RwLock<Arc<_>>` handle the
-//!   shards poll with one atomic load; on an upgrade each shard
-//!   re-decides its registered matrices so they can migrate formats.
+//!   fresh `RunTimeOptimizer` AND a per-format `KnobPolicy` on offline
+//!   + accumulated online evidence through the existing training paths.
+//! * **Hot-swap** ([`router`]): a versioned `RwLock<Arc<Policy>>`
+//!   handle the shards poll with one atomic load; on an upgrade each
+//!   shard re-decides its registered matrices so they can migrate
+//!   formats AND compile knobs (re-selected artifacts, re-prepared
+//!   literals).
 //! * **Drift** ([`drift`]): a windowed mean/variance shift detector
 //!   over the Table-2 features triggers retraining early and is
 //!   surfaced in `PoolStats`.
@@ -36,16 +40,15 @@ pub mod observer;
 pub mod router;
 pub mod trainer;
 
-pub use bandit::{Bandit, RouteChoice};
+pub use bandit::{Bandit, Decision as JointDecision, RouteChoice};
 pub use drift::{DriftConfig, DriftDetector, DriftStatus};
 pub use observer::{Observation, Observer};
-pub use router::SwapRouter;
+pub use router::{Policy, SwapRouter};
 pub use trainer::Trainer;
 
 use crate::coordinator::RunTimeOptimizer;
 use crate::features::Features;
 use crate::gpusim::Objective;
-use crate::sparse::Format;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex, Weak};
@@ -63,12 +66,24 @@ pub struct OnlineConfig {
     pub retrain_every: u64,
     /// Seed for the exploration schedule.
     pub seed: u64,
-    /// Auto-anneal exploration: once every alternative format arm in a
-    /// feature bucket has this many credited observations, that
-    /// bucket's effective explore rate reaches 0 (linear decay with the
-    /// weakest arm's evidence). `None` keeps the rate flat. Per-bucket,
-    /// so drifted-in matrix populations still explore at full rate.
+    /// Auto-anneal exploration: once every alternative format in a
+    /// feature bucket has this many credited observations (summed
+    /// across its knob arms), that bucket's effective explore rate
+    /// reaches 0 (linear decay with the weakest format's evidence).
+    /// `None` keeps the rate flat. Per-bucket, so drifted-in matrix
+    /// populations still explore at full rate.
     pub anneal_target: Option<u64>,
+    /// Decide compile knobs jointly with the format: the bandit
+    /// explores knob arms and every retrain installs a per-format
+    /// [`crate::coordinator::compile_time::KnobPolicy`] next to the
+    /// format router. `false` reproduces the PR 2/3 format-only loop.
+    pub joint_knobs: bool,
+    /// Evidence floor at which exploration switches from
+    /// count-balancing to per-arm UCB scoring (0 = count-balance
+    /// forever). Credited like `anneal_target`: per alternative format,
+    /// knob arms summed — keep it below the anneal target so UCB
+    /// engages while annealing buckets still explore.
+    pub ucb_floor: u64,
     /// Observation ring capacity (the retraining window).
     pub buffer_cap: usize,
     /// Drift detector tuning.
@@ -87,6 +102,8 @@ impl Default for OnlineConfig {
             retrain_every: 0,
             seed: 0xC10_5ED,
             anneal_target: None,
+            joint_knobs: true,
+            ucb_floor: bandit::DEFAULT_UCB_FLOOR,
             buffer_cap: 4096,
             drift: DriftConfig::default(),
             background: false,
@@ -124,7 +141,14 @@ impl Online {
         trainer: Option<Trainer>,
     ) -> Arc<Online> {
         let online = Arc::new(Online {
-            bandit: Bandit::with_anneal(cfg.explore_rate, cfg.seed, cfg.anneal_target),
+            bandit: Bandit::with_params(
+                cfg.explore_rate,
+                cfg.seed,
+                cfg.anneal_target,
+                cfg.ucb_floor,
+                objective.minimize(),
+                cfg.joint_knobs,
+            ),
             observer: Observer::new(cfg.buffer_cap),
             drift: DriftDetector::new(cfg.drift),
             router: Arc::new(SwapRouter::new(initial)),
@@ -169,9 +193,9 @@ impl Online {
         self.trainer.is_some() && self.cfg.retrain_every > 0
     }
 
-    /// Route one dispatch (shard hot path): the router's decision, or
-    /// an exploration arm at the configured rate.
-    pub fn route(&self, feats: &Features, decided: Format) -> RouteChoice {
+    /// Route one dispatch (shard hot path): the policy's joint
+    /// decision, or an exploration arm at the configured rate.
+    pub fn route(&self, feats: &Features, decided: JointDecision) -> RouteChoice {
         self.bandit.route(feats, decided)
     }
 
@@ -194,7 +218,11 @@ impl Online {
             Objective::Latency => obs.measured_latency_s,
             _ => self.objective.value(&obs.modeled),
         };
-        self.bandit.observe(&obs.features, obs.format, value);
+        self.bandit.observe(
+            &obs.features,
+            JointDecision { format: obs.format, choice: obs.choice },
+            value,
+        );
         let newly_drifted = self.drift.add(&obs.features);
         self.observer.record(obs);
         if !self.retraining_enabled() {
@@ -258,11 +286,18 @@ impl Online {
         if obs.is_empty() {
             return None;
         }
-        let next = trainer.retrain(&obs);
+        let next = trainer.retrain_with(&obs, self.cfg.joint_knobs);
         self.last_retrain_total.store(total, Ordering::Release);
         self.retrains.fetch_add(1, Ordering::Relaxed);
         self.drift.rebase();
-        Some(self.router.install(Arc::new(next)))
+        // the retrained router + knob policy swap in as ONE policy, so
+        // a shard's re-decision pass sees a consistent joint surface
+        let policy = if self.cfg.joint_knobs {
+            Policy::joint(Arc::new(next.router), Arc::new(next.knobs))
+        } else {
+            Policy::format_only(Arc::new(next.router))
+        };
+        Some(self.router.install_policy(Arc::new(policy)))
     }
 
     /// Completed retrains.
@@ -307,9 +342,15 @@ impl Online {
         self.drift.status()
     }
 
-    /// Exploration stats for a feature vector's bucket (debug aid).
-    pub fn arms(&self, feats: &Features) -> [bandit::ArmStats; bandit::N_FORMATS] {
+    /// Exploration stats for a feature vector's bucket, joint-arm
+    /// order (debug aid).
+    pub fn arms(&self, feats: &Features) -> Vec<bandit::ArmStats> {
         self.bandit.arms(feats)
+    }
+
+    /// Exploration picks made through the per-arm UCB scorer.
+    pub fn ucb_routes(&self) -> u64 {
+        self.bandit.ucb_routes()
     }
 }
 
@@ -317,6 +358,7 @@ impl Online {
 mod tests {
     use super::*;
     use crate::gen;
+    use crate::sparse::Format;
     use crate::testutil::toy_setup;
     use std::time::Duration;
 
@@ -326,6 +368,7 @@ mod tests {
             matrix_id: 0,
             features: feats,
             format,
+            choice: crate::coordinator::compile_time::CompileChoice::serving_default(),
             explored: false,
             requests: 1,
             measured_latency_s: 1e-6,

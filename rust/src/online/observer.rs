@@ -15,34 +15,25 @@
 //! synthetic [`Record`]s that teach the per-format value regressors the
 //! observed objective levels of the drifted population.
 
+use super::bandit::{knob_arm, knob_index};
+use crate::coordinator::compile_time::{knob_example, CompileChoice};
 use crate::dataset::labels::{arch_feature, Example};
 use crate::dataset::Record;
 use crate::features::Features;
-use crate::gpusim::{KernelConfig, Measurement, MemConfig, Objective};
+use crate::gpusim::{KernelConfig, Measurement, Objective};
 use crate::sparse::Format;
 use anyhow::{bail, Context, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-/// Compile knobs the serving path models (and therefore the knobs the
-/// synthetic online records claim): mid TB size, no register-cap
-/// pressure, default carve-out — the shard's telemetry assumption.
-pub const MODEL_TB_SIZE: u32 = 256;
-pub const MODEL_MAXRREGCOUNT: u32 = 64;
-
 const N_FORMATS: usize = Format::ALL.len();
 
 /// The kernel configuration the serving energy model assumes for
-/// `format` (one point of the offline sweep, so synthetic records mix
-/// cleanly into the training dataset).
+/// `format` at the default knobs (one point of the offline sweep, so
+/// synthetic records mix cleanly into the training dataset).
 pub fn model_config(format: Format) -> KernelConfig {
-    KernelConfig {
-        format,
-        tb_size: MODEL_TB_SIZE,
-        maxrregcount: MODEL_MAXRREGCOUNT,
-        mem: MemConfig::Default,
-    }
+    CompileChoice::serving_default().config_for(format)
 }
 
 /// One served dispatch, as the trainer sees it.
@@ -52,6 +43,10 @@ pub struct Observation {
     pub features: Features,
     /// Format the dispatch executed in.
     pub format: Format,
+    /// Compile-knob decision the dispatch executed under (the serving
+    /// default unless a knob policy or the exploration bandit said
+    /// otherwise).
+    pub choice: CompileChoice,
     /// True when the bandit routed this dispatch off the predicted path.
     pub explored: bool,
     /// Requests coalesced into the dispatch (>= 1). Weights the label
@@ -127,8 +122,9 @@ impl Observer {
 /// `ckpt-<matrix id>-<requests>-<explored>-<measured latency f64 bits>`
 /// (hex fields). Features and the modeled measurement round-trip
 /// bit-exactly through the store's shortest-unique float formatting;
-/// the config slot is [`model_config`] of the executed format, exactly
-/// as [`to_training`] would emit it.
+/// the config slot carries the executed format AND knob decision
+/// (`CompileChoice::config_for`), so joint (format, knob) evidence
+/// survives a restart.
 pub fn to_records(obs: &[Observation], arch: &str) -> Vec<Record> {
     obs.iter()
         .map(|o| Record {
@@ -140,7 +136,7 @@ pub fn to_records(obs: &[Observation], arch: &str) -> Vec<Record> {
                 o.measured_latency_s.to_bits()
             ),
             arch: arch.to_string(),
-            config: model_config(o.format),
+            config: o.choice.config_for(o.format),
             features: o.features,
             m: o.modeled,
         })
@@ -170,6 +166,7 @@ pub fn from_records(records: &[Record]) -> Result<Vec<Observation>> {
                 matrix_id,
                 features: r.features,
                 format: r.config.format,
+                choice: CompileChoice::from_config(&r.config),
                 explored,
                 requests,
                 measured_latency_s: f64::from_bits(lat_bits),
@@ -197,12 +194,18 @@ pub struct TrainingDelta {
     /// One example per feature vector observed under >= 2 formats,
     /// labeled with the best observed format for the objective.
     pub examples: Vec<Example>,
-    /// One synthetic record per (feature vector, format) with the mean
-    /// observed/modeled measurement — value-regressor training data.
+    /// One synthetic record per (feature vector, format, knob arm) with
+    /// the mean observed/modeled measurement — value-regressor training
+    /// data.
     pub records: Vec<Record>,
+    /// One example per (feature vector, format) observed under >= 2
+    /// distinct knob arms, labeled with the best observed arm — the
+    /// per-format `CompileTimeOptimizer` refit data (DESIGN.md §8).
+    pub knob_examples: Vec<(Format, Example)>,
 }
 
-struct FormatAgg {
+#[derive(Clone, Copy)]
+struct ArmAgg {
     count: u64,
     latency_s: f64,
     energy_j: f64,
@@ -210,67 +213,129 @@ struct FormatAgg {
     mflops_per_watt: f64,
 }
 
+impl ArmAgg {
+    const ZERO: ArmAgg =
+        ArmAgg { count: 0, latency_s: 0.0, energy_j: 0.0, avg_power_w: 0.0, mflops_per_watt: 0.0 };
+
+    fn add(&mut self, o: &Observation) {
+        let w = o.requests.max(1);
+        self.count += w;
+        let wf = w as f64;
+        self.latency_s += o.measured_latency_s * wf;
+        self.energy_j += o.modeled.energy_j * wf;
+        self.avg_power_w += o.modeled.avg_power_w * wf;
+        self.mflops_per_watt += o.modeled.mflops_per_watt * wf;
+    }
+
+    fn merge(&mut self, other: &ArmAgg) {
+        self.count += other.count;
+        self.latency_s += other.latency_s;
+        self.energy_j += other.energy_j;
+        self.avg_power_w += other.avg_power_w;
+        self.mflops_per_watt += other.mflops_per_watt;
+    }
+
+    fn mean(&self) -> Measurement {
+        let k = self.count.max(1) as f64;
+        Measurement {
+            latency_s: self.latency_s / k,
+            energy_j: self.energy_j / k,
+            avg_power_w: self.avg_power_w / k,
+            mflops_per_watt: self.mflops_per_watt / k,
+        }
+    }
+}
+
 /// Aggregate a snapshot into retraining artifacts.
 ///
-/// The objective value per (feature vector, format) is taken from the
-/// mean measurement: measured wall latency for `Objective::Latency`
-/// (the serving truth), the gpusim model for the energy-family
-/// objectives (the paper's sensor stand-in).
+/// Observations group by exact feature vector, then by (format, knob
+/// arm): the knob dimension quantizes through [`knob_index`] so finer
+/// CUDA knob points that alias to the same Pallas variant pool their
+/// evidence. The objective value per cell is taken from the mean
+/// measurement: measured wall latency for `Objective::Latency` (the
+/// serving truth), the gpusim model for the energy-family objectives
+/// (the paper's sensor stand-in).
 pub fn to_training(obs: &[Observation], objective: Objective, arch: &str) -> TrainingDelta {
-    // (feature_key) -> (features, per-format aggregates); insertion
-    // order kept so retraining is deterministic.
-    let mut groups: Vec<(u64, Features, [Option<FormatAgg>; N_FORMATS])> = Vec::new();
+    // (feature_key) -> (features, per-(format, knob-arm) aggregates);
+    // insertion order kept so retraining is deterministic.
+    type Cells = Vec<(Format, usize, ArmAgg)>;
+    let mut groups: Vec<(u64, Features, Cells)> = Vec::new();
     for o in obs {
         let key = feature_key(&o.features);
         let idx = match groups.iter().position(|(k, _, _)| *k == key) {
             Some(i) => i,
             None => {
-                groups.push((key, o.features, std::array::from_fn(|_| None)));
+                groups.push((key, o.features, Vec::new()));
                 groups.len() - 1
             }
         };
-        let slot = &mut groups[idx].2;
-        let agg = slot[o.format.class_id()].get_or_insert(FormatAgg {
-            count: 0,
-            latency_s: 0.0,
-            energy_j: 0.0,
-            avg_power_w: 0.0,
-            mflops_per_watt: 0.0,
-        });
-        let w = o.requests.max(1);
-        agg.count += w;
-        let wf = w as f64;
-        agg.latency_s += o.measured_latency_s * wf;
-        agg.energy_j += o.modeled.energy_j * wf;
-        agg.avg_power_w += o.modeled.avg_power_w * wf;
-        agg.mflops_per_watt += o.modeled.mflops_per_watt * wf;
+        let cells = &mut groups[idx].2;
+        let arm = knob_index(o.choice);
+        let cell = match cells.iter().position(|(f, a, _)| *f == o.format && *a == arm) {
+            Some(i) => &mut cells[i].2,
+            None => {
+                cells.push((o.format, arm, ArmAgg::ZERO));
+                &mut cells.last_mut().expect("just pushed").2
+            }
+        };
+        cell.add(o);
     }
 
     let mut examples = Vec::new();
     let mut records = Vec::new();
-    for (key, feats, aggs) in &groups {
+    let mut knob_examples = Vec::new();
+    for (key, feats, cells) in &groups {
         let name = format!("online-{key:016x}");
+        let mut fv = feats.to_scaled_vec();
+        fv.push(arch_feature(arch));
+
+        // Per-(format, arm) records for the value regressors, tagged
+        // with the arm's canonical config, plus per-format knob labels.
+        let mut format_aggs: [Option<ArmAgg>; N_FORMATS] = [None; N_FORMATS];
+        for fmt in Format::ALL {
+            let mut best_arm: Option<(usize, f64)> = None;
+            let mut arms_seen = 0usize;
+            for (f, arm, agg) in cells.iter().filter(|(f, _, _)| *f == fmt) {
+                arms_seen += 1;
+                let mean = agg.mean();
+                records.push(Record {
+                    matrix: name.clone(),
+                    arch: arch.to_string(),
+                    config: knob_arm(*arm).config_for(*f),
+                    features: *feats,
+                    m: mean,
+                });
+                let value = objective.value(&mean);
+                if best_arm.is_none_or(|(_, bv)| objective.better(value, bv)) {
+                    best_arm = Some((*arm, value));
+                }
+                format_aggs[fmt.class_id()].get_or_insert(ArmAgg::ZERO).merge(agg);
+            }
+            // A single-arm format feeds the value models above but
+            // carries no comparative knob label.
+            if arms_seen >= 2 {
+                let (arm, value) = best_arm.expect("arms_seen >= 2");
+                knob_examples.push((
+                    fmt,
+                    knob_example(
+                        &name,
+                        arch,
+                        fv.clone(),
+                        &knob_arm(arm).config_for(fmt),
+                        value,
+                    ),
+                ));
+            }
+        }
+
+        // The format label compares per-format means (knob arms pooled).
         let mut best: Option<(Format, f64)> = None;
         let mut csr_value: Option<f64> = None;
         let mut n_formats = 0usize;
         for fmt in Format::ALL {
-            let Some(agg) = &aggs[fmt.class_id()] else { continue };
+            let Some(agg) = &format_aggs[fmt.class_id()] else { continue };
             n_formats += 1;
-            let k = agg.count as f64;
-            let mean = Measurement {
-                latency_s: agg.latency_s / k,
-                energy_j: agg.energy_j / k,
-                avg_power_w: agg.avg_power_w / k,
-                mflops_per_watt: agg.mflops_per_watt / k,
-            };
-            records.push(Record {
-                matrix: name.clone(),
-                arch: arch.to_string(),
-                config: model_config(fmt),
-                features: *feats,
-                m: mean,
-            });
-            let value = objective.value(&mean);
+            let value = objective.value(&agg.mean());
             if fmt == Format::Csr {
                 csr_value = Some(value);
             }
@@ -284,8 +349,6 @@ pub fn to_training(obs: &[Observation], objective: Objective, arch: &str) -> Tra
             continue;
         }
         let (best_fmt, best_value) = best.expect("n_formats >= 2");
-        let mut fv = feats.to_scaled_vec();
-        fv.push(arch_feature(arch));
         let baseline = KernelConfig::default_baseline();
         examples.push(Example {
             matrix: name,
@@ -300,7 +363,7 @@ pub fn to_training(obs: &[Observation], objective: Objective, arch: &str) -> Tra
             default_value: csr_value.unwrap_or(best_value),
         });
     }
-    TrainingDelta { examples, records }
+    TrainingDelta { examples, records, knob_examples }
 }
 
 #[cfg(test)]
@@ -325,6 +388,7 @@ mod tests {
             matrix_id: n as u64,
             features: feats(n),
             format,
+            choice: CompileChoice::serving_default(),
             explored: format != Format::Csr,
             requests: 1,
             measured_latency_s: lat,
@@ -372,6 +436,11 @@ mod tests {
         a.matrix_id = 0xDEAD_BEEF;
         a.requests = 17;
         a.explored = true;
+        a.choice = CompileChoice {
+            tb_size: 64,
+            maxrregcount: 32,
+            mem: crate::gpusim::MemConfig::PreferL1,
+        };
         let b = obs(9.0, Format::Csr, 1e-12, 4.2e-3);
         let records = to_records(&[a, b], "GTX1650m-Turing");
         assert_eq!(records.len(), 2);
@@ -382,6 +451,7 @@ mod tests {
         for (orig, got) in [a, b].iter().zip(&back) {
             assert_eq!(got.matrix_id, orig.matrix_id);
             assert_eq!(got.format, orig.format);
+            assert_eq!(got.choice, orig.choice, "the knob decision must survive the checkpoint");
             assert_eq!(got.explored, orig.explored);
             assert_eq!(got.requests, orig.requests);
             assert_eq!(
@@ -431,7 +501,8 @@ mod tests {
         // records: A/csr, A/ell, B/csr
         assert_eq!(delta.records.len(), 3);
         assert!(delta.records.iter().all(|r| r.matrix.starts_with("online-")));
-        assert!(delta.records.iter().all(|r| r.config.tb_size == MODEL_TB_SIZE));
+        let default_tb = CompileChoice::serving_default().tb_size;
+        assert!(delta.records.iter().all(|r| r.config.tb_size == default_tb));
         let a_csr = delta
             .records
             .iter()
@@ -439,6 +510,41 @@ mod tests {
             .unwrap();
         assert!((a_csr.m.energy_j - 5.0).abs() < 1e-12);
         assert!((a_csr.m.latency_s - 5e-6).abs() < 1e-18, "latency label is the measured mean");
+    }
+
+    #[test]
+    fn training_delta_labels_best_knob_arm_per_format() {
+        use crate::gpusim::MemConfig;
+        // same feature vector, same format (ELL), two knob arms: the
+        // gather-analogue arm is cheaper -> the knob example must label
+        // its tb/reg/mem classes; a single-arm CSR group contributes no
+        // knob example.
+        let cheap = CompileChoice { tb_size: 64, maxrregcount: 32, mem: MemConfig::PreferL1 };
+        let costly = CompileChoice::serving_default();
+        let mk = |choice, energy| {
+            let mut o = obs(300.0, Format::Ell, energy, 1e-6);
+            o.choice = choice;
+            o
+        };
+        let buf = vec![
+            mk(costly, 6.0),
+            mk(cheap, 2.0),
+            obs(300.0, Format::Csr, 3.0, 3e-6),
+        ];
+        let delta = to_training(&buf, Objective::Energy, "GTX1650m-Turing");
+        // records: ELL x 2 arms + CSR x 1 arm
+        assert_eq!(delta.records.len(), 3);
+        assert_eq!(delta.knob_examples.len(), 1);
+        let (fmt, e) = &delta.knob_examples[0];
+        assert_eq!(*fmt, Format::Ell);
+        assert_eq!(e.tb_class, 0, "TB 64 is class 0");
+        assert_eq!(e.reg_class, 1, "regs 32 is class 1");
+        assert_eq!(e.mem_class, MemConfig::PreferL1.class_id());
+        assert_eq!(e.format_class, Format::Ell.class_id());
+        // the format label still compares pooled per-format means:
+        // ELL mean (6+2)/2 = 4 beats nothing over CSR 3 -> CSR wins
+        assert_eq!(delta.examples.len(), 1);
+        assert_eq!(delta.examples[0].format_class, Format::Csr.class_id());
     }
 
     #[test]

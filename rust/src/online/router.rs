@@ -1,23 +1,62 @@
-//! Versioned, atomically hot-swappable router handle.
+//! Versioned, atomically hot-swappable routing policy handle.
 //!
 //! The serving shards must never block on (or even notice) a retrain:
-//! they keep a locally cached `Arc<RunTimeOptimizer>` plus the version
-//! it came from, poll [`SwapRouter::version`] (one relaxed-ish atomic
-//! load) at the top of their message loop, and reload through the
-//! `RwLock` only when the version moved. [`SwapRouter::install`] is the
-//! single writer path: swap the `Arc`, bump the version, wake waiters.
+//! they keep a locally cached `Arc<Policy>` plus the version it came
+//! from, poll [`SwapRouter::version`] (one relaxed-ish atomic load) at
+//! the top of their message loop, and reload through the `RwLock` only
+//! when the version moved. [`SwapRouter::install_policy`] is the single
+//! writer path: swap the `Arc`, bump the version, wake waiters.
 //! In-flight dispatches keep executing against the old `Arc` they
 //! already cloned — a swap can never tear a decision in half.
+//!
+//! A [`Policy`] is the joint run-time decision surface (DESIGN.md §8):
+//! the `RunTimeOptimizer` decides the *format*, the optional
+//! [`KnobPolicy`] decides the *compile knobs for that format*. A policy
+//! without knob models (the PR 2/3 posture, and every frozen pool)
+//! keeps knobs at [`CompileChoice::serving_default`].
 
+use crate::coordinator::compile_time::{CompileChoice, KnobPolicy};
 use crate::coordinator::RunTimeOptimizer;
+use crate::features::Features;
+use crate::sparse::Format;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
-/// Shared handle to the current router, swappable at run time.
+/// One installable routing policy: format router + optional per-format
+/// knob policy.
+pub struct Policy {
+    pub router: Arc<RunTimeOptimizer>,
+    /// `None` = knobs stay at the serving default (format-only
+    /// routing, bit-identical to the pre-§8 engine).
+    pub knobs: Option<Arc<KnobPolicy>>,
+}
+
+impl Policy {
+    /// Format-only policy (frozen pools, and adaptive pools with
+    /// `--joint-knobs false`).
+    pub fn format_only(router: Arc<RunTimeOptimizer>) -> Policy {
+        Policy { router, knobs: None }
+    }
+
+    /// Joint policy: the retrained pair swaps in together.
+    pub fn joint(router: Arc<RunTimeOptimizer>, knobs: Arc<KnobPolicy>) -> Policy {
+        Policy { router, knobs: Some(knobs) }
+    }
+
+    /// Knob decision for a matrix already routed to `format`.
+    pub fn knob_for(&self, feats: &Features, format: Format) -> CompileChoice {
+        match &self.knobs {
+            Some(k) => k.predict(feats, format),
+            None => CompileChoice::serving_default(),
+        }
+    }
+}
+
+/// Shared handle to the current policy, swappable at run time.
 pub struct SwapRouter {
-    inner: RwLock<Arc<RunTimeOptimizer>>,
-    /// Monotone version counter; starts at 1 for the initial router.
+    inner: RwLock<Arc<Policy>>,
+    /// Monotone version counter; starts at 1 for the initial policy.
     version: AtomicU64,
     /// Mirror of `version` for blocking waiters ([`Self::wait_for_version`]).
     waiters: Mutex<u64>,
@@ -25,7 +64,12 @@ pub struct SwapRouter {
 }
 
 impl SwapRouter {
+    /// Wrap an initial format router (knobs at the serving default).
     pub fn new(initial: Arc<RunTimeOptimizer>) -> SwapRouter {
+        SwapRouter::new_policy(Arc::new(Policy::format_only(initial)))
+    }
+
+    pub fn new_policy(initial: Arc<Policy>) -> SwapRouter {
         SwapRouter {
             inner: RwLock::new(initial),
             version: AtomicU64::new(1),
@@ -34,23 +78,30 @@ impl SwapRouter {
         }
     }
 
-    /// Current router version (1 = the initial, never-swapped router).
+    /// Current policy version (1 = the initial, never-swapped policy).
     pub fn version(&self) -> u64 {
         self.version.load(Ordering::Acquire)
     }
 
-    /// Snapshot the current router together with its version. The pair
+    /// Snapshot the current policy together with its version. The pair
     /// is consistent: version reads happen under the same read lock the
     /// `Arc` is cloned under, and installs bump the counter while
     /// holding the write lock.
-    pub fn load(&self) -> (Arc<RunTimeOptimizer>, u64) {
+    pub fn load(&self) -> (Arc<Policy>, u64) {
         let guard = self.inner.read().expect("router lock");
         (guard.clone(), self.version.load(Ordering::Acquire))
     }
 
-    /// Atomically replace the router; returns the new version. Shards
-    /// notice on their next message and re-decide registered matrices.
+    /// Atomically replace the format router, dropping any installed
+    /// knob policy (manual-swap compatibility path); returns the new
+    /// version. Shards notice on their next message and re-decide
+    /// registered matrices.
     pub fn install(&self, next: Arc<RunTimeOptimizer>) -> u64 {
+        self.install_policy(Arc::new(Policy::format_only(next)))
+    }
+
+    /// Atomically replace the whole policy; returns the new version.
+    pub fn install_policy(&self, next: Arc<Policy>) -> u64 {
         let new_version = {
             let mut guard = self.inner.write().expect("router lock");
             *guard = next;
@@ -66,7 +117,7 @@ impl SwapRouter {
         new_version
     }
 
-    /// Block until the router version reaches `at_least` (true) or the
+    /// Block until the policy version reaches `at_least` (true) or the
     /// timeout expires (false). Deterministic test aid for asserting a
     /// background retrain landed.
     pub fn wait_for_version(&self, at_least: u64, timeout: Duration) -> bool {
@@ -109,15 +160,47 @@ mod tests {
     }
 
     #[test]
-    fn load_returns_the_installed_router() {
+    fn load_returns_the_installed_policy() {
         let first = router();
         let swap = SwapRouter::new(first.clone());
         let (got, _) = swap.load();
-        assert!(Arc::ptr_eq(&got, &first));
+        assert!(Arc::ptr_eq(&got.router, &first));
+        assert!(got.knobs.is_none(), "format-only wrapping installs no knob policy");
         let second = router();
         swap.install(second.clone());
         let (got, _) = swap.load();
-        assert!(Arc::ptr_eq(&got, &second));
+        assert!(Arc::ptr_eq(&got.router, &second));
+    }
+
+    #[test]
+    fn format_only_policy_decides_default_knobs() {
+        let swap = SwapRouter::new(router());
+        let (policy, _) = swap.load();
+        let coo = crate::gen::by_name("rim").unwrap().generate(1);
+        let feats = crate::features::extract_coo(&coo);
+        for f in Format::ALL {
+            assert_eq!(policy.knob_for(&feats, f), CompileChoice::serving_default());
+        }
+    }
+
+    #[test]
+    fn joint_policy_swaps_in_and_predicts_per_format_knobs() {
+        use crate::gpusim::{MAXRREGCOUNT, TB_SIZES};
+        let (r, ds, _) = crate::testutil::toy_setup(&["rim"], Objective::Latency);
+        let knobs =
+            Arc::new(KnobPolicy::train_on_dataset(&ds, Objective::Latency, "GTX1650m-Turing"));
+        let swap = SwapRouter::new(router());
+        let v = swap.install_policy(Arc::new(Policy::joint(Arc::new(r), knobs)));
+        assert_eq!(v, 2);
+        let (policy, _) = swap.load();
+        assert!(policy.knobs.is_some());
+        let coo = crate::gen::by_name("rim").unwrap().generate(1);
+        let feats = crate::features::extract_coo(&coo);
+        for f in Format::ALL {
+            let c = policy.knob_for(&feats, f);
+            assert!(TB_SIZES.contains(&c.tb_size), "{f}: {c}");
+            assert!(MAXRREGCOUNT.contains(&c.maxrregcount), "{f}: {c}");
+        }
     }
 
     #[test]
@@ -145,10 +228,10 @@ mod tests {
                 let swap = &swap;
                 s.spawn(move || {
                     for _ in 0..200 {
-                        let (r, v) = swap.load();
+                        let (p, v) = swap.load();
                         // the pair must be usable: version monotone, Arc live
                         assert!(v >= 1);
-                        let _ = r.objective;
+                        let _ = p.router.objective;
                     }
                 });
             }

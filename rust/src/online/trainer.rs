@@ -1,5 +1,6 @@
 //! Background retraining: offline sweep + online observations -> a
-//! fresh `RunTimeOptimizer` for the hot-swap router.
+//! fresh `RunTimeOptimizer` AND a fresh per-format [`KnobPolicy`] for
+//! the hot-swap router.
 //!
 //! A `Trainer` owns everything a retrain needs and nothing the serving
 //! hot path touches: the offline dataset, the offline examples (derived
@@ -7,20 +8,34 @@
 //! [`Trainer::retrain`] call folds a snapshot of the observation buffer
 //! into that base — online [`Example`]s re-label the format classifier
 //! for the observed feature vectors, online [`Record`]s teach the
-//! per-format value regressors the observed objective levels — and fits
-//! a fresh optimizer through the exact same
-//! `RunTimeOptimizer::train_on_examples` path the offline mode uses.
+//! per-format value regressors the observed objective levels, and
+//! online knob examples re-label the per-format compile-knob
+//! classifiers — and fits fresh optimizers through the exact same
+//! training paths the offline mode uses.
 
 use super::observer::{self, Observation};
+use crate::coordinator::compile_time::KnobPolicy;
 use crate::coordinator::{OverheadModel, RunTimeOptimizer};
 use crate::dataset::labels::{self, Example};
 use crate::dataset::Dataset;
 use crate::gpusim::Objective;
+use crate::sparse::Format;
+
+/// What one retrain produces: the format router and the per-format
+/// compile-knob policy, fitted on the same evidence snapshot (they swap
+/// in together, as one [`super::router::Policy`]).
+pub struct Retrained {
+    pub router: RunTimeOptimizer,
+    pub knobs: KnobPolicy,
+}
 
 /// Retraining recipe: base corpus + objective + overhead estimate.
 pub struct Trainer {
     base: Dataset,
     offline_examples: Vec<Example>,
+    /// Derived on the first JOINT retrain only — a format-only loop
+    /// (`joint_knobs: false`) never pays the per-format label scan.
+    offline_knob_examples: std::sync::OnceLock<Vec<(Format, Example)>>,
     objective: Objective,
     overhead: OverheadModel,
     arch_name: String,
@@ -37,7 +52,14 @@ impl Trainer {
         arch_name: &str,
     ) -> Trainer {
         let offline_examples = labels::examples(&base, objective);
-        Trainer { base, offline_examples, objective, overhead, arch_name: arch_name.to_string() }
+        Trainer {
+            base,
+            offline_examples,
+            offline_knob_examples: std::sync::OnceLock::new(),
+            objective,
+            overhead,
+            arch_name: arch_name.to_string(),
+        }
     }
 
     pub fn objective(&self) -> Objective {
@@ -54,28 +76,53 @@ impl Trainer {
         self.offline_examples.len()
     }
 
-    /// Fit a fresh router on offline + online evidence. Pure function
-    /// of its inputs: same buffer snapshot, same router. The deployment
-    /// arch indicator is reapplied, so a Pascal-deployed pool does not
-    /// hot-swap in a router that predicts for Turing.
-    pub fn retrain(&self, obs: &[Observation]) -> RunTimeOptimizer {
+    /// Fit a fresh router + knob policy on offline + online evidence.
+    /// Pure function of its inputs: same buffer snapshot, same models.
+    /// The deployment arch indicator is reapplied, so a Pascal-deployed
+    /// pool does not hot-swap in a router that predicts for Turing.
+    pub fn retrain(&self, obs: &[Observation]) -> Retrained {
+        self.retrain_with(obs, true)
+    }
+
+    /// Like [`Trainer::retrain`]; `joint = false` skips the knob-policy
+    /// fit entirely (the returned policy predicts the serving default
+    /// for every format) — the format-only loop would discard it
+    /// anyway, so it must not pay four per-format tree fits per
+    /// retrain.
+    pub fn retrain_with(&self, obs: &[Observation], joint: bool) -> Retrained {
         let delta = observer::to_training(obs, self.objective, &self.arch_name);
         let mut ds = self.base.clone();
         ds.records.extend(delta.records);
         let mut examples = self.offline_examples.clone();
         examples.extend(delta.examples);
-        RunTimeOptimizer::train_on_examples(&ds, &examples, self.objective, self.overhead.clone())
-            .for_arch(&self.arch_name)
+        let router = RunTimeOptimizer::train_on_examples(
+            &ds,
+            &examples,
+            self.objective,
+            self.overhead.clone(),
+        )
+        .for_arch(&self.arch_name);
+        let knobs = if joint {
+            let mut knob_examples = self
+                .offline_knob_examples
+                .get_or_init(|| KnobPolicy::offline_examples(&self.base, self.objective))
+                .clone();
+            knob_examples.extend(delta.knob_examples);
+            KnobPolicy::train(self.objective, &self.arch_name, &knob_examples)
+        } else {
+            KnobPolicy::train(self.objective, &self.arch_name, &[])
+        };
+        Retrained { router, knobs }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dataset::{build, BuildOptions};
+    use crate::coordinator::compile_time::CompileChoice;
     use crate::features;
     use crate::gen;
-    use crate::gpusim::Measurement;
+    use crate::gpusim::{Measurement, MemConfig};
     use crate::sparse::convert::coo_to_csr;
     use crate::sparse::Format;
     use crate::testutil::toy_setup;
@@ -87,6 +134,7 @@ mod tests {
             matrix_id: 1,
             features: feats,
             format,
+            choice: CompileChoice::serving_default(),
             explored: format != Format::Csr,
             requests: 1,
             measured_latency_s: 1e-6,
@@ -109,7 +157,7 @@ mod tests {
 
         let coo = gen::by_name("rim").unwrap().generate(1);
         let obs = counterfactual_obs(&coo);
-        let next = trainer.retrain(&obs);
+        let next = trainer.retrain(&obs).router;
         // the retrained tree memorizes the online feature vector's label
         let d = next.decide(&coo, 1_000_000_000_000);
         assert_eq!(d.predicted_format, Format::Ell, "online label must win: {d:?}");
@@ -126,7 +174,7 @@ mod tests {
     fn retrain_without_observations_reproduces_offline_decisions() {
         let (offline, ds, overhead) = toy_setup(&["rim", "eu-2005"], Objective::EnergyEff);
         let trainer = Trainer::new(ds, Objective::EnergyEff, overhead, "GTX1650m-Turing");
-        let retrained = trainer.retrain(&[]);
+        let retrained = trainer.retrain(&[]).router;
         for name in ["rim", "eu-2005"] {
             let coo = gen::by_name(name).unwrap().generate(1);
             let a = offline.decide(&coo, 1000);
@@ -134,5 +182,39 @@ mod tests {
             assert_eq!(a.predicted_format, b.predicted_format, "{name}");
             assert_eq!(a.convert, b.convert, "{name}");
         }
+    }
+
+    #[test]
+    fn retrain_learns_online_knob_labels() {
+        let (_, ds, overhead) = toy_setup(&["eu-2005", "wiki-talk-temporal"], Objective::Energy);
+        let trainer = Trainer::new(ds, Objective::Energy, overhead, "GTX1650m-Turing");
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        let feats = features::extract_csr(&coo_to_csr(&coo));
+        // counterfactual knob evidence on ELL: the small-TB / L1 arm is
+        // far cheaper than the serving default
+        let winner = CompileChoice { tb_size: 64, maxrregcount: 32, mem: MemConfig::PreferL1 };
+        let mk = |choice: CompileChoice, energy: f64| Observation {
+            matrix_id: 2,
+            features: feats,
+            format: Format::Ell,
+            choice,
+            explored: true,
+            requests: 1,
+            measured_latency_s: 1e-6,
+            modeled: Measurement {
+                latency_s: 1e-6,
+                energy_j: energy,
+                avg_power_w: 10.0,
+                mflops_per_watt: 1.0 / energy,
+            },
+        };
+        let obs =
+            vec![mk(CompileChoice::serving_default(), 5e-4), mk(winner, 1e-6)];
+        let knobs = trainer.retrain(&obs).knobs;
+        let predicted = knobs.predict(&feats, Format::Ell);
+        assert_eq!(
+            predicted, winner,
+            "the per-format knob tree must memorize the online knob label"
+        );
     }
 }

@@ -70,6 +70,55 @@ impl Table {
             let _ = std::fs::write(dir.join(format!("{name}.tsv")), tsv);
         }
     }
+
+    /// Machine-readable form: `{"title", "header", "rows"}` (no serde
+    /// in the offline environment, so this is a hand-rolled emitter
+    /// with full string escaping).
+    pub fn to_json(&self) -> String {
+        let arr = |cells: &[String]| {
+            let quoted: Vec<String> = cells.iter().map(|c| json_escape(c)).collect();
+            format!("[{}]", quoted.join(","))
+        };
+        let rows: Vec<String> = self.rows.iter().map(|r| arr(r)).collect();
+        format!(
+            "{{\"title\":{},\"header\":{},\"rows\":[{}]}}",
+            json_escape(&self.title),
+            arr(&self.header),
+            rows.join(",")
+        )
+    }
+
+    /// Save as `reports/BENCH_<name>.json` — the per-PR perf-trajectory
+    /// artifact the CI bench-smoke job uploads.
+    pub fn emit_json(&self, name: &str) {
+        let dir = Path::new("reports");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let mut body = self.to_json();
+            body.push('\n');
+            let _ = std::fs::write(dir.join(format!("BENCH_{name}.json")), body);
+        }
+    }
+}
+
+/// Minimal JSON string encoder (quotes, backslashes, control chars).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 /// Format a float with engineering-friendly precision.
@@ -151,6 +200,18 @@ mod tests {
     fn row_arity_checked() {
         let mut t = Table::new("T", &["a", "b"]);
         t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn json_form_escapes_and_structures() {
+        let mut t = Table::new("T \"quoted\"", &["a", "b"]);
+        t.row(vec!["x\ty".into(), "1".into()]);
+        let j = t.to_json();
+        assert_eq!(
+            j,
+            "{\"title\":\"T \\\"quoted\\\"\",\"header\":[\"a\",\"b\"],\
+             \"rows\":[[\"x\\ty\",\"1\"]]}"
+        );
     }
 
     #[test]

@@ -102,8 +102,31 @@ impl ArtifactIndex {
             let mut extra = HashMap::new();
             if c[9] != "-" {
                 for kv in c[9].split(';') {
-                    let (k, v) = kv.split_once('=').context("bad extra")?;
-                    extra.insert(k.to_string(), v.parse()?);
+                    // UNKNOWN extras are SKIPPED, not errors: manifests
+                    // evolve (PR 3-era rows carry no knob sweep; future
+                    // emitters may tag rows with extras this parser
+                    // predates), and selection then degrades to the
+                    // smallest covering bucket instead of refusing to
+                    // load the whole inventory. A malformed value on a
+                    // key we DO interpret (batch bucket, slice/block
+                    // dims) still fails fast — silently defaulting
+                    // those would mis-marshal at serve time.
+                    let known = |k: &str| ["nc", "h", "bh", "bw", "xseg"].contains(&k);
+                    let Some((k, v)) = kv.split_once('=') else {
+                        if known(kv) {
+                            bail!("manifest line {}: extra {kv} is missing its value", ln + 2);
+                        }
+                        continue;
+                    };
+                    match v.parse() {
+                        Ok(v) => {
+                            extra.insert(k.to_string(), v);
+                        }
+                        Err(_) if !known(k) => continue,
+                        Err(e) => {
+                            bail!("manifest line {}: bad extra {kv}: {e}", ln + 2)
+                        }
+                    }
                 }
             }
             specs.push(ArtifactSpec {
@@ -406,6 +429,120 @@ mod tests {
         assert_eq!(knob_map(64, 16, MemConfig::Default), (64, 8, "resident"));
         assert_eq!(knob_map(1024, 128, MemConfig::PreferShared), (256, 16, "streamed"));
         assert_eq!(knob_map(256, 32, MemConfig::PreferL1), (256, 8, "gather"));
+    }
+
+    /// Property over the FULL CUDA knob grid: `knob_map` is total
+    /// (every sweep point maps to a valid Pallas knob triple), stable
+    /// (deterministic), and its aliasing is exactly the documented
+    /// quantization — two CUDA points share a Pallas variant iff they
+    /// fall in the same (TB <= 128, regs <= 32, mem) class. No point
+    /// silently collapses beyond that.
+    #[test]
+    fn knob_map_is_total_and_aliases_only_documented_classes() {
+        use crate::gpusim::{MAXRREGCOUNT, TB_SIZES};
+        let grid: Vec<(u32, u32, MemConfig)> = TB_SIZES
+            .iter()
+            .flat_map(|&tb| {
+                MAXRREGCOUNT
+                    .iter()
+                    .flat_map(move |&r| MemConfig::ALL.iter().map(move |&m| (tb, r, m)))
+            })
+            .collect();
+        assert_eq!(grid.len(), 60, "the §6 sweep is 5 x 4 x 3");
+        let class = |(tb, r, m): (u32, u32, MemConfig)| (tb <= 128, r <= 32, m.class_id());
+        for &a in &grid {
+            let mapped = knob_map(a.0, a.1, a.2);
+            // total: valid Pallas knob values only
+            assert!([64, 256].contains(&mapped.0), "{a:?} -> {mapped:?}");
+            assert!([8, 16].contains(&mapped.1), "{a:?} -> {mapped:?}");
+            assert!(["resident", "gather", "streamed"].contains(&mapped.2));
+            // stable: same input, same output
+            assert_eq!(mapped, knob_map(a.0, a.1, a.2));
+            for &b in &grid {
+                let same = knob_map(b.0, b.1, b.2) == mapped;
+                assert_eq!(
+                    same,
+                    class(a) == class(b),
+                    "{a:?} vs {b:?}: aliasing must match the documented quantization"
+                );
+            }
+        }
+    }
+
+    /// Regression (PR 3-era manifests): `kind=spmm` rows without the
+    /// knob sweep — and rows carrying extras this parser does not know,
+    /// including non-numeric values — must load and degrade to the
+    /// PR 3 selection (smallest covering batch bucket), never error.
+    #[test]
+    fn pr3_era_spmm_manifest_without_knob_extras_degrades_gracefully() {
+        let d = tmpdir("pr3compat");
+        write_manifest(
+            &d,
+            &[
+                // exactly what PR 3's inventory emitted: resident-only
+                "s4\tspmm\tell\t256\t256\t16\t64\t8\tresident\tnc=4\ts4.hlo\tf32:1",
+                "s16\tspmm\tell\t256\t256\t16\t64\t8\tresident\tnc=16\ts16.hlo\tf32:1",
+                // a future emitter's row with extras we do not know
+                "sX\tspmm\tell\t256\t256\t16\t64\t8\tresident\tnc=4;variant=exp;pipeline\tsX.hlo\tf32:1",
+            ],
+        );
+        let idx = ArtifactIndex::load(&d).unwrap();
+        assert_eq!(idx.specs.len(), 3, "unknown extras must not reject rows");
+        assert_eq!(idx.specs[2].ncols(), 4, "known extras still parse next to unknown ones");
+        let dims = MatrixDims { n_rows: 200, n_cols: 200, nnz: 900, max_row_len: 9, bell_kb: 4 };
+        // a knob preference that nothing in the inventory satisfies
+        // (streamed placement, small TB) degrades to the PR 3 pick
+        let choice = Some((64u32, 16u32, MemConfig::PreferShared));
+        let s = idx.select_spmm(Format::Ell, &dims, 3, choice).unwrap();
+        assert_eq!((s.rows, s.ncols()), (256, 4), "smallest covering bucket wins");
+        assert_eq!(idx.select_spmm(Format::Ell, &dims, 9, choice).unwrap().ncols(), 16);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    /// Leniency is for UNKNOWN keys only: a malformed value on a key
+    /// this parser interprets (the batch bucket here) must still fail
+    /// at load time — defaulting `nc` to 1 would mis-pad X at serve
+    /// time.
+    #[test]
+    fn malformed_known_extra_still_fails_fast() {
+        let d = tmpdir("badknown");
+        write_manifest(
+            &d,
+            &["s\tspmm\tell\t256\t256\t16\t64\t8\tresident\tnc=1x6\ts.hlo\tf32:1"],
+        );
+        let err = ArtifactIndex::load(&d).unwrap_err();
+        assert!(format!("{err:#}").contains("bad extra nc=1x6"), "{err:#}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    /// With a knob-swept SpMM inventory, `select_spmm` knob-breaks
+    /// within the batch bucket exactly like SpMV selection does.
+    #[test]
+    fn spmm_selection_knob_breaks_within_the_batch_bucket() {
+        let d = tmpdir("spmmknobs");
+        write_manifest(
+            &d,
+            &[
+                "a\tspmm\tell\t256\t256\t16\t64\t8\tresident\tnc=8\ta.hlo\tf32:1",
+                "b\tspmm\tell\t256\t256\t16\t64\t8\tgather\tnc=8\tb.hlo\tf32:1",
+                "c\tspmm\tell\t256\t256\t16\t256\t16\tresident\tnc=8\tc.hlo\tf32:1",
+            ],
+        );
+        let idx = ArtifactIndex::load(&d).unwrap();
+        let dims = MatrixDims { n_rows: 200, n_cols: 200, nnz: 900, max_row_len: 9, bell_kb: 4 };
+        // PreferL1 -> gather placement
+        let s = idx
+            .select_spmm(Format::Ell, &dims, 8, Some((64, 16, MemConfig::PreferL1)))
+            .unwrap();
+        assert_eq!(s.name, "b");
+        // big TB + uncapped regs -> wide resident variant
+        let s = idx
+            .select_spmm(Format::Ell, &dims, 8, Some((1024, 128, MemConfig::Default)))
+            .unwrap();
+        assert_eq!(s.name, "c");
+        // no preference keeps the first in-bucket variant (PR 3 path)
+        assert_eq!(idx.select_spmm(Format::Ell, &dims, 8, None).unwrap().name, "a");
+        std::fs::remove_dir_all(&d).ok();
     }
 
     #[test]

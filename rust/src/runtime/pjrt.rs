@@ -423,6 +423,13 @@ impl PreparedSpmv {
     pub fn variant_name(&self) -> &str {
         &self.spec.name
     }
+
+    /// The Pallas knob triple of the bound variant (block_rows,
+    /// chunk_width, x placement) — what a `CompileChoice` preference
+    /// actually selected through `knob_map`.
+    pub fn variant_knobs(&self) -> (usize, usize, &str) {
+        (self.spec.block_rows, self.spec.chunk_width, self.spec.x_placement.as_str())
+    }
 }
 
 /// A matrix marshalled against its SpMM (multi-vector) artifact: the
@@ -439,6 +446,13 @@ pub struct PreparedSpmm {
 impl PreparedSpmm {
     pub fn variant_name(&self) -> &str {
         &self.spec.name
+    }
+
+    /// The Pallas knob triple of the bound SpMM variant — records
+    /// which knob point of the swept inventory this preparation
+    /// selected (DESIGN.md §8).
+    pub fn variant_knobs(&self) -> (usize, usize, &str) {
+        (self.spec.block_rows, self.spec.chunk_width, self.spec.x_placement.as_str())
     }
 
     /// Batch bucket: vectors consumed per launch.
@@ -519,6 +533,11 @@ mod tests {
             PreparedSpmm { spec, matrix_literals: Rc::new(vec![]), n_rows: 200, x_len: 200 };
         assert_eq!(prep.ncols(), 8);
         assert_eq!(prep.variant_name(), "spmm_test");
+        assert_eq!(
+            prep.variant_knobs(),
+            (64, 8, "resident"),
+            "the preparation must record which knob variant it bound"
+        );
         assert_eq!(prep.launches_for(1), 1);
         assert_eq!(prep.launches_for(8), 1, "k = bucket stays one launch");
         assert_eq!(prep.launches_for(9), 2, "only k > bucket chunks");

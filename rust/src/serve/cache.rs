@@ -76,13 +76,29 @@ impl<K: Copy + PartialEq, V> Lru<K, V> {
     /// Returns the evicted least-recently-used entry, if the insert
     /// pushed the cache past capacity.
     pub fn insert(&mut self, key: K, value: V) -> Option<(K, V)> {
+        self.insert_protected(key, value, |_| false)
+    }
+
+    /// Insert like [`Lru::insert`], but when eviction is needed the
+    /// victim is the least-recently-used entry whose key FAILS
+    /// `protect`; only when every entry is protected does it fall back
+    /// to the plain LRU victim. The serving shards use this for
+    /// bandit-explored counterfactual builds, which must not evict a
+    /// registered matrix's chosen serving variant.
+    pub fn insert_protected(
+        &mut self,
+        key: K,
+        value: V,
+        protect: impl Fn(&K) -> bool,
+    ) -> Option<(K, V)> {
         if let Some(idx) = self.entries.iter().position(|(k, _)| *k == key) {
             self.entries.remove(idx);
             self.entries.push((key, value));
             return None;
         }
         let evicted = if self.entries.len() == self.cap {
-            Some(self.entries.remove(0))
+            let victim = self.entries.iter().position(|(k, _)| !protect(k)).unwrap_or(0);
+            Some(self.entries.remove(victim))
         } else {
             None
         };
@@ -179,6 +195,24 @@ mod tests {
         assert_eq!(lru.get((7, 1)), Some(&"ell"));
         let evicted = lru.insert((9, 3), "sell").expect("capacity 3");
         assert_eq!(evicted.0, (9, 0), "LRU entry goes first");
+    }
+
+    #[test]
+    fn insert_protected_skips_protected_victims() {
+        let mut lru = Lru::new(2);
+        lru.insert(1, "chosen");
+        lru.insert(2, "scratch");
+        // 1 is the LRU victim, but it is protected: 2 must go instead
+        let evicted = lru.insert_protected(3, "scratch2", |k| *k == 1).expect("full");
+        assert_eq!(evicted.0, 2);
+        assert!(lru.contains(1) && lru.contains(3));
+        // when EVERY entry is protected, fall back to the plain LRU victim
+        let evicted = lru.insert_protected(4, "x", |_| true).expect("full");
+        assert_eq!(evicted.0, 1, "all-protected falls back to LRU order");
+        // replacing an existing key never evicts
+        assert!(lru.insert_protected(4, "y", |_| false).is_none());
+        assert_eq!(lru.get(4), Some(&"y"));
+        assert_eq!(lru.len(), 2);
     }
 
     #[test]

@@ -98,8 +98,14 @@ pub struct PoolStats {
     pub retrains: u64,
     /// Registered matrices migrated to a new format on a hot-swap.
     pub migrations: u64,
+    /// Registered matrices whose compile-knob decision changed on a
+    /// hot-swap (artifact re-selection / re-preparation).
+    pub knob_migrations: u64,
     /// Requests the exploration bandit routed off the predicted path.
     pub explored_requests: u64,
+    /// Exploration picks made through the per-arm UCB scorer (0 when
+    /// frozen or below the evidence floor).
+    pub ucb_routes: u64,
     /// Requests observed by the feedback loop (batch-weighted, the
     /// retrain-cadence unit; None when frozen).
     pub observed_requests: Option<u64>,
@@ -283,7 +289,9 @@ impl Pool {
             router_version: self.router.version(),
             retrains: self.online.as_ref().map_or(0, |o| o.retrains()),
             migrations: t.migrations.load(Ordering::Relaxed),
+            knob_migrations: t.knob_migrations.load(Ordering::Relaxed),
             explored_requests: t.explored_requests.load(Ordering::Relaxed),
+            ucb_routes: self.online.as_ref().map_or(0, |o| o.ucb_routes()),
             observed_requests: self.online.as_ref().map(|o| o.observed_requests()),
             drift: self.online.as_ref().map(|o| o.drift_status()),
             per_matrix,
@@ -406,9 +414,16 @@ mod tests {
         assert_eq!(stats.backends, vec!["native", "native"]);
         assert_eq!(stats.backend_summary(), "native");
         // decision accounting: all 6 requests rode the chosen format
+        // at the default knob decision
         let fmt = m.format.unwrap();
         assert_eq!(m.chosen_by_format[fmt.class_id()], 6);
         assert_eq!(m.explored(), 0);
+        assert_eq!(
+            m.knobs,
+            Some(crate::coordinator::compile_time::CompileChoice::serving_default()),
+            "a frozen pool serves at the default knobs"
+        );
+        assert_eq!(m.non_default_knob_requests(), 0);
     }
 
     #[test]
@@ -422,7 +437,9 @@ mod tests {
         assert_eq!(stats.router_version, 1, "frozen pools never swap");
         assert_eq!(stats.retrains, 0);
         assert_eq!(stats.migrations, 0);
+        assert_eq!(stats.knob_migrations, 0);
         assert_eq!(stats.explored_requests, 0);
+        assert_eq!(stats.ucb_routes, 0);
         assert!(stats.observed_requests.is_none());
         assert!(stats.drift.is_none());
         assert!(pool.online().is_none());

@@ -14,22 +14,26 @@
 //!
 //! When the pool runs with the closed loop attached
 //! ([`crate::online`]), three things happen here and nowhere else:
-//! the shard polls the hot-swap router's version at the top of its
+//! the shard polls the hot-swap policy's version at the top of its
 //! message loop and **re-decides** every registered matrix on an
-//! upgrade (format migration); each dispatch consults the exploration
-//! bandit, which may route it to a non-predicted format (converted on
-//! demand into the same LRU); and every executed dispatch feeds an
-//! [`Observation`] back to the trainer. All of it sits between
-//! dispatches — never under a request's execution.
+//! upgrade — the format AND the compile knobs, so a swap can migrate a
+//! matrix to a different conversion, a different artifact variant, or
+//! both; each dispatch consults the exploration bandit, which may route
+//! it to a non-predicted joint arm (converted/marshalled on demand into
+//! the same LRU); and every executed dispatch feeds an [`Observation`]
+//! — labeled with the knobs actually executed — back to the trainer.
+//! All of it sits between dispatches — never under a request's
+//! execution.
 
 use super::backend::{Backend, BackendSpec};
 use super::batch::{collect_batch, group_by_matrix, Job};
 use super::cache::Lru;
 use super::telemetry::{MatrixTelemetry, Telemetry};
 use super::Response;
+use crate::coordinator::compile_time::CompileChoice;
 use crate::features::Features;
 use crate::gpusim::{simulate, GpuArch, KernelProfile, Measurement};
-use crate::online::{Observation, Online, RouteChoice, SwapRouter};
+use crate::online::{JointDecision, Observation, Online, Policy, RouteChoice, SwapRouter};
 use crate::runtime::pjrt::{PreparedSpmm, PreparedSpmv};
 use crate::sparse::convert::{self, AnyFormat, ConvertParams};
 use crate::sparse::{Coo, Csr, Format, SpMv};
@@ -112,25 +116,52 @@ impl Shard {
     }
 }
 
-/// A registered matrix: retained CSR source + routing decision + the
-/// telemetry handle resolved once so the hot path is lock-free. The
-/// features and iteration hint stay around for re-decisions on router
-/// hot-swaps (step 1 of §5.3 is measured once, at registration).
+/// A registered matrix: retained CSR source + the joint routing
+/// decision + the telemetry handle resolved once so the hot path is
+/// lock-free. The features and iteration hint stay around for
+/// re-decisions on policy hot-swaps (step 1 of §5.3 is measured once,
+/// at registration).
 struct Registered {
     csr: Csr,
     features: Features,
     iterations_hint: u64,
     format: Format,
+    /// Compile-knob half of the joint decision (the serving default
+    /// until a knob policy is installed).
+    choice: CompileChoice,
     converted: bool,
     tele: Arc<MatrixTelemetry>,
 }
 
-/// Conversion-cache key: matrix id + format class, so an explored
-/// format's conversion caches alongside the chosen one.
-type CacheKey = (u64, u8);
+impl Registered {
+    fn decision(&self) -> JointDecision {
+        JointDecision { format: self.format, choice: self.choice }
+    }
+}
 
-fn cache_key(id: u64, format: Format) -> CacheKey {
-    (id, format.class_id() as u8)
+/// Conversion-cache key: matrix id + format class + the QUANTIZED knob
+/// arm ([`crate::online::bandit::knob_index`]), so an explored (or
+/// migrated-away-from) variant caches alongside the chosen one instead
+/// of displacing it — and explored inserts evict other scratch entries
+/// before any registered matrix's chosen entry ([`Lru::insert_protected`]).
+/// Quantizing to the 12 arm classes — the granularity
+/// at which `knob_map` selects distinct Pallas variants — bounds the
+/// per-(matrix, format) footprint under joint exploration; two exact
+/// choices in the same class share the entry (and its builder's
+/// modeled measurement, a within-class approximation).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct CacheKey {
+    id: u64,
+    format: u8,
+    knob: u8,
+}
+
+fn cache_key(id: u64, d: JointDecision) -> CacheKey {
+    CacheKey {
+        id,
+        format: d.format.class_id() as u8,
+        knob: crate::online::bandit::knob_index(d.choice) as u8,
+    }
 }
 
 /// A cache entry: the converted form, PJRT-marshalled literals when the
@@ -158,7 +189,7 @@ fn worker_loop(
     let mut registry: HashMap<u64, Registered> = HashMap::new();
     let mut cache: Lru<CacheKey, CachedMatrix> = Lru::new(cfg.cache_capacity);
     let mut backlog: VecDeque<ShardMsg> = VecDeque::new();
-    let (mut cur_router, mut cur_version) = router.load();
+    let (mut cur_policy, mut cur_version) = router.load();
     loop {
         let msg = match backlog.pop_front() {
             Some(m) => m,
@@ -168,12 +199,12 @@ fn worker_loop(
             },
         };
         // Hot-swap check: one atomic load per message. On an upgrade,
-        // reload the router and re-decide every registered matrix so it
-        // can migrate to the format the new model prefers.
+        // reload the policy and re-decide every registered matrix so it
+        // can migrate to the (format, knob) pair the new model prefers.
         if router.version() != cur_version {
-            (cur_router, cur_version) = router.load();
+            (cur_policy, cur_version) = router.load();
             re_decide_all(
-                cur_router.as_ref(),
+                cur_policy.as_ref(),
                 &mut backend,
                 &cfg,
                 &telemetry,
@@ -192,7 +223,7 @@ fn worker_loop(
             }
             ShardMsg::Register { id, coo, iterations_hint, ack } => {
                 let result = do_register(
-                    cur_router.as_ref(),
+                    cur_policy.as_ref(),
                     &mut backend,
                     &cfg,
                     &telemetry,
@@ -223,22 +254,27 @@ fn worker_loop(
     }
 }
 
-/// Convert (and, on PJRT, marshal) a matrix for execution in `format`,
-/// and model one product's cost in that format — the §6.3 power-sensor
-/// stand-in the telemetry and the online observations both read.
+/// Convert (and, on PJRT, marshal) a matrix for execution under a
+/// joint (format, knob) decision, and model one product's cost at
+/// exactly those knobs — the §6.3 power-sensor stand-in the telemetry
+/// and the online observations both read. The knob preference also
+/// biases PJRT artifact selection (SpMV and SpMM alike) through
+/// `knob_map`, so a knob migration really re-selects executables.
 fn build_cached(
     backend: &mut Backend,
     csr: &Csr,
-    format: Format,
+    decision: JointDecision,
     cfg: &ShardCfg,
 ) -> Result<CachedMatrix> {
-    let matrix = convert::convert(csr, format, cfg.convert);
+    let matrix = convert::convert(csr, decision.format, cfg.convert);
+    let knob_pref = Some(decision.choice.knobs());
     let (prepared, prepared_spmm) = match backend {
         Backend::Pjrt(engine) => {
-            let prepared = Some(engine.prepare(&matrix, None)?);
+            let prepared = Some(engine.prepare(&matrix, knob_pref)?);
             // a missing SpMM variant is a fallback, never an error; a
             // same-bucket variant shares the marshalled literals
-            let prepared_spmm = engine.prepare_spmm_sharing(&matrix, None, prepared.as_ref())?;
+            let prepared_spmm =
+                engine.prepare_spmm_sharing(&matrix, knob_pref, prepared.as_ref())?;
             (prepared, prepared_spmm)
         }
         Backend::Native => (None, None),
@@ -249,8 +285,8 @@ fn build_cached(
             Measurement { latency_s: 0.0, energy_j: 0.0, avg_power_w: 0.0, mflops_per_watt: 0.0 },
         )
     } else {
-        let prof = crate::gpusim::profile(csr, format, cfg.convert);
-        let knobs = crate::online::observer::model_config(format);
+        let prof = crate::gpusim::profile(csr, decision.format, cfg.convert);
+        let knobs = decision.choice.config_for(decision.format);
         let m = simulate(&cfg.arch, &prof, &knobs).0;
         (Some(prof), m)
     };
@@ -261,14 +297,19 @@ fn build_cached(
 /// the k-vector SpMM launch (matrix stream charged once) and split the
 /// extensive objectives across the batch. Falls back to the cached
 /// single-product model for k = 1 or an empty profile.
-fn batch_model(cached: &CachedMatrix, format: Format, k: usize, arch: &GpuArch) -> Measurement {
+fn batch_model(
+    cached: &CachedMatrix,
+    decision: JointDecision,
+    k: usize,
+    arch: &GpuArch,
+) -> Measurement {
     if k <= 1 {
         return cached.model;
     }
     let Some(prof) = &cached.profile else {
         return cached.model;
     };
-    let knobs = crate::online::observer::model_config(format);
+    let knobs = decision.choice.config_for(decision.format);
     let (m, _) = simulate(arch, &prof.batched(k as u64), &knobs);
     Measurement {
         latency_s: m.latency_s / k as f64,
@@ -281,7 +322,7 @@ fn batch_model(cached: &CachedMatrix, format: Format, k: usize, arch: &GpuArch) 
 
 #[allow(clippy::too_many_arguments)] // worker-local state is deliberately split for borrow granularity
 fn do_register(
-    router: &crate::coordinator::RunTimeOptimizer,
+    policy: &Policy,
     backend: &mut Backend,
     cfg: &ShardCfg,
     telemetry: &Telemetry,
@@ -291,30 +332,34 @@ fn do_register(
     coo: Coo,
     iterations_hint: u64,
 ) -> Result<Format> {
-    let decision = router.decide(&coo, iterations_hint);
+    let decision = policy.router.decide(&coo, iterations_hint);
     let csr = convert::coo_to_csr(&coo);
     let (format, converted) = if decision.convert {
         (decision.predicted_format, true)
     } else {
         (Format::Csr, false)
     };
+    // joint decision: the knob half comes from the installed knob
+    // policy (serving default when none is installed)
+    let choice = policy.knob_for(&decision.features, format);
+    let joint = JointDecision { format, choice };
 
     // Build (convert + model + marshal) BEFORE any telemetry side
     // effects, so a failed registration leaves no phantom stats row or
     // counter bump.
-    let entry = build_cached(backend, &csr, format, cfg)?;
+    let entry = build_cached(backend, &csr, joint, cfg)?;
 
-    // Re-registration replaces the matrix wholesale: every per-format
+    // Re-registration replaces the matrix wholesale: every per-variant
     // entry of the old matrix must go, or a later explored/migrated
     // dispatch could serve the OLD matrix's converted form.
-    cache.retain(|k| k.0 != id);
+    cache.retain(|k| k.id != id);
 
     let tele = telemetry.handle(id);
-    tele.configure(format, entry.model.avg_power_w);
+    tele.configure(format, choice, entry.model.avg_power_w);
     if converted {
         telemetry.totals.conversions.fetch_add(1, Ordering::Relaxed);
     }
-    if cache.insert(cache_key(id, format), entry).is_some() {
+    if cache.insert(cache_key(id, joint), entry).is_some() {
         telemetry.totals.evictions.fetch_add(1, Ordering::Relaxed);
     }
     registry.insert(
@@ -324,6 +369,7 @@ fn do_register(
             features: decision.features,
             iterations_hint,
             format,
+            choice,
             converted,
             tele,
         },
@@ -331,14 +377,17 @@ fn do_register(
     Ok(format)
 }
 
-/// Re-run the routing decision for every registered matrix against an
-/// upgraded router (features were measured at registration, so this is
-/// steps 2–4 only). A matrix whose best format changed migrates: new
-/// conversion into the cache, telemetry reconfigured, counters bumped.
-/// A failed conversion keeps the old format — migration must never take
-/// a serving matrix down.
+/// Re-run the joint routing decision for every registered matrix
+/// against an upgraded policy (features were measured at registration,
+/// so this is steps 2–4 only). A matrix whose best format OR best
+/// compile knob changed migrates: new conversion/marshalling into the
+/// cache under the new key, telemetry reconfigured, counters bumped
+/// (`migrations` for format changes, `knob_migrations` for knob
+/// changes — a joint change counts once in each). A failed rebuild
+/// keeps the old decision — migration must never take a serving matrix
+/// down.
 fn re_decide_all(
-    router: &crate::coordinator::RunTimeOptimizer,
+    policy: &Policy,
     backend: &mut Backend,
     cfg: &ShardCfg,
     telemetry: &Telemetry,
@@ -347,26 +396,29 @@ fn re_decide_all(
 ) {
     for (id, reg) in registry.iter_mut() {
         let decision =
-            router.decide_with_features(reg.features, Duration::ZERO, reg.iterations_hint);
+            policy.router.decide_with_features(reg.features, Duration::ZERO, reg.iterations_hint);
         let (format, converted) = if decision.convert {
             (decision.predicted_format, true)
         } else {
             (Format::Csr, false)
         };
-        if format == reg.format {
+        let choice = policy.knob_for(&reg.features, format);
+        if format == reg.format && choice == reg.choice {
             continue;
         }
-        // The target form may already be cached (the common convergence
-        // path: exploration built it before the retrain picked it) —
-        // reuse it instead of re-converting and re-simulating.
-        let key = cache_key(*id, format);
+        let joint = JointDecision { format, choice };
+        // The target variant may already be cached (the common
+        // convergence path: exploration built it before the retrain
+        // picked it) — reuse it instead of re-converting/re-marshalling
+        // and re-simulating.
+        let key = cache_key(*id, joint);
         let model = if cache.touch(key) {
             match cache.mru() {
                 Some((k, entry)) if *k == key => Some(entry.model),
                 _ => unreachable!("touch just made {key:?} the MRU entry"),
             }
         } else {
-            match build_cached(backend, &reg.csr, format, cfg) {
+            match build_cached(backend, &reg.csr, joint, cfg) {
                 Ok(entry) => {
                     let model = entry.model;
                     if cache.insert(key, entry).is_some() {
@@ -376,49 +428,69 @@ fn re_decide_all(
                 }
                 Err(e) => {
                     eprintln!(
-                        "serve: keeping matrix {id} in {} (migration to {format} failed: {e:#})",
-                        reg.format
+                        "serve: keeping matrix {id} at {} (migration to {joint} failed: {e:#})",
+                        reg.decision()
                     );
                     None
                 }
             }
         };
         if let Some(model) = model {
-            reg.tele.configure(format, model.avg_power_w);
-            telemetry.totals.migrations.fetch_add(1, Ordering::Relaxed);
+            reg.tele.configure(format, choice, model.avg_power_w);
+            if format != reg.format {
+                telemetry.totals.migrations.fetch_add(1, Ordering::Relaxed);
+            }
+            if choice != reg.choice {
+                telemetry.totals.knob_migrations.fetch_add(1, Ordering::Relaxed);
+            }
             if converted && !reg.converted {
                 telemetry.totals.conversions.fetch_add(1, Ordering::Relaxed);
             }
             reg.format = format;
+            reg.choice = choice;
             reg.converted = converted;
         }
     }
 }
 
-/// Make `(id, route.format)` the cache's MRU entry, converting from the
-/// retained CSR source on a miss. Chosen-path misses are evictions
-/// being repaired and count as reconversions; explored-path misses are
-/// counterfactual builds and a failure is logged here (the caller falls
-/// back to the chosen format instead of failing clients).
+/// Make `(id, route.decision)` the cache's MRU entry, converting (and
+/// marshalling) from the retained CSR source on a miss. Chosen-path
+/// misses are evictions being repaired and count as reconversions;
+/// explored-path misses are counterfactual builds and a failure is
+/// logged here (the caller falls back to the chosen decision instead
+/// of failing clients).
 fn ensure_cached(
     backend: &mut Backend,
     cfg: &ShardCfg,
     telemetry: &Telemetry,
+    registry: &HashMap<u64, Registered>,
     cache: &mut Lru<CacheKey, CachedMatrix>,
     reg: &Registered,
     id: u64,
     route: RouteChoice,
 ) -> Result<()> {
-    let key = cache_key(id, route.format);
+    let key = cache_key(id, route.decision);
     if cache.touch(key) {
         return Ok(());
     }
     if !route.explored {
         telemetry.totals.reconversions.fetch_add(1, Ordering::Relaxed);
     }
-    match build_cached(backend, &reg.csr, route.format, cfg) {
+    match build_cached(backend, &reg.csr, route.decision, cfg) {
         Ok(entry) => {
-            if cache.insert(key, entry).is_some() {
+            // Explored builds are scratch: under joint exploration the
+            // arm space is ~48 keys per matrix, so letting them evict
+            // by plain recency would thrash every registered matrix's
+            // CHOSEN serving entry out of a default-sized cache.
+            // Protect the chosen keys; scratch evicts scratch first.
+            let evicted = if route.explored {
+                cache.insert_protected(key, entry, |k| {
+                    registry.get(&k.id).is_some_and(|r| cache_key(k.id, r.decision()) == *k)
+                })
+            } else {
+                cache.insert(key, entry)
+            };
+            if evicted.is_some() {
                 telemetry.totals.evictions.fetch_add(1, Ordering::Relaxed);
             }
             Ok(())
@@ -427,7 +499,8 @@ fn ensure_cached(
             if route.explored {
                 eprintln!(
                     "serve: exploring {} for matrix {id} failed, serving chosen {}: {e:#}",
-                    route.format, reg.format
+                    route.decision,
+                    reg.decision()
                 );
             }
             Err(e)
@@ -477,30 +550,32 @@ fn execute_group(
     // Closed loop, step "explore": one bandit consult per DISPATCH (not
     // per request). A frozen pool skips this entirely.
     let mut route = match online {
-        Some(o) => o.route(&reg.features, reg.format),
-        None => RouteChoice::chosen(reg.format),
+        Some(o) => o.route(&reg.features, reg.decision()),
+        None => RouteChoice::chosen(reg.decision()),
     };
 
     // Conversion cache: a miss on the chosen key means the entry was
     // evicted since registration — re-convert from the retained CSR
     // source. A miss on an explored key is the first (or re-) build of
-    // that counterfactual form; it shares the same LRU budget, and a
-    // FAILED counterfactual build falls back to the chosen format —
+    // that counterfactual variant; it shares the same LRU budget, and a
+    // FAILED counterfactual build falls back to the chosen decision —
     // exploration must never cost a client its answer. touch + mru
     // (instead of two `get`s) keeps the hit path at one scan.
-    if route.explored && ensure_cached(backend, cfg, telemetry, cache, reg, id, route).is_err() {
-        route = RouteChoice::chosen(reg.format);
+    if route.explored
+        && ensure_cached(backend, cfg, telemetry, registry, cache, reg, id, route).is_err()
+    {
+        route = RouteChoice::chosen(reg.decision());
     }
     if !route.explored {
-        if let Err(e) = ensure_cached(backend, cfg, telemetry, cache, reg, id, route) {
-            let msg = format!("convert matrix {id} to {}: {e:#}", route.format);
+        if let Err(e) = ensure_cached(backend, cfg, telemetry, registry, cache, reg, id, route) {
+            let msg = format!("convert matrix {id} to {}: {e:#}", route.decision);
             for (_, reply) in clients {
                 let _ = reply.send(Err(anyhow!("{msg}")));
             }
             return;
         }
     }
-    let key = cache_key(id, route.format);
+    let key = cache_key(id, route.decision);
     let cached = match cache.mru() {
         Some((k, entry)) if *k == key => entry,
         _ => unreachable!("ensure_cached just made {key:?} the MRU entry"),
@@ -533,7 +608,11 @@ fn execute_group(
                 (engine.spmv_batch_prepared(prep, &xs), batch_size as u64, false)
             } else {
                 (
-                    xs.iter().map(|x| engine.spmv(&cached.matrix, x, None)).collect(),
+                    xs.iter()
+                        .map(|x| {
+                            engine.spmv(&cached.matrix, x, Some(route.decision.choice.knobs()))
+                        })
+                        .collect(),
                     batch_size as u64,
                     false,
                 )
@@ -546,7 +625,7 @@ fn execute_group(
     // whole group; the per-vector fallback really does stream it per
     // request, so its labels stay at the single-product model.
     let model = if spmm_path {
-        batch_model(cached, route.format, batch_size, &cfg.arch)
+        batch_model(cached, route.decision, batch_size, &cfg.arch)
     } else {
         cached.model
     };
@@ -567,27 +646,29 @@ fn execute_group(
             if route.explored {
                 totals.explored_requests.fetch_add(batch_size as u64, Ordering::Relaxed);
             }
-            reg.tele.route(route.format, route.explored, batch_size as u64);
+            reg.tele.route(route.decision, route.explored, batch_size as u64);
             for ((enqueued, reply), y) in clients.into_iter().zip(ys) {
                 let service_time = enqueued.elapsed();
                 reg.tele.record(service_time, model.energy_j);
                 let _ = reply.send(Ok(Response {
                     y,
-                    format_used: route.format,
-                    converted: route.format != Format::Csr,
+                    format_used: route.decision.format,
+                    converted: route.decision.format != Format::Csr,
                     service_time,
                     batch_size,
                     energy_j: model.energy_j,
                 }));
             }
             // Closed loop, step "observe": feed the executed dispatch
-            // back. May trigger an inline retrain — which is why it
-            // runs AFTER every client got its reply.
+            // back, labeled with the knobs it actually ran under. May
+            // trigger an inline retrain — which is why it runs AFTER
+            // every client got its reply.
             if let Some(o) = online {
                 o.observe(Observation {
                     matrix_id: id,
                     features: reg.features,
-                    format: route.format,
+                    format: route.decision.format,
+                    choice: route.decision.choice,
                     explored: route.explored,
                     requests: batch_size as u64,
                     measured_latency_s: exec_s / batch_size as f64,

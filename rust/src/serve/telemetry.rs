@@ -9,8 +9,13 @@
 //! energy ledger accumulates the `gpusim`-modeled joules per product
 //! (paper §6.3's objective, finally visible at serve time). Routing
 //! decisions are counted per format class, split chosen vs. explored,
-//! so the online loop's counterfactual traffic is observable.
+//! AND per quantized compile-knob arm, so both halves of the joint
+//! (format, knob) loop's traffic — including counterfactuals — are
+//! observable.
 
+use crate::coordinator::compile_time::CompileChoice;
+use crate::online::bandit::{knob_arm, knob_index};
+use crate::online::JointDecision;
 use crate::sparse::Format;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -24,7 +29,27 @@ const HIST_BUCKETS: usize = 48;
 /// Number of format classes ([`Format::ALL`]).
 const N_FORMATS: usize = Format::ALL.len();
 
+/// Number of quantized knob arms ([`crate::online::bandit::N_KNOBS`]).
+const N_KNOBS: usize = crate::online::bandit::N_KNOBS;
+
 const FORMAT_UNSET: u64 = u64::MAX;
+const KNOB_UNSET: u64 = u64::MAX;
+
+/// Compact u64 encoding of a knob choice (atomic-slot friendly).
+fn encode_choice(c: CompileChoice) -> u64 {
+    ((c.tb_size as u64) << 16) | ((c.maxrregcount as u64) << 4) | c.mem.class_id() as u64
+}
+
+fn decode_choice(bits: u64) -> Option<CompileChoice> {
+    if bits == KNOB_UNSET {
+        return None;
+    }
+    Some(CompileChoice {
+        tb_size: (bits >> 16) as u32,
+        maxrregcount: ((bits >> 4) & 0xFFF) as u32,
+        mem: crate::gpusim::MemConfig::from_class_id((bits & 0xF) as usize)?,
+    })
+}
 
 fn bucket_of(ns: u64) -> usize {
     ((64 - ns.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
@@ -44,6 +69,8 @@ fn bucket_rep_ns(b: usize) -> f64 {
 pub struct MatrixTelemetry {
     /// `Format::class_id` of the serving format, or FORMAT_UNSET.
     format_class: AtomicU64,
+    /// [`encode_choice`] of the serving knob decision, or KNOB_UNSET.
+    knob_bits: AtomicU64,
     requests: AtomicU64,
     lat_sum_ns: AtomicU64,
     lat_max_ns: AtomicU64,
@@ -56,12 +83,15 @@ pub struct MatrixTelemetry {
     chosen: [AtomicU64; N_FORMATS],
     /// Requests dispatched per format class by bandit exploration.
     explored: [AtomicU64; N_FORMATS],
+    /// Requests dispatched per quantized knob arm (chosen + explored).
+    by_knob: [AtomicU64; N_KNOBS],
 }
 
 impl MatrixTelemetry {
     fn new() -> Self {
         MatrixTelemetry {
             format_class: AtomicU64::new(FORMAT_UNSET),
+            knob_bits: AtomicU64::new(KNOB_UNSET),
             requests: AtomicU64::new(0),
             lat_sum_ns: AtomicU64::new(0),
             lat_max_ns: AtomicU64::new(0),
@@ -70,14 +100,16 @@ impl MatrixTelemetry {
             model_power_w_bits: AtomicU64::new(0f64.to_bits()),
             chosen: std::array::from_fn(|_| AtomicU64::new(0)),
             explored: std::array::from_fn(|_| AtomicU64::new(0)),
+            by_knob: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
 
     /// Install the registration-time (or post-migration) model: the
-    /// serving format plus the simulated power draw of one product on
-    /// the deployment profile.
-    pub fn configure(&self, format: Format, model_power_w: f64) {
+    /// serving format and knob decision plus the simulated power draw
+    /// of one product on the deployment profile.
+    pub fn configure(&self, format: Format, choice: CompileChoice, model_power_w: f64) {
         self.format_class.store(format.class_id() as u64, Ordering::Relaxed);
+        self.knob_bits.store(encode_choice(choice), Ordering::Relaxed);
         self.model_power_w_bits.store(model_power_w.to_bits(), Ordering::Relaxed);
     }
 
@@ -94,9 +126,10 @@ impl MatrixTelemetry {
     }
 
     /// Count a routing decision for `requests` coalesced products.
-    pub fn route(&self, format: Format, explored: bool, requests: u64) {
+    pub fn route(&self, decision: JointDecision, explored: bool, requests: u64) {
         let side = if explored { &self.explored } else { &self.chosen };
-        side[format.class_id()].fetch_add(requests, Ordering::Relaxed);
+        side[decision.format.class_id()].fetch_add(requests, Ordering::Relaxed);
+        self.by_knob[knob_index(decision.choice)].fetch_add(requests, Ordering::Relaxed);
     }
 
     fn snapshot(&self, id: u64) -> MatrixStats {
@@ -117,6 +150,7 @@ impl MatrixTelemetry {
             } else {
                 Format::from_class_id(class as usize)
             },
+            knobs: decode_choice(self.knob_bits.load(Ordering::Relaxed)),
             requests,
             mean_us: if requests == 0 { 0.0 } else { sum_ns as f64 / requests as f64 / 1e3 },
             p50_us: q(0.50),
@@ -129,6 +163,7 @@ impl MatrixTelemetry {
             model_power_w: f64::from_bits(self.model_power_w_bits.load(Ordering::Relaxed)),
             chosen_by_format: std::array::from_fn(|i| self.chosen[i].load(Ordering::Relaxed)),
             explored_by_format: std::array::from_fn(|i| self.explored[i].load(Ordering::Relaxed)),
+            by_knob: std::array::from_fn(|i| self.by_knob[i].load(Ordering::Relaxed)),
         }
     }
 }
@@ -166,6 +201,8 @@ pub struct MatrixStats {
     /// Serving format (None if telemetry was created but never
     /// configured by a registration).
     pub format: Option<Format>,
+    /// Serving compile-knob decision (None before configuration).
+    pub knobs: Option<CompileChoice>,
     pub requests: u64,
     pub mean_us: f64,
     /// Latency quantiles; `None` when the histogram cannot support the
@@ -185,12 +222,43 @@ pub struct MatrixStats {
     pub chosen_by_format: [u64; N_FORMATS],
     /// ...vs. routed off-policy by the exploration bandit.
     pub explored_by_format: [u64; N_FORMATS],
+    /// Requests dispatched per quantized knob arm
+    /// ([`crate::online::bandit::knob_arm`] order, chosen + explored).
+    pub by_knob: [u64; N_KNOBS],
 }
 
 impl MatrixStats {
     /// Requests served off the predicted path.
     pub fn explored(&self) -> u64 {
         self.explored_by_format.iter().sum()
+    }
+
+    /// Requests served under a non-default knob decision.
+    pub fn non_default_knob_requests(&self) -> u64 {
+        let default = knob_index(CompileChoice::serving_default());
+        self.by_knob
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != default)
+            .map(|(_, c)| *c)
+            .sum()
+    }
+
+    /// Compact "tb/r/mem:count" rendering of the knob-decision mix
+    /// (report/CLI aid). Example: `tb256/r64/default:12 tb64/r32/prefer_l1:3`.
+    pub fn knob_decisions(&self) -> String {
+        let parts: Vec<String> = self
+            .by_knob
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| **c > 0)
+            .map(|(i, c)| format!("{}:{c}", knob_arm(i)))
+            .collect();
+        if parts.is_empty() {
+            "-".to_string()
+        } else {
+            parts.join(" ")
+        }
     }
 
     /// Compact "fmt:count" rendering of the decision mix, explored arms
@@ -245,10 +313,14 @@ pub struct Counters {
     pub reconversions: AtomicU64,
     /// Conversion-cache evictions.
     pub evictions: AtomicU64,
-    /// Requests the bandit routed to a non-predicted format.
+    /// Requests the bandit routed to a non-predicted arm.
     pub explored_requests: AtomicU64,
     /// Registered matrices whose format changed on a router hot-swap.
     pub migrations: AtomicU64,
+    /// Registered matrices whose compile-knob decision changed on a
+    /// router hot-swap (re-selected artifacts / re-prepared literals;
+    /// counted independently of format migrations).
+    pub knob_migrations: AtomicU64,
 }
 
 /// The shared registry: matrix id -> telemetry handle.
@@ -311,15 +383,30 @@ mod tests {
     }
 
     #[test]
+    fn choice_encoding_roundtrips() {
+        use crate::gpusim::{MemConfig, MAXRREGCOUNT, TB_SIZES};
+        for &tb in &TB_SIZES {
+            for &regs in &MAXRREGCOUNT {
+                for &mem in &MemConfig::ALL {
+                    let c = CompileChoice { tb_size: tb, maxrregcount: regs, mem };
+                    assert_eq!(decode_choice(encode_choice(c)), Some(c));
+                }
+            }
+        }
+        assert_eq!(decode_choice(KNOB_UNSET), None);
+    }
+
+    #[test]
     fn record_accumulates_and_quantiles_are_ordered() {
         let t = MatrixTelemetry::new();
-        t.configure(Format::Ell, 12.5);
+        t.configure(Format::Ell, CompileChoice::serving_default(), 12.5);
         for us in [5u64, 10, 20, 40, 80, 160, 320, 640, 1280, 2560] {
             t.record(Duration::from_micros(us), 3e-6);
         }
         let s = t.snapshot(7);
         assert_eq!(s.id, 7);
         assert_eq!(s.format, Some(Format::Ell));
+        assert_eq!(s.knobs, Some(CompileChoice::serving_default()));
         assert_eq!(s.requests, 10);
         assert!(s.mean_us > 0.0);
         let (p50, p90, p99) = (s.p50_us.unwrap(), s.p90_us.unwrap(), s.p99_us.unwrap());
@@ -336,12 +423,15 @@ mod tests {
         let s = t.snapshot(0);
         assert_eq!(s.requests, 0);
         assert_eq!(s.format, None);
+        assert_eq!(s.knobs, None);
         assert_eq!(s.p50_us, None);
         assert_eq!(s.p90_us, None);
         assert_eq!(s.p99_us, None);
         assert_eq!(s.energy_j, 0.0);
         assert_eq!(s.explored(), 0);
         assert_eq!(s.decisions(), "-");
+        assert_eq!(s.knob_decisions(), "-");
+        assert_eq!(s.non_default_knob_requests(), 0);
     }
 
     #[test]
@@ -359,15 +449,35 @@ mod tests {
     #[test]
     fn route_counts_split_chosen_and_explored_per_format() {
         let t = MatrixTelemetry::new();
-        t.route(Format::Ell, false, 10);
-        t.route(Format::Ell, false, 5);
-        t.route(Format::Csr, true, 2);
-        t.route(Format::Sell, true, 1);
+        let d = JointDecision::format_only;
+        t.route(d(Format::Ell), false, 10);
+        t.route(d(Format::Ell), false, 5);
+        t.route(d(Format::Csr), true, 2);
+        t.route(d(Format::Sell), true, 1);
         let s = t.snapshot(3);
         assert_eq!(s.chosen_by_format[Format::Ell.class_id()], 15);
         assert_eq!(s.explored_by_format[Format::Csr.class_id()], 2);
         assert_eq!(s.explored(), 3);
         assert_eq!(s.decisions(), "ell:15 csr*:2 sell*:1");
+        // all 18 requests rode the default knob arm
+        assert_eq!(s.by_knob[knob_index(CompileChoice::serving_default())], 18);
+        assert_eq!(s.non_default_knob_requests(), 0);
+        assert_eq!(s.knob_decisions(), "tb256/r64/default:18");
+    }
+
+    #[test]
+    fn route_counts_knob_arms() {
+        use crate::gpusim::MemConfig;
+        let t = MatrixTelemetry::new();
+        let alt = CompileChoice { tb_size: 64, maxrregcount: 32, mem: MemConfig::PreferL1 };
+        t.route(JointDecision::format_only(Format::Ell), false, 4);
+        t.route(JointDecision { format: Format::Ell, choice: alt }, true, 3);
+        let s = t.snapshot(9);
+        assert_eq!(s.by_knob[knob_index(alt)], 3);
+        assert_eq!(s.non_default_knob_requests(), 3);
+        let rendered = s.knob_decisions();
+        assert!(rendered.contains("tb256/r64/default:4"), "{rendered}");
+        assert!(rendered.contains("tb64/r32/prefer_l1:3"), "{rendered}");
     }
 
     #[test]

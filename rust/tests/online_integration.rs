@@ -2,12 +2,12 @@
 //! (`online` + `serve`): frozen-router equivalence, deterministic
 //! drift convergence with hot-swap, and in-flight swap safety.
 
-use auto_spmv::coordinator::RunTimeOptimizer;
+use auto_spmv::coordinator::{CompileChoice, KnobPolicy, RunTimeOptimizer};
 use auto_spmv::dataset::labels;
 use auto_spmv::features;
 use auto_spmv::gen::{patterns, Rng};
 use auto_spmv::gpusim::{profile, simulate, turing_gtx1650m, Objective};
-use auto_spmv::online::{observer, Online, OnlineConfig, Trainer};
+use auto_spmv::online::{bandit, observer, Online, OnlineConfig, Policy, Trainer};
 use auto_spmv::serve::{BackendSpec, Pool, PoolConfig, Response};
 use auto_spmv::sparse::convert::{self, coo_to_csr, AnyFormat, ConvertParams};
 use auto_spmv::sparse::{Coo, Csr, Format, SpMv};
@@ -194,12 +194,15 @@ fn drifted_workload_converges_and_beats_frozen_router() {
     frozen.register(0, coo.clone(), hint).unwrap();
 
     // Closed loop: inline retraining (deterministic), single worker.
+    // joint_knobs OFF: this test pins the PR 2/3 format-only
+    // convergence contract; the joint loop has its own e2e below.
     let online = Online::start(
         OnlineConfig {
             explore_rate: 0.25,
             retrain_every: 48,
             seed: 0x5EED,
             background: false,
+            joint_knobs: false,
             ..OnlineConfig::default()
         },
         stale.clone(),
@@ -280,6 +283,294 @@ fn drifted_workload_converges_and_beats_frozen_router() {
     let m = &adaptive_after.per_matrix[0];
     let new_chosen = m.chosen_by_format[best_fmt.class_id()];
     assert!(new_chosen >= MEASURE as u64, "steady-state traffic must ride {best_fmt}");
+}
+
+// ---------------------------------------------------------------------
+// The joint (format, knob) acceptance end-to-end: a workload whose
+// modeled-best compile knob differs from the serving default, served
+// through the joint closed loop, converges to the modeled-best knob of
+// its serving format within bounded rounds (knob migration on
+// hot-swap), beats the format-only loop's steady-state energy, covers
+// the UCB exploration path, and drops/corrupts zero requests.
+// ---------------------------------------------------------------------
+
+/// Modeled energy per (format, quantized knob arm) at the serving
+/// conversion parameters — the joint ground-truth grid.
+fn joint_energy_grid(coo: &Coo, convert: ConvertParams) -> Vec<[f64; bandit::N_KNOBS]> {
+    let csr = coo_to_csr(coo);
+    let arch = turing_gtx1650m();
+    Format::ALL
+        .iter()
+        .map(|fmt| {
+            let prof = profile(&csr, *fmt, convert);
+            std::array::from_fn(|a| {
+                let cfg = bandit::knob_arm(a).config_for(*fmt);
+                simulate(&arch, &prof, &cfg).0.energy_j
+            })
+        })
+        .collect()
+}
+
+#[test]
+fn joint_knob_migration_converges_and_beats_format_only_router() {
+    let objective = Objective::Energy;
+    let (_, ds, overhead) = toy_setup(&["eu-2005", "wiki-talk-temporal"], objective);
+    let convert = PoolConfig::default().convert;
+    let default_arm = bandit::knob_index(CompileChoice::serving_default());
+
+    // Candidates sized so the default TB (256) underfills the SMs: the
+    // modeled-best knob then differs from the default for EVERY format
+    // (grid-fill starvation, gpusim §4 obs. 1). Pick the one with the
+    // largest joint-vs-(format-only-at-default) gap.
+    let mut rng = Rng::new(0x701);
+    let candidates: Vec<Coo> = vec![
+        patterns::diagonals(&mut rng, 1000, &[-24, 0, 24, -48, 48, -72, 72], 0.98),
+        patterns::banded(&mut rng, 1200, 24, 14.0),
+        patterns::diagonals(&mut rng, 900, &[0, 1, -1, 32, -32, 64, -64], 0.99),
+    ];
+    let (coo, grid) = candidates
+        .into_iter()
+        .map(|c| {
+            let g = joint_energy_grid(&c, convert);
+            (c, g)
+        })
+        .min_by(|(_, ga), (_, gb)| {
+            let gap = |g: &Vec<[f64; bandit::N_KNOBS]>| {
+                let joint_best =
+                    g.iter().flat_map(|r| r.iter()).fold(f64::INFINITY, |a, b| a.min(*b));
+                let fo_best = g.iter().map(|r| r[default_arm]).fold(f64::INFINITY, f64::min);
+                joint_best / fo_best
+            };
+            gap(ga).total_cmp(&gap(gb))
+        })
+        .unwrap();
+    let joint_best = grid.iter().flat_map(|r| r.iter()).fold(f64::INFINITY, |a, b| a.min(*b));
+    let format_only_best = grid.iter().map(|r| r[default_arm]).fold(f64::INFINITY, f64::min);
+    assert!(
+        joint_best < 0.99 * format_only_best,
+        "test premise: some (format, knob) pair must beat every format at the default \
+         knobs by >= 1% (joint {joint_best:.3e} vs format-only {format_only_best:.3e})"
+    );
+    for (fi, row) in grid.iter().enumerate() {
+        let best = row.iter().fold(f64::INFINITY, |a, b| a.min(*b));
+        assert!(
+            best < row[default_arm] * 0.999,
+            "test premise: format {fi}: the modeled-best knob must differ from the default"
+        );
+    }
+
+    let stale = Arc::new(stale_csr_router(&ds, objective, overhead.clone()));
+    let refs = FormatRefs::new(&coo, convert);
+    let hint = 1_000_000_000_000u64;
+
+    // Two adaptive pools over identical workloads: the joint loop and
+    // the PR 2/3 format-only loop (its own seed-identical schedule).
+    let mk_online = |joint: bool| {
+        Online::start(
+            OnlineConfig {
+                explore_rate: 0.5,
+                retrain_every: 48,
+                seed: 0x70B5,
+                background: false,
+                joint_knobs: joint,
+                ucb_floor: 1,
+                ..OnlineConfig::default()
+            },
+            stale.clone(),
+            objective,
+            Some(Trainer::new(ds.clone(), objective, overhead.clone(), turing_gtx1650m().name)),
+        )
+    };
+    let joint_online = mk_online(true);
+    let joint_pool =
+        Pool::start_adaptive(joint_online.clone(), BackendSpec::Native, single_worker_cfg());
+    let fo_online = mk_online(false);
+    let fo_pool = Pool::start_adaptive(fo_online.clone(), BackendSpec::Native, single_worker_cfg());
+    assert_eq!(joint_pool.register(0, coo.clone(), hint).unwrap(), Format::Csr);
+    assert_eq!(fo_pool.register(0, coo.clone(), hint).unwrap(), Format::Csr);
+
+    // Convergence: rounds of sequential requests on both pools; every
+    // response is checked bit-identical against its executed format's
+    // native reference, so a corrupted product anywhere — including
+    // across knob hot-swaps — fails.
+    const ROUND: usize = 48;
+    const MAX_ROUNDS: usize = 10;
+    let mut served = 0usize;
+    let mut converged_after = None;
+    for round in 0..MAX_ROUNDS {
+        for r in 0..ROUND {
+            let x = input(coo.n_cols, served + r);
+            let a = joint_pool.product(0, x.clone()).expect("no request may be dropped");
+            refs.check(&a, &x, &format!("joint request {}", served + r));
+            let b = fo_pool.product(0, x.clone()).expect("no request may be dropped");
+            refs.check(&b, &x, &format!("format-only request {}", served + r));
+        }
+        served += ROUND;
+        let round_stats = joint_pool.stats().unwrap();
+        let m = &round_stats.per_matrix[0];
+        if let (Some(fmt), Some(knobs)) = (m.format, m.knobs) {
+            let row = &grid[fmt.class_id()];
+            let row_best = row.iter().fold(f64::INFINITY, |a, b| a.min(*b));
+            let served_arm = bandit::knob_index(knobs);
+            // converged once the serving knob is the modeled-best arm
+            // of the serving format (ties tolerated) and is no longer
+            // the default arm
+            if served_arm != default_arm && row[served_arm] <= row_best * 1.001 {
+                converged_after = Some(round + 1);
+                break;
+            }
+        }
+    }
+    let stats = joint_pool.stats().unwrap();
+    let rounds = converged_after.unwrap_or_else(|| {
+        panic!(
+            "joint loop must converge to the modeled-best knob within {MAX_ROUNDS} rounds \
+             (v{}, retrains {}, fmt migrations {}, knob migrations {}, serving {:?} @ {:?})",
+            stats.router_version,
+            stats.retrains,
+            stats.migrations,
+            stats.knob_migrations,
+            stats.per_matrix[0].format,
+            stats.per_matrix[0].knobs,
+        )
+    });
+    println!(
+        "joint loop converged in {rounds} round(s): {:?} @ {:?}, v{}, {} knob migrations",
+        stats.per_matrix[0].format,
+        stats.per_matrix[0].knobs,
+        stats.router_version,
+        stats.knob_migrations
+    );
+    assert!(stats.router_version >= 2, "convergence implies at least one hot-swap");
+    assert!(stats.knob_migrations >= 1, "the registered matrix must have knob-migrated");
+    assert!(
+        joint_online.ucb_routes() > 0,
+        "with ucb_floor 1 and a full arm sweep, the UCB scorer must have engaged"
+    );
+
+    // Steady state: anneal exploration on both loops, serve the same
+    // measurement workload, compare modeled energy per request.
+    joint_online.set_explore_rate(0.0);
+    fo_online.set_explore_rate(0.0);
+    const MEASURE: usize = 64;
+    let joint_before = joint_pool.stats().unwrap();
+    let fo_before = fo_pool.stats().unwrap();
+    for r in 0..MEASURE {
+        let x = input(coo.n_cols, 200_000 + r);
+        let a = joint_pool.product(0, x.clone()).expect("joint pool serves");
+        let b = fo_pool.product(0, x.clone()).expect("format-only pool serves");
+        refs.check(&a, &x, &format!("joint measurement request {r}"));
+        refs.check(&b, &x, &format!("format-only measurement request {r}"));
+    }
+    let joint_after = joint_pool.stats().unwrap();
+    let fo_after = fo_pool.stats().unwrap();
+    let mean = |b: &auto_spmv::serve::PoolStats, a: &auto_spmv::serve::PoolStats| {
+        (a.total_energy_j - b.total_energy_j) / MEASURE as f64
+    };
+    let joint_mean = mean(&joint_before, &joint_after);
+    let fo_mean = mean(&fo_before, &fo_after);
+    println!(
+        "steady-state energy/request: joint {joint_mean:.3e} J, format-only {fo_mean:.3e} J"
+    );
+    assert!(
+        joint_mean < fo_mean * 0.999,
+        "the joint decision must beat the format-only router's mean energy \
+         (joint {joint_mean:.3e} vs format-only {fo_mean:.3e})"
+    );
+    assert_eq!(
+        joint_after.requests, fo_after.requests,
+        "both pools served every request"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Knob-swap safety: in-flight pipelined requests complete with
+// bit-identical results across a JOINT policy upgrade that migrates
+// only the compile knobs (format unchanged).
+// ---------------------------------------------------------------------
+#[test]
+fn inflight_requests_survive_knob_hot_swap_bit_identically() {
+    let objective = Objective::EnergyEff;
+    let (router, ds, _) = toy_setup(&["rim", "eu-2005", "shar_te2-b3"], objective);
+    let router = Arc::new(router);
+    let pool = Pool::start(
+        router.clone(),
+        BackendSpec::Native,
+        PoolConfig { workers: 2, batch_window: Duration::from_micros(100), ..Default::default() },
+    );
+    let names = ["rim", "eu-2005", "shar_te2-b3"];
+    let mats: Vec<Coo> =
+        names.iter().map(|n| auto_spmv::gen::by_name(n).unwrap().generate(1)).collect();
+    let refs: Vec<FormatRefs> =
+        mats.iter().map(|coo| FormatRefs::new(coo, PoolConfig::default().convert)).collect();
+    for (id, coo) in mats.iter().enumerate() {
+        pool.register(id as u64, coo.clone(), 10_000).unwrap();
+    }
+
+    // A knob policy that forces a NON-default choice for every format,
+    // paired with the SAME router: the swap migrates knobs only.
+    let forced = CompileChoice {
+        tb_size: 64,
+        maxrregcount: 32,
+        mem: auto_spmv::gpusim::MemConfig::PreferL1,
+    };
+    let ex: Vec<(Format, auto_spmv::dataset::labels::Example)> = Format::ALL
+        .iter()
+        .map(|f| {
+            let feats = ds.records[0].features.to_scaled_vec();
+            let mut fv = feats;
+            fv.push(0.0);
+            (
+                *f,
+                auto_spmv::coordinator::compile_time::knob_example(
+                    "forced",
+                    "GTX1650m-Turing",
+                    fv,
+                    &forced.config_for(*f),
+                    1.0,
+                ),
+            )
+        })
+        .collect();
+    let knobs = Arc::new(KnobPolicy::train(objective, "GTX1650m-Turing", &ex));
+
+    // pipeline a burst, install the joint policy while it is in
+    // flight, then pipeline a second burst
+    let mut pending = Vec::new();
+    for r in 0..32 {
+        let id = r % mats.len();
+        let x = input(mats[id].n_cols, r);
+        pending.push((id, x.clone(), pool.product_async(id as u64, x).unwrap()));
+    }
+    let v = pool.router().install_policy(Arc::new(Policy::joint(router.clone(), knobs)));
+    assert_eq!(v, 2);
+    for r in 32..64 {
+        let id = r % mats.len();
+        let x = input(mats[id].n_cols, r);
+        pending.push((id, x.clone(), pool.product_async(id as u64, x).unwrap()));
+    }
+    let mut completed = 0;
+    for (id, x, rx) in pending {
+        let resp = rx.recv().expect("pool alive").expect("request must not be dropped");
+        refs[id].check(&resp, &x, "in-flight request across knob hot-swap");
+        completed += 1;
+    }
+    assert_eq!(completed, 64);
+    let stats = pool.stats().unwrap();
+    assert_eq!(stats.router_version, 2);
+    assert_eq!(stats.requests, 64);
+    assert_eq!(
+        stats.migrations, 0,
+        "same router, same format decisions: no format migration"
+    );
+    assert_eq!(
+        stats.knob_migrations as usize,
+        mats.len(),
+        "every registered matrix must have re-decided its knobs"
+    );
+    for m in &stats.per_matrix {
+        assert_eq!(m.knobs, Some(forced), "the forced knob policy must be serving");
+    }
 }
 
 // ---------------------------------------------------------------------

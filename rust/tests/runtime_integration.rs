@@ -246,3 +246,57 @@ fn spmm_prepared_matches_per_vector_at_ragged_batch_widths() {
         }
     }
 }
+
+/// CI manifest-schema gate: the kernel-lowering job generates a
+/// manifest with `python -m compile.aot --quick --manifest-only` and
+/// points AUTOSPMV_MANIFEST_FIXTURE at it; this test round-trips the
+/// emitted rows through the Rust parser so schema drift between the
+/// Python emitter and `runtime::artifacts` fails fast. Skipped (with a
+/// notice) when the env var is unset — local runs are covered by the
+/// artifact-dir tests above.
+#[test]
+fn python_emitted_manifest_roundtrips_through_the_parser() {
+    let Ok(dir) = std::env::var("AUTOSPMV_MANIFEST_FIXTURE") else {
+        eprintln!("SKIP: AUTOSPMV_MANIFEST_FIXTURE not set (CI-only schema gate)");
+        return;
+    };
+    let idx = auto_spmv::runtime::ArtifactIndex::load(std::path::Path::new(&dir))
+        .expect("CI fixture manifest must parse");
+    assert!(!idx.specs.is_empty(), "fixture manifest has no rows");
+    use auto_spmv::runtime::artifacts::{Kind, MatrixDims};
+    let spmm: Vec<_> = idx.specs.iter().filter(|s| s.kind == Kind::Spmm).collect();
+    assert!(!spmm.is_empty(), "the quick inventory must emit kind=spmm rows");
+    for s in &spmm {
+        assert!(s.ncols() > 1, "{}: spmm rows carry a batch bucket (nc extra)", s.name);
+        assert!(s.rows > 0 && s.cols > 0 && s.width > 0, "{}: shape bucket parsed", s.name);
+        assert!(
+            ["resident", "gather", "streamed"].contains(&s.x_placement.as_str()),
+            "{}: knob placement column parsed ({})",
+            s.name,
+            s.x_placement
+        );
+    }
+    // the knob sweep reaches the spmm inventory: at least two distinct
+    // knob triples among same-format spmm rows, and selection
+    // knob-breaks between them
+    let knob = |s: &auto_spmv::runtime::ArtifactSpec| {
+        (s.block_rows, s.chunk_width, s.x_placement.clone())
+    };
+    let distinct: std::collections::HashSet<_> = spmm.iter().map(|s| knob(*s)).collect();
+    assert!(
+        distinct.len() >= 2,
+        "the spmm inventory must be knob-swept (got one knob point: {distinct:?})"
+    );
+    let probe = spmm[0];
+    let dims = MatrixDims {
+        n_rows: probe.rows.min(64),
+        n_cols: probe.cols.min(64),
+        nnz: 16,
+        max_row_len: 2,
+        bell_kb: 2,
+    };
+    let picked = idx
+        .select_spmm(probe.fmt, &dims, 2, None)
+        .expect("an spmm variant must cover a tiny matrix");
+    assert_eq!(picked.kind, Kind::Spmm);
+}
