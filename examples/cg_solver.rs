@@ -1,5 +1,5 @@
-//! Conjugate-gradient solver driven through the Auto-SpMV service —
-//! the paper's motivating workload (§7.5: "iterative solvers such as the
+//! Conjugate-gradient solver on the serving pool's session API — the
+//! paper's motivating workload (§7.5: "iterative solvers such as the
 //! Preconditioned Conjugate Gradient method" amortize the run-time
 //! optimization overhead).
 //!
@@ -7,20 +7,30 @@
 //! make artifacts && cargo run --release --example cg_solver
 //! ```
 //!
-//! Builds an SPD banded system A x = b, registers A with the serving
-//! loop (router picks the format; conversion is amortized over the CG
-//! iterations), and solves with every SpMV product dispatched through
-//! the service — over PJRT AOT kernels when artifacts are present.
+//! Builds an SPD banded system A x = b, registers A with the pool, and
+//! drives two iterative phases through ONE [`Session`]:
+//!
+//! 1. a **spectral-bound estimate** via pure chained power steps — the
+//!    session hot path, where the vector never crosses the host
+//!    boundary between iterations;
+//! 2. the **CG loop** via the `write`/`step`/`read` escape hatches —
+//!    CG updates `p` on the host every iteration, so each A·p pays the
+//!    same two vector marshals as a per-request product. The printed
+//!    ledger keeps that honest: sessions elide round-trips only on
+//!    purely chained segments.
+//!
+//! [`Session`]: auto_spmv::serve::Session
 
 use auto_spmv::coordinator::overhead::OverheadModel;
-use auto_spmv::coordinator::service::{BackendSpec, Service};
 use auto_spmv::coordinator::RunTimeOptimizer;
 use auto_spmv::dataset::{build, BuildOptions};
 use auto_spmv::gen::Rng;
 use auto_spmv::gpusim::Objective;
 use auto_spmv::runtime::default_artifacts_dir;
-use auto_spmv::sparse::convert::{coo_to_csr, csr_to_coo, ConvertParams};
+use auto_spmv::serve::{BackendSpec, Pool, PoolConfig, PoolStats};
+use auto_spmv::sparse::convert::{coo_to_csr, ConvertParams};
 use auto_spmv::sparse::{Coo, SpMv};
+use std::sync::Arc;
 
 /// SPD, diagonally dominant banded matrix (a 1-D Poisson-like stencil
 /// with random off-diagonals) sized to fit the 256-row artifact bucket.
@@ -62,11 +72,8 @@ fn main() -> anyhow::Result<()> {
         both_archs: false,
         ..Default::default()
     });
-    let router = RunTimeOptimizer::train(
-        &ds,
-        Objective::Latency,
-        OverheadModel::train_on_corpus(1, None),
-    );
+    let router =
+        RunTimeOptimizer::train(&ds, Objective::Latency, OverheadModel::train_on_corpus(1, None));
 
     let artifacts = default_artifacts_dir();
     let backend = if artifacts.join("manifest.tsv").exists() {
@@ -76,22 +83,60 @@ fn main() -> anyhow::Result<()> {
         println!("backend: native (run `make artifacts` for the PJRT path)");
         BackendSpec::Native
     };
-    let svc = Service::start(router, backend, ConvertParams { bell_bh: 8, bell_bw: 8, sell_h: 8 });
+    let pool = Pool::start(
+        Arc::new(router),
+        backend,
+        PoolConfig {
+            workers: 1,
+            convert: ConvertParams { bell_bh: 8, bell_bw: 8, sell_h: 8 },
+            ..PoolConfig::default()
+        },
+    );
 
     // many CG iterations expected -> the router may convert
-    let fmt = svc.register(0, csr_to_coo(&csr), 10_000)?;
+    let fmt = pool.register(0, coo, 10_000)?;
     println!("router picked format: {fmt}");
+    let session = pool.open_session(0)?;
+    let bytes = |a: &PoolStats, b: &PoolStats| b.marshalled_bytes - a.marshalled_bytes;
 
-    // --- conjugate gradient, every A*p through the service -------------
+    // --- phase 1: lambda_max bound via pure chained power steps --------
+    // The session hot path: one write in, `power_steps` device-chained
+    // iterations, one read out.
+    let power_steps = 30u64;
+    let before = pool.stats()?;
+    session.write(vec![1.0f32; n])?;
+    session.power_step_n(power_steps)?;
+    let u = session.read()?;
+    let after = pool.stats()?;
+    let au = csr.spmv_alloc(&u);
+    let lambda_max: f32 = u.iter().zip(&au).map(|(a, b)| a * b).sum();
+    let power_bytes = bytes(&before, &after);
+    println!(
+        "spectral bound: lambda_max ~= {lambda_max:.4} after {power_steps} chained steps, \
+         {power_bytes} B marshalled ({:.0} B/step vs {} per-request), {} round-trips elided",
+        power_bytes as f64 / power_steps as f64,
+        8 * n,
+        after.round_trips_elided - before.round_trips_elided,
+    );
+    assert!(
+        power_bytes as f64 * 10.0 <= (8 * n) as f64 * power_steps as f64,
+        "chained power steps must elide >= 90% of per-request marshalling"
+    );
+
+    // --- phase 2: conjugate gradient via the escape hatches ------------
     let b: Vec<f32> = (0..n).map(|i| ((i % 11) as f32 - 5.0) * 0.3).collect();
     let mut x = vec![0.0f32; n];
     let mut r = b.clone();
     let mut p = r.clone();
     let mut rs_old: f32 = r.iter().map(|v| v * v).sum();
     let mut products = 0u32;
+    let before = pool.stats()?;
     let t0 = std::time::Instant::now();
     for it in 0..400 {
-        let ap = svc.product(0, p.clone())?.y;
+        // A*p through the pinned session: write(p) -> step -> read
+        session.write(p.clone())?;
+        session.step()?;
+        let ap = session.read()?;
         products += 1;
         let pap: f32 = p.iter().zip(&ap).map(|(a, b)| a * b).sum();
         let alpha = rs_old / pap;
@@ -111,6 +156,8 @@ fn main() -> anyhow::Result<()> {
         rs_old = rs_new;
     }
     let dt = t0.elapsed();
+    let after = pool.stats()?;
+    let cg_bytes = bytes(&before, &after);
 
     // verify against a native residual
     let ax = csr.spmv_alloc(&x);
@@ -120,9 +167,19 @@ fn main() -> anyhow::Result<()> {
         dt.as_secs_f64(),
         1e3 * dt.as_secs_f64() / products as f64
     );
+    println!(
+        "CG ledger: {cg_bytes} B marshalled ({:.0} B/product) — host-side p-updates make \
+         every A*p a write/read pair, the same traffic as per-request serving; only the \
+         chained phase above elides round-trips",
+        cg_bytes as f64 / products as f64
+    );
     assert!(resid < 1e-3, "CG must converge");
-    let stats = svc.stats()?;
-    println!("service: {} requests, conversions {}", stats.requests, stats.conversions);
+    drop(session);
+    let stats = pool.stats()?;
+    println!(
+        "pool: {} requests ({} session steps), conversions {}, {} B marshalled total",
+        stats.requests, stats.session_steps, stats.conversions, stats.marshalled_bytes
+    );
     println!("cg_solver OK");
     Ok(())
 }

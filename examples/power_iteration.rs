@@ -1,25 +1,54 @@
-//! Power iteration through the fused L2 power-step artifact — shows a
-//! whole solver step (SpMV + norm + scale) compiled into ONE HLO module
-//! and driven from Rust (the paper's eigenvalue-problem motivation, §1).
+//! Power iteration through a device-resident serving session — the
+//! eigenvalue-problem motivation (paper §1) on the PR 6 hot path.
+//!
+//! The same solver runs twice against one serving pool:
+//!
+//! 1. **per-request**: every step submits `x` and receives `y` through
+//!    the pool's queue — two vector marshals per iteration;
+//! 2. **session**: [`Session::power_step_n`] keeps the vector resident
+//!    across steps (device-side on PJRT via the fused x' = Ax/||Ax||
+//!    artifact, host-side reuse on native), so the only marshals are
+//!    the initial `write` and the final `read`.
+//!
+//! The printout is the marshalled-bytes-per-iteration ledger before and
+//! after — the round-trip traffic a chained solver stops paying.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example power_iteration
 //! ```
 
+use auto_spmv::coordinator::overhead::OverheadModel;
+use auto_spmv::coordinator::RunTimeOptimizer;
+use auto_spmv::dataset::{build, BuildOptions};
 use auto_spmv::gen::Rng;
-use auto_spmv::runtime::{default_artifacts_dir, Engine};
-use auto_spmv::sparse::convert::{coo_to_csr, csr_to_ell};
+use auto_spmv::gpusim::Objective;
+use auto_spmv::runtime::default_artifacts_dir;
+use auto_spmv::serve::{BackendSpec, Pool, PoolConfig, PoolStats};
+use auto_spmv::sparse::convert::coo_to_csr;
 use auto_spmv::sparse::{Coo, SpMv};
+use std::sync::Arc;
+
+fn normalize(v: &mut [f32]) {
+    let norm = v.iter().map(|a| a * a).sum::<f32>().sqrt();
+    for a in v {
+        *a /= norm;
+    }
+}
+
+/// Rayleigh quotient and eigenpair residual of a unit vector.
+fn eigen_readout(csr: &auto_spmv::sparse::Csr, x: &[f32]) -> (f32, f32) {
+    let ax = csr.spmv_alloc(x);
+    let lambda: f32 = x.iter().zip(&ax).map(|(a, b)| a * b).sum();
+    let resid = ax
+        .iter()
+        .zip(x)
+        .map(|(a, v)| (a - lambda * v) * (a - lambda * v))
+        .sum::<f32>()
+        .sqrt();
+    (lambda, resid)
+}
 
 fn main() -> anyhow::Result<()> {
-    let dir = default_artifacts_dir();
-    if !dir.join("manifest.tsv").exists() {
-        eprintln!("no artifacts at {dir:?}; run `make artifacts` first");
-        return Ok(());
-    }
-    let mut engine = Engine::new(&dir)?;
-    println!("PJRT platform: {}", engine.platform());
-
     // symmetric banded matrix, 240 rows (fits the 256-row power bucket;
     // width must stay within the bucket's 16)
     let n = 240;
@@ -36,43 +65,93 @@ fn main() -> anyhow::Result<()> {
         }
     }
     let csr = coo_to_csr(&coo);
-    let ell = csr_to_ell(&csr);
-    println!("matrix: n = {n}, nnz = {}, ELL width = {}", csr.vals.len(), ell.width);
+    println!("matrix: n = {n}, nnz = {}", csr.vals.len());
 
-    // --- power iteration: every step ONE fused PJRT execution ----------
-    let mut x = vec![1.0f32; n];
-    let nrm0: f32 = x.iter().map(|v| v * v).sum::<f32>().sqrt();
-    for v in &mut x {
-        *v /= nrm0;
-    }
-    let mut lambda_est = 0.0f32;
-    let t0 = std::time::Instant::now();
-    let steps = 60;
-    for _ in 0..steps {
-        let y = engine.power_step(&ell, &x)?;
-        // Rayleigh quotient estimate before normalization uses Ax = y * ||Ax||;
-        // recompute via native product for the eigenvalue readout
-        let ax = csr.spmv_alloc(&x);
-        lambda_est = x.iter().zip(&ax).map(|(a, b)| a * b).sum();
-        x = y;
-    }
-    let dt = t0.elapsed();
-
-    // validate: residual ||A x - lambda x|| should be small
-    let ax = csr.spmv_alloc(&x);
-    let resid: f32 = ax
-        .iter()
-        .zip(&x)
-        .map(|(a, v)| (a - lambda_est * v) * (a - lambda_est * v))
-        .sum::<f32>()
-        .sqrt();
-    println!(
-        "power iteration: {steps} fused steps in {:.3}s ({:.2} ms/step)",
-        dt.as_secs_f64(),
-        1e3 * dt.as_secs_f64() / steps as f64
+    // router trained on a few corpus matrices
+    let ds = build(&BuildOptions {
+        only: Some(vec!["rim".into(), "bcsstk32".into(), "parabolic_fem".into()]),
+        both_archs: false,
+        ..Default::default()
+    });
+    let router =
+        RunTimeOptimizer::train(&ds, Objective::Latency, OverheadModel::train_on_corpus(1, None));
+    let artifacts = default_artifacts_dir();
+    let backend = if artifacts.join("manifest.tsv").exists() {
+        println!("backend: PJRT AOT kernels ({artifacts:?})");
+        BackendSpec::Pjrt(artifacts)
+    } else {
+        println!("backend: native (run `make artifacts` for the fused PJRT path)");
+        BackendSpec::Native
+    };
+    let pool = Pool::start(
+        Arc::new(router),
+        backend,
+        PoolConfig { workers: 1, ..PoolConfig::default() },
     );
-    println!("dominant eigenvalue ~= {lambda_est:.4}, residual {resid:.2e}");
-    assert!(resid < 5e-2, "power iteration must converge toward an eigenpair");
+    let fmt = pool.register(0, coo, 10_000)?;
+    println!("router picked format: {fmt}");
+
+    let steps = 60usize;
+    let mut x0 = vec![1.0f32; n];
+    normalize(&mut x0);
+    let bytes = |a: &PoolStats, b: &PoolStats| b.marshalled_bytes - a.marshalled_bytes;
+
+    // --- BEFORE: per-request path, x in and y out every iteration ------
+    let before = pool.stats()?;
+    let mut x = x0.clone();
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        x = pool.product(0, x)?.y;
+        normalize(&mut x);
+    }
+    let dt_req = t0.elapsed();
+    let after = pool.stats()?;
+    let req_bytes = bytes(&before, &after);
+    let (lambda_req, resid_req) = eigen_readout(&csr, &x);
+
+    // --- AFTER: session path, the vector never leaves the backend ------
+    let before = pool.stats()?;
+    let session = pool.open_session(0)?;
+    session.write(x0)?;
+    let t0 = std::time::Instant::now();
+    session.power_step_n(steps as u64)?;
+    let y = session.read()?;
+    let dt_sess = t0.elapsed();
+    let after = pool.stats()?;
+    let sess_bytes = bytes(&before, &after);
+    let (lambda_sess, resid_sess) = eigen_readout(&csr, &y);
+    drop(session);
+
+    println!(
+        "per-request: {steps} steps in {:.3}s, {req_bytes} B marshalled ({:.0} B/step)",
+        dt_req.as_secs_f64(),
+        req_bytes as f64 / steps as f64
+    );
+    println!(
+        "session:     {steps} steps in {:.3}s, {sess_bytes} B marshalled ({:.0} B/step), \
+         {} round-trips elided",
+        dt_sess.as_secs_f64(),
+        sess_bytes as f64 / steps as f64,
+        after.round_trips_elided - before.round_trips_elided,
+    );
+    println!(
+        "marshalled bytes/iteration: {:.0}x fewer on the session path",
+        req_bytes as f64 / sess_bytes.max(1) as f64
+    );
+    println!(
+        "dominant eigenvalue ~= {lambda_sess:.4} (per-request {lambda_req:.4}), \
+         residual {resid_sess:.2e}"
+    );
+    assert!(resid_req < 5e-2, "per-request power iteration must converge");
+    assert!(resid_sess < 5e-2, "session power iteration must converge");
+    assert!(
+        (lambda_req - lambda_sess).abs() < 1e-3 * lambda_req.abs().max(1.0),
+        "both paths must agree on the eigenvalue"
+    );
+    assert!(
+        (req_bytes as f64) >= 10.0 * sess_bytes as f64,
+        "the session path must elide >= 90% of marshalled bytes per iteration"
+    );
     println!("power_iteration OK");
     Ok(())
 }

@@ -359,6 +359,18 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         stats.spmm_dispatches
     );
     println!(
+        "{} B marshalled ({:.0} B/request), {} B elided across {} session steps \
+         ({} round-trips, {} sessions opened, {} open) — elision ratio {:.2}",
+        stats.marshalled_bytes,
+        stats.marshalled_bytes_per_request(),
+        stats.elided_bytes,
+        stats.session_steps,
+        stats.round_trips_elided,
+        stats.sessions_opened,
+        stats.active_sessions,
+        stats.elision_ratio()
+    );
+    println!(
         "router v{} ({} retrains, {} format migrations, {} knob migrations), \
          explored {} requests ({} UCB-scored), drift: {}",
         stats.router_version,

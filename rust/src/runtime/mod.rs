@@ -10,7 +10,7 @@ pub mod pjrt;
 pub mod xla_shim;
 
 pub use artifacts::{knob_map, spmm_launches, ArtifactIndex, ArtifactSpec, Kind, MatrixDims};
-pub use pjrt::{Engine, PreparedSpmm, PreparedSpmv};
+pub use pjrt::{Engine, PreparedPower, PreparedSession, PreparedSpmm, PreparedSpmv, SessionVec};
 
 use std::path::PathBuf;
 

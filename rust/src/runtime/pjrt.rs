@@ -285,7 +285,7 @@ impl Engine {
     pub fn spmm_prepared(
         &mut self,
         prep: &PreparedSpmm,
-        xs: &[Vec<f32>],
+        xs: &[&[f32]],
     ) -> Result<Vec<Vec<f32>>> {
         let bucket = prep.ncols();
         let cols = prep.spec.cols;
@@ -359,15 +359,17 @@ impl Engine {
     pub fn spmv_batch_prepared(
         &mut self,
         prep: &PreparedSpmv,
-        xs: &[Vec<f32>],
+        xs: &[&[f32]],
     ) -> Result<Vec<Vec<f32>>> {
         xs.iter().map(|x| self.run_prepared(prep, x)).collect()
     }
 
-    /// Execute one power-iteration step x' = A x / ||A x|| using a
-    /// `power` artifact (ELL resident variant).
-    pub fn power_step(&mut self, ell: &crate::sparse::Ell, x: &[f32]) -> Result<Vec<f32>> {
-        let spec = self
+    /// Marshal an ELL matrix against the fused power-step artifact
+    /// (x' = A x / ||A x|| in ONE module), if one fits. `Ok(None)` means
+    /// no power variant is compiled for the shape — sessions then serve
+    /// normalized steps as a plain product plus a host-side scale.
+    pub fn prepare_power(&mut self, ell: &crate::sparse::Ell) -> Result<Option<PreparedPower>> {
+        let Some(spec) = self
             .index
             .power_specs()
             .into_iter()
@@ -377,19 +379,159 @@ impl Engine {
                     && s.cols >= ell.n_cols
                     && s.width >= ell.width
             })
-            .context("no power artifact fits")?
-            .clone();
+            .cloned()
+        else {
+            return Ok(None);
+        };
         let (vals, cols) = ell.to_kernel(spec.rows, spec.width);
-        let mut xp = x.to_vec();
-        xp.resize(spec.cols, 0.0);
-        let inputs = vec![
+        let matrix_literals = vec![
             lit2(&vals, spec.rows, spec.width)?,
             lit2i(&cols, spec.rows, spec.width)?,
-            xla::Literal::vec1(&xp),
         ];
-        let mut y = self.run(&spec, &inputs)?;
-        y.truncate(ell.n_rows);
+        Ok(Some(PreparedPower { spec, matrix_literals, n_rows: ell.n_rows, x_len: ell.n_cols }))
+    }
+
+    /// Execute one fused power step against a prepared (once-marshalled)
+    /// artifact; only the x literal is built per call.
+    pub fn power_step_prepared(&mut self, prep: &PreparedPower, x: &[f32]) -> Result<Vec<f32>> {
+        if x.len() != prep.x_len {
+            bail!("x length {} != n_cols {}", x.len(), prep.x_len);
+        }
+        let mut xp = x.to_vec();
+        xp.resize(prep.spec.cols, 0.0);
+        let mut inputs: Vec<xla::Literal> = prep.matrix_literals.clone();
+        inputs.push(xla::Literal::vec1(&xp));
+        let mut y = self.run(&prep.spec, &inputs)?;
+        y.truncate(prep.n_rows);
         Ok(y)
+    }
+
+    /// Execute one power-iteration step x' = A x / ||A x|| using a
+    /// `power` artifact (ELL resident variant). One-shot path: for
+    /// repeated steps use [`Engine::prepare_power`] +
+    /// [`Engine::power_step_prepared`] (or a [`PreparedSession`]),
+    /// which marshal the matrix literals once.
+    pub fn power_step(&mut self, ell: &crate::sparse::Ell, x: &[f32]) -> Result<Vec<f32>> {
+        let prep = self.prepare_power(ell)?.context("no power artifact fits")?;
+        self.power_step_prepared(&prep, x)
+    }
+
+    /// Prepare a device-resident iterative session over a square
+    /// matrix: the per-step SpMV preparation, plus the fused power-step
+    /// artifact when the matrix is ELL and one fits. Chained steps can
+    /// keep the vector on the device only when the artifact's bucket is
+    /// square (a step's padded output is then shape-compatible with the
+    /// next step's x input); [`Engine::session_step`] reports when it
+    /// had to bounce through the host instead.
+    pub fn prepare_session(
+        &mut self,
+        matrix: &AnyFormat,
+        choice: Option<(u32, u32, MemConfig)>,
+    ) -> Result<PreparedSession> {
+        let (_, n_rows, n_cols) = Self::shape_of(matrix);
+        if n_rows != n_cols {
+            bail!("iterative session requires a square matrix ({n_rows}x{n_cols})");
+        }
+        let spmv = self.prepare(matrix, choice)?;
+        let power = match matrix {
+            AnyFormat::Ell(m) => self.prepare_power(m)?,
+            _ => None,
+        };
+        Ok(PreparedSession { spmv, power, n: n_rows })
+    }
+
+    /// One session step: y = A x (or the fused x' = A x / ||A x|| when
+    /// `normalize` and a power artifact is bound), consuming the
+    /// previous vector state and returning the next. A `Device` input
+    /// chains by buffer identity — no host round-trip — whenever the
+    /// executing artifact's bucket is square; otherwise the state
+    /// bounces through the host once and the step reports it. A
+    /// `normalize` step without a fused artifact executes the plain
+    /// product and normalizes host-side (also a reported bounce).
+    pub fn session_step(
+        &mut self,
+        sess: &PreparedSession,
+        state: SessionVec,
+        normalize: bool,
+    ) -> Result<(SessionVec, bool)> {
+        if normalize && sess.power.is_none() {
+            // no fused artifact: plain product, then host-side scale
+            let (next, _) = self.session_step(sess, state, false)?;
+            let mut y = self.session_read(sess, &next)?;
+            let norm: f32 = y.iter().map(|v| v * v).sum::<f32>().sqrt();
+            for v in &mut y {
+                *v /= norm;
+            }
+            return Ok((SessionVec::Host(y), true));
+        }
+        let (spec, literals): (&ArtifactSpec, &[xla::Literal]) = if normalize {
+            let p = sess.power.as_ref().expect("checked above");
+            (&p.spec, &p.matrix_literals)
+        } else {
+            (&sess.spmv.spec, &sess.spmv.matrix_literals)
+        };
+        // a chained device buffer has the previous step's padded output
+        // shape (spec.rows); it is a valid x input only for a square
+        // bucket (rows beyond the true n are zero either way)
+        let chains = spec.rows == spec.cols;
+        let mut round_trip = false;
+        let host; // keeps a bounced/padded host vector alive across execute
+        let x_input: xla::ExecInput = match &state {
+            SessionVec::Device(buf) if chains => xla::ExecInput::Buffer(buf),
+            SessionVec::Device(buf) => {
+                round_trip = true;
+                let mut v = self.buffer_to_host(buf, sess.n)?;
+                v.resize(spec.cols, 0.0);
+                host = xla::Literal::vec1(&v);
+                xla::ExecInput::Literal(&host)
+            }
+            SessionVec::Host(v) => {
+                if v.len() != sess.n {
+                    bail!("session vector length {} != n {}", v.len(), sess.n);
+                }
+                let mut vp = v.clone();
+                vp.resize(spec.cols, 0.0);
+                host = xla::Literal::vec1(&vp);
+                xla::ExecInput::Literal(&host)
+            }
+        };
+        let mut inputs: Vec<xla::ExecInput> =
+            literals.iter().map(xla::ExecInput::Literal).collect();
+        inputs.push(x_input);
+        let name = spec.name.clone();
+        let spec = spec.clone();
+        let exe = self.executable(&spec)?;
+        let out = exe
+            .execute_inputs(&inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?
+            .remove(0)
+            .remove(0)
+            // aot.py lowers with return_tuple=True: project the 1-tuple
+            // on device so the y buffer itself can chain
+            .tuple_element(0)
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        self.exec_count += 1;
+        Ok((SessionVec::Device(out), round_trip))
+    }
+
+    /// Copy a session vector out to the host (the session's explicit
+    /// `read()` escape hatch, and the bounce path of a non-chainable
+    /// step). Truncates to the true dimension.
+    pub fn session_read(&mut self, sess: &PreparedSession, state: &SessionVec) -> Result<Vec<f32>> {
+        match state {
+            SessionVec::Host(v) => Ok(v.clone()),
+            SessionVec::Device(buf) => self.buffer_to_host(buf, sess.n),
+        }
+    }
+
+    fn buffer_to_host(&mut self, buf: &xla::PjRtBuffer, n: usize) -> Result<Vec<f32>> {
+        let mut v = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch session vector: {e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("session vector to_vec: {e:?}"))?;
+        v.truncate(n);
+        Ok(v)
     }
 }
 
@@ -464,6 +606,60 @@ impl PreparedSpmm {
     /// exceeds the compiled bucket).
     pub fn launches_for(&self, k: usize) -> usize {
         super::artifacts::spmm_launches(k, self.ncols())
+    }
+}
+
+/// An ELL matrix marshalled ONCE against the fused power-step artifact
+/// (x' = A x / ||A x||). Unlike the one-shot [`Engine::power_step`],
+/// repeated steps through [`Engine::power_step_prepared`] (or a
+/// session) rebuild only the x literal.
+pub struct PreparedPower {
+    spec: ArtifactSpec,
+    matrix_literals: Vec<xla::Literal>,
+    n_rows: usize,
+    x_len: usize,
+}
+
+impl PreparedPower {
+    pub fn variant_name(&self) -> &str {
+        &self.spec.name
+    }
+}
+
+/// Vector state of an iterative session: `Host` between explicit
+/// writes (and after a bounced step), `Device` after a chained step —
+/// the execution's y output buffer held by identity, never copied to
+/// the host until `read()`.
+pub enum SessionVec {
+    Host(Vec<f32>),
+    Device(xla::PjRtBuffer),
+}
+
+/// A pinned matrix's session preparation: the per-step SpMV literals
+/// plus (when the matrix is ELL and the inventory has one) the fused
+/// power-step artifact, both marshalled once at session open. Create
+/// with [`Engine::prepare_session`]; drive with
+/// [`Engine::session_step`] / [`Engine::session_read`].
+pub struct PreparedSession {
+    spmv: PreparedSpmv,
+    power: Option<PreparedPower>,
+    /// True (square) dimension: outputs truncate to it, inputs must
+    /// match it.
+    n: usize,
+}
+
+impl PreparedSession {
+    pub fn variant_name(&self) -> &str {
+        self.spmv.variant_name()
+    }
+
+    /// Does a fused power-step artifact back `normalize` steps?
+    pub fn has_fused_power(&self) -> bool {
+        self.power.is_some()
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
     }
 }
 

@@ -66,6 +66,24 @@ impl PjRtBuffer {
     pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
         Err(unavailable())
     }
+
+    /// Project element `i` out of a tuple-shaped buffer WITHOUT leaving
+    /// the device (PJRT's `GetTupleElement` surface). The iterative
+    /// session path uses this to keep an execution's `y` output
+    /// device-resident so it can feed the next execution's `x` input.
+    pub fn tuple_element(&self, _i: usize) -> Result<PjRtBuffer, XlaError> {
+        Err(unavailable())
+    }
+}
+
+/// One execution input: a host literal to be transferred, or an
+/// already-device-resident buffer passed by identity (zero-copy). The
+/// real bindings accept `PjRtBuffer` arguments on the same device
+/// without a host round-trip; the shim mirrors that surface so
+/// `runtime::pjrt`'s session chaining compiles against both.
+pub enum ExecInput<'a> {
+    Literal(&'a Literal),
+    Buffer(&'a PjRtBuffer),
 }
 
 /// Compiled executable handle (never constructible in the shim).
@@ -76,6 +94,13 @@ impl PjRtLoadedExecutable {
         &self,
         _args: &[T],
     ) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        Err(unavailable())
+    }
+
+    /// Execute with mixed host/device inputs ([`ExecInput`]): literals
+    /// are transferred, buffers are consumed in place. This is the
+    /// entry point the device-resident session loop chains through.
+    pub fn execute_inputs(&self, _args: &[ExecInput]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
         Err(unavailable())
     }
 }

@@ -15,13 +15,16 @@ use super::shard::ShardMsg;
 use super::Response;
 use anyhow::Result;
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::sync::mpsc::{Receiver, Sender};
 use std::time::{Duration, Instant};
 
 /// One queued product request.
 pub struct Job {
     pub matrix_id: u64,
-    pub x: Vec<f32>,
+    /// Shared payload: enqueue is a refcount bump, never a vector copy
+    /// — the client's buffer IS the buffer the dispatch reads.
+    pub x: Arc<[f32]>,
     /// Submission time — service latency is measured end-to-end from
     /// here, so queue wait and admission-window wait are included.
     pub enqueued: Instant,
@@ -87,7 +90,7 @@ mod tests {
 
     fn job(matrix_id: u64) -> Job {
         let (reply, _rx) = channel();
-        Job { matrix_id, x: vec![1.0], enqueued: Instant::now(), reply }
+        Job { matrix_id, x: vec![1.0].into(), enqueued: Instant::now(), reply }
     }
 
     #[test]

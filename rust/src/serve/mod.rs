@@ -33,6 +33,18 @@
 //!   registered matrices when the versioned router hot-swaps. A pool
 //!   started with [`Pool::start`] routes through the same handle but
 //!   never swaps it — and is bit-identical to the pre-loop engine.
+//! * **Iterative sessions** ([`Pool::open_session`]): the fast path for
+//!   chained solvers (CG, power iteration) where each product's output
+//!   is the next input. A [`Session`] pins one matrix and keeps the
+//!   vector resident across [`Session::step`] calls — device-side via
+//!   buffer-identity chaining on PJRT, host-side reuse on native — so a
+//!   pure step crosses the host/dispatch boundary zero times; explicit
+//!   [`Session::write`]/[`Session::read`] are the escape hatches and
+//!   [`Session::power_step`] rides the fused x' = A x / ||A x||
+//!   artifact when one is compiled. Session traffic bypasses the
+//!   coalescing window but still counts requests/dispatches/launches,
+//!   still feeds the closed loop's observations, and defers policy
+//!   migrations to session close (DESIGN.md §9).
 //!
 //! ```no_run
 //! # use auto_spmv::serve::{BackendSpec, Pool, PoolConfig};
@@ -54,7 +66,7 @@ pub mod shard;
 pub mod telemetry;
 
 pub use backend::BackendSpec;
-pub use pool::{Pool, PoolConfig, PoolStats};
+pub use pool::{Pool, PoolConfig, PoolStats, Session};
 pub use telemetry::{MatrixStats, Telemetry};
 
 use crate::sparse::Format;

@@ -26,8 +26,8 @@ use crate::online::{DriftStatus, Online, SwapRouter};
 use crate::sparse::convert::ConvertParams;
 use crate::sparse::{Coo, Format};
 use anyhow::{anyhow, Result};
-use std::sync::atomic::Ordering;
-use std::sync::mpsc::{channel, Receiver};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -111,6 +111,19 @@ pub struct PoolStats {
     pub observed_requests: Option<u64>,
     /// Drift detector status (None when frozen).
     pub drift: Option<DriftStatus>,
+    /// Iterative sessions currently open across all shards.
+    pub active_sessions: usize,
+    /// Sessions opened over the pool's lifetime.
+    pub sessions_opened: u64,
+    /// Products served as session steps (subset of `requests`).
+    pub session_steps: u64,
+    /// Vector bytes that crossed the dispatch boundary (x in + y out on
+    /// the per-request path; explicit session writes/reads).
+    pub marshalled_bytes: u64,
+    /// Vector bytes session steps kept resident instead of moving.
+    pub elided_bytes: u64,
+    /// Host round-trips session steps elided (one per pure step).
+    pub round_trips_elided: u64,
     pub per_matrix: Vec<MatrixStats>,
 }
 
@@ -139,6 +152,29 @@ impl PoolStats {
         }
     }
 
+    /// Marshalled vector bytes per served request — the round-trip cost
+    /// in one number. The per-request path pays `4*(n_cols + n_rows)`
+    /// for every product; session traffic drives this toward the
+    /// amortized write/read cost (0 when nothing served yet).
+    pub fn marshalled_bytes_per_request(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.marshalled_bytes as f64 / self.requests as f64
+        }
+    }
+
+    /// Fraction of total vector traffic the session fast path elided
+    /// (0 when nothing was served or no sessions ran).
+    pub fn elision_ratio(&self) -> f64 {
+        let total = self.marshalled_bytes + self.elided_bytes;
+        if total == 0 {
+            0.0
+        } else {
+            self.elided_bytes as f64 / total as f64
+        }
+    }
+
     /// Summed service time across all served requests.
     pub fn total_service(&self) -> Duration {
         self.per_matrix.iter().map(|m| m.total_latency).sum()
@@ -156,6 +192,8 @@ pub struct Pool {
     telemetry: Arc<Telemetry>,
     router: Arc<SwapRouter>,
     online: Option<Arc<Online>>,
+    /// Monotone session-id allocator (pool-unique, never reused).
+    session_ids: AtomicU64,
 }
 
 impl Pool {
@@ -199,7 +237,7 @@ impl Pool {
                 )
             })
             .collect();
-        Pool { shards, telemetry, router, online }
+        Pool { shards, telemetry, router, online, session_ids: AtomicU64::new(0) }
     }
 
     pub fn workers(&self) -> usize {
@@ -235,7 +273,7 @@ impl Pool {
     }
 
     /// Submit a product request and block for the response.
-    pub fn product(&self, matrix_id: u64, x: Vec<f32>) -> Result<Response> {
+    pub fn product(&self, matrix_id: u64, x: impl Into<Arc<[f32]>>) -> Result<Response> {
         self.product_async(matrix_id, x)?
             .recv()
             .map_err(|_| anyhow!("serving pool dropped request"))?
@@ -243,14 +281,43 @@ impl Pool {
 
     /// Submit without waiting; the receiver yields the response later.
     /// Pipelining requests this way is also what fills the admission
-    /// queue enough for coalescing to kick in.
-    pub fn product_async(&self, matrix_id: u64, x: Vec<f32>) -> Result<Receiver<Result<Response>>> {
+    /// queue enough for coalescing to kick in. The payload is a shared
+    /// `Arc<[f32]>` (a `Vec<f32>` converts with one allocation move):
+    /// enqueueing is a refcount bump, and the dispatch reads the
+    /// client's buffer directly — no copy anywhere on the request path.
+    pub fn product_async(
+        &self,
+        matrix_id: u64,
+        x: impl Into<Arc<[f32]>>,
+    ) -> Result<Receiver<Result<Response>>> {
         let (reply, rx) = channel();
         self.shard_of(matrix_id)
             .tx
-            .send(ShardMsg::Product(Job { matrix_id, x, enqueued: Instant::now(), reply }))
+            .send(ShardMsg::Product(Job {
+                matrix_id,
+                x: x.into(),
+                enqueued: Instant::now(),
+                reply,
+            }))
             .map_err(|_| anyhow!("serving pool stopped"))?;
         Ok(rx)
+    }
+
+    /// Open a device-resident iterative session pinned to a registered
+    /// square matrix. The session serves chained products ([`Session::step`])
+    /// without any host round-trip per iteration; while it is open the
+    /// matrix's conversion is pinned and policy migrations defer to the
+    /// session boundary. Fails for unknown or non-square matrices.
+    pub fn open_session(&self, matrix_id: u64) -> Result<Session> {
+        let shard = self.shard_of(matrix_id);
+        let id = self.session_ids.fetch_add(1, Ordering::Relaxed) + 1;
+        let (ack, rx) = channel();
+        shard
+            .tx
+            .send(ShardMsg::SessionOpen { session: id, matrix_id, ack })
+            .map_err(|_| anyhow!("serving pool stopped"))?;
+        let n = rx.recv().map_err(|_| anyhow!("serving pool dropped session open"))??;
+        Ok(Session { tx: shard.tx.clone(), id, matrix_id, n })
     }
 
     /// Snapshot pool-wide counters, per-matrix latency quantiles, the
@@ -259,6 +326,7 @@ impl Pool {
     pub fn stats(&self) -> Result<PoolStats> {
         let mut registered = 0;
         let mut cached = 0;
+        let mut active_sessions = 0;
         let mut backends = Vec::with_capacity(self.shards.len());
         for shard in &self.shards {
             let (tx, rx) = channel();
@@ -266,6 +334,7 @@ impl Pool {
             let status = rx.recv().map_err(|_| anyhow!("serving pool dropped status"))?;
             registered += status.registered;
             cached += status.cached;
+            active_sessions += status.active_sessions;
             backends.push(status.backend);
         }
         let per_matrix = self.telemetry.snapshot();
@@ -294,8 +363,106 @@ impl Pool {
             ucb_routes: self.online.as_ref().map_or(0, |o| o.ucb_routes()),
             observed_requests: self.online.as_ref().map(|o| o.observed_requests()),
             drift: self.online.as_ref().map(|o| o.drift_status()),
+            active_sessions,
+            sessions_opened: t.sessions_opened.load(Ordering::Relaxed),
+            session_steps: t.session_steps.load(Ordering::Relaxed),
+            marshalled_bytes: t.marshalled_bytes.load(Ordering::Relaxed),
+            elided_bytes: t.elided_bytes.load(Ordering::Relaxed),
+            round_trips_elided: t.round_trips_elided.load(Ordering::Relaxed),
             per_matrix,
         })
+    }
+}
+
+/// A device-resident iterative session over one pinned (square)
+/// matrix, created by [`Pool::open_session`].
+///
+/// Lifecycle: `write(x0)` installs the vector (the one paid crossing),
+/// then every [`Session::step`] computes y = A x and feeds y straight
+/// back as the next x without surfacing it — on the PJRT backend the
+/// vector literally stays on the device (buffer-identity chaining), on
+/// native it is reused host-side without crossing the pool's
+/// queue/reply boundary. [`Session::read`] copies the current vector
+/// out. [`Session::power_step`] runs the normalized x' = A x / ||A x||
+/// step — fused in ONE kernel when a power artifact is compiled for the
+/// matrix.
+///
+/// Dropping the handle closes the session; any policy migration that
+/// was deferred while the matrix was pinned is applied then.
+pub struct Session {
+    tx: Sender<ShardMsg>,
+    id: u64,
+    matrix_id: u64,
+    n: usize,
+}
+
+impl Session {
+    pub fn matrix_id(&self) -> u64 {
+        self.matrix_id
+    }
+
+    /// The pinned matrix's (square) dimension.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Install the session's vector (host -> session crossing).
+    pub fn write(&self, x: impl Into<Arc<[f32]>>) -> Result<()> {
+        let (ack, rx) = channel();
+        self.tx
+            .send(ShardMsg::SessionWrite { session: self.id, x: x.into(), ack })
+            .map_err(|_| anyhow!("serving pool stopped"))?;
+        rx.recv().map_err(|_| anyhow!("serving pool dropped session write"))?
+    }
+
+    /// One chained product: the previous y becomes the next x with no
+    /// host round-trip.
+    pub fn step(&self) -> Result<()> {
+        self.step_n(1)
+    }
+
+    /// `steps` chained products in one shard message.
+    pub fn step_n(&self, steps: u64) -> Result<()> {
+        self.send_steps(steps, false)
+    }
+
+    /// One normalized power-iteration step x' = A x / ||A x|| (fused
+    /// on-device when the inventory has a power artifact for the
+    /// matrix; otherwise a plain step plus a host-side scale).
+    pub fn power_step(&self) -> Result<()> {
+        self.power_step_n(1)
+    }
+
+    /// `steps` normalized power steps in one shard message.
+    pub fn power_step_n(&self, steps: u64) -> Result<()> {
+        self.send_steps(steps, true)
+    }
+
+    fn send_steps(&self, steps: u64, normalize: bool) -> Result<()> {
+        if steps == 0 {
+            return Ok(());
+        }
+        let (ack, rx) = channel();
+        self.tx
+            .send(ShardMsg::SessionStep { session: self.id, steps, normalize, ack })
+            .map_err(|_| anyhow!("serving pool stopped"))?;
+        rx.recv().map_err(|_| anyhow!("serving pool dropped session step"))?
+    }
+
+    /// Copy the session's current vector out (session -> host crossing).
+    pub fn read(&self) -> Result<Vec<f32>> {
+        let (ack, rx) = channel();
+        self.tx
+            .send(ShardMsg::SessionRead { session: self.id, ack })
+            .map_err(|_| anyhow!("serving pool stopped"))?;
+        rx.recv().map_err(|_| anyhow!("serving pool dropped session read"))?
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        // fire-and-forget: a stopped pool has nothing left to close
+        let _ = self.tx.send(ShardMsg::SessionClose { session: self.id });
     }
 }
 
@@ -557,6 +724,148 @@ mod tests {
         for m in &stats.per_matrix {
             assert!(m.format.is_some());
         }
+    }
+
+    /// Reference chain: k repeated products x <- A x on the CSR source
+    /// (all formats are bit-identical per product, so this is THE
+    /// expected value for any serving path).
+    fn chain(csr: &crate::sparse::Csr, x0: &[f32], k: usize, normalize: bool) -> Vec<f32> {
+        let mut x = x0.to_vec();
+        for _ in 0..k {
+            let mut y = csr.spmv_alloc(&x);
+            if normalize {
+                let norm = y.iter().map(|v| v * v).sum::<f32>().sqrt();
+                for v in &mut y {
+                    *v /= norm;
+                }
+            }
+            x = y;
+        }
+        x
+    }
+
+    #[test]
+    fn session_chain_is_bit_identical_and_elides_round_trips() {
+        let pool = pool_with(test_router(), 1, 0);
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        let csr = coo_to_csr(&coo);
+        let n = csr.n_cols;
+        assert_eq!(csr.n_rows, n, "corpus matrix must be square for a session");
+        pool.register(1, coo, 10_000).unwrap();
+
+        let session = pool.open_session(1).unwrap();
+        assert_eq!(session.n(), n);
+        assert_eq!(session.matrix_id(), 1);
+        // stepping before the first write is an explicit error
+        let err = session.step().unwrap_err();
+        assert!(format!("{err}").contains("write"), "{err}");
+
+        let x0 = input(n, 3);
+        session.write(x0.clone()).unwrap();
+        session.step_n(5).unwrap();
+        let y = session.read().unwrap();
+        assert_eq!(y, chain(&csr, &x0, 5, false), "session chain must be bit-identical");
+
+        let stats = pool.stats().unwrap();
+        assert_eq!(stats.session_steps, 5);
+        assert_eq!(stats.sessions_opened, 1);
+        assert_eq!(stats.active_sessions, 1);
+        assert_eq!(stats.requests, 5, "each step is a request");
+        assert_eq!(stats.launches, 5, "sessions save bytes, not launches");
+        assert_eq!(stats.round_trips_elided, 5, "every pure step elides one round-trip");
+        assert_eq!(stats.elided_bytes, 5 * 8 * n as u64);
+        // one write in + one read out are the only boundary crossings
+        assert_eq!(stats.marshalled_bytes, 2 * 4 * n as u64);
+        assert!(stats.elision_ratio() > 0.8, "{}", stats.elision_ratio());
+
+        // per-request path for comparison: every product pays x in + y out
+        let resp = pool.product(1, input(n, 9)).unwrap();
+        assert_eq!(resp.y, csr.spmv_alloc(&input(n, 9)));
+        let stats = pool.stats().unwrap();
+        assert_eq!(stats.marshalled_bytes, 2 * 4 * n as u64 + 8 * n as u64);
+
+        drop(session);
+        let stats = pool.stats().unwrap();
+        assert_eq!(stats.active_sessions, 0, "drop closes the session");
+        assert_eq!(stats.sessions_opened, 1);
+    }
+
+    #[test]
+    fn session_power_steps_match_host_normalized_chain() {
+        let pool = pool_with(test_router(), 1, 0);
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        let csr = coo_to_csr(&coo);
+        let n = csr.n_cols;
+        pool.register(4, coo, 10_000).unwrap();
+        let session = pool.open_session(4).unwrap();
+        let x0 = vec![1.0f32; n];
+        session.write(x0.clone()).unwrap();
+        session.power_step_n(4).unwrap();
+        session.power_step().unwrap();
+        let y = session.read().unwrap();
+        assert_eq!(y, chain(&csr, &x0, 5, true), "normalized steps must be bit-identical");
+        let norm: f32 = y.iter().map(|v| v * v).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-3, "power steps keep the vector normalized: {norm}");
+    }
+
+    #[test]
+    fn session_survives_cache_eviction_pressure() {
+        // capacity-1 cache, three matrices: products on the others keep
+        // evicting the session matrix's LRU entry, but the session's
+        // pinned Rc clone must keep serving bit-identically throughout.
+        let pool = Pool::start(
+            test_router(),
+            BackendSpec::Native,
+            PoolConfig { workers: 1, cache_capacity: 1, ..Default::default() },
+        );
+        let names = ["rim", "eu-2005", "shar_te2-b3"];
+        let mats: Vec<Coo> = names.iter().map(|n| gen::by_name(n).unwrap().generate(1)).collect();
+        let csrs: Vec<_> = mats.iter().map(coo_to_csr).collect();
+        for (id, coo) in mats.iter().enumerate() {
+            pool.register(id as u64, coo.clone(), 10_000).unwrap();
+        }
+        let session = pool.open_session(0).unwrap();
+        let x0 = input(csrs[0].n_cols, 1);
+        session.write(x0.clone()).unwrap();
+        for round in 0..3 {
+            session.step().unwrap();
+            // hammer the other matrices through the 1-slot cache
+            for id in [1usize, 2] {
+                let x = input(csrs[id].n_cols, round);
+                let resp = pool.product(id as u64, x.clone()).unwrap();
+                assert_eq!(resp.y, csrs[id].spmv_alloc(&x));
+            }
+        }
+        let y = session.read().unwrap();
+        assert_eq!(
+            y,
+            chain(&csrs[0], &x0, 3, false),
+            "eviction pressure must never touch an open session's pinned conversion"
+        );
+        let stats = pool.stats().unwrap();
+        assert!(stats.evictions > 0, "3 matrices in 1 slot must evict: {stats:?}");
+    }
+
+    #[test]
+    fn session_on_unknown_or_nonsquare_matrix_is_an_error() {
+        let pool = pool_with(test_router(), 1, 0);
+        let err = pool.open_session(99).unwrap_err();
+        assert!(format!("{err}").contains("unknown matrix"), "{err}");
+        let mut rect = Coo::new(3, 4);
+        rect.push(0, 1, 2.0);
+        rect.push(2, 3, -1.0);
+        pool.register(5, rect, 10).unwrap();
+        let err = pool.open_session(5).unwrap_err();
+        assert!(format!("{err}").contains("square"), "{err}");
+        // a bad write length errors without killing the session
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        let n = coo.n_cols;
+        pool.register(6, coo, 10).unwrap();
+        let session = pool.open_session(6).unwrap();
+        assert!(session.write(vec![1.0, 2.0]).is_err());
+        session.write(vec![0.5; n]).unwrap();
+        session.step().unwrap();
+        assert_eq!(session.read().unwrap().len(), n);
     }
 
     #[test]

@@ -34,21 +34,38 @@ use crate::coordinator::compile_time::CompileChoice;
 use crate::features::Features;
 use crate::gpusim::{simulate, GpuArch, KernelProfile, Measurement};
 use crate::online::{JointDecision, Observation, Online, Policy, RouteChoice, SwapRouter};
-use crate::runtime::pjrt::{PreparedSpmm, PreparedSpmv};
+use crate::runtime::pjrt::{PreparedSession, PreparedSpmm, PreparedSpmv, SessionVec};
 use crate::sparse::convert::{self, AnyFormat, ConvertParams};
 use crate::sparse::{Coo, Csr, Format, SpMv};
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// Messages a shard understands.
+/// Messages a shard understands. Session messages bypass the
+/// coalescing window (they are handled directly by the message loop),
+/// but one that arrives while a batch is draining lands in the backlog
+/// and is handled right after it — the same at-most-one-window delay a
+/// registration sees.
 pub(crate) enum ShardMsg {
     Register { id: u64, coo: Coo, iterations_hint: u64, ack: Sender<Result<Format>> },
     Product(Job),
+    /// Open iterative session `session` pinned to `matrix_id`; acks
+    /// the (square) dimension n.
+    SessionOpen { session: u64, matrix_id: u64, ack: Sender<Result<usize>> },
+    /// Install the session's vector (host -> session boundary crossing).
+    SessionWrite { session: u64, x: Arc<[f32]>, ack: Sender<Result<()>> },
+    /// Run `steps` chained products, feeding each y back as the next x
+    /// without surfacing it; `normalize` steps compute x' = A x / ||A x||.
+    SessionStep { session: u64, steps: u64, normalize: bool, ack: Sender<Result<()>> },
+    /// Copy the session's current vector out (session -> host crossing).
+    SessionRead { session: u64, ack: Sender<Result<Vec<f32>>> },
+    /// Fire-and-forget close (sent from the session handle's Drop).
+    SessionClose { session: u64 },
     Status(Sender<ShardStatus>),
     Shutdown,
 }
@@ -58,6 +75,8 @@ pub(crate) enum ShardMsg {
 pub struct ShardStatus {
     pub registered: usize,
     pub cached: usize,
+    /// Iterative sessions currently open on this shard.
+    pub active_sessions: usize,
     /// Backend actually built ("pjrt" or "native") — a shard degrades
     /// to native when PJRT init fails, and reports say so.
     pub backend: &'static str,
@@ -178,6 +197,34 @@ struct CachedMatrix {
     model: Measurement,
 }
 
+/// An open iterative session (tracked shard-side; the client holds a
+/// [`super::Session`] handle). The vector lives here between steps —
+/// device-resident on PJRT whenever the bucket chains, host-resident on
+/// native — so pure steps cross the pool boundary zero times.
+struct SessionState {
+    matrix_id: u64,
+    /// The joint (format, knob) decision the session pinned at open.
+    /// Policy hot-swaps DEFER for a pinned matrix: the migration lands
+    /// when its last session closes. All formats produce bit-identical
+    /// products, so deferral never changes results — it keeps the
+    /// pinned conversion (and PJRT chaining state) stable.
+    decision: JointDecision,
+    /// Owning handle on the pinned conversion. The LRU may still evict
+    /// the entry under capacity pressure (`insert_protected` falls back
+    /// to LRU order when everything is protected); this clone is what
+    /// actually guarantees the session keeps serving from the same
+    /// converted matrix regardless.
+    pinned: Rc<CachedMatrix>,
+    /// PJRT chaining state (session-lifetime marshalled literals);
+    /// `None` on the native backend.
+    prepared: Option<PreparedSession>,
+    /// Current vector, or `None` before the first `write` (and after a
+    /// failed step, which consumes it).
+    vec: Option<SessionVec>,
+    /// Square dimension: x and y lengths alike.
+    n: usize,
+}
+
 fn worker_loop(
     rx: Receiver<ShardMsg>,
     router: Arc<SwapRouter>,
@@ -187,7 +234,8 @@ fn worker_loop(
     telemetry: Arc<Telemetry>,
 ) {
     let mut registry: HashMap<u64, Registered> = HashMap::new();
-    let mut cache: Lru<CacheKey, CachedMatrix> = Lru::new(cfg.cache_capacity);
+    let mut cache: Lru<CacheKey, Rc<CachedMatrix>> = Lru::new(cfg.cache_capacity);
+    let mut sessions: HashMap<u64, SessionState> = HashMap::new();
     let mut backlog: VecDeque<ShardMsg> = VecDeque::new();
     let (mut cur_policy, mut cur_version) = router.load();
     loop {
@@ -201,6 +249,7 @@ fn worker_loop(
         // Hot-swap check: one atomic load per message. On an upgrade,
         // reload the policy and re-decide every registered matrix so it
         // can migrate to the (format, knob) pair the new model prefers.
+        // Matrices pinned by an open session defer to session close.
         if router.version() != cur_version {
             (cur_policy, cur_version) = router.load();
             re_decide_all(
@@ -210,6 +259,7 @@ fn worker_loop(
                 &telemetry,
                 &mut registry,
                 &mut cache,
+                &sessions,
             );
         }
         match msg {
@@ -218,6 +268,7 @@ fn worker_loop(
                 let _ = reply.send(ShardStatus {
                     registered: registry.len(),
                     cached: cache.len(),
+                    active_sessions: sessions.len(),
                     backend: backend.name(),
                 });
             }
@@ -244,10 +295,60 @@ fn worker_loop(
                         &cfg,
                         &telemetry,
                         &registry,
+                        &sessions,
                         &mut cache,
                         id,
                         jobs,
                     );
+                }
+            }
+            ShardMsg::SessionOpen { session, matrix_id, ack } => {
+                let result = do_session_open(
+                    &mut backend,
+                    &cfg,
+                    &telemetry,
+                    &registry,
+                    &mut cache,
+                    &mut sessions,
+                    session,
+                    matrix_id,
+                );
+                let _ = ack.send(result);
+            }
+            ShardMsg::SessionWrite { session, x, ack } => {
+                let _ = ack.send(do_session_write(&telemetry, &mut sessions, session, x));
+            }
+            ShardMsg::SessionStep { session, steps, normalize, ack } => {
+                let _ = ack.send(do_session_step(
+                    &mut backend,
+                    &online,
+                    &telemetry,
+                    &registry,
+                    &mut sessions,
+                    session,
+                    steps,
+                    normalize,
+                ));
+            }
+            ShardMsg::SessionRead { session, ack } => {
+                let _ = ack.send(do_session_read(&mut backend, &telemetry, &mut sessions, session));
+            }
+            ShardMsg::SessionClose { session } => {
+                if let Some(closed) = sessions.remove(&session) {
+                    // Last session on this matrix gone: apply whatever
+                    // policy change was deferred while it was pinned
+                    // (no-op when the decision is unchanged).
+                    if !sessions.values().any(|s| s.matrix_id == closed.matrix_id) {
+                        re_decide_all(
+                            cur_policy.as_ref(),
+                            &mut backend,
+                            &cfg,
+                            &telemetry,
+                            &mut registry,
+                            &mut cache,
+                            &sessions,
+                        );
+                    }
                 }
             }
         }
@@ -327,7 +428,7 @@ fn do_register(
     cfg: &ShardCfg,
     telemetry: &Telemetry,
     registry: &mut HashMap<u64, Registered>,
-    cache: &mut Lru<CacheKey, CachedMatrix>,
+    cache: &mut Lru<CacheKey, Rc<CachedMatrix>>,
     id: u64,
     coo: Coo,
     iterations_hint: u64,
@@ -347,7 +448,7 @@ fn do_register(
     // Build (convert + model + marshal) BEFORE any telemetry side
     // effects, so a failed registration leaves no phantom stats row or
     // counter bump.
-    let entry = build_cached(backend, &csr, joint, cfg)?;
+    let entry = Rc::new(build_cached(backend, &csr, joint, cfg)?);
 
     // Re-registration replaces the matrix wholesale: every per-variant
     // entry of the old matrix must go, or a later explored/migrated
@@ -385,16 +486,24 @@ fn do_register(
 /// (`migrations` for format changes, `knob_migrations` for knob
 /// changes — a joint change counts once in each). A failed rebuild
 /// keeps the old decision — migration must never take a serving matrix
-/// down.
+/// down. A matrix pinned by an open session is SKIPPED: its migration
+/// is deferred to session close (the close handler re-runs this),
+/// keeping the session's conversion and chaining state stable — safe
+/// because every format's product is bit-identical anyway.
+#[allow(clippy::too_many_arguments)] // worker-local state is deliberately split for borrow granularity
 fn re_decide_all(
     policy: &Policy,
     backend: &mut Backend,
     cfg: &ShardCfg,
     telemetry: &Telemetry,
     registry: &mut HashMap<u64, Registered>,
-    cache: &mut Lru<CacheKey, CachedMatrix>,
+    cache: &mut Lru<CacheKey, Rc<CachedMatrix>>,
+    sessions: &HashMap<u64, SessionState>,
 ) {
     for (id, reg) in registry.iter_mut() {
+        if sessions.values().any(|s| s.matrix_id == *id) {
+            continue; // pinned: defer to session boundary
+        }
         let decision =
             policy.router.decide_with_features(reg.features, Duration::ZERO, reg.iterations_hint);
         let (format, converted) = if decision.convert {
@@ -421,7 +530,7 @@ fn re_decide_all(
             match build_cached(backend, &reg.csr, joint, cfg) {
                 Ok(entry) => {
                     let model = entry.model;
-                    if cache.insert(key, entry).is_some() {
+                    if cache.insert(key, Rc::new(entry)).is_some() {
                         telemetry.totals.evictions.fetch_add(1, Ordering::Relaxed);
                     }
                     Some(model)
@@ -459,12 +568,14 @@ fn re_decide_all(
 /// explored-path misses are counterfactual builds and a failure is
 /// logged here (the caller falls back to the chosen decision instead
 /// of failing clients).
+#[allow(clippy::too_many_arguments)] // worker-local state is deliberately split for borrow granularity
 fn ensure_cached(
     backend: &mut Backend,
     cfg: &ShardCfg,
     telemetry: &Telemetry,
     registry: &HashMap<u64, Registered>,
-    cache: &mut Lru<CacheKey, CachedMatrix>,
+    sessions: &HashMap<u64, SessionState>,
+    cache: &mut Lru<CacheKey, Rc<CachedMatrix>>,
     reg: &Registered,
     id: u64,
     route: RouteChoice,
@@ -482,13 +593,17 @@ fn ensure_cached(
             // arm space is ~48 keys per matrix, so letting them evict
             // by plain recency would thrash every registered matrix's
             // CHOSEN serving entry out of a default-sized cache.
-            // Protect the chosen keys; scratch evicts scratch first.
+            // Protect the chosen keys AND any key an open session is
+            // pinned to (residency; the session's own Rc clone is what
+            // guarantees correctness even if capacity forces it out) —
+            // scratch evicts scratch first.
             let evicted = if route.explored {
-                cache.insert_protected(key, entry, |k| {
+                cache.insert_protected(key, Rc::new(entry), |k| {
                     registry.get(&k.id).is_some_and(|r| cache_key(k.id, r.decision()) == *k)
+                        || sessions.values().any(|s| cache_key(s.matrix_id, s.decision) == *k)
                 })
             } else {
-                cache.insert(key, entry)
+                cache.insert(key, Rc::new(entry))
             };
             if evicted.is_some() {
                 telemetry.totals.evictions.fetch_add(1, Ordering::Relaxed);
@@ -517,7 +632,8 @@ fn execute_group(
     cfg: &ShardCfg,
     telemetry: &Telemetry,
     registry: &HashMap<u64, Registered>,
-    cache: &mut Lru<CacheKey, CachedMatrix>,
+    sessions: &HashMap<u64, SessionState>,
+    cache: &mut Lru<CacheKey, Rc<CachedMatrix>>,
     id: u64,
     jobs: Vec<Job>,
 ) {
@@ -531,7 +647,7 @@ fn execute_group(
     // Validate lengths up front: malformed requests error individually
     // and never poison the batch.
     let n_cols = reg.csr.n_cols;
-    let mut xs: Vec<Vec<f32>> = Vec::with_capacity(jobs.len());
+    let mut xs: Vec<Arc<[f32]>> = Vec::with_capacity(jobs.len());
     let mut clients = Vec::with_capacity(jobs.len());
     for job in jobs {
         if job.x.len() != n_cols {
@@ -562,12 +678,15 @@ fn execute_group(
     // exploration must never cost a client its answer. touch + mru
     // (instead of two `get`s) keeps the hit path at one scan.
     if route.explored
-        && ensure_cached(backend, cfg, telemetry, registry, cache, reg, id, route).is_err()
+        && ensure_cached(backend, cfg, telemetry, registry, sessions, cache, reg, id, route)
+            .is_err()
     {
         route = RouteChoice::chosen(reg.decision());
     }
     if !route.explored {
-        if let Err(e) = ensure_cached(backend, cfg, telemetry, registry, cache, reg, id, route) {
+        if let Err(e) =
+            ensure_cached(backend, cfg, telemetry, registry, sessions, cache, reg, id, route)
+        {
             let msg = format!("convert matrix {id} to {}: {e:#}", route.decision);
             for (_, reply) in clients {
                 let _ = reply.send(Err(anyhow!("{msg}")));
@@ -588,9 +707,13 @@ fn execute_group(
     // executes one launch per bucket chunk; the per-vector prepared
     // path is the fallback at one launch per request.
     let batch_size = xs.len();
+    // Borrowed views over the shared payloads: the dispatch reads the
+    // clients' buffers directly — no per-request copy anywhere between
+    // enqueue and kernel marshalling.
+    let views: Vec<&[f32]> = xs.iter().map(|x| x.as_ref()).collect();
     let exec_start = Instant::now();
     let (result, launches, spmm_path): (Result<Vec<Vec<f32>>>, u64, bool) = match backend {
-        Backend::Native => (Ok(cached.matrix.as_spmv().spmm(&xs)), 1, true),
+        Backend::Native => (Ok(cached.matrix.as_spmv().spmm(&views)), 1, true),
         Backend::Pjrt(engine) => {
             // a lone request rides the leaner per-vector artifact; the
             // bucket-padded SpMM launch only pays off with a batch
@@ -600,12 +723,12 @@ fn execute_group(
                 .filter(|_| batch_size > 1 || cached.prepared.is_none());
             if let Some(spmm) = use_spmm {
                 (
-                    engine.spmm_prepared(spmm, &xs),
+                    engine.spmm_prepared(spmm, &views),
                     spmm.launches_for(batch_size) as u64,
                     true,
                 )
             } else if let Some(prep) = &cached.prepared {
-                (engine.spmv_batch_prepared(prep, &xs), batch_size as u64, false)
+                (engine.spmv_batch_prepared(prep, &views), batch_size as u64, false)
             } else {
                 (
                     xs.iter()
@@ -638,6 +761,12 @@ fn execute_group(
                 totals.spmm_dispatches.fetch_add(1, Ordering::Relaxed);
             }
             totals.requests.fetch_add(batch_size as u64, Ordering::Relaxed);
+            // Per-request vector traffic across the dispatch boundary:
+            // x in, y out — what an iterative session elides per step.
+            totals.marshalled_bytes.fetch_add(
+                batch_size as u64 * 4 * (n_cols + reg.csr.n_rows) as u64,
+                Ordering::Relaxed,
+            );
             totals.max_batch.fetch_max(batch_size as u64, Ordering::Relaxed);
             if batch_size > 1 {
                 totals.coalesced_batches.fetch_add(1, Ordering::Relaxed);
@@ -683,4 +812,193 @@ fn execute_group(
             }
         }
     }
+}
+
+/// Open an iterative session pinned to a registered (square) matrix:
+/// make the CHOSEN conversion resident, clone its `Rc` into the session
+/// (the eviction-proof handle), and on PJRT marshal the session's
+/// chaining literals — per-step SpMV plus the fused power artifact when
+/// one fits. Sessions always pin the chosen decision; they never
+/// explore (a mid-flight arm change would invalidate the device chain).
+#[allow(clippy::too_many_arguments)] // worker-local state is deliberately split for borrow granularity
+fn do_session_open(
+    backend: &mut Backend,
+    cfg: &ShardCfg,
+    telemetry: &Telemetry,
+    registry: &HashMap<u64, Registered>,
+    cache: &mut Lru<CacheKey, Rc<CachedMatrix>>,
+    sessions: &mut HashMap<u64, SessionState>,
+    session: u64,
+    matrix_id: u64,
+) -> Result<usize> {
+    let reg =
+        registry.get(&matrix_id).ok_or_else(|| anyhow!("unknown matrix id {matrix_id}"))?;
+    let n = reg.csr.n_rows;
+    if n != reg.csr.n_cols {
+        bail!(
+            "iterative session requires a square matrix ({}x{})",
+            reg.csr.n_rows,
+            reg.csr.n_cols
+        );
+    }
+    let route = RouteChoice::chosen(reg.decision());
+    ensure_cached(backend, cfg, telemetry, registry, sessions, cache, reg, matrix_id, route)?;
+    let key = cache_key(matrix_id, route.decision);
+    let pinned = match cache.mru() {
+        Some((k, entry)) if *k == key => Rc::clone(entry),
+        _ => unreachable!("ensure_cached just made {key:?} the MRU entry"),
+    };
+    let prepared = match backend {
+        Backend::Pjrt(engine) => {
+            Some(engine.prepare_session(&pinned.matrix, Some(route.decision.choice.knobs()))?)
+        }
+        Backend::Native => None,
+    };
+    telemetry.totals.sessions_opened.fetch_add(1, Ordering::Relaxed);
+    sessions.insert(
+        session,
+        SessionState { matrix_id, decision: route.decision, pinned, prepared, vec: None, n },
+    );
+    Ok(n)
+}
+
+/// Install the session's vector: the one host->session crossing a
+/// write pays for, charged to `marshalled_bytes`.
+fn do_session_write(
+    telemetry: &Telemetry,
+    sessions: &mut HashMap<u64, SessionState>,
+    session: u64,
+    x: Arc<[f32]>,
+) -> Result<()> {
+    let state =
+        sessions.get_mut(&session).ok_or_else(|| anyhow!("unknown session {session}"))?;
+    if x.len() != state.n {
+        bail!("x length {} != n {}", x.len(), state.n);
+    }
+    telemetry.totals.marshalled_bytes.fetch_add(4 * state.n as u64, Ordering::Relaxed);
+    state.vec = Some(SessionVec::Host(x.to_vec()));
+    Ok(())
+}
+
+/// Run `steps` chained products on a session. Each step counts exactly
+/// like a per-request product in the launch ledger (+1 request, +1
+/// dispatch, +1 launch) — the session's win is the VECTOR ledger: a
+/// pure chained step moves zero bytes across the dispatch boundary and
+/// charges `elided_bytes`/`round_trips_elided` with what the
+/// per-request path would have paid; a step that had to bounce through
+/// the host (non-square PJRT bucket, or host-side normalize without a
+/// fused artifact) charges `marshalled_bytes` instead. The whole run
+/// feeds ONE batch-weighted [`Observation`] so retrain cadence and
+/// drift detection see session traffic. A failed step consumes the
+/// vector: the client must `write` again before continuing.
+#[allow(clippy::too_many_arguments)] // worker-local state is deliberately split for borrow granularity
+fn do_session_step(
+    backend: &mut Backend,
+    online: &Option<Arc<Online>>,
+    telemetry: &Telemetry,
+    registry: &HashMap<u64, Registered>,
+    sessions: &mut HashMap<u64, SessionState>,
+    session: u64,
+    steps: u64,
+    normalize: bool,
+) -> Result<()> {
+    let state =
+        sessions.get_mut(&session).ok_or_else(|| anyhow!("unknown session {session}"))?;
+    if state.vec.is_none() {
+        bail!("session vector unset: call write() first");
+    }
+    let reg = registry.get(&state.matrix_id);
+    let model = state.pinned.model;
+    let n = state.n as u64;
+    let totals = &telemetry.totals;
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        let step_start = Instant::now();
+        let cur = state.vec.take().expect("session vector present");
+        let (next, bounced) = match backend {
+            Backend::Pjrt(engine) => {
+                let prep = state.prepared.as_ref().expect("PJRT session is prepared");
+                engine.session_step(prep, cur, normalize)?
+            }
+            Backend::Native => {
+                let x = match cur {
+                    SessionVec::Host(v) => v,
+                    SessionVec::Device(_) => {
+                        unreachable!("native session state is host-resident")
+                    }
+                };
+                let mut y = state.pinned.matrix.as_spmv().spmv_alloc(&x);
+                if normalize {
+                    let norm = y.iter().map(|v| v * v).sum::<f32>().sqrt();
+                    for v in &mut y {
+                        *v /= norm;
+                    }
+                }
+                // host-side vector REUSE: y becomes the next x without
+                // ever crossing back through the pool's queue/reply
+                // boundary, so the step is as boundary-free as a
+                // device-chained one
+                (SessionVec::Host(y), false)
+            }
+        };
+        state.vec = Some(next);
+        totals.requests.fetch_add(1, Ordering::Relaxed);
+        totals.dispatches.fetch_add(1, Ordering::Relaxed);
+        totals.launches.fetch_add(1, Ordering::Relaxed);
+        totals.session_steps.fetch_add(1, Ordering::Relaxed);
+        if bounced {
+            totals.marshalled_bytes.fetch_add(8 * n, Ordering::Relaxed);
+        } else {
+            totals.elided_bytes.fetch_add(8 * n, Ordering::Relaxed);
+            totals.round_trips_elided.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(r) = reg {
+            r.tele.record(step_start.elapsed(), model.energy_j);
+        }
+    }
+    if steps > 0 {
+        if let Some(r) = reg {
+            r.tele.route(state.decision, false, steps);
+        }
+        if let (Some(o), Some(r)) = (online, reg) {
+            o.observe(Observation {
+                matrix_id: state.matrix_id,
+                features: r.features,
+                format: state.decision.format,
+                choice: state.decision.choice,
+                explored: false,
+                requests: steps,
+                measured_latency_s: t0.elapsed().as_secs_f64() / steps as f64,
+                modeled: model,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Copy the session's current vector out — the explicit escape hatch,
+/// charged to `marshalled_bytes` like any boundary crossing.
+fn do_session_read(
+    backend: &mut Backend,
+    telemetry: &Telemetry,
+    sessions: &mut HashMap<u64, SessionState>,
+    session: u64,
+) -> Result<Vec<f32>> {
+    let state =
+        sessions.get_mut(&session).ok_or_else(|| anyhow!("unknown session {session}"))?;
+    let Some(vec) = &state.vec else {
+        bail!("session vector unset: call write() first");
+    };
+    let y = match (backend, vec) {
+        (Backend::Pjrt(engine), v) => {
+            let prep = state.prepared.as_ref().expect("PJRT session is prepared");
+            engine.session_read(prep, v)?
+        }
+        (Backend::Native, SessionVec::Host(v)) => v.clone(),
+        (Backend::Native, SessionVec::Device(_)) => {
+            unreachable!("native session state is host-resident")
+        }
+    };
+    telemetry.totals.marshalled_bytes.fetch_add(4 * state.n as u64, Ordering::Relaxed);
+    Ok(y)
 }

@@ -321,6 +321,24 @@ pub struct Counters {
     /// router hot-swap (re-selected artifacts / re-prepared literals;
     /// counted independently of format migrations).
     pub knob_migrations: AtomicU64,
+    /// Vector bytes that crossed the host/device boundary at dispatch:
+    /// the per-request path charges `4*(n_cols + n_rows)` per served
+    /// product (x in, y out), a session charges `4*n` only on explicit
+    /// `write` / `read`. Backend-uniform — on native backends this is
+    /// the bytes copied into/out of the pool's dispatch layer.
+    pub marshalled_bytes: AtomicU64,
+    /// Vector bytes a session step did NOT move because the vector
+    /// stayed resident (`4*(n_cols + n_rows)` per pure chained step —
+    /// exactly what the per-request path would have charged).
+    pub elided_bytes: AtomicU64,
+    /// Host round-trips elided: pure session steps that fed y back as
+    /// the next x without surfacing it.
+    pub round_trips_elided: AtomicU64,
+    /// Iterative-session products served (each also counts in
+    /// `requests`/`dispatches`/`launches`).
+    pub session_steps: AtomicU64,
+    /// Sessions opened over the pool's lifetime.
+    pub sessions_opened: AtomicU64,
 }
 
 /// The shared registry: matrix id -> telemetry handle.

@@ -135,7 +135,7 @@ impl SpMv for Bell {
     /// the (block-row, block, row) visit order — and therefore the
     /// accumulation order into `y[r]` — matches [`Bell::spmv`] exactly,
     /// so results are bit-identical to independent products.
-    fn spmm(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    fn spmm(&self, xs: &[&[f32]]) -> Vec<Vec<f32>> {
         for x in xs {
             assert_eq!(x.len(), self.n_cols);
         }

@@ -104,7 +104,7 @@ impl SpMv for Csr {
     /// keeping the per-(row, vector) accumulation order identical to
     /// [`Csr::spmv`] so results stay bit-identical to independent
     /// products.
-    fn spmm(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    fn spmm(&self, xs: &[&[f32]]) -> Vec<Vec<f32>> {
         for x in xs {
             assert_eq!(x.len(), self.n_cols);
         }

@@ -101,7 +101,7 @@ impl SpMv for Ell {
     /// SpMM override: streams each padded row once for the whole
     /// batch, with the same per-(row, vector) accumulation order as
     /// [`SpMv::spmv`] — bit-identical to independent products.
-    fn spmm(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    fn spmm(&self, xs: &[&[f32]]) -> Vec<Vec<f32>> {
         for x in xs {
             assert_eq!(x.len(), self.n_cols);
         }

@@ -114,7 +114,7 @@ impl SpMv for Sell {
     /// against every vector in the batch. Per vector the in-row j order
     /// matches [`Sell::spmv`] exactly, so results are bit-identical to
     /// independent products.
-    fn spmm(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    fn spmm(&self, xs: &[&[f32]]) -> Vec<Vec<f32>> {
         for x in xs {
             assert_eq!(x.len(), self.n_cols);
         }

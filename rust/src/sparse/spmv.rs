@@ -26,14 +26,18 @@ pub trait SpMv {
     /// (CSR/ELL/BELL/SELL) overrides this to walk its matrix arrays
     /// ONCE for the whole batch; the default is the per-vector loop for
     /// formats without a streaming advantage (COO, dense).
-    fn spmm(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    ///
+    /// Takes borrowed slices (not owned `Vec`s) so the serving queue's
+    /// shared `Arc<[f32]>` payloads batch without a per-request copy;
+    /// the trait stays object-safe for `dyn SpMv` dispatch.
+    fn spmm(&self, xs: &[&[f32]]) -> Vec<Vec<f32>> {
         xs.iter().map(|x| self.spmv_alloc(x)).collect()
     }
 
     /// Historical name of [`SpMv::spmm`] (pre-SpMM serving called the
     /// batched dispatch `spmv_batch`); kept as a delegating alias so
     /// existing callers keep working. Override `spmm`, not this.
-    fn spmv_batch(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    fn spmv_batch(&self, xs: &[&[f32]]) -> Vec<Vec<f32>> {
         self.spmm(xs)
     }
 
@@ -69,7 +73,7 @@ mod tests {
         let mut a = Coo::new(3, 2);
         a.push(0, 0, 2.0);
         a.push(2, 1, -1.5);
-        let xs = vec![vec![1.0, 2.0], vec![-3.0, 0.5]];
+        let xs: Vec<&[f32]> = vec![&[1.0, 2.0], &[-3.0, 0.5]];
         let ys = a.spmm(&xs);
         assert_eq!(ys.len(), 2);
         for (x, y) in xs.iter().zip(&ys) {

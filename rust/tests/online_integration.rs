@@ -620,3 +620,142 @@ fn inflight_requests_survive_hot_swap_bit_identically() {
     assert_eq!(stats.router_version, 2);
     assert_eq!(stats.requests, 64);
 }
+
+// ---------------------------------------------------------------------
+// Session × hot-swap: a drift-triggered migration while a session
+// iterates must DEFER to the session boundary. The pinned decision and
+// its converted form stay untouched (bit-identical to a frozen pool's
+// session under cache-eviction pressure), and the deferred migration
+// lands when the last session on the matrix closes. DESIGN.md §9.
+// ---------------------------------------------------------------------
+#[test]
+fn mid_session_hot_swap_defers_and_lands_at_session_close() {
+    let objective = Objective::Energy;
+    let (_, ds, overhead) = toy_setup(&["eu-2005", "wiki-talk-temporal"], objective);
+    let convert = PoolConfig::default().convert;
+    let mut rng = Rng::new(0x0D12F7);
+    // The drifted-workload candidate most favoring a non-CSR format.
+    let candidates: Vec<Coo> = vec![
+        patterns::diagonals(&mut rng, 1000, &[-24, 0, 24, -48, 48, -72, 72], 0.98),
+        patterns::banded(&mut rng, 900, 10, 6.0),
+        patterns::diagonals(&mut rng, 700, &[-1, 0, 1, -32, 32], 0.99),
+        patterns::diagonals(&mut rng, 1200, &[0, 1, -1, 64, -64, 128, -128, 256, -256], 0.97),
+    ];
+    let (coo, best_fmt) = candidates
+        .into_iter()
+        .map(|c| {
+            let e = modeled_energy_per_format(&c, convert);
+            let best = Format::ALL
+                .into_iter()
+                .min_by(|a, b| e[a.class_id()].total_cmp(&e[b.class_id()]))
+                .unwrap();
+            let gap = e[best.class_id()] / e[Format::Csr.class_id()];
+            (c, best, gap)
+        })
+        .min_by(|(_, _, ga), (_, _, gb)| ga.total_cmp(gb))
+        .map(|(c, b, _)| (c, b))
+        .unwrap();
+    assert_ne!(best_fmt, Format::Csr, "test premise: drift must favor a non-CSR format");
+
+    let stale = Arc::new(stale_csr_router(&ds, objective, overhead.clone()));
+    let refs = FormatRefs::new(&coo, convert);
+    let hint = 1_000_000_000_000u64;
+
+    // Frozen reference pool: its session can never migrate.
+    let frozen = Pool::start(stale.clone(), BackendSpec::Native, single_worker_cfg());
+    frozen.register(0, coo.clone(), hint).unwrap();
+    let online = Online::start(
+        OnlineConfig {
+            explore_rate: 0.25,
+            retrain_every: 48,
+            seed: 0x5EED,
+            background: false,
+            joint_knobs: false,
+            ..OnlineConfig::default()
+        },
+        stale.clone(),
+        objective,
+        Some(Trainer::new(ds.clone(), objective, overhead, turing_gtx1650m().name)),
+    );
+    // Tiny cache: probe registrations + per-request traffic keep
+    // thrashing it, so the session's pinned conversion only survives
+    // through its owning handle — the eviction-protection contract.
+    let adaptive = Pool::start_adaptive(
+        online.clone(),
+        BackendSpec::Native,
+        PoolConfig { workers: 1, cache_capacity: 2, ..PoolConfig::default() },
+    );
+    assert_eq!(adaptive.register(0, coo.clone(), hint).unwrap(), Format::Csr);
+
+    // Both sessions pin the decision in force at open time: CSR.
+    let sess_a = adaptive.open_session(0).unwrap();
+    let sess_f = frozen.open_session(0).unwrap();
+    let x0 = input(coo.n_cols, 7);
+    sess_a.write(x0.clone()).unwrap();
+    sess_f.write(x0.clone()).unwrap();
+
+    // Convergence phase: per-request traffic drives exploration and
+    // retraining while the sessions iterate. A probe registration per
+    // round exposes the CURRENT router's decision for this structure
+    // (the pinned matrix's own registry entry is frozen by deferral).
+    const ROUND: usize = 48;
+    const MAX_ROUNDS: usize = 8;
+    let mut converged = false;
+    for round in 0..MAX_ROUNDS {
+        for r in 0..ROUND {
+            let x = input(coo.n_cols, round * ROUND + r);
+            let resp = adaptive.product(0, x.clone()).expect("no request may be dropped");
+            refs.check(&resp, &x, &format!("per-request traffic round {round} req {r}"));
+        }
+        sess_a.step_n(4).expect("session must keep stepping across retrains");
+        sess_f.step_n(4).unwrap();
+        let probe = adaptive.register(100 + round as u64, coo.clone(), hint).unwrap();
+        if probe == best_fmt {
+            converged = true;
+            break;
+        }
+    }
+    let stats = adaptive.stats().unwrap();
+    assert!(
+        converged,
+        "router must converge to {best_fmt} within {MAX_ROUNDS} rounds \
+         (v{}, retrains {})",
+        stats.router_version, stats.retrains
+    );
+    assert!(stats.router_version >= 2, "convergence implies a hot-swap happened mid-session");
+    assert!(stats.evictions > 0, "premise: the tiny cache must have thrashed: {stats:?}");
+    assert_eq!(stats.active_sessions, 1, "frozen pool's session is not in these stats");
+    // THE deferral contract: the swap landed, the registry re-decided —
+    // but the session-pinned matrix kept its open-time decision.
+    assert_eq!(
+        stats.per_matrix[0].format,
+        Some(Format::Csr),
+        "migration must defer while a session is open on the matrix"
+    );
+
+    // The adaptive session's chain must be bit-identical to the frozen
+    // pool's: same pinned format, same conversion, untouched by the
+    // swap or by eviction pressure.
+    let ya = sess_a.read().unwrap();
+    let yf = sess_f.read().unwrap();
+    assert_eq!(ya, yf, "session chain across a hot-swap must match the frozen pool's");
+
+    // Session close is the boundary: the deferred migration lands.
+    let migrations_before = stats.migrations;
+    drop(sess_a);
+    let stats = adaptive.stats().unwrap();
+    assert_eq!(stats.active_sessions, 0);
+    assert_eq!(
+        stats.per_matrix[0].format,
+        Some(best_fmt),
+        "the deferred migration must land when the last session closes"
+    );
+    assert!(stats.migrations > migrations_before, "landing must count as a migration");
+
+    // And post-migration per-request traffic serves correctly.
+    for r in 0..4 {
+        let x = input(coo.n_cols, 900_000 + r);
+        let resp = adaptive.product(0, x.clone()).unwrap();
+        refs.check(&resp, &x, &format!("post-migration request {r}"));
+    }
+}

@@ -228,8 +228,9 @@ fn spmm_prepared_matches_per_vector_at_ragged_batch_widths() {
                     .collect()
             })
             .collect();
+        let views: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
         let exec0 = engine.exec_count;
-        let batch = engine.spmm_prepared(&spmm, &xs).expect("spmm_prepared");
+        let batch = engine.spmm_prepared(&spmm, &views).expect("spmm_prepared");
         let launches = (engine.exec_count - exec0) as usize;
         assert_eq!(
             launches,

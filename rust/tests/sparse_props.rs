@@ -91,13 +91,14 @@ fn prop_spmm_matches_independent_products_bit_for_bit() {
             _ => 9,             // bucket + 1 (the chunking edge)
         };
         let xs: Vec<Vec<f32>> = (0..k).map(|_| arb_x(rng, coo.n_cols)).collect();
+        let views: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
         for fmt in Format::ALL {
             for params in [
                 ConvertParams { bell_bh: 2, bell_bw: 2, sell_h: 2 },
                 ConvertParams::default(),
             ] {
                 let m = convert::convert(&csr, fmt, params);
-                let batch = m.as_spmv().spmm(&xs);
+                let batch = m.as_spmv().spmm(&views);
                 if batch.len() != k {
                     return Err(format!("{fmt}: batch len {} != {k}", batch.len()));
                 }
@@ -111,7 +112,7 @@ fn prop_spmm_matches_independent_products_bit_for_bit() {
                     }
                 }
                 // the legacy alias must keep routing through spmm
-                if m.as_spmv().spmv_batch(&xs) != batch {
+                if m.as_spmv().spmv_batch(&views) != batch {
                     return Err(format!("{fmt}: spmv_batch alias diverged from spmm"));
                 }
             }

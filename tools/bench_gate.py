@@ -1,0 +1,178 @@
+#!/usr/bin/env python3
+"""Gate benched metrics against the committed baseline.
+
+The bench-smoke CI job runs `cargo bench --bench bench_e2e_serving --
+--smoke`, which emits machine-readable tables as `reports/BENCH_*.json`
+(`{"title", "header", "rows"}`, every cell a string). This script
+compares the DETERMINISTIC metrics in those tables — accounting ledgers
+like marshalled bytes per iteration and launches per request, never
+wall-clock rates — against `reports/bench_baseline.json` and fails on
+direction-aware regression beyond a small tolerance.
+
+Usage:
+    python3 tools/bench_gate.py                  # compare (CI gate)
+    python3 tools/bench_gate.py --write-baseline # regenerate baseline
+    python3 tools/bench_gate.py --reports DIR    # non-default location
+
+Baseline keys are `<table>/<keycol>=<val>/.../<metric col>`. A key
+present in the baseline but missing from the current reports is a
+failure (the metric regressed away); a current metric absent from the
+baseline is reported as new so a follow-up `--write-baseline` can adopt
+it. Stdlib only — the CI image has no extra Python packages.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+# Which tables/columns to gate. `keys` identify a row; `metrics` map a
+# column to a direction ("lower" / "higher" is better) and a
+# multiplicative tolerance. Only deterministic columns belong here:
+# req/s and anything else wall-clock-derived would flake on a loaded
+# CI runner.
+CHECKS = [
+    {
+        "file": "BENCH_e2e_iterative_session.json",
+        "table": "e2e_iterative_session",
+        "keys": ["chain k", "path"],
+        "metrics": {
+            # marshalled-bytes-per-iteration ledger (PR 6 tentpole):
+            # per-request rows pin the 8n/iter cost, session rows pin
+            # the write+read-only cost
+            "B/iter": {"direction": "lower", "tol": 1.05},
+            # equal launches/request on both paths, exactly
+            "launches/req": {"direction": "lower", "tol": 1.001},
+            # per-request B/iter divided by session B/iter (the >= 10x
+            # elision acceptance lives in the bench assert; the gate
+            # pins the achieved ratio against creep)
+            "bytes ratio": {"direction": "higher", "tol": 1.05},
+        },
+    },
+]
+
+
+def load_table(path):
+    with open(path, "r", encoding="utf-8") as f:
+        doc = json.load(f)
+    header = doc["header"]
+    return [dict(zip(header, row)) for row in doc["rows"]]
+
+
+def to_float(cell):
+    try:
+        return float(cell)
+    except (TypeError, ValueError):
+        return None
+
+
+def collect_metrics(reports_dir):
+    """Extract `{key: value}` for every configured metric present."""
+    metrics = {}
+    missing_files = []
+    for check in CHECKS:
+        path = os.path.join(reports_dir, check["file"])
+        if not os.path.exists(path):
+            missing_files.append(check["file"])
+            continue
+        for row in load_table(path):
+            row_key = "/".join(f"{k}={row[k]}" for k in check["keys"] if k in row)
+            for col, _ in check["metrics"].items():
+                val = to_float(row.get(col))
+                if val is not None:
+                    metrics[f"{check['table']}/{row_key}/{col}"] = val
+    return metrics, missing_files
+
+
+def metric_spec(key):
+    for check in CHECKS:
+        if key.startswith(check["table"] + "/"):
+            for col, spec in check["metrics"].items():
+                if key.endswith("/" + col):
+                    return spec
+    return None
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--reports", default="reports", help="reports directory")
+    ap.add_argument(
+        "--baseline",
+        default=os.path.join("reports", "bench_baseline.json"),
+        help="committed baseline path",
+    )
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="regenerate the baseline from the current reports",
+    )
+    args = ap.parse_args()
+
+    current, missing_files = collect_metrics(args.reports)
+
+    if args.write_baseline:
+        if missing_files:
+            print(f"FAIL: cannot write a baseline with reports missing: {missing_files}")
+            return 1
+        doc = {
+            "_comment": "Deterministic bench-smoke metrics gated by tools/bench_gate.py; "
+            "regenerate with `python3 tools/bench_gate.py --write-baseline` "
+            "after an intentional perf change.",
+            "metrics": dict(sorted(current.items())),
+        }
+        with open(args.baseline, "w", encoding="utf-8") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {len(current)} metrics to {args.baseline}")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(f"FAIL: no committed baseline at {args.baseline}")
+        print("bootstrap one with: python3 tools/bench_gate.py --write-baseline")
+        return 1
+    with open(args.baseline, "r", encoding="utf-8") as f:
+        baseline = json.load(f)["metrics"]
+
+    if missing_files:
+        print(f"FAIL: expected bench reports missing from {args.reports}: {missing_files}")
+        return 1
+
+    failures = []
+    for key, base in sorted(baseline.items()):
+        spec = metric_spec(key)
+        if spec is None:
+            # baseline entry no longer configured — stale, not fatal
+            print(f"WARN: baseline metric not configured in CHECKS, skipping: {key}")
+            continue
+        cur = current.get(key)
+        if cur is None:
+            failures.append(f"{key}: present in baseline ({base}) but missing from reports")
+            continue
+        tol = spec["tol"]
+        if spec["direction"] == "lower":
+            ok, bound = cur <= base * tol, base * tol
+            cmp = f"{cur} > allowed {bound:.4g}"
+        else:
+            ok, bound = cur >= base / tol, base / tol
+            cmp = f"{cur} < required {bound:.4g}"
+        status = "ok" if ok else "REGRESSED"
+        print(f"{status:9} {key}: baseline {base}, current {cur}")
+        if not ok:
+            failures.append(f"{key}: {cmp} (baseline {base})")
+
+    new = sorted(set(current) - set(baseline))
+    for key in new:
+        print(f"NEW       {key}: {current[key]} (not in baseline; "
+              "adopt with --write-baseline)")
+
+    if failures:
+        print(f"\nFAIL: {len(failures)} metric(s) regressed past the committed baseline:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        return 1
+    print(f"\nOK: {len(baseline)} baseline metric(s) held (tolerances per tools/bench_gate.py)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
