@@ -10,6 +10,7 @@
 //!         [--cache-cap C]
 //!         [--explore-rate F] [--retrain-every N] [--anneal-target K]
 //!         [--joint-knobs true|false]
+//!         [--stats-every N] [--metrics-out FILE] [--events-out FILE]
 //!                               serving demo over the sharded pool
 //!                               (PJRT when artifacts exist, else
 //!                               native). A non-zero explore rate or
@@ -22,7 +23,16 @@
 //!                               knob arms explored, per-format knob
 //!                               policy retrained, knobs re-decided on
 //!                               hot-swap. --seed drives the
-//!                               exploration schedule.
+//!                               exploration schedule. Observability
+//!                               (DESIGN.md §10): --stats-every N
+//!                               prints a progress ledger line every N
+//!                               completed requests; at exit
+//!                               --metrics-out dumps the Prometheus
+//!                               text exposition and --events-out the
+//!                               control-plane event journal (JSON) —
+//!                               the final ledger, journal, and dumps
+//!                               are flushed even when the request
+//!                               stream fails part-way.
 //!
 //! Global flags: --config FILE, --set key=value (repeatable), and the
 //! shorthand --scale/--seed/--objective overrides.
@@ -260,6 +270,9 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let anneal_target: Option<u64> =
         cli.flag("anneal-target").and_then(|v| v.parse().ok()).filter(|t| *t > 0);
     let joint_knobs = parse_joint_knobs(cli)?;
+    let stats_every: usize = cli.flag("stats-every").map_or(0, |v| v.parse().unwrap_or(0));
+    let metrics_out = cli.flag("metrics-out").map(PathBuf::from);
+    let events_out = cli.flag("events-out").map(PathBuf::from);
     let ds = load_or_build(cli)?;
     let obj = cli.objective()?;
     let overhead = OverheadModel::train_on_corpus(cli.config.scale, None);
@@ -329,10 +342,46 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         let x = vec![1.0f32; sizes[id]];
         receivers.push(pool.product_async(id as u64, x)?);
     }
+    // A failed drain (a dropped reply, a failed product) must NOT
+    // early-return past the ledger flush below — the run's telemetry
+    // matters most exactly when it died half-way. Capture the first
+    // error and keep going to the flush.
+    let mut completed = 0usize;
+    let mut served: Result<()> = Ok(());
     for rx in receivers {
-        rx.recv().map_err(|_| anyhow::anyhow!("pool dropped request"))??;
+        let reply = rx.recv().map_err(|_| anyhow::anyhow!("pool dropped request"));
+        if let Err(e) = reply.and_then(|r| r.map(|_| ())) {
+            served = Err(e);
+            break;
+        }
+        completed += 1;
+        if stats_every > 0 && completed % stats_every == 0 {
+            match pool.stats() {
+                Ok(s) => println!(
+                    "[{completed}/{n_requests}] {} dispatches, {} launches, router v{}, \
+                     {} migrations, {} events",
+                    s.dispatches, s.launches, s.router_version, s.migrations, s.events_total
+                ),
+                Err(e) => {
+                    served = Err(e);
+                    break;
+                }
+            }
+        }
     }
     let dt = t0.elapsed();
+
+    // Journal first: it is an in-process ring (no shard round-trip), so
+    // it survives even a dead shard that would fail `stats()` below.
+    let events = pool.events();
+    if let Some(path) = &events_out {
+        std::fs::write(path, pool.events_json())
+            .with_context(|| format!("writing event journal to {}", path.display()))?;
+        println!("wrote event journal ({} events) -> {}", events.len(), path.display());
+    }
+    if let Err(e) = &served {
+        println!("serve aborted after {completed}/{n_requests} requests: {e:#}");
+    }
 
     let stats = pool.stats()?;
     println!(
@@ -381,6 +430,20 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         stats.ucb_routes,
         stats.drift.map_or("off (frozen router)".to_string(), |d| d.to_string())
     );
+    println!(
+        "journal: {} control-plane event(s) recorded, {} dropped (ring cap {})",
+        stats.events_total,
+        stats.events_dropped,
+        crate::obs::DEFAULT_JOURNAL_CAP
+    );
+    for e in events.iter().rev().take(5).rev() {
+        println!("  {e}");
+    }
+    if let Some(path) = &metrics_out {
+        std::fs::write(path, pool.metrics_text()?)
+            .with_context(|| format!("writing metrics exposition to {}", path.display()))?;
+        println!("wrote metrics exposition -> {}", path.display());
+    }
     let quant = |q: Option<f64>| q.map_or("-".to_string(), |v| format!("{v:.1}"));
     let mut t = Table::new(
         "Per-matrix serving telemetry (latency end-to-end; energy modeled, §6.3)",
@@ -403,7 +466,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         ]);
     }
     t.emit("serve");
-    Ok(())
+    served
 }
 
 #[cfg(test)]
@@ -468,6 +531,22 @@ mod tests {
             !parse_joint_knobs(&cli).unwrap(),
             "--joint-knobs=false must disable the joint loop, not silently default on"
         );
+    }
+
+    #[test]
+    fn serve_observability_flags_parse() {
+        let cli = parse(&args(&[
+            "serve",
+            "--stats-every",
+            "8",
+            "--metrics-out",
+            "/tmp/metrics.prom",
+            "--events-out=/tmp/events.json",
+        ]))
+        .unwrap();
+        assert_eq!(cli.flag("stats-every"), Some("8"));
+        assert_eq!(cli.flag("metrics-out"), Some("/tmp/metrics.prom"));
+        assert_eq!(cli.flag("events-out"), Some("/tmp/events.json"));
     }
 
     #[test]

@@ -31,6 +31,10 @@
 //!                     observation buffer, exploration bandit, drift
 //!                     detector, background retraining, and the
 //!                     hot-swappable versioned router (DESIGN.md §6).
+//! * [`obs`]         — observability primitives: log2 latency
+//!                     histograms, request-lifecycle stage tracing, the
+//!                     control-plane event journal, and Prometheus
+//!                     text-exposition rendering (DESIGN.md §10).
 //! * [`runtime`]     — PJRT client wrapper + artifact manifest/executable
 //!                     cache (the only module touching the xla API; the
 //!                     offline build aliases it to `runtime::xla_shim`).
@@ -49,6 +53,7 @@ pub mod features;
 pub mod gen;
 pub mod gpusim;
 pub mod ml;
+pub mod obs;
 pub mod online;
 pub mod report;
 pub mod runtime;

@@ -1,0 +1,230 @@
+//! Atomic log2-bucketed latency histograms.
+//!
+//! The bucket math lived in `serve/telemetry.rs` until stage tracing
+//! needed the same histogram seven more times; it is now shared here.
+//! Bucket `b >= 1` counts nanosecond latencies in `[2^(b-1), 2^b)`;
+//! bucket 0 counts exact zeros; bucket 47 tops out above ~39 hours.
+//! Quantiles come out of 48 counters instead of an unbounded sample
+//! buffer, and recording is a handful of relaxed atomic adds — safe on
+//! the shard hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log2 nanosecond buckets.
+pub const HIST_BUCKETS: usize = 48;
+
+/// Bucket index for a nanosecond latency.
+pub fn bucket_of(ns: u64) -> usize {
+    ((64 - ns.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Geometric representative of a bucket, in nanoseconds.
+pub fn bucket_rep_ns(b: usize) -> f64 {
+    if b == 0 {
+        0.0
+    } else {
+        0.75 * (1u64 << b.min(63)) as f64
+    }
+}
+
+/// Histogram quantile: the representative value of the bucket holding
+/// the `q`-th ranked sample, or `None` on an empty histogram.
+pub fn quantile_us(counts: &[u64], q: f64) -> Option<f64> {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return None;
+    }
+    let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut cum = 0u64;
+    for (b, c) in counts.iter().enumerate() {
+        cum += c;
+        if cum >= rank {
+            return Some(bucket_rep_ns(b) / 1e3);
+        }
+    }
+    Some(bucket_rep_ns(counts.len() - 1) / 1e3)
+}
+
+/// A lock-free latency histogram: count + sum + max + log2 buckets,
+/// every field a relaxed atomic so shards record without locking.
+pub struct Hist {
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Hist {
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Record one observation.
+    pub fn record(&self, d: Duration) {
+        self.record_n(d, 1);
+    }
+
+    /// Record `n` observations of the same duration in one shot — the
+    /// batch-shared-stage fast path (a coalesced dispatch's convert and
+    /// exec stages cost every rider the same wall time, so one atomic
+    /// round covers the whole batch).
+    pub fn record_n(&self, d: Duration, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        self.count.fetch_add(n, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns.saturating_mul(n), Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+        self.buckets[bucket_of(ns)].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Consistent-enough copy of the counters (relaxed loads; exact
+    /// under quiescence, monotone always).
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            max_ns: self.max_ns.load(Ordering::Relaxed),
+            counts: self.buckets.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+        }
+    }
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Plain-data copy of a [`Hist`] at one instant.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum_ns: u64,
+    pub max_ns: u64,
+    /// Per-bucket counts, `HIST_BUCKETS` entries (empty on `Default`).
+    pub counts: Vec<u64>,
+}
+
+impl HistSnapshot {
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64 / 1e3
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_ns as f64 / 1e3
+    }
+
+    /// Accumulated duration in seconds (Prometheus `_sum` convention).
+    pub fn sum_s(&self) -> f64 {
+        self.sum_ns as f64 * 1e-9
+    }
+
+    /// Quantile in microseconds. Bucket representatives can overshoot
+    /// the true extremum; clamping keeps `p99 <= max` in every report.
+    /// `None` on an empty histogram.
+    pub fn quantile_us(&self, q: f64) -> Option<f64> {
+        quantile_us(&self.counts, q).map(|v| v.min(self.max_us()))
+    }
+
+    /// Tail quantile: `None` below two samples — one observation
+    /// supports a median, not a p99.
+    pub fn tail_quantile_us(&self, q: f64) -> Option<f64> {
+        if self.count >= 2 {
+            self.quantile_us(q)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_log2_and_monotone() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        for ns in [1u64, 10, 1000, 1_000_000] {
+            let b = bucket_of(ns);
+            assert!(ns >= 1u64 << (b - 1) && ns < 1u64 << b, "ns {ns} bucket {b}");
+        }
+    }
+
+    #[test]
+    fn quantile_of_uniform_histogram() {
+        let mut counts = vec![0u64; HIST_BUCKETS];
+        counts[10] = 50; // all samples in one bucket
+        let v = quantile_us(&counts, 0.5).unwrap();
+        assert!((v - bucket_rep_ns(10) / 1e3).abs() < 1e-12);
+        assert_eq!(quantile_us(&[0u64; HIST_BUCKETS], 0.99), None);
+    }
+
+    #[test]
+    fn record_accumulates_count_sum_max() {
+        let h = Hist::new();
+        h.record(Duration::from_micros(10));
+        h.record(Duration::from_micros(40));
+        let s = h.snapshot();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.sum_ns, 50_000);
+        assert_eq!(s.max_ns, 40_000);
+        assert_eq!(s.counts.iter().sum::<u64>(), 2);
+        assert!((s.mean_us() - 25.0).abs() < 1e-12);
+        let p50 = s.quantile_us(0.5).unwrap();
+        assert!(p50 > 0.0 && p50 <= s.max_us());
+    }
+
+    #[test]
+    fn record_n_is_n_identical_observations() {
+        let a = Hist::new();
+        let b = Hist::new();
+        a.record_n(Duration::from_micros(7), 5);
+        for _ in 0..5 {
+            b.record(Duration::from_micros(7));
+        }
+        assert_eq!(a.snapshot(), b.snapshot());
+        a.record_n(Duration::from_secs(1), 0); // no-op
+        assert_eq!(a.snapshot().count, 5);
+    }
+
+    #[test]
+    fn empty_snapshot_has_no_quantiles() {
+        let s = Hist::new().snapshot();
+        assert!(s.is_empty());
+        assert_eq!(s.quantile_us(0.5), None);
+        assert_eq!(s.tail_quantile_us(0.99), None);
+        assert_eq!(s.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn tail_quantiles_need_two_samples() {
+        let h = Hist::new();
+        h.record(Duration::from_micros(100));
+        let s = h.snapshot();
+        assert!(s.quantile_us(0.5).is_some(), "one sample is a median");
+        assert_eq!(s.tail_quantile_us(0.99), None);
+        h.record(Duration::from_micros(200));
+        assert!(h.snapshot().tail_quantile_us(0.99).is_some());
+    }
+}

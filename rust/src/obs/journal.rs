@@ -1,0 +1,348 @@
+//! Control-plane event journal: a bounded, drop-oldest ring of
+//! structured events shared by the router and every shard.
+//!
+//! Counters say *how many* migrations happened; the journal says which
+//! matrix moved where, decided by which router version, and what
+//! triggered the swap — the causal chain `drift → retrain → hot-swap →
+//! migration` becomes a sequence you can assert on. Under a seeded,
+//! single-worker run the event sequence is deterministic: every
+//! payload field except wall-clock timestamps derives from the request
+//! stream and the seed, and [`Event::key`] renders exactly that
+//! deterministic part (timestamps and measured durations excluded) so
+//! two identical runs produce identical key sequences.
+//!
+//! Emission takes a mutex, which is fine because events are
+//! control-plane by design (swaps, retrains, migrations, session
+//! lifecycle) — never one-per-request. The one near-hot-path event,
+//! `Explored`, fires at the bandit's exploration rate (a few percent
+//! of dispatches), not per request.
+
+use crate::online::JointDecision;
+use crate::report::json_escape;
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Default ring capacity (events, not bytes).
+pub const DEFAULT_JOURNAL_CAP: usize = 1024;
+
+/// What caused a router hot-swap or retrain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwapTrigger {
+    /// Direct `install` call (tests, operator action).
+    Manual,
+    /// Periodic retrain cadence (`retrain_every`).
+    Cadence,
+    /// Drift detector rising edge forced an early retrain.
+    Drift,
+}
+
+impl SwapTrigger {
+    pub fn name(self) -> &'static str {
+        match self {
+            SwapTrigger::Manual => "manual",
+            SwapTrigger::Cadence => "cadence",
+            SwapTrigger::Drift => "drift",
+        }
+    }
+}
+
+impl fmt::Display for SwapTrigger {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One structured control-plane event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// A new policy version went live on the router.
+    HotSwap { version: u64, trigger: SwapTrigger },
+    /// The trainer refit the optimizer on serving evidence.
+    Retrain { examples: usize, duration: Duration, trigger: SwapTrigger },
+    /// A shard re-decided a registered matrix after a hot-swap and the
+    /// serving (format, knob) decision changed.
+    Migration { matrix: u64, from: JointDecision, to: JointDecision, decided_by: u64 },
+    /// A hot-swap wanted to migrate a matrix but it was pinned by an
+    /// open session; the migration runs at session close.
+    DeferredMigration { matrix: u64, to: JointDecision, decided_by: u64 },
+    /// The bandit routed a dispatch off-policy to score a
+    /// counterfactual arm.
+    Explored { matrix: u64, from: JointDecision, to: JointDecision },
+    /// The drift detector's rising edge: a feature's serving-window
+    /// mean shifted `sigma` standard deviations from the reference.
+    Drift { feature: &'static str, sigma: f64 },
+    /// An iterative session pinned a matrix.
+    SessionOpen { session: u64, matrix: u64 },
+    /// A session closed after `steps` chained products.
+    SessionClose { session: u64, matrix: u64, steps: u64 },
+}
+
+impl EventKind {
+    /// Stable snake_case tag for grouping/filtering.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::HotSwap { .. } => "hot_swap",
+            EventKind::Retrain { .. } => "retrain",
+            EventKind::Migration { .. } => "migration",
+            EventKind::DeferredMigration { .. } => "deferred_migration",
+            EventKind::Explored { .. } => "explored",
+            EventKind::Drift { .. } => "drift",
+            EventKind::SessionOpen { .. } => "session_open",
+            EventKind::SessionClose { .. } => "session_close",
+        }
+    }
+
+    /// Deterministic rendering: every payload field EXCEPT wall-clock
+    /// measurements (retrain duration), so seeded runs can compare key
+    /// sequences verbatim. Drift sigma stays in — it derives from
+    /// matrix structure features, which are deterministic.
+    pub fn key(&self) -> String {
+        match self {
+            EventKind::HotSwap { version, trigger } => {
+                format!("hot_swap v{version} trigger={trigger}")
+            }
+            EventKind::Retrain { examples, trigger, .. } => {
+                format!("retrain examples={examples} trigger={trigger}")
+            }
+            EventKind::Migration { matrix, from, to, decided_by } => {
+                format!("migration matrix={matrix} {from}->{to} by=v{decided_by}")
+            }
+            EventKind::DeferredMigration { matrix, to, decided_by } => {
+                format!("deferred_migration matrix={matrix} ->{to} by=v{decided_by}")
+            }
+            EventKind::Explored { matrix, from, to } => {
+                format!("explored matrix={matrix} {from}->{to}")
+            }
+            EventKind::Drift { feature, sigma } => {
+                format!("drift feature={feature} sigma={sigma:.1}")
+            }
+            EventKind::SessionOpen { session, matrix } => {
+                format!("session_open s={session} matrix={matrix}")
+            }
+            EventKind::SessionClose { session, matrix, steps } => {
+                format!("session_close s={session} matrix={matrix} steps={steps}")
+            }
+        }
+    }
+}
+
+impl fmt::Display for EventKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EventKind::Retrain { duration, .. } => {
+                write!(f, "{} took={:.1}ms", self.key(), duration.as_secs_f64() * 1e3)
+            }
+            _ => f.write_str(&self.key()),
+        }
+    }
+}
+
+/// A journal entry: monotone sequence number, time since the journal
+/// was created, payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub seq: u64,
+    pub at: Duration,
+    pub kind: EventKind,
+}
+
+impl Event {
+    /// One-line JSON object (`seq`, `at_us`, `kind`, `detail`).
+    pub fn to_json(&self) -> String {
+        // json_escape returns the string WITH surrounding quotes
+        format!(
+            "{{\"seq\":{},\"at_us\":{},\"kind\":\"{}\",\"detail\":{}}}",
+            self.seq,
+            self.at.as_micros(),
+            self.kind.name(),
+            json_escape(&self.kind.to_string())
+        )
+    }
+}
+
+impl fmt::Display for Event {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "#{:<4} +{:>9.3}ms  {}", self.seq, self.at.as_secs_f64() * 1e3, self.kind)
+    }
+}
+
+/// Bounded drop-oldest event ring. One journal is shared by the router
+/// (which creates it), the pool telemetry, and every shard.
+pub struct Journal {
+    epoch: Instant,
+    cap: usize,
+    seq: AtomicU64,
+    dropped: AtomicU64,
+    ring: Mutex<VecDeque<Event>>,
+}
+
+impl Journal {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Journal {
+            epoch: Instant::now(),
+            cap,
+            seq: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::with_capacity(cap.min(DEFAULT_JOURNAL_CAP))),
+        }
+    }
+
+    /// Append an event, evicting the oldest entry at capacity.
+    pub fn emit(&self, kind: EventKind) {
+        let at = self.epoch.elapsed();
+        let mut ring = self.ring.lock().expect("journal lock");
+        // seq is assigned under the lock so ring order == seq order
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        if ring.len() == self.cap {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(Event { seq, at, kind });
+    }
+
+    /// Events currently retained, oldest first.
+    pub fn snapshot(&self) -> Vec<Event> {
+        self.ring.lock().expect("journal lock").iter().cloned().collect()
+    }
+
+    /// Total events ever emitted (including dropped ones).
+    pub fn total(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Events evicted by the capacity bound.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Events currently retained.
+    pub fn len(&self) -> usize {
+        self.ring.lock().expect("journal lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The retained events as a JSON array (one object per line).
+    pub fn to_json(&self) -> String {
+        let events = self.snapshot();
+        if events.is_empty() {
+            return "[]\n".to_string();
+        }
+        let mut out = String::from("[\n");
+        for (i, e) in events.iter().enumerate() {
+            out.push_str("  ");
+            out.push_str(&e.to_json());
+            if i + 1 < events.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("]\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Format;
+
+    fn swap(version: u64) -> EventKind {
+        EventKind::HotSwap { version, trigger: SwapTrigger::Manual }
+    }
+
+    #[test]
+    fn empty_journal_snapshot() {
+        let j = Journal::new(8);
+        assert!(j.is_empty());
+        assert_eq!(j.snapshot(), Vec::new());
+        assert_eq!(j.total(), 0);
+        assert_eq!(j.dropped(), 0);
+        assert_eq!(j.to_json(), "[]\n");
+    }
+
+    #[test]
+    fn bounded_ring_drops_oldest_at_capacity() {
+        let j = Journal::new(4);
+        for v in 0..10 {
+            j.emit(swap(v));
+        }
+        let events = j.snapshot();
+        assert_eq!(events.len(), 4);
+        assert_eq!(j.len(), 4);
+        assert_eq!(j.total(), 10);
+        assert_eq!(j.dropped(), 6);
+        // the four NEWEST survive, oldest first, seq contiguous
+        let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+        for (e, v) in events.iter().zip(6u64..) {
+            assert_eq!(e.kind, swap(v));
+        }
+    }
+
+    #[test]
+    fn keys_render_payload_without_wall_clock() {
+        let retrain = EventKind::Retrain {
+            examples: 96,
+            duration: Duration::from_millis(12),
+            trigger: SwapTrigger::Drift,
+        };
+        assert_eq!(retrain.key(), "retrain examples=96 trigger=drift");
+        assert!(!retrain.key().contains("12"), "duration must stay out of the key");
+        assert!(retrain.to_string().contains("took="));
+
+        let d = JointDecision::format_only(Format::Csr);
+        let to = JointDecision::format_only(Format::Ell);
+        let m = EventKind::Migration { matrix: 3, from: d, to, decided_by: 2 };
+        assert_eq!(m.name(), "migration");
+        assert!(m.key().starts_with("migration matrix=3 "), "{}", m.key());
+        assert!(m.key().ends_with(" by=v2"), "{}", m.key());
+        assert_eq!(
+            EventKind::Drift { feature: "avg_nnz", sigma: 5.25 }.key(),
+            "drift feature=avg_nnz sigma=5.2"
+        );
+    }
+
+    #[test]
+    fn json_is_one_object_per_event_with_escaped_detail() {
+        let j = Journal::new(8);
+        j.emit(EventKind::SessionOpen { session: 1, matrix: 2 });
+        j.emit(EventKind::SessionClose { session: 1, matrix: 2, steps: 5 });
+        let json = j.to_json();
+        assert!(json.starts_with("[\n"), "{json}");
+        assert!(json.trim_end().ends_with(']'), "{json}");
+        assert!(json.contains("\"seq\":0"), "{json}");
+        assert!(json.contains("\"kind\":\"session_close\""), "{json}");
+        assert!(json.contains("steps=5"), "{json}");
+        assert_eq!(json.matches("{\"seq\"").count(), 2);
+    }
+
+    #[test]
+    fn seq_is_monotone_in_ring_order_under_concurrent_emit() {
+        use std::sync::Arc;
+        let j = Arc::new(Journal::new(64));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let j = j.clone();
+                std::thread::spawn(move || {
+                    for v in 0..16 {
+                        j.emit(swap(v));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let events = j.snapshot();
+        assert_eq!(events.len(), 64);
+        assert_eq!(j.total(), 64);
+        assert!(events.windows(2).all(|w| w[0].seq < w[1].seq), "seq must be ring-ordered");
+    }
+}

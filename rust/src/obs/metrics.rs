@@ -1,0 +1,279 @@
+//! Prometheus text-exposition rendering (plus a report-table twin).
+//!
+//! Families are registered in insertion order; each renders a
+//! `# HELP` / `# TYPE` pair followed by its samples. Log2 histograms
+//! ([`HistSnapshot`]) render with cumulative `_bucket{le="..."}` counts
+//! whose boundaries are the bucket upper edges (`2^b` ns) in seconds,
+//! ending at `le="+Inf"`, then `_sum` (seconds) and `_count` — the
+//! standard Prometheus histogram contract, so `histogram_quantile()`
+//! works out of the box. The same family list renders a
+//! `["metric", "labels", "value"]` [`Table`] for the repo's TSV/JSON
+//! report pipeline. `tools/metrics_lint.py` checks the text form in CI.
+
+use super::hist::{HistSnapshot, HIST_BUCKETS};
+use crate::report::Table;
+use std::fmt::Write as _;
+
+/// Prometheus metric kinds we emit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricKind {
+    fn name(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// `true` iff `name` is a valid Prometheus metric name
+/// (`[a-zA-Z_:][a-zA-Z0-9_:]*`).
+pub fn valid_metric_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// `true` iff `name` is a valid label name (`[a-zA-Z_][a-zA-Z0-9_]*`).
+pub fn valid_label_name(name: &str) -> bool {
+    let mut chars = name.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+struct Sample {
+    /// `""`, `"_bucket"`, `"_sum"`, or `"_count"`.
+    suffix: &'static str,
+    labels: Vec<(String, String)>,
+    value: f64,
+}
+
+struct Family {
+    name: String,
+    help: String,
+    kind: MetricKind,
+    samples: Vec<Sample>,
+}
+
+/// An ordered set of metric families under construction.
+#[derive(Default)]
+pub struct Metrics {
+    families: Vec<Family>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics { families: Vec::new() }
+    }
+
+    fn family(&mut self, name: &str, help: &str, kind: MetricKind) -> &mut Family {
+        assert!(valid_metric_name(name), "invalid metric name {name}");
+        if let Some(i) = self.families.iter().position(|f| f.name == name) {
+            assert_eq!(self.families[i].kind, kind, "metric {name} re-registered as {kind:?}");
+            return &mut self.families[i];
+        }
+        self.families.push(Family {
+            name: name.to_string(),
+            help: help.to_string(),
+            kind,
+            samples: Vec::new(),
+        });
+        self.families.last_mut().expect("just pushed")
+    }
+
+    /// A monotone counter (use `_total` names by convention).
+    pub fn counter(&mut self, name: &str, help: &str, value: f64) {
+        self.family(name, help, MetricKind::Counter).samples.push(Sample {
+            suffix: "",
+            labels: Vec::new(),
+            value,
+        });
+    }
+
+    /// An instantaneous gauge.
+    pub fn gauge(&mut self, name: &str, help: &str, value: f64) {
+        self.labeled_gauge(name, help, &[], value);
+    }
+
+    /// A gauge sample with labels; repeated calls with the same name
+    /// accumulate samples under one family (one `# TYPE` line).
+    pub fn labeled_gauge(&mut self, name: &str, help: &str, labels: &[(&str, String)], value: f64) {
+        let labels = own_labels(labels);
+        self.family(name, help, MetricKind::Gauge).samples.push(Sample {
+            suffix: "",
+            labels,
+            value,
+        });
+    }
+
+    /// A log2 histogram as a Prometheus histogram (seconds).
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, String)],
+        snap: &HistSnapshot,
+    ) {
+        let base = own_labels(labels);
+        let family = self.family(name, help, MetricKind::Histogram);
+        let mut cum = 0u64;
+        for b in 0..HIST_BUCKETS {
+            cum += snap.counts.get(b).copied().unwrap_or(0);
+            let le = if b + 1 == HIST_BUCKETS {
+                "+Inf".to_string()
+            } else {
+                // bucket b's upper edge is 2^b ns, rendered in seconds
+                format!("{}", (1u64 << b) as f64 * 1e-9)
+            };
+            let mut labels = base.clone();
+            labels.push(("le".to_string(), le));
+            family.samples.push(Sample { suffix: "_bucket", labels, value: cum as f64 });
+        }
+        family.samples.push(Sample { suffix: "_sum", labels: base.clone(), value: snap.sum_s() });
+        family.samples.push(Sample { suffix: "_count", labels: base, value: snap.count as f64 });
+    }
+
+    /// Render the Prometheus text-exposition document.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.families {
+            let help = f.help.replace('\\', "\\\\").replace('\n', "\\n");
+            writeln!(out, "# HELP {} {}", f.name, help).expect("string write");
+            writeln!(out, "# TYPE {} {}", f.name, f.kind.name()).expect("string write");
+            for s in &f.samples {
+                out.push_str(&f.name);
+                out.push_str(s.suffix);
+                if !s.labels.is_empty() {
+                    out.push('{');
+                    for (i, (k, v)) in s.labels.iter().enumerate() {
+                        debug_assert!(valid_label_name(k), "invalid label name {k}");
+                        if i > 0 {
+                            out.push(',');
+                        }
+                        write!(out, "{k}=\"{}\"", escape_label_value(v)).expect("string write");
+                    }
+                    out.push('}');
+                }
+                writeln!(out, " {}", s.value).expect("string write");
+            }
+        }
+        out
+    }
+
+    /// The same samples as a `["metric", "labels", "value"]` table for
+    /// the TSV/JSON report pipeline.
+    pub fn to_table(&self, title: &str) -> Table {
+        let mut t = Table::new(title, &["metric", "labels", "value"]);
+        for f in &self.families {
+            for s in &f.samples {
+                let labels = if s.labels.is_empty() {
+                    "-".to_string()
+                } else {
+                    s.labels
+                        .iter()
+                        .map(|(k, v)| format!("{k}={v}"))
+                        .collect::<Vec<_>>()
+                        .join(",")
+                };
+                t.row(vec![format!("{}{}", f.name, s.suffix), labels, format!("{}", s.value)]);
+            }
+        }
+        t
+    }
+}
+
+fn own_labels(labels: &[(&str, String)]) -> Vec<(String, String)> {
+    labels.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::hist::Hist;
+    use std::time::Duration;
+
+    #[test]
+    fn name_validation() {
+        assert!(valid_metric_name("autospmv_requests_total"));
+        assert!(valid_metric_name("_x:y9"));
+        assert!(!valid_metric_name("9lives"));
+        assert!(!valid_metric_name("has-dash"));
+        assert!(!valid_metric_name(""));
+        assert!(valid_label_name("matrix"));
+        assert!(!valid_label_name("le:"));
+    }
+
+    #[test]
+    fn counters_and_gauges_render_with_one_type_line_each() {
+        let mut m = Metrics::new();
+        m.counter("autospmv_requests_total", "Requests served.", 42.0);
+        m.labeled_gauge("autospmv_matrix_requests", "Per-matrix.", &[("matrix", "0".into())], 7.0);
+        m.labeled_gauge("autospmv_matrix_requests", "Per-matrix.", &[("matrix", "1".into())], 9.0);
+        let text = m.render_text();
+        assert!(text.contains("# TYPE autospmv_requests_total counter"), "{text}");
+        assert!(text.contains("autospmv_requests_total 42"), "{text}");
+        assert_eq!(text.matches("# TYPE autospmv_matrix_requests gauge").count(), 1, "{text}");
+        assert!(text.contains("autospmv_matrix_requests{matrix=\"0\"} 7"), "{text}");
+        assert!(text.contains("autospmv_matrix_requests{matrix=\"1\"} 9"), "{text}");
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_end_at_inf() {
+        let h = Hist::new();
+        h.record(Duration::from_nanos(3)); // bucket 2: [2, 4) ns
+        h.record(Duration::from_nanos(100)); // bucket 7: [64, 128) ns
+        let mut m = Metrics::new();
+        m.histogram("autospmv_stage_seconds", "Stage latency.", &[], &h.snapshot());
+        let text = m.render_text();
+        assert!(text.contains("# TYPE autospmv_stage_seconds histogram"), "{text}");
+        // below bucket 2's edge: 0 observed; at/after: cumulative
+        assert!(text.contains("autospmv_stage_seconds_bucket{le=\"0.000000002\"} 0"), "{text}");
+        assert!(text.contains("autospmv_stage_seconds_bucket{le=\"0.000000004\"} 1"), "{text}");
+        assert!(text.contains("autospmv_stage_seconds_bucket{le=\"0.000000128\"} 2"), "{text}");
+        assert!(text.contains("autospmv_stage_seconds_bucket{le=\"+Inf\"} 2"), "{text}");
+        assert!(text.contains("autospmv_stage_seconds_count 2"), "{text}");
+        // cumulative counts never decrease
+        let mut last = 0.0f64;
+        for line in text.lines().filter(|l| l.contains("_bucket{")) {
+            let v: f64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "non-monotone bucket line: {line}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn label_values_are_escaped_and_table_twin_matches() {
+        let mut m = Metrics::new();
+        m.labeled_gauge("g", "Gauge.", &[("name", "a\"b\\c".into())], 1.0);
+        let text = m.render_text();
+        assert!(text.contains("g{name=\"a\\\"b\\\\c\"} 1"), "{text}");
+        let table = m.to_table("metrics");
+        let json = table.to_json();
+        assert!(json.contains("\"g\""), "{json}");
+    }
+}

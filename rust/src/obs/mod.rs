@@ -1,0 +1,32 @@
+//! Observability primitives for the serving pool and the online loop.
+//!
+//! Three pillars, all allocation-free on the hot path:
+//!
+//! 1. **Stage tracing** ([`trace`]): every served request decomposes its
+//!    end-to-end latency into monotonic stage durations (queue-wait →
+//!    batch-wait → convert → exec → reply), recorded into per-stage
+//!    log2 histograms ([`hist`]) that sum — exactly, by construction —
+//!    to the end-to-end histogram telemetry already keeps.
+//! 2. **Control-plane event journal** ([`journal`]): a bounded,
+//!    drop-oldest ring of structured events (hot-swap, retrain,
+//!    migration, drift, exploration, session lifecycle) shared by the
+//!    router and every shard, so a drift-triggered hot-swap leaves a
+//!    causal paper trail instead of three counter bumps.
+//! 3. **Metrics export** ([`metrics`]): renders counters, gauges, and
+//!    the log2 histograms in Prometheus text-exposition format, plus a
+//!    [`crate::report::Table`] twin for TSV/JSON emission.
+//!
+//! The hot-path cost budget is two `Instant::now()` calls and a handful
+//! of relaxed atomic adds per request (gated by `PoolConfig::tracing`);
+//! journal emission takes a mutex but only on control-plane events,
+//! which are rare by design.
+
+pub mod hist;
+pub mod journal;
+pub mod metrics;
+pub mod trace;
+
+pub use hist::{Hist, HistSnapshot, HIST_BUCKETS};
+pub use journal::{Event, EventKind, Journal, SwapTrigger, DEFAULT_JOURNAL_CAP};
+pub use metrics::Metrics;
+pub use trace::{Stage, StageHists, StageStats, Trace, N_STAGES};

@@ -1,0 +1,203 @@
+//! Request-lifecycle stage taxonomy and per-stage histograms.
+//!
+//! A served product's end-to-end latency decomposes into five
+//! monotonic stages measured off shared boundary `Instant`s in the
+//! shard hot path, so per-request stage durations sum to the recorded
+//! service time *exactly* (no double counting, no gaps):
+//!
+//! ```text
+//! enqueued ──queue_wait──► collect_start ──batch_wait──► group_start
+//!   ──convert──► conv_done ──exec/spmm_exec──► exec_done ──reply──► now
+//! ```
+//!
+//! `queue_wait` is the time the job sat in the shard channel before a
+//! worker picked its batch up; `batch_wait` is time spent inside the
+//! coalescing window; `convert` covers routing + conversion-cache
+//! resolution; `exec` (or `spmm_exec` when the dispatch ran a true
+//! SpMM batch path) is the kernel dispatch; `reply` is result
+//! marshalling back to the caller. Iterative-session steps are a
+//! single `session_step` stage whose duration *is* their end-to-end
+//! latency, preserving the sum-equals-e2e invariant pool-wide.
+
+use super::hist::{Hist, HistSnapshot};
+use std::fmt;
+use std::time::Duration;
+
+/// Lifecycle stages (label order is rendering order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Enqueue → first message of the batch picked up by a worker.
+    QueueWait,
+    /// Batch pickup → coalescing window closed (group execution start).
+    BatchWait,
+    /// Routing, length validation, and conversion-cache resolution.
+    Convert,
+    /// Kernel dispatch on the per-vector path.
+    Exec,
+    /// Kernel dispatch through a true SpMM batch path.
+    SpmmExec,
+    /// One iterative-session step, end to end.
+    SessionStep,
+    /// Result marshalling back to the caller.
+    Reply,
+}
+
+/// Number of stage labels.
+pub const N_STAGES: usize = Stage::ALL.len();
+
+impl Stage {
+    pub const ALL: [Stage; 7] = [
+        Stage::QueueWait,
+        Stage::BatchWait,
+        Stage::Convert,
+        Stage::Exec,
+        Stage::SpmmExec,
+        Stage::SessionStep,
+        Stage::Reply,
+    ];
+
+    /// Stable snake_case label (metric label / report key).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchWait => "batch_wait",
+            Stage::Convert => "convert",
+            Stage::Exec => "exec",
+            Stage::SpmmExec => "spmm_exec",
+            Stage::SessionStep => "session_step",
+            Stage::Reply => "reply",
+        }
+    }
+
+    fn index(self) -> usize {
+        self as usize
+    }
+}
+
+impl fmt::Display for Stage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One request's stage decomposition, returned on the `Response` when
+/// tracing is enabled. Stage durations sum to `Response::service_time`
+/// exactly (shared boundary instants).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Trace {
+    pub queue_wait: Duration,
+    pub batch_wait: Duration,
+    pub convert: Duration,
+    pub exec: Duration,
+    pub reply: Duration,
+}
+
+impl Trace {
+    /// Sum of all stages (== the request's service time).
+    pub fn total(&self) -> Duration {
+        self.queue_wait + self.batch_wait + self.convert + self.exec + self.reply
+    }
+}
+
+/// Per-stage latency histograms, pool-wide (one [`Hist`] per label).
+pub struct StageHists {
+    hists: [Hist; N_STAGES],
+}
+
+impl StageHists {
+    pub fn new() -> Self {
+        StageHists { hists: std::array::from_fn(|_| Hist::new()) }
+    }
+
+    pub fn record(&self, stage: Stage, d: Duration) {
+        self.hists[stage.index()].record(d);
+    }
+
+    /// Record a batch-shared stage once for `n` riders.
+    pub fn record_n(&self, stage: Stage, d: Duration, n: u64) {
+        self.hists[stage.index()].record_n(d, n);
+    }
+
+    /// Snapshot every stage, `Stage::ALL` order (empty stages included
+    /// so reports are deterministic in shape).
+    pub fn snapshot(&self) -> Vec<StageStats> {
+        Stage::ALL
+            .iter()
+            .map(|&stage| StageStats { stage, hist: self.hists[stage.index()].snapshot() })
+            .collect()
+    }
+}
+
+impl Default for StageHists {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One stage's aggregated latency statistics.
+#[derive(Debug, Clone)]
+pub struct StageStats {
+    pub stage: Stage,
+    pub hist: HistSnapshot,
+}
+
+impl StageStats {
+    pub fn count(&self) -> u64 {
+        self.hist.count
+    }
+
+    /// Accumulated stage time across all requests.
+    pub fn total(&self) -> Duration {
+        Duration::from_nanos(self.hist.sum_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_labels_are_unique_snake_case() {
+        let mut seen = std::collections::HashSet::new();
+        for s in Stage::ALL {
+            let name = s.name();
+            assert!(seen.insert(name), "duplicate stage label {name}");
+            assert!(
+                name.chars().all(|c| c.is_ascii_lowercase() || c == '_'),
+                "label {name} is not snake_case"
+            );
+            assert_eq!(format!("{s}"), name);
+        }
+        assert_eq!(Stage::ALL.len(), N_STAGES);
+    }
+
+    #[test]
+    fn trace_total_sums_stages() {
+        let t = Trace {
+            queue_wait: Duration::from_micros(1),
+            batch_wait: Duration::from_micros(2),
+            convert: Duration::from_micros(3),
+            exec: Duration::from_micros(4),
+            reply: Duration::from_micros(5),
+        };
+        assert_eq!(t.total(), Duration::from_micros(15));
+        assert_eq!(Trace::default().total(), Duration::ZERO);
+    }
+
+    #[test]
+    fn stage_hists_snapshot_in_label_order() {
+        let h = StageHists::new();
+        h.record(Stage::Exec, Duration::from_micros(10));
+        h.record_n(Stage::Convert, Duration::from_micros(2), 4);
+        let snap = h.snapshot();
+        assert_eq!(snap.len(), N_STAGES);
+        for (i, s) in snap.iter().enumerate() {
+            assert_eq!(s.stage, Stage::ALL[i]);
+        }
+        let by_stage = |stage: Stage| snap.iter().find(|s| s.stage == stage).unwrap().clone();
+        assert_eq!(by_stage(Stage::Exec).count(), 1);
+        assert_eq!(by_stage(Stage::Convert).count(), 4);
+        assert_eq!(by_stage(Stage::Convert).total(), Duration::from_micros(8));
+        assert_eq!(by_stage(Stage::QueueWait).count(), 0);
+    }
+}

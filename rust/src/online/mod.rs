@@ -49,9 +49,11 @@ pub use trainer::Trainer;
 use crate::coordinator::RunTimeOptimizer;
 use crate::features::Features;
 use crate::gpusim::Objective;
+use crate::obs::{EventKind, SwapTrigger};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex, Weak};
+use std::time::Instant;
 
 /// Tuning for the closed loop.
 #[derive(Debug, Clone)]
@@ -224,6 +226,14 @@ impl Online {
             value,
         );
         let newly_drifted = self.drift.add(&obs.features);
+        if newly_drifted {
+            // journal the rising edge with the detector's verdict (the
+            // shifted feature and how far it moved, in reference sigmas)
+            let status = self.drift.status();
+            self.router
+                .journal()
+                .emit(EventKind::Drift { feature: status.feature, sigma: status.max_shift });
+        }
         self.observer.record(obs);
         if !self.retraining_enabled() {
             return;
@@ -286,10 +296,23 @@ impl Online {
         if obs.is_empty() {
             return None;
         }
+        // attribute the retrain before rebasing clears the drift flag:
+        // an unabsorbed drift wins over the cadence, a direct
+        // `retrain_now` with no drift pending is a manual action
+        let trigger = if self.drift.status().drifted {
+            SwapTrigger::Drift
+        } else if force {
+            SwapTrigger::Manual
+        } else {
+            SwapTrigger::Cadence
+        };
+        let t0 = Instant::now();
         let next = trainer.retrain_with(&obs, self.cfg.joint_knobs);
+        let duration = t0.elapsed();
         self.last_retrain_total.store(total, Ordering::Release);
         self.retrains.fetch_add(1, Ordering::Relaxed);
         self.drift.rebase();
+        self.router.journal().emit(EventKind::Retrain { examples: obs.len(), duration, trigger });
         // the retrained router + knob policy swap in as ONE policy, so
         // a shard's re-decision pass sees a consistent joint surface
         let policy = if self.cfg.joint_knobs {
@@ -297,7 +320,7 @@ impl Online {
         } else {
             Policy::format_only(Arc::new(next.router))
         };
-        Some(self.router.install_policy(Arc::new(policy)))
+        Some(self.router.install_policy_traced(Arc::new(policy), trigger))
     }
 
     /// Completed retrains.

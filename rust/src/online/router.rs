@@ -18,6 +18,7 @@
 use crate::coordinator::compile_time::{CompileChoice, KnobPolicy};
 use crate::coordinator::RunTimeOptimizer;
 use crate::features::Features;
+use crate::obs::{EventKind, Journal, SwapTrigger, DEFAULT_JOURNAL_CAP};
 use crate::sparse::Format;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
@@ -61,6 +62,10 @@ pub struct SwapRouter {
     /// Mirror of `version` for blocking waiters ([`Self::wait_for_version`]).
     waiters: Mutex<u64>,
     cv: Condvar,
+    /// Control-plane event journal. The router owns it because it is
+    /// the one object shared by the online loop (created first) and
+    /// the pool (which hands it to shards via `Telemetry`).
+    journal: Arc<Journal>,
 }
 
 impl SwapRouter {
@@ -75,7 +80,13 @@ impl SwapRouter {
             version: AtomicU64::new(1),
             waiters: Mutex::new(1),
             cv: Condvar::new(),
+            journal: Arc::new(Journal::new(DEFAULT_JOURNAL_CAP)),
         }
+    }
+
+    /// The control-plane event journal (shared with pool + shards).
+    pub fn journal(&self) -> &Arc<Journal> {
+        &self.journal
     }
 
     /// Current policy version (1 = the initial, never-swapped policy).
@@ -101,7 +112,14 @@ impl SwapRouter {
     }
 
     /// Atomically replace the whole policy; returns the new version.
+    /// Direct calls journal as a manual swap; the online loop uses
+    /// [`Self::install_policy_traced`] to record what triggered it.
     pub fn install_policy(&self, next: Arc<Policy>) -> u64 {
+        self.install_policy_traced(next, SwapTrigger::Manual)
+    }
+
+    /// Replace the policy and journal the hot-swap with its trigger.
+    pub fn install_policy_traced(&self, next: Arc<Policy>, trigger: SwapTrigger) -> u64 {
         let new_version = {
             let mut guard = self.inner.write().expect("router lock");
             *guard = next;
@@ -114,6 +132,8 @@ impl SwapRouter {
         let mut w = self.waiters.lock().expect("router waiters lock");
         *w = (*w).max(new_version);
         self.cv.notify_all();
+        drop(w);
+        self.journal.emit(EventKind::HotSwap { version: new_version, trigger });
         new_version
     }
 
@@ -201,6 +221,27 @@ mod tests {
             assert!(TB_SIZES.contains(&c.tb_size), "{f}: {c}");
             assert!(MAXRREGCOUNT.contains(&c.maxrregcount), "{f}: {c}");
         }
+    }
+
+    #[test]
+    fn installs_journal_hot_swap_events_with_triggers() {
+        let swap = SwapRouter::new(router());
+        assert!(swap.journal().is_empty(), "the initial policy is not a swap");
+        swap.install(router());
+        swap.install_policy_traced(
+            Arc::new(Policy::format_only(router())),
+            SwapTrigger::Drift,
+        );
+        let events = swap.journal().snapshot();
+        assert_eq!(events.len(), 2);
+        assert_eq!(
+            events[0].kind,
+            EventKind::HotSwap { version: 2, trigger: SwapTrigger::Manual }
+        );
+        assert_eq!(
+            events[1].kind,
+            EventKind::HotSwap { version: 3, trigger: SwapTrigger::Drift }
+        );
     }
 
     #[test]

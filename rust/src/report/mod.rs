@@ -100,8 +100,11 @@ impl Table {
     }
 }
 
-/// Minimal JSON string encoder (quotes, backslashes, control chars).
-fn json_escape(s: &str) -> String {
+/// Minimal JSON string encoder: returns `s` quoted, with quotes,
+/// backslashes, and control characters escaped per RFC 8259 (hostile
+/// matrix names / knob extras must not corrupt `BENCH_*.json` for
+/// `tools/bench_gate.py`). Shared with the `obs` event journal.
+pub fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for ch in s.chars() {
@@ -212,6 +215,181 @@ mod tests {
             "{\"title\":\"T \\\"quoted\\\"\",\"header\":[\"a\",\"b\"],\
              \"rows\":[[\"x\\ty\",\"1\"]]}"
         );
+    }
+
+    /// Strict recursive-descent parser for the JSON subset `to_json`
+    /// emits (objects / arrays / strings with full escape handling).
+    /// Independent of the emitter so the round-trip test actually
+    /// exercises RFC 8259 escaping rather than mirroring it.
+    mod strict_json {
+        #[derive(Debug, Clone, PartialEq)]
+        pub enum Value {
+            Str(String),
+            Arr(Vec<Value>),
+            Obj(Vec<(String, Value)>),
+        }
+
+        pub fn parse(s: &str) -> Result<Value, String> {
+            let chars: Vec<char> = s.chars().collect();
+            let mut pos = 0usize;
+            let v = value(&chars, &mut pos)?;
+            skip_ws(&chars, &mut pos);
+            if pos != chars.len() {
+                return Err(format!("trailing garbage at {pos}"));
+            }
+            Ok(v)
+        }
+
+        fn skip_ws(c: &[char], pos: &mut usize) {
+            while *pos < c.len() && c[*pos].is_ascii_whitespace() {
+                *pos += 1;
+            }
+        }
+
+        fn expect(c: &[char], pos: &mut usize, want: char) -> Result<(), String> {
+            if c.get(*pos) == Some(&want) {
+                *pos += 1;
+                Ok(())
+            } else {
+                Err(format!("expected {want:?} at {pos}, got {:?}", c.get(*pos)))
+            }
+        }
+
+        fn value(c: &[char], pos: &mut usize) -> Result<Value, String> {
+            skip_ws(c, pos);
+            match c.get(*pos) {
+                Some('"') => string(c, pos).map(Value::Str),
+                Some('[') => {
+                    *pos += 1;
+                    let mut items = Vec::new();
+                    skip_ws(c, pos);
+                    if c.get(*pos) == Some(&']') {
+                        *pos += 1;
+                        return Ok(Value::Arr(items));
+                    }
+                    loop {
+                        items.push(value(c, pos)?);
+                        skip_ws(c, pos);
+                        match c.get(*pos) {
+                            Some(',') => *pos += 1,
+                            Some(']') => {
+                                *pos += 1;
+                                return Ok(Value::Arr(items));
+                            }
+                            other => return Err(format!("bad array sep {other:?}")),
+                        }
+                    }
+                }
+                Some('{') => {
+                    *pos += 1;
+                    let mut entries = Vec::new();
+                    skip_ws(c, pos);
+                    if c.get(*pos) == Some(&'}') {
+                        *pos += 1;
+                        return Ok(Value::Obj(entries));
+                    }
+                    loop {
+                        skip_ws(c, pos);
+                        let k = string(c, pos)?;
+                        skip_ws(c, pos);
+                        expect(c, pos, ':')?;
+                        entries.push((k, value(c, pos)?));
+                        skip_ws(c, pos);
+                        match c.get(*pos) {
+                            Some(',') => *pos += 1,
+                            Some('}') => {
+                                *pos += 1;
+                                return Ok(Value::Obj(entries));
+                            }
+                            other => return Err(format!("bad object sep {other:?}")),
+                        }
+                    }
+                }
+                other => Err(format!("unexpected {other:?} at {pos}")),
+            }
+        }
+
+        fn string(c: &[char], pos: &mut usize) -> Result<String, String> {
+            expect(c, pos, '"')?;
+            let mut out = String::new();
+            loop {
+                match c.get(*pos) {
+                    None => return Err("unterminated string".into()),
+                    Some('"') => {
+                        *pos += 1;
+                        return Ok(out);
+                    }
+                    Some(ch) if (*ch as u32) < 0x20 => {
+                        return Err(format!("raw control char {:#x} in string", *ch as u32));
+                    }
+                    Some('\\') => {
+                        *pos += 1;
+                        let esc = c.get(*pos).ok_or("dangling escape")?;
+                        *pos += 1;
+                        match esc {
+                            '"' => out.push('"'),
+                            '\\' => out.push('\\'),
+                            '/' => out.push('/'),
+                            'n' => out.push('\n'),
+                            'r' => out.push('\r'),
+                            't' => out.push('\t'),
+                            'b' => out.push('\u{8}'),
+                            'f' => out.push('\u{c}'),
+                            'u' => {
+                                let hex: String =
+                                    c.get(*pos..*pos + 4).ok_or("short \\u")?.iter().collect();
+                                *pos += 4;
+                                let code = u32::from_str_radix(&hex, 16)
+                                    .map_err(|e| format!("bad \\u{hex}: {e}"))?;
+                                let ch = char::from_u32(code)
+                                    .ok_or_else(|| format!("bad codepoint {code}"))?;
+                                out.push(ch);
+                            }
+                            other => return Err(format!("bad escape \\{other}")),
+                        }
+                    }
+                    Some(ch) => {
+                        out.push(*ch);
+                        *pos += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn to_json_round_trips_hostile_strings_through_a_real_parser() {
+        use strict_json::Value;
+        // quotes, backslashes, every named control escape, raw control
+        // chars, unicode, and a Windows path — everything that could
+        // leak from a matrix name or knob extra into BENCH_*.json
+        let hostile = [
+            "plain",
+            "quo\"te",
+            "back\\slash",
+            "line\nbreak\r\ttab",
+            "bell\u{7}null\u{0}esc\u{1b}",
+            "C:\\mats\\\"weird\".mtx",
+            "日本語 + ε",
+            "",
+        ];
+        let mut t = Table::new(hostile[5], &["name", "v"]);
+        for (i, h) in hostile.iter().enumerate() {
+            t.row(vec![h.to_string(), i.to_string()]);
+        }
+        let parsed = strict_json::parse(&t.to_json()).expect("emitter must produce valid JSON");
+        let Value::Obj(entries) = parsed else { panic!("top level must be an object") };
+        let get = |k: &str| entries.iter().find(|(n, _)| n == k).map(|(_, v)| v.clone());
+        assert_eq!(get("title"), Some(Value::Str(hostile[5].to_string())));
+        let Some(Value::Arr(rows)) = get("rows") else { panic!("rows must be an array") };
+        assert_eq!(rows.len(), hostile.len());
+        for (row, h) in rows.iter().zip(hostile) {
+            let Value::Arr(cells) = row else { panic!("row must be an array") };
+            assert_eq!(cells[0], Value::Str(h.to_string()), "round-trip of {h:?}");
+        }
+        // the parser itself must reject what the escaper prevents
+        assert!(strict_json::parse("{\"a\":\"raw\ncontrol\"}").is_err());
+        assert!(strict_json::parse("[\"dangling\\").is_err());
     }
 
     #[test]

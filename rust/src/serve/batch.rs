@@ -28,6 +28,10 @@ pub struct Job {
     /// Submission time — service latency is measured end-to-end from
     /// here, so queue wait and admission-window wait are included.
     pub enqueued: Instant,
+    /// Client-declared latency budget. Purely observational: the shard
+    /// never sheds or reorders on it, it only counts misses
+    /// (`Counters::deadline_misses`) against end-to-end service time.
+    pub deadline: Option<Duration>,
     pub reply: Sender<Result<Response>>,
 }
 
@@ -90,7 +94,7 @@ mod tests {
 
     fn job(matrix_id: u64) -> Job {
         let (reply, _rx) = channel();
-        Job { matrix_id, x: vec![1.0].into(), enqueued: Instant::now(), reply }
+        Job { matrix_id, x: vec![1.0].into(), enqueued: Instant::now(), deadline: None, reply }
     }
 
     #[test]

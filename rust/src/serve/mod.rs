@@ -89,4 +89,8 @@ pub struct Response {
     /// Modeled energy of this product on the configured GPU profile
     /// (joules, `gpusim` analytic model; idle excluded per paper §6.3).
     pub energy_j: f64,
+    /// Per-stage decomposition of `service_time` (queue wait, batch
+    /// wait, convert, exec, reply marshal — the stages sum exactly to
+    /// it). `None` when the pool runs with `PoolConfig::tracing` off.
+    pub trace: Option<crate::obs::Trace>,
 }

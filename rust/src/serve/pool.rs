@@ -22,6 +22,7 @@ use super::telemetry::{MatrixStats, Telemetry};
 use super::Response;
 use crate::coordinator::RunTimeOptimizer;
 use crate::gpusim::{turing_gtx1650m, GpuArch};
+use crate::obs::{Event, Metrics, StageStats};
 use crate::online::{DriftStatus, Online, SwapRouter};
 use crate::sparse::convert::ConvertParams;
 use crate::sparse::{Coo, Format};
@@ -49,6 +50,12 @@ pub struct PoolConfig {
     pub convert: ConvertParams,
     /// GPU profile used for the telemetry energy/power model.
     pub arch: GpuArch,
+    /// Request-lifecycle stage tracing (DESIGN.md §10). On by default:
+    /// the hot-path cost is two `Instant::now` reads and a handful of
+    /// relaxed atomic adds per request (benchmarked under 3% end to
+    /// end). Off, responses carry `trace: None` and the stage
+    /// histograms stay empty.
+    pub tracing: bool,
 }
 
 impl Default for PoolConfig {
@@ -60,6 +67,7 @@ impl Default for PoolConfig {
             cache_capacity: 64,
             convert: ConvertParams::default(),
             arch: turing_gtx1650m(),
+            tracing: true,
         }
     }
 }
@@ -124,6 +132,20 @@ pub struct PoolStats {
     pub elided_bytes: u64,
     /// Host round-trips session steps elided (one per pure step).
     pub round_trips_elided: u64,
+    /// Requests submitted with a client deadline tag.
+    pub deadline_tagged: u64,
+    /// Tagged requests whose end-to-end service time exceeded their
+    /// deadline (observational — nothing is shed).
+    pub deadline_misses: u64,
+    /// Per-stage latency histograms (one row per [`crate::obs::Stage`],
+    /// all empty when tracing is off). The stages decompose the
+    /// end-to-end histograms exactly: see [`PoolStats::stage_coverage`].
+    pub stage_stats: Vec<StageStats>,
+    /// Control-plane events emitted over the pool's lifetime (including
+    /// any that have since been dropped from the bounded journal).
+    pub events_total: u64,
+    /// Events dropped from the journal ring (oldest-first) at capacity.
+    pub events_dropped: u64,
     pub per_matrix: Vec<MatrixStats>,
 }
 
@@ -184,6 +206,189 @@ impl PoolStats {
     pub fn max_service(&self) -> Duration {
         self.per_matrix.iter().map(|m| m.max_latency).max().unwrap_or(Duration::ZERO)
     }
+
+    /// Summed duration across every stage histogram.
+    pub fn stage_total(&self) -> Duration {
+        self.stage_stats.iter().map(|s| s.total()).sum()
+    }
+
+    /// Ratio of stage-decomposed time to end-to-end service time. The
+    /// shard records each request's stages against the same shared
+    /// boundary instants it derives `service_time` from, so with
+    /// tracing on this is 1.0 exactly (stage durations are an exact
+    /// partition, summed in integer nanoseconds); 0.0 when nothing was
+    /// served or tracing is off.
+    pub fn stage_coverage(&self) -> f64 {
+        let e2e = self.total_service().as_nanos();
+        if e2e == 0 {
+            0.0
+        } else {
+            self.stage_total().as_nanos() as f64 / e2e as f64
+        }
+    }
+
+    /// Export the snapshot as metric families (DESIGN.md §10.3).
+    /// Render with [`Metrics::render_text`] (Prometheus text
+    /// exposition) or [`Metrics::to_table`] (the `report` twin).
+    pub fn metrics(&self) -> Metrics {
+        let mut m = Metrics::new();
+        m.counter(
+            "spmv_requests_total",
+            "Products served, session steps included",
+            self.requests as f64,
+        );
+        m.counter("spmv_dispatches_total", "Kernel dispatches executed", self.dispatches as f64);
+        m.counter("spmv_launches_total", "Kernel launches executed", self.launches as f64);
+        m.counter(
+            "spmv_spmm_dispatches_total",
+            "Dispatches that rode a true SpMM path",
+            self.spmm_dispatches as f64,
+        );
+        m.counter(
+            "spmv_coalesced_batches_total",
+            "Dispatches that coalesced more than one request",
+            self.coalesced_batches as f64,
+        );
+        m.counter("spmv_conversions_total", "Format conversions", self.conversions as f64);
+        m.counter(
+            "spmv_reconversions_total",
+            "Post-eviction re-conversions on the chosen path",
+            self.reconversions as f64,
+        );
+        m.counter("spmv_evictions_total", "Conversion-cache evictions", self.evictions as f64);
+        m.counter(
+            "spmv_migrations_total",
+            "Matrices migrated to a new format on a hot-swap",
+            self.migrations as f64,
+        );
+        m.counter(
+            "spmv_knob_migrations_total",
+            "Matrices whose compile-knob decision changed on a hot-swap",
+            self.knob_migrations as f64,
+        );
+        m.counter(
+            "spmv_explored_requests_total",
+            "Requests the exploration bandit routed off the predicted path",
+            self.explored_requests as f64,
+        );
+        m.counter("spmv_retrains_total", "Completed online retrains", self.retrains as f64);
+        m.counter(
+            "spmv_sessions_opened_total",
+            "Iterative sessions opened",
+            self.sessions_opened as f64,
+        );
+        m.counter(
+            "spmv_session_steps_total",
+            "Products served as chained session steps",
+            self.session_steps as f64,
+        );
+        m.counter(
+            "spmv_marshalled_bytes_total",
+            "Vector bytes moved across the dispatch boundary",
+            self.marshalled_bytes as f64,
+        );
+        m.counter(
+            "spmv_elided_bytes_total",
+            "Vector bytes session steps kept resident",
+            self.elided_bytes as f64,
+        );
+        m.counter(
+            "spmv_round_trips_elided_total",
+            "Host round-trips elided by session steps",
+            self.round_trips_elided as f64,
+        );
+        m.counter(
+            "spmv_deadline_tagged_total",
+            "Requests submitted with a deadline tag",
+            self.deadline_tagged as f64,
+        );
+        m.counter(
+            "spmv_deadline_misses_total",
+            "Tagged requests that exceeded their deadline",
+            self.deadline_misses as f64,
+        );
+        m.counter(
+            "spmv_events_total",
+            "Control-plane events emitted (journaled plus dropped)",
+            self.events_total as f64,
+        );
+        m.counter(
+            "spmv_events_dropped_total",
+            "Control-plane events dropped from the bounded journal",
+            self.events_dropped as f64,
+        );
+        m.gauge(
+            "spmv_router_version",
+            "Policy version (1 until the first hot-swap)",
+            self.router_version as f64,
+        );
+        m.gauge(
+            "spmv_registered_matrices",
+            "Matrices registered across shards",
+            self.registered_matrices as f64,
+        );
+        m.gauge(
+            "spmv_cached_matrices",
+            "Converted forms resident in shard LRUs",
+            self.cached_matrices as f64,
+        );
+        m.gauge(
+            "spmv_active_sessions",
+            "Iterative sessions currently open",
+            self.active_sessions as f64,
+        );
+        m.gauge("spmv_workers", "Shard worker threads", self.workers as f64);
+        m.gauge(
+            "spmv_modeled_energy_joules",
+            "Total modeled energy across matrices (gpusim)",
+            self.total_energy_j,
+        );
+        m.gauge(
+            "spmv_stage_coverage_ratio",
+            "Stage-decomposed time over end-to-end service time (1.0 = exact)",
+            self.stage_coverage(),
+        );
+        for s in &self.stage_stats {
+            m.histogram(
+                "spmv_stage_seconds",
+                "Per-request latency decomposed by lifecycle stage",
+                &[("stage", s.stage.name().to_string())],
+                &s.hist,
+            );
+        }
+        for mat in &self.per_matrix {
+            let labels = [("matrix", mat.id.to_string())];
+            m.labeled_gauge(
+                "spmv_matrix_requests",
+                "Requests served per registered matrix",
+                &labels,
+                mat.requests as f64,
+            );
+            if let Some(p50) = mat.p50_us {
+                m.labeled_gauge(
+                    "spmv_matrix_p50_seconds",
+                    "Median end-to-end service time per matrix",
+                    &labels,
+                    p50 * 1e-6,
+                );
+            }
+            if let Some(p99) = mat.p99_us {
+                m.labeled_gauge(
+                    "spmv_matrix_p99_seconds",
+                    "p99 end-to-end service time per matrix",
+                    &labels,
+                    p99 * 1e-6,
+                );
+            }
+            m.labeled_gauge(
+                "spmv_matrix_energy_joules",
+                "Modeled energy per matrix (gpusim)",
+                &labels,
+                mat.energy_j,
+            );
+        }
+        m
+    }
 }
 
 /// Handle to a running sharded serving pool.
@@ -217,13 +422,17 @@ impl Pool {
         backend: BackendSpec,
         cfg: PoolConfig,
     ) -> Pool {
-        let telemetry = Arc::new(Telemetry::new());
+        // The router owns the event journal (the online loop emits into
+        // it before any pool exists); telemetry shares it so shard-side
+        // emissions and `Pool::events` read the same ring.
+        let telemetry = Arc::new(Telemetry::with_journal(router.journal().clone()));
         let shard_cfg = ShardCfg {
             convert: cfg.convert,
             batch_window: cfg.batch_window,
             max_batch: cfg.max_batch.max(1),
             cache_capacity: cfg.cache_capacity.max(1),
             arch: cfg.arch.clone(),
+            tracing: cfg.tracing,
         };
         let shards = (0..cfg.workers.max(1))
             .map(|i| {
@@ -279,6 +488,21 @@ impl Pool {
             .map_err(|_| anyhow!("serving pool dropped request"))?
     }
 
+    /// [`Pool::product`] with a client deadline tag: the tag is purely
+    /// observational (nothing is shed or reordered), counting the
+    /// request in `deadline_tagged` and, when its end-to-end service
+    /// time exceeds `deadline`, in `deadline_misses`.
+    pub fn product_with_deadline(
+        &self,
+        matrix_id: u64,
+        x: impl Into<Arc<[f32]>>,
+        deadline: Duration,
+    ) -> Result<Response> {
+        self.product_async_with_deadline(matrix_id, x, Some(deadline))?
+            .recv()
+            .map_err(|_| anyhow!("serving pool dropped request"))?
+    }
+
     /// Submit without waiting; the receiver yields the response later.
     /// Pipelining requests this way is also what fills the admission
     /// queue enough for coalescing to kick in. The payload is a shared
@@ -290,6 +514,17 @@ impl Pool {
         matrix_id: u64,
         x: impl Into<Arc<[f32]>>,
     ) -> Result<Receiver<Result<Response>>> {
+        self.product_async_with_deadline(matrix_id, x, None)
+    }
+
+    /// [`Pool::product_async`] with an optional deadline tag (see
+    /// [`Pool::product_with_deadline`]).
+    pub fn product_async_with_deadline(
+        &self,
+        matrix_id: u64,
+        x: impl Into<Arc<[f32]>>,
+        deadline: Option<Duration>,
+    ) -> Result<Receiver<Result<Response>>> {
         let (reply, rx) = channel();
         self.shard_of(matrix_id)
             .tx
@@ -297,6 +532,7 @@ impl Pool {
                 matrix_id,
                 x: x.into(),
                 enqueued: Instant::now(),
+                deadline,
                 reply,
             }))
             .map_err(|_| anyhow!("serving pool stopped"))?;
@@ -369,8 +605,40 @@ impl Pool {
             marshalled_bytes: t.marshalled_bytes.load(Ordering::Relaxed),
             elided_bytes: t.elided_bytes.load(Ordering::Relaxed),
             round_trips_elided: t.round_trips_elided.load(Ordering::Relaxed),
+            deadline_tagged: t.deadline_tagged.load(Ordering::Relaxed),
+            deadline_misses: t.deadline_misses.load(Ordering::Relaxed),
+            stage_stats: self.telemetry.stages.snapshot(),
+            events_total: self.telemetry.journal().total(),
+            events_dropped: self.telemetry.journal().dropped(),
             per_matrix,
         })
+    }
+
+    /// Snapshot the control-plane event journal: hot-swaps, retrains,
+    /// migrations (applied and deferred), explored counterfactuals,
+    /// drift triggers, session open/close — in emission order, oldest
+    /// first (the ring drops oldest at capacity; see
+    /// [`PoolStats::events_dropped`]).
+    pub fn events(&self) -> Vec<Event> {
+        self.telemetry.journal().snapshot()
+    }
+
+    /// The event journal rendered as a JSON array (the serve CLI's
+    /// `--events-out` payload).
+    pub fn events_json(&self) -> String {
+        self.telemetry.journal().to_json()
+    }
+
+    /// Current metrics in Prometheus text-exposition format
+    /// (DESIGN.md §10.3).
+    pub fn metrics_text(&self) -> Result<String> {
+        Ok(self.stats()?.metrics().render_text())
+    }
+
+    /// The same metric families as a `report` table (the JSON/TSV twin
+    /// of [`Pool::metrics_text`]).
+    pub fn metrics_table(&self) -> Result<crate::report::Table> {
+        Ok(self.stats()?.metrics().to_table("metrics"))
     }
 }
 
@@ -866,6 +1134,135 @@ mod tests {
         session.write(vec![0.5; n]).unwrap();
         session.step().unwrap();
         assert_eq!(session.read().unwrap().len(), n);
+    }
+
+    #[test]
+    fn stage_histograms_decompose_end_to_end_latency_exactly() {
+        let pool = pool_with(test_router(), 1, 0);
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        let n = coo.n_cols;
+        pool.register(1, coo, 1000).unwrap();
+        for r in 0..6 {
+            let resp = pool.product(1, input(n, r)).unwrap();
+            // every response decomposes its own service time exactly
+            let t = resp.trace.expect("tracing is on by default");
+            assert_eq!(t.total(), resp.service_time);
+        }
+        // session steps land in their own stage and decompose too
+        let session = pool.open_session(1).unwrap();
+        session.write(input(n, 7)).unwrap();
+        session.step_n(3).unwrap();
+        let stats = pool.stats().unwrap();
+        assert_eq!(stats.stage_stats.len(), crate::obs::N_STAGES);
+        let count_of = |name: &str| {
+            stats.stage_stats.iter().find(|s| s.stage.name() == name).unwrap().hist.count
+        };
+        // sequential native products ride the SpMM path (1-launch walk)
+        assert_eq!(count_of("queue_wait"), 6);
+        assert_eq!(count_of("batch_wait"), 6);
+        assert_eq!(count_of("convert"), 6);
+        assert_eq!(count_of("spmm_exec"), 6);
+        assert_eq!(count_of("exec"), 0);
+        assert_eq!(count_of("reply"), 6);
+        assert_eq!(count_of("session_step"), 3);
+        // THE invariant: the stage histograms partition the end-to-end
+        // ones exactly — equal nanosecond sums, not approximately
+        assert_eq!(stats.stage_total(), stats.total_service());
+        assert!(
+            (stats.stage_coverage() - 1.0).abs() < 1e-12,
+            "coverage {}",
+            stats.stage_coverage()
+        );
+    }
+
+    #[test]
+    fn tracing_off_disables_traces_and_stage_histograms() {
+        let pool = Pool::start(
+            test_router(),
+            BackendSpec::Native,
+            PoolConfig { workers: 1, tracing: false, ..Default::default() },
+        );
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        let n = coo.n_cols;
+        pool.register(1, coo, 100).unwrap();
+        let resp = pool.product(1, input(n, 0)).unwrap();
+        assert!(resp.trace.is_none());
+        let stats = pool.stats().unwrap();
+        assert_eq!(stats.requests, 1, "e2e accounting is unaffected");
+        assert!(stats.stage_stats.iter().all(|s| s.hist.is_empty()));
+        assert_eq!(stats.stage_coverage(), 0.0);
+    }
+
+    #[test]
+    fn deadline_tags_count_and_misses_accumulate() {
+        let pool = pool_with(test_router(), 1, 0);
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        let n = coo.n_cols;
+        pool.register(1, coo, 100).unwrap();
+        // untagged requests never touch the deadline ledger
+        pool.product(1, input(n, 0)).unwrap();
+        // a zero deadline always misses; a one-hour one never does
+        pool.product_with_deadline(1, input(n, 1), Duration::ZERO).unwrap();
+        pool.product_with_deadline(1, input(n, 2), Duration::from_secs(3600)).unwrap();
+        let stats = pool.stats().unwrap();
+        assert_eq!(stats.requests, 3);
+        assert_eq!(stats.deadline_tagged, 2);
+        assert_eq!(stats.deadline_misses, 1);
+    }
+
+    #[test]
+    fn pool_journals_session_lifecycle_events_in_order() {
+        let pool = pool_with(test_router(), 1, 0);
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        let n = coo.n_cols;
+        pool.register(1, coo, 10_000).unwrap();
+        assert!(pool.events().is_empty(), "registration alone emits nothing");
+        let session = pool.open_session(1).unwrap();
+        session.write(input(n, 0)).unwrap();
+        session.step_n(2).unwrap();
+        drop(session);
+        // close is fire-and-forget: push another request through the
+        // same shard so the close message is definitely processed
+        pool.product(1, input(n, 1)).unwrap();
+        let events = pool.events();
+        let kinds: Vec<&str> = events.iter().map(|e| e.kind.name()).collect();
+        assert_eq!(kinds, vec!["session_open", "session_close"]);
+        match &events[1].kind {
+            crate::obs::EventKind::SessionClose { matrix, steps, .. } => {
+                assert_eq!(*matrix, 1);
+                assert_eq!(*steps, 2);
+            }
+            other => panic!("expected session_close, got {other:?}"),
+        }
+        assert!(events.windows(2).all(|w| w[0].seq < w[1].seq));
+        let stats = pool.stats().unwrap();
+        assert_eq!(stats.events_total, 2);
+        assert_eq!(stats.events_dropped, 0);
+        assert!(pool.events_json().contains("\"kind\":\"session_open\""));
+    }
+
+    #[test]
+    fn metrics_text_exposes_counters_stage_histograms_and_per_matrix_gauges() {
+        let pool = pool_with(test_router(), 1, 0);
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        let n = coo.n_cols;
+        pool.register(1, coo, 1000).unwrap();
+        for r in 0..4 {
+            pool.product(1, input(n, r)).unwrap();
+        }
+        let text = pool.metrics_text().unwrap();
+        assert!(text.contains("# TYPE spmv_requests_total counter"), "{text}");
+        assert!(text.contains("spmv_requests_total 4"), "{text}");
+        assert!(text.contains("# TYPE spmv_stage_seconds histogram"), "{text}");
+        assert!(
+            text.contains("spmv_stage_seconds_bucket{stage=\"queue_wait\",le=\"+Inf\"} 4"),
+            "{text}"
+        );
+        assert!(text.contains("spmv_matrix_requests{matrix=\"1\"} 4"), "{text}");
+        assert!(text.contains("spmv_stage_coverage_ratio 1"), "{text}");
+        let table = pool.metrics_table().unwrap();
+        assert_eq!(table.header, vec!["metric", "labels", "value"]);
+        assert!(table.rows.iter().any(|r| r[0] == "spmv_requests_total" && r[2] == "4"));
     }
 
     #[test]

@@ -33,6 +33,7 @@ use super::Response;
 use crate::coordinator::compile_time::CompileChoice;
 use crate::features::Features;
 use crate::gpusim::{simulate, GpuArch, KernelProfile, Measurement};
+use crate::obs::{EventKind, Stage, Trace};
 use crate::online::{JointDecision, Observation, Online, Policy, RouteChoice, SwapRouter};
 use crate::runtime::pjrt::{PreparedSession, PreparedSpmm, PreparedSpmv, SessionVec};
 use crate::sparse::convert::{self, AnyFormat, ConvertParams};
@@ -90,6 +91,11 @@ pub(crate) struct ShardCfg {
     pub max_batch: usize,
     pub cache_capacity: usize,
     pub arch: GpuArch,
+    /// Record request-lifecycle stage durations. The boundary
+    /// timestamps are captured either way (service time needs them);
+    /// the flag gates only the per-request saturating subtractions and
+    /// relaxed atomic histogram adds.
+    pub tracing: bool,
 }
 
 /// Handle to a running shard.
@@ -223,6 +229,9 @@ struct SessionState {
     vec: Option<SessionVec>,
     /// Square dimension: x and y lengths alike.
     n: usize,
+    /// Steps executed over the session's lifetime (reported by the
+    /// `session_close` journal event).
+    steps: u64,
 }
 
 fn worker_loop(
@@ -254,6 +263,7 @@ fn worker_loop(
             (cur_policy, cur_version) = router.load();
             re_decide_all(
                 cur_policy.as_ref(),
+                cur_version,
                 &mut backend,
                 &cfg,
                 &telemetry,
@@ -287,6 +297,10 @@ fn worker_loop(
                 let _ = ack.send(result);
             }
             ShardMsg::Product(job) => {
+                // Batch-window open: everything a request waited before
+                // this instant is queue time, everything after (until
+                // its group starts converting) is batch-formation time.
+                let collect_start = Instant::now();
                 let batch = collect_batch(job, &rx, &mut backlog, cfg.batch_window, cfg.max_batch);
                 for (id, jobs) in group_by_matrix(batch) {
                     execute_group(
@@ -299,6 +313,7 @@ fn worker_loop(
                         &mut cache,
                         id,
                         jobs,
+                        collect_start,
                     );
                 }
             }
@@ -322,6 +337,7 @@ fn worker_loop(
                 let _ = ack.send(do_session_step(
                     &mut backend,
                     &online,
+                    &cfg,
                     &telemetry,
                     &registry,
                     &mut sessions,
@@ -335,12 +351,18 @@ fn worker_loop(
             }
             ShardMsg::SessionClose { session } => {
                 if let Some(closed) = sessions.remove(&session) {
+                    telemetry.journal().emit(EventKind::SessionClose {
+                        session,
+                        matrix: closed.matrix_id,
+                        steps: closed.steps,
+                    });
                     // Last session on this matrix gone: apply whatever
                     // policy change was deferred while it was pinned
                     // (no-op when the decision is unchanged).
                     if !sessions.values().any(|s| s.matrix_id == closed.matrix_id) {
                         re_decide_all(
                             cur_policy.as_ref(),
+                            cur_version,
                             &mut backend,
                             &cfg,
                             &telemetry,
@@ -484,15 +506,18 @@ fn do_register(
 /// compile knob changed migrates: new conversion/marshalling into the
 /// cache under the new key, telemetry reconfigured, counters bumped
 /// (`migrations` for format changes, `knob_migrations` for knob
-/// changes — a joint change counts once in each). A failed rebuild
+/// changes — a joint change counts once in each), a `migration` event
+/// journaled with the policy version that decided it. A failed rebuild
 /// keeps the old decision — migration must never take a serving matrix
-/// down. A matrix pinned by an open session is SKIPPED: its migration
-/// is deferred to session close (the close handler re-runs this),
-/// keeping the session's conversion and chaining state stable — safe
-/// because every format's product is bit-identical anyway.
+/// down. A matrix pinned by an open session keeps its decision: the
+/// migration is deferred to session close (the close handler re-runs
+/// this) and journaled as `deferred_migration`, keeping the session's
+/// conversion and chaining state stable — safe because every format's
+/// product is bit-identical anyway.
 #[allow(clippy::too_many_arguments)] // worker-local state is deliberately split for borrow granularity
 fn re_decide_all(
     policy: &Policy,
+    version: u64,
     backend: &mut Backend,
     cfg: &ShardCfg,
     telemetry: &Telemetry,
@@ -500,10 +525,12 @@ fn re_decide_all(
     cache: &mut Lru<CacheKey, Rc<CachedMatrix>>,
     sessions: &HashMap<u64, SessionState>,
 ) {
-    for (id, reg) in registry.iter_mut() {
-        if sessions.values().any(|s| s.matrix_id == *id) {
-            continue; // pinned: defer to session boundary
-        }
+    // Sorted, not HashMap order: the journal's migration events must
+    // land in the same order on every seeded run.
+    let mut ids: Vec<u64> = registry.keys().copied().collect();
+    ids.sort_unstable();
+    for id in ids {
+        let reg = registry.get_mut(&id).expect("id came from registry.keys()");
         let decision =
             policy.router.decide_with_features(reg.features, Duration::ZERO, reg.iterations_hint);
         let (format, converted) = if decision.convert {
@@ -516,11 +543,21 @@ fn re_decide_all(
             continue;
         }
         let joint = JointDecision { format, choice };
+        if sessions.values().any(|s| s.matrix_id == id) {
+            // pinned: defer to session boundary, but journal what the
+            // new policy wanted so the deferral is observable
+            telemetry.journal().emit(EventKind::DeferredMigration {
+                matrix: id,
+                to: joint,
+                decided_by: version,
+            });
+            continue;
+        }
         // The target variant may already be cached (the common
         // convergence path: exploration built it before the retrain
         // picked it) — reuse it instead of re-converting/re-marshalling
         // and re-simulating.
-        let key = cache_key(*id, joint);
+        let key = cache_key(id, joint);
         let model = if cache.touch(key) {
             match cache.mru() {
                 Some((k, entry)) if *k == key => Some(entry.model),
@@ -545,6 +582,7 @@ fn re_decide_all(
             }
         };
         if let Some(model) = model {
+            let from = reg.decision();
             reg.tele.configure(format, choice, model.avg_power_w);
             if format != reg.format {
                 telemetry.totals.migrations.fetch_add(1, Ordering::Relaxed);
@@ -558,6 +596,12 @@ fn re_decide_all(
             reg.format = format;
             reg.choice = choice;
             reg.converted = converted;
+            telemetry.journal().emit(EventKind::Migration {
+                matrix: id,
+                from,
+                to: joint,
+                decided_by: version,
+            });
         }
     }
 }
@@ -625,6 +669,13 @@ fn ensure_cached(
 
 /// Execute one coalesced group of requests for a single matrix as ONE
 /// SpMM dispatch.
+///
+/// Stage-tracing contract (`cfg.tracing`): the boundaries `enqueued ->
+/// collect_start -> group_start -> exec_start -> exec_done -> reply`
+/// are shared instants, so each request's recorded stages (queue_wait
+/// + batch_wait + convert + exec + reply) sum EXACTLY to its
+/// `service_time` — the stage histograms decompose the end-to-end one
+/// rather than approximating it.
 #[allow(clippy::too_many_arguments)] // worker-local state is deliberately split for borrow granularity
 fn execute_group(
     backend: &mut Backend,
@@ -636,7 +687,11 @@ fn execute_group(
     cache: &mut Lru<CacheKey, Rc<CachedMatrix>>,
     id: u64,
     jobs: Vec<Job>,
+    collect_start: Instant,
 ) {
+    // Group-start boundary: batch-wait ends here; everything until the
+    // dispatch (routing, cache repair, conversion) is the convert stage.
+    let group_start = Instant::now();
     let Some(reg) = registry.get(&id) else {
         for job in jobs {
             let _ = job.reply.send(Err(anyhow!("unknown matrix id {id}")));
@@ -656,7 +711,7 @@ fn execute_group(
                 .send(Err(anyhow!("x length {} != n_cols {}", job.x.len(), n_cols)));
         } else {
             xs.push(job.x);
-            clients.push((job.enqueued, job.reply));
+            clients.push((job.enqueued, job.deadline, job.reply));
         }
     }
     if xs.is_empty() {
@@ -688,11 +743,20 @@ fn execute_group(
             ensure_cached(backend, cfg, telemetry, registry, sessions, cache, reg, id, route)
         {
             let msg = format!("convert matrix {id} to {}: {e:#}", route.decision);
-            for (_, reply) in clients {
+            for (_, _, reply) in clients {
                 let _ = reply.send(Err(anyhow!("{msg}")));
             }
             return;
         }
+    }
+    if route.explored {
+        // journal the counterfactual the bandit actually executed (a
+        // failed explored build fell back above and is not journaled)
+        telemetry.journal().emit(EventKind::Explored {
+            matrix: id,
+            from: reg.decision(),
+            to: route.decision,
+        });
     }
     let key = cache_key(id, route.decision);
     let cached = match cache.mru() {
@@ -742,7 +806,8 @@ fn execute_group(
             }
         }
     };
-    let exec_s = exec_start.elapsed().as_secs_f64();
+    let exec_done = Instant::now();
+    let exec_s = exec_done.duration_since(exec_start).as_secs_f64();
 
     // Batched SpMM dispatches charge the matrix stream once across the
     // whole group; the per-vector fallback really does stream it per
@@ -776,8 +841,47 @@ fn execute_group(
                 totals.explored_requests.fetch_add(batch_size as u64, Ordering::Relaxed);
             }
             reg.tele.route(route.decision, route.explored, batch_size as u64);
-            for ((enqueued, reply), y) in clients.into_iter().zip(ys) {
-                let service_time = enqueued.elapsed();
+            // Batch-shared stages: one atomic update with multiplicity
+            // batch_size — every request in the group experienced the
+            // same convert/exec wall time.
+            let convert_d = exec_start.duration_since(group_start);
+            let exec_d = exec_done.duration_since(exec_start);
+            if cfg.tracing {
+                let k = batch_size as u64;
+                telemetry.stages.record_n(Stage::Convert, convert_d, k);
+                let exec_stage = if spmm_path { Stage::SpmmExec } else { Stage::Exec };
+                telemetry.stages.record_n(exec_stage, exec_d, k);
+            }
+            for ((enqueued, deadline, reply), y) in clients.into_iter().zip(ys) {
+                let now = Instant::now();
+                let service_time = now.duration_since(enqueued);
+                let trace = if cfg.tracing {
+                    // A request that joined mid-window has no queue
+                    // time; its batch wait starts at its own enqueue.
+                    let queue_wait = collect_start.saturating_duration_since(enqueued);
+                    let waited_from =
+                        if enqueued > collect_start { enqueued } else { collect_start };
+                    let batch_wait = group_start.saturating_duration_since(waited_from);
+                    let reply_wait = now.duration_since(exec_done);
+                    telemetry.stages.record(Stage::QueueWait, queue_wait);
+                    telemetry.stages.record(Stage::BatchWait, batch_wait);
+                    telemetry.stages.record(Stage::Reply, reply_wait);
+                    Some(Trace {
+                        queue_wait,
+                        batch_wait,
+                        convert: convert_d,
+                        exec: exec_d,
+                        reply: reply_wait,
+                    })
+                } else {
+                    None
+                };
+                if let Some(dl) = deadline {
+                    totals.deadline_tagged.fetch_add(1, Ordering::Relaxed);
+                    if service_time > dl {
+                        totals.deadline_misses.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
                 reg.tele.record(service_time, model.energy_j);
                 let _ = reply.send(Ok(Response {
                     y,
@@ -786,6 +890,7 @@ fn execute_group(
                     service_time,
                     batch_size,
                     energy_j: model.energy_j,
+                    trace,
                 }));
             }
             // Closed loop, step "observe": feed the executed dispatch
@@ -807,7 +912,7 @@ fn execute_group(
         }
         Err(e) => {
             let msg = format!("execute batch for matrix {id}: {e:#}");
-            for (_, reply) in clients {
+            for (_, _, reply) in clients {
                 let _ = reply.send(Err(anyhow!("{msg}")));
             }
         }
@@ -855,9 +960,18 @@ fn do_session_open(
         Backend::Native => None,
     };
     telemetry.totals.sessions_opened.fetch_add(1, Ordering::Relaxed);
+    telemetry.journal().emit(EventKind::SessionOpen { session, matrix: matrix_id });
     sessions.insert(
         session,
-        SessionState { matrix_id, decision: route.decision, pinned, prepared, vec: None, n },
+        SessionState {
+            matrix_id,
+            decision: route.decision,
+            pinned,
+            prepared,
+            vec: None,
+            n,
+            steps: 0,
+        },
     );
     Ok(n)
 }
@@ -895,6 +1009,7 @@ fn do_session_write(
 fn do_session_step(
     backend: &mut Backend,
     online: &Option<Arc<Online>>,
+    cfg: &ShardCfg,
     telemetry: &Telemetry,
     registry: &HashMap<u64, Registered>,
     sessions: &mut HashMap<u64, SessionState>,
@@ -942,6 +1057,7 @@ fn do_session_step(
             }
         };
         state.vec = Some(next);
+        state.steps += 1;
         totals.requests.fetch_add(1, Ordering::Relaxed);
         totals.dispatches.fetch_add(1, Ordering::Relaxed);
         totals.launches.fetch_add(1, Ordering::Relaxed);
@@ -952,8 +1068,15 @@ fn do_session_step(
             totals.elided_bytes.fetch_add(8 * n, Ordering::Relaxed);
             totals.round_trips_elided.fetch_add(1, Ordering::Relaxed);
         }
+        // One shared elapsed read: the session_step stage and the
+        // per-matrix end-to-end histogram must see the same duration,
+        // or the stage decomposition would drift from the e2e totals.
+        let step_d = step_start.elapsed();
         if let Some(r) = reg {
-            r.tele.record(step_start.elapsed(), model.energy_j);
+            if cfg.tracing {
+                telemetry.stages.record(Stage::SessionStep, step_d);
+            }
+            r.tele.record(step_d, model.energy_j);
         }
     }
     if steps > 0 {

@@ -14,6 +14,8 @@
 //! observable.
 
 use crate::coordinator::compile_time::CompileChoice;
+use crate::obs::hist::Hist;
+use crate::obs::{Journal, StageHists, DEFAULT_JOURNAL_CAP};
 use crate::online::bandit::{knob_arm, knob_index};
 use crate::online::JointDecision;
 use crate::sparse::Format;
@@ -21,10 +23,6 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 use std::time::Duration;
-
-/// Log2 nanosecond buckets: bucket `b >= 1` counts latencies in
-/// `[2^(b-1), 2^b)` ns; bucket 47 tops out above ~39 hours.
-const HIST_BUCKETS: usize = 48;
 
 /// Number of format classes ([`Format::ALL`]).
 const N_FORMATS: usize = Format::ALL.len();
@@ -51,19 +49,6 @@ fn decode_choice(bits: u64) -> Option<CompileChoice> {
     })
 }
 
-fn bucket_of(ns: u64) -> usize {
-    ((64 - ns.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
-}
-
-/// Geometric representative of a bucket, in nanoseconds.
-fn bucket_rep_ns(b: usize) -> f64 {
-    if b == 0 {
-        0.0
-    } else {
-        0.75 * (1u64 << b.min(63)) as f64
-    }
-}
-
 /// Per-matrix counters; every field is an atomic so shards record
 /// without locking.
 pub struct MatrixTelemetry {
@@ -71,10 +56,8 @@ pub struct MatrixTelemetry {
     format_class: AtomicU64,
     /// [`encode_choice`] of the serving knob decision, or KNOB_UNSET.
     knob_bits: AtomicU64,
-    requests: AtomicU64,
-    lat_sum_ns: AtomicU64,
-    lat_max_ns: AtomicU64,
-    hist: [AtomicU64; HIST_BUCKETS],
+    /// End-to-end service latency (log2 buckets, see [`crate::obs::hist`]).
+    lat: Hist,
     /// Accumulated modeled energy (nanojoules).
     energy_nj: AtomicU64,
     /// Modeled average power draw (f64 bits), set at registration.
@@ -92,10 +75,7 @@ impl MatrixTelemetry {
         MatrixTelemetry {
             format_class: AtomicU64::new(FORMAT_UNSET),
             knob_bits: AtomicU64::new(KNOB_UNSET),
-            requests: AtomicU64::new(0),
-            lat_sum_ns: AtomicU64::new(0),
-            lat_max_ns: AtomicU64::new(0),
-            hist: std::array::from_fn(|_| AtomicU64::new(0)),
+            lat: Hist::new(),
             energy_nj: AtomicU64::new(0),
             model_power_w_bits: AtomicU64::new(0f64.to_bits()),
             chosen: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -117,11 +97,7 @@ impl MatrixTelemetry {
     /// per-request so explored dispatches charge their own format's
     /// cost, not the registered one's.
     pub fn record(&self, latency: Duration, energy_j: f64) {
-        let ns = latency.as_nanos().min(u64::MAX as u128) as u64;
-        self.requests.fetch_add(1, Ordering::Relaxed);
-        self.lat_sum_ns.fetch_add(ns, Ordering::Relaxed);
-        self.lat_max_ns.fetch_max(ns, Ordering::Relaxed);
-        self.hist[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.lat.record(latency);
         self.energy_nj.fetch_add((energy_j * 1e9).round().max(0.0) as u64, Ordering::Relaxed);
     }
 
@@ -133,16 +109,12 @@ impl MatrixTelemetry {
     }
 
     fn snapshot(&self, id: u64) -> MatrixStats {
-        let counts: Vec<u64> = self.hist.iter().map(|c| c.load(Ordering::Relaxed)).collect();
-        let requests = self.requests.load(Ordering::Relaxed);
-        let sum_ns = self.lat_sum_ns.load(Ordering::Relaxed);
+        let lat = self.lat.snapshot();
         let class = self.format_class.load(Ordering::Relaxed);
-        let max_us = self.lat_max_ns.load(Ordering::Relaxed) as f64 / 1e3;
-        // Bucket representatives can overshoot the true extremum;
-        // clamping keeps `p99 <= max` in every report. Quantiles are
-        // None on an empty histogram, and tail quantiles are None on a
-        // single sample — one observation supports a median, not a p99.
-        let q = |p: f64| quantile_us(&counts, p).map(|v| v.min(max_us));
+        // Quantiles are clamped to the observed max inside the snapshot
+        // (`p99 <= max` in every report), None on an empty histogram,
+        // and tail quantiles are None on a single sample — one
+        // observation supports a median, not a p99.
         MatrixStats {
             id,
             format: if class == FORMAT_UNSET {
@@ -151,14 +123,14 @@ impl MatrixTelemetry {
                 Format::from_class_id(class as usize)
             },
             knobs: decode_choice(self.knob_bits.load(Ordering::Relaxed)),
-            requests,
-            mean_us: if requests == 0 { 0.0 } else { sum_ns as f64 / requests as f64 / 1e3 },
-            p50_us: q(0.50),
-            p90_us: if requests >= 2 { q(0.90) } else { None },
-            p99_us: if requests >= 2 { q(0.99) } else { None },
-            max_us,
-            total_latency: Duration::from_nanos(sum_ns),
-            max_latency: Duration::from_nanos(self.lat_max_ns.load(Ordering::Relaxed)),
+            requests: lat.count,
+            mean_us: lat.mean_us(),
+            p50_us: lat.quantile_us(0.50),
+            p90_us: lat.tail_quantile_us(0.90),
+            p99_us: lat.tail_quantile_us(0.99),
+            max_us: lat.max_us(),
+            total_latency: Duration::from_nanos(lat.sum_ns),
+            max_latency: Duration::from_nanos(lat.max_ns),
             energy_j: self.energy_nj.load(Ordering::Relaxed) as f64 * 1e-9,
             model_power_w: f64::from_bits(self.model_power_w_bits.load(Ordering::Relaxed)),
             chosen_by_format: std::array::from_fn(|i| self.chosen[i].load(Ordering::Relaxed)),
@@ -172,24 +144,6 @@ impl Default for MatrixTelemetry {
     fn default() -> Self {
         Self::new()
     }
-}
-
-/// Histogram quantile: the representative value of the bucket holding
-/// the `q`-th ranked sample, or `None` on an empty histogram.
-fn quantile_us(counts: &[u64], q: f64) -> Option<f64> {
-    let total: u64 = counts.iter().sum();
-    if total == 0 {
-        return None;
-    }
-    let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
-    let mut cum = 0u64;
-    for (b, c) in counts.iter().enumerate() {
-        cum += c;
-        if cum >= rank {
-            return Some(bucket_rep_ns(b) / 1e3);
-        }
-    }
-    Some(bucket_rep_ns(counts.len() - 1) / 1e3)
 }
 
 /// One matrix's serving statistics (a [`Pool::stats`] row).
@@ -339,17 +293,44 @@ pub struct Counters {
     pub session_steps: AtomicU64,
     /// Sessions opened over the pool's lifetime.
     pub sessions_opened: AtomicU64,
+    /// Requests that carried a deadline tag (SLO seed, ROADMAP
+    /// scale-out item).
+    pub deadline_tagged: AtomicU64,
+    /// Deadline-tagged requests whose service time exceeded the tag.
+    pub deadline_misses: AtomicU64,
 }
 
-/// The shared registry: matrix id -> telemetry handle.
+/// The shared registry: matrix id -> telemetry handle, plus the
+/// pool-wide stage histograms and the control-plane event journal
+/// handle shards emit through.
 pub struct Telemetry {
     matrices: RwLock<HashMap<u64, Arc<MatrixTelemetry>>>,
     pub totals: Counters,
+    /// Per-stage latency histograms (request-lifecycle tracing).
+    pub stages: StageHists,
+    journal: Arc<Journal>,
 }
 
 impl Telemetry {
     pub fn new() -> Self {
-        Telemetry { matrices: RwLock::new(HashMap::new()), totals: Counters::default() }
+        Telemetry::with_journal(Arc::new(Journal::new(DEFAULT_JOURNAL_CAP)))
+    }
+
+    /// Share an existing journal (the pool passes the router's so
+    /// shard-side events interleave with hot-swap/retrain events in
+    /// one sequence).
+    pub fn with_journal(journal: Arc<Journal>) -> Self {
+        Telemetry {
+            matrices: RwLock::new(HashMap::new()),
+            totals: Counters::default(),
+            stages: StageHists::new(),
+            journal,
+        }
+    }
+
+    /// The control-plane event journal.
+    pub fn journal(&self) -> &Arc<Journal> {
+        &self.journal
     }
 
     /// Get-or-create the handle for a matrix. Shards call this once per
@@ -385,20 +366,6 @@ impl Default for Telemetry {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn buckets_are_log2_and_monotone() {
-        assert_eq!(bucket_of(0), 0);
-        assert_eq!(bucket_of(1), 1);
-        assert_eq!(bucket_of(2), 2);
-        assert_eq!(bucket_of(3), 2);
-        assert_eq!(bucket_of(1024), 11);
-        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
-        for ns in [1u64, 10, 1000, 1_000_000] {
-            let b = bucket_of(ns);
-            assert!(ns >= 1u64 << (b - 1) && ns < 1u64 << b, "ns {ns} bucket {b}");
-        }
-    }
 
     #[test]
     fn choice_encoding_roundtrips() {
@@ -516,11 +483,16 @@ mod tests {
     }
 
     #[test]
-    fn quantile_of_uniform_histogram() {
-        let mut counts = vec![0u64; HIST_BUCKETS];
-        counts[10] = 50; // all samples in one bucket
-        let v = quantile_us(&counts, 0.5).unwrap();
-        assert!((v - bucket_rep_ns(10) / 1e3).abs() < 1e-12);
-        assert_eq!(quantile_us(&[0u64; HIST_BUCKETS], 0.99), None);
+    fn telemetry_shares_its_journal_and_stage_hists() {
+        use crate::obs::{EventKind, Stage};
+        let journal = Arc::new(Journal::new(8));
+        let t = Telemetry::with_journal(journal.clone());
+        t.journal().emit(EventKind::SessionOpen { session: 1, matrix: 0 });
+        assert_eq!(journal.len(), 1, "emits land in the shared ring");
+        t.stages.record(Stage::Exec, Duration::from_micros(5));
+        let stages = t.stages.snapshot();
+        let exec = stages.iter().find(|s| s.stage == Stage::Exec).unwrap();
+        assert_eq!(exec.count(), 1);
+        assert!(Telemetry::new().journal().is_empty(), "private journal by default");
     }
 }

@@ -49,6 +49,24 @@ CHECKS = [
             "bytes ratio": {"direction": "higher", "tol": 1.05},
         },
     },
+    {
+        "file": "BENCH_e2e_stage_decomposition.json",
+        "table": "e2e_stage_decomposition",
+        "keys": ["stage"],
+        "metrics": {
+            # per-stage sample counts for the bench's fixed workload
+            # (96 sequential products + one 32-step session) — fully
+            # deterministic, mode-independent. A shortfall means a
+            # stage stopped recording; the bench's own coverage assert
+            # catches over-recording, so the gate pins the floor.
+            "count": {"direction": "higher", "tol": 1.0},
+            # populated only on the stage=all row ("-" elsewhere):
+            # stage-decomposed time over end-to-end service time, times
+            # 100 — exactly 100 by construction (the shard derives both
+            # from the same boundary instants).
+            "coverage %": {"direction": "higher", "tol": 1.0},
+        },
+    },
 ]
 
 

@@ -1,0 +1,273 @@
+#!/usr/bin/env python3
+"""Lint a Prometheus text-exposition file (version 0.0.4).
+
+The serving pool exports its counters/gauges/stage histograms as
+Prometheus text (`Pool::metrics_text`, rendered by
+`rust/src/obs/metrics.rs`); the bench dumps one to
+`reports/METRICS.prom` and CI runs this linter over it so a malformed
+exposition — bad metric name, unescaped label value, non-cumulative
+histogram, missing `# TYPE` — fails the build instead of failing the
+first real scrape. Checks:
+
+  - every line is a comment (`# HELP` / `# TYPE`), blank, or a sample
+  - metric names match `[a-zA-Z_:][a-zA-Z0-9_:]*`, label names match
+    `[a-zA-Z_][a-zA-Z0-9_]*`
+  - label values are double-quoted with only `\\\\`, `\\"`, `\\n` escapes,
+    and no label name repeats within one sample
+  - sample values parse as floats (including +Inf/-Inf/NaN)
+  - each family has exactly one `# TYPE` with a known kind, appearing
+    before its samples; every sample belongs to a declared family
+    (histogram samples may suffix `_bucket`/`_sum`/`_count`)
+  - no duplicate (name, label-set) sample
+  - histograms: per label-set the `le` buckets are cumulative
+    (non-decreasing), end at `le="+Inf"`, and the `+Inf` count equals
+    the family's `_count`; `_sum` and `_count` are present
+  - the file is non-empty and ends with a newline
+
+Usage: python3 tools/metrics_lint.py [FILE ...]
+(default: reports/METRICS.prom). Stdlib only — the CI image has no
+extra Python packages.
+"""
+
+import re
+import sys
+
+METRIC_NAME = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+LABEL_NAME = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+KNOWN_KINDS = {"counter", "gauge", "histogram", "summary", "untyped"}
+HIST_SUFFIXES = ("_bucket", "_sum", "_count")
+
+
+class LintErrors:
+    def __init__(self, path):
+        self.path = path
+        self.errors = []
+
+    def add(self, lineno, msg):
+        where = f"{self.path}:{lineno}" if lineno else self.path
+        self.errors.append(f"{where}: {msg}")
+
+
+def parse_labels(text, lineno, errs):
+    """Parse `k="v",k2="v2"` (no surrounding braces) into a dict.
+
+    Returns None when the syntax is broken beyond recovery.
+    """
+    labels = {}
+    i, n = 0, len(text)
+    while i < n:
+        m = re.match(r"[a-zA-Z_][a-zA-Z0-9_]*", text[i:])
+        if not m:
+            errs.add(lineno, f"expected a label name at ...{text[i:]!r}")
+            return None
+        name = m.group(0)
+        i += len(name)
+        if i >= n or text[i] != "=":
+            errs.add(lineno, f"label {name}: expected '=' after the name")
+            return None
+        i += 1
+        if i >= n or text[i] != '"':
+            errs.add(lineno, f"label {name}: value must be double-quoted")
+            return None
+        i += 1
+        value = []
+        closed = False
+        while i < n:
+            c = text[i]
+            if c == "\\":
+                if i + 1 >= n or text[i + 1] not in ('\\', '"', "n"):
+                    errs.add(lineno, f"label {name}: bad escape at ...{text[i:]!r} "
+                                     "(only \\\\, \\\", \\n are valid)")
+                    return None
+                value.append({"\\": "\\", '"': '"', "n": "\n"}[text[i + 1]])
+                i += 2
+            elif c == '"':
+                closed = True
+                i += 1
+                break
+            else:
+                value.append(c)
+                i += 1
+        if not closed:
+            errs.add(lineno, f"label {name}: unterminated value")
+            return None
+        if name in labels:
+            errs.add(lineno, f"label {name} repeated within one sample")
+            return None
+        labels[name] = "".join(value)
+        if i < n:
+            if text[i] != ",":
+                errs.add(lineno, f"expected ',' between labels, got {text[i]!r}")
+                return None
+            i += 1
+            if i >= n:
+                errs.add(lineno, "trailing ',' in label set")
+                return None
+    return labels
+
+
+def parse_value(raw):
+    try:
+        return float(raw)
+    except ValueError:
+        return None
+
+
+def lint_text(path, text):
+    errs = LintErrors(path)
+    if not text:
+        errs.add(0, "empty exposition")
+        return errs.errors
+    if not text.endswith("\n"):
+        errs.add(0, "exposition must end with a newline")
+
+    types = {}  # family -> kind
+    help_seen = set()
+    samples = []  # (lineno, name, labels dict)
+    seen_keys = set()
+
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        if not line.strip():
+            continue
+        if line.startswith("#"):
+            m = re.match(r"^# (HELP|TYPE) (\S+)(?: (.*))?$", line)
+            if not m:
+                # free-form comments are legal; only HELP/TYPE are parsed
+                if re.match(r"^#\s*(HELP|TYPE)\b", line):
+                    errs.add(lineno, f"malformed {line.split()[1]} line: {line!r}")
+                continue
+            kind_tag, name, rest = m.group(1), m.group(2), m.group(3) or ""
+            if not METRIC_NAME.match(name):
+                errs.add(lineno, f"invalid metric name in # {kind_tag}: {name!r}")
+                continue
+            if kind_tag == "HELP":
+                if name in help_seen:
+                    errs.add(lineno, f"duplicate # HELP for {name}")
+                help_seen.add(name)
+            else:
+                if name in types:
+                    errs.add(lineno, f"duplicate # TYPE for {name}")
+                    continue
+                if rest not in KNOWN_KINDS:
+                    errs.add(lineno, f"unknown metric kind {rest!r} for {name}")
+                    continue
+                types[name] = rest
+            continue
+
+        # sample line: name[{labels}] value [timestamp]
+        m = re.match(r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{(.*)\})?\s+(\S+)(?:\s+(-?\d+))?$", line)
+        if not m:
+            errs.add(lineno, f"unparseable sample line: {line!r}")
+            continue
+        name, label_body, raw_value = m.group(1), m.group(3), m.group(4)
+        labels = {}
+        if label_body is not None:
+            labels = parse_labels(label_body, lineno, errs)
+            if labels is None:
+                continue
+        if parse_value(raw_value) is None:
+            errs.add(lineno, f"sample {name}: value {raw_value!r} is not a float")
+            continue
+
+        base = name
+        suffix = ""
+        for s in HIST_SUFFIXES:
+            if name.endswith(s) and name[: -len(s)] in types:
+                base, suffix = name[: -len(s)], s
+                break
+        if base not in types:
+            errs.add(lineno, f"sample {name} has no preceding # TYPE")
+            continue
+        if suffix and types[base] != "histogram":
+            # a plain family that merely ends in _count etc.
+            base, suffix = name, ""
+            if base not in types:
+                errs.add(lineno, f"sample {name} has no preceding # TYPE")
+                continue
+
+        key = (name, tuple(sorted(labels.items())))
+        if key in seen_keys:
+            errs.add(lineno, f"duplicate sample {name}{dict(labels)}")
+        seen_keys.add(key)
+        samples.append((lineno, base, suffix, labels, float(raw_value)))
+
+    # histogram shape checks, grouped by (family, labels-minus-le)
+    hists = {}
+    for lineno, base, suffix, labels, value in samples:
+        if types.get(base) != "histogram":
+            continue
+        group_labels = tuple(sorted((k, v) for k, v in labels.items() if k != "le"))
+        g = hists.setdefault((base, group_labels), {"buckets": [], "sum": None, "count": None})
+        if suffix == "_bucket":
+            if "le" not in labels:
+                errs.add(lineno, f"{base}_bucket sample is missing the le label")
+                continue
+            g["buckets"].append((lineno, labels["le"], value))
+        elif suffix == "_sum":
+            g["sum"] = (lineno, value)
+        elif suffix == "_count":
+            g["count"] = (lineno, value)
+        else:
+            errs.add(lineno, f"histogram {base} has a bare sample (expected "
+                             "_bucket/_sum/_count)")
+
+    for (base, group_labels), g in sorted(hists.items()):
+        tag = f"{base}{dict(group_labels) if group_labels else ''}"
+        if not g["buckets"]:
+            errs.add(0, f"histogram {tag}: no _bucket samples")
+            continue
+        prev = None
+        for lineno, le, value in g["buckets"]:
+            if le != "+Inf" and parse_value(le) is None:
+                errs.add(lineno, f"histogram {tag}: le={le!r} is not a float or +Inf")
+            if prev is not None and value < prev:
+                errs.add(lineno, f"histogram {tag}: bucket counts must be "
+                                 f"cumulative ({value} < {prev})")
+            prev = value
+        last_le = g["buckets"][-1][1]
+        if last_le != "+Inf":
+            errs.add(g["buckets"][-1][0],
+                     f"histogram {tag}: buckets must end at le=\"+Inf\" (got {last_le!r})")
+        if g["sum"] is None:
+            errs.add(0, f"histogram {tag}: missing _sum sample")
+        if g["count"] is None:
+            errs.add(0, f"histogram {tag}: missing _count sample")
+        elif last_le == "+Inf" and g["buckets"][-1][2] != g["count"][1]:
+            errs.add(g["count"][0],
+                     f"histogram {tag}: +Inf bucket ({g['buckets'][-1][2]}) != "
+                     f"_count ({g['count'][1]})")
+
+    for name in sorted(help_seen - set(types)):
+        errs.add(0, f"# HELP {name} has no matching # TYPE")
+
+    return errs.errors
+
+
+def main(argv):
+    paths = argv[1:] or ["reports/METRICS.prom"]
+    failed = False
+    for path in paths:
+        try:
+            with open(path, "r", encoding="utf-8") as f:
+                text = f.read()
+        except OSError as e:
+            print(f"FAIL: cannot read {path}: {e}")
+            failed = True
+            continue
+        errors = lint_text(path, text)
+        if errors:
+            failed = True
+            print(f"FAIL: {path}: {len(errors)} problem(s)")
+            for e in errors:
+                print(f"  - {e}")
+        else:
+            n_samples = sum(
+                1 for l in text.splitlines() if l.strip() and not l.startswith("#")
+            )
+            print(f"OK: {path}: {len(text.splitlines())} lines, "
+                  f"{n_samples} samples, exposition is well-formed")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
