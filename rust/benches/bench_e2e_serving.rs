@@ -36,6 +36,7 @@
 
 use auto_spmv::gen::{patterns, Rng};
 use auto_spmv::gpusim::{turing_gtx1650m, Objective};
+use auto_spmv::obs::{SloConfig, SloSpec};
 use auto_spmv::online::{Online, OnlineConfig, Trainer};
 use auto_spmv::report::{bench, Table};
 use auto_spmv::runtime::{default_artifacts_dir, Engine};
@@ -214,8 +215,99 @@ fn main() {
     iterative_session_sweep(&backend, smoke);
     stage_decomposition();
     tracing_overhead(smoke);
+    slo_breach_e2e();
     adaptation_under_drift(smoke);
     println!("bench_e2e_serving OK");
+}
+
+/// Part 6 — deterministic SLO breach episode: a frozen single-worker
+/// pool with a deadline-miss SLO serves three phases — clean,
+/// all-missing (zero deadlines miss at any machine speed), clean again
+/// — and the engine must alert exactly once, freeze the breach window
+/// into the flight recorder, and recover after the hysteresis. The p99
+/// target is set unreachably high so the breach is driven purely by
+/// the request-counted miss budget; the whole run executes TWICE and
+/// the journal key sequences must match verbatim. Per-arm attribution
+/// rides along: every request lands on the one registered matrix's
+/// joint arm, so the arm ledger must account for all 224 requests. The
+/// counts are mode-independent and gated by `tools/bench_gate.py`.
+fn slo_breach_e2e() {
+    let run = || {
+        let router = Arc::new(auto_spmv::testutil::toy_router(&["rim"], Objective::EnergyEff));
+        let mut rng = Rng::new(0x510);
+        let coo = patterns::banded(&mut rng, 1000, 16, 6.0);
+        let n_cols = coo.n_cols;
+        let pool = Pool::start(
+            router,
+            BackendSpec::Native,
+            PoolConfig {
+                workers: 1,
+                slo: Some(SloConfig {
+                    spec: SloSpec {
+                        p99_target: Duration::from_secs(3600),
+                        deadline_miss_budget: 0.25,
+                    },
+                    overrides: Vec::new(),
+                    fast_window: 32,
+                    recovery_evals: 2,
+                    flight_cap: 32,
+                }),
+                ..PoolConfig::default()
+            },
+        );
+        pool.register(1, coo, 1_000_000).expect("register");
+        let x = vec![0.5f32; n_cols];
+        let hour = Duration::from_secs(3600);
+        for _ in 0..64 {
+            pool.product_with_deadline(1, x.clone(), hour).expect("product");
+        }
+        for _ in 0..64 {
+            pool.product_with_deadline(1, x.clone(), Duration::ZERO).expect("product");
+        }
+        for _ in 0..96 {
+            pool.product_with_deadline(1, x.clone(), hour).expect("product");
+        }
+        let stats = pool.stats().expect("stats");
+        let keys: Vec<String> = pool.events().iter().map(|e| e.kind.key()).collect();
+        let flight = pool.flight_records();
+        (stats, keys, flight)
+    };
+
+    let (stats, keys, flight) = run();
+    let (_, keys2, _) = run();
+    assert_eq!(keys, keys2, "the SLO episode must replay identically run to run");
+    assert_eq!(
+        keys,
+        vec![
+            "slo_alert scope=pool at=96 signal=miss_budget missed=32/32".to_string(),
+            "slo_recovered scope=pool at=192".to_string(),
+        ],
+    );
+    let slo = stats.slo.as_ref().expect("slo snapshot");
+    assert_eq!((slo.alerts, slo.recoveries, slo.evals), (1, 1, 7));
+    assert_eq!(slo.status.name(), "ok", "the episode must end recovered");
+    assert_eq!(flight.len(), 32, "the breach capture must hold the full ring");
+    assert!(flight.iter().all(|r| r.deadline_missed), "the captured window IS the breach");
+    let arm_requests: u64 = stats.arm_profiles.iter().map(|p| p.requests).sum();
+    assert_eq!(arm_requests, 224, "arm attribution must account for every request");
+
+    let mut t = Table::new(
+        "E2E — deterministic SLO breach episode (miss-budget driven, 1 worker, native)",
+        &["metric", "value"],
+    );
+    for (metric, value) in [
+        ("slo_alerts", slo.alerts),
+        ("slo_recoveries", slo.recoveries),
+        ("slo_evals", slo.evals),
+        ("flight_records", flight.len() as u64),
+        ("deadline_tagged", stats.deadline_tagged),
+        ("deadline_misses", stats.deadline_misses),
+        ("arm_requests", arm_requests),
+    ] {
+        t.row(vec![metric.to_string(), value.to_string()]);
+    }
+    t.emit("e2e_slo_breach");
+    t.emit_json("e2e_slo_breach");
 }
 
 /// Part 2c — iterative-session sweep: a chained solver (each product's
@@ -599,7 +691,20 @@ fn adaptation_under_drift(smoke: bool) {
         objective,
         Some(Trainer::new(ds.clone(), objective, overhead.clone(), turing_gtx1650m().name)),
     );
-    let adaptive = Pool::start_adaptive(online.clone(), BackendSpec::Native, cfg);
+    // the adaptive pool also carries a deliberately lax SLO
+    // (unreachable targets, nothing ever alerts) so the METRICS.prom
+    // dump below exercises the spmv_slo_* families for the CI lint
+    let adaptive = Pool::start_adaptive(
+        online.clone(),
+        BackendSpec::Native,
+        PoolConfig {
+            slo: Some(SloConfig::new(SloSpec {
+                p99_target: Duration::from_secs(3600),
+                deadline_miss_budget: 1.0,
+            })),
+            ..cfg
+        },
+    );
 
     let mut t = Table::new(
         "E2E — closed-loop adaptation under drift (modeled energy objective)",
@@ -662,6 +767,8 @@ fn adaptation_under_drift(smoke: bool) {
     // `tools/metrics_lint.py` and uploads both files.
     let metrics = adaptive.metrics_text().expect("metrics_text");
     assert!(metrics.contains("# TYPE spmv_requests_total counter"));
+    assert!(metrics.contains("# TYPE spmv_slo_status gauge"));
+    assert!(metrics.contains("# TYPE spmv_arm_requests_total counter"));
     let events = adaptive.events_json();
     assert!(
         events.contains("\"kind\":\"hot_swap\"") && events.contains("\"kind\":\"retrain\""),

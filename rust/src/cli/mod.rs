@@ -11,6 +11,7 @@
 //!         [--explore-rate F] [--retrain-every N] [--anneal-target K]
 //!         [--joint-knobs true|false]
 //!         [--stats-every N] [--metrics-out FILE] [--events-out FILE]
+//!         [--slo-p99-us US] [--slo-miss-budget F] [--flight-out FILE]
 //!                               serving demo over the sharded pool
 //!                               (PJRT when artifacts exist, else
 //!                               native). A non-zero explore rate or
@@ -26,13 +27,20 @@
 //!                               exploration schedule. Observability
 //!                               (DESIGN.md §10): --stats-every N
 //!                               prints a progress ledger line every N
-//!                               completed requests; at exit
-//!                               --metrics-out dumps the Prometheus
+//!                               completed requests — on STDERR, so
+//!                               stdout stays a clean report stream; at
+//!                               exit --metrics-out dumps the Prometheus
 //!                               text exposition and --events-out the
 //!                               control-plane event journal (JSON) —
 //!                               the final ledger, journal, and dumps
 //!                               are flushed even when the request
-//!                               stream fails part-way.
+//!                               stream fails part-way. SLO engine
+//!                               (DESIGN.md §11): --slo-p99-us and/or
+//!                               --slo-miss-budget attach an SloConfig
+//!                               (the other half defaults to 50ms /
+//!                               0.01); --flight-out dumps the trace
+//!                               flight recorder (breach capture if one
+//!                               fired, else the live ring) as JSON.
 //!
 //! Global flags: --config FILE, --set key=value (repeatable), and the
 //! shorthand --scale/--seed/--objective overrides.
@@ -255,6 +263,7 @@ fn parse_joint_knobs(cli: &Cli) -> Result<bool> {
 
 fn cmd_serve(cli: &Cli) -> Result<()> {
     use crate::gpusim::turing_gtx1650m;
+    use crate::obs::{SloConfig, SloSpec};
     use crate::online::{Online, OnlineConfig, Trainer};
     use crate::serve::{BackendSpec, Pool, PoolConfig};
     use crate::sparse::convert::ConvertParams;
@@ -273,6 +282,21 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let stats_every: usize = cli.flag("stats-every").map_or(0, |v| v.parse().unwrap_or(0));
     let metrics_out = cli.flag("metrics-out").map(PathBuf::from);
     let events_out = cli.flag("events-out").map(PathBuf::from);
+    let flight_out = cli.flag("flight-out").map(PathBuf::from);
+    let slo_p99_us: Option<u64> = cli.flag("slo-p99-us").and_then(|v| v.parse().ok());
+    let slo_miss_budget: Option<f64> = cli.flag("slo-miss-budget").and_then(|v| v.parse().ok());
+    // either SLO flag attaches the engine; the missing half keeps the
+    // SloSpec default (50ms p99, 1% miss budget)
+    let slo_cfg = (slo_p99_us.is_some() || slo_miss_budget.is_some()).then(|| {
+        let mut spec = SloSpec::default();
+        if let Some(us) = slo_p99_us {
+            spec.p99_target = Duration::from_micros(us);
+        }
+        if let Some(budget) = slo_miss_budget {
+            spec.deadline_miss_budget = budget;
+        }
+        SloConfig::new(spec)
+    });
     let ds = load_or_build(cli)?;
     let obj = cli.objective()?;
     let overhead = OverheadModel::train_on_corpus(cli.config.scale, None);
@@ -286,11 +310,20 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         BackendSpec::Native
     };
     println!("pool: {workers} workers, batch window {window_us} us, cache capacity {cache_cap}");
+    if let Some(slo) = &slo_cfg {
+        println!(
+            "slo: p99 target {} us, miss budget {:.3}, eval window {} requests",
+            slo.spec.p99_target.as_micros(),
+            slo.spec.deadline_miss_budget,
+            slo.fast_window
+        );
+    }
     let pool_cfg = PoolConfig {
         workers,
         batch_window: Duration::from_micros(window_us),
         cache_capacity: cache_cap,
         convert: ConvertParams { bell_bh: 8, bell_bw: 8, sell_h: 8 },
+        slo: slo_cfg,
         ..PoolConfig::default()
     };
     let adaptive = explore_rate > 0.0 || retrain_every > 0;
@@ -357,11 +390,27 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         completed += 1;
         if stats_every > 0 && completed % stats_every == 0 {
             match pool.stats() {
-                Ok(s) => println!(
-                    "[{completed}/{n_requests}] {} dispatches, {} launches, router v{}, \
-                     {} migrations, {} events",
-                    s.dispatches, s.launches, s.router_version, s.migrations, s.events_total
-                ),
+                Ok(s) => {
+                    // the in-flight ticker goes to STDERR: stdout is
+                    // the machine-readable report stream (tables,
+                    // final ledger) and must stay pipeable
+                    eprintln!(
+                        "[{completed}/{n_requests}] {} dispatches, {} launches, router v{}, \
+                         {} migrations, {} events",
+                        s.dispatches, s.launches, s.router_version, s.migrations, s.events_total
+                    );
+                    if let Some(slo) = &s.slo {
+                        eprintln!(
+                            "[{completed}/{n_requests}] slo {}: {} evals, {} alerts, \
+                             {} recoveries, fast burn {:.2}",
+                            slo.status.name(),
+                            slo.evals,
+                            slo.alerts,
+                            slo.recoveries,
+                            slo.fast_burn
+                        );
+                    }
+                }
                 Err(e) => {
                     served = Err(e);
                     break;
@@ -439,10 +488,29 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     for e in events.iter().rev().take(5).rev() {
         println!("  {e}");
     }
+    if let Some(slo) = &stats.slo {
+        println!(
+            "slo {}: {} evals, {} alerts, {} recoveries, {}/{} tagged requests missed, \
+             {} flight records captured",
+            slo.status.name(),
+            slo.evals,
+            slo.alerts,
+            slo.recoveries,
+            slo.missed,
+            slo.tagged,
+            slo.flight_captured
+        );
+    }
     if let Some(path) = &metrics_out {
         std::fs::write(path, pool.metrics_text()?)
             .with_context(|| format!("writing metrics exposition to {}", path.display()))?;
         println!("wrote metrics exposition -> {}", path.display());
+    }
+    if let Some(path) = &flight_out {
+        let n = pool.flight_records().len();
+        std::fs::write(path, pool.flight_json())
+            .with_context(|| format!("writing flight records to {}", path.display()))?;
+        println!("wrote flight records ({n}) -> {}", path.display());
     }
     let quant = |q: Option<f64>| q.map_or("-".to_string(), |v| format!("{v:.1}"));
     let mut t = Table::new(
@@ -547,6 +615,22 @@ mod tests {
         assert_eq!(cli.flag("stats-every"), Some("8"));
         assert_eq!(cli.flag("metrics-out"), Some("/tmp/metrics.prom"));
         assert_eq!(cli.flag("events-out"), Some("/tmp/events.json"));
+    }
+
+    #[test]
+    fn serve_slo_flags_parse() {
+        let cli = parse(&args(&[
+            "serve",
+            "--slo-p99-us",
+            "5000",
+            "--slo-miss-budget",
+            "0.05",
+            "--flight-out=/tmp/flight.json",
+        ]))
+        .unwrap();
+        assert_eq!(cli.flag("slo-p99-us"), Some("5000"));
+        assert_eq!(cli.flag("slo-miss-budget"), Some("0.05"));
+        assert_eq!(cli.flag("flight-out"), Some("/tmp/flight.json"));
     }
 
     #[test]

@@ -1,0 +1,273 @@
+//! Per-arm cost attribution: request-weighted latency, gpusim-modeled
+//! energy, average power, and efficiency keyed by the joint
+//! (format, compile-knob) [`JointDecision`] — the paper's four headline
+//! metrics, broken down by the arm that actually served the traffic.
+//!
+//! Shards call [`ArmAttr::record`] on every executed dispatch (a few
+//! relaxed atomic adds — attribution is always on and must stay inside
+//! the <3% tracing-overhead budget). On each router hot-swap the first
+//! shard to notice the new version calls [`ArmAttr::mark_generation`],
+//! which rolls a per-arm generation window and journals an
+//! [`EventKind::ArmShift`] when an arm's mean modeled energy moved
+//! beyond a threshold between generations — the modeled cost is
+//! deterministic, so shift events are too.
+
+use super::journal::{EventKind, Journal};
+use crate::gpusim::Measurement;
+use crate::online::bandit::N_ARMS;
+use crate::online::JointDecision;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Minimum requests an arm must serve inside a generation window before
+/// its mean is considered evidence for an `ArmShift`.
+pub const SHIFT_MIN_REQUESTS: u64 = 8;
+
+/// Mean-energy ratio band (new/old) treated as "no shift".
+const SHIFT_BAND: (f64, f64) = (0.8, 1.25);
+
+/// One arm's totals (all relaxed atomics; power/efficiency are
+/// request-weighted sums scaled by 1000 so means stay exact-ish in u64).
+#[derive(Default)]
+struct ArmCell {
+    requests: AtomicU64,
+    exec_ns: AtomicU64,
+    energy_nj: AtomicU64,
+    power_mw: AtomicU64,
+    eff_x1000: AtomicU64,
+}
+
+/// Generation bookkeeping, touched only on hot-swap (cold path).
+struct GenState {
+    version: u64,
+    /// Per-arm `(requests, energy_nj)` at the start of the current
+    /// generation window.
+    mark: Vec<(u64, u64)>,
+    /// Per-arm mean energy (nJ/request) over the PREVIOUS window.
+    prev_mean_nj: Vec<Option<f64>>,
+}
+
+/// One row of [`ArmAttr::snapshot`]: an arm that served traffic, with
+/// the paper's four metrics attributed to it.
+#[derive(Debug, Clone)]
+pub struct ArmProfile {
+    /// Sparse format name (`csr`/`ell`/...).
+    pub format: String,
+    /// Compile-knob label (`tb256/r64/default` style).
+    pub knobs: String,
+    /// Flat joint arm index.
+    pub arm: usize,
+    pub requests: u64,
+    /// Request-weighted exec time (seconds).
+    pub exec_s: f64,
+    /// Total gpusim-modeled energy (joules).
+    pub energy_j: f64,
+    /// Request-weighted mean power (watts).
+    pub mean_power_w: f64,
+    /// Request-weighted mean efficiency (MFLOPS/W).
+    pub mflops_per_watt: f64,
+}
+
+/// Pool-wide per-arm accumulator shared by all shards via `Telemetry`.
+pub struct ArmAttr {
+    cells: Vec<ArmCell>,
+    generation: AtomicU64,
+    gen_state: Mutex<GenState>,
+}
+
+impl Default for ArmAttr {
+    fn default() -> Self {
+        ArmAttr::new()
+    }
+}
+
+impl ArmAttr {
+    pub fn new() -> Self {
+        ArmAttr {
+            cells: (0..N_ARMS).map(|_| ArmCell::default()).collect(),
+            generation: AtomicU64::new(1),
+            gen_state: Mutex::new(GenState {
+                version: 1,
+                mark: vec![(0, 0); N_ARMS],
+                prev_mean_nj: vec![None; N_ARMS],
+            }),
+        }
+    }
+
+    /// Attribute `requests` served requests to `d`'s arm.
+    /// `exec_weighted` is the request-weighted exec time (a coalesced
+    /// batch of k contributes k * per-product time) and `m` the
+    /// gpusim-modeled per-product measurement.
+    pub fn record(
+        &self,
+        d: JointDecision,
+        requests: u64,
+        exec_weighted: Duration,
+        m: &Measurement,
+    ) {
+        if requests == 0 {
+            return;
+        }
+        let cell = &self.cells[d.arm_index()];
+        cell.requests.fetch_add(requests, Ordering::Relaxed);
+        cell.exec_ns.fetch_add(exec_weighted.as_nanos() as u64, Ordering::Relaxed);
+        let nj = (m.energy_j * 1e9).round().max(0.0) as u64;
+        cell.energy_nj.fetch_add(nj * requests, Ordering::Relaxed);
+        let mw = (m.avg_power_w * 1e3).round().max(0.0) as u64;
+        cell.power_mw.fetch_add(mw * requests, Ordering::Relaxed);
+        let effk = (m.mflops_per_watt * 1e3).round().max(0.0) as u64;
+        cell.eff_x1000.fetch_add(effk * requests, Ordering::Relaxed);
+    }
+
+    /// Close the current generation window at router `version`,
+    /// journaling an `ArmShift` for every arm whose mean modeled energy
+    /// moved outside [`SHIFT_BAND`] versus the previous window. Called
+    /// by whichever shard observes the hot-swap first; later shards
+    /// (and replays of older versions) are no-ops.
+    pub fn mark_generation(&self, version: u64, journal: &Journal) {
+        let mut st = self.gen_state.lock().expect("arm gen lock");
+        if version <= st.version {
+            return;
+        }
+        for (i, cell) in self.cells.iter().enumerate() {
+            let req = cell.requests.load(Ordering::Relaxed);
+            let nj = cell.energy_nj.load(Ordering::Relaxed);
+            let (mreq, mnj) = st.mark[i];
+            let (wreq, wnj) = (req - mreq, nj - mnj);
+            if wreq >= SHIFT_MIN_REQUESTS {
+                let mean = wnj as f64 / wreq as f64;
+                if let Some(prev) = st.prev_mean_nj[i] {
+                    if prev > 0.0 {
+                        let ratio = mean / prev;
+                        if !(SHIFT_BAND.0..=SHIFT_BAND.1).contains(&ratio) {
+                            journal.emit(EventKind::ArmShift {
+                                arm: JointDecision::from_arm(i),
+                                generation: version,
+                                ratio_pct: (ratio * 100.0).round() as u64,
+                            });
+                        }
+                    }
+                }
+                st.prev_mean_nj[i] = Some(mean);
+            }
+            st.mark[i] = (req, nj);
+        }
+        st.version = version;
+        self.generation.store(version, Ordering::Relaxed);
+    }
+
+    /// Router generation the attribution windows are aligned to.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Relaxed)
+    }
+
+    /// Profiles for every arm that served at least one request, in arm
+    /// order (at most [`N_ARMS`] rows — bounded label cardinality).
+    pub fn snapshot(&self) -> Vec<ArmProfile> {
+        let mut out = Vec::new();
+        for (i, cell) in self.cells.iter().enumerate() {
+            let requests = cell.requests.load(Ordering::Relaxed);
+            if requests == 0 {
+                continue;
+            }
+            let d = JointDecision::from_arm(i);
+            let rf = requests as f64;
+            out.push(ArmProfile {
+                format: d.format.to_string(),
+                knobs: d.choice.to_string(),
+                arm: i,
+                requests,
+                exec_s: cell.exec_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+                energy_j: cell.energy_nj.load(Ordering::Relaxed) as f64 * 1e-9,
+                mean_power_w: cell.power_mw.load(Ordering::Relaxed) as f64 * 1e-3 / rf,
+                mflops_per_watt: cell.eff_x1000.load(Ordering::Relaxed) as f64 * 1e-3 / rf,
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Format;
+
+    fn meas(energy_j: f64) -> Measurement {
+        Measurement { latency_s: 1e-4, energy_j, avg_power_w: 30.0, mflops_per_watt: 250.0 }
+    }
+
+    fn arm(format: Format) -> JointDecision {
+        JointDecision::format_only(format)
+    }
+
+    #[test]
+    fn record_accumulates_request_weighted_totals() {
+        let attr = ArmAttr::new();
+        let d = arm(Format::Csr);
+        attr.record(d, 4, Duration::from_micros(400), &meas(2e-6));
+        attr.record(d, 2, Duration::from_micros(200), &meas(2e-6));
+        attr.record(d, 0, Duration::from_secs(9), &meas(1.0)); // no-op
+        let prof = attr.snapshot();
+        assert_eq!(prof.len(), 1);
+        let p = &prof[0];
+        assert_eq!(p.arm, d.arm_index());
+        assert_eq!(p.format, "csr");
+        assert_eq!(p.knobs, d.choice.to_string());
+        assert_eq!(p.requests, 6);
+        assert!((p.exec_s - 600e-6).abs() < 1e-9, "{}", p.exec_s);
+        assert!((p.energy_j - 12e-6).abs() < 1e-12, "{}", p.energy_j);
+        assert!((p.mean_power_w - 30.0).abs() < 1e-9);
+        assert!((p.mflops_per_watt - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshot_orders_by_arm_and_skips_idle_arms() {
+        let attr = ArmAttr::new();
+        attr.record(arm(Format::Ell), 1, Duration::from_micros(10), &meas(1e-6));
+        attr.record(arm(Format::Csr), 1, Duration::from_micros(10), &meas(1e-6));
+        let prof = attr.snapshot();
+        assert_eq!(prof.len(), 2);
+        assert!(prof[0].arm < prof[1].arm, "arm-index order");
+        assert!(prof.len() <= N_ARMS);
+    }
+
+    #[test]
+    fn generation_shift_emits_when_mean_energy_moves() {
+        let journal = Journal::new(16);
+        let attr = ArmAttr::new();
+        let d = arm(Format::Csr);
+        assert_eq!(attr.generation(), 1);
+        // generation 1 window: 8 requests at 1uJ each
+        attr.record(d, 8, Duration::from_micros(80), &meas(1e-6));
+        attr.mark_generation(2, &journal);
+        assert!(journal.is_empty(), "first window only sets the baseline");
+        // generation 2 window: mean doubles -> shift
+        attr.record(d, 8, Duration::from_micros(80), &meas(2e-6));
+        attr.mark_generation(3, &journal);
+        assert_eq!(attr.generation(), 3);
+        let keys: Vec<String> = journal.snapshot().iter().map(|e| e.kind.key()).collect();
+        assert_eq!(keys.len(), 1, "{keys:?}");
+        assert_eq!(keys[0], format!("arm_shift arm={d} gen=v3 ratio=200%"));
+    }
+
+    #[test]
+    fn small_windows_and_stable_means_stay_silent() {
+        let journal = Journal::new(16);
+        let attr = ArmAttr::new();
+        let d = arm(Format::Bell);
+        attr.record(d, 8, Duration::from_micros(80), &meas(1e-6));
+        attr.mark_generation(2, &journal);
+        // below the evidence floor: no shift even though mean tripled
+        attr.record(d, SHIFT_MIN_REQUESTS - 1, Duration::from_micros(70), &meas(3e-6));
+        attr.mark_generation(3, &journal);
+        assert!(journal.is_empty());
+        // inside the band: stable mean stays silent
+        attr.record(d, 8, Duration::from_micros(80), &meas(1.1e-6));
+        attr.mark_generation(4, &journal);
+        assert!(journal.is_empty());
+        // replayed/stale versions are no-ops
+        attr.mark_generation(4, &journal);
+        assert_eq!(attr.generation(), 4);
+    }
+}

@@ -218,6 +218,53 @@ mod tests {
     }
 
     #[test]
+    fn quantile_edge_cases_for_slo_windows() {
+        // empty: no quantile at any q
+        assert_eq!(quantile_us(&[], 0.5), None);
+        assert_eq!(quantile_us(&vec![0u64; HIST_BUCKETS], 0.0), None);
+        // single sample: every quantile is that sample's bucket
+        let mut one = vec![0u64; HIST_BUCKETS];
+        one[5] = 1;
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            let v = quantile_us(&one, q).unwrap();
+            assert!((v - bucket_rep_ns(5) / 1e3).abs() < 1e-12, "q={q}");
+        }
+        // all mass in the LAST bucket (the overflow bucket): quantiles
+        // land there and stay finite
+        let mut last = vec![0u64; HIST_BUCKETS];
+        last[HIST_BUCKETS - 1] = 100;
+        let v = quantile_us(&last, 0.99).unwrap();
+        assert!((v - bucket_rep_ns(HIST_BUCKETS - 1) / 1e3).abs() < 1e-12);
+        assert!(v.is_finite());
+    }
+
+    #[test]
+    fn quantiles_are_monotone_in_q() {
+        // spread mass across several buckets; q(0.5) <= q(0.99) and
+        // more generally q is non-decreasing — the property the SLO
+        // burn-rate windows lean on
+        let mut counts = vec![0u64; HIST_BUCKETS];
+        counts[3] = 40;
+        counts[9] = 30;
+        counts[15] = 20;
+        counts[30] = 10;
+        let qs = [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0];
+        let vals: Vec<f64> = qs.iter().map(|&q| quantile_us(&counts, q).unwrap()).collect();
+        for w in vals.windows(2) {
+            assert!(w[0] <= w[1], "quantile must be non-decreasing: {vals:?}");
+        }
+        assert!(quantile_us(&counts, 0.5).unwrap() <= quantile_us(&counts, 0.99).unwrap());
+        // and the snapshot path preserves it under the max clamp
+        let h = Hist::new();
+        for us in [10u64, 20, 40, 80, 5000] {
+            h.record(Duration::from_micros(us));
+        }
+        let s = h.snapshot();
+        assert!(s.quantile_us(0.5).unwrap() <= s.quantile_us(0.99).unwrap());
+        assert!(s.quantile_us(0.99).unwrap() <= s.max_us());
+    }
+
+    #[test]
     fn tail_quantiles_need_two_samples() {
         let h = Hist::new();
         h.record(Duration::from_micros(100));

@@ -78,6 +78,31 @@ pub enum EventKind {
     SessionOpen { session: u64, matrix: u64 },
     /// A session closed after `steps` chained products.
     SessionClose { session: u64, matrix: u64, steps: u64 },
+    /// An SLO scope entered a breach episode (both burn-rate windows
+    /// violated). `scope` is `None` for the pool, `Some(id)` for a
+    /// per-matrix override; `at_requests` is the request-count
+    /// evaluation boundary, so seeded runs alert at identical keys.
+    SloAlert {
+        scope: Option<u64>,
+        at_requests: u64,
+        signal: &'static str,
+        missed: u64,
+        tagged: u64,
+    },
+    /// A breached SLO scope recovered (`recovery_evals` consecutive
+    /// clean evaluations).
+    SloRecovered { scope: Option<u64>, at_requests: u64 },
+    /// An arm's mean modeled energy moved beyond the shift band between
+    /// router generations (`ratio_pct` = new/old mean, percent).
+    ArmShift { arm: JointDecision, generation: u64, ratio_pct: u64 },
+}
+
+/// Render an SLO scope for event keys (`pool` or `matrix<N>`).
+fn scope_key(scope: &Option<u64>) -> String {
+    match scope {
+        None => "pool".to_string(),
+        Some(id) => format!("matrix{id}"),
+    }
 }
 
 impl EventKind {
@@ -92,6 +117,9 @@ impl EventKind {
             EventKind::Drift { .. } => "drift",
             EventKind::SessionOpen { .. } => "session_open",
             EventKind::SessionClose { .. } => "session_close",
+            EventKind::SloAlert { .. } => "slo_alert",
+            EventKind::SloRecovered { .. } => "slo_recovered",
+            EventKind::ArmShift { .. } => "arm_shift",
         }
     }
 
@@ -124,6 +152,18 @@ impl EventKind {
             }
             EventKind::SessionClose { session, matrix, steps } => {
                 format!("session_close s={session} matrix={matrix} steps={steps}")
+            }
+            EventKind::SloAlert { scope, at_requests, signal, missed, tagged } => {
+                format!(
+                    "slo_alert scope={} at={at_requests} signal={signal} missed={missed}/{tagged}",
+                    scope_key(scope)
+                )
+            }
+            EventKind::SloRecovered { scope, at_requests } => {
+                format!("slo_recovered scope={} at={at_requests}", scope_key(scope))
+            }
+            EventKind::ArmShift { arm, generation, ratio_pct } => {
+                format!("arm_shift arm={arm} gen=v{generation} ratio={ratio_pct}%")
             }
         }
     }
@@ -307,6 +347,38 @@ mod tests {
             EventKind::Drift { feature: "avg_nnz", sigma: 5.25 }.key(),
             "drift feature=avg_nnz sigma=5.2"
         );
+    }
+
+    #[test]
+    fn slo_and_arm_shift_keys_are_deterministic() {
+        let alert = EventKind::SloAlert {
+            scope: None,
+            at_requests: 96,
+            signal: "miss_budget",
+            missed: 32,
+            tagged: 32,
+        };
+        assert_eq!(alert.name(), "slo_alert");
+        assert_eq!(alert.key(), "slo_alert scope=pool at=96 signal=miss_budget missed=32/32");
+        assert_eq!(
+            EventKind::SloAlert {
+                scope: Some(7),
+                at_requests: 64,
+                signal: "p99",
+                missed: 0,
+                tagged: 0
+            }
+            .key(),
+            "slo_alert scope=matrix7 at=64 signal=p99 missed=0/0"
+        );
+        assert_eq!(
+            EventKind::SloRecovered { scope: None, at_requests: 192 }.key(),
+            "slo_recovered scope=pool at=192"
+        );
+        let arm = JointDecision::format_only(Format::Csr);
+        let shift = EventKind::ArmShift { arm, generation: 3, ratio_pct: 200 };
+        assert_eq!(shift.name(), "arm_shift");
+        assert_eq!(shift.key(), format!("arm_shift arm={arm} gen=v3 ratio=200%"));
     }
 
     #[test]

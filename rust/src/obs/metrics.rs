@@ -108,9 +108,22 @@ impl Metrics {
 
     /// A monotone counter (use `_total` names by convention).
     pub fn counter(&mut self, name: &str, help: &str, value: f64) {
+        self.labeled_counter(name, help, &[], value);
+    }
+
+    /// A counter sample with labels; repeated calls with the same name
+    /// accumulate samples under one family (one `# TYPE` line).
+    pub fn labeled_counter(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, String)],
+        value: f64,
+    ) {
+        let labels = own_labels(labels);
         self.family(name, help, MetricKind::Counter).samples.push(Sample {
             suffix: "",
-            labels: Vec::new(),
+            labels,
             value,
         });
     }
@@ -240,6 +253,17 @@ mod tests {
         assert_eq!(text.matches("# TYPE autospmv_matrix_requests gauge").count(), 1, "{text}");
         assert!(text.contains("autospmv_matrix_requests{matrix=\"0\"} 7"), "{text}");
         assert!(text.contains("autospmv_matrix_requests{matrix=\"1\"} 9"), "{text}");
+    }
+
+    #[test]
+    fn labeled_counters_share_one_family() {
+        let mut m = Metrics::new();
+        m.labeled_counter("arm_total", "Per-arm.", &[("format", "csr".into())], 3.0);
+        m.labeled_counter("arm_total", "Per-arm.", &[("format", "ell".into())], 5.0);
+        let text = m.render_text();
+        assert_eq!(text.matches("# TYPE arm_total counter").count(), 1, "{text}");
+        assert!(text.contains("arm_total{format=\"csr\"} 3"), "{text}");
+        assert!(text.contains("arm_total{format=\"ell\"} 5"), "{text}");
     }
 
     #[test]

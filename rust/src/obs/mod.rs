@@ -1,6 +1,6 @@
 //! Observability primitives for the serving pool and the online loop.
 //!
-//! Three pillars, all allocation-free on the hot path:
+//! Six pillars, all allocation-free on the hot path:
 //!
 //! 1. **Stage tracing** ([`trace`]): every served request decomposes its
 //!    end-to-end latency into monotonic stage durations (queue-wait →
@@ -9,24 +9,43 @@
 //!    to the end-to-end histogram telemetry already keeps.
 //! 2. **Control-plane event journal** ([`journal`]): a bounded,
 //!    drop-oldest ring of structured events (hot-swap, retrain,
-//!    migration, drift, exploration, session lifecycle) shared by the
-//!    router and every shard, so a drift-triggered hot-swap leaves a
-//!    causal paper trail instead of three counter bumps.
+//!    migration, drift, exploration, session lifecycle, SLO
+//!    alert/recovery, arm shift) shared by the router and every shard,
+//!    so a drift-triggered hot-swap leaves a causal paper trail instead
+//!    of three counter bumps.
 //! 3. **Metrics export** ([`metrics`]): renders counters, gauges, and
 //!    the log2 histograms in Prometheus text-exposition format, plus a
 //!    [`crate::report::Table`] twin for TSV/JSON emission.
+//! 4. **SLO engine** ([`slo`]): multi-window burn-rate evaluation of a
+//!    p99 target and a deadline-miss budget over request-counted
+//!    windows, with debounced breach/recovery journal events.
+//! 5. **Per-arm attribution** ([`attr`]): the paper's four headline
+//!    metrics (latency, energy, power, efficiency) accumulated per
+//!    joint (format × compile-knob) arm, with generation windows
+//!    aligned to router hot-swaps.
+//! 6. **Flight recorder** ([`recorder`]): a bounded per-shard ring of
+//!    recent request traces, frozen by the SLO engine at breach time so
+//!    the breach context survives for post-mortem.
 //!
 //! The hot-path cost budget is two `Instant::now()` calls and a handful
-//! of relaxed atomic adds per request (gated by `PoolConfig::tracing`);
-//! journal emission takes a mutex but only on control-plane events,
-//! which are rare by design.
+//! of relaxed atomic adds per request (gated by `PoolConfig::tracing`;
+//! arm attribution is a few more relaxed adds per *dispatch*); the SLO
+//! observe path (histogram add + flight-lane push) only runs when the
+//! pool has an SLO configured. Journal emission takes a mutex but only
+//! on control-plane events, which are rare by design.
 
+pub mod attr;
 pub mod hist;
 pub mod journal;
 pub mod metrics;
+pub mod recorder;
+pub mod slo;
 pub mod trace;
 
+pub use attr::{ArmAttr, ArmProfile};
 pub use hist::{Hist, HistSnapshot, HIST_BUCKETS};
 pub use journal::{Event, EventKind, Journal, SwapTrigger, DEFAULT_JOURNAL_CAP};
 pub use metrics::Metrics;
+pub use recorder::{FlightRecord, FlightRecorder, DEFAULT_FLIGHT_CAP};
+pub use slo::{SloConfig, SloEngine, SloSnapshot, SloSpec, SloStatus};
 pub use trace::{Stage, StageHists, StageStats, Trace, N_STAGES};

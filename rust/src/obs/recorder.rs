@@ -1,0 +1,232 @@
+//! Trace flight recorder: a bounded per-shard ring of the most recent
+//! request traces, frozen ("captured") by the SLO engine when a breach
+//! fires so the traces AROUND the breach survive for post-mortem.
+//!
+//! The recorder is off unless the pool runs with an SLO config (the
+//! engine owns one); with it on, the per-request cost is one short
+//! mutex push into the owning shard's private lane — shards never
+//! contend with each other, only with the rare snapshot/capture reader.
+//! Each lane holds the last `cap` records; the merged view interleaves
+//! lanes by a global sequence number so "the last N requests" reads in
+//! admission order even on a multi-shard pool.
+
+use super::trace::Trace;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Default per-shard ring capacity (records, not bytes).
+pub const DEFAULT_FLIGHT_CAP: usize = 32;
+
+/// One recorded request: identity, outcome, and its full stage trace.
+#[derive(Debug, Clone)]
+pub struct FlightRecord {
+    /// Global admission order across all lanes (monotone).
+    pub seq: u64,
+    pub matrix: u64,
+    pub shard: usize,
+    /// End-to-end service time.
+    pub service: Duration,
+    /// Whether the request carried a deadline tag and missed it.
+    pub deadline_missed: bool,
+    /// Stage decomposition (all-zero when pool tracing is off).
+    pub trace: Trace,
+}
+
+impl FlightRecord {
+    /// One-line JSON object (microsecond durations, like the journal).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"seq\":{},\"matrix\":{},\"shard\":{},\"service_us\":{},\
+             \"deadline_missed\":{},\"queue_wait_us\":{},\"batch_wait_us\":{},\
+             \"convert_us\":{},\"exec_us\":{},\"reply_us\":{}}}",
+            self.seq,
+            self.matrix,
+            self.shard,
+            self.service.as_micros(),
+            self.deadline_missed,
+            self.trace.queue_wait.as_micros(),
+            self.trace.batch_wait.as_micros(),
+            self.trace.convert.as_micros(),
+            self.trace.exec.as_micros(),
+            self.trace.reply.as_micros(),
+        )
+    }
+}
+
+/// Bounded per-shard trace rings plus the breach-time capture slot.
+pub struct FlightRecorder {
+    cap: usize,
+    seq: AtomicU64,
+    lanes: Vec<Mutex<VecDeque<FlightRecord>>>,
+    /// The ring as it looked when the last breach fired.
+    captured: Mutex<Vec<FlightRecord>>,
+    captures: AtomicU64,
+}
+
+impl FlightRecorder {
+    pub fn new(lanes: usize, cap: usize) -> Self {
+        let cap = cap.max(1);
+        FlightRecorder {
+            cap,
+            seq: AtomicU64::new(0),
+            lanes: (0..lanes.max(1)).map(|_| Mutex::new(VecDeque::with_capacity(cap))).collect(),
+            captured: Mutex::new(Vec::new()),
+            captures: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one served request into its shard's lane (drop-oldest).
+    pub fn push(
+        &self,
+        shard: usize,
+        matrix: u64,
+        service: Duration,
+        deadline_missed: bool,
+        trace: Trace,
+    ) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let lane = &self.lanes[shard % self.lanes.len()];
+        let mut ring = lane.lock().expect("flight lane lock");
+        if ring.len() == self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(FlightRecord { seq, matrix, shard, service, deadline_missed, trace });
+    }
+
+    /// The live rings merged across lanes, oldest first (by `seq`).
+    pub fn ring(&self) -> Vec<FlightRecord> {
+        let mut out = Vec::new();
+        for lane in &self.lanes {
+            out.extend(lane.lock().expect("flight lane lock").iter().cloned());
+        }
+        out.sort_unstable_by_key(|r| r.seq);
+        out
+    }
+
+    /// Freeze the current ring as the breach context (the SLO alert
+    /// path calls this); returns the number of records captured.
+    pub fn capture(&self) -> usize {
+        let snap = self.ring();
+        let n = snap.len();
+        *self.captured.lock().expect("flight capture lock") = snap;
+        self.captures.fetch_add(1, Ordering::Relaxed);
+        n
+    }
+
+    /// The most recent breach capture (empty if none fired yet).
+    pub fn captured(&self) -> Vec<FlightRecord> {
+        self.captured.lock().expect("flight capture lock").clone()
+    }
+
+    /// Breach captures taken over the recorder's lifetime.
+    pub fn captures(&self) -> u64 {
+        self.captures.load(Ordering::Relaxed)
+    }
+
+    /// Records currently live across all lanes.
+    pub fn len(&self) -> usize {
+        self.lanes.iter().map(|l| l.lock().expect("flight lane lock").len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Render records as a JSON array (one object per line) — the
+    /// serve CLI's `--flight-out` payload.
+    pub fn to_json(records: &[FlightRecord]) -> String {
+        if records.is_empty() {
+            return "[]\n".to_string();
+        }
+        let mut out = String::from("[\n");
+        for (i, r) in records.iter().enumerate() {
+            out.push_str("  ");
+            out.push_str(&r.to_json());
+            if i + 1 < records.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("]\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn push_n(rec: &FlightRecorder, shard: usize, n: usize) {
+        for i in 0..n {
+            rec.push(
+                shard,
+                i as u64,
+                Duration::from_micros(10 + i as u64),
+                false,
+                Trace::default(),
+            );
+        }
+    }
+
+    #[test]
+    fn ring_is_bounded_and_drops_oldest() {
+        let rec = FlightRecorder::new(1, 4);
+        push_n(&rec, 0, 10);
+        let ring = rec.ring();
+        assert_eq!(ring.len(), 4);
+        assert_eq!(rec.len(), 4);
+        let seqs: Vec<u64> = ring.iter().map(|r| r.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "newest survive, oldest first");
+    }
+
+    #[test]
+    fn lanes_merge_in_global_admission_order() {
+        let rec = FlightRecorder::new(2, 8);
+        rec.push(0, 1, Duration::from_micros(5), false, Trace::default());
+        rec.push(1, 2, Duration::from_micros(6), true, Trace::default());
+        rec.push(0, 3, Duration::from_micros(7), false, Trace::default());
+        let ring = rec.ring();
+        let seqs: Vec<u64> = ring.iter().map(|r| r.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2]);
+        assert_eq!(ring[1].matrix, 2);
+        assert!(ring[1].deadline_missed);
+    }
+
+    #[test]
+    fn capture_freezes_the_breach_context() {
+        let rec = FlightRecorder::new(1, 4);
+        assert!(rec.is_empty());
+        assert_eq!(rec.captures(), 0);
+        assert!(rec.captured().is_empty());
+        push_n(&rec, 0, 4);
+        assert_eq!(rec.capture(), 4);
+        assert_eq!(rec.captures(), 1);
+        // the live ring rolls on; the capture does not
+        push_n(&rec, 0, 4);
+        let cap = rec.captured();
+        assert_eq!(cap.len(), 4);
+        assert_eq!(cap[0].seq, 0, "capture holds the breach-time window");
+        assert_eq!(rec.ring()[0].seq, 4);
+    }
+
+    #[test]
+    fn json_renders_one_object_per_record() {
+        let rec = FlightRecorder::new(1, 4);
+        rec.push(
+            0,
+            7,
+            Duration::from_micros(42),
+            true,
+            Trace { exec: Duration::from_micros(40), ..Default::default() },
+        );
+        let json = FlightRecorder::to_json(&rec.ring());
+        assert!(json.starts_with("[\n"), "{json}");
+        assert!(json.contains("\"matrix\":7"), "{json}");
+        assert!(json.contains("\"service_us\":42"), "{json}");
+        assert!(json.contains("\"deadline_missed\":true"), "{json}");
+        assert!(json.contains("\"exec_us\":40"), "{json}");
+        assert_eq!(FlightRecorder::to_json(&[]), "[]\n");
+    }
+}

@@ -1,0 +1,547 @@
+//! SLO engine: windowed p99/deadline-miss tracking with multi-window
+//! burn-rate alerting over the serving pool's log2 histograms.
+//!
+//! An [`SloSpec`] states the promise (p99 target, deadline-miss
+//! budget); the engine checks it over TWO windows — a fast window of
+//! the last `fast_window` requests and the slow full-history window —
+//! and only declares [`SloStatus::Breach`] when BOTH agree, the
+//! classic multi-window burn-rate rule: the fast window makes alerts
+//! prompt, the slow window keeps one bad batch from paging anyone.
+//! Windows are request-counted, not wall-clocked, so a seeded
+//! single-worker run evaluates at identical boundaries every time and
+//! the `slo_alert`/`slo_recovered` journal keys are deterministic.
+//!
+//! Evaluation is debounced structurally: one alert per breach episode
+//! (no re-alert while breached), and recovery requires
+//! `recovery_evals` consecutive clean evaluations — an oscillating
+//! workload cannot storm the journal. On the alert edge the engine
+//! freezes the [`FlightRecorder`] ring, so the traces around the
+//! breach survive for post-mortem (`Pool::flight_records`).
+//!
+//! Everything here is observational: nothing is shed or reordered.
+//! Admission control acting on these signals is the next step of the
+//! ROADMAP's scale-out item.
+
+use super::hist::{quantile_us, Hist, HIST_BUCKETS};
+use super::journal::{EventKind, Journal};
+use super::recorder::FlightRecorder;
+use super::trace::Trace;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// The promise: a p99 service-time target and the fraction of
+/// deadline-tagged requests allowed to miss their tag.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    /// Windowed p99 service time must stay at or under this.
+    pub p99_target: Duration,
+    /// Allowed miss fraction among deadline-tagged requests (the burn
+    /// rate is `observed_miss_fraction / budget`; >= 1.0 burns it).
+    pub deadline_miss_budget: f64,
+}
+
+impl Default for SloSpec {
+    fn default() -> Self {
+        SloSpec { p99_target: Duration::from_millis(50), deadline_miss_budget: 0.01 }
+    }
+}
+
+/// Engine configuration: the pool-wide spec, optional per-matrix
+/// overrides (each gets its own windows and its own alert scope), and
+/// the window/debounce geometry.
+#[derive(Debug, Clone)]
+pub struct SloConfig {
+    pub spec: SloSpec,
+    /// Per-matrix overrides: `(matrix_id, spec)`. Each override is
+    /// evaluated as its own scope on the same request-count boundaries.
+    pub overrides: Vec<(u64, SloSpec)>,
+    /// Fast-window width AND evaluation cadence, in requests (the
+    /// "1-minute-equivalent" window, expressed in request counts so
+    /// seeded runs are deterministic).
+    pub fast_window: u64,
+    /// Consecutive clean evaluations required before a breached scope
+    /// recovers (hysteresis against alert storms).
+    pub recovery_evals: u64,
+    /// Per-shard flight-recorder ring capacity.
+    pub flight_cap: usize,
+}
+
+impl SloConfig {
+    pub fn new(spec: SloSpec) -> Self {
+        SloConfig {
+            spec,
+            overrides: Vec::new(),
+            fast_window: 64,
+            recovery_evals: 2,
+            flight_cap: super::recorder::DEFAULT_FLIGHT_CAP,
+        }
+    }
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig::new(SloSpec::default())
+    }
+}
+
+/// Where a scope stands against its spec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SloStatus {
+    /// Neither window violates the spec.
+    Ok,
+    /// The fast window violates but the slow window does not (a blip —
+    /// watch, don't page).
+    Warning,
+    /// Both windows violate (or a breach episode has not recovered yet).
+    Breach,
+}
+
+impl SloStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            SloStatus::Ok => "ok",
+            SloStatus::Warning => "warning",
+            SloStatus::Breach => "breach",
+        }
+    }
+
+    /// Gauge encoding for metrics export (0 / 1 / 2).
+    pub fn as_f64(self) -> f64 {
+        match self {
+            SloStatus::Ok => 0.0,
+            SloStatus::Warning => 1.0,
+            SloStatus::Breach => 2.0,
+        }
+    }
+}
+
+/// Point-in-time summary of the POOL scope (the headline numbers the
+/// CLI line and the metrics families render).
+#[derive(Debug, Clone)]
+pub struct SloSnapshot {
+    /// Worst status across all scopes (breach episodes are sticky
+    /// until they recover).
+    pub status: SloStatus,
+    pub p99_target: Duration,
+    pub miss_budget: f64,
+    /// Evaluations run (every `fast_window` observed requests).
+    pub evals: u64,
+    /// Breach episodes alerted (one per episode, debounced).
+    pub alerts: u64,
+    /// Breach episodes recovered.
+    pub recoveries: u64,
+    /// Pool-scope burn rates at the last evaluation.
+    pub fast_burn: f64,
+    pub slow_burn: f64,
+    /// Pool-scope windowed p99s at the last evaluation (None below two
+    /// samples in the window).
+    pub fast_p99_us: Option<f64>,
+    pub slow_p99_us: Option<f64>,
+    /// Requests observed / deadline-tagged / missed, full history.
+    pub observed: u64,
+    pub tagged: u64,
+    pub missed: u64,
+    /// Records in the last breach capture (0 before any breach).
+    pub flight_captured: usize,
+    /// Breach captures taken.
+    pub flight_captures: u64,
+}
+
+/// Shared per-scope accumulation (hot path: relaxed atomics only).
+struct ScopeState {
+    /// `None` = the pool scope; `Some(id)` = a per-matrix override.
+    matrix: Option<u64>,
+    spec: SloSpec,
+    lat: Hist,
+    tagged: AtomicU64,
+    missed: AtomicU64,
+}
+
+/// Per-scope evaluation state (touched only under the eval mutex).
+struct ScopeEval {
+    /// Histogram bucket counts at the last evaluation boundary — the
+    /// fast window is the delta since here.
+    mark_counts: Vec<u64>,
+    mark_count: u64,
+    mark_tagged: u64,
+    mark_missed: u64,
+    /// In a breach episode (alerted, not yet recovered).
+    breached: bool,
+    clean_evals: u64,
+    status: SloStatus,
+    fast_burn: f64,
+    slow_burn: f64,
+    fast_p99_us: Option<f64>,
+    slow_p99_us: Option<f64>,
+}
+
+impl ScopeEval {
+    fn new() -> Self {
+        ScopeEval {
+            mark_counts: vec![0; HIST_BUCKETS],
+            mark_count: 0,
+            mark_tagged: 0,
+            mark_missed: 0,
+            breached: false,
+            clean_evals: 0,
+            status: SloStatus::Ok,
+            fast_burn: 0.0,
+            slow_burn: 0.0,
+            fast_p99_us: None,
+            slow_p99_us: None,
+        }
+    }
+
+    /// Breach episodes stay visible until they recover, even if a
+    /// single evaluation in between looked clean.
+    fn displayed_status(&self) -> SloStatus {
+        if self.breached {
+            SloStatus::Breach
+        } else {
+            self.status
+        }
+    }
+}
+
+/// Miss burn rate: observed miss fraction over the budget. Zero misses
+/// burn nothing; a non-zero miss against a zero budget burns infinitely.
+fn burn_rate(missed: u64, tagged: u64, budget: f64) -> f64 {
+    if missed == 0 || tagged == 0 {
+        return 0.0;
+    }
+    let frac = missed as f64 / tagged as f64;
+    if budget <= 0.0 {
+        f64::INFINITY
+    } else {
+        frac / budget
+    }
+}
+
+/// The engine: scopes + windows + the flight recorder, fed by shards
+/// via [`SloEngine::observe`] and read by `Pool::stats`.
+pub struct SloEngine {
+    cfg: SloConfig,
+    journal: Arc<Journal>,
+    recorder: FlightRecorder,
+    scopes: Vec<ScopeState>,
+    observed: AtomicU64,
+    evals: AtomicU64,
+    alerts: AtomicU64,
+    recoveries: AtomicU64,
+    eval_state: Mutex<Vec<ScopeEval>>,
+}
+
+impl SloEngine {
+    /// Build the engine for a pool with `shards` workers, emitting
+    /// alerts into the pool's shared `journal`.
+    pub fn new(cfg: SloConfig, shards: usize, journal: Arc<Journal>) -> Self {
+        let mut scopes = vec![ScopeState {
+            matrix: None,
+            spec: cfg.spec,
+            lat: Hist::new(),
+            tagged: AtomicU64::new(0),
+            missed: AtomicU64::new(0),
+        }];
+        for &(id, spec) in &cfg.overrides {
+            scopes.push(ScopeState {
+                matrix: Some(id),
+                spec,
+                lat: Hist::new(),
+                tagged: AtomicU64::new(0),
+                missed: AtomicU64::new(0),
+            });
+        }
+        let evals = scopes.iter().map(|_| ScopeEval::new()).collect();
+        SloEngine {
+            recorder: FlightRecorder::new(shards, cfg.flight_cap),
+            cfg,
+            journal,
+            scopes,
+            observed: AtomicU64::new(0),
+            evals: AtomicU64::new(0),
+            alerts: AtomicU64::new(0),
+            recoveries: AtomicU64::new(0),
+            eval_state: Mutex::new(evals),
+        }
+    }
+
+    /// Record one served request; every `fast_window`-th observation
+    /// runs an evaluation. Shards call this per request when an SLO is
+    /// configured — the cost is a histogram add, two or three relaxed
+    /// counter adds, and one short flight-lane push.
+    pub fn observe(
+        &self,
+        matrix: u64,
+        shard: usize,
+        service: Duration,
+        tagged: bool,
+        missed: bool,
+        trace: Option<Trace>,
+    ) {
+        self.recorder.push(shard, matrix, service, missed, trace.unwrap_or_default());
+        for scope in &self.scopes {
+            if scope.matrix.is_none_or(|m| m == matrix) {
+                scope.lat.record(service);
+                if tagged {
+                    scope.tagged.fetch_add(1, Ordering::Relaxed);
+                    if missed {
+                        scope.missed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        let n = self.observed.fetch_add(1, Ordering::Relaxed) + 1;
+        if n % self.cfg.fast_window.max(1) == 0 {
+            self.evaluate(n);
+        }
+    }
+
+    /// Evaluate every scope at the request-count boundary `at_requests`.
+    fn evaluate(&self, at_requests: u64) {
+        let mut state = self.eval_state.lock().expect("slo eval lock");
+        self.evals.fetch_add(1, Ordering::Relaxed);
+        for (scope, ev) in self.scopes.iter().zip(state.iter_mut()) {
+            let snap = scope.lat.snapshot();
+            let tagged = scope.tagged.load(Ordering::Relaxed);
+            let missed = scope.missed.load(Ordering::Relaxed);
+            let fast_total = snap.count - ev.mark_count;
+            if fast_total == 0 {
+                // no traffic in this scope's window: status unchanged,
+                // and an idle scope neither burns nor recovers
+                continue;
+            }
+            let fast_counts: Vec<u64> = snap
+                .counts
+                .iter()
+                .zip(&ev.mark_counts)
+                .map(|(cur, mark)| cur - mark)
+                .collect();
+            let fast_tagged = tagged - ev.mark_tagged;
+            let fast_missed = missed - ev.mark_missed;
+
+            // p99 needs at least two samples in the window (same rule
+            // as HistSnapshot::tail_quantile_us).
+            let target_us = scope.spec.p99_target.as_secs_f64() * 1e6;
+            ev.fast_p99_us = if fast_total >= 2 { quantile_us(&fast_counts, 0.99) } else { None };
+            ev.slow_p99_us = if snap.count >= 2 { quantile_us(&snap.counts, 0.99) } else { None };
+            ev.fast_burn = burn_rate(fast_missed, fast_tagged, scope.spec.deadline_miss_budget);
+            ev.slow_burn = burn_rate(missed, tagged, scope.spec.deadline_miss_budget);
+
+            let p99_fast = ev.fast_p99_us.is_some_and(|p| p > target_us);
+            let p99_slow = ev.slow_p99_us.is_some_and(|p| p > target_us);
+            let miss_fast = ev.fast_burn >= 1.0;
+            let miss_slow = ev.slow_burn >= 1.0;
+            let p99_viol = p99_fast && p99_slow;
+            let miss_viol = miss_fast && miss_slow;
+            ev.status = if p99_viol || miss_viol {
+                SloStatus::Breach
+            } else if p99_fast || miss_fast {
+                SloStatus::Warning
+            } else {
+                SloStatus::Ok
+            };
+
+            if ev.status == SloStatus::Breach && !ev.breached {
+                // alert edge: one per episode, and freeze the flight
+                // ring so the breach-window traces survive
+                ev.breached = true;
+                ev.clean_evals = 0;
+                self.alerts.fetch_add(1, Ordering::Relaxed);
+                self.recorder.capture();
+                let signal = match (miss_viol, p99_viol) {
+                    (true, true) => "p99+miss_budget",
+                    (true, false) => "miss_budget",
+                    _ => "p99",
+                };
+                self.journal.emit(EventKind::SloAlert {
+                    scope: scope.matrix,
+                    at_requests,
+                    signal,
+                    missed: fast_missed,
+                    tagged: fast_tagged,
+                });
+            } else if ev.breached {
+                if ev.status == SloStatus::Ok {
+                    ev.clean_evals += 1;
+                    if ev.clean_evals >= self.cfg.recovery_evals.max(1) {
+                        ev.breached = false;
+                        self.recoveries.fetch_add(1, Ordering::Relaxed);
+                        self.journal
+                            .emit(EventKind::SloRecovered { scope: scope.matrix, at_requests });
+                    }
+                } else {
+                    ev.clean_evals = 0;
+                }
+            }
+
+            // roll the fast-window mark to this boundary
+            ev.mark_counts.copy_from_slice(&snap.counts);
+            ev.mark_count = snap.count;
+            ev.mark_tagged = tagged;
+            ev.mark_missed = missed;
+        }
+    }
+
+    /// Worst displayed status across all scopes.
+    pub fn status(&self) -> SloStatus {
+        let state = self.eval_state.lock().expect("slo eval lock");
+        state.iter().map(|ev| ev.displayed_status()).max().unwrap_or(SloStatus::Ok)
+    }
+
+    /// The flight recorder the engine freezes on breach.
+    pub fn recorder(&self) -> &FlightRecorder {
+        &self.recorder
+    }
+
+    pub fn snapshot(&self) -> SloSnapshot {
+        let state = self.eval_state.lock().expect("slo eval lock");
+        let status = state.iter().map(|ev| ev.displayed_status()).max().unwrap_or(SloStatus::Ok);
+        let pool = &state[0];
+        SloSnapshot {
+            status,
+            p99_target: self.cfg.spec.p99_target,
+            miss_budget: self.cfg.spec.deadline_miss_budget,
+            evals: self.evals.load(Ordering::Relaxed),
+            alerts: self.alerts.load(Ordering::Relaxed),
+            recoveries: self.recoveries.load(Ordering::Relaxed),
+            fast_burn: pool.fast_burn,
+            slow_burn: pool.slow_burn,
+            fast_p99_us: pool.fast_p99_us,
+            slow_p99_us: pool.slow_p99_us,
+            observed: self.observed.load(Ordering::Relaxed),
+            tagged: self.scopes[0].tagged.load(Ordering::Relaxed),
+            missed: self.scopes[0].missed.load(Ordering::Relaxed),
+            flight_captured: self.recorder.captured().len(),
+            flight_captures: self.recorder.captures(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(cfg: SloConfig) -> (SloEngine, Arc<Journal>) {
+        let journal = Arc::new(Journal::new(64));
+        (SloEngine::new(cfg, 1, journal.clone()), journal)
+    }
+
+    fn cfg(budget: f64, fast_window: u64) -> SloConfig {
+        SloConfig {
+            spec: SloSpec { p99_target: Duration::from_secs(3600), deadline_miss_budget: budget },
+            fast_window,
+            ..SloConfig::default()
+        }
+    }
+
+    fn drive(e: &SloEngine, n: usize, us: u64, tagged: bool, missed: bool) {
+        for _ in 0..n {
+            e.observe(1, 0, Duration::from_micros(us), tagged, missed, None);
+        }
+    }
+
+    fn keys(journal: &Journal) -> Vec<String> {
+        journal.snapshot().iter().map(|e| e.kind.key()).collect()
+    }
+
+    #[test]
+    fn healthy_traffic_stays_ok_and_emits_nothing() {
+        let (e, journal) = engine(cfg(0.25, 8));
+        drive(&e, 32, 50, true, false);
+        let s = e.snapshot();
+        assert_eq!(s.status, SloStatus::Ok);
+        assert_eq!(s.evals, 4);
+        assert_eq!(s.alerts, 0);
+        assert_eq!(s.fast_burn, 0.0);
+        assert!(journal.is_empty());
+        assert_eq!(e.recorder().captures(), 0);
+    }
+
+    #[test]
+    fn miss_budget_breach_alerts_once_then_recovers_deterministically() {
+        let (e, journal) = engine(cfg(0.25, 8));
+        drive(&e, 16, 50, true, false); // clean history
+        drive(&e, 16, 50, true, true); // every tagged request misses
+        let s = e.snapshot();
+        assert_eq!(s.status, SloStatus::Breach);
+        assert_eq!(s.alerts, 1, "debounce: one alert per episode");
+        assert!(s.fast_burn >= 1.0 && s.slow_burn >= 1.0, "{s:?}");
+        assert!(e.recorder().captures() == 1 && s.flight_captured > 0);
+        // drain: two clean evaluations recover the episode
+        drive(&e, 16, 50, true, false);
+        let s = e.snapshot();
+        assert_eq!(s.status, SloStatus::Ok);
+        assert_eq!(s.recoveries, 1);
+        assert_eq!(
+            keys(&journal),
+            vec![
+                "slo_alert scope=pool at=24 signal=miss_budget missed=8/8".to_string(),
+                "slo_recovered scope=pool at=48".to_string(),
+            ],
+        );
+    }
+
+    #[test]
+    fn fast_only_violation_is_a_warning_not_a_breach() {
+        let (e, journal) = engine(cfg(0.25, 8));
+        // long clean history so the slow window stays under budget
+        drive(&e, 64, 50, true, false);
+        // one bad fast window: 8/72 tagged missed = 0.11 < 0.25 slow
+        drive(&e, 8, 50, true, true);
+        let s = e.snapshot();
+        assert_eq!(s.status, SloStatus::Warning);
+        assert_eq!(s.alerts, 0, "a blip must not page");
+        assert!(journal.is_empty());
+    }
+
+    #[test]
+    fn p99_target_breach_carries_the_p99_signal() {
+        let spec = SloSpec { p99_target: Duration::from_micros(100), deadline_miss_budget: 1.0 };
+        let (e, journal) = engine(SloConfig { spec, fast_window: 8, ..SloConfig::default() });
+        drive(&e, 16, 5_000, false, false); // 5ms >> 100us target, untagged
+        let s = e.snapshot();
+        assert_eq!(s.status, SloStatus::Breach);
+        assert!(s.fast_p99_us.unwrap() > 100.0);
+        let k = keys(&journal);
+        assert_eq!(k.len(), 1);
+        assert!(k[0].contains("signal=p99"), "{k:?}");
+    }
+
+    #[test]
+    fn per_matrix_override_scopes_alert_independently() {
+        let mut c = cfg(1.0, 8); // pool budget so lax it never burns
+        c.overrides = vec![(
+            7,
+            SloSpec { p99_target: Duration::from_secs(3600), deadline_miss_budget: 0.1 },
+        )];
+        let (e, journal) = engine(c);
+        for i in 0..16 {
+            // matrix 7 misses every deadline; matrix 1 is healthy
+            e.observe(7, 0, Duration::from_micros(80), true, true, None);
+            e.observe(1, 0, Duration::from_micros(20), true, false, None);
+            let _ = i;
+        }
+        let s = e.snapshot();
+        assert_eq!(s.status, SloStatus::Breach, "worst scope wins");
+        let k = keys(&journal);
+        assert_eq!(k.len(), 1, "{k:?}");
+        assert!(k[0].starts_with("slo_alert scope=matrix7 "), "{k:?}");
+    }
+
+    #[test]
+    fn oscillating_breach_does_not_storm_and_recovery_needs_hysteresis() {
+        let (e, journal) = engine(cfg(0.25, 8));
+        drive(&e, 8, 50, true, true); // breach at first eval
+        drive(&e, 8, 50, true, false); // clean eval #1 (no recovery yet)
+        drive(&e, 8, 50, true, true); // breach again mid-episode: no new alert
+        drive(&e, 8, 50, true, false); // clean eval #1 again
+        drive(&e, 8, 50, true, false); // clean eval #2: recovered
+        let s = e.snapshot();
+        assert_eq!(s.alerts, 1);
+        assert_eq!(s.recoveries, 1);
+        let names: Vec<&str> =
+            journal.snapshot().iter().map(|ev| ev.kind.name()).collect::<Vec<_>>();
+        assert_eq!(names, vec!["slo_alert", "slo_recovered"]);
+    }
+}

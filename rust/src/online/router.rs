@@ -64,7 +64,11 @@ pub struct SwapRouter {
     cv: Condvar,
     /// Control-plane event journal. The router owns it because it is
     /// the one object shared by the online loop (created first) and
-    /// the pool (which hands it to shards via `Telemetry`).
+    /// the pool (which hands it to shards via `Telemetry`). Besides the
+    /// swap/retrain/migration chain it now also carries the SLO
+    /// engine's `slo_alert`/`slo_recovered` events and the per-arm
+    /// attribution's `arm_shift` events (DESIGN.md §11), all in one
+    /// causally ordered sequence.
     journal: Arc<Journal>,
 }
 

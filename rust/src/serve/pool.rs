@@ -22,7 +22,10 @@ use super::telemetry::{MatrixStats, Telemetry};
 use super::Response;
 use crate::coordinator::RunTimeOptimizer;
 use crate::gpusim::{turing_gtx1650m, GpuArch};
-use crate::obs::{Event, Metrics, StageStats};
+use crate::obs::{
+    ArmProfile, Event, FlightRecord, FlightRecorder, Metrics, SloConfig, SloEngine, SloSnapshot,
+    StageStats,
+};
 use crate::online::{DriftStatus, Online, SwapRouter};
 use crate::sparse::convert::ConvertParams;
 use crate::sparse::{Coo, Format};
@@ -56,6 +59,12 @@ pub struct PoolConfig {
     /// end). Off, responses carry `trace: None` and the stage
     /// histograms stay empty.
     pub tracing: bool,
+    /// Service-level objective to evaluate traffic against (DESIGN.md
+    /// §11). None (the default) disables the SLO engine AND the trace
+    /// flight recorder — the hot path then pays nothing for either.
+    /// Purely observational: a breach alerts and captures context, it
+    /// never sheds or reorders requests.
+    pub slo: Option<SloConfig>,
 }
 
 impl Default for PoolConfig {
@@ -68,6 +77,7 @@ impl Default for PoolConfig {
             convert: ConvertParams::default(),
             arch: turing_gtx1650m(),
             tracing: true,
+            slo: None,
         }
     }
 }
@@ -146,6 +156,15 @@ pub struct PoolStats {
     pub events_total: u64,
     /// Events dropped from the journal ring (oldest-first) at capacity.
     pub events_dropped: u64,
+    /// Router generation the per-arm attribution windows are aligned to
+    /// (1 until the first hot-swap).
+    pub arm_generation: u64,
+    /// Per-arm cost attribution: one row per joint (format, knob) arm
+    /// that served at least one request, in arm-index order.
+    pub arm_profiles: Vec<ArmProfile>,
+    /// SLO engine snapshot for the pool scope (None when the pool was
+    /// started without an SLO).
+    pub slo: Option<SloSnapshot>,
     pub per_matrix: Vec<MatrixStats>,
 }
 
@@ -356,6 +375,96 @@ impl PoolStats {
                 &s.hist,
             );
         }
+        m.gauge(
+            "spmv_arm_generation",
+            "Router generation the arm-attribution windows are aligned to",
+            self.arm_generation as f64,
+        );
+        for p in &self.arm_profiles {
+            let labels = [("format", p.format.clone()), ("knobs", p.knobs.clone())];
+            m.labeled_counter(
+                "spmv_arm_requests_total",
+                "Requests served per joint (format, knob) arm",
+                &labels,
+                p.requests as f64,
+            );
+            m.labeled_counter(
+                "spmv_arm_seconds_total",
+                "Request-weighted exec time per joint arm",
+                &labels,
+                p.exec_s,
+            );
+            m.labeled_counter(
+                "spmv_arm_energy_joules_total",
+                "Modeled energy per joint arm (gpusim)",
+                &labels,
+                p.energy_j,
+            );
+            m.labeled_gauge(
+                "spmv_arm_power_watts",
+                "Request-weighted mean modeled power per joint arm",
+                &labels,
+                p.mean_power_w,
+            );
+            m.labeled_gauge(
+                "spmv_arm_mflops_per_watt",
+                "Request-weighted mean modeled efficiency per joint arm",
+                &labels,
+                p.mflops_per_watt,
+            );
+        }
+        if let Some(slo) = &self.slo {
+            m.gauge(
+                "spmv_slo_status",
+                "SLO status at the last evaluation (0 ok / 1 warning / 2 breach)",
+                slo.status.as_f64(),
+            );
+            m.gauge(
+                "spmv_slo_p99_target_seconds",
+                "Configured p99 service-time target",
+                slo.p99_target.as_secs_f64(),
+            );
+            m.gauge(
+                "spmv_slo_miss_budget_ratio",
+                "Allowed deadline-miss fraction among tagged requests",
+                slo.miss_budget,
+            );
+            m.counter(
+                "spmv_slo_evals_total",
+                "SLO evaluations run (one per fast-window of requests)",
+                slo.evals as f64,
+            );
+            m.counter("spmv_slo_alerts_total", "SLO breach episodes alerted", slo.alerts as f64);
+            m.counter(
+                "spmv_slo_recoveries_total",
+                "SLO breach episodes recovered",
+                slo.recoveries as f64,
+            );
+            // burn rates are +inf when the budget is zero; clamp so the
+            // text exposition stays parseable
+            m.gauge(
+                "spmv_slo_fast_burn_ratio",
+                "Deadline-miss burn rate over the fast window (1.0 = at budget)",
+                slo.fast_burn.min(1e9),
+            );
+            m.gauge(
+                "spmv_slo_slow_burn_ratio",
+                "Deadline-miss burn rate over the full history",
+                slo.slow_burn.min(1e9),
+            );
+            if let Some(p99) = slo.fast_p99_us {
+                m.gauge(
+                    "spmv_slo_window_p99_seconds",
+                    "Fast-window p99 service time at the last evaluation",
+                    p99 * 1e-6,
+                );
+            }
+            m.gauge(
+                "spmv_flight_records",
+                "Trace records frozen by the last SLO breach capture",
+                slo.flight_captured as f64,
+            );
+        }
         for mat in &self.per_matrix {
             let labels = [("matrix", mat.id.to_string())];
             m.labeled_gauge(
@@ -424,9 +533,19 @@ impl Pool {
     ) -> Pool {
         // The router owns the event journal (the online loop emits into
         // it before any pool exists); telemetry shares it so shard-side
-        // emissions and `Pool::events` read the same ring.
-        let telemetry = Arc::new(Telemetry::with_journal(router.journal().clone()));
+        // emissions and `Pool::events` read the same ring. The SLO
+        // engine (and its flight recorder) exists only when configured.
+        let workers = cfg.workers.max(1);
+        let telemetry = match &cfg.slo {
+            Some(slo_cfg) => {
+                let engine =
+                    Arc::new(SloEngine::new(slo_cfg.clone(), workers, router.journal().clone()));
+                Arc::new(Telemetry::with_slo(router.journal().clone(), engine))
+            }
+            None => Arc::new(Telemetry::with_journal(router.journal().clone())),
+        };
         let shard_cfg = ShardCfg {
+            shard: 0,
             convert: cfg.convert,
             batch_window: cfg.batch_window,
             max_batch: cfg.max_batch.max(1),
@@ -434,14 +553,16 @@ impl Pool {
             arch: cfg.arch.clone(),
             tracing: cfg.tracing,
         };
-        let shards = (0..cfg.workers.max(1))
+        let shards = (0..workers)
             .map(|i| {
+                let mut shard_cfg = shard_cfg.clone();
+                shard_cfg.shard = i;
                 Shard::spawn(
                     i,
                     router.clone(),
                     online.clone(),
                     backend.clone(),
-                    shard_cfg.clone(),
+                    shard_cfg,
                     telemetry.clone(),
                 )
             })
@@ -610,8 +731,34 @@ impl Pool {
             stage_stats: self.telemetry.stages.snapshot(),
             events_total: self.telemetry.journal().total(),
             events_dropped: self.telemetry.journal().dropped(),
+            arm_generation: self.telemetry.arms.generation(),
+            arm_profiles: self.telemetry.arms.snapshot(),
+            slo: self.telemetry.slo().map(|e| e.snapshot()),
             per_matrix,
         })
+    }
+
+    /// Trace flight records (DESIGN.md §11.3): the breach capture when
+    /// one fired, else the live ring of most-recent traces. Empty when
+    /// the pool runs without an SLO — the recorder only exists with one.
+    pub fn flight_records(&self) -> Vec<FlightRecord> {
+        match self.telemetry.slo() {
+            Some(engine) => {
+                let rec = engine.recorder();
+                if rec.captures() > 0 {
+                    rec.captured()
+                } else {
+                    rec.ring()
+                }
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// The flight records rendered as a JSON array (the serve CLI's
+    /// `--flight-out` payload).
+    pub fn flight_json(&self) -> String {
+        FlightRecorder::to_json(&self.flight_records())
     }
 
     /// Snapshot the control-plane event journal: hot-swaps, retrains,
@@ -1263,6 +1410,96 @@ mod tests {
         let table = pool.metrics_table().unwrap();
         assert_eq!(table.header, vec!["metric", "labels", "value"]);
         assert!(table.rows.iter().any(|r| r[0] == "spmv_requests_total" && r[2] == "4"));
+    }
+
+    #[test]
+    fn arm_profiles_attribute_requests_per_joint_arm() {
+        let pool = pool_with(test_router(), 1, 0);
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        let n = coo.n_cols;
+        pool.register(1, coo, 1000).unwrap();
+        for r in 0..6 {
+            pool.product(1, input(n, r)).unwrap();
+        }
+        let stats = pool.stats().unwrap();
+        assert_eq!(stats.arm_generation, 1, "no hot-swap yet");
+        assert_eq!(stats.arm_profiles.len(), 1, "a frozen pool serves one arm per matrix");
+        let p = &stats.arm_profiles[0];
+        assert_eq!(p.requests, 6);
+        assert!(p.exec_s > 0.0);
+        assert!(p.energy_j > 0.0);
+        assert!(p.mean_power_w > 0.0);
+        assert!(p.mflops_per_watt > 0.0);
+        let text = pool.metrics_text().unwrap();
+        assert!(text.contains("spmv_arm_generation 1"), "{text}");
+        let line =
+            format!("spmv_arm_requests_total{{format=\"{}\",knobs=\"{}\"}} 6", p.format, p.knobs);
+        assert!(text.contains(&line), "{text}");
+        assert!(text.contains("# TYPE spmv_arm_energy_joules_total counter"), "{text}");
+        assert!(!text.contains("spmv_slo_status"), "no SLO families without an engine");
+        assert!(pool.flight_records().is_empty(), "no recorder without an SLO");
+        assert_eq!(pool.flight_json(), "[]\n");
+    }
+
+    #[test]
+    fn slo_breach_alerts_captures_flight_context_and_recovers() {
+        use crate::obs::{SloSpec, SloStatus};
+        let slo = SloConfig {
+            spec: SloSpec {
+                p99_target: Duration::from_secs(3600), // never the breach signal here
+                deadline_miss_budget: 0.25,
+            },
+            overrides: vec![],
+            fast_window: 8,
+            recovery_evals: 2,
+            flight_cap: 16,
+        };
+        let pool = Pool::start(
+            test_router(),
+            BackendSpec::Native,
+            PoolConfig { workers: 1, slo: Some(slo), ..Default::default() },
+        );
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        let n = coo.n_cols;
+        pool.register(1, coo, 100).unwrap();
+        // one clean window, then a window of guaranteed misses: both
+        // burn windows violate at request 16 -> breach + alert
+        for r in 0..8 {
+            pool.product_with_deadline(1, input(n, r), Duration::from_secs(3600)).unwrap();
+        }
+        for r in 8..16 {
+            pool.product_with_deadline(1, input(n, r), Duration::ZERO).unwrap();
+        }
+        let stats = pool.stats().unwrap();
+        let s = stats.slo.as_ref().expect("slo snapshot when configured");
+        assert_eq!(s.status, SloStatus::Breach);
+        assert_eq!(s.alerts, 1);
+        let records = pool.flight_records();
+        assert_eq!(records.len(), 16, "breach capture froze the full ring");
+        assert!(records.iter().any(|r| r.deadline_missed), "{records:?}");
+        assert!(pool.flight_json().contains("\"deadline_missed\":true"));
+        // drain with clean traffic: two clean evaluations recover
+        for r in 16..32 {
+            pool.product_with_deadline(1, input(n, r), Duration::from_secs(3600)).unwrap();
+        }
+        let stats = pool.stats().unwrap();
+        let s = stats.slo.as_ref().unwrap();
+        assert_eq!(s.status, SloStatus::Ok);
+        assert_eq!(s.recoveries, 1);
+        assert_eq!(s.evals, 4, "one eval per fast window");
+        let keys: Vec<String> = pool.events().iter().map(|e| e.kind.key()).collect();
+        assert_eq!(
+            keys,
+            vec![
+                "slo_alert scope=pool at=16 signal=miss_budget missed=8/8".to_string(),
+                "slo_recovered scope=pool at=32".to_string(),
+            ],
+        );
+        let text = pool.metrics_text().unwrap();
+        assert!(text.contains("spmv_slo_status 0"), "{text}");
+        assert!(text.contains("spmv_slo_alerts_total 1"), "{text}");
+        assert!(text.contains("spmv_slo_recoveries_total 1"), "{text}");
+        assert!(text.contains("spmv_flight_records 16"), "{text}");
     }
 
     #[test]

@@ -86,6 +86,8 @@ pub struct ShardStatus {
 /// Per-shard immutable configuration (built by the pool).
 #[derive(Clone)]
 pub(crate) struct ShardCfg {
+    /// This shard's index (the flight recorder's lane).
+    pub shard: usize,
     pub convert: ConvertParams,
     pub batch_window: Duration,
     pub max_batch: usize,
@@ -261,6 +263,10 @@ fn worker_loop(
         // Matrices pinned by an open session defer to session close.
         if router.version() != cur_version {
             (cur_policy, cur_version) = router.load();
+            // Close the per-arm attribution generation BEFORE migrating,
+            // so `arm_shift` events precede this version's migrations in
+            // the journal (first shard to notice wins; the rest no-op).
+            telemetry.arms.mark_generation(cur_version, telemetry.journal());
             re_decide_all(
                 cur_policy.as_ref(),
                 cur_version,
@@ -846,6 +852,14 @@ fn execute_group(
             // same convert/exec wall time.
             let convert_d = exec_start.duration_since(group_start);
             let exec_d = exec_done.duration_since(exec_start);
+            // Per-arm attribution: the whole group rode one joint arm,
+            // so one call covers it (request-weighted exec time).
+            telemetry.arms.record(
+                route.decision,
+                batch_size as u64,
+                exec_d * batch_size as u32,
+                &model,
+            );
             if cfg.tracing {
                 let k = batch_size as u64;
                 telemetry.stages.record_n(Stage::Convert, convert_d, k);
@@ -876,11 +890,16 @@ fn execute_group(
                 } else {
                     None
                 };
-                if let Some(dl) = deadline {
+                let tagged = deadline.is_some();
+                let missed = deadline.is_some_and(|dl| service_time > dl);
+                if tagged {
                     totals.deadline_tagged.fetch_add(1, Ordering::Relaxed);
-                    if service_time > dl {
+                    if missed {
                         totals.deadline_misses.fetch_add(1, Ordering::Relaxed);
                     }
+                }
+                if let Some(slo) = telemetry.slo() {
+                    slo.observe(id, cfg.shard, service_time, tagged, missed, trace);
                 }
                 reg.tele.record(service_time, model.energy_j);
                 let _ = reply.send(Ok(Response {
@@ -1078,11 +1097,17 @@ fn do_session_step(
             }
             r.tele.record(step_d, model.energy_j);
         }
+        if let Some(slo) = telemetry.slo() {
+            // a session step is all execution — no queue/batch stages
+            let trace = Trace { exec: step_d, ..Trace::default() };
+            slo.observe(state.matrix_id, cfg.shard, step_d, false, false, Some(trace));
+        }
     }
     if steps > 0 {
         if let Some(r) = reg {
             r.tele.route(state.decision, false, steps);
         }
+        telemetry.arms.record(state.decision, steps, t0.elapsed(), &model);
         if let (Some(o), Some(r)) = (online, reg) {
             o.observe(Observation {
                 matrix_id: state.matrix_id,

@@ -15,7 +15,7 @@
 
 use crate::coordinator::compile_time::CompileChoice;
 use crate::obs::hist::Hist;
-use crate::obs::{Journal, StageHists, DEFAULT_JOURNAL_CAP};
+use crate::obs::{ArmAttr, Journal, SloEngine, StageHists, DEFAULT_JOURNAL_CAP};
 use crate::online::bandit::{knob_arm, knob_index};
 use crate::online::JointDecision;
 use crate::sparse::Format;
@@ -301,13 +301,19 @@ pub struct Counters {
 }
 
 /// The shared registry: matrix id -> telemetry handle, plus the
-/// pool-wide stage histograms and the control-plane event journal
-/// handle shards emit through.
+/// pool-wide stage histograms, per-arm cost attribution, the optional
+/// SLO engine, and the control-plane event journal handle shards emit
+/// through.
 pub struct Telemetry {
     matrices: RwLock<HashMap<u64, Arc<MatrixTelemetry>>>,
     pub totals: Counters,
     /// Per-stage latency histograms (request-lifecycle tracing).
     pub stages: StageHists,
+    /// Per-(format × knob-arm) latency/energy attribution (always on —
+    /// a few relaxed atomic adds per dispatch).
+    pub arms: ArmAttr,
+    /// SLO engine, present only when the pool was configured with one.
+    slo: Option<Arc<SloEngine>>,
     journal: Arc<Journal>,
 }
 
@@ -324,8 +330,23 @@ impl Telemetry {
             matrices: RwLock::new(HashMap::new()),
             totals: Counters::default(),
             stages: StageHists::new(),
+            arms: ArmAttr::new(),
+            slo: None,
             journal,
         }
+    }
+
+    /// Like [`Telemetry::with_journal`], plus an SLO engine shards feed
+    /// per served request.
+    pub fn with_slo(journal: Arc<Journal>, engine: Arc<SloEngine>) -> Self {
+        let mut t = Telemetry::with_journal(journal);
+        t.slo = Some(engine);
+        t
+    }
+
+    /// The SLO engine, if the pool runs with one.
+    pub fn slo(&self) -> Option<&Arc<SloEngine>> {
+        self.slo.as_ref()
     }
 
     /// The control-plane event journal.
@@ -494,5 +515,16 @@ mod tests {
         let exec = stages.iter().find(|s| s.stage == Stage::Exec).unwrap();
         assert_eq!(exec.count(), 1);
         assert!(Telemetry::new().journal().is_empty(), "private journal by default");
+    }
+
+    #[test]
+    fn telemetry_with_slo_exposes_the_engine_and_arms() {
+        use crate::obs::{SloConfig, SloEngine};
+        let journal = Arc::new(Journal::new(8));
+        let engine = Arc::new(SloEngine::new(SloConfig::default(), 1, journal.clone()));
+        let t = Telemetry::with_slo(journal, engine.clone());
+        assert!(Arc::ptr_eq(t.slo().expect("engine installed"), &engine));
+        assert!(Telemetry::new().slo().is_none(), "no engine unless configured");
+        assert_eq!(t.arms.generation(), 1, "attribution is always on");
     }
 }

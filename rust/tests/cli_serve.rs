@@ -1,0 +1,100 @@
+//! CLI-level serve tests: spawn the real `auto-spmv` binary and pin
+//! its stream contract — stdout is the machine-readable report stream
+//! (banner, final ledger, tables, dump confirmations), the in-flight
+//! `--stats-every` ticker goes to stderr — plus the SLO / flight
+//! recorder surface (`--slo-p99-us`, `--slo-miss-budget`,
+//! `--flight-out`).
+//!
+//! Each test builds a tiny 3-matrix dataset first and hands it to the
+//! binary via `--set dataset_path=...`, so the serve run trains its
+//! router on that instead of sweeping the full 30-matrix corpus.
+
+use auto_spmv::dataset::{build, store, BuildOptions};
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_auto-spmv")
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("auto_spmv_cli_{}_{name}", std::process::id()))
+}
+
+/// Build + save a dataset over exactly the matrices `serve` registers.
+fn small_dataset(tag: &str) -> PathBuf {
+    let path = tmp(&format!("{tag}_dataset.tsv"));
+    let only = ["shar_te2-b3", "rim", "bcsstk32"].iter().map(|s| s.to_string()).collect();
+    let ds = build(&BuildOptions { only: Some(only), ..Default::default() });
+    store::save(&ds, &path).expect("save small dataset");
+    path
+}
+
+#[test]
+fn serve_progress_ticker_goes_to_stderr_not_stdout() {
+    let ds = small_dataset("ticker");
+    let out = Command::new(bin())
+        .args([
+            "serve",
+            "--requests",
+            "8",
+            "--workers",
+            "1",
+            "--stats-every",
+            "4",
+            "--set",
+            &format!("dataset_path={}", ds.display()),
+        ])
+        .output()
+        .expect("spawn auto-spmv serve");
+    assert!(out.status.success(), "serve failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("[4/8]"), "ticker on stderr: {stderr}");
+    assert!(stderr.contains("[8/8]"), "ticker on stderr: {stderr}");
+    assert!(!stdout.contains("[4/8]"), "ticker must not pollute stdout: {stdout}");
+    assert!(stdout.contains("8 requests in"), "final ledger stays on stdout: {stdout}");
+    let _ = std::fs::remove_file(&ds);
+}
+
+#[test]
+fn serve_slo_flags_surface_status_and_dump_flight_records() {
+    let ds = small_dataset("slo");
+    let flight = tmp("flight.json");
+    let _ = std::fs::remove_file(&flight);
+    let out = Command::new(bin())
+        .args([
+            "serve",
+            "--requests",
+            "8",
+            "--workers",
+            "1",
+            "--stats-every",
+            "4",
+            // a one-hour p99 target with a 100% miss budget: the engine
+            // runs but never breaches, so the run is deterministic
+            "--slo-p99-us",
+            "3600000000",
+            "--slo-miss-budget",
+            "1.0",
+            "--flight-out",
+            flight.to_str().unwrap(),
+            "--set",
+            &format!("dataset_path={}", ds.display()),
+        ])
+        .output()
+        .expect("spawn auto-spmv serve");
+    assert!(out.status.success(), "serve failed: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stdout.contains("slo: p99 target 3600000000 us"), "config banner: {stdout}");
+    assert!(stdout.contains("slo ok:"), "final SLO summary on stdout: {stdout}");
+    assert!(stderr.contains("slo ok:"), "per-tick SLO line on stderr: {stderr}");
+    assert!(stdout.contains("wrote flight records"), "{stdout}");
+    let json = std::fs::read_to_string(&flight).expect("flight dump written");
+    assert!(json.starts_with("[\n"), "{json}");
+    assert!(json.contains("\"seq\":"), "live ring dumped without a breach: {json}");
+    assert!(json.contains("\"deadline_missed\":false"), "{json}");
+    let _ = std::fs::remove_file(&flight);
+    let _ = std::fs::remove_file(&ds);
+}

@@ -50,6 +50,21 @@ CHECKS = [
         },
     },
     {
+        "file": "BENCH_e2e_slo_breach.json",
+        "table": "e2e_slo_breach",
+        "keys": ["metric"],
+        "metrics": {
+            # the deterministic SLO breach episode (fixed request
+            # schedule, request-counted windows): alert/recovery event
+            # counts, the frozen flight-recorder window, the deadline
+            # ledger, and the arm-attribution request total. All exact
+            # counts, mode-independent — never wall-clock. The bench
+            # asserts exact equality; the gate pins the floor so the
+            # episode cannot silently stop alerting or stop recording.
+            "value": {"direction": "higher", "tol": 1.0},
+        },
+    },
+    {
         "file": "BENCH_e2e_stage_decomposition.json",
         "table": "e2e_stage_decomposition",
         "keys": ["stage"],

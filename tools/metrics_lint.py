@@ -22,11 +22,17 @@ first real scrape. Checks:
   - histograms: per label-set the `le` buckets are cumulative
     (non-decreasing), end at `le="+Inf"`, and the `+Inf` count equals
     the family's `_count`; `_sum` and `_count` are present
+  - label cardinality: no family may carry more than MAX_LABEL_SETS
+    distinct label sets (`le` excluded, so histogram buckets don't
+    count). The per-arm families are bounded by the 48-arm joint
+    decision space; anything past 64 means an unbounded label leaked
+    into the exposition and would blow up a real scrape store.
   - the file is non-empty and ends with a newline
 
 Usage: python3 tools/metrics_lint.py [FILE ...]
-(default: reports/METRICS.prom). Stdlib only — the CI image has no
-extra Python packages.
+(default: reports/METRICS.prom). `--selftest` runs the linter against
+built-in good/bad fixtures (CI runs it before linting real dumps).
+Stdlib only — the CI image has no extra Python packages.
 """
 
 import re
@@ -36,6 +42,10 @@ METRIC_NAME = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
 LABEL_NAME = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
 KNOWN_KINDS = {"counter", "gauge", "histogram", "summary", "untyped"}
 HIST_SUFFIXES = ("_bucket", "_sum", "_count")
+# Distinct label sets allowed per family (le excluded). The widest
+# legitimate family is the per-arm attribution trio: 4 formats x 12
+# knob arms = 48 {format,knobs} sets.
+MAX_LABEL_SETS = 64
 
 
 class LintErrors:
@@ -237,13 +247,82 @@ def lint_text(path, text):
                      f"histogram {tag}: +Inf bucket ({g['buckets'][-1][2]}) != "
                      f"_count ({g['count'][1]})")
 
+    # label-cardinality cap, per family (le excluded so a histogram's
+    # bucket fan-out doesn't count against it)
+    label_sets = {}
+    for _, base, _, labels, _ in samples:
+        key = tuple(sorted((k, v) for k, v in labels.items() if k != "le"))
+        label_sets.setdefault(base, set()).add(key)
+    for base, sets in sorted(label_sets.items()):
+        if len(sets) > MAX_LABEL_SETS:
+            errs.add(0, f"family {base}: {len(sets)} label sets exceeds the "
+                        f"cardinality cap of {MAX_LABEL_SETS} (an unbounded "
+                        "label leaked into the exposition)")
+
     for name in sorted(help_seen - set(types)):
         errs.add(0, f"# HELP {name} has no matching # TYPE")
 
     return errs.errors
 
 
+def selftest():
+    """Lint built-in fixtures; returns 0 when every expectation holds."""
+    def family(n_sets):
+        lines = [
+            "# HELP spmv_arm_requests_total Requests per arm",
+            "# TYPE spmv_arm_requests_total counter",
+        ]
+        for i in range(n_sets):
+            lines.append(f'spmv_arm_requests_total{{format="csr",knobs="arm{i}"}} {i + 1}')
+        return "\n".join(lines) + "\n"
+
+    cases = [
+        # (name, text, substring expected among errors; None = clean)
+        ("clean_at_cap", family(MAX_LABEL_SETS), None),
+        ("cardinality_overflow", family(MAX_LABEL_SETS + 1), "cardinality cap"),
+        (
+            "duplicate_help",
+            "# HELP a one\n# TYPE a counter\n# HELP a two\na 1\n",
+            "duplicate # HELP",
+        ),
+        (
+            "duplicate_sample",
+            "# HELP a one\n# TYPE a counter\na 1\na 2\n",
+            "duplicate sample",
+        ),
+        (
+            "histogram_le_does_not_count",
+            "# HELP h H\n# TYPE h histogram\n"
+            + "".join(f'h_bucket{{le="{i}"}} {i + 1}\n' for i in range(MAX_LABEL_SETS + 1))
+            + f'h_bucket{{le="+Inf"}} {MAX_LABEL_SETS + 1}\n'
+            + f"h_sum 10\nh_count {MAX_LABEL_SETS + 1}\n",
+            None,
+        ),
+        ("untyped_sample", "b 1\n", "no preceding # TYPE"),
+    ]
+    failed = 0
+    for name, text, want in cases:
+        errors = lint_text(f"<selftest:{name}>", text)
+        if want is None:
+            ok = not errors
+            detail = "; ".join(errors)
+        else:
+            ok = any(want in e for e in errors)
+            detail = f"expected an error containing {want!r}, got {errors}"
+        print(f"{'ok' if ok else 'FAIL':4} selftest {name}")
+        if not ok:
+            print(f"     {detail}")
+            failed += 1
+    if failed:
+        print(f"FAIL: {failed} selftest case(s)")
+        return 1
+    print(f"OK: {len(cases)} selftest cases held")
+    return 0
+
+
 def main(argv):
+    if "--selftest" in argv[1:]:
+        return selftest()
     paths = argv[1:] or ["reports/METRICS.prom"]
     failed = False
     for path in paths:

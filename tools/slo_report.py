@@ -1,0 +1,178 @@
+#!/usr/bin/env python3
+"""Summarize the serving pool's SLO posture and per-arm attribution.
+
+Reads the two observability artifacts the bench-smoke job dumps —
+`reports/METRICS.prom` (Prometheus text exposition, DESIGN.md §10.3)
+and `reports/EVENTS.json` (the control-plane journal) — and prints a
+human-readable report:
+
+  - SLO: status, targets, evaluations/alerts/recoveries, burn rates,
+    the deadline ledger, and the flight-recorder capture count
+    (`spmv_slo_*` / `spmv_flight_records`); says so when the dump was
+    produced without an SLO configured
+  - per-arm attribution: one row per (format, knobs) joint arm from
+    `spmv_arm_*`, sorted by request count — where the time and the
+    modeled energy actually went (DESIGN.md §11)
+  - journal: counts per event kind plus the full slo_alert /
+    slo_recovered / arm_shift lines, in sequence order
+
+Exit status: 0 on a well-formed report (even with zero SLO families),
+nonzero when either input is missing or malformed — CI runs this after
+`metrics_lint.py`, so a failure here means the report schema drifted
+from the exposition, not a cosmetic problem.
+
+Usage: python3 tools/slo_report.py [--metrics FILE] [--events FILE]
+Stdlib only — the CI image has no extra Python packages.
+"""
+
+import argparse
+import json
+import re
+import sys
+
+SAMPLE = re.compile(r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(?:\{(.*)\})?\s+(\S+)$")
+LABEL = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+SLO_STATUS = {0: "ok", 1: "warning", 2: "breach"}
+SLO_EVENT_KINDS = ("slo_alert", "slo_recovered", "arm_shift")
+
+
+def parse_metrics(path):
+    """Parse a Prometheus text exposition into [(name, labels, value)].
+
+    Raises ValueError on an unparseable sample line — the lint catches
+    structural problems first, so anything malformed here is fatal.
+    """
+    samples = []
+    with open(path, "r", encoding="utf-8") as f:
+        for lineno, line in enumerate(f, start=1):
+            line = line.rstrip("\n")
+            if not line.strip() or line.startswith("#"):
+                continue
+            m = SAMPLE.match(line)
+            if not m:
+                raise ValueError(f"{path}:{lineno}: unparseable sample: {line!r}")
+            name, label_body, raw = m.groups()
+            try:
+                value = float(raw)
+            except ValueError:
+                raise ValueError(f"{path}:{lineno}: non-float value: {line!r}")
+            labels = dict(LABEL.findall(label_body)) if label_body else {}
+            samples.append((name, labels, value))
+    if not samples:
+        raise ValueError(f"{path}: no samples in the exposition")
+    return samples
+
+
+def scalar(samples, name):
+    """The value of an unlabeled family, or None when absent."""
+    for n, labels, value in samples:
+        if n == name and not labels:
+            return value
+    return None
+
+
+def fmt(value, pattern="{:.6g}"):
+    return "-" if value is None else pattern.format(value)
+
+
+def report_slo(samples):
+    status = scalar(samples, "spmv_slo_status")
+    print("== SLO ==")
+    if status is None:
+        print("no spmv_slo_* families: the pool ran without an SLO configured")
+        return
+    name = SLO_STATUS.get(int(status), f"unknown({status:.0f})")
+    print(f"status:           {name}")
+    print(f"p99 target:       {fmt(scalar(samples, 'spmv_slo_p99_target_seconds'))} s")
+    print(f"miss budget:      {fmt(scalar(samples, 'spmv_slo_miss_budget_ratio'))}")
+    print(f"evaluations:      {fmt(scalar(samples, 'spmv_slo_evals_total'), '{:.0f}')}")
+    print(f"alerts:           {fmt(scalar(samples, 'spmv_slo_alerts_total'), '{:.0f}')}")
+    print(f"recoveries:       {fmt(scalar(samples, 'spmv_slo_recoveries_total'), '{:.0f}')}")
+    print(f"fast burn rate:   {fmt(scalar(samples, 'spmv_slo_fast_burn_ratio'))}")
+    print(f"slow burn rate:   {fmt(scalar(samples, 'spmv_slo_slow_burn_ratio'))}")
+    print(f"window p99:       {fmt(scalar(samples, 'spmv_slo_window_p99_seconds'))} s")
+    tagged = scalar(samples, "spmv_deadline_tagged_total")
+    missed = scalar(samples, "spmv_deadline_misses_total")
+    print(f"deadline ledger:  {fmt(missed, '{:.0f}')}/{fmt(tagged, '{:.0f}')} "
+          "tagged requests missed")
+    print(f"flight capture:   {fmt(scalar(samples, 'spmv_flight_records'), '{:.0f}')} "
+          "trace records frozen by the last breach")
+
+
+def report_arms(samples):
+    arms = {}
+    for n, labels, value in samples:
+        if not n.startswith("spmv_arm_") or "format" not in labels:
+            continue
+        key = (labels.get("format", "?"), labels.get("knobs", "?"))
+        arms.setdefault(key, {})[n] = value
+    gen = scalar(samples, "spmv_arm_generation")
+    print("\n== per-arm attribution ==")
+    if not arms:
+        print("no labeled spmv_arm_* samples: no requests were attributed")
+        return
+    print(f"policy generation: {fmt(gen, '{:.0f}')}, {len(arms)} arm(s) with traffic")
+    header = ("arm", "requests", "exec s", "energy J", "avg W", "MFLOPS/W")
+    rows = [header]
+    order = sorted(
+        arms.items(),
+        key=lambda kv: (-kv[1].get("spmv_arm_requests_total", 0), kv[0]),
+    )
+    for (fmt_name, knobs), vals in order:
+        rows.append((
+            f"{fmt_name}@{knobs}",
+            fmt(vals.get("spmv_arm_requests_total"), "{:.0f}"),
+            fmt(vals.get("spmv_arm_seconds_total")),
+            fmt(vals.get("spmv_arm_energy_joules_total")),
+            fmt(vals.get("spmv_arm_power_watts")),
+            fmt(vals.get("spmv_arm_mflops_per_watt")),
+        ))
+    widths = [max(len(r[i]) for r in rows) for i in range(len(header))]
+    for r in rows:
+        print("  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip())
+
+
+def report_events(path):
+    with open(path, "r", encoding="utf-8") as f:
+        events = json.load(f)
+    if not isinstance(events, list):
+        raise ValueError(f"{path}: expected a JSON array of events")
+    counts = {}
+    for e in events:
+        if not isinstance(e, dict) or "kind" not in e or "seq" not in e:
+            raise ValueError(f"{path}: malformed event: {e!r}")
+        counts[e["kind"]] = counts.get(e["kind"], 0) + 1
+    print("\n== control-plane journal ==")
+    if not events:
+        print("journal is empty")
+        return
+    print(f"{len(events)} event(s): "
+          + ", ".join(f"{k} x{v}" for k, v in sorted(counts.items())))
+    slo_events = [e for e in events if e["kind"] in SLO_EVENT_KINDS]
+    if slo_events:
+        print("SLO / attribution events, in sequence order:")
+        for e in slo_events:
+            print(f"  #{e['seq']:<4} {e.get('detail', e['kind'])}")
+    else:
+        print("no slo_alert/slo_recovered/arm_shift events journaled")
+
+
+def main(argv):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--metrics", default="reports/METRICS.prom")
+    ap.add_argument("--events", default="reports/EVENTS.json")
+    args = ap.parse_args(argv[1:])
+    try:
+        samples = parse_metrics(args.metrics)
+        report_slo(samples)
+        report_arms(samples)
+        report_events(args.events)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"FAIL: {e}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
