@@ -12,6 +12,7 @@
 //!         [--joint-knobs true|false]
 //!         [--stats-every N] [--metrics-out FILE] [--events-out FILE]
 //!         [--slo-p99-us US] [--slo-miss-budget F] [--flight-out FILE]
+//!         [--scaleout] [--replicate-share F] [--admission-cap N]
 //!                               serving demo over the sharded pool
 //!                               (PJRT when artifacts exist, else
 //!                               native). A non-zero explore rate or
@@ -41,6 +42,15 @@
 //!                               0.01); --flight-out dumps the trace
 //!                               flight recorder (breach capture if one
 //!                               fired, else the live ring) as JSON.
+//!                               Scale-out control plane (DESIGN.md
+//!                               §12): --scaleout (or either tuning
+//!                               flag) enables hot-matrix replication,
+//!                               least-loaded routing, and SLO-gated
+//!                               admission shedding; --replicate-share
+//!                               sets the traffic share that triggers
+//!                               replication, --admission-cap the
+//!                               outstanding-request bound behind
+//!                               Overloaded sheds.
 //!
 //! Global flags: --config FILE, --set key=value (repeatable), and the
 //! shorthand --scale/--seed/--objective overrides.
@@ -265,7 +275,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     use crate::gpusim::turing_gtx1650m;
     use crate::obs::{SloConfig, SloSpec};
     use crate::online::{Online, OnlineConfig, Trainer};
-    use crate::serve::{BackendSpec, Pool, PoolConfig};
+    use crate::serve::{BackendSpec, Pool, PoolConfig, ScaleOutConfig};
     use crate::sparse::convert::ConvertParams;
     use std::sync::Arc;
     use std::time::Duration;
@@ -297,6 +307,21 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         }
         SloConfig::new(spec)
     });
+    // --scaleout (or either tuning flag) attaches the scale-out control
+    // plane; unset fields keep the ScaleOutConfig defaults
+    let scaleout_on = cli.flag("scaleout").is_some()
+        || cli.flag("replicate-share").is_some()
+        || cli.flag("admission-cap").is_some();
+    let scaleout_cfg = scaleout_on.then(|| {
+        let mut sc = ScaleOutConfig::default();
+        if let Some(share) = cli.flag("replicate-share").and_then(|v| v.parse().ok()) {
+            sc.replicate_share = share;
+        }
+        if let Some(cap) = cli.flag("admission-cap").and_then(|v| v.parse().ok()) {
+            sc.admission_cap = cap;
+        }
+        sc
+    });
     let ds = load_or_build(cli)?;
     let obj = cli.objective()?;
     let overhead = OverheadModel::train_on_corpus(cli.config.scale, None);
@@ -318,12 +343,23 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             slo.fast_window
         );
     }
+    if let Some(sc) = &scaleout_cfg {
+        println!(
+            "scale-out: replicate over {:.0}% traffic share, unreplicate under {:.0}%, \
+             window {} requests, admission cap {}",
+            100.0 * sc.replicate_share,
+            100.0 * sc.unreplicate_share,
+            sc.window,
+            sc.admission_cap
+        );
+    }
     let pool_cfg = PoolConfig {
         workers,
         batch_window: Duration::from_micros(window_us),
         cache_capacity: cache_cap,
         convert: ConvertParams { bell_bh: 8, bell_bw: 8, sell_h: 8 },
         slo: slo_cfg,
+        scaleout: scaleout_cfg,
         ..PoolConfig::default()
     };
     let adaptive = explore_rate > 0.0 || retrain_every > 0;
@@ -488,6 +524,19 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     for e in events.iter().rev().take(5).rev() {
         println!("  {e}");
     }
+    if scaleout_on {
+        println!(
+            "control plane: {} replications ({} live replicas), {} unreplications, \
+             {} reroutes, {} sheds ({} overloaded, {} deadline)",
+            stats.replications,
+            stats.replicas,
+            stats.unreplications,
+            stats.reroutes,
+            stats.sheds,
+            stats.sheds_overloaded,
+            stats.sheds_deadline
+        );
+    }
     if let Some(slo) = &stats.slo {
         println!(
             "slo {}: {} evals, {} alerts, {} recoveries, {}/{} tagged requests missed, \
@@ -631,6 +680,21 @@ mod tests {
         assert_eq!(cli.flag("slo-p99-us"), Some("5000"));
         assert_eq!(cli.flag("slo-miss-budget"), Some("0.05"));
         assert_eq!(cli.flag("flight-out"), Some("/tmp/flight.json"));
+    }
+
+    #[test]
+    fn serve_scaleout_flags_parse() {
+        let cli = parse(&args(&[
+            "serve",
+            "--scaleout",
+            "--replicate-share",
+            "0.4",
+            "--admission-cap=256",
+        ]))
+        .unwrap();
+        assert_eq!(cli.flag("scaleout"), Some("true"), "bare --scaleout is a boolean flag");
+        assert_eq!(cli.flag("replicate-share"), Some("0.4"));
+        assert_eq!(cli.flag("admission-cap"), Some("256"));
     }
 
     #[test]

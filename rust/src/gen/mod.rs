@@ -7,4 +7,4 @@ pub mod patterns;
 pub mod rng;
 
 pub use corpus::{by_name, corpus, CorpusEntry, Class, GPU_SENSITIVITY_SET};
-pub use rng::Rng;
+pub use rng::{Rng, Zipf};

@@ -92,6 +92,8 @@ impl Rng {
 
     /// Zipf-like integer in [1, n] with exponent `alpha` (rejection-free
     /// inverse-CDF approximation — adequate for workload generation).
+    /// For an exact distribution (popularity benchmarks asserting on
+    /// rank shares) use [`Zipf`].
     pub fn zipf(&mut self, n: usize, alpha: f64) -> usize {
         let u = self.f64().max(1e-12);
         if (alpha - 1.0).abs() < 1e-9 {
@@ -101,6 +103,56 @@ impl Rng {
         let e = 1.0 - alpha;
         let z = ((n as f64).powf(e) - 1.0) / e;
         (((u * z * e + 1.0).powf(1.0 / e)) as usize).clamp(1, n)
+    }
+}
+
+/// Exact Zipf(n, alpha) sampler: `P(rank) ∝ rank^-alpha` over ranks
+/// `[1, n]`, sampled by binary-searching a precomputed normalized CDF
+/// (O(n) build, O(log n) per draw). Unlike [`Rng::zipf`]'s continuous
+/// approximation, rank shares match the theoretical distribution
+/// exactly, so popularity sweeps can assert on them.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    /// `cdf[r-1]` = P(rank <= r), with `cdf[n-1] == 1.0`.
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, alpha: f64) -> Self {
+        assert!(n > 0, "Zipf needs at least one rank");
+        let mut cdf: Vec<f64> = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for r in 1..=n {
+            acc += (r as f64).powf(-alpha);
+            cdf.push(acc);
+        }
+        let norm = acc;
+        for c in &mut cdf {
+            *c /= norm;
+        }
+        cdf[n - 1] = 1.0;
+        Zipf { cdf }
+    }
+
+    /// Number of ranks.
+    pub fn n(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Draw a rank in [1, n]. Deterministic given the `rng` state.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        self.cdf.partition_point(|&c| c <= u) + 1
+    }
+
+    /// Theoretical probability of `rank` (1-based).
+    pub fn share(&self, rank: usize) -> f64 {
+        assert!((1..=self.cdf.len()).contains(&rank));
+        if rank == 1 {
+            self.cdf[0]
+        } else {
+            self.cdf[rank - 1] - self.cdf[rank - 2]
+        }
     }
 }
 
@@ -155,6 +207,39 @@ mod tests {
         let n = 10000;
         let small = (0..n).filter(|_| r.zipf(1000, 2.0) <= 10).count();
         assert!(small > n / 2, "zipf(2.0) should mostly draw small values, got {small}");
+    }
+
+    #[test]
+    fn zipf_sampler_is_deterministic_per_seed() {
+        let z = Zipf::new(16, 1.2);
+        let mut a = Rng::new(99);
+        let mut b = Rng::new(99);
+        let draws_a: Vec<usize> = (0..256).map(|_| z.sample(&mut a)).collect();
+        let draws_b: Vec<usize> = (0..256).map(|_| z.sample(&mut b)).collect();
+        assert_eq!(draws_a, draws_b, "same seed must give the same draw sequence");
+        assert!(draws_a.iter().all(|&r| (1..=16).contains(&r)));
+        let mut c = Rng::new(100);
+        let draws_c: Vec<usize> = (0..256).map(|_| z.sample(&mut c)).collect();
+        assert_ne!(draws_a, draws_c, "different seeds must diverge");
+    }
+
+    #[test]
+    fn zipf_sampler_rank1_frequency_matches_theoretical_share() {
+        let z = Zipf::new(8, 2.0);
+        let mut r = Rng::new(0x51);
+        let n = 20000;
+        let rank1 = (0..n).filter(|_| z.sample(&mut r) == 1).count();
+        let observed = rank1 as f64 / n as f64;
+        let expected = z.share(1);
+        assert!(expected > 0.6, "alpha=2 over 8 ranks is heavily skewed, got {expected}");
+        assert!(
+            (observed - expected).abs() < 0.02,
+            "rank-1 frequency {observed} vs theoretical {expected}"
+        );
+        // shares are a probability distribution, monotone in rank
+        let shares: Vec<f64> = (1..=8).map(|r| z.share(r)).collect();
+        assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(shares.windows(2).all(|w| w[0] >= w[1]));
     }
 
     #[test]

@@ -95,6 +95,20 @@ pub enum EventKind {
     /// An arm's mean modeled energy moved beyond the shift band between
     /// router generations (`ratio_pct` = new/old mean, percent).
     ArmShift { arm: JointDecision, generation: u64, ratio_pct: u64 },
+    /// The control plane registered a hot matrix on an additional
+    /// shard; `replicas` is the owning-shard count after the copy and
+    /// `at_requests` the admission-count evaluation boundary.
+    Replicate { matrix: u64, shard: usize, replicas: usize, at_requests: u64 },
+    /// A replicated matrix cooled below the hold threshold; `dropped`
+    /// replicas were deregistered and routing reverts to the hash home.
+    Unreplicate { matrix: u64, dropped: usize, at_requests: u64 },
+    /// Routing-policy change: the matrix now routes to the least-loaded
+    /// of `owners` shards instead of its hash home.
+    Reroute { matrix: u64, owners: usize, at_requests: u64 },
+    /// Admission control rejected a request (`reason` is `overloaded`
+    /// or `deadline`); journaled at most once per control window — the
+    /// shed *counters* track volume.
+    Shed { matrix: u64, reason: &'static str, at_requests: u64 },
 }
 
 /// Render an SLO scope for event keys (`pool` or `matrix<N>`).
@@ -120,6 +134,10 @@ impl EventKind {
             EventKind::SloAlert { .. } => "slo_alert",
             EventKind::SloRecovered { .. } => "slo_recovered",
             EventKind::ArmShift { .. } => "arm_shift",
+            EventKind::Replicate { .. } => "replicate",
+            EventKind::Unreplicate { .. } => "unreplicate",
+            EventKind::Reroute { .. } => "reroute",
+            EventKind::Shed { .. } => "shed",
         }
     }
 
@@ -164,6 +182,20 @@ impl EventKind {
             }
             EventKind::ArmShift { arm, generation, ratio_pct } => {
                 format!("arm_shift arm={arm} gen=v{generation} ratio={ratio_pct}%")
+            }
+            EventKind::Replicate { matrix, shard, replicas, at_requests } => {
+                format!(
+                    "replicate matrix={matrix} shard={shard} replicas={replicas} at={at_requests}"
+                )
+            }
+            EventKind::Unreplicate { matrix, dropped, at_requests } => {
+                format!("unreplicate matrix={matrix} dropped={dropped} at={at_requests}")
+            }
+            EventKind::Reroute { matrix, owners, at_requests } => {
+                format!("reroute matrix={matrix} owners={owners} at={at_requests}")
+            }
+            EventKind::Shed { matrix, reason, at_requests } => {
+                format!("shed matrix={matrix} reason={reason} at={at_requests}")
             }
         }
     }
@@ -379,6 +411,26 @@ mod tests {
         let shift = EventKind::ArmShift { arm, generation: 3, ratio_pct: 200 };
         assert_eq!(shift.name(), "arm_shift");
         assert_eq!(shift.key(), format!("arm_shift arm={arm} gen=v3 ratio=200%"));
+    }
+
+    #[test]
+    fn control_plane_keys_are_deterministic() {
+        let r = EventKind::Replicate { matrix: 5, shard: 2, replicas: 3, at_requests: 128 };
+        assert_eq!(r.name(), "replicate");
+        assert_eq!(r.key(), "replicate matrix=5 shard=2 replicas=3 at=128");
+        let u = EventKind::Unreplicate { matrix: 5, dropped: 2, at_requests: 256 };
+        assert_eq!(u.name(), "unreplicate");
+        assert_eq!(u.key(), "unreplicate matrix=5 dropped=2 at=256");
+        let rr = EventKind::Reroute { matrix: 5, owners: 3, at_requests: 128 };
+        assert_eq!(rr.name(), "reroute");
+        assert_eq!(rr.key(), "reroute matrix=5 owners=3 at=128");
+        let s = EventKind::Shed { matrix: 9, reason: "deadline", at_requests: 130 };
+        assert_eq!(s.name(), "shed");
+        assert_eq!(s.key(), "shed matrix=9 reason=deadline at=130");
+        // no wall-clock field in any control-plane key
+        for k in [r.key(), u.key(), rr.key(), s.key()] {
+            assert!(!k.contains("ms") && !k.contains("us"), "{k}");
+        }
     }
 
     #[test]

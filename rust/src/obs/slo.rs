@@ -18,9 +18,12 @@
 //! freezes the [`FlightRecorder`] ring, so the traces around the
 //! breach survive for post-mortem (`Pool::flight_records`).
 //!
-//! Everything here is observational: nothing is shed or reordered.
-//! Admission control acting on these signals is the next step of the
-//! ROADMAP's scale-out item.
+//! The engine itself stays observational — it never sheds or reorders
+//! a request. The scale-out control plane (`serve::pool`, DESIGN.md
+//! §12) is the actuator: it consults [`SloEngine::status`] to gate
+//! admission shedding and [`SloEngine::matrix_status`] to trigger
+//! hot-matrix replication, so an engine-less (or healthy) pool is
+//! bit-identical to one with no control plane at all.
 
 use super::hist::{quantile_us, Hist, HIST_BUCKETS};
 use super::journal::{EventKind, Journal};
@@ -389,6 +392,18 @@ impl SloEngine {
         state.iter().map(|ev| ev.displayed_status()).max().unwrap_or(SloStatus::Ok)
     }
 
+    /// Displayed status of the per-matrix override scope for `matrix`
+    /// (`None` when the matrix has no override — the control plane
+    /// treats that as "no per-matrix signal", not "healthy").
+    pub fn matrix_status(&self, matrix: u64) -> Option<SloStatus> {
+        let state = self.eval_state.lock().expect("slo eval lock");
+        self.scopes
+            .iter()
+            .zip(state.iter())
+            .find(|(scope, _)| scope.matrix == Some(matrix))
+            .map(|(_, ev)| ev.displayed_status())
+    }
+
     /// The flight recorder the engine freezes on breach.
     pub fn recorder(&self) -> &FlightRecorder {
         &self.recorder
@@ -527,6 +542,22 @@ mod tests {
         let k = keys(&journal);
         assert_eq!(k.len(), 1, "{k:?}");
         assert!(k[0].starts_with("slo_alert scope=matrix7 "), "{k:?}");
+    }
+
+    #[test]
+    fn matrix_status_reports_override_scopes_only() {
+        let mut c = cfg(1.0, 8);
+        c.overrides = vec![(
+            7,
+            SloSpec { p99_target: Duration::from_secs(3600), deadline_miss_budget: 0.1 },
+        )];
+        let (e, _journal) = engine(c);
+        assert_eq!(e.matrix_status(7), Some(SloStatus::Ok));
+        assert_eq!(e.matrix_status(1), None, "no override scope, no signal");
+        for _ in 0..16 {
+            e.observe(7, 0, Duration::from_micros(80), true, true, None);
+        }
+        assert_eq!(e.matrix_status(7), Some(SloStatus::Breach));
     }
 
     #[test]

@@ -28,9 +28,12 @@ pub struct Job {
     /// Submission time — service latency is measured end-to-end from
     /// here, so queue wait and admission-window wait are included.
     pub enqueued: Instant,
-    /// Client-declared latency budget. Purely observational: the shard
-    /// never sheds or reorders on it, it only counts misses
+    /// Client-declared latency budget. The shard never sheds or
+    /// reorders on it — it only counts misses
     /// (`Counters::deadline_misses`) against end-to-end service time.
+    /// Admission-time shedding on an already-blown budget happens
+    /// before the job is built, in the pool's control plane, and only
+    /// under SLO pressure (DESIGN.md §12).
     pub deadline: Option<Duration>,
     pub reply: Sender<Result<Response>>,
 }

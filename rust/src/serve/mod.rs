@@ -33,6 +33,15 @@
 //!   registered matrices when the versioned router hot-swaps. A pool
 //!   started with [`Pool::start`] routes through the same handle but
 //!   never swaps it — and is bit-identical to the pre-loop engine.
+//! * **Scale-out control plane** (optional, [`PoolConfig::scaleout`]):
+//!   the admission path tracks per-matrix traffic in decayed counters,
+//!   replicates hot matrices onto additional shards (the conversion
+//!   LRU makes copies cheap), routes replicated traffic to the
+//!   least-loaded owning shard by queue depth, and — only while the
+//!   SLO engine reports Warning/Breach — sheds requests whose deadline
+//!   budget is already gone with a typed [`Rejected`] error. An
+//!   unloaded pool routes bit-identically to the plain splitmix hash
+//!   (DESIGN.md §12).
 //! * **Iterative sessions** ([`Pool::open_session`]): the fast path for
 //!   chained solvers (CG, power iteration) where each product's output
 //!   is the next input. A [`Session`] pins one matrix and keeps the
@@ -66,11 +75,49 @@ pub mod shard;
 pub mod telemetry;
 
 pub use backend::BackendSpec;
-pub use pool::{Pool, PoolConfig, PoolStats, Session};
+pub use pool::{Pool, PoolConfig, PoolStats, ScaleOutConfig, Session};
 pub use telemetry::{MatrixStats, Telemetry};
 
 use crate::sparse::Format;
+use std::fmt;
 use std::time::Duration;
+
+/// Typed admission rejection. Only emitted while the pool runs with a
+/// [`ScaleOutConfig`] AND its SLO engine reports Warning/Breach — an
+/// unloaded pool never sheds. Clients receive it through the normal
+/// error channel and can downcast:
+/// `err.downcast_ref::<Rejected>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rejected {
+    /// The bounded admission queue was over capacity under SLO
+    /// pressure; retry against another replica or back off.
+    Overloaded,
+    /// The request's latency budget cannot be met: the deadline already
+    /// passed, or the predicted queue wait (stage-histogram estimate)
+    /// exceeds the remaining budget.
+    DeadlineExceeded,
+}
+
+impl Rejected {
+    /// Stable snake_case reason tag (journal/metric label).
+    pub fn reason(self) -> &'static str {
+        match self {
+            Rejected::Overloaded => "overloaded",
+            Rejected::DeadlineExceeded => "deadline",
+        }
+    }
+}
+
+impl fmt::Display for Rejected {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Rejected::Overloaded => write!(f, "rejected: admission queue over capacity"),
+            Rejected::DeadlineExceeded => write!(f, "rejected: deadline budget already spent"),
+        }
+    }
+}
+
+impl std::error::Error for Rejected {}
 
 /// Result of one served product.
 #[derive(Debug, Clone)]

@@ -19,20 +19,21 @@ use super::backend::BackendSpec;
 use super::batch::Job;
 use super::shard::{Shard, ShardCfg, ShardMsg};
 use super::telemetry::{MatrixStats, Telemetry};
-use super::Response;
+use super::{Rejected, Response};
 use crate::coordinator::RunTimeOptimizer;
 use crate::gpusim::{turing_gtx1650m, GpuArch};
 use crate::obs::{
-    ArmProfile, Event, FlightRecord, FlightRecorder, Metrics, SloConfig, SloEngine, SloSnapshot,
-    StageStats,
+    ArmProfile, Event, EventKind, FlightRecord, FlightRecorder, Metrics, SloConfig, SloEngine,
+    SloSnapshot, SloStatus, Stage, StageStats,
 };
 use crate::online::{DriftStatus, Online, SwapRouter};
 use crate::sparse::convert::ConvertParams;
 use crate::sparse::{Coo, Format};
 use anyhow::{anyhow, Result};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Pool tuning knobs.
@@ -62,9 +63,17 @@ pub struct PoolConfig {
     /// Service-level objective to evaluate traffic against (DESIGN.md
     /// §11). None (the default) disables the SLO engine AND the trace
     /// flight recorder — the hot path then pays nothing for either.
-    /// Purely observational: a breach alerts and captures context, it
-    /// never sheds or reorders requests.
+    /// The engine itself stays observational (alert + capture); it only
+    /// actuates when [`PoolConfig::scaleout`] is also set, in which
+    /// case the control plane consults its status to gate admission
+    /// shedding and to force-replicate matrices whose override scope
+    /// degrades (DESIGN.md §12).
     pub slo: Option<SloConfig>,
+    /// Scale-out control plane (DESIGN.md §12): hot-matrix replication,
+    /// least-loaded routing across replicas, and SLO-driven admission
+    /// control. None (the default) keeps the frozen splitmix hash
+    /// partition — bit-identical routing to every earlier release.
+    pub scaleout: Option<ScaleOutConfig>,
 }
 
 impl Default for PoolConfig {
@@ -78,6 +87,94 @@ impl Default for PoolConfig {
             arch: turing_gtx1650m(),
             tracing: true,
             slo: None,
+            scaleout: None,
+        }
+    }
+}
+
+/// Scale-out control-plane knobs (DESIGN.md §12). All decisions fire at
+/// admission-count boundaries (never wall-clock), so two identically
+/// seeded workloads produce identical replicate/unreplicate/shed event
+/// sequences.
+#[derive(Debug, Clone)]
+pub struct ScaleOutConfig {
+    /// Traffic share (of the decayed window counts) at or above which a
+    /// matrix is considered hot and replicated onto more shards.
+    pub replicate_share: f64,
+    /// Share at or below which a replicated matrix is considered cooled
+    /// and its extra replicas are dropped. Keep well under
+    /// `replicate_share` for hysteresis.
+    pub unreplicate_share: f64,
+    /// Admissions per control evaluation: every `window` admitted
+    /// requests the pool re-evaluates replication and halves the decayed
+    /// per-matrix counts.
+    pub window: u64,
+    /// Cap on shards a hot matrix may occupy (home included);
+    /// 0 means every shard.
+    pub max_replicas: usize,
+    /// Outstanding-request bound for admission control: while the SLO
+    /// reports Warning/Breach, requests arriving with the summed shard
+    /// queue depth at or above this are shed as
+    /// [`Rejected::Overloaded`]. 0 sheds everything under pressure;
+    /// irrelevant while the SLO is Ok (or absent) — an unloaded pool
+    /// never sheds.
+    pub admission_cap: usize,
+}
+
+impl Default for ScaleOutConfig {
+    fn default() -> Self {
+        ScaleOutConfig {
+            replicate_share: 0.5,
+            unreplicate_share: 0.125,
+            window: 64,
+            max_replicas: 0,
+            admission_cap: 1024,
+        }
+    }
+}
+
+/// Decayed traffic accounting + replica placement, all guarded by one
+/// mutex so control decisions are serialized and deterministic in the
+/// admission order.
+struct ControlState {
+    /// Decayed per-matrix request counts (halved every window).
+    counts: HashMap<u64, u64>,
+    /// Sum of `counts` (kept in step so share math is O(1)).
+    total: u64,
+    /// Requests admitted over the pool's lifetime (shed requests are
+    /// NOT admitted) — the `at=` coordinate of every control event.
+    admitted: u64,
+    /// Shard indices currently holding each matrix, home first.
+    owners: HashMap<u64, Vec<usize>>,
+    /// Retained registration sources: replicating onto a new shard
+    /// replays the original `Register` there.
+    registrations: HashMap<u64, (Coo, u64)>,
+    /// Open sessions per matrix: while > 0 the matrix routes to its
+    /// pinned home shard regardless of replica load.
+    pinned: HashMap<u64, u64>,
+    /// One `shed` journal event per control window (the shed counters
+    /// track volume; the journal tracks episodes).
+    shed_logged: bool,
+}
+
+struct Control {
+    cfg: ScaleOutConfig,
+    state: Mutex<ControlState>,
+}
+
+impl Control {
+    fn new(cfg: ScaleOutConfig) -> Control {
+        Control {
+            cfg,
+            state: Mutex::new(ControlState {
+                counts: HashMap::new(),
+                total: 0,
+                admitted: 0,
+                owners: HashMap::new(),
+                registrations: HashMap::new(),
+                pinned: HashMap::new(),
+                shed_logged: false,
+            }),
         }
     }
 }
@@ -147,6 +244,27 @@ pub struct PoolStats {
     /// Tagged requests whose end-to-end service time exceeded their
     /// deadline (observational — nothing is shed).
     pub deadline_misses: u64,
+    /// Requests rejected at admission (never enqueued, not in
+    /// `requests`) — nonzero only with the scale-out control plane
+    /// under SLO pressure.
+    pub sheds: u64,
+    /// Sheds with reason [`Rejected::Overloaded`].
+    pub sheds_overloaded: u64,
+    /// Sheds with reason [`Rejected::DeadlineExceeded`].
+    pub sheds_deadline: u64,
+    /// Requests a replicated matrix's least-loaded routing sent off the
+    /// hash-home shard.
+    pub reroutes: u64,
+    /// Replica registrations created by the control plane.
+    pub replications: u64,
+    /// Replica registrations dropped after their matrix cooled.
+    pub unreplications: u64,
+    /// Extra replica registrations currently live (beyond each
+    /// matrix's home shard); 0 without scale-out.
+    pub replicas: u64,
+    /// Outstanding product jobs per shard queue at snapshot time, in
+    /// shard order.
+    pub queue_depths: Vec<u64>,
     /// Per-stage latency histograms (one row per [`crate::obs::Stage`],
     /// all empty when tracing is off). The stages decompose the
     /// end-to-end histograms exactly: see [`PoolStats::stage_coverage`].
@@ -326,6 +444,46 @@ impl PoolStats {
             "Tagged requests that exceeded their deadline",
             self.deadline_misses as f64,
         );
+        m.labeled_counter(
+            "spmv_sheds_total",
+            "Requests rejected at admission, by reason",
+            &[("reason", "overloaded".to_string())],
+            self.sheds_overloaded as f64,
+        );
+        m.labeled_counter(
+            "spmv_sheds_total",
+            "Requests rejected at admission, by reason",
+            &[("reason", "deadline".to_string())],
+            self.sheds_deadline as f64,
+        );
+        m.counter(
+            "spmv_reroutes_total",
+            "Requests routed off their hash-home shard by replica load",
+            self.reroutes as f64,
+        );
+        m.counter(
+            "spmv_replications_total",
+            "Replica registrations created by the control plane",
+            self.replications as f64,
+        );
+        m.counter(
+            "spmv_unreplications_total",
+            "Replica registrations dropped after cooling",
+            self.unreplications as f64,
+        );
+        m.gauge(
+            "spmv_replicas",
+            "Extra replica registrations currently live",
+            self.replicas as f64,
+        );
+        for (i, depth) in self.queue_depths.iter().enumerate() {
+            m.labeled_gauge(
+                "spmv_queue_depth",
+                "Outstanding product jobs per shard queue",
+                &[("shard", i.to_string())],
+                *depth as f64,
+            );
+        }
         m.counter(
             "spmv_events_total",
             "Control-plane events emitted (journaled plus dropped)",
@@ -508,6 +666,12 @@ pub struct Pool {
     online: Option<Arc<Online>>,
     /// Monotone session-id allocator (pool-unique, never reused).
     session_ids: AtomicU64,
+    /// Per-shard outstanding-job counters (shared with the workers
+    /// through [`ShardCfg`]); maintained even without scale-out so
+    /// `spmv_queue_depth` always exports.
+    depths: Vec<Arc<AtomicU64>>,
+    /// The scale-out control plane, when configured.
+    control: Option<Arc<Control>>,
 }
 
 impl Pool {
@@ -544,6 +708,8 @@ impl Pool {
             }
             None => Arc::new(Telemetry::with_journal(router.journal().clone())),
         };
+        let depths: Vec<Arc<AtomicU64>> =
+            (0..workers).map(|_| Arc::new(AtomicU64::new(0))).collect();
         let shard_cfg = ShardCfg {
             shard: 0,
             convert: cfg.convert,
@@ -552,11 +718,13 @@ impl Pool {
             cache_capacity: cfg.cache_capacity.max(1),
             arch: cfg.arch.clone(),
             tracing: cfg.tracing,
+            depth: depths[0].clone(),
         };
         let shards = (0..workers)
             .map(|i| {
                 let mut shard_cfg = shard_cfg.clone();
                 shard_cfg.shard = i;
+                shard_cfg.depth = depths[i].clone();
                 Shard::spawn(
                     i,
                     router.clone(),
@@ -567,7 +735,8 @@ impl Pool {
                 )
             })
             .collect();
-        Pool { shards, telemetry, router, online, session_ids: AtomicU64::new(0) }
+        let control = cfg.scaleout.map(|sc| Arc::new(Control::new(sc)));
+        Pool { shards, telemetry, router, online, session_ids: AtomicU64::new(0), depths, control }
     }
 
     pub fn workers(&self) -> usize {
@@ -585,17 +754,40 @@ impl Pool {
         self.online.as_ref()
     }
 
-    /// The shard owning a matrix id (splitmix64-style spread so
-    /// sequential ids don't pile onto one worker).
-    fn shard_of(&self, matrix_id: u64) -> &Shard {
+    /// The home shard index for a matrix id (splitmix64-style spread so
+    /// sequential ids don't pile onto one worker). Always the route
+    /// without scale-out; the fallback and session pin with it.
+    fn home_index(&self, matrix_id: u64) -> usize {
         let h = matrix_id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        &self.shards[((h >> 32) as usize) % self.shards.len()]
+        ((h >> 32) as usize) % self.shards.len()
+    }
+
+    /// The shard owning a matrix id under plain hash routing.
+    fn shard_of(&self, matrix_id: u64) -> &Shard {
+        &self.shards[self.home_index(matrix_id)]
     }
 
     /// Register a matrix; returns the format the router chose for it.
     pub fn register(&self, id: u64, coo: Coo, iterations_hint: u64) -> Result<Format> {
+        let home = self.home_index(id);
+        if let Some(ctl) = &self.control {
+            // Retain the source so the control plane can replay this
+            // registration onto more shards later, and tear down any
+            // stale replicas from a previous registration of the id.
+            let mut st = ctl.state.lock().expect("control lock");
+            if let Some(owners) = st.owners.get(&id) {
+                for &s in owners.iter().filter(|&&s| s != home) {
+                    let _ = self.shards[s].tx.send(ShardMsg::Deregister { id });
+                }
+            }
+            st.owners.insert(id, vec![home]);
+            st.registrations.insert(id, (coo.clone(), iterations_hint));
+            if let Some(stale) = st.counts.remove(&id) {
+                st.total -= stale;
+            }
+        }
         let (ack, rx) = channel();
-        self.shard_of(id)
+        self.shards[home]
             .tx
             .send(ShardMsg::Register { id, coo, iterations_hint, ack })
             .map_err(|_| anyhow!("serving pool stopped"))?;
@@ -609,10 +801,14 @@ impl Pool {
             .map_err(|_| anyhow!("serving pool dropped request"))?
     }
 
-    /// [`Pool::product`] with a client deadline tag: the tag is purely
-    /// observational (nothing is shed or reordered), counting the
+    /// [`Pool::product`] with a client deadline tag: the tag counts the
     /// request in `deadline_tagged` and, when its end-to-end service
-    /// time exceeds `deadline`, in `deadline_misses`.
+    /// time exceeds `deadline`, in `deadline_misses`. Without scale-out
+    /// it is purely observational (nothing is shed or reordered); with
+    /// [`PoolConfig::scaleout`] AND the SLO reporting Warning/Breach, a
+    /// request whose budget is already spent — or smaller than the
+    /// predicted queue wait — is rejected fast with
+    /// [`Rejected::DeadlineExceeded`] instead of being enqueued.
     pub fn product_with_deadline(
         &self,
         matrix_id: u64,
@@ -646,8 +842,15 @@ impl Pool {
         x: impl Into<Arc<[f32]>>,
         deadline: Option<Duration>,
     ) -> Result<Receiver<Result<Response>>> {
+        let shard = match &self.control {
+            Some(ctl) => self.admit(ctl, matrix_id, deadline)?,
+            None => self.home_index(matrix_id),
+        };
         let (reply, rx) = channel();
-        self.shard_of(matrix_id)
+        // Increment BEFORE the send: the worker decrements after
+        // pickup, so the counter can never underflow.
+        self.depths[shard].fetch_add(1, Ordering::Relaxed);
+        if self.shards[shard]
             .tx
             .send(ShardMsg::Product(Job {
                 matrix_id,
@@ -656,8 +859,195 @@ impl Pool {
                 deadline,
                 reply,
             }))
-            .map_err(|_| anyhow!("serving pool stopped"))?;
+            .is_err()
+        {
+            self.depths[shard].fetch_sub(1, Ordering::Relaxed);
+            return Err(anyhow!("serving pool stopped"));
+        }
         Ok(rx)
+    }
+
+    /// Admission control + routing (scale-out pools only): shed under
+    /// SLO pressure, account the request into the decayed popularity
+    /// window, run the control evaluation at window boundaries, and
+    /// pick the serving shard — pinned home while a session is open,
+    /// least-loaded owner for a replicated matrix, hash home otherwise.
+    fn admit(&self, ctl: &Control, matrix_id: u64, deadline: Option<Duration>) -> Result<usize> {
+        // Shedding engages only under SLO pressure, so an unloaded pool
+        // (or one without an SLO) admits exactly like plain hashing.
+        let pressured =
+            self.telemetry.slo().is_some_and(|engine| engine.status() >= SloStatus::Warning);
+        if pressured {
+            let outstanding: u64 = self.depths.iter().map(|d| d.load(Ordering::Relaxed)).sum();
+            let reason = if outstanding >= ctl.cfg.admission_cap as u64 {
+                Some(Rejected::Overloaded)
+            } else {
+                match deadline {
+                    Some(budget) if budget.is_zero() || budget < self.predicted_queue_wait() => {
+                        Some(Rejected::DeadlineExceeded)
+                    }
+                    _ => None,
+                }
+            };
+            if let Some(reason) = reason {
+                let t = &self.telemetry.totals;
+                let by_reason = match reason {
+                    Rejected::Overloaded => &t.sheds_overloaded,
+                    Rejected::DeadlineExceeded => &t.sheds_deadline,
+                };
+                t.sheds.fetch_add(1, Ordering::Relaxed);
+                by_reason.fetch_add(1, Ordering::Relaxed);
+                let mut st = ctl.state.lock().expect("control lock");
+                if !st.shed_logged {
+                    st.shed_logged = true;
+                    self.telemetry.journal().emit(EventKind::Shed {
+                        matrix: matrix_id,
+                        reason: reason.reason(),
+                        at_requests: st.admitted,
+                    });
+                }
+                return Err(anyhow::Error::new(reason));
+            }
+        }
+        let mut st = ctl.state.lock().expect("control lock");
+        st.admitted += 1;
+        *st.counts.entry(matrix_id).or_insert(0) += 1;
+        st.total += 1;
+        if ctl.cfg.window > 0 && st.admitted % ctl.cfg.window == 0 {
+            self.control_eval(ctl, &mut st);
+        }
+        let home = self.home_index(matrix_id);
+        if st.pinned.get(&matrix_id).copied().unwrap_or(0) > 0 {
+            return Ok(home);
+        }
+        let shard = match st.owners.get(&matrix_id) {
+            Some(owners) if owners.len() > 1 => {
+                let pick = owners
+                    .iter()
+                    .copied()
+                    .min_by_key(|&s| (self.depths[s].load(Ordering::Relaxed), s))
+                    .expect("owners non-empty");
+                if pick != home {
+                    self.telemetry.totals.reroutes.fetch_add(1, Ordering::Relaxed);
+                }
+                pick
+            }
+            _ => home,
+        };
+        Ok(shard)
+    }
+
+    /// Predicted time a request will spend queued before execution:
+    /// mean queue wait + mean batch-formation wait from the stage
+    /// histograms (zero with tracing off or before any traffic).
+    fn predicted_queue_wait(&self) -> Duration {
+        let us: f64 = self
+            .telemetry
+            .stages
+            .snapshot()
+            .iter()
+            .filter(|s| matches!(s.stage, Stage::QueueWait | Stage::BatchWait))
+            .map(|s| s.hist.mean_us())
+            .sum();
+        Duration::from_nanos((us * 1000.0) as u64)
+    }
+
+    /// One control evaluation at an admission-window boundary, with the
+    /// control state locked: replicate hot matrices, drop cooled
+    /// replicas, then halve the decayed counts. Matrix ids iterate in
+    /// sorted order so the emitted event sequence is deterministic for
+    /// a deterministic admission order.
+    fn control_eval(&self, ctl: &Control, st: &mut ControlState) {
+        let at = st.admitted;
+        let nshards = self.shards.len();
+        let target = if ctl.cfg.max_replicas == 0 {
+            nshards
+        } else {
+            ctl.cfg.max_replicas.min(nshards)
+        };
+        let mut ids: Vec<u64> = st.counts.keys().copied().collect();
+        ids.sort_unstable();
+        for id in ids {
+            let count = st.counts[&id];
+            let share = if st.total == 0 { 0.0 } else { count as f64 / st.total as f64 };
+            // An SLO override scope in Warning/Breach force-replicates
+            // its matrix even below the traffic threshold (and holds
+            // its replicas while degraded).
+            let slo_hot = self
+                .telemetry
+                .slo()
+                .and_then(|e| e.matrix_status(id))
+                .is_some_and(|s| s >= SloStatus::Warning);
+            let home = self.home_index(id);
+            let Some(owners) = st.owners.get_mut(&id) else {
+                continue; // never registered through this pool
+            };
+            let hot = share >= ctl.cfg.replicate_share || slo_hot;
+            if hot && owners.len() < target {
+                if let Some((coo, hint)) = st.registrations.get(&id) {
+                    let mut grew = false;
+                    for s in 0..nshards {
+                        if owners.len() >= target {
+                            break;
+                        }
+                        if owners.contains(&s) {
+                            continue;
+                        }
+                        // Fire-and-forget replay of the registration:
+                        // the channel is FIFO, so the replica is
+                        // registered before any product we route to it
+                        // after this point.
+                        let (ack, _drop) = channel();
+                        if self.shards[s]
+                            .tx
+                            .send(ShardMsg::Register {
+                                id,
+                                coo: coo.clone(),
+                                iterations_hint: *hint,
+                                ack,
+                            })
+                            .is_err()
+                        {
+                            continue;
+                        }
+                        owners.push(s);
+                        grew = true;
+                        self.telemetry.totals.replications.fetch_add(1, Ordering::Relaxed);
+                        self.telemetry.journal().emit(EventKind::Replicate {
+                            matrix: id,
+                            shard: s,
+                            replicas: owners.len(),
+                            at_requests: at,
+                        });
+                    }
+                    if grew {
+                        self.telemetry.journal().emit(EventKind::Reroute {
+                            matrix: id,
+                            owners: owners.len(),
+                            at_requests: at,
+                        });
+                    }
+                }
+            } else if owners.len() > 1 && share <= ctl.cfg.unreplicate_share && !slo_hot {
+                let dropped = owners.len() - 1;
+                for &s in owners.iter().filter(|&&s| s != home) {
+                    let _ = self.shards[s].tx.send(ShardMsg::Deregister { id });
+                }
+                *owners = vec![home];
+                self.telemetry.totals.unreplications.fetch_add(dropped as u64, Ordering::Relaxed);
+                self.telemetry.journal().emit(EventKind::Unreplicate {
+                    matrix: id,
+                    dropped,
+                    at_requests: at,
+                });
+            }
+        }
+        st.counts.retain(|_, c| {
+            *c /= 2;
+            *c > 0
+        });
+        st.total = st.counts.values().sum();
+        st.shed_logged = false;
     }
 
     /// Open a device-resident iterative session pinned to a registered
@@ -674,7 +1064,16 @@ impl Pool {
             .send(ShardMsg::SessionOpen { session: id, matrix_id, ack })
             .map_err(|_| anyhow!("serving pool stopped"))?;
         let n = rx.recv().map_err(|_| anyhow!("serving pool dropped session open"))??;
-        Ok(Session { tx: shard.tx.clone(), id, matrix_id, n })
+        // Route-pin the matrix to its home shard (where the session
+        // lives) for as long as any session is open on it: least-loaded
+        // routing must not send its products to a replica the session's
+        // pinned conversion doesn't cover.
+        let pin = self.control.clone();
+        if let Some(ctl) = &pin {
+            let mut st = ctl.state.lock().expect("control lock");
+            *st.pinned.entry(matrix_id).or_insert(0) += 1;
+        }
+        Ok(Session { tx: shard.tx.clone(), id, matrix_id, n, pin })
     }
 
     /// Snapshot pool-wide counters, per-matrix latency quantiles, the
@@ -728,6 +1127,17 @@ impl Pool {
             round_trips_elided: t.round_trips_elided.load(Ordering::Relaxed),
             deadline_tagged: t.deadline_tagged.load(Ordering::Relaxed),
             deadline_misses: t.deadline_misses.load(Ordering::Relaxed),
+            sheds: t.sheds.load(Ordering::Relaxed),
+            sheds_overloaded: t.sheds_overloaded.load(Ordering::Relaxed),
+            sheds_deadline: t.sheds_deadline.load(Ordering::Relaxed),
+            reroutes: t.reroutes.load(Ordering::Relaxed),
+            replications: t.replications.load(Ordering::Relaxed),
+            unreplications: t.unreplications.load(Ordering::Relaxed),
+            replicas: self.control.as_ref().map_or(0, |ctl| {
+                let st = ctl.state.lock().expect("control lock");
+                st.owners.values().map(|o| (o.len() - 1) as u64).sum()
+            }),
+            queue_depths: self.depths.iter().map(|d| d.load(Ordering::Relaxed)).collect(),
             stage_stats: self.telemetry.stages.snapshot(),
             events_total: self.telemetry.journal().total(),
             events_dropped: self.telemetry.journal().dropped(),
@@ -809,6 +1219,9 @@ pub struct Session {
     id: u64,
     matrix_id: u64,
     n: usize,
+    /// Keeps the matrix route-pinned to its home shard while open (only
+    /// scale-out pools hand one out).
+    pin: Option<Arc<Control>>,
 }
 
 impl Session {
@@ -878,6 +1291,15 @@ impl Drop for Session {
     fn drop(&mut self) {
         // fire-and-forget: a stopped pool has nothing left to close
         let _ = self.tx.send(ShardMsg::SessionClose { session: self.id });
+        if let Some(ctl) = &self.pin {
+            let mut st = ctl.state.lock().expect("control lock");
+            if let Some(open) = st.pinned.get_mut(&self.matrix_id) {
+                *open -= 1;
+                if *open == 0 {
+                    st.pinned.remove(&self.matrix_id);
+                }
+            }
+        }
     }
 }
 
@@ -1500,6 +1922,235 @@ mod tests {
         assert!(text.contains("spmv_slo_alerts_total 1"), "{text}");
         assert!(text.contains("spmv_slo_recoveries_total 1"), "{text}");
         assert!(text.contains("spmv_flight_records 16"), "{text}");
+    }
+
+    #[test]
+    fn unloaded_scaleout_pool_is_bit_identical_to_hash_routing() {
+        let router = test_router();
+        let names = ["rim", "eu-2005", "shar_te2-b3"];
+        let mats: Vec<Coo> = names.iter().map(|n| gen::by_name(n).unwrap().generate(1)).collect();
+        let plain = pool_with(router.clone(), 2, 0);
+        // window 6 so control evaluations DO run (every 6 admissions)
+        // and decide nothing: uniform 3-matrix traffic holds every
+        // share at 1/3, under the 50% replication threshold.
+        let scaled = Pool::start(
+            router,
+            BackendSpec::Native,
+            PoolConfig {
+                workers: 2,
+                scaleout: Some(ScaleOutConfig { window: 6, ..Default::default() }),
+                ..Default::default()
+            },
+        );
+        for (id, coo) in mats.iter().enumerate() {
+            plain.register(id as u64, coo.clone(), 10_000).unwrap();
+            scaled.register(id as u64, coo.clone(), 10_000).unwrap();
+        }
+        for r in 0..8 {
+            for (id, coo) in mats.iter().enumerate() {
+                let x = input(coo.n_cols, r);
+                let a = plain.product(id as u64, x.clone()).unwrap();
+                let b = scaled.product(id as u64, x).unwrap();
+                assert_eq!(a.y, b.y, "unloaded scale-out pool must serve bit-identically");
+            }
+        }
+        let stats = scaled.stats().unwrap();
+        assert_eq!(stats.requests, 24);
+        assert_eq!(stats.sheds, 0, "no SLO, no pressure, no shedding");
+        assert_eq!(stats.reroutes, 0, "unreplicated matrices route to their hash home");
+        assert_eq!(stats.replications, 0);
+        assert_eq!(stats.replicas, 0);
+        assert!(scaled.events().is_empty(), "no control events: {:?}", scaled.events());
+        assert_eq!(stats.queue_depths, vec![0, 0], "sequential traffic drains fully");
+    }
+
+    #[test]
+    fn hot_matrix_replicates_and_replicas_serve_bit_identically() {
+        // 3 workers, one matrix taking 100% of traffic: the first
+        // window boundary replicates it onto both other shards.
+        let pool = Pool::start(
+            test_router(),
+            BackendSpec::Native,
+            PoolConfig {
+                workers: 3,
+                scaleout: Some(ScaleOutConfig { window: 8, ..Default::default() }),
+                ..Default::default()
+            },
+        );
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        let csr = coo_to_csr(&coo);
+        let n = csr.n_cols;
+        pool.register(1, coo, 10_000).unwrap();
+        let burst = |salt0: usize| {
+            let receivers: Vec<_> =
+                (0..12).map(|r| pool.product_async(1, input(n, salt0 + r)).unwrap()).collect();
+            for (r, rx) in receivers.into_iter().enumerate() {
+                let resp = rx.recv().unwrap().unwrap();
+                assert_eq!(
+                    resp.y,
+                    csr.spmv_alloc(&input(n, salt0 + r)),
+                    "request {} must be bit-identical on every replica",
+                    salt0 + r
+                );
+            }
+        };
+        burst(0); // replication fires at admission 8, mid-burst
+        let stats = pool.stats().unwrap();
+        assert_eq!(stats.replications, 2, "hot matrix must spread to all 3 shards");
+        assert_eq!(stats.replicas, 2);
+        // splitmix64 homes matrix 1 on shard 0 of 3; replicas fill
+        // ascending. The control event sequence is deterministic: the
+        // single-threaded client admits in a fixed order.
+        let keys: Vec<String> = pool.events().iter().map(|e| e.kind.key()).collect();
+        assert_eq!(
+            keys,
+            vec![
+                "replicate matrix=1 shard=1 replicas=2 at=8".to_string(),
+                "replicate matrix=1 shard=2 replicas=3 at=8".to_string(),
+                "reroute matrix=1 owners=3 at=8".to_string(),
+            ],
+        );
+        // Hot-swap while replicated: each replica migrates on its own
+        // next message, so these bursts interleave old- and new-policy
+        // replicas — responses must stay bit-identical throughout.
+        let v = pool
+            .router()
+            .install(Arc::new(toy_router(&["rim", "eu-2005", "shar_te2-b3"], Objective::Latency)));
+        assert_eq!(v, 2);
+        burst(100);
+        burst(200);
+        let stats = pool.stats().unwrap();
+        assert_eq!(stats.requests, 36);
+        assert_eq!(stats.router_version, 2);
+        assert_eq!(stats.replicas, 2, "a hot-swap must not tear down replicas");
+    }
+
+    #[test]
+    fn cooled_matrix_unreplicates_and_reverts_to_its_home_shard() {
+        let pool = Pool::start(
+            test_router(),
+            BackendSpec::Native,
+            PoolConfig {
+                workers: 2,
+                scaleout: Some(ScaleOutConfig { window: 8, ..Default::default() }),
+                ..Default::default()
+            },
+        );
+        let names = ["rim", "eu-2005"];
+        let mats: Vec<Coo> = names.iter().map(|n| gen::by_name(n).unwrap().generate(1)).collect();
+        let csrs: Vec<_> = mats.iter().map(coo_to_csr).collect();
+        pool.register(1, mats[0].clone(), 10_000).unwrap();
+        pool.register(2, mats[1].clone(), 10_000).unwrap();
+        // Phase 1: matrix 1 monopolizes a window -> replicated at 8.
+        for r in 0..8 {
+            let x = input(csrs[0].n_cols, r);
+            assert_eq!(pool.product(1, x.clone()).unwrap().y, csrs[0].spmv_alloc(&x));
+        }
+        // Phase 2: traffic moves to matrix 2; matrix 1's decayed count
+        // halves each window (4 -> 2 -> 1) until its share drops under
+        // 12.5% and the replica is deregistered at admission 32.
+        for r in 0..24 {
+            let x = input(csrs[1].n_cols, r);
+            assert_eq!(pool.product(2, x.clone()).unwrap().y, csrs[1].spmv_alloc(&x));
+        }
+        let stats = pool.stats().unwrap();
+        assert_eq!(stats.unreplications, 1, "cooled matrix must shrink back");
+        assert_eq!(stats.replications, 2, "matrix 1 at admission 8, matrix 2 at 16");
+        assert_eq!(stats.replicas, 1, "only the (still hot) matrix 2 replica remains");
+        let keys: Vec<String> = pool.events().iter().map(|e| e.kind.key()).collect();
+        assert_eq!(
+            keys,
+            vec![
+                "replicate matrix=1 shard=0 replicas=2 at=8".to_string(),
+                "reroute matrix=1 owners=2 at=8".to_string(),
+                "replicate matrix=2 shard=1 replicas=2 at=16".to_string(),
+                "reroute matrix=2 owners=2 at=16".to_string(),
+                "unreplicate matrix=1 dropped=1 at=32".to_string(),
+            ],
+        );
+        // the shrunk matrix still serves correctly from its home
+        let x = input(csrs[0].n_cols, 99);
+        assert_eq!(pool.product(1, x.clone()).unwrap().y, csrs[0].spmv_alloc(&x));
+    }
+
+    #[test]
+    fn admission_control_sheds_typed_rejections_under_slo_pressure() {
+        use crate::obs::{SloSpec, SloStatus};
+        let slo = SloConfig {
+            spec: SloSpec {
+                p99_target: Duration::from_secs(3600),
+                deadline_miss_budget: 0.25,
+            },
+            overrides: vec![],
+            fast_window: 8,
+            recovery_evals: 2,
+            flight_cap: 16,
+        };
+        let pool = Pool::start(
+            test_router(),
+            BackendSpec::Native,
+            PoolConfig {
+                workers: 1,
+                slo: Some(slo.clone()),
+                scaleout: Some(ScaleOutConfig::default()),
+                ..Default::default()
+            },
+        );
+        let coo = gen::by_name("rim").unwrap().generate(1);
+        let n = coo.n_cols;
+        pool.register(1, coo.clone(), 100).unwrap();
+        // While healthy, zero-deadline tags are admitted (and merely
+        // counted as misses) — shedding stays disarmed.
+        for r in 0..8 {
+            pool.product_with_deadline(1, input(n, r), Duration::from_secs(3600)).unwrap();
+        }
+        for r in 8..16 {
+            pool.product_with_deadline(1, input(n, r), Duration::ZERO).unwrap();
+        }
+        let stats = pool.stats().unwrap();
+        assert_eq!(stats.slo.as_ref().unwrap().status, SloStatus::Breach);
+        assert_eq!(stats.sheds, 0, "nothing is shed while the SLO is healthy");
+        // Breached: a blown budget is now rejected fast and typed.
+        let err = pool.product_with_deadline(1, input(n, 16), Duration::ZERO).unwrap_err();
+        assert_eq!(err.downcast_ref::<Rejected>(), Some(&Rejected::DeadlineExceeded));
+        assert_eq!(format!("{err}"), "rejected: deadline budget already spent");
+        let stats = pool.stats().unwrap();
+        assert_eq!(stats.sheds, 1);
+        assert_eq!(stats.sheds_deadline, 1);
+        assert_eq!(stats.sheds_overloaded, 0);
+        assert_eq!(stats.requests, 16, "a shed request is never admitted");
+        // untagged requests still serve under pressure (cap not hit)
+        pool.product(1, input(n, 17)).unwrap();
+        let keys: Vec<String> = pool.events().iter().map(|e| e.kind.key()).collect();
+        assert!(keys.contains(&"shed matrix=1 reason=deadline at=16".to_string()), "{keys:?}");
+        let text = pool.metrics_text().unwrap();
+        assert!(text.contains("spmv_sheds_total{reason=\"deadline\"} 1"), "{text}");
+        assert!(text.contains("spmv_sheds_total{reason=\"overloaded\"} 0"), "{text}");
+        assert!(text.contains("spmv_queue_depth{shard=\"0\"} 0"), "{text}");
+
+        // admission_cap 0 sheds EVERYTHING — even untagged — while
+        // degraded.
+        let pool2 = Pool::start(
+            test_router(),
+            BackendSpec::Native,
+            PoolConfig {
+                workers: 1,
+                slo: Some(slo),
+                scaleout: Some(ScaleOutConfig { admission_cap: 0, ..Default::default() }),
+                ..Default::default()
+            },
+        );
+        pool2.register(1, coo, 100).unwrap();
+        for r in 0..8 {
+            pool2.product_with_deadline(1, input(n, r), Duration::from_secs(3600)).unwrap();
+        }
+        for r in 8..16 {
+            pool2.product_with_deadline(1, input(n, r), Duration::ZERO).unwrap();
+        }
+        let err = pool2.product(1, input(n, 20)).unwrap_err();
+        assert_eq!(err.downcast_ref::<Rejected>(), Some(&Rejected::Overloaded));
+        assert_eq!(format!("{err}"), "rejected: admission queue over capacity");
+        assert_eq!(pool2.stats().unwrap().sheds_overloaded, 1);
     }
 
     #[test]

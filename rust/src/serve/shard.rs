@@ -54,6 +54,10 @@ use std::time::{Duration, Instant};
 /// registration sees.
 pub(crate) enum ShardMsg {
     Register { id: u64, coo: Coo, iterations_hint: u64, ack: Sender<Result<Format>> },
+    /// Drop a replica registration (control plane, replica shards only
+    /// — never the hash home). Fire-and-forget; ignored while a session
+    /// pins the matrix on this shard.
+    Deregister { id: u64 },
     Product(Job),
     /// Open iterative session `session` pinned to `matrix_id`; acks
     /// the (square) dimension n.
@@ -98,6 +102,11 @@ pub(crate) struct ShardCfg {
     /// the flag gates only the per-request saturating subtractions and
     /// relaxed atomic histogram adds.
     pub tracing: bool,
+    /// Outstanding product jobs on this shard's queue: the pool
+    /// increments on send, the worker decrements when a batch is picked
+    /// up. Relaxed on both sides — the control plane's least-loaded
+    /// routing reads it as a load hint, never for correctness.
+    pub depth: Arc<std::sync::atomic::AtomicU64>,
 }
 
 /// Handle to a running shard.
@@ -302,12 +311,25 @@ fn worker_loop(
                 );
                 let _ = ack.send(result);
             }
+            ShardMsg::Deregister { id } => {
+                // Defensive: the control plane only replicates onto
+                // non-home shards and sessions only open on the home,
+                // so a pinned matrix should never see this — but if it
+                // does, keeping the registration is the safe no-op.
+                if !sessions.values().any(|s| s.matrix_id == id) {
+                    registry.remove(&id);
+                    cache.retain(|k| k.id != id);
+                }
+            }
             ShardMsg::Product(job) => {
                 // Batch-window open: everything a request waited before
                 // this instant is queue time, everything after (until
                 // its group starts converting) is batch-formation time.
                 let collect_start = Instant::now();
                 let batch = collect_batch(job, &rx, &mut backlog, cfg.batch_window, cfg.max_batch);
+                // Picked up: these jobs left the admission queue, so
+                // least-loaded routing stops counting them.
+                cfg.depth.fetch_sub(batch.len() as u64, Ordering::Relaxed);
                 for (id, jobs) in group_by_matrix(batch) {
                     execute_group(
                         &mut backend,

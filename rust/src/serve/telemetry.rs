@@ -298,6 +298,22 @@ pub struct Counters {
     pub deadline_tagged: AtomicU64,
     /// Deadline-tagged requests whose service time exceeded the tag.
     pub deadline_misses: AtomicU64,
+    /// Requests rejected at admission (never enqueued; not counted in
+    /// `requests`). Split by reason below.
+    pub sheds: AtomicU64,
+    /// Sheds because the admission queue was over capacity under SLO
+    /// pressure.
+    pub sheds_overloaded: AtomicU64,
+    /// Sheds because the deadline budget was already gone (expired, or
+    /// below the predicted queue wait).
+    pub sheds_deadline: AtomicU64,
+    /// Requests routed off their hash-home shard to a less-loaded
+    /// replica.
+    pub reroutes: AtomicU64,
+    /// Hot-matrix replica registrations performed by the control plane.
+    pub replications: AtomicU64,
+    /// Replica deregistrations after a matrix cooled.
+    pub unreplications: AtomicU64,
 }
 
 /// The shared registry: matrix id -> telemetry handle, plus the

@@ -15,17 +15,41 @@ use std::fmt;
 pub struct Error {
     msg: String,
     source: Option<Box<Error>>,
+    /// The typed value this frame was built from via [`Error::new`], if
+    /// any — what [`Error::downcast_ref`] recovers. Message-only frames
+    /// (`anyhow!`, `.context(...)`) carry none.
+    payload: Option<Box<dyn std::any::Any + Send + Sync>>,
 }
 
 impl Error {
     /// Construct from any displayable message (what `anyhow!` expands to).
     pub fn msg<M: fmt::Display>(message: M) -> Error {
-        Error { msg: message.to_string(), source: None }
+        Error { msg: message.to_string(), source: None, payload: None }
+    }
+
+    /// Construct from a typed std error, retaining the value so callers
+    /// can recover it with [`Error::downcast_ref`] (anyhow's typed-error
+    /// round-trip).
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Error {
+        Error { msg: error.to_string(), source: None, payload: Some(Box::new(error)) }
     }
 
     /// Wrap this error in one more frame of context.
     pub fn context<C: fmt::Display>(self, context: C) -> Error {
-        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+        Error { msg: context.to_string(), source: Some(Box::new(self)), payload: None }
+    }
+
+    /// The typed error this chain was built from, if any frame holds an
+    /// `E` (outermost first — matches anyhow, which searches the chain).
+    pub fn downcast_ref<E: 'static>(&self) -> Option<&E> {
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            if let Some(p) = e.payload.as_deref().and_then(|p| p.downcast_ref::<E>()) {
+                return Some(p);
+            }
+            cur = e.source.as_deref();
+        }
+        None
     }
 
     /// The chain of messages, outermost first.
@@ -182,6 +206,31 @@ mod tests {
         assert_eq!(format!("{}", fails(false).unwrap_err()), "always fails with code 42");
         let e = anyhow!("plain");
         assert_eq!(format!("{e}"), "plain");
+    }
+
+    #[derive(Debug, PartialEq)]
+    struct Typed(u32);
+
+    impl fmt::Display for Typed {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "typed error {}", self.0)
+        }
+    }
+
+    impl std::error::Error for Typed {}
+
+    #[test]
+    fn new_retains_the_typed_value_through_context_frames() {
+        let e = Error::new(Typed(7));
+        assert_eq!(format!("{e}"), "typed error 7");
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed(7)));
+        assert!(e.downcast_ref::<std::io::Error>().is_none());
+        // context frames wrap without losing the payload
+        let wrapped = e.context("while serving");
+        assert_eq!(format!("{wrapped}"), "while serving");
+        assert_eq!(wrapped.downcast_ref::<Typed>(), Some(&Typed(7)));
+        // message-only errors have nothing to downcast to
+        assert!(anyhow!("plain").downcast_ref::<Typed>().is_none());
     }
 
     #[test]

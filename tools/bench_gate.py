@@ -65,6 +65,23 @@ CHECKS = [
         },
     },
     {
+        "file": "BENCH_e2e_zipf_scaleout.json",
+        "table": "e2e_zipf_scaleout",
+        "keys": ["metric"],
+        "metrics": {
+            # the scale-out control-plane ledger under the seeded Zipf
+            # sweep: admitted requests, shed count (zero — no SLO is
+            # attached), replication/unreplication decisions, live
+            # replicas, and journaled control events. All exact counts
+            # from the deterministic admission sequence — never
+            # wall-clock (throughput lives in the ungated
+            # e2e_zipf_throughput table). The bench asserts exact
+            # equality; the gate pins the floor so the control plane
+            # cannot silently stop replicating or journaling.
+            "value": {"direction": "higher", "tol": 1.0},
+        },
+    },
+    {
         "file": "BENCH_e2e_stage_decomposition.json",
         "table": "e2e_stage_decomposition",
         "keys": ["stage"],

@@ -13,8 +13,12 @@ human-readable report:
   - per-arm attribution: one row per (format, knobs) joint arm from
     `spmv_arm_*`, sorted by request count — where the time and the
     modeled energy actually went (DESIGN.md §11)
+  - scale-out control plane: replication/reroute/shed counters, live
+    replicas, and per-shard queue depths (`spmv_replicas`,
+    `spmv_sheds_total`, `spmv_queue_depth`; DESIGN.md §12)
   - journal: counts per event kind plus the full slo_alert /
-    slo_recovered / arm_shift lines, in sequence order
+    slo_recovered / arm_shift lines and the replicate / unreplicate /
+    reroute / shed control-plane timeline, in sequence order
 
 Exit status: 0 on a well-formed report (even with zero SLO families),
 nonzero when either input is missing or malformed — CI runs this after
@@ -35,6 +39,7 @@ LABEL = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
 
 SLO_STATUS = {0: "ok", 1: "warning", 2: "breach"}
 SLO_EVENT_KINDS = ("slo_alert", "slo_recovered", "arm_shift")
+SCALEOUT_EVENT_KINDS = ("replicate", "unreplicate", "reroute", "shed")
 
 
 def parse_metrics(path):
@@ -133,6 +138,31 @@ def report_arms(samples):
         print("  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip())
 
 
+def report_scaleout(samples):
+    """Scale-out control plane posture (DESIGN.md §12)."""
+    repl = scalar(samples, "spmv_replications_total")
+    print("\n== scale-out control plane ==")
+    if repl is None:
+        print("no spmv_replications_total: exposition predates the scale-out "
+              "control plane")
+        return
+    sheds = {l.get("reason", "?"): v
+             for n, l, v in samples if n == "spmv_sheds_total"}
+    depths = sorted((int(l.get("shard", -1)), v)
+                    for n, l, v in samples if n == "spmv_queue_depth")
+    print(f"replications:     {fmt(repl, '{:.0f}')}")
+    print(f"unreplications:   "
+          f"{fmt(scalar(samples, 'spmv_unreplications_total'), '{:.0f}')}")
+    print(f"live replicas:    {fmt(scalar(samples, 'spmv_replicas'), '{:.0f}')}")
+    print(f"reroutes:         {fmt(scalar(samples, 'spmv_reroutes_total'), '{:.0f}')}")
+    by_reason = ", ".join(f"{k} {v:.0f}" for k, v in sorted(sheds.items())) or "-"
+    total = sum(sheds.values()) if sheds else None
+    print(f"sheds:            {fmt(total, '{:.0f}')} ({by_reason})")
+    if depths:
+        print("queue depths:     "
+              + ", ".join(f"shard {s}: {v:.0f}" for s, v in depths))
+
+
 def report_events(path):
     with open(path, "r", encoding="utf-8") as f:
         events = json.load(f)
@@ -156,6 +186,13 @@ def report_events(path):
             print(f"  #{e['seq']:<4} {e.get('detail', e['kind'])}")
     else:
         print("no slo_alert/slo_recovered/arm_shift events journaled")
+    scaleout_events = [e for e in events if e["kind"] in SCALEOUT_EVENT_KINDS]
+    if scaleout_events:
+        print("scale-out control-plane timeline, in sequence order:")
+        for e in scaleout_events:
+            print(f"  #{e['seq']:<4} {e.get('detail', e['kind'])}")
+    else:
+        print("no replicate/unreplicate/reroute/shed events journaled")
 
 
 def main(argv):
@@ -167,6 +204,7 @@ def main(argv):
         samples = parse_metrics(args.metrics)
         report_slo(samples)
         report_arms(samples)
+        report_scaleout(samples)
         report_events(args.events)
     except (OSError, ValueError, json.JSONDecodeError) as e:
         print(f"FAIL: {e}")
