@@ -17,9 +17,15 @@
 //!    CG updates `p` on the host every iteration, so each A·p pays the
 //!    same two vector marshals as a per-request product. The printed
 //!    ledger keeps that honest: sessions elide round-trips only on
-//!    purely chained segments.
+//!    purely chained segments;
+//! 3. a **SymGS-preconditioned CG** rerun: each iteration applies the
+//!    symmetric Gauss–Seidel smoother z = M⁻¹ r as an in-session
+//!    [`Session::symgs_step`] — a solve-kind step on the same pinned
+//!    conversion, attributed under `kind=symgs` — and should cut the
+//!    iteration count of phase 2.
 //!
 //! [`Session`]: auto_spmv::serve::Session
+//! [`Session::symgs_step`]: auto_spmv::serve::Session::symgs_step
 
 use auto_spmv::coordinator::overhead::OverheadModel;
 use auto_spmv::coordinator::RunTimeOptimizer;
@@ -174,6 +180,55 @@ fn main() -> anyhow::Result<()> {
         cg_bytes as f64 / products as f64
     );
     assert!(resid < 1e-3, "CG must converge");
+    let plain_iters = products;
+
+    // --- phase 3: SymGS-preconditioned CG through the same session ----
+    // Each iteration makes two session trips: A*p (a product step) and
+    // z = M^-1 r (a symgs solve step on the pinned conversion).
+    let mut x = vec![0.0f32; n];
+    let mut r = b.clone();
+    let apply = |vec: &[f32], op: &dyn Fn() -> anyhow::Result<()>| -> anyhow::Result<Vec<f32>> {
+        session.write(vec.to_vec())?;
+        op()?;
+        session.read()
+    };
+    let mut z = apply(&r, &|| session.symgs_step())?;
+    let mut p = z.clone();
+    let mut rz_old: f32 = r.iter().zip(&z).map(|(a, b)| a * b).sum();
+    let mut pcg_iters = 0u32;
+    for it in 0..400 {
+        let ap = apply(&p, &|| session.step())?;
+        pcg_iters += 1;
+        let pap: f32 = p.iter().zip(&ap).map(|(a, b)| a * b).sum();
+        let alpha = rz_old / pap;
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        let rs: f32 = r.iter().map(|v| v * v).sum();
+        if rs.sqrt() < 1e-5 {
+            println!("preconditioned CG converged after {} iterations", it + 1);
+            break;
+        }
+        z = apply(&r, &|| session.symgs_step())?;
+        let rz_new: f32 = r.iter().zip(&z).map(|(a, b)| a * b).sum();
+        let beta = rz_new / rz_old;
+        for i in 0..n {
+            p[i] = z[i] + beta * p[i];
+        }
+        rz_old = rz_new;
+    }
+    let ax = csr.spmv_alloc(&x);
+    let pcg_resid: f32 = ax.iter().zip(&b).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+    println!(
+        "SymGS-PCG: {pcg_iters} iterations vs {plain_iters} unpreconditioned, \
+         final residual {pcg_resid:.2e}"
+    );
+    assert!(pcg_resid < 1e-3, "preconditioned CG must converge");
+    assert!(
+        pcg_iters <= plain_iters,
+        "a SymGS smoother must not slow CG down on a diagonally dominant system"
+    );
     drop(session);
     let stats = pool.stats()?;
     println!(

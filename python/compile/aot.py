@@ -8,6 +8,9 @@ parser reassigns ids and round-trips cleanly (see /opt/xla-example/README).
 Outputs under ``--out-dir`` (default ../artifacts):
   * ``<variant>.hlo.txt``      — one HLO module per variant (spmv graph),
   * ``spmm_<variant>.hlo.txt`` — multi-vector (batched) SpMM artifacts,
+  * ``sptrsv_<variant>.hlo.txt`` — triangular-solve artifacts (both
+                                 triangle sides via the ``lo`` extra),
+  * ``symgs_<variant>.hlo.txt``— symmetric Gauss-Seidel sweep artifacts,
   * ``power_<variant>.hlo.txt``— power-iteration-step artifacts,
   * ``manifest.tsv``           — one row per artifact; parsed by
                                  ``rust/src/runtime/artifacts.rs``.
@@ -116,6 +119,18 @@ def main() -> None:
         rows.append((v, "spmm", fname, input_spec(example)))
         print(f"[spmm] {fname}", file=sys.stderr)
 
+    for v in model.sptrsv_variants(quick=args.quick):
+        fname = emit(model.build_sptrsv, v, "sptrsv")
+        _, example = model.build_sptrsv(v)
+        rows.append((v, "sptrsv", fname, input_spec(example)))
+        print(f"[sptrsv] {fname}", file=sys.stderr)
+
+    for v in model.symgs_variants(quick=args.quick):
+        fname = emit(model.build_symgs, v, "symgs")
+        _, example = model.build_symgs(v)
+        rows.append((v, "symgs", fname, input_spec(example)))
+        print(f"[symgs] {fname}", file=sys.stderr)
+
     for v in model.power_step_variants(quick=args.quick):
         fname = emit(model.build_power_step, v, "power")
         _, example = model.build_power_step(v)
@@ -127,8 +142,13 @@ def main() -> None:
         f.write("name\tkind\tfmt\trows\tcols\twidth\tblock_rows\tchunk_width"
                 "\tx_placement\textra\tpath\tinputs\n")
         for v, kind, fname, spec in rows:
+            # non-spmv rows prefix the kind into the manifest name: the
+            # Rust engine caches compiled executables BY NAME, so a
+            # solve/power row sharing a variant name with its spmv
+            # sibling would silently serve the wrong executable
+            name = v.name if kind == "spmv" else f"{kind}_{v.name}"
             f.write(
-                f"{v.name}\t{kind}\t{v.fmt}\t{v.rows}\t{v.cols}\t{v.width}"
+                f"{name}\t{kind}\t{v.fmt}\t{v.rows}\t{v.cols}\t{v.width}"
                 f"\t{v.block_rows}\t{v.chunk_width}\t{v.x_placement}"
                 f"\t{extra_str(v)}\t{fname}\t{spec}\n"
             )

@@ -1,0 +1,192 @@
+"""Sparse triangular solve (SpTRSV) lowerings.
+
+GPU original (HPCG-style solvers): forward/backward substitution over the
+lower/upper triangle of ``A`` *including the diagonal*, with stored entries
+strictly on the wrong side ignored — so a full matrix solves with its
+triangle. The dependency chain (row ``i`` needs every in-triangle ``x[j]``
+first) is what makes SpTRSV hard to parallelize; the standard answer is
+**level scheduling**: rows are grouped into levels where level ``l`` rows
+depend only on rows of levels ``< l``, so each level solves in parallel.
+
+TPU rethink, per format:
+
+* **CSR** — a Pallas kernel sweeping the levels along the grid axis. The
+  host pre-expands the in-triangle off-diagonal entries to COO triplets
+  (same marshalling family as the CSR SpMV kernel) plus a dense diagonal
+  and a per-row level index. Each grid step scatter-accumulates ALL
+  triplet products against the current iterate and commits the candidate
+  ``(b - acc) / diag`` only to the rows of its level — rows of earlier
+  levels already hold their final values, so the masked update is exact.
+  The grid is sized ``rows`` (the worst-case chain length); steps past
+  ``n_levels`` are fixpoint no-ops.
+* **ELL / SELL / BELL** — the padded column-major layouts cannot express
+  the row-to-row dependency chain in a static BlockSpec sweep, so these
+  lower a **dense fallback**: ``A`` realized dense, substitution as a
+  ``lax.fori_loop`` over rows. Same numerics, one artifact per format so
+  per-format artifact selection stays uniform.
+
+The triangle side is the ``lo`` extra (``lo=1`` lower/forward, ``lo=0``
+upper/backward), mirrored by ``ArtifactSpec::lower()`` on the Rust side.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .common import Variant
+
+
+def _lower(v: Variant) -> bool:
+    return bool(v.extra_map.get("lo", 1))
+
+
+def _kernel_levels(v_ref, r_ref, c_ref, d_ref, lvl_ref, b_ref, o_ref, *, n):
+    """One grid step = one level of the schedule."""
+    l = pl.program_id(0)
+
+    @pl.when(l == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = o_ref[...]
+    vals = v_ref[...]
+    rows = r_ref[...]
+    cols = c_ref[...]
+    # in-triangle contributions against the current iterate; rows of this
+    # level only reference already-final columns, the rest is discarded
+    acc = jnp.zeros((n,), vals.dtype).at[rows].add(vals * x[cols])
+    cand = (b_ref[...] - acc) / d_ref[...]
+    o_ref[...] = jnp.where(lvl_ref[...] == l, cand, x)
+
+
+def _build_csr(v: Variant):
+    """Level-scheduled CSR solve.
+
+    fn(vals f32[nnz], rows i32[nnz], cols i32[nnz], diag f32[n],
+       level i32[n], b f32[n]) -> (x f32[n],)
+
+    ``width`` keeps the CSR bucket semantics (padded in-triangle triplet
+    count); padding entries are (0.0, row 0, col 0), padded rows carry
+    diag 1.0 / level 0 / b 0.0 so they solve to exact zeros.
+    """
+    n, nnz = v.rows, v.width
+    tri_spec = pl.BlockSpec((nnz,), lambda l: (0,))
+    vec_spec = pl.BlockSpec((n,), lambda l: (0,))
+    call = pl.pallas_call(
+        functools.partial(_kernel_levels, n=n),
+        grid=(n,),  # worst-case chain: one row per level
+        in_specs=[tri_spec, tri_spec, tri_spec, vec_spec, vec_spec, vec_spec],
+        out_specs=vec_spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )
+
+    def fn(vals, rows, cols, diag, level, b):
+        return (call(vals, rows, cols, diag, level, b),)
+
+    example = (
+        jax.ShapeDtypeStruct((nnz,), jnp.float32),
+        jax.ShapeDtypeStruct((nnz,), jnp.int32),
+        jax.ShapeDtypeStruct((nnz,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    )
+    return fn, example
+
+
+def _build_dense(v: Variant):
+    """Dense-fallback substitution for the padded column formats.
+
+    fn(a f32[n, n], b f32[n]) -> (x f32[n],)
+    """
+    n = v.rows
+    lower = _lower(v)
+    idx = jnp.arange(n)
+
+    def fn(a, b):
+        a = jnp.asarray(a)
+        b = jnp.asarray(b)
+
+        def body(step, x):
+            i = step if lower else n - 1 - step
+            mask = idx < i if lower else idx > i
+            acc = b[i] - jnp.sum(jnp.where(mask, a[i] * x, 0.0))
+            return x.at[i].set(acc / a[i, i])
+
+        x = jax.lax.fori_loop(0, n, body, jnp.zeros((n,), jnp.float32))
+        return (x,)
+
+    example = (
+        jax.ShapeDtypeStruct((n, n), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    )
+    return fn, example
+
+
+def build(v: Variant):
+    """Return (fn, example_args) for this SpTRSV variant."""
+    if v.fmt == "csr":
+        return _build_csr(v)
+    return _build_dense(v)
+
+
+# ---------------------------------------------------------------------------
+# Host-side marshalling (reference path; the Rust runtime marshals its own
+# CSR the same way when it adopts the compiled solve artifacts)
+# ---------------------------------------------------------------------------
+
+def pack_csr(a: "np.ndarray", v: Variant):
+    """Marshal a dense-realized matrix into the level-scheduled operands.
+
+    Keeps only the strictly in-triangle off-diagonal entries (wrong-side
+    entries are ignored, HPCG-style), extracts the dense diagonal, and
+    computes the level schedule ``level[i] = 1 + max(level[j])`` over the
+    in-triangle dependencies.
+
+    Raises ``ValueError`` for a non-square matrix, a bucket overflow, or
+    a zero diagonal — the singular case, mirroring the Rust native
+    fallback's "singular system" error.
+    """
+    n = a.shape[0]
+    if a.shape[1] != n:
+        raise ValueError(f"sptrsv needs a square matrix, got {a.shape}")
+    if n > v.rows:
+        raise ValueError(f"matrix rows {n} exceed bucket {v.rows} ({v.name})")
+    lower = _lower(v)
+
+    diag = np.ones(v.rows, np.float32)
+    level = np.zeros(v.rows, np.int32)
+    vals, rows, cols = [], [], []
+    order = range(n) if lower else range(n - 1, -1, -1)
+    for i in order:
+        if a[i, i] == 0.0:
+            raise ValueError(
+                f"singular system: row {i} has no nonzero diagonal entry"
+            )
+        diag[i] = a[i, i]
+        deps = 0
+        js = range(i) if lower else range(i + 1, n)
+        for j in js:
+            if a[i, j] != 0.0:
+                vals.append(a[i, j])
+                rows.append(i)
+                cols.append(j)
+                deps = max(deps, level[j] + 1)
+        level[i] = deps
+    if len(vals) > v.width:
+        raise ValueError(
+            f"in-triangle nnz {len(vals)} exceed bucket width {v.width} ({v.name})"
+        )
+
+    pad = v.width - len(vals)
+    return (
+        np.asarray(vals + [0.0] * pad, np.float32),
+        np.asarray(rows + [0] * pad, np.int32),
+        np.asarray(cols + [0] * pad, np.int32),
+        diag,
+        level,
+    )

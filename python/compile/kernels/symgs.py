@@ -1,0 +1,55 @@
+"""Symmetric Gauss-Seidel sweep (SymGS) lowerings.
+
+One sweep is a forward pass (rows ascending) then a backward pass (rows
+descending), each updating ``x[i] = (b[i] - sum_{j != i} a_ij x[j]) / a_ii``
+in place with the latest values; applied from ``x = 0`` it is the standard
+smoother/preconditioner of multigrid and preconditioned CG (the serving
+pool's ``Session::symgs_step``).
+
+Unlike SpTRSV there is no level parallelism to recover: the in-place
+update chains EVERY row through the previous one (the strict triangle of
+dependencies flips between the passes), so no sparse storage format can
+express the chain in a static BlockSpec sweep. All formats therefore
+lower the **dense fallback** — ``A`` realized dense, both passes as
+``lax.fori_loop`` row updates — one artifact per format so per-format
+artifact selection stays uniform with the other kernel classes. The
+sequential-chain rationale is the documented contract (DESIGN.md §13);
+a red/black-colored variant is the natural successor once the generator
+grid carries coloring metadata.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .common import Variant
+
+
+def build(v: Variant):
+    """Return (fn, example_args) for this SymGS variant.
+
+    fn(a f32[n, n], b f32[n]) -> (x f32[n],)
+
+    Padded rows must carry a unit diagonal (``a[i, i] = 1``) and zero
+    ``b`` so they sweep to exact zeros — the same padding contract as the
+    SpTRSV dense fallback.
+    """
+    n = v.rows
+    idx = jnp.arange(n)
+
+    def fn(a, b):
+        a = jnp.asarray(a)
+        b = jnp.asarray(b)
+
+        def update(i, x):
+            acc = b[i] - jnp.sum(jnp.where(idx != i, a[i] * x, 0.0))
+            return x.at[i].set(acc / a[i, i])
+
+        x = jax.lax.fori_loop(0, n, update, jnp.zeros((n,), jnp.float32))
+        x = jax.lax.fori_loop(0, n, lambda s, x: update(n - 1 - s, x), x)
+        return (x,)
+
+    example = (
+        jax.ShapeDtypeStruct((n, n), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    )
+    return fn, example

@@ -16,7 +16,7 @@ from typing import Callable, List, Tuple
 
 import jax.numpy as jnp
 
-from .kernels import bell, csr, ell, sell
+from .kernels import bell, csr, ell, sell, sptrsv, symgs
 from .kernels.common import Variant
 
 _BUILDERS = {"ell": ell.build, "bell": bell.build, "sell": sell.build, "csr": csr.build}
@@ -25,6 +25,21 @@ _BUILDERS = {"ell": ell.build, "bell": bell.build, "sell": sell.build, "csr": cs
 def build_spmv(v: Variant) -> Tuple[Callable, tuple]:
     """(fn, example_args) computing y = A @ x for the variant's format."""
     return _BUILDERS[v.fmt](v)
+
+
+def build_sptrsv(v: Variant) -> Tuple[Callable, tuple]:
+    """(fn, example_args) solving T x = b over the variant's triangle.
+
+    CSR lowers the level-scheduled Pallas sweep; the padded column
+    formats lower the dense fallback (see ``kernels/sptrsv.py``). The
+    triangle side rides in the ``lo`` extra.
+    """
+    return sptrsv.build(v)
+
+
+def build_symgs(v: Variant) -> Tuple[Callable, tuple]:
+    """(fn, example_args) computing one symmetric Gauss-Seidel sweep."""
+    return symgs.build(v)
 
 
 def build_spmm(v: Variant) -> Tuple[Callable, tuple]:
@@ -161,6 +176,61 @@ def spmm_variants(quick: bool = False) -> List[Variant]:
     add("ell", 256, 256, 16, 64, 8, "resident", ncols=8)
     add("ell", 256, 256, 16, 64, 8, "gather", ncols=8)
     add("csr", 256, 256, 2048, 0, 512, "resident", ncols=8)
+    return vs
+
+
+def sptrsv_variants(quick: bool = False) -> List[Variant]:
+    """The SpTRSV artifact set ``make artifacts`` compiles.
+
+    Reuses the SpMV knob grid's bucket and knob names so the runtime's
+    joint (format, knob) decisions select solve artifacts through the
+    same ``knob_map`` path. Every grid point is emitted for BOTH
+    triangle sides (``lo=1`` lower, ``lo=0`` upper) — an upper solve
+    must never silently fall back to a lower artifact.
+    """
+    vs: List[Variant] = []
+
+    def add(*a, **kw):
+        vs.append(Variant(*a, **kw))
+
+    for lo in ((("lo", 1),), (("lo", 0),)):
+        if quick:
+            add("csr", 256, 256, 2048, 0, 512, "resident", extra=lo)
+            add("ell", 256, 256, 16, 64, 8, "resident", extra=lo)
+            continue
+        for cw in (512, 1024):
+            add("csr", 1024, 1024, 8192, 0, cw, "resident", extra=lo)
+        add("csr", 256, 256, 2048, 0, 512, "resident", extra=lo)
+        # dense fallbacks for the converted formats
+        add("ell", 1024, 1024, 16, 64, 8, "resident", extra=lo)
+        add("sell", 1024, 1024, 16, 8, 8, "resident", extra=(("h", 8),) + lo)
+        add("bell", 1024, 1024, 16, 4, 4, "resident",
+            extra=(("bh", 8), ("bw", 8)) + lo)
+    return vs
+
+
+def symgs_variants(quick: bool = False) -> List[Variant]:
+    """The SymGS artifact set ``make artifacts`` compiles.
+
+    A sweep is side-free (forward + backward in one graph), so there is
+    no ``lo`` axis; one dense-fallback artifact per format keeps the
+    per-format selection uniform with the other kernel classes.
+    """
+    vs: List[Variant] = []
+
+    def add(*a, **kw):
+        vs.append(Variant(*a, **kw))
+
+    if quick:
+        add("csr", 256, 256, 2048, 0, 512, "resident")
+        add("ell", 256, 256, 16, 64, 8, "resident")
+        return vs
+    for cw in (512, 1024):
+        add("csr", 1024, 1024, 8192, 0, cw, "resident")
+    add("csr", 256, 256, 2048, 0, 512, "resident")
+    add("ell", 1024, 1024, 16, 64, 8, "resident")
+    add("sell", 1024, 1024, 16, 8, 8, "resident", extra=(("h", 8),))
+    add("bell", 1024, 1024, 16, 4, 4, "resident", extra=(("bh", 8), ("bw", 8)))
     return vs
 
 

@@ -56,6 +56,18 @@ def test_manifest_only_writes_schema_without_lowering(tmp_path):
     assert {r_[8] for r_ in spmm} >= {"resident", "gather"}, \
         "the spmm knob sweep must reach the manifest"
     assert all("nc=" in r_[9] for r_ in spmm)
+    # the solve kernel classes reach the manifest: sptrsv rows for both
+    # triangle sides (lo extra), side-free symgs rows, and names unique
+    # across kinds (the Rust engine caches executables by name)
+    tri = [r_ for r_ in rows if r_[1] == "sptrsv"]
+    assert tri, "quick inventory must emit sptrsv rows"
+    assert {("lo=1" in r_[9], "lo=0" in r_[9]) for r_ in tri} == \
+        {(True, False), (False, True)}, "both triangle sides must be emitted"
+    gs = [r_ for r_ in rows if r_[1] == "symgs"]
+    assert gs, "quick inventory must emit symgs rows"
+    assert all("lo=" not in r_[9] for r_ in gs), "symgs is side-free"
+    names = [r_[0] for r_ in rows]
+    assert len(names) == len(set(names)), "manifest names must be unique"
     # no lowering happened: no HLO files AND no Makefile sentinel (the
     # sentinel would mark this schema-only directory as a built
     # inventory and suppress the real lowering)

@@ -19,6 +19,12 @@
 //! dumped as `reports/METRICS.prom` / `reports/EVENTS.json` — the
 //! observability artifacts the CI bench-smoke job lints and uploads.
 //!
+//! Part 2d (always runs): the solver chain — direct SpTRSV/SymGS
+//! requests checked bit-for-bit against the native sweeps, then a
+//! SymGS-preconditioned CG loop through one session; the per-kind
+//! request/launch attribution and the solve_exec/session_step stage
+//! counts are exact and gated by `tools/bench_gate.py`.
+//!
 //! Part 4 (always runs): request-lifecycle stage decomposition — the
 //! stage histograms must partition end-to-end latency EXACTLY (the
 //! shard derives both from the same boundary instants), with
@@ -213,6 +219,7 @@ fn main() {
 
     batch_width_sweep(&backend, smoke);
     iterative_session_sweep(&backend, smoke);
+    solver_chain();
     stage_decomposition();
     tracing_overhead(smoke);
     slo_breach_e2e();
@@ -554,6 +561,164 @@ fn iterative_session_sweep(backend: &BackendSpec, smoke: bool) {
     }
     t.emit("e2e_iterative_session");
     t.emit_json("e2e_iterative_session");
+}
+
+/// SPD, diagonally dominant banded matrix (symmetric random
+/// off-diagonals under a strictly dominant diagonal) — the system the
+/// solver-chain part runs CG with SymGS smoothing on.
+fn spd_system(n: usize, seed: u64) -> Coo {
+    let mut rng = Rng::new(seed);
+    let mut coo = Coo::new(n, n);
+    let mut offs: Vec<(usize, usize, f32)> = Vec::new();
+    for i in 0..n {
+        for d in 1..=3usize {
+            if i + d < n && rng.f64() < 0.7 {
+                offs.push((i, i + d, -(rng.f64() as f32) * 0.4));
+            }
+        }
+    }
+    let mut diag = vec![1.0f32; n];
+    for &(i, j, v) in &offs {
+        coo.push(i, j, v);
+        coo.push(j, i, v);
+        diag[i] += v.abs() + 0.1;
+        diag[j] += v.abs() + 0.1;
+    }
+    for (i, d) in diag.into_iter().enumerate() {
+        coo.push(i, i, d);
+    }
+    coo
+}
+
+/// Part 2d — solver chain: all three kernel classes served through one
+/// pool. Direct SpMV / SpTRSV(lower, upper) / SymGS requests ride the
+/// request path (each solve checked bit-for-bit against the native
+/// sweep), then a SymGS-preconditioned CG loop runs through a single
+/// device-resident session — each iteration one chained A·p product
+/// step plus one z = M⁻¹ r solve step, a fixed iteration count so the
+/// ledger never depends on a convergence test. The whole ledger is
+/// deterministic: sequential native dispatch pays exactly one launch
+/// per request, so the per-kind request/launch attribution, the
+/// solve_exec / session_step stage counts, and the session-step tally
+/// are exact counts gated by `tools/bench_gate.py` (mode-independent —
+/// the chain is small enough to run identically under --smoke).
+fn solver_chain() {
+    const DIRECT: usize = 12; // requests per kind-variant bundle
+    const PCG_ITERS: usize = 16;
+    let router = Arc::new(auto_spmv::testutil::toy_router(&["rim"], Objective::EnergyEff));
+    let n = 200usize;
+    let coo = spd_system(n, 0x501C);
+    let csr = convert::coo_to_csr(&coo);
+    let pool = Pool::start(
+        router,
+        BackendSpec::Native,
+        PoolConfig { workers: 1, ..PoolConfig::default() },
+    );
+    pool.register(1, coo, 1_000_000).expect("register");
+
+    // direct requests: every response checked against the native
+    // reference, so a format conversion that breaks solve bit-identity
+    // fails the bench, not a downstream consumer
+    for r in 0..DIRECT {
+        let b: Vec<f32> = (0..n).map(|i| ((i * 5 + r) % 13) as f32 * 0.25 - 1.5).collect();
+        assert_eq!(pool.product(1, b.clone()).expect("product").y, csr.spmv_alloc(&b));
+        assert_eq!(
+            pool.sptrsv(1, b.clone(), true).expect("sptrsv").y,
+            csr.sptrsv(&b, true).expect("native sptrsv"),
+            "lower solve must match the native sweep bit-for-bit"
+        );
+        assert_eq!(
+            pool.sptrsv(1, b.clone(), false).expect("sptrsv").y,
+            csr.sptrsv(&b, false).expect("native sptrsv")
+        );
+        let mut want = vec![0.0f32; n];
+        csr.symgs_sweep(&b, &mut want).expect("native symgs");
+        assert_eq!(pool.symgs(1, b).expect("symgs").y, want);
+    }
+
+    // SymGS-preconditioned CG through one session: write/step/read per
+    // operator application (CG updates p host-side every iteration)
+    let b: Vec<f32> = (0..n).map(|i| ((i % 11) as f32 - 5.0) * 0.3).collect();
+    let session = pool.open_session(1).expect("open_session");
+    let apply = |v: &[f32], op: &dyn Fn() -> anyhow::Result<()>| -> Vec<f32> {
+        session.write(v.to_vec()).expect("session write");
+        op().expect("session step");
+        session.read().expect("session read")
+    };
+    let mut x = vec![0.0f32; n];
+    let mut r = b.clone();
+    let mut z = apply(&r, &|| session.symgs_step());
+    let mut p = z.clone();
+    let mut rz_old: f32 = r.iter().zip(&z).map(|(a, b)| a * b).sum();
+    for _ in 0..PCG_ITERS {
+        let ap = apply(&p, &|| session.step());
+        let pap: f32 = p.iter().zip(&ap).map(|(a, b)| a * b).sum();
+        let alpha = rz_old / pap;
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        z = apply(&r, &|| session.symgs_step());
+        let rz_new: f32 = r.iter().zip(&z).map(|(a, b)| a * b).sum();
+        let beta = rz_new / rz_old;
+        for i in 0..n {
+            p[i] = z[i] + beta * p[i];
+        }
+        rz_old = rz_new;
+    }
+    let ax = csr.spmv_alloc(&x);
+    let rel = ax.iter().zip(&b).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt()
+        / b.iter().map(|v| v * v).sum::<f32>().sqrt();
+    assert!(
+        rel < 1e-2,
+        "{PCG_ITERS} SymGS-PCG iterations must cut the relative residual below 1e-2 \
+         on a diagonally dominant SPD system (got {rel:.2e})"
+    );
+    drop(session);
+
+    let stats = pool.stats().expect("stats");
+    let total = (4 * DIRECT + 2 * PCG_ITERS + 1) as u64;
+    assert_eq!(stats.requests, total, "every direct request and session step is a request");
+    assert_eq!(stats.launches, total, "sequential native dispatch: one launch per request");
+    assert_eq!(stats.session_steps, (2 * PCG_ITERS + 1) as u64);
+    let kind_requests = |kind: &str| -> u64 {
+        stats.arm_profiles.iter().filter(|p| p.kind == kind).map(|p| p.requests).sum()
+    };
+    let (spmv_req, tri_req, gs_req) =
+        (kind_requests("spmv"), kind_requests("sptrsv"), kind_requests("symgs"));
+    assert_eq!(
+        (spmv_req, tri_req, gs_req),
+        ((DIRECT + PCG_ITERS) as u64, (2 * DIRECT) as u64, (DIRECT + PCG_ITERS + 1) as u64),
+        "per-kind arm attribution must account for every request exactly"
+    );
+    let count_of = |name: &str| {
+        stats.stage_stats.iter().find(|s| s.stage.name() == name).map_or(0, |s| s.hist.count)
+    };
+    assert_eq!(count_of("solve_exec"), (3 * DIRECT) as u64, "direct solves land in solve_exec");
+    assert_eq!(count_of("session_step"), stats.session_steps);
+
+    let mut t = Table::new(
+        "E2E — solver chain: SymGS-preconditioned CG via one session + direct solve \
+         requests (1 worker, native)",
+        &["metric", "value"],
+    );
+    for (metric, value) in [
+        ("requests", stats.requests),
+        ("launches", stats.launches),
+        ("session_steps", stats.session_steps),
+        ("spmv_requests", spmv_req),
+        ("sptrsv_requests", tri_req),
+        ("symgs_requests", gs_req),
+        ("solve_exec_stage", count_of("solve_exec")),
+        ("session_step_stage", count_of("session_step")),
+        // byte ledger: reported for the trajectory, not baseline-gated
+        ("marshalled_bytes", stats.marshalled_bytes),
+        ("elided_bytes", stats.elided_bytes),
+    ] {
+        t.row(vec![metric.to_string(), value.to_string()]);
+    }
+    t.emit("e2e_solver_chain");
+    t.emit_json("e2e_solver_chain");
 }
 
 /// Part 4 — stage decomposition: a fixed sequential workload (96

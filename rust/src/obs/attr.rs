@@ -16,9 +16,14 @@ use super::journal::{EventKind, Journal};
 use crate::gpusim::Measurement;
 use crate::online::bandit::N_ARMS;
 use crate::online::JointDecision;
+use crate::sparse::KernelKind;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// Attribution cells: one per (kernel kind, joint arm) so SpMV and
+/// solve (SpTRSV / SymGS) traffic never share a ledger row.
+pub const N_CELLS: usize = KernelKind::N * N_ARMS;
 
 /// Minimum requests an arm must serve inside a generation window before
 /// its mean is considered evidence for an `ArmShift`.
@@ -52,11 +57,13 @@ struct GenState {
 /// the paper's four metrics attributed to it.
 #[derive(Debug, Clone)]
 pub struct ArmProfile {
+    /// Kernel-kind label (`spmv`/`sptrsv`/`symgs`).
+    pub kind: String,
     /// Sparse format name (`csr`/`ell`/...).
     pub format: String,
     /// Compile-knob label (`tb256/r64/default` style).
     pub knobs: String,
-    /// Flat joint arm index.
+    /// Flat joint arm index (within the kind).
     pub arm: usize,
     pub requests: u64,
     /// Request-weighted exec time (seconds).
@@ -85,17 +92,18 @@ impl Default for ArmAttr {
 impl ArmAttr {
     pub fn new() -> Self {
         ArmAttr {
-            cells: (0..N_ARMS).map(|_| ArmCell::default()).collect(),
+            cells: (0..N_CELLS).map(|_| ArmCell::default()).collect(),
             generation: AtomicU64::new(1),
             gen_state: Mutex::new(GenState {
                 version: 1,
-                mark: vec![(0, 0); N_ARMS],
-                prev_mean_nj: vec![None; N_ARMS],
+                mark: vec![(0, 0); N_CELLS],
+                prev_mean_nj: vec![None; N_CELLS],
             }),
         }
     }
 
-    /// Attribute `requests` served requests to `d`'s arm.
+    /// Attribute `requests` served SpMV requests to `d`'s arm — the
+    /// product-path shorthand for [`ArmAttr::record_kind`].
     /// `exec_weighted` is the request-weighted exec time (a coalesced
     /// batch of k contributes k * per-product time) and `m` the
     /// gpusim-modeled per-product measurement.
@@ -106,10 +114,22 @@ impl ArmAttr {
         exec_weighted: Duration,
         m: &Measurement,
     ) {
+        self.record_kind(KernelKind::Spmv, d, requests, exec_weighted, m);
+    }
+
+    /// Attribute `requests` served requests of `kind` to `d`'s arm.
+    pub fn record_kind(
+        &self,
+        kind: KernelKind,
+        d: JointDecision,
+        requests: u64,
+        exec_weighted: Duration,
+        m: &Measurement,
+    ) {
         if requests == 0 {
             return;
         }
-        let cell = &self.cells[d.arm_index()];
+        let cell = &self.cells[kind.class_id() * N_ARMS + d.arm_index()];
         cell.requests.fetch_add(requests, Ordering::Relaxed);
         cell.exec_ns.fetch_add(exec_weighted.as_nanos() as u64, Ordering::Relaxed);
         let nj = (m.energy_j * 1e9).round().max(0.0) as u64;
@@ -141,8 +161,12 @@ impl ArmAttr {
                     if prev > 0.0 {
                         let ratio = mean / prev;
                         if !(SHIFT_BAND.0..=SHIFT_BAND.1).contains(&ratio) {
+                            // the event names the joint arm; the shift
+                            // windows themselves are kind-separated, so
+                            // solve traffic can never drag an SpMV
+                            // arm's mean across the band
                             journal.emit(EventKind::ArmShift {
-                                arm: JointDecision::from_arm(i),
+                                arm: JointDecision::from_arm(i % N_ARMS),
                                 generation: version,
                                 ratio_pct: (ratio * 100.0).round() as u64,
                             });
@@ -162,8 +186,9 @@ impl ArmAttr {
         self.generation.load(Ordering::Relaxed)
     }
 
-    /// Profiles for every arm that served at least one request, in arm
-    /// order (at most [`N_ARMS`] rows — bounded label cardinality).
+    /// Profiles for every (kind, arm) cell that served at least one
+    /// request, in (kind, arm) order (at most [`N_CELLS`] rows —
+    /// bounded label cardinality, see `tools/metrics_lint.py`).
     pub fn snapshot(&self) -> Vec<ArmProfile> {
         let mut out = Vec::new();
         for (i, cell) in self.cells.iter().enumerate() {
@@ -171,12 +196,14 @@ impl ArmAttr {
             if requests == 0 {
                 continue;
             }
-            let d = JointDecision::from_arm(i);
+            let kind = KernelKind::from_class_id(i / N_ARMS).expect("cell index in range");
+            let d = JointDecision::from_arm(i % N_ARMS);
             let rf = requests as f64;
             out.push(ArmProfile {
+                kind: kind.name().to_string(),
                 format: d.format.to_string(),
                 knobs: d.choice.to_string(),
-                arm: i,
+                arm: i % N_ARMS,
                 requests,
                 exec_s: cell.exec_ns.load(Ordering::Relaxed) as f64 * 1e-9,
                 energy_j: cell.energy_nj.load(Ordering::Relaxed) as f64 * 1e-9,
@@ -269,5 +296,29 @@ mod tests {
         // replayed/stale versions are no-ops
         attr.mark_generation(4, &journal);
         assert_eq!(attr.generation(), 4);
+    }
+
+    #[test]
+    fn kinds_attribute_to_separate_cells() {
+        let attr = ArmAttr::new();
+        let d = arm(Format::Csr);
+        attr.record(d, 3, Duration::from_micros(30), &meas(1e-6));
+        attr.record_kind(KernelKind::Sptrsv, d, 2, Duration::from_micros(200), &meas(4e-6));
+        attr.record_kind(KernelKind::Symgs, d, 1, Duration::from_micros(500), &meas(8e-6));
+        let prof = attr.snapshot();
+        assert_eq!(prof.len(), 3, "one row per kind, same joint arm");
+        let by_kind = |k: &str| prof.iter().find(|p| p.kind == k).unwrap();
+        assert_eq!(by_kind("spmv").requests, 3);
+        assert_eq!(by_kind("sptrsv").requests, 2);
+        assert_eq!(by_kind("symgs").requests, 1);
+        for p in &prof {
+            assert_eq!(p.arm, d.arm_index(), "arm index stays kind-relative");
+            assert_eq!(p.format, "csr");
+        }
+        // kind-major, arm-minor snapshot order
+        assert_eq!(
+            prof.iter().map(|p| p.kind.as_str()).collect::<Vec<_>>(),
+            vec!["spmv", "sptrsv", "symgs"]
+        );
     }
 }

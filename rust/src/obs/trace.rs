@@ -36,6 +36,9 @@ pub enum Stage {
     Exec,
     /// Kernel dispatch through a true SpMM batch path.
     SpmmExec,
+    /// Kernel dispatch of a solve (SpTRSV / SymGS) — the sequential
+    /// per-vector kernel class, never batched into an SpMM launch.
+    SolveExec,
     /// One iterative-session step, end to end.
     SessionStep,
     /// Result marshalling back to the caller.
@@ -46,12 +49,13 @@ pub enum Stage {
 pub const N_STAGES: usize = Stage::ALL.len();
 
 impl Stage {
-    pub const ALL: [Stage; 7] = [
+    pub const ALL: [Stage; 8] = [
         Stage::QueueWait,
         Stage::BatchWait,
         Stage::Convert,
         Stage::Exec,
         Stage::SpmmExec,
+        Stage::SolveExec,
         Stage::SessionStep,
         Stage::Reply,
     ];
@@ -64,6 +68,7 @@ impl Stage {
             Stage::Convert => "convert",
             Stage::Exec => "exec",
             Stage::SpmmExec => "spmm_exec",
+            Stage::SolveExec => "solve_exec",
             Stage::SessionStep => "session_step",
             Stage::Reply => "reply",
         }

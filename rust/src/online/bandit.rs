@@ -33,7 +33,7 @@ use crate::coordinator::compile_time::CompileChoice;
 use crate::features::Features;
 use crate::gen::Rng;
 use crate::gpusim::MemConfig;
-use crate::sparse::Format;
+use crate::sparse::{Format, KernelKind};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -162,6 +162,15 @@ pub fn bucket_of(f: &Features) -> u64 {
     (n << 18) | (avg << 12) | (std << 6) | ell
 }
 
+/// Kind-qualified feature bucket: the kernel kind is part of the
+/// request class, so SpMV and solve (SpTRSV / SymGS) evidence for the
+/// same matrix lands in DISTINCT buckets and a solve's cost profile can
+/// never skew the product arms (or vice versa). The kind id sits above
+/// [`bucket_of`]'s feature bits (n occupies bits 18..24).
+pub fn bucket_of_kind(f: &Features, kind: KernelKind) -> u64 {
+    bucket_of(f) | ((kind.class_id() as u64) << 24)
+}
+
 /// Epsilon-greedy explorer over joint arms, count-balanced until the
 /// evidence floor, per-arm UCB after.
 pub struct Bandit {
@@ -261,6 +270,13 @@ impl Bandit {
     /// per dispatch regardless of annealing or the UCB floor, so the
     /// schedule stays deterministic per seed.
     pub fn route(&self, feats: &Features, default: Decision) -> RouteChoice {
+        self.route_kind(KernelKind::Spmv, feats, default)
+    }
+
+    /// [`route`](Self::route) with an explicit kernel kind: solve
+    /// dispatches explore in their own kind-qualified buckets (see
+    /// [`bucket_of_kind`]) so SpMV and SpTRSV/SymGS evidence never mix.
+    pub fn route_kind(&self, kind: KernelKind, feats: &Features, default: Decision) -> RouteChoice {
         let rate = self.explore_rate();
         if rate <= 0.0 {
             return RouteChoice::chosen(default);
@@ -269,7 +285,7 @@ impl Bandit {
         let draw = st.rng.f64();
         let arms = st
             .buckets
-            .entry(bucket_of(feats))
+            .entry(bucket_of_kind(feats, kind))
             .or_insert_with(|| Box::new([ArmStats::default(); N_ARMS]));
         let default_arm = default.arm_index();
         // The weakest alternative FORMAT's evidence (knob arms summed);
@@ -315,10 +331,22 @@ impl Bandit {
 
     /// Credit an observed objective value to an arm (running mean).
     pub fn observe(&self, feats: &Features, decision: Decision, objective_value: f64) {
+        self.observe_kind(KernelKind::Spmv, feats, decision, objective_value);
+    }
+
+    /// [`observe`](Self::observe) with an explicit kernel kind — must
+    /// match the kind the dispatch was routed with.
+    pub fn observe_kind(
+        &self,
+        kind: KernelKind,
+        feats: &Features,
+        decision: Decision,
+        objective_value: f64,
+    ) {
         let mut st = self.state.lock().expect("bandit lock");
         let arms = st
             .buckets
-            .entry(bucket_of(feats))
+            .entry(bucket_of_kind(feats, kind))
             .or_insert_with(|| Box::new([ArmStats::default(); N_ARMS]));
         let arm = &mut arms[decision.arm_index()];
         arm.observations += 1;
@@ -328,8 +356,13 @@ impl Bandit {
     /// Snapshot of one bucket's arms, `Decision::from_arm` order
     /// (stats/debug aid).
     pub fn arms(&self, feats: &Features) -> Vec<ArmStats> {
+        self.arms_kind(KernelKind::Spmv, feats)
+    }
+
+    /// [`arms`](Self::arms) for an explicit kernel kind's bucket.
+    pub fn arms_kind(&self, kind: KernelKind, feats: &Features) -> Vec<ArmStats> {
         let st = self.state.lock().expect("bandit lock");
-        match st.buckets.get(&bucket_of(feats)) {
+        match st.buckets.get(&bucket_of_kind(feats, kind)) {
             Some(a) => a.to_vec(),
             None => vec![ArmStats::default(); N_ARMS],
         }
@@ -496,6 +529,25 @@ mod tests {
             (800..1200).contains(&explored),
             "~25% of 4000 dispatches should explore, got {explored}"
         );
+    }
+
+    #[test]
+    fn kinds_get_disjoint_buckets_and_evidence() {
+        let b = Bandit::new(1.0, 11);
+        let f = feats(900.0, 7.0);
+        let d = fmt_default(Format::Csr);
+        assert_eq!(bucket_of_kind(&f, KernelKind::Spmv), bucket_of(&f), "spmv is the plain bucket");
+        let keys: std::collections::HashSet<u64> =
+            KernelKind::ALL.iter().map(|k| bucket_of_kind(&f, *k)).collect();
+        assert_eq!(keys.len(), KernelKind::N, "each kind must hash to its own bucket");
+        // evidence credited under one kind is invisible to the others
+        b.observe_kind(KernelKind::Sptrsv, &f, d, 4.0);
+        assert_eq!(b.arms_kind(KernelKind::Sptrsv, &f)[d.arm_index()].observations, 1);
+        assert_eq!(b.arms(&f)[d.arm_index()].observations, 0);
+        assert_eq!(b.arms_kind(KernelKind::Symgs, &f)[d.arm_index()].observations, 0);
+        // routing a solve creates a second bucket, not more state in the spmv one
+        let _ = b.route_kind(KernelKind::Symgs, &f, d);
+        assert_eq!(b.buckets(), 2);
     }
 
     #[test]

@@ -201,6 +201,19 @@ impl Online {
         self.bandit.route(feats, decided)
     }
 
+    /// [`route`](Self::route) for an explicit kernel kind: solves
+    /// (SpTRSV / SymGS) explore in kind-qualified buckets so their
+    /// evidence never mixes with SpMV's (the kind is part of the
+    /// request class).
+    pub fn route_kind(
+        &self,
+        kind: crate::sparse::KernelKind,
+        feats: &Features,
+        decided: JointDecision,
+    ) -> RouteChoice {
+        self.bandit.route_kind(kind, feats, decided)
+    }
+
     /// Current exploration rate (live value, not the configured one).
     pub fn explore_rate(&self) -> f64 {
         self.bandit.explore_rate()
@@ -220,7 +233,8 @@ impl Online {
             Objective::Latency => obs.measured_latency_s,
             _ => self.objective.value(&obs.modeled),
         };
-        self.bandit.observe(
+        self.bandit.observe_kind(
+            obs.kind,
             &obs.features,
             JointDecision { format: obs.format, choice: obs.choice },
             value,
@@ -371,6 +385,15 @@ impl Online {
         self.bandit.arms(feats)
     }
 
+    /// [`arms`](Self::arms) for an explicit kernel kind's bucket.
+    pub fn arms_kind(
+        &self,
+        kind: crate::sparse::KernelKind,
+        feats: &Features,
+    ) -> Vec<bandit::ArmStats> {
+        self.bandit.arms_kind(kind, feats)
+    }
+
     /// Exploration picks made through the per-arm UCB scorer.
     pub fn ucb_routes(&self) -> u64 {
         self.bandit.ucb_routes()
@@ -389,6 +412,7 @@ mod tests {
         let feats = crate::features::extract_coo(coo);
         Observation {
             matrix_id: 0,
+            kind: crate::sparse::KernelKind::Spmv,
             features: feats,
             format,
             choice: crate::coordinator::compile_time::CompileChoice::serving_default(),

@@ -21,7 +21,7 @@ use crate::dataset::labels::{arch_feature, Example};
 use crate::dataset::Record;
 use crate::features::Features;
 use crate::gpusim::{KernelConfig, Measurement, Objective};
-use crate::sparse::Format;
+use crate::sparse::{Format, KernelKind};
 use anyhow::{bail, Context, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -40,6 +40,10 @@ pub fn model_config(format: Format) -> KernelConfig {
 #[derive(Debug, Clone, Copy)]
 pub struct Observation {
     pub matrix_id: u64,
+    /// Kernel class the dispatch executed (SpMV, SpTRSV, or SymGS).
+    /// Part of the request class: the bandit buckets evidence per kind,
+    /// and only SpMV observations feed the format router's training.
+    pub kind: KernelKind,
     pub features: Features,
     /// Format the dispatch executed in.
     pub format: Format,
@@ -119,7 +123,7 @@ impl Observer {
 /// window checkpoints through `dataset::store` across pool restarts.
 /// A `Record` has no slots for the per-dispatch bookkeeping, so the
 /// matrix-name field carries it:
-/// `ckpt-<matrix id>-<requests>-<explored>-<measured latency f64 bits>`
+/// `ckpt-<matrix id>-<requests>-<explored>-<measured latency f64 bits>-<kind id>`
 /// (hex fields). Features and the modeled measurement round-trip
 /// bit-exactly through the store's shortest-unique float formatting;
 /// the config slot carries the executed format AND knob decision
@@ -129,11 +133,12 @@ pub fn to_records(obs: &[Observation], arch: &str) -> Vec<Record> {
     obs.iter()
         .map(|o| Record {
             matrix: format!(
-                "ckpt-{:016x}-{:016x}-{}-{:016x}",
+                "ckpt-{:016x}-{:016x}-{}-{:016x}-{}",
                 o.matrix_id,
                 o.requests,
                 u8::from(o.explored),
-                o.measured_latency_s.to_bits()
+                o.measured_latency_s.to_bits(),
+                o.kind.class_id()
             ),
             arch: arch.to_string(),
             config: o.choice.config_for(o.format),
@@ -145,13 +150,15 @@ pub fn to_records(obs: &[Observation], arch: &str) -> Vec<Record> {
 
 /// Decode a checkpoint written by [`to_records`]. Rejects records whose
 /// matrix name does not carry the checkpoint encoding — a checkpoint
-/// file holds nothing else, so a mismatch means the wrong file.
+/// file holds nothing else, so a mismatch means the wrong file. A
+/// 5-field name (checkpoints written before solve kinds existed) is
+/// accepted and decodes as `kind=spmv`.
 pub fn from_records(records: &[Record]) -> Result<Vec<Observation>> {
     records
         .iter()
         .map(|r| {
             let fields: Vec<&str> = r.matrix.split('-').collect();
-            if fields.len() != 5 || fields[0] != "ckpt" {
+            if !(fields.len() == 5 || fields.len() == 6) || fields[0] != "ckpt" {
                 bail!("not an observation checkpoint record: {}", r.matrix);
             }
             let matrix_id = u64::from_str_radix(fields[1], 16).context("ckpt matrix id")?;
@@ -162,8 +169,17 @@ pub fn from_records(records: &[Record]) -> Result<Vec<Observation>> {
                 other => bail!("ckpt explored flag {other}"),
             };
             let lat_bits = u64::from_str_radix(fields[4], 16).context("ckpt latency bits")?;
+            let kind = match fields.get(5) {
+                None => KernelKind::Spmv,
+                Some(id) => {
+                    let id: usize = id.parse().context("ckpt kind id")?;
+                    KernelKind::from_class_id(id)
+                        .with_context(|| format!("ckpt kind id {id} out of range"))?
+                }
+            };
             Ok(Observation {
                 matrix_id,
+                kind,
                 features: r.features,
                 format: r.config.format,
                 choice: CompileChoice::from_config(&r.config),
@@ -255,12 +271,21 @@ impl ArmAgg {
 /// measurement: measured wall latency for `Objective::Latency` (the
 /// serving truth), the gpusim model for the energy-family objectives
 /// (the paper's sensor stand-in).
+///
+/// Only `kind=spmv` observations contribute: the format router and the
+/// knob optimizer predict SpMV cost, and a solve's sequential sweep has
+/// a different cost surface — letting SpTRSV/SymGS latencies label
+/// "best format for SpMV" would poison the models. Solve evidence
+/// stays in the bandit's kind-qualified buckets instead.
 pub fn to_training(obs: &[Observation], objective: Objective, arch: &str) -> TrainingDelta {
     // (feature_key) -> (features, per-(format, knob-arm) aggregates);
     // insertion order kept so retraining is deterministic.
     type Cells = Vec<(Format, usize, ArmAgg)>;
     let mut groups: Vec<(u64, Features, Cells)> = Vec::new();
     for o in obs {
+        if o.kind != KernelKind::Spmv {
+            continue;
+        }
         let key = feature_key(&o.features);
         let idx = match groups.iter().position(|(k, _, _)| *k == key) {
             Some(i) => i,
@@ -386,6 +411,7 @@ mod tests {
     fn obs(n: f64, format: Format, energy: f64, lat: f64) -> Observation {
         Observation {
             matrix_id: n as u64,
+            kind: KernelKind::Spmv,
             features: feats(n),
             format,
             choice: CompileChoice::serving_default(),
@@ -462,6 +488,55 @@ mod tests {
             assert_eq!(got.features, orig.features);
             assert_eq!(got.modeled, orig.modeled);
         }
+    }
+
+    #[test]
+    fn checkpoint_kind_roundtrips_and_legacy_records_decode_as_spmv() {
+        let mut solve = obs(5.0, Format::Csr, 1.0, 2e-6);
+        solve.kind = KernelKind::Sptrsv;
+        let mut gs = obs(6.0, Format::Ell, 2.0, 3e-6);
+        gs.kind = KernelKind::Symgs;
+        let records = to_records(&[solve, gs], "a");
+        assert!(records[0].matrix.ends_with("-1"));
+        assert!(records[1].matrix.ends_with("-2"));
+        let back = from_records(&records).unwrap();
+        assert_eq!(back[0].kind, KernelKind::Sptrsv);
+        assert_eq!(back[1].kind, KernelKind::Symgs);
+        // pre-solve checkpoints have 5 dash-fields and no kind: Spmv
+        let mut legacy = to_records(&[obs(7.0, Format::Csr, 1.0, 1e-6)], "a");
+        legacy[0].matrix =
+            legacy[0].matrix.rsplit_once('-').expect("6 fields").0.to_string();
+        assert_eq!(legacy[0].matrix.split('-').count(), 5);
+        let back = from_records(&legacy).unwrap();
+        assert_eq!(back[0].kind, KernelKind::Spmv);
+        // an out-of-range kind id is still a decode error, not a default
+        let mut bad = to_records(&[obs(8.0, Format::Csr, 1.0, 1e-6)], "a");
+        bad[0].matrix = format!("{}-9", legacy[0].matrix);
+        assert!(from_records(&bad).is_err());
+    }
+
+    #[test]
+    fn training_delta_ignores_solve_observations() {
+        // Same matrix: SpMV says ELL wins; a flood of fast SpTRSV
+        // observations under CSR must not flip the format label, and
+        // solve-only matrices must produce no records at all.
+        let mut buf = vec![
+            obs(100.0, Format::Csr, 4.0, 4e-6),
+            obs(100.0, Format::Ell, 1.0, 1e-6),
+        ];
+        for _ in 0..8 {
+            let mut s = obs(100.0, Format::Csr, 0.01, 1e-8);
+            s.kind = KernelKind::Sptrsv;
+            buf.push(s);
+        }
+        let mut solve_only = obs(200.0, Format::Csr, 1.0, 1e-6);
+        solve_only.kind = KernelKind::Symgs;
+        buf.push(solve_only);
+        let delta = to_training(&buf, Objective::Energy, "GTX1650m-Turing");
+        assert_eq!(delta.examples.len(), 1);
+        assert_eq!(delta.examples[0].format_class, Format::Ell.class_id());
+        assert_eq!(delta.records.len(), 2, "solve observations feed no value records");
+        assert!((delta.records[0].m.energy_j - 4.0).abs() < 1e-12, "csr mean unpolluted");
     }
 
     #[test]

@@ -132,6 +132,7 @@ mod tests {
         let feats = features::extract_csr(&coo_to_csr(coo));
         let mk = |format: Format, energy: f64| Observation {
             matrix_id: 1,
+            kind: crate::sparse::KernelKind::Spmv,
             features: feats,
             format,
             choice: CompileChoice::serving_default(),
@@ -195,6 +196,7 @@ mod tests {
         let winner = CompileChoice { tb_size: 64, maxrregcount: 32, mem: MemConfig::PreferL1 };
         let mk = |choice: CompileChoice, energy: f64| Observation {
             matrix_id: 2,
+            kind: crate::sparse::KernelKind::Spmv,
             features: feats,
             format: Format::Ell,
             choice,

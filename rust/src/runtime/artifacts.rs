@@ -18,6 +18,11 @@ pub enum Kind {
     /// launch serves a whole coalesced request group.
     Spmm,
     Power,
+    /// Sparse triangular solve `T x = b` (lower/upper per the `lo`
+    /// extra: `lo=1` forward/lower, `lo=0` backward/upper).
+    Sptrsv,
+    /// One symmetric Gauss-Seidel sweep (forward + backward pass).
+    Symgs,
 }
 
 /// One compiled variant (a parsed manifest row).
@@ -54,6 +59,13 @@ impl ArtifactSpec {
     /// (`nc` in the manifest extras; 1 for plain SpMV variants).
     pub fn ncols(&self) -> usize {
         self.extra.get("nc").copied().unwrap_or(1).max(1)
+    }
+
+    /// Triangle side of an SpTRSV artifact: `lo=1` solves the lower
+    /// triangle (forward sweep), `lo=0` the upper. Defaults to lower —
+    /// the forward-substitution case every emitter starts from.
+    pub fn lower(&self) -> bool {
+        self.extra.get("lo").copied().unwrap_or(1) != 0
     }
 }
 
@@ -96,7 +108,13 @@ impl ArtifactIndex {
                 "spmv" => Kind::Spmv,
                 "spmm" => Kind::Spmm,
                 "power" => Kind::Power,
-                other => bail!("unknown artifact kind {other}"),
+                "sptrsv" => Kind::Sptrsv,
+                "symgs" => Kind::Symgs,
+                // UNKNOWN kinds are SKIPPED, not errors — same leniency
+                // contract as unknown extras below: a newer emitter's
+                // inventory must still load on an older runtime, which
+                // simply never selects the rows it cannot serve.
+                _ => continue,
             };
             let fmt = Format::parse(c[2]).with_context(|| format!("bad format {}", c[2]))?;
             let mut extra = HashMap::new();
@@ -111,7 +129,7 @@ impl ArtifactIndex {
                     // key we DO interpret (batch bucket, slice/block
                     // dims) still fails fast — silently defaulting
                     // those would mis-marshal at serve time.
-                    let known = |k: &str| ["nc", "h", "bh", "bw", "xseg"].contains(&k);
+                    let known = |k: &str| ["nc", "h", "bh", "bw", "xseg", "lo"].contains(&k);
                     let Some((k, v)) = kv.split_once('=') else {
                         if known(kv) {
                             bail!("manifest line {}: extra {kv} is missing its value", ln + 2);
@@ -171,6 +189,34 @@ impl ArtifactIndex {
                 && s.rows >= dims.n_rows
                 && s.cols >= dims.n_cols
                 && s.width >= Self::required_width(fmt, dims)
+        };
+        let candidates: Vec<&ArtifactSpec> = self.specs.iter().filter(fits).collect();
+        Self::pick_in_smallest_bucket(candidates, choice)
+    }
+
+    /// Select the smallest enclosing solve variant (`Kind::Sptrsv` /
+    /// `Kind::Symgs`) for a matrix in `fmt`, preferring the knob
+    /// mapping of `choice` exactly like SpMV selection. For SpTRSV,
+    /// `lower` filters on the artifact's triangle side (`lo` extra);
+    /// pass `None` for SymGS (a sweep is side-free). Returns `None`
+    /// when the inventory has no fitting row — callers fall back to the
+    /// native trait methods (`SpMv::sptrsv` / `SpMv::symgs_sweep`).
+    pub fn select_solve(
+        &self,
+        kind: Kind,
+        fmt: Format,
+        dims: &MatrixDims,
+        lower: Option<bool>,
+        choice: Option<(u32, u32, MemConfig)>,
+    ) -> Option<&ArtifactSpec> {
+        debug_assert!(matches!(kind, Kind::Sptrsv | Kind::Symgs));
+        let fits = |s: &&ArtifactSpec| {
+            s.kind == kind
+                && s.fmt == fmt
+                && s.rows >= dims.n_rows
+                && s.cols >= dims.n_cols
+                && s.width >= Self::required_width(fmt, dims)
+                && lower.is_none_or(|lo| s.lower() == lo)
         };
         let candidates: Vec<&ArtifactSpec> = self.specs.iter().filter(fits).collect();
         Self::pick_in_smallest_bucket(candidates, choice)
@@ -549,5 +595,107 @@ mod tests {
     fn missing_manifest_is_helpful_error() {
         let err = ArtifactIndex::load(Path::new("/nonexistent_dir_xyz")).unwrap_err();
         assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    /// PR 5 leniency contract, extended to the kind column: rows whose
+    /// `kind` this runtime predates must be skipped — never an error —
+    /// while every known kind keeps parsing next to them.
+    #[test]
+    fn unknown_manifest_kind_is_skipped_not_fatal() {
+        let d = tmpdir("unkind");
+        write_manifest(
+            &d,
+            &[
+                "e1\tspmv\tell\t256\t256\t16\t64\t8\tresident\t-\te1.hlo\tf32:1",
+                "z\tspmsvp\tell\t256\t256\t16\t64\t8\tresident\t-\tz.hlo\tf32:1",
+                "t1\tsptrsv\tcsr\t256\t256\t4096\t64\t8\tresident\tlo=1\tt1.hlo\tf32:1",
+                "g1\tsymgs\tcsr\t256\t256\t4096\t64\t8\tresident\t-\tg1.hlo\tf32:1",
+            ],
+        );
+        let idx = ArtifactIndex::load(&d).unwrap();
+        assert_eq!(idx.specs.len(), 3, "the unknown-kind row is dropped, the rest load");
+        assert!(idx.specs.iter().all(|s| s.name != "z"));
+        assert!(idx.specs.iter().any(|s| s.kind == Kind::Sptrsv));
+        assert!(idx.specs.iter().any(|s| s.kind == Kind::Symgs));
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    /// Solve selection: kind-filtered, triangle-side-filtered for
+    /// SpTRSV, smallest-bucket + knob-break like SpMV, and `None` (the
+    /// native-fallback signal) when nothing fits.
+    #[test]
+    fn solve_selection_filters_kind_and_triangle_side() {
+        let d = tmpdir("solve");
+        write_manifest(
+            &d,
+            &[
+                "tl\tsptrsv\tcsr\t256\t256\t4096\t64\t8\tresident\tlo=1\ttl.hlo\tf32:1",
+                "tu\tsptrsv\tcsr\t256\t256\t4096\t64\t8\tresident\tlo=0\ttu.hlo\tf32:1",
+                "tubig\tsptrsv\tcsr\t1024\t1024\t16384\t64\t8\tresident\tlo=0\ttubig.hlo\tf32:1",
+                "g\tsymgs\tcsr\t256\t256\t4096\t64\t8\tresident\t-\tg.hlo\tf32:1",
+                "gg\tsymgs\tcsr\t256\t256\t4096\t64\t8\tgather\t-\tgg.hlo\tf32:1",
+                "e1\tspmv\tcsr\t256\t256\t4096\t64\t8\tresident\t-\te1.hlo\tf32:1",
+            ],
+        );
+        let idx = ArtifactIndex::load(&d).unwrap();
+        assert!(idx.specs.iter().find(|s| s.name == "tl").unwrap().lower());
+        assert!(!idx.specs.iter().find(|s| s.name == "tu").unwrap().lower());
+        let dims = MatrixDims { n_rows: 200, n_cols: 200, nnz: 900, max_row_len: 9, bell_kb: 4 };
+        let lo = idx.select_solve(Kind::Sptrsv, Format::Csr, &dims, Some(true), None).unwrap();
+        assert_eq!(lo.name, "tl");
+        let up = idx.select_solve(Kind::Sptrsv, Format::Csr, &dims, Some(false), None).unwrap();
+        assert_eq!(up.name, "tu", "smallest bucket wins over tubig");
+        // knob preference breaks the SymGS placement tie like SpMV's
+        let g = idx
+            .select_solve(Kind::Symgs, Format::Csr, &dims, None, Some((64, 16, MemConfig::PreferL1)))
+            .unwrap();
+        assert_eq!(g.name, "gg");
+        // solve selection never returns spmv rows, and vice versa
+        assert!(idx.select_solve(Kind::Symgs, Format::Ell, &dims, None, None).is_none());
+        assert_eq!(idx.select(Format::Csr, &dims, None).unwrap().name, "e1");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    /// Property form of the leniency contract: ARBITRARY unknown kind
+    /// tokens (not just one hand-picked typo) are skipped row-by-row,
+    /// never an error, and never shadow the known rows beside them.
+    #[test]
+    fn prop_arbitrary_unknown_kinds_parse_leniently() {
+        use crate::testutil::assert_prop;
+        const KNOWN: [&str; 5] = ["spmv", "spmm", "power", "sptrsv", "symgs"];
+        assert_prop("unknown kinds are skipped, never fatal", 0xA7, 15, 24, |rng, size| {
+            const ALPHABET: &[u8] = b"abcdefghijklmnopqrstuvwxyz_";
+            let mut unknown = String::new();
+            while unknown.is_empty() || KNOWN.contains(&unknown.as_str()) {
+                unknown.clear();
+                for _ in 0..(1 + rng.below(8)) {
+                    unknown.push(ALPHABET[rng.below(ALPHABET.len())] as char);
+                }
+            }
+            let mut rows: Vec<String> = (0..1 + size % 4)
+                .map(|u| {
+                    format!(
+                        "u{u}\t{unknown}\tell\t256\t256\t16\t64\t8\tresident\t-\tu{u}.hlo\tf32:1"
+                    )
+                })
+                .collect();
+            // one known row with an unknown extra key rides along
+            rows.push(format!(
+                "k0\tspmv\tell\t256\t256\t16\t64\t8\tresident\tzz{}=7\tk0.hlo\tf32:1",
+                rng.below(100)
+            ));
+            let refs: Vec<&str> = rows.iter().map(|s| s.as_str()).collect();
+            let d = tmpdir("lenient");
+            write_manifest(&d, &refs);
+            let idx = ArtifactIndex::load(&d).map_err(|e| format!("load failed: {e:#}"))?;
+            std::fs::remove_dir_all(&d).ok();
+            if idx.specs.len() != 1 || idx.specs[0].name != "k0" {
+                return Err(format!(
+                    "kind '{unknown}': expected only k0 to survive, got {:?}",
+                    idx.specs.iter().map(|s| &s.name).collect::<Vec<_>>()
+                ));
+            }
+            Ok(())
+        });
     }
 }

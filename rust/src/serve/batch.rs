@@ -13,15 +13,43 @@
 
 use super::shard::ShardMsg;
 use super::Response;
+use crate::sparse::KernelKind;
 use anyhow::Result;
 use std::collections::VecDeque;
 use std::sync::Arc;
 use std::sync::mpsc::{Receiver, Sender};
 use std::time::{Duration, Instant};
 
-/// One queued product request.
+/// Kernel class of a queued job, with the per-class options that change
+/// what one dispatch computes. Part of the coalescing group key: a
+/// group executes as ONE homogeneous dispatch, so jobs of different
+/// kinds (or opposite triangle sides) never share a launch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    /// y = A x (the batchable product path).
+    Spmv,
+    /// Triangular solve x = T⁻¹ b against the matrix's lower (forward)
+    /// or upper (backward) triangle + diagonal.
+    Sptrsv { lower: bool },
+    /// One symmetric Gauss–Seidel sweep from a zero initial guess.
+    Symgs,
+}
+
+impl JobKind {
+    /// The request class the bandit/attribution buckets by.
+    pub fn kind(self) -> KernelKind {
+        match self {
+            JobKind::Spmv => KernelKind::Spmv,
+            JobKind::Sptrsv { .. } => KernelKind::Sptrsv,
+            JobKind::Symgs => KernelKind::Symgs,
+        }
+    }
+}
+
+/// One queued request (product or solve; see [`JobKind`]).
 pub struct Job {
     pub matrix_id: u64,
+    pub kind: JobKind,
     /// Shared payload: enqueue is a refcount bump, never a vector copy
     /// — the client's buffer IS the buffer the dispatch reads.
     pub x: Arc<[f32]>,
@@ -77,14 +105,17 @@ pub(crate) fn collect_batch(
     batch
 }
 
-/// Group a batch by matrix id, preserving first-seen order (and arrival
-/// order within each group).
-pub(crate) fn group_by_matrix(jobs: Vec<Job>) -> Vec<(u64, Vec<Job>)> {
-    let mut groups: Vec<(u64, Vec<Job>)> = Vec::new();
+/// Group a batch by (matrix id, job kind), preserving first-seen order
+/// (and arrival order within each group). The kind is part of the key:
+/// an SpMV group can ride an SpMM launch while a solve group for the
+/// same matrix executes sequentially next to it.
+pub(crate) fn group_by_matrix(jobs: Vec<Job>) -> Vec<((u64, JobKind), Vec<Job>)> {
+    let mut groups: Vec<((u64, JobKind), Vec<Job>)> = Vec::new();
     for job in jobs {
-        match groups.iter_mut().find(|(id, _)| *id == job.matrix_id) {
+        let key = (job.matrix_id, job.kind);
+        match groups.iter_mut().find(|(k, _)| *k == key) {
             Some((_, members)) => members.push(job),
-            None => groups.push((job.matrix_id, vec![job])),
+            None => groups.push((key, vec![job])),
         }
     }
     groups
@@ -97,7 +128,14 @@ mod tests {
 
     fn job(matrix_id: u64) -> Job {
         let (reply, _rx) = channel();
-        Job { matrix_id, x: vec![1.0].into(), enqueued: Instant::now(), deadline: None, reply }
+        Job {
+            matrix_id,
+            kind: JobKind::Spmv,
+            x: vec![1.0].into(),
+            enqueued: Instant::now(),
+            deadline: None,
+            reply,
+        }
     }
 
     #[test]
@@ -154,9 +192,37 @@ mod tests {
     fn groups_preserve_first_seen_and_arrival_order() {
         let jobs = vec![job(5), job(9), job(5), job(2), job(9), job(5)];
         let groups = group_by_matrix(jobs);
-        let ids: Vec<u64> = groups.iter().map(|(id, _)| *id).collect();
+        let ids: Vec<u64> = groups.iter().map(|((id, _), _)| *id).collect();
         assert_eq!(ids, vec![5, 9, 2]);
         let sizes: Vec<usize> = groups.iter().map(|(_, m)| m.len()).collect();
         assert_eq!(sizes, vec![3, 2, 1]);
+    }
+
+    #[test]
+    fn kinds_and_triangle_sides_split_groups() {
+        let solve = |id, lower| {
+            let mut j = job(id);
+            j.kind = JobKind::Sptrsv { lower };
+            j
+        };
+        let gs = |id| {
+            let mut j = job(id);
+            j.kind = JobKind::Symgs;
+            j
+        };
+        let jobs = vec![job(1), solve(1, true), job(1), solve(1, false), gs(1), solve(1, true)];
+        let groups = group_by_matrix(jobs);
+        let keys: Vec<(u64, JobKind)> = groups.iter().map(|(k, _)| *k).collect();
+        assert_eq!(
+            keys,
+            vec![
+                (1, JobKind::Spmv),
+                (1, JobKind::Sptrsv { lower: true }),
+                (1, JobKind::Sptrsv { lower: false }),
+                (1, JobKind::Symgs),
+            ]
+        );
+        let sizes: Vec<usize> = groups.iter().map(|(_, m)| m.len()).collect();
+        assert_eq!(sizes, vec![2, 2, 1, 1]);
     }
 }

@@ -75,7 +75,9 @@ pub mod shard;
 pub mod telemetry;
 
 pub use backend::BackendSpec;
+pub use batch::JobKind;
 pub use pool::{Pool, PoolConfig, PoolStats, ScaleOutConfig, Session};
+pub use shard::StepOp;
 pub use telemetry::{MatrixStats, Telemetry};
 
 use crate::sparse::Format;

@@ -16,8 +16,8 @@
 //! hot-swaps the router.
 
 use super::backend::BackendSpec;
-use super::batch::Job;
-use super::shard::{Shard, ShardCfg, ShardMsg};
+use super::batch::{Job, JobKind};
+use super::shard::{Shard, ShardCfg, ShardMsg, StepOp};
 use super::telemetry::{MatrixStats, Telemetry};
 use super::{Rejected, Response};
 use crate::coordinator::RunTimeOptimizer;
@@ -539,10 +539,14 @@ impl PoolStats {
             self.arm_generation as f64,
         );
         for p in &self.arm_profiles {
-            let labels = [("format", p.format.clone()), ("knobs", p.knobs.clone())];
+            let labels = [
+                ("kind", p.kind.clone()),
+                ("format", p.format.clone()),
+                ("knobs", p.knobs.clone()),
+            ];
             m.labeled_counter(
                 "spmv_arm_requests_total",
-                "Requests served per joint (format, knob) arm",
+                "Requests served per (kernel kind, format, knob) arm",
                 &labels,
                 p.requests as f64,
             );
@@ -842,6 +846,46 @@ impl Pool {
         x: impl Into<Arc<[f32]>>,
         deadline: Option<Duration>,
     ) -> Result<Receiver<Result<Response>>> {
+        self.submit_async(matrix_id, JobKind::Spmv, x, deadline)
+    }
+
+    /// Solve `T x = b` against the registered matrix's lower (forward,
+    /// `lower = true`) or upper (backward) triangle + diagonal, HPCG
+    /// style: entries strictly on the other side of the diagonal are
+    /// ignored, so a full matrix solves with its triangular part
+    /// without the client pre-splitting it. Errors on a non-square
+    /// matrix or a structurally/numerically zero diagonal pivot. Rides
+    /// the same admission queue, coalescing, exploration, and telemetry
+    /// path as [`Pool::product`] — grouped and attributed under
+    /// `kind=sptrsv`.
+    pub fn sptrsv(
+        &self,
+        matrix_id: u64,
+        b: impl Into<Arc<[f32]>>,
+        lower: bool,
+    ) -> Result<Response> {
+        self.submit_async(matrix_id, JobKind::Sptrsv { lower }, b, None)?
+            .recv()
+            .map_err(|_| anyhow!("serving pool dropped request"))?
+    }
+
+    /// One symmetric Gauss–Seidel sweep for `A x = b` from a zero
+    /// initial guess (forward then backward pass) — the smoother /
+    /// preconditioner application `M⁻¹ b`. Same admission path as
+    /// [`Pool::product`], attributed under `kind=symgs`.
+    pub fn symgs(&self, matrix_id: u64, b: impl Into<Arc<[f32]>>) -> Result<Response> {
+        self.submit_async(matrix_id, JobKind::Symgs, b, None)?
+            .recv()
+            .map_err(|_| anyhow!("serving pool dropped request"))?
+    }
+
+    fn submit_async(
+        &self,
+        matrix_id: u64,
+        kind: JobKind,
+        x: impl Into<Arc<[f32]>>,
+        deadline: Option<Duration>,
+    ) -> Result<Receiver<Result<Response>>> {
         let shard = match &self.control {
             Some(ctl) => self.admit(ctl, matrix_id, deadline)?,
             None => self.home_index(matrix_id),
@@ -854,6 +898,7 @@ impl Pool {
             .tx
             .send(ShardMsg::Product(Job {
                 matrix_id,
+                kind,
                 x: x.into(),
                 enqueued: Instant::now(),
                 deadline,
@@ -1251,7 +1296,7 @@ impl Session {
 
     /// `steps` chained products in one shard message.
     pub fn step_n(&self, steps: u64) -> Result<()> {
-        self.send_steps(steps, false)
+        self.send_op(steps, StepOp::Product { normalize: false })
     }
 
     /// One normalized power-iteration step x' = A x / ||A x|| (fused
@@ -1263,16 +1308,34 @@ impl Session {
 
     /// `steps` normalized power steps in one shard message.
     pub fn power_step_n(&self, steps: u64) -> Result<()> {
-        self.send_steps(steps, true)
+        self.send_op(steps, StepOp::Product { normalize: true })
     }
 
-    fn send_steps(&self, steps: u64, normalize: bool) -> Result<()> {
+    /// One in-session triangular solve x' = T⁻¹ x against the pinned
+    /// matrix's lower (`lower = true`) or upper triangle + diagonal.
+    /// The result replaces the session vector without surfacing — on
+    /// PJRT the sweep runs host-side, bouncing the vector through the
+    /// host once (charged to `marshalled_bytes`); the chain itself
+    /// never crosses the pool boundary.
+    pub fn sptrsv_step(&self, lower: bool) -> Result<()> {
+        self.send_op(1, StepOp::Sptrsv { lower })
+    }
+
+    /// One in-session symmetric Gauss–Seidel sweep x' = M⁻¹ x (forward
+    /// + backward pass from a zero guess) — the preconditioner
+    /// application of a CG-with-SymGS chain, device-/host-resident like
+    /// [`Session::sptrsv_step`].
+    pub fn symgs_step(&self) -> Result<()> {
+        self.send_op(1, StepOp::Symgs)
+    }
+
+    fn send_op(&self, steps: u64, op: StepOp) -> Result<()> {
         if steps == 0 {
             return Ok(());
         }
         let (ack, rx) = channel();
         self.tx
-            .send(ShardMsg::SessionStep { session: self.id, steps, normalize, ack })
+            .send(ShardMsg::SessionStep { session: self.id, steps, op, ack })
             .map_err(|_| anyhow!("serving pool stopped"))?;
         rx.recv().map_err(|_| anyhow!("serving pool dropped session step"))?
     }
@@ -1645,6 +1708,82 @@ mod tests {
         assert!((norm - 1.0).abs() < 1e-3, "power steps keep the vector normalized: {norm}");
     }
 
+    /// Diagonally dominant square system — every solve kind succeeds.
+    fn dd_system(n: usize, seed: u64) -> Coo {
+        let mut rng = gen::Rng::new(seed);
+        let mut coo = Coo::new(n, n);
+        let mut diag = vec![1.0f32; n];
+        for i in 0..n {
+            for d in 1..=2usize {
+                let j = (i + d) % n;
+                let v = (rng.f64() as f32) * 0.4 - 0.2;
+                coo.push(i, j, v);
+                diag[i] += v.abs();
+            }
+        }
+        for (i, d) in diag.into_iter().enumerate() {
+            coo.push(i, i, d);
+        }
+        coo
+    }
+
+    #[test]
+    fn solve_kinds_serve_end_to_end_and_attribute_separately() {
+        let pool = pool_with(test_router(), 1, 0);
+        let coo = dd_system(48, 11);
+        let csr = coo_to_csr(&coo);
+        let n = csr.n_rows;
+        pool.register(1, coo, 1000).unwrap();
+
+        // per-request solves match the native trait oracles bit-for-bit
+        // regardless of which format the router converted to (the solve
+        // bit-identity contract in sparse_props)
+        let b = input(n, 2);
+        let lo = pool.sptrsv(1, b.clone(), true).unwrap();
+        assert_eq!(lo.y, csr.sptrsv(&b, true).unwrap());
+        let up = pool.sptrsv(1, b.clone(), false).unwrap();
+        assert_eq!(up.y, csr.sptrsv(&b, false).unwrap());
+        let gs = pool.symgs(1, b.clone()).unwrap();
+        let mut want_gs = vec![0.0f32; n];
+        csr.symgs_sweep(&b, &mut want_gs).unwrap();
+        assert_eq!(gs.y, want_gs);
+        // plus one product: four requests across three kernel-kind arms
+        pool.product(1, b.clone()).unwrap();
+
+        let stats = pool.stats().unwrap();
+        assert_eq!(stats.requests, 4);
+        assert_eq!(stats.launches, 4, "native solves run one launch per vector");
+        let kinds: Vec<&str> = stats.arm_profiles.iter().map(|p| p.kind.as_str()).collect();
+        for k in ["spmv", "sptrsv", "symgs"] {
+            assert!(kinds.contains(&k), "missing {k} arm in {kinds:?}");
+        }
+        let sptrsv_reqs: u64 = stats
+            .arm_profiles
+            .iter()
+            .filter(|p| p.kind == "sptrsv")
+            .map(|p| p.requests)
+            .sum();
+        assert_eq!(sptrsv_reqs, 2, "both triangle sides attribute to the sptrsv cells");
+
+        // stage accounting: solve dispatches land in solve_exec, not exec
+        let text = pool.metrics_text().unwrap();
+        assert!(
+            text.contains("spmv_stage_seconds_bucket{stage=\"solve_exec\",le=\"+Inf\"} 3"),
+            "{text}"
+        );
+
+        // session solve steps run on the pinned conversion, same bits
+        let session = pool.open_session(1).unwrap();
+        session.write(b.clone()).unwrap();
+        session.sptrsv_step(true).unwrap();
+        assert_eq!(session.read().unwrap(), lo.y);
+        session.write(b.clone()).unwrap();
+        session.symgs_step().unwrap();
+        assert_eq!(session.read().unwrap(), want_gs);
+        let stats = pool.stats().unwrap();
+        assert_eq!(stats.session_steps, 2);
+    }
+
     #[test]
     fn session_survives_cache_eviction_pressure() {
         // capacity-1 cache, three matrices: products on the others keep
@@ -1847,6 +1986,7 @@ mod tests {
         assert_eq!(stats.arm_generation, 1, "no hot-swap yet");
         assert_eq!(stats.arm_profiles.len(), 1, "a frozen pool serves one arm per matrix");
         let p = &stats.arm_profiles[0];
+        assert_eq!(p.kind, "spmv", "product traffic attributes to the spmv cells");
         assert_eq!(p.requests, 6);
         assert!(p.exec_s > 0.0);
         assert!(p.energy_j > 0.0);
@@ -1854,8 +1994,10 @@ mod tests {
         assert!(p.mflops_per_watt > 0.0);
         let text = pool.metrics_text().unwrap();
         assert!(text.contains("spmv_arm_generation 1"), "{text}");
-        let line =
-            format!("spmv_arm_requests_total{{format=\"{}\",knobs=\"{}\"}} 6", p.format, p.knobs);
+        let line = format!(
+            "spmv_arm_requests_total{{kind=\"spmv\",format=\"{}\",knobs=\"{}\"}} 6",
+            p.format, p.knobs
+        );
         assert!(text.contains(&line), "{text}");
         assert!(text.contains("# TYPE spmv_arm_energy_joules_total counter"), "{text}");
         assert!(!text.contains("spmv_slo_status"), "no SLO families without an engine");

@@ -26,7 +26,7 @@
 //! execution.
 
 use super::backend::{Backend, BackendSpec};
-use super::batch::{collect_batch, group_by_matrix, Job};
+use super::batch::{collect_batch, group_by_matrix, Job, JobKind};
 use super::cache::Lru;
 use super::telemetry::{MatrixTelemetry, Telemetry};
 use super::Response;
@@ -37,7 +37,7 @@ use crate::obs::{EventKind, Stage, Trace};
 use crate::online::{JointDecision, Observation, Online, Policy, RouteChoice, SwapRouter};
 use crate::runtime::pjrt::{PreparedSession, PreparedSpmm, PreparedSpmv, SessionVec};
 use crate::sparse::convert::{self, AnyFormat, ConvertParams};
-use crate::sparse::{Coo, Csr, Format, SpMv};
+use crate::sparse::{Coo, Csr, Format, KernelKind, SpMv};
 use anyhow::{anyhow, bail, Result};
 use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
@@ -64,15 +64,42 @@ pub(crate) enum ShardMsg {
     SessionOpen { session: u64, matrix_id: u64, ack: Sender<Result<usize>> },
     /// Install the session's vector (host -> session boundary crossing).
     SessionWrite { session: u64, x: Arc<[f32]>, ack: Sender<Result<()>> },
-    /// Run `steps` chained products, feeding each y back as the next x
-    /// without surfacing it; `normalize` steps compute x' = A x / ||A x||.
-    SessionStep { session: u64, steps: u64, normalize: bool, ack: Sender<Result<()>> },
+    /// Run `steps` chained applications of `op`, feeding each result
+    /// back as the next x without surfacing it.
+    SessionStep { session: u64, steps: u64, op: StepOp, ack: Sender<Result<()>> },
     /// Copy the session's current vector out (session -> host crossing).
     SessionRead { session: u64, ack: Sender<Result<Vec<f32>>> },
     /// Fire-and-forget close (sent from the session handle's Drop).
     SessionClose { session: u64 },
     Status(Sender<ShardStatus>),
     Shutdown,
+}
+
+/// What one iterative-session step computes from the session's current
+/// vector. Products chain device-resident on PJRT; the solve ops run
+/// the native sweep on the pinned conversion, so on PJRT they bounce
+/// the vector through the host (charged to `marshalled_bytes` like any
+/// boundary crossing) — a CG-with-SymGS-preconditioner chain still
+/// crosses the POOL boundary zero times between steps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOp {
+    /// x' = A x, normalized to x' = A x / ||A x|| when asked.
+    Product { normalize: bool },
+    /// x' = T⁻¹ x against the pinned matrix's triangle + diagonal.
+    Sptrsv { lower: bool },
+    /// x' = one symmetric Gauss–Seidel sweep for A x' = x from a zero
+    /// initial guess (the preconditioner application M⁻¹ x).
+    Symgs,
+}
+
+impl StepOp {
+    fn kind(self) -> KernelKind {
+        match self {
+            StepOp::Product { .. } => KernelKind::Spmv,
+            StepOp::Sptrsv { .. } => KernelKind::Sptrsv,
+            StepOp::Symgs => KernelKind::Symgs,
+        }
+    }
 }
 
 /// Occupancy summary a shard reports to [`super::Pool::stats`].
@@ -330,7 +357,7 @@ fn worker_loop(
                 // Picked up: these jobs left the admission queue, so
                 // least-loaded routing stops counting them.
                 cfg.depth.fetch_sub(batch.len() as u64, Ordering::Relaxed);
-                for (id, jobs) in group_by_matrix(batch) {
+                for ((id, jk), jobs) in group_by_matrix(batch) {
                     execute_group(
                         &mut backend,
                         &online,
@@ -340,6 +367,7 @@ fn worker_loop(
                         &sessions,
                         &mut cache,
                         id,
+                        jk,
                         jobs,
                         collect_start,
                     );
@@ -361,7 +389,7 @@ fn worker_loop(
             ShardMsg::SessionWrite { session, x, ack } => {
                 let _ = ack.send(do_session_write(&telemetry, &mut sessions, session, x));
             }
-            ShardMsg::SessionStep { session, steps, normalize, ack } => {
+            ShardMsg::SessionStep { session, steps, op, ack } => {
                 let _ = ack.send(do_session_step(
                     &mut backend,
                     &online,
@@ -371,7 +399,7 @@ fn worker_loop(
                     &mut sessions,
                     session,
                     steps,
-                    normalize,
+                    op,
                 ));
             }
             ShardMsg::SessionRead { session, ack } => {
@@ -695,8 +723,11 @@ fn ensure_cached(
     }
 }
 
-/// Execute one coalesced group of requests for a single matrix as ONE
-/// SpMM dispatch.
+/// Execute one coalesced group of requests for a single (matrix, job
+/// kind) as ONE dispatch: SpMV groups ride the SpMM entry points;
+/// solve groups (SpTRSV / SymGS) run the sequential native sweep once
+/// per vector — on every backend, since a level-ordered dependency
+/// chain cannot ride a batched product launch.
 ///
 /// Stage-tracing contract (`cfg.tracing`): the boundaries `enqueued ->
 /// collect_start -> group_start -> exec_start -> exec_done -> reply`
@@ -714,9 +745,11 @@ fn execute_group(
     sessions: &HashMap<u64, SessionState>,
     cache: &mut Lru<CacheKey, Rc<CachedMatrix>>,
     id: u64,
+    jk: JobKind,
     jobs: Vec<Job>,
     collect_start: Instant,
 ) {
+    let kind = jk.kind();
     // Group-start boundary: batch-wait ends here; everything until the
     // dispatch (routing, cache repair, conversion) is the convert stage.
     let group_start = Instant::now();
@@ -726,6 +759,17 @@ fn execute_group(
         }
         return;
     };
+
+    // Solves invert against the diagonal, so they only make sense on a
+    // square system; reject the whole group up front.
+    if kind != KernelKind::Spmv && reg.csr.n_rows != reg.csr.n_cols {
+        let msg =
+            format!("{kind} requires a square matrix ({}x{})", reg.csr.n_rows, reg.csr.n_cols);
+        for job in jobs {
+            let _ = job.reply.send(Err(anyhow!("{msg}")));
+        }
+        return;
+    }
 
     // Validate lengths up front: malformed requests error individually
     // and never poison the batch.
@@ -747,9 +791,10 @@ fn execute_group(
     }
 
     // Closed loop, step "explore": one bandit consult per DISPATCH (not
-    // per request). A frozen pool skips this entirely.
+    // per request), bucketed by kernel kind so solve evidence and SpMV
+    // evidence never mix. A frozen pool skips this entirely.
     let mut route = match online {
-        Some(o) => o.route(&reg.features, reg.decision()),
+        Some(o) => o.route_kind(kind, &reg.features, reg.decision()),
         None => RouteChoice::chosen(reg.decision()),
     };
 
@@ -804,34 +849,58 @@ fn execute_group(
     // enqueue and kernel marshalling.
     let views: Vec<&[f32]> = xs.iter().map(|x| x.as_ref()).collect();
     let exec_start = Instant::now();
-    let (result, launches, spmm_path): (Result<Vec<Vec<f32>>>, u64, bool) = match backend {
-        Backend::Native => (Ok(cached.matrix.as_spmv().spmm(&views)), 1, true),
-        Backend::Pjrt(engine) => {
-            // a lone request rides the leaner per-vector artifact; the
-            // bucket-padded SpMM launch only pays off with a batch
-            let use_spmm = cached
-                .prepared_spmm
-                .as_ref()
-                .filter(|_| batch_size > 1 || cached.prepared.is_none());
-            if let Some(spmm) = use_spmm {
-                (
-                    engine.spmm_prepared(spmm, &views),
-                    spmm.launches_for(batch_size) as u64,
-                    true,
-                )
-            } else if let Some(prep) = &cached.prepared {
-                (engine.spmv_batch_prepared(prep, &views), batch_size as u64, false)
-            } else {
-                (
-                    xs.iter()
-                        .map(|x| {
-                            engine.spmv(&cached.matrix, x, Some(route.decision.choice.knobs()))
-                        })
-                        .collect(),
-                    batch_size as u64,
-                    false,
-                )
+    let (result, launches, spmm_path): (Result<Vec<Vec<f32>>>, u64, bool) = match jk {
+        JobKind::Spmv => match backend {
+            Backend::Native => (Ok(cached.matrix.as_spmv().spmm(&views)), 1, true),
+            Backend::Pjrt(engine) => {
+                // a lone request rides the leaner per-vector artifact; the
+                // bucket-padded SpMM launch only pays off with a batch
+                let use_spmm = cached
+                    .prepared_spmm
+                    .as_ref()
+                    .filter(|_| batch_size > 1 || cached.prepared.is_none());
+                if let Some(spmm) = use_spmm {
+                    (
+                        engine.spmm_prepared(spmm, &views),
+                        spmm.launches_for(batch_size) as u64,
+                        true,
+                    )
+                } else if let Some(prep) = &cached.prepared {
+                    (engine.spmv_batch_prepared(prep, &views), batch_size as u64, false)
+                } else {
+                    (
+                        xs.iter()
+                            .map(|x| {
+                                engine.spmv(&cached.matrix, x, Some(route.decision.choice.knobs()))
+                            })
+                            .collect(),
+                        batch_size as u64,
+                        false,
+                    )
+                }
             }
+        },
+        // Solves sweep the converted form sequentially, one launch per
+        // vector — a singular diagonal fails the whole group (same
+        // matrix, same pivots for every rhs).
+        JobKind::Sptrsv { lower } => {
+            let m = cached.matrix.as_spmv();
+            (views.iter().map(|b| m.sptrsv(b, lower)).collect(), batch_size as u64, false)
+        }
+        JobKind::Symgs => {
+            let m = cached.matrix.as_spmv();
+            (
+                views
+                    .iter()
+                    .map(|b| {
+                        let mut y = vec![0.0f32; b.len()];
+                        m.symgs_sweep(b, &mut y)?;
+                        Ok(y)
+                    })
+                    .collect(),
+                batch_size as u64,
+                false,
+            )
         }
     };
     let exec_done = Instant::now();
@@ -875,8 +944,10 @@ fn execute_group(
             let convert_d = exec_start.duration_since(group_start);
             let exec_d = exec_done.duration_since(exec_start);
             // Per-arm attribution: the whole group rode one joint arm,
-            // so one call covers it (request-weighted exec time).
-            telemetry.arms.record(
+            // so one call covers it (request-weighted exec time); the
+            // kind keeps solve windows out of the SpMV cells.
+            telemetry.arms.record_kind(
+                kind,
                 route.decision,
                 batch_size as u64,
                 exec_d * batch_size as u32,
@@ -885,7 +956,11 @@ fn execute_group(
             if cfg.tracing {
                 let k = batch_size as u64;
                 telemetry.stages.record_n(Stage::Convert, convert_d, k);
-                let exec_stage = if spmm_path { Stage::SpmmExec } else { Stage::Exec };
+                let exec_stage = match jk {
+                    JobKind::Spmv if spmm_path => Stage::SpmmExec,
+                    JobKind::Spmv => Stage::Exec,
+                    JobKind::Sptrsv { .. } | JobKind::Symgs => Stage::SolveExec,
+                };
                 telemetry.stages.record_n(exec_stage, exec_d, k);
             }
             for ((enqueued, deadline, reply), y) in clients.into_iter().zip(ys) {
@@ -941,6 +1016,7 @@ fn execute_group(
             if let Some(o) = online {
                 o.observe(Observation {
                     matrix_id: id,
+                    kind,
                     features: reg.features,
                     format: route.decision.format,
                     choice: route.decision.choice,
@@ -1035,17 +1111,20 @@ fn do_session_write(
     Ok(())
 }
 
-/// Run `steps` chained products on a session. Each step counts exactly
-/// like a per-request product in the launch ledger (+1 request, +1
-/// dispatch, +1 launch) — the session's win is the VECTOR ledger: a
-/// pure chained step moves zero bytes across the dispatch boundary and
-/// charges `elided_bytes`/`round_trips_elided` with what the
-/// per-request path would have paid; a step that had to bounce through
-/// the host (non-square PJRT bucket, or host-side normalize without a
-/// fused artifact) charges `marshalled_bytes` instead. The whole run
-/// feeds ONE batch-weighted [`Observation`] so retrain cadence and
-/// drift detection see session traffic. A failed step consumes the
-/// vector: the client must `write` again before continuing.
+/// Run `steps` chained applications of `op` on a session. Each step
+/// counts exactly like a per-request dispatch in the launch ledger (+1
+/// request, +1 dispatch, +1 launch) — the session's win is the VECTOR
+/// ledger: a pure chained step moves zero bytes across the dispatch
+/// boundary and charges `elided_bytes`/`round_trips_elided` with what
+/// the per-request path would have paid; a step that had to bounce
+/// through the host (non-square PJRT bucket, host-side normalize
+/// without a fused artifact, or a solve op on PJRT — the sequential
+/// sweep runs host-side) charges `marshalled_bytes` instead. The whole
+/// run feeds ONE batch-weighted [`Observation`] tagged with the op's
+/// kernel kind so retrain cadence and drift detection see session
+/// traffic without solve latencies polluting SpMV training labels. A
+/// failed step consumes the vector: the client must `write` again
+/// before continuing.
 #[allow(clippy::too_many_arguments)] // worker-local state is deliberately split for borrow granularity
 fn do_session_step(
     backend: &mut Backend,
@@ -1056,7 +1135,7 @@ fn do_session_step(
     sessions: &mut HashMap<u64, SessionState>,
     session: u64,
     steps: u64,
-    normalize: bool,
+    op: StepOp,
 ) -> Result<()> {
     let state =
         sessions.get_mut(&session).ok_or_else(|| anyhow!("unknown session {session}"))?;
@@ -1068,33 +1147,58 @@ fn do_session_step(
     let n = state.n as u64;
     let totals = &telemetry.totals;
     let t0 = Instant::now();
-    for _ in 0..steps {
-        let step_start = Instant::now();
-        let cur = state.vec.take().expect("session vector present");
-        let (next, bounced) = match backend {
-            Backend::Pjrt(engine) => {
-                let prep = state.prepared.as_ref().expect("PJRT session is prepared");
-                engine.session_step(prep, cur, normalize)?
-            }
-            Backend::Native => {
-                let x = match cur {
-                    SessionVec::Host(v) => v,
-                    SessionVec::Device(_) => {
-                        unreachable!("native session state is host-resident")
-                    }
-                };
-                let mut y = state.pinned.matrix.as_spmv().spmv_alloc(&x);
+    // One host-side sweep from the session's current vector (the solve
+    // ops; also every native op). Errors (singular diagonal) surface to
+    // the client with the vector consumed, per the step contract.
+    let apply_host = |matrix: &AnyFormat, x: &[f32]| -> Result<Vec<f32>> {
+        let m = matrix.as_spmv();
+        match op {
+            StepOp::Product { normalize } => {
+                let mut y = m.spmv_alloc(x);
                 if normalize {
                     let norm = y.iter().map(|v| v * v).sum::<f32>().sqrt();
                     for v in &mut y {
                         *v /= norm;
                     }
                 }
+                Ok(y)
+            }
+            StepOp::Sptrsv { lower } => m.sptrsv(x, lower),
+            StepOp::Symgs => {
+                let mut y = vec![0.0f32; x.len()];
+                m.symgs_sweep(x, &mut y)?;
+                Ok(y)
+            }
+        }
+    };
+    for _ in 0..steps {
+        let step_start = Instant::now();
+        let cur = state.vec.take().expect("session vector present");
+        let (next, bounced) = match (backend, op) {
+            (Backend::Pjrt(engine), StepOp::Product { normalize }) => {
+                let prep = state.prepared.as_ref().expect("PJRT session is prepared");
+                engine.session_step(prep, cur, normalize)?
+            }
+            (Backend::Pjrt(engine), StepOp::Sptrsv { .. } | StepOp::Symgs) => {
+                // solve step on PJRT: bounce the device vector through
+                // the host, sweep natively, continue the chain host-side
+                // (the next product step re-uploads it)
+                let prep = state.prepared.as_ref().expect("PJRT session is prepared");
+                let x = engine.session_read(prep, &cur)?;
+                (SessionVec::Host(apply_host(&state.pinned.matrix, &x)?), true)
+            }
+            (Backend::Native, _) => {
+                let x = match cur {
+                    SessionVec::Host(v) => v,
+                    SessionVec::Device(_) => {
+                        unreachable!("native session state is host-resident")
+                    }
+                };
                 // host-side vector REUSE: y becomes the next x without
                 // ever crossing back through the pool's queue/reply
                 // boundary, so the step is as boundary-free as a
                 // device-chained one
-                (SessionVec::Host(y), false)
+                (SessionVec::Host(apply_host(&state.pinned.matrix, &x)?), false)
             }
         };
         state.vec = Some(next);
@@ -1129,10 +1233,11 @@ fn do_session_step(
         if let Some(r) = reg {
             r.tele.route(state.decision, false, steps);
         }
-        telemetry.arms.record(state.decision, steps, t0.elapsed(), &model);
+        telemetry.arms.record_kind(op.kind(), state.decision, steps, t0.elapsed(), &model);
         if let (Some(o), Some(r)) = (online, reg) {
             o.observe(Observation {
                 matrix_id: state.matrix_id,
+                kind: op.kind(),
                 features: r.features,
                 format: state.decision.format,
                 choice: state.decision.choice,

@@ -103,6 +103,20 @@ impl SpMv for Bell {
         self.n_cols
     }
 
+    fn for_each_in_row(&self, i: usize, f: &mut dyn FnMut(usize, f32)) {
+        let (ib, li) = (i / self.bh, i % self.bh);
+        for k in 0..self.kb {
+            let col0 = self.bcols[ib * self.kb + k] as usize * self.bw;
+            let blk = self.block_at(ib, k);
+            for j in 0..self.bw {
+                let c = col0 + j;
+                if c < self.n_cols {
+                    f(c, blk[li * self.bw + j]);
+                }
+            }
+        }
+    }
+
     fn spmv(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.n_cols);
         assert_eq!(y.len(), self.n_rows);

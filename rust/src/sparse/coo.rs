@@ -88,6 +88,17 @@ impl SpMv for Coo {
         self.n_cols
     }
 
+    /// O(nnz) scan per row — COO is unsorted. Fine for the solve
+    /// fallbacks and tests; serving converts to a row-addressable
+    /// format before anything hot.
+    fn for_each_in_row(&self, i: usize, f: &mut dyn FnMut(usize, f32)) {
+        for k in 0..self.len() {
+            if self.rows[k] as usize == i {
+                f(self.cols[k] as usize, self.vals[k]);
+            }
+        }
+    }
+
     fn spmv(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.n_cols);
         assert_eq!(y.len(), self.n_rows);

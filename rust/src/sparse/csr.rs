@@ -87,6 +87,13 @@ impl SpMv for Csr {
         self.n_cols
     }
 
+    fn for_each_in_row(&self, i: usize, f: &mut dyn FnMut(usize, f32)) {
+        let (a, b) = (self.row_ptr[i] as usize, self.row_ptr[i + 1] as usize);
+        for k in a..b {
+            f(self.cols[k] as usize, self.vals[k]);
+        }
+    }
+
     fn spmv(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.n_cols);
         assert_eq!(y.len(), self.n_rows);

@@ -59,6 +59,15 @@ impl SpMv for Dense {
         self.n_cols
     }
 
+    /// Dense stores every entry, so every column is visited — explicit
+    /// zeros included (a zero diagonal must still read as singular).
+    fn for_each_in_row(&self, i: usize, f: &mut dyn FnMut(usize, f32)) {
+        let row = &self.data[i * self.n_cols..(i + 1) * self.n_cols];
+        for (c, v) in row.iter().enumerate() {
+            f(c, *v);
+        }
+    }
+
     fn spmv(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.n_cols);
         assert_eq!(y.len(), self.n_rows);

@@ -85,6 +85,13 @@ impl SpMv for Ell {
         self.n_cols
     }
 
+    fn for_each_in_row(&self, i: usize, f: &mut dyn FnMut(usize, f32)) {
+        let base = i * self.width;
+        for s in 0..self.width {
+            f(self.cols[base + s] as usize, self.vals[base + s]);
+        }
+    }
+
     fn spmv(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.n_cols);
         assert_eq!(y.len(), self.n_rows);

@@ -79,6 +79,61 @@ impl std::fmt::Display for Format {
     }
 }
 
+/// The kernel classes the pool serves. SpMV (`y = Ax`, incl. batched
+/// SpMM) is the paper's subject; SpTRSV (sparse triangular solve) and
+/// SymGS (one symmetric Gauss-Seidel sweep) are the solver-side kernels
+/// real SpMV traffic is embedded in (CG preconditioning, multigrid
+/// smoothing). Kind is part of the request class: the online loop keys
+/// bandit buckets and per-arm attribution on it so solve evidence never
+/// mixes with product evidence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum KernelKind {
+    Spmv,
+    Sptrsv,
+    Symgs,
+}
+
+impl KernelKind {
+    pub const ALL: [KernelKind; 3] = [KernelKind::Spmv, KernelKind::Sptrsv, KernelKind::Symgs];
+    pub const N: usize = 3;
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Spmv => "spmv",
+            KernelKind::Sptrsv => "sptrsv",
+            KernelKind::Symgs => "symgs",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<KernelKind> {
+        match s {
+            "spmv" => Some(KernelKind::Spmv),
+            "sptrsv" => Some(KernelKind::Sptrsv),
+            "symgs" => Some(KernelKind::Symgs),
+            _ => None,
+        }
+    }
+
+    /// Stable class id (bucket-key component and attribution stride).
+    pub fn class_id(self) -> usize {
+        match self {
+            KernelKind::Spmv => 0,
+            KernelKind::Sptrsv => 1,
+            KernelKind::Symgs => 2,
+        }
+    }
+
+    pub fn from_class_id(id: usize) -> Option<KernelKind> {
+        KernelKind::ALL.get(id).copied()
+    }
+}
+
+impl std::fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Storage accounting: bytes moved from DRAM when a kernel streams the
 /// matrix once (the simulator's traffic model) and bytes resident.
 pub trait Storage {
@@ -107,5 +162,16 @@ mod tests {
     #[test]
     fn format_display_matches_name() {
         assert_eq!(Format::Bell.to_string(), "bell");
+    }
+
+    #[test]
+    fn kernel_kind_roundtrip_ids() {
+        for k in KernelKind::ALL {
+            assert_eq!(KernelKind::from_class_id(k.class_id()), Some(k));
+            assert_eq!(KernelKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(KernelKind::parse("spmm"), None, "spmm is a manifest kind, not a request class");
+        assert_eq!(KernelKind::from_class_id(KernelKind::N), None);
+        assert_eq!(KernelKind::ALL.len(), KernelKind::N);
     }
 }

@@ -89,6 +89,13 @@ impl SpMv for Sell {
         self.n_cols
     }
 
+    fn for_each_in_row(&self, i: usize, f: &mut dyn FnMut(usize, f32)) {
+        let (cols, vals) = self.slice_row(i / self.h, i % self.h);
+        for (c, v) in cols.iter().zip(vals) {
+            f(*c as usize, *v);
+        }
+    }
+
     fn spmv(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.n_cols);
         assert_eq!(y.len(), self.n_rows);

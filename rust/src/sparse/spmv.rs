@@ -1,11 +1,21 @@
 //! The SpMV operation trait: `y = A x` for every storage format, plus
 //! the batched SpMM entry point `Y = A X` the serving pool dispatches
-//! coalesced request groups through.
+//! coalesced request groups through, and the solver-side kernel classes
+//! (SpTRSV triangular solve, SymGS sweep) built on per-row traversal.
 
 /// Sparse (or dense) matrix-vector product.
 pub trait SpMv {
     fn n_rows(&self) -> usize;
     fn n_cols(&self) -> usize;
+
+    /// Visit every *stored* entry `(col, val)` of row `i`, padding
+    /// included, in the format's storage order. This is the one
+    /// format-specific primitive the solve kernels (SpTRSV, SymGS) are
+    /// built on: the provided methods gather a row through it and sort
+    /// by column, so solves are bit-identical across formats by
+    /// construction regardless of how a format orders a row internally
+    /// (COO is unsorted, BELL is block-major).
+    fn for_each_in_row(&self, i: usize, f: &mut dyn FnMut(usize, f32));
 
     /// Compute `y = A x`. `y` is fully overwritten.
     fn spmv(&self, x: &[f32], y: &mut [f32]);
@@ -46,6 +56,102 @@ pub trait SpMv {
     fn flops(&self, nnz: usize) -> u64 {
         2 * nnz as u64
     }
+
+    /// Sparse triangular solve: `x` such that `T x = b`, where `T` is
+    /// the lower (`lower = true`, unit stride forward) or upper
+    /// (backward) triangle of `self` *including the diagonal*. Stored
+    /// entries strictly on the wrong side of the diagonal are ignored,
+    /// so a full matrix solves with its triangle HPCG-style. Rows are
+    /// gathered via [`SpMv::for_each_in_row`] and accumulated in
+    /// ascending-column order, making the result bit-identical across
+    /// every storage format (padding contributes exact zeros).
+    ///
+    /// Errors when the matrix is not square, `b` has the wrong length,
+    /// or any row lacks a nonzero diagonal (the singular case — padding
+    /// entries carry value 0.0 and can never fake a pivot).
+    fn sptrsv(&self, b: &[f32], lower: bool) -> anyhow::Result<Vec<f32>> {
+        let n = self.n_rows();
+        anyhow::ensure!(
+            self.n_cols() == n,
+            "sptrsv needs a square matrix, got {}x{}",
+            n,
+            self.n_cols()
+        );
+        anyhow::ensure!(b.len() == n, "sptrsv rhs length {} != n {}", b.len(), n);
+        let mut x = vec![0.0f32; n];
+        let mut row: Vec<(usize, f32)> = Vec::new();
+        for step in 0..n {
+            let i = if lower { step } else { n - 1 - step };
+            let diag = gather_row(self, i, &mut row)?;
+            let mut acc = b[i];
+            for &(c, v) in &row {
+                let in_triangle = if lower { c < i } else { c > i };
+                if in_triangle {
+                    acc -= v * x[c];
+                }
+            }
+            x[i] = acc / diag;
+        }
+        Ok(x)
+    }
+
+    /// One symmetric Gauss-Seidel sweep on `A x = b`: a forward pass
+    /// (rows ascending) then a backward pass (rows descending), each
+    /// updating `x[i] = (b[i] - sum_{j != i} a_ij x[j]) / a_ii` in place
+    /// with the latest values. Applying one sweep from `x = 0` is the
+    /// standard SymGS preconditioner/smoother (multigrid, CG). Same
+    /// gather-and-sort row traversal as [`SpMv::sptrsv`], so sweeps are
+    /// bit-identical across formats; same singular-diagonal error.
+    fn symgs_sweep(&self, b: &[f32], x: &mut [f32]) -> anyhow::Result<()> {
+        let n = self.n_rows();
+        anyhow::ensure!(
+            self.n_cols() == n,
+            "symgs needs a square matrix, got {}x{}",
+            n,
+            self.n_cols()
+        );
+        anyhow::ensure!(b.len() == n, "symgs rhs length {} != n {}", b.len(), n);
+        anyhow::ensure!(x.len() == n, "symgs iterate length {} != n {}", x.len(), n);
+        let mut row: Vec<(usize, f32)> = Vec::new();
+        for pass in 0..2 {
+            for step in 0..n {
+                let i = if pass == 0 { step } else { n - 1 - step };
+                let diag = gather_row(self, i, &mut row)?;
+                let mut acc = b[i];
+                for &(c, v) in &row {
+                    if c != i {
+                        acc -= v * x[c];
+                    }
+                }
+                x[i] = acc / diag;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Gather row `i` into `row` sorted by column (stable, padding first at
+/// col 0) and return its diagonal pivot. Shared by the provided solve
+/// methods; the sort is what buys cross-format bit-identity.
+fn gather_row<M: SpMv + ?Sized>(
+    m: &M,
+    i: usize,
+    row: &mut Vec<(usize, f32)>,
+) -> anyhow::Result<f32> {
+    row.clear();
+    m.for_each_in_row(i, &mut |c, v| row.push((c, v)));
+    row.sort_by_key(|&(c, _)| c);
+    let mut diag = 0.0f32;
+    for &(c, v) in row.iter() {
+        if c == i && v != 0.0 {
+            diag = v;
+        }
+    }
+    anyhow::ensure!(
+        diag != 0.0,
+        "singular system: row {i} has no nonzero diagonal entry"
+    );
+    Ok(diag)
 }
 
 #[cfg(test)]

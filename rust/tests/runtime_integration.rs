@@ -300,4 +300,35 @@ fn python_emitted_manifest_roundtrips_through_the_parser() {
         .select_spmm(probe.fmt, &dims, 2, None)
         .expect("an spmm variant must cover a tiny matrix");
     assert_eq!(picked.kind, Kind::Spmm);
+
+    // the solve kernel classes reach the inventory too: the quick
+    // sweep must emit both solve kinds, and per-kind selection must
+    // resolve them for a tiny matrix without crossing kinds
+    for (kind, label) in [(Kind::Sptrsv, "sptrsv"), (Kind::Symgs, "symgs")] {
+        let rows: Vec<_> = idx.specs.iter().filter(|s| s.kind == kind).collect();
+        assert!(!rows.is_empty(), "the quick inventory must emit kind={label} rows");
+        let probe = rows[0];
+        let dims = MatrixDims {
+            n_rows: probe.rows.min(64),
+            n_cols: probe.cols.min(64),
+            nnz: 16,
+            max_row_len: 2,
+            bell_kb: 2,
+        };
+        let lower = if kind == Kind::Sptrsv { Some(probe.lower()) } else { None };
+        let picked = idx
+            .select_solve(kind, probe.fmt, &dims, lower, None)
+            .unwrap_or_else(|| panic!("a {label} variant must cover a tiny matrix"));
+        assert_eq!(picked.kind, kind);
+    }
+    // sptrsv rows carry the triangle side as the `lo` extra; the quick
+    // inventory emits both sides so upper solves never silently fall
+    // back to a lower artifact
+    let sides: std::collections::HashSet<bool> = idx
+        .specs
+        .iter()
+        .filter(|s| s.kind == Kind::Sptrsv)
+        .map(|s| s.lower())
+        .collect();
+    assert_eq!(sides.len(), 2, "sptrsv rows must cover both triangle sides");
 }

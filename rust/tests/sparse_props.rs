@@ -13,8 +13,9 @@
 //!  * routing/labeling invariants (best <= default under each objective).
 
 use auto_spmv::features;
+use auto_spmv::gen::Rng;
 use auto_spmv::sparse::convert::{self, AnyFormat, ConvertParams};
-use auto_spmv::sparse::{Format, SpMv};
+use auto_spmv::sparse::{Coo, Dense, Format, SpMv};
 use auto_spmv::testutil::{arb_coo, arb_x, assert_prop};
 
 fn close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
@@ -150,6 +151,199 @@ fn prop_kernel_marshalling_preserves_product() {
             got2[r[k] as usize] += v[k] * x[c[k] as usize];
         }
         close(&got2, &want, 1e-4).map_err(|e| format!("CSR marshalling: {e}"))
+    });
+}
+
+/// Square, diagonally dominant system with a guaranteed nonzero
+/// diagonal and NO duplicate (row, col) entries. Duplicates matter
+/// here: `Coo::for_each_in_row` visits each stored entry separately
+/// while `coo_to_csr` merges duplicates, so a duplicate-free generator
+/// is what lets the solve bit-identity contract cover COO itself.
+fn arb_solvable(rng: &mut Rng, size: usize) -> Coo {
+    let n = (size % 24) + 1;
+    let mut off: std::collections::BTreeMap<(usize, usize), f32> =
+        std::collections::BTreeMap::new();
+    for _ in 0..rng.below(3 * n + 1) {
+        let i = rng.below(n);
+        let j = rng.below(n);
+        if i != j {
+            off.insert((i, j), rng.val());
+        }
+    }
+    // diag[i] > sum_j |a_ij| keeps both triangular solves and the
+    // Gauss-Seidel sweep well conditioned for the residual oracles
+    let mut diag = vec![1.0f32; n];
+    for (&(i, _), v) in &off {
+        diag[i] += v.abs();
+    }
+    let mut coo = Coo::new(n, n);
+    for ((i, j), v) in off {
+        coo.push(i, j, v);
+    }
+    for (i, d) in diag.into_iter().enumerate() {
+        coo.push(i, i, d);
+    }
+    coo
+}
+
+/// Scipy-free SymGS reference: forward then backward pass over the
+/// dense realization, f64 accumulators — independent of the
+/// `for_each_in_row` traversal the trait's provided method uses.
+fn symgs_oracle(d: &Dense, b: &[f32]) -> Vec<f32> {
+    let n = d.n_rows;
+    let mut x = vec![0.0f32; n];
+    for pass in 0..2 {
+        for step in 0..n {
+            let i = if pass == 0 { step } else { n - 1 - step };
+            let mut acc = b[i] as f64;
+            for c in 0..n {
+                if c != i {
+                    acc -= d.data[i * n + c] as f64 * x[c] as f64;
+                }
+            }
+            x[i] = (acc / d.data[i * n + i] as f64) as f32;
+        }
+    }
+    x
+}
+
+#[test]
+fn prop_solves_bit_identical_across_formats() {
+    // SpTRSV (both triangles) and SymGS gather rows via
+    // `for_each_in_row` and sort by column, so every format — the four
+    // convertible ones, COO, and the dense realization — must produce
+    // the SAME BITS. The serving pool relies on this: artifact
+    // selection may pick any cached form for a solve-kind job.
+    assert_prop("solves are bit-identical across formats", 0xD0, 50, 96, |rng, size| {
+        let coo = arb_solvable(rng, size);
+        let csr = convert::coo_to_csr(&coo);
+        let dense = convert::csr_to_dense(&csr);
+        let b = arb_x(rng, csr.n_rows);
+        let want_lo = dense.sptrsv(&b, true).map_err(|e| e.to_string())?;
+        let want_up = dense.sptrsv(&b, false).map_err(|e| e.to_string())?;
+        let mut want_gs = vec![0.0f32; csr.n_rows];
+        dense.symgs_sweep(&b, &mut want_gs).map_err(|e| e.to_string())?;
+
+        let check = |m: &dyn SpMv, tag: &str| -> Result<(), String> {
+            let lo = m.sptrsv(&b, true).map_err(|e| format!("{tag} lower: {e}"))?;
+            if lo != want_lo {
+                return Err(format!("{tag}: lower solve differs from dense oracle"));
+            }
+            let up = m.sptrsv(&b, false).map_err(|e| format!("{tag} upper: {e}"))?;
+            if up != want_up {
+                return Err(format!("{tag}: upper solve differs from dense oracle"));
+            }
+            let mut gs = vec![0.0f32; b.len()];
+            m.symgs_sweep(&b, &mut gs).map_err(|e| format!("{tag} symgs: {e}"))?;
+            if gs != want_gs {
+                return Err(format!("{tag}: symgs sweep differs from dense oracle"));
+            }
+            Ok(())
+        };
+        check(&coo, "coo")?;
+        for fmt in Format::ALL {
+            for params in [
+                ConvertParams { bell_bh: 2, bell_bw: 2, sell_h: 2 },
+                ConvertParams::default(),
+            ] {
+                let m = convert::convert(&csr, fmt, params);
+                check(m.as_spmv(), &format!("{fmt} {params:?}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_triangular_solves_satisfy_their_triangle() {
+    // Independent oracle: substitute the solution back. T x must
+    // reproduce b where T is the solved triangle INCLUDING the
+    // diagonal — stored entries on the wrong side are ignored
+    // (HPCG-style full-matrix solve), which this residual pins.
+    assert_prop("sptrsv residual vanishes", 0xD1, 50, 96, |rng, size| {
+        let coo = arb_solvable(rng, size);
+        let csr = convert::coo_to_csr(&coo);
+        let dense = convert::csr_to_dense(&csr);
+        let n = csr.n_rows;
+        let b = arb_x(rng, n);
+        for lower in [true, false] {
+            let x = csr.sptrsv(&b, lower).map_err(|e| e.to_string())?;
+            let mut tb = vec![0.0f32; n];
+            for (i, t) in tb.iter_mut().enumerate() {
+                let mut acc = 0.0f64;
+                for c in 0..n {
+                    let in_tri = if lower { c <= i } else { c >= i };
+                    if in_tri {
+                        acc += dense.data[i * n + c] as f64 * x[c] as f64;
+                    }
+                }
+                *t = acc as f32;
+            }
+            close(&tb, &b, 1e-3)
+                .map_err(|e| format!("lower={lower}: T x != b: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_symgs_matches_dense_reference_sweep() {
+    assert_prop("symgs == dense f64 reference", 0xD2, 50, 96, |rng, size| {
+        let coo = arb_solvable(rng, size);
+        let csr = convert::coo_to_csr(&coo);
+        let dense = convert::csr_to_dense(&csr);
+        let b = arb_x(rng, csr.n_rows);
+        let mut got = vec![0.0f32; csr.n_rows];
+        csr.symgs_sweep(&b, &mut got).map_err(|e| e.to_string())?;
+        let want = symgs_oracle(&dense, &b);
+        close(&got, &want, 1e-3)
+    });
+}
+
+#[test]
+fn prop_singular_diagonal_errors_on_every_format() {
+    // Drop one row's diagonal: every format's solve paths must refuse
+    // with the singular-system error naming that row — padding entries
+    // (value 0.0) must never fake a pivot.
+    assert_prop("missing diagonal is singular everywhere", 0xD3, 40, 96, |rng, size| {
+        let good = arb_solvable(rng, size);
+        let n = good.n_rows;
+        let k = rng.below(n);
+        let mut coo = Coo::new(n, n);
+        for i in 0..good.len() {
+            if !(good.rows[i] as usize == k && good.cols[i] as usize == k) {
+                coo.push(good.rows[i] as usize, good.cols[i] as usize, good.vals[i]);
+            }
+        }
+        let csr = convert::coo_to_csr(&coo);
+        let b = arb_x(rng, n);
+        let expect = format!("singular system: row {k}");
+        let check = |m: &dyn SpMv, tag: &str| -> Result<(), String> {
+            for (what, res) in [
+                ("sptrsv lower", m.sptrsv(&b, true)),
+                ("sptrsv upper", m.sptrsv(&b, false)),
+                ("symgs", {
+                    let mut x = vec![0.0f32; n];
+                    m.symgs_sweep(&b, &mut x).map(|()| x)
+                }),
+            ] {
+                match res {
+                    Ok(_) => return Err(format!("{tag} {what}: singular solve succeeded")),
+                    Err(e) if !e.to_string().contains(&expect) => {
+                        return Err(format!("{tag} {what}: wrong error: {e}"));
+                    }
+                    Err(_) => {}
+                }
+            }
+            Ok(())
+        };
+        check(&coo, "coo")?;
+        check(&convert::csr_to_dense(&csr), "dense")?;
+        for fmt in Format::ALL {
+            let m = convert::convert(&csr, fmt, ConvertParams::default());
+            check(m.as_spmv(), &format!("{fmt}"))?;
+        }
+        Ok(())
     });
 }
 

@@ -82,6 +82,25 @@ CHECKS = [
         },
     },
     {
+        "file": "BENCH_e2e_solver_chain.json",
+        "table": "e2e_solver_chain",
+        "keys": ["metric"],
+        "metrics": {
+            # the mixed-kind solver chain (direct SpMV/SpTRSV/SymGS
+            # requests + a fixed-iteration SymGS-preconditioned CG
+            # session): total requests/launches, the session-step tally,
+            # the per-kind arm-attribution request counts, and the
+            # solve_exec/session_step stage counts. All exact counts
+            # from a fixed sequential native workload — never
+            # wall-clock. The bench asserts exact equality; the gate
+            # pins the floor so a kind can never silently stop being
+            # served or attributed. The byte-ledger rows
+            # (marshalled/elided) are emitted for the trajectory but
+            # deliberately left out of the baseline.
+            "value": {"direction": "higher", "tol": 1.0},
+        },
+    },
+    {
         "file": "BENCH_e2e_stage_decomposition.json",
         "table": "e2e_stage_decomposition",
         "keys": ["stage"],

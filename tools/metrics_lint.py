@@ -22,11 +22,13 @@ first real scrape. Checks:
   - histograms: per label-set the `le` buckets are cumulative
     (non-decreasing), end at `le="+Inf"`, and the `+Inf` count equals
     the family's `_count`; `_sum` and `_count` are present
-  - label cardinality: no family may carry more than MAX_LABEL_SETS
+  - label cardinality: no family may carry more than its cap of
     distinct label sets (`le` excluded, so histogram buckets don't
-    count). The per-arm families are bounded by the 48-arm joint
-    decision space; anything past 64 means an unbounded label leaked
-    into the exposition and would blow up a real scrape store.
+    count) — MAX_LABEL_SETS by default, with per-family overrides in
+    FAMILY_CAPS for the per-arm attribution families whose legitimate
+    cell count is kernel-kinds x joint arms. Anything past the cap
+    means an unbounded label leaked into the exposition and would blow
+    up a real scrape store.
   - the file is non-empty and ends with a newline
 
 Usage: python3 tools/metrics_lint.py [FILE ...]
@@ -42,10 +44,23 @@ METRIC_NAME = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
 LABEL_NAME = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
 KNOWN_KINDS = {"counter", "gauge", "histogram", "summary", "untyped"}
 HIST_SUFFIXES = ("_bucket", "_sum", "_count")
-# Distinct label sets allowed per family (le excluded). The widest
-# legitimate family is the per-arm attribution trio: 4 formats x 12
-# knob arms = 48 {format,knobs} sets.
+# Distinct label sets allowed per family (le excluded). Cap math for
+# the default: no plain family legitimately exceeds the stage fan-out
+# (8 stages) or a small enum, so 64 leaves generous headroom while
+# still catching an unbounded label (matrix id, request id) instantly.
 MAX_LABEL_SETS = 64
+# The per-arm attribution families carry {kind, format, knobs}: 3
+# kernel kinds (spmv/sptrsv/symgs) x 48 joint (format, knob) arms =
+# 144 legitimate cells, past the default cap by design. 192 = 4 x 48
+# keeps one spare kind's headroom without tolerating a leaked label
+# (which multiplies cardinality by the request count, not by 1.33x).
+FAMILY_CAPS = {
+    "spmv_arm_requests_total": 192,
+    "spmv_arm_seconds_total": 192,
+    "spmv_arm_energy_joules_total": 192,
+    "spmv_arm_power_watts": 192,
+    "spmv_arm_mflops_per_watt": 192,
+}
 
 
 class LintErrors:
@@ -254,9 +269,10 @@ def lint_text(path, text):
         key = tuple(sorted((k, v) for k, v in labels.items() if k != "le"))
         label_sets.setdefault(base, set()).add(key)
     for base, sets in sorted(label_sets.items()):
-        if len(sets) > MAX_LABEL_SETS:
+        cap = FAMILY_CAPS.get(base, MAX_LABEL_SETS)
+        if len(sets) > cap:
             errs.add(0, f"family {base}: {len(sets)} label sets exceeds the "
-                        f"cardinality cap of {MAX_LABEL_SETS} (an unbounded "
+                        f"cardinality cap of {cap} (an unbounded "
                         "label leaked into the exposition)")
 
     for name in sorted(help_seen - set(types)):
@@ -267,19 +283,36 @@ def lint_text(path, text):
 
 def selftest():
     """Lint built-in fixtures; returns 0 when every expectation holds."""
-    def family(n_sets):
+    def family(name, n_sets):
         lines = [
-            "# HELP spmv_arm_requests_total Requests per arm",
-            "# TYPE spmv_arm_requests_total counter",
+            f"# HELP {name} Requests per arm",
+            f"# TYPE {name} counter",
         ]
         for i in range(n_sets):
-            lines.append(f'spmv_arm_requests_total{{format="csr",knobs="arm{i}"}} {i + 1}')
+            kind = ("spmv", "sptrsv", "symgs")[i % 3]
+            lines.append(
+                f'{name}{{kind="{kind}",format="csr",knobs="arm{i}"}} {i + 1}'
+            )
         return "\n".join(lines) + "\n"
 
+    arm_cap = FAMILY_CAPS["spmv_arm_requests_total"]
     cases = [
         # (name, text, substring expected among errors; None = clean)
-        ("clean_at_cap", family(MAX_LABEL_SETS), None),
-        ("cardinality_overflow", family(MAX_LABEL_SETS + 1), "cardinality cap"),
+        ("clean_at_default_cap", family("some_counter_total", MAX_LABEL_SETS), None),
+        (
+            "default_cardinality_overflow",
+            family("some_counter_total", MAX_LABEL_SETS + 1),
+            "cardinality cap",
+        ),
+        # the per-arm families legitimately exceed the default cap (3
+        # kernel kinds x 48 joint arms) — their override admits the
+        # full grid but still trips on a leaked unbounded label
+        ("arm_family_at_override_cap", family("spmv_arm_requests_total", arm_cap), None),
+        (
+            "arm_family_cardinality_overflow",
+            family("spmv_arm_requests_total", arm_cap + 1),
+            "cardinality cap",
+        ),
         (
             "duplicate_help",
             "# HELP a one\n# TYPE a counter\n# HELP a two\na 1\n",

@@ -10,9 +10,10 @@ human-readable report:
     the deadline ledger, and the flight-recorder capture count
     (`spmv_slo_*` / `spmv_flight_records`); says so when the dump was
     produced without an SLO configured
-  - per-arm attribution: one row per (format, knobs) joint arm from
-    `spmv_arm_*`, sorted by request count — where the time and the
-    modeled energy actually went (DESIGN.md §11)
+  - per-arm attribution: one row per (kind, format, knobs) joint arm
+    from `spmv_arm_*` — the kernel-kind label keeps SpMV, SpTRSV, and
+    SymGS windows apart — sorted by request count: where the time and
+    the modeled energy actually went (DESIGN.md §11)
   - scale-out control plane: replication/reroute/shed counters, live
     replicas, and per-shard queue depths (`spmv_replicas`,
     `spmv_sheds_total`, `spmv_queue_depth`; DESIGN.md §12)
@@ -110,7 +111,13 @@ def report_arms(samples):
     for n, labels, value in samples:
         if not n.startswith("spmv_arm_") or "format" not in labels:
             continue
-        key = (labels.get("format", "?"), labels.get("knobs", "?"))
+        # kind entered the arm label set with the solve kernel classes;
+        # default it for older dumps so pre-kind expositions still parse
+        key = (
+            labels.get("kind", "spmv"),
+            labels.get("format", "?"),
+            labels.get("knobs", "?"),
+        )
         arms.setdefault(key, {})[n] = value
     gen = scalar(samples, "spmv_arm_generation")
     print("\n== per-arm attribution ==")
@@ -124,9 +131,9 @@ def report_arms(samples):
         arms.items(),
         key=lambda kv: (-kv[1].get("spmv_arm_requests_total", 0), kv[0]),
     )
-    for (fmt_name, knobs), vals in order:
+    for (kind, fmt_name, knobs), vals in order:
         rows.append((
-            f"{fmt_name}@{knobs}",
+            f"{kind}/{fmt_name}@{knobs}",
             fmt(vals.get("spmv_arm_requests_total"), "{:.0f}"),
             fmt(vals.get("spmv_arm_seconds_total")),
             fmt(vals.get("spmv_arm_energy_joules_total")),
